@@ -1,0 +1,172 @@
+//! **End-to-end validation driver** (EXPERIMENTS.md §E9): start the full
+//! coordinator in-process, generate a realistic mixed workload, drive it
+//! over real TCP through router → dynamic batcher → worker pool → PJRT
+//! engine (AOT Pallas kernels) / native executors, and report throughput,
+//! latency percentiles and batching efficiency.
+//!
+//! Run: `make artifacts && cargo run --release --example dp_server`
+//! Flags: `-- [requests] [clients]` (defaults 400, 4).
+
+use std::time::Instant;
+
+use pipedp::coordinator::batcher::Policy;
+use pipedp::coordinator::request::{Backend, Request, RequestBody};
+use pipedp::coordinator::server::{Client, Config, Server};
+use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::schedule::McmVariant;
+use pipedp::core::semigroup::Op;
+use pipedp::util::rng::Rng;
+use pipedp::util::table::{fmt_duration, Table};
+
+fn main() -> pipedp::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let total: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let clients: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let have_artifacts = pipedp::runtime::artifacts_dir().join("manifest.json").exists();
+    if !have_artifacts {
+        eprintln!("NOTE: artifacts missing — everything will be served natively.");
+    }
+
+    let server = Server::start(Config {
+        addr: "127.0.0.1:0".into(),
+        workers: 4,
+        policy: Policy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        warm: true,
+    })?;
+    println!("coordinator listening on {}", server.local_addr);
+    // §Perf: without this, the first request per bucket pays PJRT compile
+    // latency (p99 was 2.1 s); with warmup it drops to the batching window
+    let warm_start = Instant::now();
+    server.wait_ready(std::time::Duration::from_secs(60));
+    println!("engine warm in {}", fmt_duration(warm_start.elapsed()));
+
+    // ---- workload: 60% MCM (bursty same-bucket → batchable), 40% S-DP ----
+    let make_request = |rng: &mut Rng, i: usize| -> Request {
+        if rng.chance(0.6) {
+            let n = *rng_choice(rng, &[8usize, 12, 16, 16, 16, 30]);
+            Request {
+                id: 0,
+                body: RequestBody::Mcm {
+                    problem: McmProblem::random(rng, n, 30),
+                    variant: McmVariant::Corrected,
+                },
+                backend: Backend::Auto,
+                full: false,
+            }
+        } else {
+            let k = 4 + (i % 3);
+            let offsets = rng.offsets(k, 2 * k as i64);
+            let a1 = offsets[0] as usize;
+            let n = 200 + rng.index(800);
+            let init: Vec<i64> = (0..a1).map(|_| rng.range(0..1000)).collect();
+            Request {
+                id: 0,
+                body: RequestBody::Sdp(SdpProblem::new(n, offsets, Op::Min, init).unwrap()),
+                backend: Backend::Auto,
+                full: false,
+            }
+        }
+    };
+
+    let addr = server.local_addr.to_string();
+    let per_client = total / clients;
+    let started = Instant::now();
+    let mut verified = 0usize;
+    let mut failures = 0usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let addr = addr.clone();
+            handles.push(s.spawn(move || -> (usize, usize) {
+                let mut rng = Rng::seeded(9000 + c as u64);
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut ok = 0;
+                let mut bad = 0;
+                // pipelined bursts of 16 keep the batcher fed
+                let mut sent = 0;
+                while sent < per_client {
+                    let burst = 16.min(per_client - sent);
+                    let reqs: Vec<Request> =
+                        (0..burst).map(|i| make_request(&mut rng, sent + i)).collect();
+                    // independently compute the expected answers
+                    let expected: Vec<i64> = reqs
+                        .iter()
+                        .map(|r| match &r.body {
+                            RequestBody::Mcm { problem, .. } => pipedp::mcm::seq::cost(problem),
+                            RequestBody::Sdp(p) => *pipedp::sdp::seq::solve(p).last().unwrap(),
+                            RequestBody::Stats => 0,
+                        })
+                        .collect();
+                    let resps = client.call_pipelined(reqs).expect("pipelined call");
+                    for (resp, want) in resps.iter().zip(&expected) {
+                        if resp.ok && resp.value == *want {
+                            ok += 1;
+                        } else {
+                            bad += 1;
+                            eprintln!("MISMATCH: got {:?} want {want}", resp.value);
+                        }
+                    }
+                    sent += burst;
+                }
+                (ok, bad)
+            }));
+        }
+        for h in handles {
+            let (ok, bad) = h.join().unwrap();
+            verified += ok;
+            failures += bad;
+        }
+    });
+    let elapsed = started.elapsed();
+
+    // ---- report -----------------------------------------------------------
+    let m = &server.metrics;
+    let served = verified + failures;
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests served".into(), served.to_string()]);
+    t.row(vec!["answers verified vs oracle".into(), verified.to_string()]);
+    t.row(vec!["failures".into(), failures.to_string()]);
+    t.row(vec![
+        "wall clock".into(),
+        fmt_duration(elapsed),
+    ]);
+    t.row(vec![
+        "throughput".into(),
+        format!("{:.0} req/s", served as f64 / elapsed.as_secs_f64()),
+    ]);
+    t.row(vec![
+        "latency p50 / p99".into(),
+        format!(
+            "{} / {}",
+            fmt_duration(m.latency.percentile(0.5)),
+            fmt_duration(m.latency.percentile(0.99))
+        ),
+    ]);
+    t.row(vec![
+        "queue wait p99".into(),
+        fmt_duration(m.queue_wait.percentile(0.99)),
+    ]);
+    t.row(vec![
+        "dispatches (batches)".into(),
+        m.batches.load(std::sync::atomic::Ordering::Relaxed).to_string(),
+    ]);
+    t.row(vec![
+        "mean batch size".into(),
+        format!("{:.2}", m.mean_batch_size()),
+    ]);
+    println!("\n== dp_server end-to-end ({clients} clients × {per_client} requests) ==");
+    println!("{}", t.render());
+    if failures > 0 {
+        std::process::exit(1);
+    }
+    println!("all {verified} responses verified against the sequential oracle ✓");
+    Ok(())
+}
+
+fn rng_choice<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.index(xs.len())]
+}

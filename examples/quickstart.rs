@@ -1,0 +1,70 @@
+//! Quickstart: the five-minute tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (XLA steps need `make artifacts` first; they are skipped otherwise.)
+
+use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::schedule::McmVariant;
+use pipedp::core::semigroup::Op;
+use pipedp::runtime::engine::Engine;
+
+fn main() -> pipedp::Result<()> {
+    // --- 1. S-DP problems (Definition 1) --------------------------------
+    // Fibonacci is the paper's own example: k=2, a=(2,1), ⊗=+.
+    let fib = SdpProblem::fibonacci(32);
+    let st = pipedp::sdp::pipeline::solve(&fib);
+    println!("fib(32) via Fig. 2 pipeline        = {}", st[31]);
+
+    // A min-recurrence with three offsets, four executors, one answer.
+    let p = SdpProblem::new(64, vec![7, 5, 2], Op::Min, vec![9, 4, 6, 1, 8, 2, 7])?;
+    let seq = pipedp::sdp::seq::solve(&p);
+    assert_eq!(pipedp::sdp::pipeline::solve(&p), seq);
+    assert_eq!(pipedp::sdp::prefix::solve(&p), seq);
+    assert_eq!(pipedp::sdp::two_by_two::solve(&p), seq);
+    println!(
+        "S-DP n=64 k=3 min                  = {}   (4 executors agree)",
+        seq[63]
+    );
+
+    // --- 2. Matrix-chain multiplication (§IV) ----------------------------
+    let clrs = McmProblem::clrs();
+    let table = pipedp::mcm::pipeline::solve(&clrs, McmVariant::Corrected);
+    println!(
+        "CLRS chain optimal cost            = {}   ({})",
+        table.last().unwrap(),
+        pipedp::mcm::seq::parenthesization(&clrs)
+    );
+
+    // The published Fig. 8 schedule is unsound for n ≥ 4 (DESIGN.md §1.1):
+    let bad = McmProblem::hazard_counterexample();
+    let faithful = pipedp::mcm::pipeline::solve(&bad, McmVariant::PaperFaithful);
+    let truth = pipedp::mcm::seq::cost(&bad);
+    println!(
+        "published schedule on {:?}: {} (true optimum {})",
+        bad.dims,
+        faithful.last().unwrap(),
+        truth
+    );
+
+    // --- 3. The same computations through AOT Pallas kernels on PJRT -----
+    if pipedp::runtime::artifacts_dir().join("manifest.json").exists() {
+        let engine = Engine::load()?;
+        let xla_table = engine.solve_mcm(&clrs)?;
+        assert_eq!(xla_table, table);
+        println!(
+            "XLA (Pallas kernel via PJRT)       = {}   ✓ matches native",
+            xla_table.last().unwrap()
+        );
+    } else {
+        println!("(run `make artifacts` to enable the XLA backend)");
+    }
+
+    // --- 4. Conflict analysis (the paper's §III-A cost model) ------------
+    let sched = pipedp::core::schedule::SdpSchedule::new(p.n, p.offsets.clone());
+    let report = pipedp::core::conflict::analyze_sdp(&sched);
+    println!(
+        "conflict analysis: max degree {} over {} steps (1 = conflict-free)",
+        report.max_degree, report.steps
+    );
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT compiler: lower every (kernel, bucket) variant to HLO *text* and write
+``artifacts/manifest.json`` for the Rust artifact registry.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Lowering uses ``return_tuple=True`` so every artifact's output is a 1-tuple;
+the Rust side unwraps with ``to_tuple1()``.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` from python/ (that is
+what ``make artifacts`` does).  Incremental: a second run with unchanged
+inputs rewrites nothing, keeping the Makefile no-op contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from . import schedule as sched_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="int32"):
+    return jax.ShapeDtypeStruct(tuple(shape), getattr(jnp, dtype))
+
+
+def build_specs():
+    """The artifact catalogue: every bucket the Rust engine can route to.
+
+    Returns a list of dicts: name, lowered-fn thunk, and manifest metadata.
+    """
+    specs = []
+
+    def add(name, fn, args, meta):
+        specs.append({"name": name, "fn": fn, "args": args, "meta": meta})
+
+    # ---- S-DP buckets -----------------------------------------------------
+    for op in ("min", "add", "max"):
+        for (n, k) in ((256, 8), (1024, 16)):
+            if op != "min" and (n, k) != (1024, 16):
+                continue  # keep the catalogue small; min is the paper's op
+            add(
+                f"sdp_pipeline_{op}_i32_n{n}_k{k}",
+                lambda st, offs, op=op, n=n, k=k: (
+                    model.sdp_solve(st, offs, op=op, n=n, k=k, kernel="pipeline"),
+                ),
+                [_spec((n,)), _spec((k,))],
+                {"kind": "sdp", "algo": "pipeline", "op": op, "dtype": "int32",
+                 "n": n, "k": k, "batch": 1},
+            )
+    # larger pipeline bucket + f32 variant
+    add(
+        "sdp_pipeline_min_i32_n4096_k64",
+        lambda st, offs: (
+            model.sdp_solve(st, offs, op="min", n=4096, k=64, kernel="pipeline"),
+        ),
+        [_spec((4096,)), _spec((64,))],
+        {"kind": "sdp", "algo": "pipeline", "op": "min", "dtype": "int32",
+         "n": 4096, "k": 64, "batch": 1},
+    )
+    add(
+        "sdp_pipeline_min_f32_n1024_k16",
+        lambda st, offs: (
+            model.sdp_solve(st, offs, op="min", n=1024, k=16,
+                            dtype=jnp.float32, kernel="pipeline"),
+        ),
+        [_spec((1024,), "float32"), _spec((16,))],
+        {"kind": "sdp", "algo": "pipeline", "op": "min", "dtype": "float32",
+         "n": 1024, "k": 16, "batch": 1},
+    )
+    # prefix baseline
+    add(
+        "sdp_prefix_min_i32_n1024_k16",
+        lambda st, offs: (
+            model.sdp_solve(st, offs, op="min", n=1024, k=16, kernel="prefix"),
+        ),
+        [_spec((1024,)), _spec((16,))],
+        {"kind": "sdp", "algo": "prefix", "op": "min", "dtype": "int32",
+         "n": 1024, "k": 16, "batch": 1},
+    )
+    # batched pipeline bucket (the serving path)
+    for b in (4,):
+        add(
+            f"sdp_pipeline_min_i32_n1024_k16_b{b}",
+            lambda st, offs, b=b: (
+                model.sdp_solve_batch(st, offs, op="min", n=1024, k=16),
+            ),
+            [_spec((b, 1024)), _spec((b, 16))],
+            {"kind": "sdp", "algo": "pipeline", "op": "min", "dtype": "int32",
+             "n": 1024, "k": 16, "batch": b},
+        )
+
+    # ---- MCM diagonal buckets --------------------------------------------
+    for n in (8, 16, 32, 64):
+        add(
+            f"mcm_diagonal_i32_n{n}",
+            lambda dims, n=n: (model.mcm_solve(dims, n=n),),
+            [_spec((n + 1,))],
+            {"kind": "mcm", "algo": "diagonal", "op": "min", "dtype": "int32",
+             "n": n, "batch": 1},
+        )
+    for n, b in ((16, 8), (32, 8)):
+        add(
+            f"mcm_diagonal_i32_n{n}_b{b}",
+            lambda dims, n=n: (model.mcm_solve_batch(dims, n=n),),
+            [_spec((b, n + 1))],
+            {"kind": "mcm", "algo": "diagonal", "op": "min", "dtype": "int32",
+             "n": n, "batch": b},
+        )
+
+    # ---- MCM pipeline (schedule-executor) buckets -------------------------
+    # S must cover both the faithful and the corrected schedule for this n;
+    # Rust pads whichever schedule it sends to the artifact's static S.
+    for n in (8, 16, 32):
+        s_steps = max(sched_mod.faithful(n).num_steps,
+                      sched_mod.corrected(n).num_steps)
+        width = n - 1
+        add(
+            f"mcm_pipeline_i32_n{n}",
+            lambda dims, sched, n=n, s=s_steps, w=width: (
+                model.mcm_pipeline_solve(dims, sched, n=n, num_steps=s,
+                                         width=w),
+            ),
+            [_spec((n + 1,)), _spec((s_steps, width, 8))],
+            {"kind": "mcm", "algo": "pipeline", "op": "min", "dtype": "int32",
+             "n": n, "batch": 1, "sched_steps": s_steps, "sched_width": width},
+        )
+    return specs
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "artifacts": []}
+    for spec in build_specs():
+        name, meta = spec["name"], dict(spec["meta"])
+        path = f"{name}.hlo.txt"
+        lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+        text = to_hlo_text(lowered)
+        full = os.path.join(out_dir, path)
+        _write_if_changed(full, text)
+        meta.update(
+            name=name,
+            file=path,
+            sha256=hashlib.sha256(text.encode()).hexdigest(),
+            inputs=[{"shape": list(a.shape), "dtype": a.dtype.name}
+                    for a in spec["args"]],
+        )
+        manifest["artifacts"].append(meta)
+        if verbose:
+            print(f"  lowered {name:44s} ({len(text) / 1024:8.1f} KiB)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    _write_if_changed(mpath, json.dumps(manifest, indent=2) + "\n")
+    return manifest
+
+
+def _write_if_changed(path: str, text: str) -> None:
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    manifest = lower_all(args.out_dir, verbose=not args.quiet)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Generate golden cross-language fixtures consumed by rust/tests/golden.rs.
+
+The two schedule compilers (python/compile/schedule.py and rust
+core/schedule.rs) and the two sets of reference semantics must agree
+bit-for-bit; these fixtures pin the Python side so `cargo test` catches any
+drift without needing a Python interpreter at test time.
+
+Run: ``python -m compile.golden`` (from python/); writes rust/tests/golden/.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from . import schedule as S
+from .kernels import ref
+
+
+def schedule_fixture() -> dict:
+    out = {}
+    for n in (2, 4, 5, 8, 11):
+        for build, name in ((S.faithful, "faithful"), (S.corrected, "corrected")):
+            sched = build(n)
+            out[f"n{n}_{name}"] = {
+                "n": n,
+                "num_steps": sched.num_steps,
+                "max_width": sched.max_width,
+                # entries as [tgt, l, r, pa, pb, pc, term] per step
+                "steps": [
+                    [[e[0], e[1], e[2], e[3], e[4], e[5], e[7]] for e in step]
+                    for step in sched.steps
+                ],
+            }
+    return out
+
+
+def sdp_fixture() -> list:
+    cases = []
+    rng = np.random.default_rng(2024)
+    for (n, offsets, op) in [
+        (16, [2, 1], "add"),          # fibonacci-shaped
+        (40, [7, 5, 2], "min"),
+        (64, [8, 7, 6, 5], "max"),    # consecutive run
+        (30, [9, 3, 1], "min"),
+        (25, [24], "min"),            # single huge offset
+    ]:
+        offs = np.array(offsets, dtype=np.int64)
+        a1 = int(offs[0])
+        init = rng.integers(-50, 50, a1)
+        st0 = np.zeros(n, dtype=np.int64)
+        st0[:a1] = init
+        solved = ref.sdp_ref(st0, offs, op)
+        cases.append({
+            "n": n,
+            "offsets": offsets,
+            "op": op,
+            "init": init.tolist(),
+            "solved": solved.tolist(),
+        })
+    return cases
+
+
+def mcm_fixture() -> list:
+    cases = []
+    rng = np.random.default_rng(4048)
+    dims_list = [
+        [30, 35, 15, 5, 10, 20, 25],   # CLRS
+        [24, 3, 6, 7, 6],              # hazard counterexample
+    ] + [rng.integers(1, 30, n + 1).tolist() for n in (3, 5, 8, 11)]
+    for dims in dims_list:
+        dims_arr = np.array(dims, dtype=np.int64)
+        n = len(dims) - 1
+        linear = ref.mcm_linear_ref(dims_arr)
+        faithful_out = ref.mcm_schedule_exec_ref(dims_arr, S.faithful(n).to_tensor())
+        corrected_out = ref.mcm_schedule_exec_ref(dims_arr, S.corrected(n).to_tensor())
+        cases.append({
+            "dims": [int(d) for d in dims],
+            "linear_table": linear.tolist(),
+            "faithful_exec": faithful_out.tolist(),
+            "corrected_exec": corrected_out.tolist(),
+            "parens": ref.mcm_parens_ref(dims_arr),
+        })
+    return cases
+
+
+def main() -> None:
+    here = os.path.dirname(os.path.abspath(__file__))
+    out_dir = os.path.normpath(os.path.join(here, "..", "..", "rust", "tests", "golden"))
+    os.makedirs(out_dir, exist_ok=True)
+    fixtures = {
+        "schedules.json": schedule_fixture(),
+        "sdp_cases.json": sdp_fixture(),
+        "mcm_cases.json": mcm_fixture(),
+    }
+    for name, data in fixtures.items():
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: diagonal-wavefront MCM baseline.
+
+This is the classical parallelization the paper contrasts against: the
+triangular DP table is filled diagonal by diagonal; all cells of a diagonal
+are independent and computed in parallel, each as a min-fold over its d
+split points.
+
+TPU mapping: the whole cost table lives in VMEM as a flat i32[n*n] vector
+(n ≤ 128 → ≤ 64 KiB).  One ``fori_loop`` iteration = one (d, m) pair; the
+r-dimension (cells of the diagonal) is the vector dimension.  Masked flat
+gathers fetch T[r, r+m] and T[r+m+1, r+d]; masked flat scatters commit each
+completed diagonal.
+
+The kernel emits the paper's diagonal-major *linear* layout (Fig. 5)
+directly — every MCM backend speaks that layout, and emitting it in-kernel
+avoids a post-kernel 2-D gather, which the xla_extension 0.5.1 text
+round-trip mis-executes (see DESIGN.md §3; only 1-D dynamic gathers and
+scatters are used anywhere in the kernels for this reason).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dims_ref, o_ref, *, n: int):
+    p = dims_ref[...].astype(jnp.int32)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    ncells = n * (n + 1) // 2
+
+    # acc[r] = running min for cell (r, r+d) of the current diagonal
+    def md_step(dm, carry):
+        t, lin, acc = carry
+        # §Perf: iterate only the n(n−1)/2 real (d, m) pairs instead of a
+        # masked (n−1)² grid — halves the while-loop trip count (the
+        # dominant structural cost under interpret and as TPU steps).
+        # Pair dm of the triangular enumeration (d = 1..n−1, m = 0..d−1):
+        #   d = ⌊(1 + √(8·dm + 1)) / 2⌋,  m = dm − d(d−1)/2.
+        # Exact in f32 for n ≤ 1024: boundaries hit perfect squares
+        # (2d−1)², and the gap to the next square exceeds f32 rounding.
+        d = ((1.0 + jnp.sqrt(8.0 * dm.astype(jnp.float32) + 1.0)) * 0.5).astype(jnp.int32)
+        m = dm - (d - 1) * d // 2
+        c = rows + d
+        valid = c < n
+        left = t[jnp.where(valid, rows * n + rows + m, 0)]
+        right = t[jnp.where(valid, (rows + m + 1) * n + c, 0)]
+        w = p[rows] * p[jnp.where(valid, rows + m + 1, 0)] * p[jnp.where(c < n, c + 1, 0)]
+        v = left + right + w
+        acc = jnp.where(valid, jnp.where(m == 0, v, jnp.minimum(acc, v)), acc)
+        # when m reaches d-1 the diagonal is complete → commit it to both
+        # the square working table and the linear diagonal-major output
+        commit = (m == d - 1) & (c < n)
+        tgt_sq = jnp.where(commit, rows * n + c, n * n)
+        t = t.at[tgt_sq].set(acc, mode="drop")
+        diag_off = d * n - d * (d - 1) // 2
+        tgt_lin = jnp.where(commit, diag_off + rows, ncells)
+        lin = lin.at[tgt_lin].set(acc, mode="drop")
+        return (t, lin, acc)
+
+    t0 = jnp.zeros((n * n,), dtype=jnp.int32)
+    lin0 = jnp.zeros((ncells,), dtype=jnp.int32)
+    acc0 = jnp.zeros((n,), dtype=jnp.int32)
+    _, lin, _ = jax.lax.fori_loop(
+        0, n * (n - 1) // 2, md_step, (t0, lin0, acc0)
+    ) if n > 1 else (t0, lin0, acc0)
+    o_ref[...] = lin
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def mcm_diagonal(dims, *, n: int):
+    """Fill the MCM cost table for a chain of ``n`` matrices.
+
+    Args:
+        dims: (n+1,) int32 matrix dimensions p0..pn.
+    Returns:
+        (n(n+1)/2,) int32 linearized diagonal-major cost table; the optimal
+        cost is the last element.
+    """
+    assert n <= 1024, "f32 pair-index arithmetic is exact only for n ≤ 1024"
+    ncells = n * (n + 1) // 2
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((ncells,), jnp.int32),
+        interpret=True,
+    )(dims.astype(jnp.int32))

@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernel: the MCM pipeline as a generic *schedule executor*.
+
+The paper's Fig. 8 algorithm is a schedule — (cell, term) → (step, thread) —
+plus fixed 4-substep semantics.  We split those roles (DESIGN.md §3.1): Rust
+(or python/compile/schedule.py) compiles a schedule into a dense
+``i32[S, T, 8]`` tensor, and this kernel executes *any* such tensor:
+
+    substeps 1-2: gather left/right operands over the T lanes,
+    substep  3  : v = l + r + p[pa]·p[pb]·p[pc],
+    substep  4  : masked scatter — overwrite (flag 1) or min-combine (flag 2).
+
+All gathers of a step read the pre-step table, all writes land after — the
+exact memory model Lemmas 1/2 assume.  Consequently the published
+``faithful`` schedule reproduces its staleness hazard here bit-for-bit,
+while the ``corrected`` schedule matches the classic DP (pytest enforces
+both).  One AOT artifact per table size serves both schedules at runtime.
+
+Scatter safety on TPU relies on per-step target distinctness — exactly what
+the paper's Theorem 1 proves (re-checked by the Rust conflict analyzer
+before a schedule is ever shipped to this kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import schedule as sched_mod
+
+
+def _kernel(dims_ref, sched_ref, o_ref, *, n: int, num_steps: int):
+    p = dims_ref[...].astype(jnp.int32)
+    sched = sched_ref[...]
+    ncells = n * (n + 1) // 2
+
+    def step(s, st):
+        row = sched[s]  # (T, 8)
+        tgt, li, ri = row[:, 0], row[:, 1], row[:, 2]
+        pa, pb, pc = row[:, 3], row[:, 4], row[:, 5]
+        flag = row[:, 6]
+        active = flag != sched_mod.FLAG_INACTIVE
+        # substeps 1-3: thread-local gather + compute
+        v = st[li] + st[ri] + p[pa] * p[pb] * p[pc]
+        # substep 4: combine into the table
+        cur = st[tgt]
+        new = jnp.where(flag == sched_mod.FLAG_FIRST, v, jnp.minimum(cur, v))
+        return st.at[jnp.where(active, tgt, ncells)].set(new, mode="drop")
+
+    st0 = jnp.zeros((ncells,), dtype=jnp.int32)
+    st = jax.lax.fori_loop(0, num_steps, step, st0)
+    o_ref[...] = st
+
+
+@functools.partial(jax.jit, static_argnames=("n", "num_steps", "width"))
+def mcm_pipeline_exec(dims, sched_tensor, *, n: int, num_steps: int, width: int):
+    """Execute an [S, T, 8] MCM pipeline schedule tensor.
+
+    Args:
+        dims: (n+1,) int32 matrix dimensions.
+        sched_tensor: (num_steps, width, 8) int32 schedule (see schedule.py).
+    Returns:
+        (n(n+1)/2,) int32 linearized table; optimal cost is the last entry.
+    """
+    ncells = n * (n + 1) // 2
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, num_steps=num_steps),
+        out_shape=jax.ShapeDtypeStruct((ncells,), jnp.int32),
+        interpret=True,
+    )(dims.astype(jnp.int32), sched_tensor.astype(jnp.int32))

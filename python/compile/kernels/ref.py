@@ -1,0 +1,141 @@
+"""Pure numpy reference oracles — the correctness ground truth for every
+Pallas kernel and for the Rust native solvers (via golden files).
+
+Nothing here is ever lowered or shipped; these are deliberately the most
+boring possible implementations of the paper's problem definitions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .. import schedule as sched_mod
+
+# ---------------------------------------------------------------------------
+# S-DP problem (Definition 1)
+# ---------------------------------------------------------------------------
+
+_OPS = {
+    "min": np.minimum,
+    "max": np.maximum,
+    "add": np.add,
+}
+
+
+def validate_offsets(offsets: np.ndarray) -> None:
+    if offsets.ndim != 1 or offsets.shape[0] == 0:
+        raise ValueError("offsets must be a non-empty 1-d array")
+    if offsets.shape[0] > 1 and not (np.diff(offsets) < 0).all():
+        raise ValueError("offsets must be strictly decreasing")
+    if int(offsets[-1]) <= 0:
+        raise ValueError("offsets must be positive")
+
+
+def sdp_ref(st_init: np.ndarray, offsets: np.ndarray, op: str) -> np.ndarray:
+    """Fig. 1 sequential algorithm for the S-DP problem.
+
+    ``st_init`` holds the preset values in positions ``[0, a_1)``; positions
+    from ``a_1`` on are ignored (overwritten).  ``offsets`` must be strictly
+    decreasing positive integers; ``op`` one of min/max/add.
+    """
+    offsets = np.asarray(offsets)
+    validate_offsets(offsets)
+    f = _OPS[op]
+    st = np.array(st_init, copy=True)
+    n = st.shape[0]
+    a1 = int(offsets[0])
+    for i in range(a1, n):
+        acc = st[i - a1]
+        for a in offsets[1:]:
+            acc = f(acc, st[i - int(a)])
+        st[i] = acc
+    return st
+
+
+# ---------------------------------------------------------------------------
+# MCM problem (§IV)
+# ---------------------------------------------------------------------------
+
+
+def mcm_table_ref(dims: np.ndarray) -> np.ndarray:
+    """Classic O(n^3) matrix-chain DP.  Returns the (n, n) cost table
+    (int64), upper triangle valid, diagonal = 0."""
+    dims = np.asarray(dims, dtype=np.int64)
+    n = dims.shape[0] - 1
+    t = np.zeros((n, n), dtype=np.int64)
+    for d in range(1, n):
+        for r in range(0, n - d):
+            c = r + d
+            best = None
+            for m in range(r, c):
+                v = t[r, m] + t[m + 1, c] + dims[r] * dims[m + 1] * dims[c + 1]
+                best = v if best is None else min(best, v)
+            t[r, c] = best
+    return t
+
+
+def mcm_cost_ref(dims: np.ndarray) -> int:
+    """Optimal scalar-multiplication count for the chain."""
+    n = np.asarray(dims).shape[0] - 1
+    return int(mcm_table_ref(dims)[0, n - 1])
+
+
+def mcm_linear_ref(dims: np.ndarray) -> np.ndarray:
+    """The reference table in the paper's diagonal-major linearized layout."""
+    dims = np.asarray(dims, dtype=np.int64)
+    n = dims.shape[0] - 1
+    t = mcm_table_ref(dims)
+    st = np.zeros(sched_mod.num_cells(n), dtype=np.int64)
+    for r in range(n):
+        for c in range(r, n):
+            st[sched_mod.cell_index(n, r, c)] = t[r, c]
+    return st
+
+
+def mcm_schedule_exec_ref(dims: np.ndarray, tensor: np.ndarray) -> np.ndarray:
+    """Execute a dense [S, T, 8] schedule tensor with the paper's 4-substep
+    semantics (all reads of a step happen before all writes of that step).
+
+    This reproduces staleness hazards of a faithful schedule bit-for-bit and
+    is the oracle for the `mcm_pipeline` Pallas kernel.
+    """
+    dims = np.asarray(dims, dtype=np.int64)
+    n = dims.shape[0] - 1
+    st = np.zeros(sched_mod.num_cells(n), dtype=np.int64)
+    for step in tensor:
+        # substeps 1-3: gather + compute into thread-local values
+        pending = []
+        for (tgt, li, ri, pa, pb, pc, flag, _term) in step:
+            if flag == sched_mod.FLAG_INACTIVE:
+                continue
+            v = st[li] + st[ri] + dims[pa] * dims[pb] * dims[pc]
+            pending.append((int(tgt), int(flag), int(v)))
+        # substep 4: combine
+        for tgt, flag, v in pending:
+            st[tgt] = v if flag == sched_mod.FLAG_FIRST else min(st[tgt], v)
+    return st
+
+
+def mcm_parens_ref(dims: np.ndarray) -> str:
+    """Optimal parenthesization string, e.g. ((A1(A2A3))((A4A5)A6))."""
+    dims = np.asarray(dims, dtype=np.int64)
+    n = dims.shape[0] - 1
+    t = np.zeros((n, n), dtype=np.int64)
+    split = np.zeros((n, n), dtype=np.int64)
+    for d in range(1, n):
+        for r in range(0, n - d):
+            c = r + d
+            best, bm = None, r
+            for m in range(r, c):
+                v = t[r, m] + t[m + 1, c] + dims[r] * dims[m + 1] * dims[c + 1]
+                if best is None or v < best:
+                    best, bm = v, m
+            t[r, c], split[r, c] = best, bm
+
+    def emit(r: int, c: int) -> str:
+        if r == c:
+            return f"A{r + 1}"
+        m = int(split[r, c])
+        return f"({emit(r, m)}{emit(m + 1, c)})"
+
+    return emit(0, n - 1)

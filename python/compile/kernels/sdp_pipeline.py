@@ -1,0 +1,78 @@
+"""Layer-1 Pallas kernel: the Fig. 2 S-DP pipeline.
+
+GPU → TPU adaptation (DESIGN.md §5): the paper's k-stage pipeline of CUDA
+threads becomes a k-lane *vector* per outer step.  One ``fori_loop``
+iteration is one outer step ``i``; lane ``j`` (0-based) plays thread ``j+1``:
+
+    target  t_j = i - j                  (the paper's i_j = i - j + 1, 0-based)
+    read    r_j = t_j - a_{j+1}
+    update  ST[t_j] = v            if j == 0   (overwrite)
+            ST[t_j] = ST[t_j] ⊗ v  otherwise   (combine)
+
+Lane targets are distinct within a step, so the masked scatter is race-free —
+the TPU analogue of the paper's conflict-freedom argument.  Reads of one
+address by many lanes (the Fig. 4 worst case) are *free* here: a gather can
+broadcast one address to all lanes, so the GPU pathology disappears on this
+target (measured instead in the Rust GPU simulator).
+
+The offsets are a runtime ``i32[k]`` input (values dynamic, k static), so one
+AOT artifact serves every offset pattern of a given (n, k, op, dtype) bucket.
+The whole ST lives in VMEM for our buckets (n ≤ 4096 → ≤ 16 KiB), hence a
+single-block BlockSpec; the step loop runs inside the kernel body rather than
+over the Pallas grid so that the lowered module is one fused XLA while-loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_OPS = {
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "add": jnp.add,
+}
+
+
+def _kernel(st_ref, offs_ref, o_ref, *, op: str, n: int, k: int):
+    st0 = st_ref[...]
+    offs = offs_ref[...]
+    a1 = offs[0]
+    f = _OPS[op]
+    lanes = jnp.arange(k, dtype=jnp.int32)
+
+    def step(i, st):
+        # lane j handles the paper's thread j+1 at outer step i (0-based idx)
+        tgt = i - lanes
+        src = tgt - offs
+        active = (tgt >= a1) & (tgt < n) & (src >= 0)
+        src_c = jnp.where(active, src, 0)
+        tgt_c = jnp.where(active, tgt, n)  # out-of-range → dropped by scatter
+        gathered = st[src_c]
+        cur = st[jnp.where(active, tgt, 0)]
+        val = jnp.where(lanes == 0, gathered, f(cur, gathered))
+        return st.at[tgt_c].set(val, mode="drop")
+
+    # outer steps i = a1 .. n+k-2 (masked below a1, static trip count)
+    st = jax.lax.fori_loop(0, n + k - 1, step, st0)
+    o_ref[...] = st
+
+
+@functools.partial(jax.jit, static_argnames=("op", "n", "k", "dtype"))
+def sdp_pipeline(st_init, offsets, *, op: str, n: int, k: int, dtype=jnp.int32):
+    """Solve the S-DP problem with the pipeline schedule.
+
+    Args:
+        st_init: (n,) array; positions [0, offsets[0]) hold preset values.
+        offsets: (k,) strictly-decreasing positive int32 offsets.
+    Returns:
+        (n,) solved table.
+    """
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op, n=n, k=k),
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        interpret=True,
+    )(st_init.astype(dtype), offsets.astype(jnp.int32))

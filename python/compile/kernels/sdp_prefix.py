@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: the parallel-prefix (tournament) S-DP baseline.
+
+This is the paper's §II-B "standard parallelizing method": each element
+``ST[i]`` is still produced in sequence, but the k-operand ⊗-combine is done
+as a ⌈log2 k⌉-round tournament over a k-lane vector instead of a serial
+fold — O(n log k) steps with k threads in the paper's cost model.
+
+On TPU the tournament is ⌈log2 k⌉ vector ops per element; numerically it is
+identical to the pipeline kernel (⊗ associative + commutative for min/max/
+add), so both check against the same oracle.  It exists as the baseline for
+the work-optimality ablation (EXPERIMENTS.md E8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_OPS = {
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "add": jnp.add,
+}
+
+
+def _rounds(k: int) -> list[int]:
+    """Tournament strides: lane j combines with lane j+stride while j+stride
+    is still inside the shrinking active window."""
+    out = []
+    m = k
+    while m > 1:
+        half = (m + 1) // 2
+        out.append(half)
+        m = half
+    return out
+
+
+def _kernel(st_ref, offs_ref, o_ref, *, op: str, n: int, k: int):
+    st0 = st_ref[...]
+    offs = offs_ref[...]
+    a1 = offs[0]
+    f = _OPS[op]
+    lanes = jnp.arange(k, dtype=jnp.int32)
+    strides = _rounds(k)  # static: k is a trace-time constant
+
+    def element(i, st):
+        src = i - offs
+        vals = st[jnp.where(src >= 0, src, 0)]
+        # tournament reduction in ceil(log2 k) rounds
+        m = k
+        for half in strides:
+            partner = jnp.roll(vals, -half)
+            take = lanes + half < m
+            vals = jnp.where(take, f(vals, partner), vals)
+            m = half
+        active = (i >= a1) & (i < n)
+        return st.at[jnp.where(active, i, n)].set(vals[0], mode="drop")
+
+    st = jax.lax.fori_loop(0, n, element, st0)
+    o_ref[...] = st
+
+
+@functools.partial(jax.jit, static_argnames=("op", "n", "k", "dtype"))
+def sdp_prefix(st_init, offsets, *, op: str, n: int, k: int, dtype=jnp.int32):
+    """Solve the S-DP problem with the tournament-reduction schedule."""
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op, n=n, k=k),
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        interpret=True,
+    )(st_init.astype(dtype), offsets.astype(jnp.int32))

@@ -1,0 +1,71 @@
+"""Layer-2 JAX entrypoints.
+
+These are the functions that get AOT-lowered to HLO text by aot.py and
+executed from the Rust runtime (rust/src/runtime/engine.rs).  Each calls the
+Layer-1 Pallas kernels so that kernel + surrounding graph lower into one HLO
+module.  Batched variants are plain ``vmap`` over the leading axis — this is
+what the Rust coordinator's dynamic batcher targets: one PJRT dispatch for a
+whole batch of same-bucket requests.
+
+Python here is build-time only; nothing in this file runs on the request
+path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sdp_pipeline import sdp_pipeline
+from .kernels.sdp_prefix import sdp_prefix
+from .kernels.mcm_diagonal import mcm_diagonal
+from .kernels.mcm_pipeline import mcm_pipeline_exec
+
+
+def sdp_solve(st_init, offsets, *, op: str, n: int, k: int, dtype=jnp.int32,
+              kernel: str = "pipeline"):
+    """Solve one S-DP instance. Returns the filled (n,) table."""
+    fn = sdp_pipeline if kernel == "pipeline" else sdp_prefix
+    return fn(st_init, offsets, op=op, n=n, k=k, dtype=dtype)
+
+
+def sdp_solve_batch(st_init, offsets, *, op: str, n: int, k: int,
+                    dtype=jnp.int32, kernel: str = "pipeline"):
+    """Batched S-DP: st_init (B, n), offsets (B, k) → (B, n)."""
+    solve = functools.partial(sdp_solve, op=op, n=n, k=k, dtype=dtype,
+                              kernel=kernel)
+    return jax.vmap(solve)(st_init, offsets)
+
+
+def mcm_solve(dims, *, n: int):
+    """Diagonal-wavefront MCM: dims (n+1,) → linearized table (n(n+1)/2,).
+
+    The kernel emits the paper's diagonal-major linear order directly, so
+    every MCM backend (diagonal kernel, pipeline kernel, Rust native,
+    simulator) speaks the same output format; the optimal cost is always
+    the last element.
+    """
+    return mcm_diagonal(dims, n=n)
+
+
+def mcm_solve_batch(dims, *, n: int):
+    """Batched diagonal MCM: dims (B, n+1) → (B, n(n+1)/2)."""
+    return jax.vmap(functools.partial(mcm_solve, n=n))(dims)
+
+
+def mcm_pipeline_solve(dims, sched_tensor, *, n: int, num_steps: int, width: int):
+    """Schedule-executor MCM (faithful or corrected schedule at runtime)."""
+    return mcm_pipeline_exec(dims, sched_tensor, n=n, num_steps=num_steps,
+                             width=width)
+
+
+def mcm_pipeline_solve_batch(dims, sched_tensor, *, n: int, num_steps: int,
+                             width: int):
+    """Batched executor: dims (B, n+1), one shared schedule tensor."""
+    solve = functools.partial(mcm_pipeline_exec, n=n, num_steps=num_steps,
+                              width=width)
+    return jax.vmap(solve, in_axes=(0, None))(dims, sched_tensor)
+
+

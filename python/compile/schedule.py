@@ -1,0 +1,218 @@
+"""Schedule compiler for the MCM pipeline (python mirror of rust core/schedule.rs).
+
+The paper's contribution is a *schedule*: which thread computes which term of
+which solution-table cell at which outer step.  This module builds two
+schedules for the matrix-chain-multiplication (MCM) pipeline of Fig. 8:
+
+* ``faithful``  — the published algorithm verbatim: cell ``i`` (1-based linear
+  index in diagonal-major order) has its term ``j`` executed by thread ``j``
+  at outer step ``i + j - 1``.  Theorem 1 of the paper proves all threads
+  touch *distinct* addresses within each substep, but the schedule has a
+  read-after-write *staleness* hazard for ``n >= 4`` (see DESIGN.md §1.1):
+  term 1 of a cell on diagonal ``d`` reads a diagonal-``d-1`` cell that is
+  finalized only at the same or a later step whenever ``2d >= n + 2``.
+
+* ``corrected`` — dataflow-delayed variant: each cell's term ``j`` is pushed
+  to the earliest step at which both operands are final, preserving the
+  one-term-per-cell-per-step pipeline shape and the 4-substep structure.
+
+Both are emitted as a dense ``int32[S, T, 8]`` tensor consumed by the generic
+schedule-executor Pallas kernel (``kernels/mcm_pipeline.py``) and by the Rust
+native executor; the field layout is::
+
+    [:, :, 0] = tgt    linear 0-based index of the cell being combined into
+    [:, :, 1] = l_idx  linear index of the left operand
+    [:, :, 2] = r_idx  linear index of the right operand
+    [:, :, 3] = pa     dims index of the first weight factor   p[pa]
+    [:, :, 4] = pb     dims index of the second weight factor  p[pb]
+    [:, :, 5] = pc     dims index of the third weight factor   p[pc]
+    [:, :, 6] = flag   0 = inactive lane, 1 = first term (overwrite),
+                       2 = combine with min
+    [:, :, 7] = term   1-based term number j (diagnostics only)
+
+Linearization (Fig. 5): cells of the upper-triangular table are numbered in
+diagonal-major order; cell (r, c) with d = c - r has 0-based linear index
+``offset(d) + r`` where ``offset(d) = d*n - d*(d-1)//2``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+FLAG_INACTIVE = 0
+FLAG_FIRST = 1
+FLAG_COMBINE = 2
+
+
+def diag_offset(n: int, d: int) -> int:
+    """Linear index of the first cell of diagonal ``d`` (0-based)."""
+    return d * n - d * (d - 1) // 2
+
+
+def num_cells(n: int) -> int:
+    """Total number of cells in the triangular solution table."""
+    return n * (n + 1) // 2
+
+
+def cell_index(n: int, r: int, c: int) -> int:
+    """Linear 0-based index of table cell (r, c), r <= c < n."""
+    assert 0 <= r <= c < n, (r, c, n)
+    return diag_offset(n, c - r) + r
+
+
+def cell_coords(n: int, idx: int) -> tuple[int, int]:
+    """Inverse of :func:`cell_index`."""
+    assert 0 <= idx < num_cells(n)
+    d = 0
+    while diag_offset(n, d + 1) <= idx:
+        d += 1
+    r = idx - diag_offset(n, d)
+    return r, r + d
+
+
+def cell_terms(n: int, r: int, c: int) -> list[tuple[int, int, int, int, int]]:
+    """Terms of cell (r, c): list of (l_idx, r_idx, pa, pb, pc), term j = entry j-1.
+
+    Term j (1-based) is f(ST[(r, r+j-1)], ST[(r+j, c)]) with weight
+    p[r] * p[r+j] * p[c+1]  (dims vector p of length n+1).
+    """
+    d = c - r
+    out = []
+    for j in range(1, d + 1):
+        l_idx = cell_index(n, r, r + j - 1)
+        r_idx = cell_index(n, r + j, c)
+        out.append((l_idx, r_idx, r, r + j, c + 1))
+    return out
+
+
+class McmSchedule:
+    """A step-synchronous MCM pipeline schedule.
+
+    Attributes:
+        n: number of matrices.
+        kind: "faithful" or "corrected".
+        steps: list of steps; each step is a list of
+            (tgt, l_idx, r_idx, pa, pb, pc, flag, term) tuples.
+        start: per-cell start step (0-based linear cell index -> step).
+    """
+
+    def __init__(self, n: int, kind: str, steps, start):
+        self.n = n
+        self.kind = kind
+        self.steps = steps
+        self.start = start
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    @property
+    def max_width(self) -> int:
+        return max((len(s) for s in self.steps), default=0)
+
+    def to_tensor(self, num_steps: int | None = None, width: int | None = None) -> np.ndarray:
+        """Dense int32[S, T, 8] tensor, padded with inactive lanes."""
+        s_tot = num_steps if num_steps is not None else self.num_steps
+        w_tot = width if width is not None else max(self.max_width, 1)
+        assert s_tot >= self.num_steps and w_tot >= self.max_width
+        out = np.zeros((s_tot, w_tot, 8), dtype=np.int32)
+        for s, entries in enumerate(self.steps):
+            for lane, e in enumerate(entries):
+                out[s, lane, :] = e
+        return out
+
+    def finalize_step(self, x: int) -> int:
+        """Step after which linear cell x is fully combined (-1 for initial)."""
+        n = self.n
+        if x < n:
+            return -1
+        r, c = cell_coords(n, x)
+        return self.start[x] + (c - r) - 1
+
+
+def _build(n: int, kind: str) -> McmSchedule:
+    N = num_cells(n)
+    width = max(n - 1, 1)
+    # per-cell start step
+    start = [0] * N
+    if kind == "faithful":
+        # paper: cell i (1-based) term j at outer step i + j - 1, outer steps
+        # n+1 .. N + n - 2 (1-based).  0-based: cell x term j at step
+        # x - n + (j - 1).
+        for x in range(n, N):
+            start[x] = x - n
+    elif kind == "corrected":
+        # dataflow-delayed greedy, processed in linear (diagonal-major) order.
+        finalize = [-1] * N  # step after which cell is final
+        occupancy: dict[int, int] = {}
+        for x in range(n, N):
+            r, c = cell_coords(n, x)
+            d = c - r
+            s0 = x - n  # never earlier than the faithful start
+            for j, (li, ri, _pa, _pb, _pc) in enumerate(cell_terms(n, r, c), start=1):
+                for dep in (li, ri):
+                    # operand must be final strictly before step s0 + j - 1
+                    s0 = max(s0, finalize[dep] + 1 - (j - 1))
+            # respect thread-count capacity (width lanes per step)
+            while any(
+                occupancy.get(s0 + j, 0) >= width for j in range(d)
+            ):
+                s0 += 1
+            for j in range(d):
+                occupancy[s0 + j] = occupancy.get(s0 + j, 0) + 1
+            start[x] = s0
+            finalize[x] = s0 + d - 1
+    else:
+        raise ValueError(f"unknown schedule kind: {kind}")
+
+    # materialize steps
+    steps_map: dict[int, list] = {}
+    for x in range(n, N):
+        r, c = cell_coords(n, x)
+        for j, (li, ri, pa, pb, pc) in enumerate(cell_terms(n, r, c), start=1):
+            s = start[x] + (j - 1)
+            flag = FLAG_FIRST if j == 1 else FLAG_COMBINE
+            steps_map.setdefault(s, []).append((x, li, ri, pa, pb, pc, flag, j))
+    n_steps = max(steps_map, default=-1) + 1
+    steps = [sorted(steps_map.get(s, []), key=lambda e: e[7]) for s in range(n_steps)]
+    return McmSchedule(n, kind, steps, start)
+
+
+def faithful(n: int) -> McmSchedule:
+    """The published Fig. 8 schedule (has staleness hazards for n >= 4)."""
+    return _build(n, "faithful")
+
+
+def corrected(n: int) -> McmSchedule:
+    """Dataflow-delayed schedule: hazard-free, same pipeline shape."""
+    return _build(n, "corrected")
+
+
+def hazards(sched: McmSchedule) -> list[tuple[int, int, int]]:
+    """Staleness hazards: (step, reader_cell, operand_cell) where an operand
+    is read at a step <= its finalize step (i.e. before it is final)."""
+    out = []
+    for s, entries in enumerate(sched.steps):
+        for (x, li, ri, _pa, _pb, _pc, _flag, _j) in entries:
+            for dep in (li, ri):
+                if sched.finalize_step(dep) >= s:
+                    out.append((s, x, dep))
+    return out
+
+
+def substep_conflicts(sched: McmSchedule) -> list[tuple[int, int, int]]:
+    """Same-substep same-address accesses (what Theorem 1 rules out).
+
+    Returns (step, substep, address) triples where >= 2 threads touch the
+    same address; substep 1 = left reads, 2 = right reads, 4 = writes.
+    """
+    out = []
+    for s, entries in enumerate(sched.steps):
+        for substep, field in ((1, 1), (2, 2), (4, 0)):
+            seen: dict[int, int] = {}
+            for e in entries:
+                seen[e[field]] = seen.get(e[field], 0) + 1
+            for addr, cnt in seen.items():
+                if cnt > 1:
+                    out.append((s, substep, addr))
+    return out

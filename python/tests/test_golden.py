@@ -1,0 +1,46 @@
+"""The committed golden fixtures (rust/tests/golden/) must stay in sync
+with the Python generators — if this fails, rerun ``python -m
+compile.golden`` AND make sure the Rust side still passes
+``cargo test --test golden`` (the fixtures pin the cross-language
+contract)."""
+
+import json
+import os
+
+from compile import golden
+
+
+def _repo(*parts):
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", "..", *parts))
+
+
+def _load(name):
+    with open(_repo("rust", "tests", "golden", name)) as f:
+        return json.load(f)
+
+
+def _canon(obj):
+    return json.loads(json.dumps(obj, sort_keys=True))
+
+
+def test_schedules_fixture_current():
+    assert _canon(golden.schedule_fixture()) == _load("schedules.json")
+
+
+def test_sdp_fixture_current():
+    assert _canon(golden.sdp_fixture()) == _load("sdp_cases.json")
+
+
+def test_mcm_fixture_current():
+    assert _canon(golden.mcm_fixture()) == _load("mcm_cases.json")
+
+
+def test_mcm_fixture_contains_counterexample():
+    cases = _load("mcm_cases.json")
+    dims = [c["dims"] for c in cases]
+    assert [24, 3, 6, 7, 6] in dims
+    bad = next(c for c in cases if c["dims"] == [24, 3, 6, 7, 6])
+    # faithful execution diverges from the truth on the counterexample
+    assert bad["faithful_exec"][-1] != bad["linear_table"][-1]
+    assert bad["corrected_exec"] == bad["linear_table"]

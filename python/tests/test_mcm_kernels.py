@@ -1,0 +1,133 @@
+"""Pallas MCM kernels vs the classic-DP oracle: the diagonal-wavefront
+kernel, the schedule-executor kernel under both schedules, and the
+unsoundness counterexample for the published (faithful) schedule."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import schedule as S
+from compile.kernels.mcm_diagonal import mcm_diagonal
+from compile.kernels.mcm_pipeline import mcm_pipeline_exec
+from compile.kernels.ref import (mcm_cost_ref, mcm_linear_ref,
+                                 mcm_schedule_exec_ref, mcm_table_ref)
+
+CLRS_DIMS = np.array([30, 35, 15, 5, 10, 20, 25], dtype=np.int32)
+
+
+def dims_strategy(min_n=2, max_n=12, max_dim=30):
+    return st.lists(st.integers(min_value=1, max_value=max_dim),
+                    min_size=min_n + 1, max_size=max_n + 1)
+
+
+def _exec_sched(dims, sched, pad_steps=None, pad_width=None):
+    n = dims.shape[0] - 1
+    t = sched.to_tensor(pad_steps, pad_width)
+    out = mcm_pipeline_exec(jnp.asarray(dims), jnp.asarray(t), n=n,
+                            num_steps=t.shape[0], width=t.shape[1])
+    return np.asarray(out).astype(np.int64)
+
+
+class TestDiagonalKernel:
+    def test_clrs_example(self):
+        """CLRS 15.2: optimal cost of the 6-matrix chain is 15125."""
+        t = np.asarray(mcm_diagonal(jnp.asarray(CLRS_DIMS), n=6))
+        assert t[-1] == 15125
+
+    @given(dims=dims_strategy())
+    @settings(max_examples=30, deadline=None)
+    def test_random_chains(self, dims):
+        dims = np.array(dims, dtype=np.int32)
+        n = dims.shape[0] - 1
+        got = np.asarray(mcm_diagonal(jnp.asarray(dims), n=n)).astype(np.int64)
+        np.testing.assert_array_equal(got, mcm_linear_ref(dims))
+
+    def test_n1_single_matrix(self):
+        t = np.asarray(mcm_diagonal(jnp.asarray(np.array([3, 7], np.int32)), n=1))
+        assert t.shape == (1,) and t[0] == 0
+
+
+class TestScheduleExecutorKernel:
+    @given(dims=dims_strategy())
+    @settings(max_examples=20, deadline=None)
+    def test_corrected_matches_dp(self, dims):
+        dims = np.array(dims, dtype=np.int32)
+        n = dims.shape[0] - 1
+        got = _exec_sched(dims, S.corrected(n))
+        np.testing.assert_array_equal(got, mcm_linear_ref(dims))
+
+    @given(dims=dims_strategy())
+    @settings(max_examples=20, deadline=None)
+    def test_kernel_matches_python_executor_on_faithful(self, dims):
+        """The kernel must reproduce the published schedule's semantics
+        *exactly*, stale reads included — oracle is the 4-substep numpy
+        executor."""
+        dims = np.array(dims, dtype=np.int32)
+        n = dims.shape[0] - 1
+        sched = S.faithful(n)
+        got = _exec_sched(dims, sched)
+        ref = mcm_schedule_exec_ref(dims, sched.to_tensor())
+        np.testing.assert_array_equal(got, ref)
+
+    def test_clrs_corrected(self):
+        got = _exec_sched(CLRS_DIMS, S.corrected(6))
+        assert got[-1] == 15125
+
+    def test_padding_is_noop(self):
+        dims = CLRS_DIMS
+        sched = S.corrected(6)
+        a = _exec_sched(dims, sched)
+        b = _exec_sched(dims, sched, pad_steps=sched.num_steps + 7,
+                        pad_width=sched.max_width + 3)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestPublishedScheduleUnsound:
+    """DESIGN.md §1.1 / EXPERIMENTS.md E6: the Fig. 8 schedule as published
+    returns a WRONG optimal cost on concrete instances for n >= 4."""
+
+    COUNTEREXAMPLE = np.array([24, 3, 6, 7, 6], dtype=np.int32)  # n = 4
+
+    def test_counterexample_diverges(self):
+        dims = self.COUNTEREXAMPLE
+        got = _exec_sched(dims, S.faithful(4))
+        ref = mcm_linear_ref(dims)
+        assert got[-1] != ref[-1], (
+            "expected the published schedule to mis-compute this instance")
+
+    def test_counterexample_overestimates(self):
+        """Stale reads drop candidate splits, so the error direction is
+        always an over-estimate of the optimal cost."""
+        dims = self.COUNTEREXAMPLE
+        got = _exec_sched(dims, S.faithful(4))
+        ref = mcm_linear_ref(dims)
+        assert got[-1] > ref[-1]
+
+    def test_corrected_fixes_counterexample(self):
+        dims = self.COUNTEREXAMPLE
+        got = _exec_sched(dims, S.corrected(4))
+        np.testing.assert_array_equal(got, mcm_linear_ref(dims))
+
+    @given(dims=dims_strategy(min_n=2, max_n=3))
+    @settings(max_examples=15, deadline=None)
+    def test_faithful_correct_below_n4(self, dims):
+        """For n <= 3 no hazard exists and the published schedule is exact."""
+        dims = np.array(dims, dtype=np.int32)
+        n = dims.shape[0] - 1
+        got = _exec_sched(dims, S.faithful(n))
+        np.testing.assert_array_equal(got, mcm_linear_ref(dims))
+
+    @given(dims=dims_strategy(min_n=4, max_n=10))
+    @settings(max_examples=25, deadline=None)
+    def test_faithful_never_underestimates(self, dims):
+        dims = np.array(dims, dtype=np.int32)
+        n = dims.shape[0] - 1
+        got = _exec_sched(dims, S.faithful(n))
+        assert (got >= mcm_linear_ref(dims)).all()
+
+
+class TestParensOracle:
+    def test_clrs_parenthesization(self):
+        from compile.kernels.ref import mcm_parens_ref
+        assert mcm_parens_ref(CLRS_DIMS) == "((A1(A2A3))((A4A5)A6))"

@@ -1,0 +1,108 @@
+"""L2 model entrypoints (incl. batched variants) and the AOT pipeline:
+shape contracts, HLO-text lowering, manifest integrity, incremental no-op."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile import schedule as S
+from compile.kernels.ref import mcm_linear_ref, sdp_ref
+
+CLRS_DIMS = np.array([30, 35, 15, 5, 10, 20, 25], dtype=np.int32)
+
+
+class TestModel:
+    def test_sdp_solve_shapes(self):
+        st = jnp.zeros((64,), jnp.int32).at[:5].set(1)
+        offs = jnp.array([5, 3, 1], jnp.int32)
+        out = model.sdp_solve(st, offs, op="min", n=64, k=3)
+        assert out.shape == (64,) and out.dtype == jnp.int32
+
+    def test_sdp_batch_consistent_with_single(self):
+        rng = np.random.default_rng(3)
+        b, n, k = 4, 48, 3
+        st = rng.integers(0, 50, (b, n)).astype(np.int32)
+        offs = np.stack([np.array([7, 4, 2]), np.array([9, 3, 1]),
+                         np.array([5, 4, 3]), np.array([11, 2, 1])]).astype(np.int32)
+        out = np.asarray(model.sdp_solve_batch(jnp.asarray(st),
+                                               jnp.asarray(offs),
+                                               op="min", n=n, k=k))
+        for i in range(b):
+            np.testing.assert_array_equal(out[i], sdp_ref(st[i], offs[i], "min"))
+
+    def test_mcm_solve_linear_layout(self):
+        out = np.asarray(model.mcm_solve(jnp.asarray(CLRS_DIMS), n=6))
+        np.testing.assert_array_equal(out.astype(np.int64),
+                                      mcm_linear_ref(CLRS_DIMS))
+
+    def test_mcm_batch(self):
+        rng = np.random.default_rng(5)
+        dims = rng.integers(1, 20, (3, 9)).astype(np.int32)
+        out = np.asarray(model.mcm_solve_batch(jnp.asarray(dims), n=8))
+        for i in range(3):
+            np.testing.assert_array_equal(out[i].astype(np.int64),
+                                          mcm_linear_ref(dims[i]))
+
+    def test_mcm_pipeline_solve_batch(self):
+        sched = S.corrected(6)
+        t = sched.to_tensor()
+        dims = np.stack([CLRS_DIMS, CLRS_DIMS[::-1].copy()])
+        out = np.asarray(model.mcm_pipeline_solve_batch(
+            jnp.asarray(dims), jnp.asarray(t), n=6,
+            num_steps=t.shape[0], width=t.shape[1]))
+        for i in range(2):
+            np.testing.assert_array_equal(out[i].astype(np.int64),
+                                          mcm_linear_ref(dims[i]))
+
+
+class TestAot:
+    def test_hlo_text_roundtrippable(self):
+        """Lowered text must be plain HLO (parsable header, ENTRY, no
+        stablehlo leftovers) — the format the xla crate's text parser
+        accepts."""
+        lowered = jax.jit(
+            lambda d: (model.mcm_solve(d, n=8),)
+        ).lower(jax.ShapeDtypeStruct((9,), jnp.int32))
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text and "ENTRY" in text
+        assert "stablehlo" not in text
+
+    def test_specs_unique_names(self):
+        names = [s["name"] for s in aot.build_specs()]
+        assert len(names) == len(set(names))
+
+    def test_lower_all_manifest(self, tmp_path):
+        out = str(tmp_path / "artifacts")
+        manifest = aot.lower_all(out, verbose=False)
+        assert (tmp_path / "artifacts" / "manifest.json").exists()
+        for a in manifest["artifacts"]:
+            p = tmp_path / "artifacts" / a["file"]
+            assert p.exists(), a["name"]
+            assert a["sha256"]
+            assert a["kind"] in ("sdp", "mcm")
+            assert all("shape" in i and "dtype" in i for i in a["inputs"])
+
+    def test_lower_all_incremental_noop(self, tmp_path):
+        out = str(tmp_path / "artifacts")
+        aot.lower_all(out, verbose=False)
+        mtimes = {f: os.path.getmtime(os.path.join(out, f))
+                  for f in os.listdir(out)}
+        aot.lower_all(out, verbose=False)
+        for f, t in mtimes.items():
+            assert os.path.getmtime(os.path.join(out, f)) == t, f
+
+    def test_manifest_covers_pipeline_schedule_sizes(self, tmp_path):
+        """Every mcm_pipeline artifact must be padded to cover BOTH
+        schedules so Rust can choose either at runtime."""
+        for a in aot.build_specs():
+            m = a["meta"]
+            if m.get("algo") == "pipeline" and m["kind"] == "mcm":
+                n = m["n"]
+                assert m["sched_steps"] >= S.faithful(n).num_steps
+                assert m["sched_steps"] >= S.corrected(n).num_steps
+                assert m["sched_width"] == n - 1

@@ -1,0 +1,160 @@
+"""Schedule-compiler tests: linearization math, the paper's worked examples
+(Figs. 5/6), Theorem 1 conflict-freedom, and the staleness-hazard finding."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import schedule as S
+
+
+class TestLinearize:
+    def test_offsets(self):
+        # n = 5 diagonal starts: 0, 5, 9, 12, 14
+        assert [S.diag_offset(5, d) for d in range(5)] == [0, 5, 9, 12, 14]
+
+    def test_num_cells(self):
+        assert S.num_cells(5) == 15
+        assert S.num_cells(1) == 1
+
+    def test_fig5_numbering(self):
+        """Fig. 5: cells are numbered 1..15 along diagonals for n = 5 (we use
+        0-based indices, so paper-number = index + 1)."""
+        n = 5
+        # main diagonal = 1..5
+        assert [S.cell_index(n, r, r) + 1 for r in range(5)] == [1, 2, 3, 4, 5]
+        # second diagonal = 6..9
+        assert [S.cell_index(n, r, r + 1) + 1 for r in range(4)] == [6, 7, 8, 9]
+        # top-right corner is the last cell
+        assert S.cell_index(n, 0, 4) + 1 == 15
+
+    @given(st.integers(min_value=1, max_value=40), st.data())
+    @settings(max_examples=60)
+    def test_roundtrip(self, n, data):
+        idx = data.draw(st.integers(min_value=0, max_value=S.num_cells(n) - 1))
+        r, c = S.cell_coords(n, idx)
+        assert 0 <= r <= c < n
+        assert S.cell_index(n, r, c) == idx
+
+    def test_fig6_st13_terms(self):
+        """ST[13] = f(ST[1],ST[11]) ↓ f(ST[6],ST[8]) ↓ f(ST[10],ST[4]);
+        paper is 1-based, we are 0-based."""
+        n = 5
+        r, c = S.cell_coords(n, 13 - 1)
+        terms = S.cell_terms(n, r, c)
+        got = [(li + 1, ri + 1) for (li, ri, *_rest) in terms]
+        assert got == [(1, 11), (6, 8), (10, 4)]
+
+    def test_fig6_st12_terms(self):
+        """ST[12] = f(ST[3],ST[9]) ↓ f(ST[8],ST[5])."""
+        n = 5
+        r, c = S.cell_coords(n, 12 - 1)
+        got = [(li + 1, ri + 1) for (li, ri, *_rest) in S.cell_terms(n, r, c)]
+        assert got == [(3, 9), (8, 5)]
+
+    def test_weights_reference_dims(self):
+        # term j of (r, c) weights p[r] * p[r+j] * p[c+1]
+        n = 5
+        terms = S.cell_terms(n, 0, 3)
+        assert [(pa, pb, pc) for (_l, _r, pa, pb, pc) in terms] == [
+            (0, 1, 4), (0, 2, 4), (0, 3, 4)]
+
+
+class TestFaithful:
+    def test_paper_step_range(self):
+        """Outer loop of Fig. 8 runs i = n+1 .. n(n+1)/2 + n - 2, i.e.
+        N - 3 + 1 steps in 0-based terms for n = 5 → 13 steps."""
+        assert S.faithful(5).num_steps == 13
+
+    def test_start_is_cell_index(self):
+        sched = S.faithful(6)
+        for x in range(6, S.num_cells(6)):
+            assert sched.start[x] == x - 6
+
+    @pytest.mark.parametrize("n", range(2, 12))
+    def test_theorem1_no_substep_conflicts(self, n):
+        """Theorem 1: within any substep all threads access distinct
+        addresses.  Holds for the published schedule — it is the
+        *freshness* property that fails, not distinctness."""
+        assert S.substep_conflicts(S.faithful(n)) == []
+
+    @pytest.mark.parametrize("n", [2, 3])
+    def test_no_hazard_small_n(self, n):
+        assert S.hazards(S.faithful(n)) == []
+
+    @pytest.mark.parametrize("n", range(4, 12))
+    def test_hazard_for_n_ge_4(self, n):
+        """DESIGN.md §1.1: the published schedule reads non-final operands
+        whenever 2d >= n + 2 — a staleness hazard for every n >= 4."""
+        assert len(S.hazards(S.faithful(n))) > 0
+
+    def test_width_bounded_by_threads(self):
+        for n in (4, 7, 10):
+            assert S.faithful(n).max_width <= n - 1
+
+
+class TestCorrected:
+    @pytest.mark.parametrize("n", range(2, 14))
+    def test_no_hazards(self, n):
+        assert S.hazards(S.corrected(n)) == []
+
+    @pytest.mark.parametrize("n", range(2, 14))
+    def test_no_write_conflicts(self, n):
+        # distinct write targets per step (reads may legitimately collide)
+        for s, _sub, _addr in S.substep_conflicts(S.corrected(n)):
+            assert _sub != 4, f"write conflict at step {s}"
+
+    @pytest.mark.parametrize("n", range(2, 14))
+    def test_width_bounded_by_threads(self, n):
+        assert S.corrected(n).max_width <= max(n - 1, 1)
+
+    def test_steps_quadratic(self):
+        """§IV-C: O(n²) total steps with n-1 threads — the corrected
+        schedule stays within a small constant of n²/2 + 2n."""
+        for n in (8, 16, 32, 64):
+            steps = S.corrected(n).num_steps
+            assert steps <= 1.5 * S.num_cells(n)
+
+    @given(st.integers(min_value=2, max_value=24))
+    @settings(max_examples=23, deadline=None)
+    def test_every_term_scheduled_exactly_once(self, n):
+        sched = S.corrected(n)
+        seen = {}
+        for s, entries in enumerate(sched.steps):
+            for e in entries:
+                key = (e[0], e[7])  # (cell, term)
+                assert key not in seen
+                seen[key] = s
+        want = sum(c - r for x in range(n, S.num_cells(n))
+                   for (r, c) in [S.cell_coords(n, x)])
+        assert len(seen) == want
+
+    def test_terms_of_cell_consecutive_steps(self):
+        """Pipeline shape: term j of a cell runs at start + j - 1."""
+        sched = S.corrected(9)
+        pos = {}
+        for s, entries in enumerate(sched.steps):
+            for e in entries:
+                pos[(e[0], e[7])] = s
+        for (cell, term), s in pos.items():
+            if (cell, term + 1) in pos:
+                assert pos[(cell, term + 1)] == s + 1
+
+
+class TestTensor:
+    def test_padding(self):
+        sched = S.corrected(5)
+        t = sched.to_tensor(num_steps=sched.num_steps + 3, width=10)
+        assert t.shape == (sched.num_steps + 3, 10, 8)
+        assert (t[-3:] == 0).all()
+
+    def test_rejects_too_small(self):
+        sched = S.corrected(5)
+        with pytest.raises(AssertionError):
+            sched.to_tensor(num_steps=1)
+
+    def test_flags(self):
+        t = S.faithful(5).to_tensor()
+        flags = t[:, :, 6]
+        assert set(np.unique(flags)) <= {S.FLAG_INACTIVE, S.FLAG_FIRST,
+                                         S.FLAG_COMBINE}

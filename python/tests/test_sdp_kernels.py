@@ -1,0 +1,117 @@
+"""Pallas S-DP kernels vs the sequential oracle (hypothesis sweeps over
+n, k, offset patterns, dtypes and operators — the core L1 correctness
+signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import sdp_ref, validate_offsets
+from compile.kernels.sdp_pipeline import sdp_pipeline
+from compile.kernels.sdp_prefix import sdp_prefix
+
+KERNELS = {"pipeline": sdp_pipeline, "prefix": sdp_prefix}
+
+
+def offsets_strategy(max_a1=24):
+    """Strictly decreasing positive offset tuples (a_1 > … > a_k > 0)."""
+    return st.sets(st.integers(min_value=1, max_value=max_a1), min_size=1,
+                   max_size=8).map(lambda s: tuple(sorted(s, reverse=True)))
+
+
+def _run(kernel, st_init, offs, op, dtype):
+    n, k = st_init.shape[0], offs.shape[0]
+    out = KERNELS[kernel](jnp.asarray(st_init), jnp.asarray(offs),
+                          op=op, n=n, k=k, dtype=dtype)
+    return np.asarray(out)
+
+
+class TestAgainstOracle:
+    @pytest.mark.parametrize("kernel", ["pipeline", "prefix"])
+    @pytest.mark.parametrize("op", ["min", "max", "add"])
+    @given(offs=offsets_strategy(), data=st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_random_instances_i32(self, kernel, op, offs, data):
+        offs = np.array(offs, dtype=np.int32)
+        n = data.draw(st.integers(min_value=int(offs[0]) + 1, max_value=160))
+        seed = data.draw(st.integers(min_value=0, max_value=2**31))
+        rng = np.random.default_rng(seed)
+        # small values so op="add" cannot overflow i32 even for n=160
+        st_init = rng.integers(0, 3, n).astype(np.int32)
+        ref = sdp_ref(st_init, offs, op)
+        got = _run(kernel, st_init, offs, op, jnp.int32)
+        np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("kernel", ["pipeline", "prefix"])
+    @given(offs=offsets_strategy(), data=st.data())
+    @settings(max_examples=15, deadline=None)
+    def test_random_instances_f32(self, kernel, offs, data):
+        offs = np.array(offs, dtype=np.int32)
+        n = data.draw(st.integers(min_value=int(offs[0]) + 1, max_value=128))
+        seed = data.draw(st.integers(min_value=0, max_value=2**31))
+        rng = np.random.default_rng(seed)
+        st_init = rng.uniform(0.0, 100.0, n).astype(np.float32)
+        ref = sdp_ref(st_init, offs, "min")
+        got = _run(kernel, st_init, offs, "min", jnp.float32)
+        np.testing.assert_array_equal(got, ref)  # min is exact in f32
+
+
+class TestFibonacci:
+    def test_fibonacci_is_an_sdp_instance(self):
+        """Paper §II-A: Fibonacci = S-DP with k=2, a=(2,1), ⊗=+."""
+        n = 32
+        st_init = np.zeros(n, dtype=np.int32)
+        st_init[:2] = 1
+        offs = np.array([2, 1], dtype=np.int32)
+        got = _run("pipeline", st_init, offs, "add", jnp.int32)
+        fib = [1, 1]
+        while len(fib) < n:
+            fib.append(fib[-1] + fib[-2])
+        np.testing.assert_array_equal(got, np.array(fib, dtype=np.int32))
+
+
+class TestWorstCase:
+    @pytest.mark.parametrize("kernel", ["pipeline", "prefix"])
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    def test_consecutive_offsets(self, kernel, k):
+        """Fig. 4 worst case: a = (k, k-1, …, 1).  Slow on a GPU, but still
+        *correct* — every lane reads the same finalized element."""
+        n = 96
+        offs = np.arange(k, 0, -1).astype(np.int32)
+        rng = np.random.default_rng(7)
+        st_init = rng.integers(0, 1000, n).astype(np.int32)
+        ref = sdp_ref(st_init, offs, "min")
+        got = _run(kernel, st_init, offs, "min", jnp.int32)
+        np.testing.assert_array_equal(got, ref)
+
+    def test_single_offset(self):
+        """k = 1 degenerates to a strided copy."""
+        n, offs = 20, np.array([3], dtype=np.int32)
+        st_init = np.arange(n).astype(np.int32)
+        ref = sdp_ref(st_init, offs, "min")
+        got = _run("pipeline", st_init, offs, "min", jnp.int32)
+        np.testing.assert_array_equal(got, ref)
+
+    def test_a1_equals_n_minus_1(self):
+        """Only one element is ever computed."""
+        n = 10
+        offs = np.array([n - 1], dtype=np.int32)
+        st_init = np.arange(1, n + 1).astype(np.int32)
+        got = _run("pipeline", st_init, offs, "min", jnp.int32)
+        ref = sdp_ref(st_init, offs, "min")
+        np.testing.assert_array_equal(got, ref)
+
+
+class TestValidation:
+    def test_rejects_increasing(self):
+        with pytest.raises(ValueError):
+            validate_offsets(np.array([1, 2]))
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            validate_offsets(np.array([2, 0]))
+
+    def test_rejects_empty(self):
+        with pytest.raises(ValueError):
+            validate_offsets(np.array([], dtype=np.int32))

@@ -1,0 +1,91 @@
+//! E7 — the §IV-C claim: the MCM pipeline takes O(n²) steps with n−1
+//! threads (vs the O(n³) sequential DP), and the corrected schedule keeps
+//! that bound.  Also wall-clocks sequential vs diagonal-threaded vs
+//! pipeline-threaded executors.
+//!
+//! Run: `cargo bench --bench mcm_scaling`
+
+use pipedp::bench::Suite;
+use pipedp::core::problem::McmProblem;
+use pipedp::core::schedule::{McmSchedule, McmVariant};
+use pipedp::simulator::{self, trace, GpuModel};
+use pipedp::util::rng::Rng;
+use pipedp::util::table::Table;
+
+fn main() {
+    // --- step-count scaling (the complexity claim itself) -----------------
+    println!("\n== steps vs n² (schedule compiler) ==");
+    let mut t = Table::new(vec![
+        "n",
+        "seq ops (Σd(n−d))",
+        "faithful steps",
+        "corrected steps",
+        "corrected/n²",
+        "width",
+    ]);
+    for n in [8usize, 16, 32, 64, 128, 192] {
+        let f = McmSchedule::compile(n, McmVariant::PaperFaithful);
+        let c = McmSchedule::compile(n, McmVariant::Corrected);
+        let work: usize = (1..n).map(|d| d * (n - d)).sum();
+        t.row(vec![
+            n.to_string(),
+            work.to_string(),
+            f.num_steps().to_string(),
+            c.num_steps().to_string(),
+            format!("{:.3}", c.num_steps() as f64 / (n * n) as f64),
+            c.max_width().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- modeled GPU cycles: sequential vs diagonal vs pipeline ------------
+    println!("\n== modeled GPU ms ==");
+    let model = GpuModel::default();
+    let mut t = Table::new(vec!["n", "SEQ (host)", "DIAGONAL", "PIPELINE (corrected)"]);
+    for n in [64u64, 128, 256, 512] {
+        let seqms = model.cpu_ms(
+            simulator::exec::simulate_cpu(&model, &trace::mcm_sequential_trace(n)).total,
+        );
+        let diag = model.gpu_ms(
+            simulator::simulate(&model, &trace::mcm_diagonal_trace(n)).total,
+        );
+        let sched = McmSchedule::compile(n as usize, McmVariant::Corrected);
+        let pipe = model.gpu_ms(
+            simulator::simulate(&model, &trace::mcm_pipeline_trace(&sched)).total,
+        );
+        t.row(vec![
+            n.to_string(),
+            format!("{seqms:.3}"),
+            format!("{diag:.3}"),
+            format!("{pipe:.3}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- real CPU wall-clock ------------------------------------------------
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let mut rng = Rng::seeded(5);
+    let mut suite = Suite::new(
+        &format!("real CPU wall-clock ({threads} threads)"),
+        vec!["SEQ O(n³)", "DIAGONAL threaded", "PIPELINE threaded"],
+    );
+    for n in [32usize, 64, 128, 256] {
+        let p = McmProblem::random(&mut rng, n, 50);
+        let sched = McmSchedule::compile(n, McmVariant::Corrected);
+        suite.case(
+            &format!("n={n}"),
+            vec![
+                Box::new(|| pipedp::mcm::seq::cost(&p) as u64),
+                Box::new(|| {
+                    *pipedp::mcm::diagonal::solve_threaded(&p, threads).last().unwrap() as u64
+                }),
+                Box::new(|| {
+                    *pipedp::mcm::pipeline::execute_threaded(&p, &sched, threads)
+                        .last()
+                        .unwrap() as u64
+                }),
+            ],
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,59 @@
+//! E8 — §II-B: parallel prefix is O(n log k) but not work-optimal (idle
+//! tournament threads + a synchronized round per level); the pipeline is
+//! O(n + k) with every thread busy.  Modeled cycles show the asymptotic
+//! gap; CPU wall-clock shows the constant-factor gap of the step-
+//! synchronous executors.
+//!
+//! Run: `cargo bench --bench prefix_vs_pipeline`
+
+use pipedp::bench::Suite;
+use pipedp::core::problem::SdpProblem;
+use pipedp::core::semigroup::Op;
+use pipedp::simulator::{self, trace, GpuModel};
+use pipedp::util::rng::Rng;
+use pipedp::util::table::Table;
+
+fn main() {
+    let model = GpuModel::default();
+    println!("\n== modeled GPU ms: NAIVE vs PREFIX vs PIPELINE ==");
+    let mut t = Table::new(vec!["n", "k", "NAIVE", "PREFIX", "PIPELINE", "prefix/pipe"]);
+    let mut rng = Rng::seeded(11);
+    for (n, k) in [(1u64 << 14, 1u64 << 10), (1 << 16, 1 << 12), (1 << 18, 1 << 14)] {
+        let naive = model.gpu_ms(simulator::simulate(&model, &trace::naive_trace(n, k)).total);
+        let prefix = model.gpu_ms(simulator::simulate(&model, &trace::prefix_trace(n, k)).total);
+        let offsets = rng.offsets(k as usize, 2 * k as i64);
+        let a1 = offsets[0] as usize;
+        let mut p = SdpProblem::new(a1 + 1, offsets, Op::Min, vec![0; a1]).unwrap();
+        p.n = n as usize;
+        let pipe = model.gpu_ms(simulator::simulate(&model, &trace::pipeline_trace(&p)).total);
+        t.row(vec![
+            format!("2^{}", n.ilog2()),
+            format!("2^{}", k.ilog2()),
+            format!("{naive:.0}"),
+            format!("{prefix:.0}"),
+            format!("{pipe:.0}"),
+            format!("{:.1}×", prefix / pipe),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(prefix pays ⌈log₂k⌉ synchronized rounds per element — not work-optimal)");
+
+    // real CPU wall-clock of the step-synchronous executors
+    let mut suite = Suite::new(
+        "real CPU wall-clock (step-synchronous executors)",
+        vec!["SEQ", "PREFIX", "PIPELINE"],
+    );
+    let mut rng = Rng::seeded(12);
+    for (n, k) in [(4096usize, 64usize), (16384, 256), (65536, 512)] {
+        let p = SdpProblem::random(&mut rng, n..n + 1, k..k + 1, Op::Min);
+        suite.case(
+            &format!("n={n} k={k}"),
+            vec![
+                Box::new(|| pipedp::sdp::seq::solve(&p).last().copied().unwrap() as u64),
+                Box::new(|| pipedp::sdp::prefix::solve(&p).last().copied().unwrap() as u64),
+                Box::new(|| pipedp::sdp::pipeline::solve(&p).last().copied().unwrap() as u64),
+            ],
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,46 @@
+//! E1s — Table I at the paper's *unscaled* bands, priced by the
+//! calibrated SIMT cost model (the GTX TITAN Black substitution).
+//!
+//! Run: `cargo bench --bench simulator_table1`
+
+use pipedp::simulator::{calibrate, GpuModel};
+use pipedp::util::table::Table;
+
+fn main() {
+    let model = GpuModel::default();
+    let samples = if std::env::var("PIPEDP_BENCH_FAST").as_deref() == Ok("1") {
+        3
+    } else {
+        25
+    };
+    let mut t = Table::new(vec![
+        "band",
+        "SEQ paper",
+        "SEQ model",
+        "NAIVE paper",
+        "NAIVE model",
+        "PIPE paper",
+        "PIPE model",
+        "naive/pipe paper",
+        "naive/pipe model",
+    ]);
+    for (name, paper, modeled) in calibrate::shape_report(&model, samples) {
+        t.row(vec![
+            name,
+            format!("{:.0}", paper[0]),
+            format!("{:.0}", modeled[0]),
+            format!("{:.0}", paper[1]),
+            format!("{:.0}", modeled[1]),
+            format!("{:.0}", paper[2]),
+            format!("{:.0}", modeled[2]),
+            format!("{:.2}", paper[1] / paper[2]),
+            format!("{:.2}", modeled[1] / modeled[2]),
+        ]);
+    }
+    println!("\n== Table I, unscaled bands, cost model vs paper (ms, {samples} draws/band) ==");
+    println!("{}", t.render());
+    println!(
+        "\nshape checks: parallel ≫ sequential in every band; naive/pipe ratio grows\n\
+         with size and crosses 1 at the largest band (the paper's crossover)."
+    );
+}

@@ -1,0 +1,148 @@
+//! E9 — runtime + coordinator performance: PJRT dispatch cost vs native
+//! execution (justifying the router's size cutoffs), batched vs unbatched
+//! XLA dispatch (justifying the dynamic batcher), and a batching-policy
+//! sweep over the end-to-end server.
+//!
+//! Run: `make artifacts && cargo bench --bench xla_engine`
+
+use std::time::{Duration, Instant};
+
+use pipedp::bench::Suite;
+use pipedp::coordinator::batcher::Policy;
+use pipedp::coordinator::request::{Backend, Request, RequestBody};
+use pipedp::coordinator::server::{Client, Config, Server};
+use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::schedule::McmVariant;
+use pipedp::core::semigroup::Op;
+use pipedp::runtime::engine::Engine;
+use pipedp::util::rng::Rng;
+use pipedp::util::table::Table;
+
+fn main() {
+    if !pipedp::runtime::artifacts_dir().join("manifest.json").exists() {
+        println!("xla_engine bench skipped: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load().expect("engine");
+    let mut rng = Rng::seeded(21);
+
+    // --- dispatch cost: native vs XLA per instance size --------------------
+    let mut suite = Suite::new(
+        "single-request latency: native executor vs PJRT dispatch",
+        vec!["native", "xla"],
+    );
+    for n in [8usize, 16, 32, 64] {
+        let p = McmProblem::random(&mut rng, n, 25);
+        let engine = &engine;
+        suite.case(
+            &format!("mcm n={n}"),
+            vec![
+                Box::new(|| *pipedp::mcm::seq::linear_table(&p).last().unwrap() as u64),
+                Box::new(|| *engine.solve_mcm(&p).unwrap().last().unwrap() as u64),
+            ],
+        );
+    }
+    for (n, k) in [(256usize, 8usize), (1024, 16)] {
+        let offsets = rng.offsets(k, 2 * k as i64);
+        let a1 = offsets[0] as usize;
+        let init: Vec<i64> = (0..a1).map(|_| rng.range(0..1000)).collect();
+        let p = SdpProblem::new(n, offsets, Op::Min, init).unwrap();
+        let engine = &engine;
+        suite.case(
+            &format!("sdp n={n} k={k}"),
+            vec![
+                Box::new(|| *pipedp::sdp::pipeline::solve(&p).last().unwrap() as u64),
+                Box::new(|| *engine.solve_sdp(&p).unwrap().last().unwrap() as u64),
+            ],
+        );
+    }
+    suite.finish();
+
+    // --- batched vs unbatched dispatch -------------------------------------
+    let mut suite = Suite::new(
+        "8 same-bucket MCM requests: one batched dispatch vs 8 singles",
+        vec!["8 × single", "1 × batch-8"],
+    );
+    let ps: Vec<McmProblem> = (0..8).map(|_| McmProblem::random(&mut rng, 16, 25)).collect();
+    let refs: Vec<&McmProblem> = ps.iter().collect();
+    {
+        let engine = &engine;
+        let ps = &ps;
+        let refs = &refs;
+        suite.case(
+            "mcm n=16",
+            vec![
+                Box::new(move || {
+                    ps.iter()
+                        .map(|p| *engine.solve_mcm(p).unwrap().last().unwrap() as u64)
+                        .sum()
+                }),
+                Box::new(move || {
+                    engine
+                        .solve_mcm_batch(refs)
+                        .unwrap()
+                        .iter()
+                        .map(|t| *t.last().unwrap() as u64)
+                        .sum()
+                }),
+            ],
+        );
+    }
+    suite.finish();
+
+    // --- end-to-end server: batching-policy sweep ---------------------------
+    println!("\n== end-to-end throughput vs batching window (200 MCM reqs, 2 clients) ==");
+    let mut t = Table::new(vec!["policy", "req/s", "p99 latency", "mean batch"]);
+    for (label, max_batch, wait_ms) in [
+        ("no batching (1, 0ms)", 1usize, 0u64),
+        ("batch 4, 1ms", 4, 1),
+        ("batch 8, 2ms", 8, 2),
+        ("batch 8, 5ms", 8, 5),
+    ] {
+        let server = Server::start(Config {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            policy: Policy {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            allow_engineless: true,
+            warm: true,
+        })
+        .expect("server");
+        let addr = server.local_addr.to_string();
+        let started = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..2 {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::seeded(77 + c);
+                    let mut client = Client::connect(&addr).unwrap();
+                    for _ in 0..10 {
+                        let reqs: Vec<Request> = (0..10)
+                            .map(|_| Request {
+                                id: 0,
+                                body: RequestBody::Mcm {
+                                    problem: McmProblem::random(&mut rng, 16, 25),
+                                    variant: McmVariant::Corrected,
+                                },
+                                backend: Backend::Auto,
+                                full: false,
+                            })
+                            .collect();
+                        let resps = client.call_pipelined(reqs).unwrap();
+                        assert!(resps.iter().all(|r| r.ok));
+                    }
+                });
+            }
+        });
+        let elapsed = started.elapsed();
+        t.row(vec![
+            label.into(),
+            format!("{:.0}", 200.0 / elapsed.as_secs_f64()),
+            pipedp::util::table::fmt_duration(server.metrics.latency.percentile(0.99)),
+            format!("{:.2}", server.metrics.mean_batch_size()),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,228 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Mirrors the paper's protocol — warmup, then a fixed number of timed
+//! repetitions, reporting the mean (the paper's Table I is a 100-run mean)
+//! plus median/min/stddev so noise is visible.  Used by every target in
+//! `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+use crate::util::table::{fmt_duration, Table};
+
+/// Statistics over a set of timed runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+    pub runs: usize,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let runs = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / runs as u32;
+        let median = samples[runs / 2];
+        let mean_ns = mean.as_nanos() as f64;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_nanos() as f64 - mean_ns;
+                d * d
+            })
+            .sum::<f64>()
+            / runs as f64;
+        Stats {
+            mean,
+            median,
+            min: samples[0],
+            max: samples[runs - 1],
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            runs,
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub warmup: usize,
+    pub runs: usize,
+    /// Cap on total time per benchmark; the run count is reduced (to at
+    /// least 3) when a single run exceeds `budget / runs`.
+    pub budget: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            warmup: 2,
+            runs: 10,
+            budget: Duration::from_secs(20),
+        }
+    }
+}
+
+impl Config {
+    /// Honour `PIPEDP_BENCH_RUNS` / `PIPEDP_BENCH_FAST=1` so CI can shrink
+    /// benchmarks without editing targets.
+    pub fn from_env() -> Config {
+        let mut c = Config::default();
+        if std::env::var("PIPEDP_BENCH_FAST").as_deref() == Ok("1") {
+            c.warmup = 1;
+            c.runs = 3;
+            c.budget = Duration::from_secs(5);
+        }
+        if let Ok(r) = std::env::var("PIPEDP_BENCH_RUNS") {
+            if let Ok(r) = r.parse() {
+                c.runs = r;
+            }
+        }
+        c
+    }
+}
+
+/// Time `f` under the configuration; the closure must return something so
+/// the work cannot be optimized away (a `u64` checksum by convention).
+pub fn measure<F: FnMut() -> u64>(cfg: &Config, mut f: F) -> (Stats, u64) {
+    let mut checksum = 0u64;
+    for _ in 0..cfg.warmup {
+        checksum = checksum.wrapping_add(f());
+    }
+    // probe run to apply the budget
+    let probe_start = Instant::now();
+    checksum = checksum.wrapping_add(f());
+    let probe = probe_start.elapsed();
+    let mut samples = vec![probe];
+    let remaining_runs = if probe.as_nanos() == 0 {
+        cfg.runs - 1
+    } else {
+        let fit = (cfg.budget.as_nanos() / probe.as_nanos().max(1)) as usize;
+        (cfg.runs - 1).min(fit.max(2))
+    };
+    for _ in 0..remaining_runs {
+        let t = Instant::now();
+        checksum = checksum.wrapping_add(f());
+        samples.push(t.elapsed());
+    }
+    (Stats::from_samples(samples), checksum)
+}
+
+/// A named suite of benchmark rows rendered as a table, paper-style.
+pub struct Suite {
+    title: String,
+    columns: Vec<&'static str>,
+    table: Table,
+    cfg: Config,
+}
+
+impl Suite {
+    pub fn new(title: &str, columns: Vec<&'static str>) -> Suite {
+        let mut header = vec!["case"];
+        header.extend(columns.iter().copied());
+        Suite {
+            title: title.to_string(),
+            columns,
+            table: Table::new(header),
+            cfg: Config::from_env(),
+        }
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Benchmark one case across the suite's columns; `fns` must align with
+    /// the column labels.  Returns the per-column stats.
+    pub fn case(&mut self, label: &str, fns: Vec<Box<dyn FnMut() -> u64 + '_>>) -> Vec<Stats> {
+        assert_eq!(fns.len(), self.columns.len());
+        let mut cells = vec![label.to_string()];
+        let mut all = Vec::new();
+        for mut f in fns {
+            let (stats, _) = measure(&self.cfg, &mut *f);
+            cells.push(fmt_duration(stats.mean));
+            all.push(stats);
+        }
+        self.table.row(cells);
+        all
+    }
+
+    /// Add a precomputed row (e.g. cycle counts rather than wall-clock).
+    pub fn raw_row(&mut self, cells: Vec<String>) {
+        let mut row = cells;
+        row.resize(self.columns.len() + 1, String::new());
+        self.table.row(row);
+    }
+
+    pub fn finish(self) {
+        println!("\n== {} ==", self.title);
+        println!("{}", self.table.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+        ]);
+        assert_eq!(s.mean, Duration::from_millis(2));
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert_eq!(s.runs, 3);
+    }
+
+    #[test]
+    fn measure_runs_requested_times() {
+        let cfg = Config {
+            warmup: 1,
+            runs: 5,
+            budget: Duration::from_secs(60),
+        };
+        let mut count = 0u64;
+        let (stats, checksum) = measure(&cfg, || {
+            count += 1;
+            count
+        });
+        assert_eq!(stats.runs, 5);
+        assert_eq!(count, 6); // 1 warmup + 5 timed
+        assert!(checksum > 0);
+    }
+
+    #[test]
+    fn budget_caps_runs() {
+        let cfg = Config {
+            warmup: 0,
+            runs: 1000,
+            budget: Duration::from_millis(20),
+        };
+        let (stats, _) = measure(&cfg, || {
+            std::thread::sleep(Duration::from_millis(5));
+            1
+        });
+        assert!(stats.runs <= 8, "budget should cap runs, got {}", stats.runs);
+        assert!(stats.runs >= 3);
+    }
+
+    #[test]
+    fn suite_renders() {
+        let mut s = Suite::new("demo", vec!["a", "b"]);
+        s.case("case1", vec![Box::new(|| 1), Box::new(|| 2)]);
+        assert!(!s.table.is_empty());
+    }
+}

@@ -1,0 +1,319 @@
+//! Dynamic batching: hold compatible requests for up to `max_wait` (or
+//! until `max_batch` accumulate) so one PJRT dispatch serves many — the
+//! same policy a serving router applies to model invocations.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::router::{group_key, GroupKey, Route, Router};
+
+/// A request waiting for dispatch, with its reply channel.
+pub struct Pending {
+    pub request: Request,
+    pub route: Route,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The batcher thread: owns the pending map, flushes groups to the pool.
+pub struct Batcher {
+    tx: mpsc::Sender<Pending>,
+    router: Arc<Router>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(
+        router: Arc<Router>,
+        pool: Arc<WorkerPool>,
+        metrics: Arc<Metrics>,
+        policy: Policy,
+    ) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let handle = {
+            let router = router.clone();
+            std::thread::Builder::new()
+                .name("pipedp-batcher".into())
+                .spawn(move || run(rx, router, pool, metrics, policy))
+                .expect("spawn batcher")
+        };
+        Batcher {
+            tx,
+            router,
+            handle: Some(handle),
+        }
+    }
+
+    /// Hand a pre-routed request to the batcher.
+    pub fn submit(&self, pending: Pending) {
+        // a send failure means the batcher thread exited: the reply channel
+        // is dropped and the connection sees a disconnect
+        let _ = self.tx.send(pending);
+    }
+
+    /// Route + enqueue; routing failures answer immediately.
+    pub fn submit_request(
+        &self,
+        request: Request,
+        reply: mpsc::Sender<crate::coordinator::request::Response>,
+    ) {
+        match self.router.route(&request) {
+            Ok(route) => self.submit(Pending {
+                request,
+                route,
+                enqueued: Instant::now(),
+                reply,
+            }),
+            Err(e) => {
+                let _ = reply.send(crate::coordinator::request::Response::err(
+                    request.id,
+                    e.to_string(),
+                ));
+            }
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // closing tx ends the loop after a final flush
+        let (dead_tx, _) = mpsc::channel();
+        self.tx = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run(
+    rx: mpsc::Receiver<Pending>,
+    router: Arc<Router>,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<Metrics>,
+    policy: Policy,
+) {
+    let mut groups: HashMap<GroupKey, Vec<Pending>> = HashMap::new();
+    loop {
+        // wait bounded by the oldest pending deadline
+        let timeout = groups
+            .values()
+            .flat_map(|g| g.iter().map(|p| p.enqueued))
+            .min()
+            .map(|oldest| {
+                policy
+                    .max_wait
+                    .saturating_sub(oldest.elapsed())
+                    .max(Duration::from_micros(50))
+            })
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(p) => {
+                let key = group_key(&p.request, p.route);
+                // Single keys can never grow — dispatch immediately rather
+                // than paying the batching window for nothing.
+                if matches!(key, GroupKey::Single(_)) {
+                    flush(vec![p], &router, &pool, &metrics);
+                    continue;
+                }
+                let group = groups.entry(key.clone()).or_default();
+                group.push(p);
+                if group.len() >= policy.max_batch {
+                    let batch = groups.remove(&key).unwrap();
+                    flush(batch, &router, &pool, &metrics);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let expired: Vec<GroupKey> = groups
+                    .iter()
+                    .filter(|(_, g)| {
+                        g.iter().any(|p| p.enqueued.elapsed() >= policy.max_wait)
+                    })
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                for key in expired {
+                    let batch = groups.remove(&key).unwrap();
+                    flush(batch, &router, &pool, &metrics);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for (_, batch) in groups.drain() {
+                    flush(batch, &router, &pool, &metrics);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metrics: &Arc<Metrics>) {
+    if batch.is_empty() {
+        return;
+    }
+    let router = router.clone();
+    let metrics = metrics.clone();
+    metrics.record_batch(batch.len());
+    pool.submit(move || {
+        for p in &batch {
+            metrics.queue_wait.record(p.enqueued.elapsed());
+        }
+        let route = batch[0].route;
+        let reqs: Vec<Request> = batch.iter().map(|p| p.request.clone()).collect();
+        let started = Instant::now();
+        let responses = router.execute_group(&reqs, route);
+        let elapsed = started.elapsed();
+        for (p, resp) in batch.iter().zip(responses) {
+            metrics.latency.record(p.enqueued.elapsed());
+            if !resp.ok {
+                metrics
+                    .errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            let _ = p.reply.send(resp);
+        }
+        let _ = elapsed;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Backend, RequestBody};
+    use crate::core::problem::SdpProblem;
+
+    fn native_request(id: i64) -> Request {
+        Request {
+            id,
+            body: RequestBody::Sdp(SdpProblem::fibonacci(16)),
+            backend: Backend::Native,
+            full: false,
+        }
+    }
+
+    fn harness() -> (Batcher, Arc<Metrics>) {
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(Metrics::default());
+        let b = Batcher::start(router, pool, metrics.clone(), Policy::default());
+        (b, metrics)
+    }
+
+    #[test]
+    fn single_request_flushes_after_deadline() {
+        let (batcher, _m) = harness();
+        let (tx, rx) = mpsc::channel();
+        batcher.submit(Pending {
+            request: native_request(1),
+            route: Route::Native,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(resp.ok);
+        assert_eq!(resp.value, 987);
+    }
+
+    #[test]
+    fn many_requests_all_answered() {
+        let (batcher, metrics) = harness();
+        let mut receivers = Vec::new();
+        for i in 0..50 {
+            let (tx, rx) = mpsc::channel();
+            batcher.submit(Pending {
+                request: native_request(i),
+                route: Route::Native,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            receivers.push((i, rx));
+        }
+        for (i, rx) in receivers {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, i);
+            assert!(resp.ok);
+        }
+        assert_eq!(metrics.latency.count(), 50);
+    }
+
+    #[test]
+    fn full_group_flushes_by_size_not_deadline() {
+        // 4 same-bucket Xla-routed requests with an effectively-infinite
+        // deadline must still flush once max_batch is reached.  With no
+        // engine the execution falls back per-request and errors — what
+        // matters here is that the flush happens promptly at all.
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::start(
+            router,
+            pool,
+            metrics.clone(),
+            Policy {
+                max_batch: 4,
+                max_wait: Duration::from_secs(60), // only size can trigger
+            },
+        );
+        let mut receivers = Vec::new();
+        for i in 0..4 {
+            let (tx, rx) = mpsc::channel();
+            batcher.submit(Pending {
+                request: native_request(i), // same (n, k, op) → same key
+                route: Route::Xla,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            receivers.push(rx);
+        }
+        for rx in receivers {
+            let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert!(!resp.ok); // engine-less Xla execution is a typed error
+        }
+        assert_eq!(metrics.mean_batch_size(), 4.0);
+    }
+
+    #[test]
+    fn native_singles_bypass_batching_window() {
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::start(
+            router,
+            pool,
+            metrics,
+            Policy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(60),
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        batcher.submit(Pending {
+            request: native_request(1),
+            route: Route::Native,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        // answered well before the 60 s window
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(resp.ok);
+    }
+}

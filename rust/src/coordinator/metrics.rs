@@ -1,0 +1,169 @@
+//! Service metrics: lock-free counters and a log-bucketed latency
+//! histogram with percentile queries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Power-of-two bucketed latency histogram, 1 µs … ~17 s.
+pub struct Histogram {
+    /// bucket b counts samples in [2^b, 2^(b+1)) microseconds
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+const NBUCKETS: usize = 25;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(NBUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_micros.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate percentile (upper bucket bound), q in [0, 1].
+    pub fn percentile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            acc += bucket.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(1 << (b + 1));
+            }
+        }
+        Duration::from_micros(1 << NBUCKETS)
+    }
+}
+
+/// Coordinator-wide metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Mean requests per dispatched batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::int(self.requests.load(Ordering::Relaxed) as i64)),
+            ("errors", Json::int(self.errors.load(Ordering::Relaxed) as i64)),
+            ("batches", Json::int(self.batches.load(Ordering::Relaxed) as i64)),
+            ("mean_batch_size", Json::num(self.mean_batch_size())),
+            ("latency_mean_us", Json::int(self.latency.mean().as_micros() as i64)),
+            ("latency_p50_us", Json::int(self.latency.percentile(0.5).as_micros() as i64)),
+            ("latency_p99_us", Json::int(self.latency.percentile(0.99).as_micros() as i64)),
+            ("queue_p99_us", Json::int(self.queue_wait.percentile(0.99).as_micros() as i64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.percentile(0.5);
+        let p99 = h.percentile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= Duration::from_micros(256)); // ~512 bucket bound
+        assert!(p99 <= Duration::from_micros(2048));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.percentile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+        let snap = m.snapshot();
+        assert_eq!(snap.i64_field("batches").unwrap(), 2);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(Metrics::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        m.latency.record(Duration::from_micros(i + 1));
+                        m.requests.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.latency.count(), 4000);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 4000);
+    }
+}

@@ -1,0 +1,25 @@
+//! The serving coordinator: a DP-solving service in the shape of a
+//! vLLM-style router (DESIGN.md §2).
+//!
+//! ```text
+//! TCP (line-delimited JSON)            coordinator
+//!   conn threads ──► request queue ──► batcher ──► worker pool ──► backend
+//!                                                     │              ├ native rust solvers
+//!        responses ◄── per-request channels ◄─────────┘              ├ PJRT engine (batched)
+//!                                                                    └ GPU cost simulator
+//! ```
+//!
+//! * [`request`] — wire protocol types + JSON codec.
+//! * [`router`] — backend selection (native / XLA bucket / simulator).
+//! * [`batcher`] — dynamic batching: group compatible requests within a
+//!   deadline window so one PJRT dispatch serves many requests.
+//! * [`pool`] — the worker thread pool.
+//! * [`metrics`] — latency histograms and throughput counters.
+//! * [`server`] — the TCP server and a blocking client.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pool;
+pub mod request;
+pub mod router;
+pub mod server;

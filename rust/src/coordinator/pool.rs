@@ -1,0 +1,158 @@
+//! A bounded worker thread pool (no tokio offline; condvar-based queue).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<(VecDeque<Job>, bool)>, // (jobs, shutting_down)
+    available: Condvar,
+}
+
+/// Fixed-size worker pool; jobs are FIFO.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("pipedp-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let mut guard = shared.queue.lock().unwrap();
+                            loop {
+                                if let Some(job) = guard.0.pop_front() {
+                                    break job;
+                                }
+                                if guard.1 {
+                                    return;
+                                }
+                                guard = shared.available.wait(guard).unwrap();
+                            }
+                        };
+                        job();
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut guard = self.shared.queue.lock().unwrap();
+        if guard.1 {
+            return; // shutting down: drop silently (server is exiting)
+        }
+        guard.0.push_back(Box::new(job));
+        drop(guard);
+        self.shared.available.notify_one();
+    }
+
+    /// Jobs currently queued (not including running ones).
+    pub fn backlog(&self) -> usize {
+        self.shared.queue.lock().unwrap().0.len()
+    }
+
+    /// Finish queued jobs, then stop the workers.
+    pub fn shutdown(mut self) {
+        {
+            let mut guard = self.shared.queue.lock().unwrap();
+            guard.1 = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut guard = self.shared.queue.lock().unwrap();
+            guard.1 = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = WorkerPool::new(4);
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let b = barrier.clone();
+            let d = done.clone();
+            pool.submit(move || {
+                // deadlocks unless all 4 run at once
+                b.wait();
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..10 {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // implicit drop
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn single_worker_is_fifo() {
+        let pool = WorkerPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..20 {
+            let o = order.clone();
+            pool.submit(move || o.lock().unwrap().push(i));
+        }
+        pool.shutdown();
+        let got = order.lock().unwrap().clone();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,288 @@
+//! Wire protocol: line-delimited JSON requests/responses.
+
+use crate::core::problem::{McmProblem, SdpProblem};
+use crate::core::schedule::McmVariant;
+use crate::core::semigroup::Op;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Backend selection on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Router decides (native for tiny instances, XLA when a bucket fits).
+    Auto,
+    /// Native Rust pipeline executors.
+    Native,
+    /// AOT-compiled Pallas kernels via PJRT.
+    Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            other => Err(Error::Json(format!("unknown backend '{other}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+        }
+    }
+}
+
+/// A parsed request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: i64,
+    pub body: RequestBody,
+    pub backend: Backend,
+    /// Return the full solved table (default: scalar summary only).
+    pub full: bool,
+}
+
+#[derive(Debug, Clone)]
+pub enum RequestBody {
+    Sdp(SdpProblem),
+    Mcm {
+        problem: McmProblem,
+        variant: McmVariant,
+    },
+    /// Server status probe.
+    Stats,
+}
+
+impl Request {
+    /// Decode one JSON line.
+    pub fn decode(line: &str) -> Result<Request> {
+        let v = Json::parse(line)?;
+        let id = v.i64_field("id")?;
+        let backend = match v.get("backend") {
+            Some(b) => Backend::parse(b.as_str().unwrap_or("?"))?,
+            None => Backend::Auto,
+        };
+        let full = v.get("full").and_then(|b| b.as_bool()).unwrap_or(false);
+        let body = match v.str_field("kind")? {
+            "sdp" => {
+                let n = v.usize_field("n")?;
+                let offsets = v.i64_vec_field("offsets")?;
+                let op = Op::parse(v.str_field("op")?)?;
+                let init = v.i64_vec_field("init")?;
+                RequestBody::Sdp(SdpProblem::new(n, offsets, op, init)?)
+            }
+            "mcm" => {
+                let dims = v.i64_vec_field("dims")?;
+                let variant = match v.get("variant") {
+                    Some(s) => McmVariant::parse(s.as_str().unwrap_or("?"))?,
+                    None => McmVariant::Corrected,
+                };
+                RequestBody::Mcm {
+                    problem: McmProblem::new(dims)?,
+                    variant,
+                }
+            }
+            "stats" => RequestBody::Stats,
+            other => return Err(Error::Json(format!("unknown kind '{other}'"))),
+        };
+        Ok(Request {
+            id,
+            body,
+            backend,
+            full,
+        })
+    }
+
+    /// Encode (client side).
+    pub fn encode(&self) -> String {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("id", Json::int(self.id)),
+            ("backend", Json::str(self.backend.name())),
+        ];
+        if self.full {
+            fields.push(("full", Json::Bool(true)));
+        }
+        match &self.body {
+            RequestBody::Sdp(p) => {
+                fields.push(("kind", Json::str("sdp")));
+                fields.push(("n", Json::int(p.n as i64)));
+                fields.push(("offsets", Json::arr(p.offsets.iter().map(|&v| Json::int(v)))));
+                fields.push(("op", Json::str(p.op.name())));
+                fields.push(("init", Json::arr(p.init.iter().map(|&v| Json::int(v)))));
+            }
+            RequestBody::Mcm { problem, variant } => {
+                fields.push(("kind", Json::str("mcm")));
+                fields.push(("dims", Json::arr(problem.dims.iter().map(|&v| Json::int(v)))));
+                fields.push(("variant", Json::str(variant.name())));
+            }
+            RequestBody::Stats => fields.push(("kind", Json::str("stats"))),
+        }
+        Json::obj(fields).to_string()
+    }
+}
+
+/// A response line.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: i64,
+    pub ok: bool,
+    /// Scalar summary: MCM optimal cost / last S-DP element.
+    pub value: i64,
+    /// Full table when requested.
+    pub table: Option<Vec<i64>>,
+    /// Which backend actually served it, e.g. "xla:mcm_diagonal_i32_n16".
+    pub served_by: String,
+    pub error: Option<String>,
+    /// Raw stats payload for `kind: stats`.
+    pub stats: Option<Json>,
+}
+
+impl Response {
+    pub fn ok(id: i64, value: i64, served_by: String, table: Option<Vec<i64>>) -> Response {
+        Response {
+            id,
+            ok: true,
+            value,
+            table,
+            served_by,
+            error: None,
+            stats: None,
+        }
+    }
+
+    pub fn err(id: i64, msg: String) -> Response {
+        Response {
+            id,
+            ok: false,
+            value: 0,
+            table: None,
+            served_by: String::new(),
+            error: Some(msg),
+            stats: None,
+        }
+    }
+
+    pub fn encode(&self) -> String {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("id", Json::int(self.id)),
+            ("ok", Json::Bool(self.ok)),
+            ("value", Json::int(self.value)),
+            ("served_by", Json::str(self.served_by.clone())),
+        ];
+        if let Some(t) = &self.table {
+            fields.push(("table", Json::arr(t.iter().map(|&v| Json::int(v)))));
+        }
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(e.clone())));
+        }
+        if let Some(s) = &self.stats {
+            fields.push(("stats", s.clone()));
+        }
+        Json::obj(fields).to_string()
+    }
+
+    pub fn decode(line: &str) -> Result<Response> {
+        let v = Json::parse(line)?;
+        Ok(Response {
+            id: v.i64_field("id")?,
+            ok: v.field("ok")?.as_bool().unwrap_or(false),
+            value: v.get("value").and_then(|x| x.as_i64()).unwrap_or(0),
+            table: match v.get("table") {
+                Some(Json::Arr(items)) => Some(
+                    items
+                        .iter()
+                        .map(|x| x.as_i64().unwrap_or(0))
+                        .collect(),
+                ),
+                _ => None,
+            },
+            served_by: v
+                .get("served_by")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
+            error: v.get("error").and_then(|x| x.as_str()).map(String::from),
+            stats: v.get("stats").cloned(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sdp_request_roundtrip() {
+        let p = SdpProblem::fibonacci(16);
+        let req = Request {
+            id: 7,
+            body: RequestBody::Sdp(p),
+            backend: Backend::Native,
+            full: true,
+        };
+        let line = req.encode();
+        let back = Request::decode(&line).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.backend, Backend::Native);
+        assert!(back.full);
+        match back.body {
+            RequestBody::Sdp(p) => {
+                assert_eq!(p.n, 16);
+                assert_eq!(p.offsets, vec![2, 1]);
+            }
+            _ => panic!("wrong body"),
+        }
+    }
+
+    #[test]
+    fn mcm_request_roundtrip() {
+        let req = Request {
+            id: 1,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::PaperFaithful,
+            },
+            backend: Backend::Auto,
+            full: false,
+        };
+        let back = Request::decode(&req.encode()).unwrap();
+        match back.body {
+            RequestBody::Mcm { problem, variant } => {
+                assert_eq!(problem.dims, vec![30, 35, 15, 5, 10, 20, 25]);
+                assert_eq!(variant, McmVariant::PaperFaithful);
+            }
+            _ => panic!("wrong body"),
+        }
+    }
+
+    #[test]
+    fn invalid_requests_rejected() {
+        assert!(Request::decode("not json").is_err());
+        assert!(Request::decode(r#"{"id": 1}"#).is_err()); // no kind
+        assert!(Request::decode(r#"{"id": 1, "kind": "sdp", "n": 10, "offsets": [1, 2], "op": "min", "init": [0]}"#).is_err()); // increasing offsets
+        assert!(Request::decode(r#"{"id": 1, "kind": "mcm", "dims": [5]}"#).is_err());
+        assert!(Request::decode(r#"{"id": 1, "kind": "wat"}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response::ok(3, 15125, "xla:mcm_diagonal_i32_n8".into(), Some(vec![1, 2, 3]));
+        let back = Response::decode(&r.encode()).unwrap();
+        assert!(back.ok);
+        assert_eq!(back.value, 15125);
+        assert_eq!(back.table.unwrap(), vec![1, 2, 3]);
+        assert_eq!(back.served_by, "xla:mcm_diagonal_i32_n8");
+    }
+
+    #[test]
+    fn error_response_roundtrip() {
+        let r = Response::err(9, "no bucket".into());
+        let back = Response::decode(&r.encode()).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.error.unwrap(), "no bucket");
+    }
+}

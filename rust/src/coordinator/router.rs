@@ -1,0 +1,318 @@
+//! Backend routing and request execution.
+//!
+//! The router decides, per request, whether to serve from the native Rust
+//! executors or from an AOT XLA bucket (honouring an explicit `backend`
+//! if the request pinned one), and executes single requests or batched
+//! groups against the chosen backend.
+
+use std::sync::Arc;
+
+use crate::coordinator::request::{Backend, Request, RequestBody, Response};
+use crate::core::problem::{McmProblem, SdpProblem};
+use crate::core::schedule::McmVariant;
+use crate::runtime::engine::Engine;
+use crate::{Error, Result};
+
+/// Instances at or below these sizes are cheaper natively than through a
+/// PJRT dispatch (measured in `bench xla_engine`; see EXPERIMENTS.md §Perf).
+pub const NATIVE_SDP_CUTOFF: usize = 64;
+pub const NATIVE_MCM_CUTOFF: usize = 8;
+
+/// Resolved routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Native,
+    Xla,
+}
+
+/// The router: owns the engine (if artifacts are available).
+pub struct Router {
+    pub engine: Option<Arc<Engine>>,
+}
+
+impl Router {
+    pub fn new(engine: Option<Arc<Engine>>) -> Router {
+        Router { engine }
+    }
+
+    /// Decide where a request should run.
+    pub fn route(&self, req: &Request) -> Result<Route> {
+        let fits_xla = |req: &Request| -> bool {
+            let Some(engine) = &self.engine else {
+                return false;
+            };
+            match &req.body {
+                RequestBody::Sdp(p) => engine.registry.route_sdp(p.n, p.k(), p.op, 1).is_some(),
+                RequestBody::Mcm { problem, variant } => match variant {
+                    McmVariant::Corrected => {
+                        engine.registry.route_mcm(problem.n(), "diagonal", 1).is_some()
+                    }
+                    // faithful semantics exist only in the schedule executor
+                    McmVariant::PaperFaithful => engine
+                        .registry
+                        .artifacts
+                        .iter()
+                        .any(|a| a.algo == "pipeline" && a.n == problem.n()),
+                },
+                RequestBody::Stats => false,
+            }
+        };
+        match req.backend {
+            Backend::Native => Ok(Route::Native),
+            Backend::Xla => {
+                if fits_xla(req) {
+                    Ok(Route::Xla)
+                } else {
+                    Err(Error::Runtime(
+                        "no XLA artifact bucket fits this request".into(),
+                    ))
+                }
+            }
+            Backend::Auto => {
+                let small = match &req.body {
+                    RequestBody::Sdp(p) => p.n <= NATIVE_SDP_CUTOFF,
+                    RequestBody::Mcm { problem, .. } => problem.n() <= NATIVE_MCM_CUTOFF,
+                    RequestBody::Stats => true,
+                };
+                if !small && fits_xla(req) {
+                    Ok(Route::Xla)
+                } else {
+                    Ok(Route::Native)
+                }
+            }
+        }
+    }
+
+    /// Execute one request (already routed).
+    pub fn execute(&self, req: &Request, route: Route) -> Response {
+        let result = match route {
+            Route::Native => self.execute_native(req),
+            Route::Xla => self.execute_xla(req),
+        };
+        match result {
+            Ok(r) => r,
+            Err(e) => Response::err(req.id, e.to_string()),
+        }
+    }
+
+    fn execute_native(&self, req: &Request) -> Result<Response> {
+        match &req.body {
+            RequestBody::Sdp(p) => {
+                let st = crate::sdp::pipeline::solve(p);
+                Ok(self.done(req, st, "native:sdp_pipeline"))
+            }
+            RequestBody::Mcm { problem, variant } => {
+                let st = crate::mcm::pipeline::solve(problem, *variant);
+                Ok(self.done(req, st, &format!("native:mcm_pipeline_{}", variant.name())))
+            }
+            RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
+        }
+    }
+
+    fn execute_xla(&self, req: &Request) -> Result<Response> {
+        let engine = self
+            .engine
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("engine unavailable".into()))?;
+        match &req.body {
+            RequestBody::Sdp(p) => {
+                let st = engine.solve_sdp(p)?;
+                Ok(self.done(req, st, "xla:sdp_pipeline"))
+            }
+            RequestBody::Mcm { problem, variant } => {
+                let st = match variant {
+                    McmVariant::Corrected => engine.solve_mcm(problem)?,
+                    McmVariant::PaperFaithful => {
+                        engine.solve_mcm_pipeline(problem, McmVariant::PaperFaithful)?
+                    }
+                };
+                Ok(self.done(req, st, "xla:mcm"))
+            }
+            RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
+        }
+    }
+
+    /// Execute a group of same-bucket requests, batched when a batch
+    /// artifact exists; falls back to per-request execution.
+    pub fn execute_group(&self, reqs: &[Request], route: Route) -> Vec<Response> {
+        if route == Route::Xla && reqs.len() > 1 {
+            if let Some(responses) = self.try_execute_batched(reqs) {
+                return responses;
+            }
+        }
+        reqs.iter().map(|r| self.execute(r, route)).collect()
+    }
+
+    fn try_execute_batched(&self, reqs: &[Request]) -> Option<Vec<Response>> {
+        let engine = self.engine.as_ref()?;
+        // homogeneous-kind groups only (the batcher's key guarantees this)
+        match &reqs[0].body {
+            RequestBody::Sdp(_) => {
+                let ps: Vec<&SdpProblem> = reqs
+                    .iter()
+                    .map(|r| match &r.body {
+                        RequestBody::Sdp(p) => p,
+                        _ => unreachable!("batch key mixes kinds"),
+                    })
+                    .collect();
+                let first = ps[0];
+                engine.registry.route_sdp(first.n, first.k(), first.op, ps.len())?;
+                let tables = engine.solve_sdp_batch(&ps).ok()?;
+                Some(
+                    reqs.iter()
+                        .zip(tables)
+                        .map(|(r, st)| self.done(r, st, "xla:sdp_pipeline[batched]"))
+                        .collect(),
+                )
+            }
+            RequestBody::Mcm { .. } => {
+                let ps: Vec<&McmProblem> = reqs
+                    .iter()
+                    .map(|r| match &r.body {
+                        RequestBody::Mcm { problem, .. } => problem,
+                        _ => unreachable!("batch key mixes kinds"),
+                    })
+                    .collect();
+                let n_max = ps.iter().map(|p| p.n()).max()?;
+                engine.registry.route_mcm(n_max, "diagonal", ps.len())?;
+                let tables = engine.solve_mcm_batch(&ps).ok()?;
+                Some(
+                    reqs.iter()
+                        .zip(tables)
+                        .map(|(r, st)| self.done(r, st, "xla:mcm_diagonal[batched]"))
+                        .collect(),
+                )
+            }
+            RequestBody::Stats => None,
+        }
+    }
+
+    fn done(&self, req: &Request, table: Vec<i64>, served_by: &str) -> Response {
+        let value = *table.last().unwrap_or(&0);
+        Response::ok(
+            req.id,
+            value,
+            served_by.to_string(),
+            if req.full { Some(table) } else { None },
+        )
+    }
+}
+
+/// Batching key: requests with equal keys can share one dispatch.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum GroupKey {
+    Sdp {
+        n: usize,
+        k: usize,
+        op: &'static str,
+    },
+    Mcm {
+        n: usize,
+        variant: &'static str,
+    },
+    Single(i64),
+}
+
+/// Compute the batching key for a routed request; `Single` keys are never
+/// merged (stats, native routes get trivially unique keys).
+pub fn group_key(req: &Request, route: Route) -> GroupKey {
+    if route != Route::Xla {
+        return GroupKey::Single(req.id);
+    }
+    match &req.body {
+        RequestBody::Sdp(p) => GroupKey::Sdp {
+            n: p.n,
+            k: p.k(),
+            op: p.op.name(),
+        },
+        RequestBody::Mcm { problem, variant } => GroupKey::Mcm {
+            n: problem.n(),
+            variant: variant.name(),
+        },
+        RequestBody::Stats => GroupKey::Single(req.id),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::semigroup::Op;
+
+    fn sdp_req(id: i64, n: usize, backend: Backend) -> Request {
+        Request {
+            id,
+            body: RequestBody::Sdp(
+                SdpProblem::new(n, vec![2, 1], Op::Min, vec![5, 3]).unwrap(),
+            ),
+            backend,
+            full: false,
+        }
+    }
+
+    #[test]
+    fn engineless_router_always_native() {
+        let r = Router::new(None);
+        assert_eq!(r.route(&sdp_req(1, 1000, Backend::Auto)).unwrap(), Route::Native);
+        assert!(r.route(&sdp_req(1, 1000, Backend::Xla)).is_err());
+    }
+
+    #[test]
+    fn native_execution_solves() {
+        let r = Router::new(None);
+        let mut req = sdp_req(1, 16, Backend::Native);
+        req.body = RequestBody::Sdp(SdpProblem::fibonacci(16));
+        req.full = true;
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok);
+        assert_eq!(resp.value, 987);
+        assert_eq!(resp.table.unwrap().len(), 16);
+    }
+
+    #[test]
+    fn mcm_native_execution() {
+        let r = Router::new(None);
+        let req = Request {
+            id: 2,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: false,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok);
+        assert_eq!(resp.value, 15125);
+    }
+
+    #[test]
+    fn faithful_variant_served_and_marked() {
+        let r = Router::new(None);
+        let req = Request {
+            id: 3,
+            body: RequestBody::Mcm {
+                problem: McmProblem::hazard_counterexample(),
+                variant: McmVariant::PaperFaithful,
+            },
+            backend: Backend::Native,
+            full: false,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok);
+        assert!(resp.served_by.contains("faithful"));
+        // the published schedule overestimates this instance
+        let truth = crate::mcm::seq::cost(&McmProblem::hazard_counterexample());
+        assert!(resp.value > truth);
+    }
+
+    #[test]
+    fn group_keys_merge_only_same_bucket() {
+        let a = sdp_req(1, 100, Backend::Auto);
+        let b = sdp_req(2, 100, Backend::Auto);
+        let c = sdp_req(3, 200, Backend::Auto);
+        assert_eq!(group_key(&a, Route::Xla), group_key(&b, Route::Xla));
+        assert_ne!(group_key(&a, Route::Xla), group_key(&c, Route::Xla));
+        // native routes never merge
+        assert_ne!(group_key(&a, Route::Native), group_key(&b, Route::Native));
+    }
+}

@@ -1,0 +1,270 @@
+//! The TCP server (line-delimited JSON) and a blocking client.
+//!
+//! One thread per connection reads request lines and hands them to the
+//! batcher with a per-request reply channel; a per-connection writer
+//! thread serializes responses back (so batched completions from worker
+//! threads never interleave bytes).  `kind: "stats"` requests are answered
+//! inline with a metrics snapshot.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::batcher::{Batcher, Policy};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::request::{Request, RequestBody, Response};
+use crate::coordinator::router::Router;
+use crate::runtime::engine::Engine;
+use crate::{Error, Result};
+
+/// Server configuration.
+pub struct Config {
+    pub addr: String,
+    pub workers: usize,
+    pub policy: Policy,
+    /// Serve without artifacts (native backends only).
+    pub allow_engineless: bool,
+    /// Pre-compile every artifact in the background at startup so the
+    /// first request per bucket does not pay PJRT compilation latency.
+    pub warm: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            addr: "127.0.0.1:7070".into(),
+            workers: 4,
+            policy: Policy::default(),
+            allow_engineless: true,
+            warm: true,
+        }
+    }
+}
+
+/// A running server (owns the accept thread; `shutdown` is cooperative).
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    warmed: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads.
+    pub fn start(cfg: Config) -> Result<Server> {
+        let engine = match Engine::load() {
+            Ok(e) => Some(Arc::new(e)),
+            Err(e) if cfg.allow_engineless => {
+                eprintln!("pipedp-server: running without XLA engine: {e}");
+                None
+            }
+            Err(e) => return Err(e),
+        };
+        let warmed = Arc::new(AtomicBool::new(!cfg.warm || engine.is_none()));
+        if cfg.warm {
+            if let Some(engine) = engine.clone() {
+                let warmed = warmed.clone();
+                std::thread::Builder::new()
+                    .name("pipedp-warmup".into())
+                    .spawn(move || {
+                        let n = engine.warm_all();
+                        warmed.store(true, Ordering::Release);
+                        eprintln!("pipedp-server: warmed {n} executables");
+                    })
+                    .expect("spawn warmup");
+            }
+        }
+        let router = Arc::new(Router::new(engine));
+        let pool = Arc::new(WorkerPool::new(cfg.workers));
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Arc::new(Batcher::start(
+            router,
+            pool,
+            metrics.clone(),
+            cfg.policy.clone(),
+        ));
+
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept_handle = {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name("pipedp-accept".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let batcher = batcher.clone();
+                                let metrics = metrics.clone();
+                                let stop = stop.clone();
+                                std::thread::spawn(move || {
+                                    let _ = handle_connection(stream, batcher, metrics, stop);
+                                });
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(std::time::Duration::from_millis(5));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("spawn accept thread")
+        };
+
+        Ok(Server {
+            local_addr,
+            metrics,
+            stop,
+            warmed,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// Block until warmup finished (immediately true when warmup is off or
+    /// no engine is loaded).  Serving deployments call this before opening
+    /// the floodgates so no request pays PJRT-compile tail latency.
+    pub fn wait_ready(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while !self.warmed.load(Ordering::Acquire) {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        true
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    // responses funnel through one channel so writes never interleave
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let writer_handle = std::thread::spawn(move || {
+        while let Ok(resp) = resp_rx.recv() {
+            let mut line = resp.encode();
+            line.push('\n');
+            if writer.write_all(line.as_bytes()).is_err() {
+                break;
+            }
+            let _ = writer.flush();
+        }
+    });
+
+    for line in reader.lines() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        metrics.requests.fetch_add(1, Ordering::Relaxed);
+        match Request::decode(&line) {
+            Ok(req) if matches!(req.body, RequestBody::Stats) => {
+                let mut resp = Response::ok(req.id, 0, "server:stats".into(), None);
+                resp.stats = Some(metrics.snapshot());
+                let _ = resp_tx.send(resp);
+            }
+            // routing happens inside the batcher (it owns the
+            // engine-aware router) so grouping matches the destination
+            Ok(req) => batcher.submit_request(req, resp_tx.clone()),
+            Err(e) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = resp_tx.send(Response::err(0, e.to_string()));
+            }
+        }
+    }
+    drop(resp_tx);
+    let _ = writer_handle.join();
+    Ok(())
+}
+
+/// Blocking client for the wire protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: i64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
+    }
+
+    /// Send one request and wait for its response.
+    pub fn call(&mut self, mut req: Request) -> Result<Response> {
+        req.id = self.next_id;
+        self.next_id += 1;
+        let mut line = req.encode();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut resp_line = String::new();
+        self.reader.read_line(&mut resp_line)?;
+        if resp_line.is_empty() {
+            return Err(Error::Server("connection closed".into()));
+        }
+        Response::decode(resp_line.trim_end())
+    }
+
+    /// Send `reqs` pipelined (all writes, then all reads) — how a
+    /// throughput-oriented client drives the batcher.
+    pub fn call_pipelined(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        let n = reqs.len();
+        let mut payload = String::new();
+        for mut req in reqs {
+            req.id = self.next_id;
+            self.next_id += 1;
+            payload.push_str(&req.encode());
+            payload.push('\n');
+        }
+        self.writer.write_all(payload.as_bytes())?;
+        self.writer.flush()?;
+        let mut responses = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            if line.is_empty() {
+                return Err(Error::Server("connection closed mid-batch".into()));
+            }
+            responses.push(Response::decode(line.trim_end())?);
+        }
+        // responses may complete out of order across buckets; re-order
+        responses.sort_by_key(|r| r.id);
+        Ok(responses)
+    }
+}

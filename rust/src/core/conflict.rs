@@ -1,0 +1,316 @@
+//! Access-trace analysis: the paper's memory-conflict model, Theorem 1
+//! verification, and the staleness-hazard checker behind the soundness
+//! finding of DESIGN.md §1.1.
+//!
+//! The paper's GPU cost model serializes threads that touch the *same*
+//! address within one substep; the degree of the worst collision is the
+//! step's serialization factor (§III-A: `q − p + 1` for a run of
+//! consecutive offsets).  This module computes those factors exactly from
+//! compiled schedules — they feed the SIMT simulator and the
+//! conflict-ablation benchmark.
+
+use std::collections::HashMap;
+
+use crate::core::schedule::{McmSchedule, SdpSchedule};
+
+/// Conflict report for one schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConflictReport {
+    /// Number of (step, substep) pairs with at least one collision.
+    pub conflicted_substeps: usize,
+    /// Worst same-address collision degree seen in any substep.
+    pub max_degree: usize,
+    /// Σ over steps of the per-step serialization factor (the paper's cost
+    /// model: a step costs its worst substep collision degree).
+    pub serialized_cycles: u64,
+    /// Total steps analyzed.
+    pub steps: usize,
+}
+
+impl ConflictReport {
+    /// Mean serialization factor per step (1.0 = fully conflict-free).
+    pub fn mean_factor(&self) -> f64 {
+        if self.steps == 0 {
+            1.0
+        } else {
+            self.serialized_cycles as f64 / self.steps as f64
+        }
+    }
+}
+
+/// A staleness hazard: `reader` consumed `operand` at `step`, but `operand`
+/// was only final after `finalized` ≥ `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hazard {
+    pub step: usize,
+    pub reader: usize,
+    pub operand: usize,
+    pub finalized: usize,
+}
+
+fn collision_degree(addrs: &[usize]) -> usize {
+    let mut seen: HashMap<usize, usize> = HashMap::with_capacity(addrs.len());
+    let mut worst = 1;
+    for &a in addrs {
+        let c = seen.entry(a).or_insert(0);
+        *c += 1;
+        worst = worst.max(*c);
+    }
+    if addrs.is_empty() {
+        1
+    } else {
+        worst
+    }
+}
+
+/// Analyze an MCM schedule's substep accesses (substep 1 = left reads,
+/// substep 2 = right reads, substep 4 = writes), per Fig. 8.
+pub fn analyze_mcm(sched: &McmSchedule) -> ConflictReport {
+    let mut report = ConflictReport {
+        steps: sched.num_steps(),
+        ..Default::default()
+    };
+    for entries in &sched.steps {
+        let mut step_factor = 1usize;
+        for substep in 0..3 {
+            let addrs: Vec<usize> = entries
+                .iter()
+                .map(|e| match substep {
+                    0 => e.l as usize,
+                    1 => e.r as usize,
+                    _ => e.tgt as usize,
+                })
+                .collect();
+            let degree = collision_degree(&addrs);
+            if degree > 1 {
+                report.conflicted_substeps += 1;
+            }
+            report.max_degree = report.max_degree.max(degree);
+            step_factor = step_factor.max(degree);
+        }
+        report.serialized_cycles += step_factor as u64;
+    }
+    report
+}
+
+/// Theorem 1 check: true iff no substep of the schedule has two threads on
+/// one address.
+pub fn mcm_conflict_free(sched: &McmSchedule) -> bool {
+    let r = analyze_mcm(sched);
+    r.conflicted_substeps == 0
+}
+
+/// Staleness hazards of an MCM schedule (empty ⇔ every read sees a final
+/// value; the published schedule fails this for n ≥ 4).
+pub fn mcm_hazards(sched: &McmSchedule) -> Vec<Hazard> {
+    let mut out = Vec::new();
+    for (s, entries) in sched.steps.iter().enumerate() {
+        for e in entries {
+            for dep in [e.l as usize, e.r as usize] {
+                if let Some(fin) = sched.finalize_step(dep) {
+                    if fin >= s {
+                        out.push(Hazard {
+                            step: s,
+                            reader: e.tgt as usize,
+                            operand: dep,
+                            finalized: fin,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Analyze the S-DP pipeline's reads (Fig. 2 has one read + one write per
+/// thread per step; writes are distinct by construction, reads collide in
+/// runs of consecutive offsets — Fig. 4).
+pub fn analyze_sdp(sched: &SdpSchedule) -> ConflictReport {
+    let mut report = ConflictReport {
+        steps: sched.num_steps(),
+        ..Default::default()
+    };
+    for i in sched.step_range() {
+        let accesses = sched.step(i);
+        let reads: Vec<usize> = accesses.iter().map(|a| a.src).collect();
+        let writes: Vec<usize> = accesses.iter().map(|a| a.tgt).collect();
+        let mut step_factor = 1usize;
+        for addrs in [&reads, &writes] {
+            let degree = collision_degree(addrs);
+            if degree > 1 {
+                report.conflicted_substeps += 1;
+            }
+            report.max_degree = report.max_degree.max(degree);
+            step_factor = step_factor.max(degree);
+        }
+        report.serialized_cycles += step_factor as u64;
+    }
+    report
+}
+
+/// Staleness hazards of the S-DP pipeline (provably empty — Definition 1's
+/// strictly-decreasing offsets force `a_j ≥ k − j + 1`; kept as a runtime
+/// checker so the property test can exercise the proof).
+pub fn sdp_hazards(sched: &SdpSchedule) -> Vec<Hazard> {
+    let mut out = Vec::new();
+    for i in sched.step_range() {
+        for a in sched.step(i) {
+            if let Some(fin) = sched.finalize_step(a.src) {
+                if fin >= i {
+                    out.push(Hazard {
+                        step: i,
+                        reader: a.tgt,
+                        operand: a.src,
+                        finalized: fin,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::schedule::{McmSchedule, McmVariant, SdpSchedule};
+    use crate::prop::forall;
+
+    #[test]
+    fn theorem1_published_schedule_is_conflict_free() {
+        for n in 2..14 {
+            let s = McmSchedule::compile(n, McmVariant::PaperFaithful);
+            assert!(mcm_conflict_free(&s), "n={n}");
+        }
+    }
+
+    #[test]
+    fn published_schedule_has_hazards_iff_n_ge_4() {
+        for n in 2..14 {
+            let s = McmSchedule::compile(n, McmVariant::PaperFaithful);
+            let h = mcm_hazards(&s);
+            if n >= 4 {
+                assert!(!h.is_empty(), "expected hazards at n={n}");
+            } else {
+                assert!(h.is_empty(), "unexpected hazards at n={n}: {h:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrected_schedule_hazard_free() {
+        forall("corrected hazard free", 24, |g| {
+            let n = g.usize(2..26);
+            let s = McmSchedule::compile(n, McmVariant::Corrected);
+            let h = mcm_hazards(&s);
+            if h.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("n={n}: {:?}", &h[..h.len().min(3)]))
+            }
+        });
+    }
+
+    #[test]
+    fn corrected_schedule_write_conflict_free() {
+        // reads may collide (free on TPU, serialized on GPU); writes never
+        for n in 2..16 {
+            let s = McmSchedule::compile(n, McmVariant::Corrected);
+            for entries in &s.steps {
+                let mut tgts: Vec<u32> = entries.iter().map(|e| e.tgt).collect();
+                tgts.sort_unstable();
+                tgts.dedup();
+                assert_eq!(tgts.len(), entries.len(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn hazard_at_n4_is_the_documented_one() {
+        // DESIGN.md §1.1: cell 10 (1-based) = idx 9 reads cell 9 = idx 8
+        // at step 10-1-(n+1)+1 … in 0-based schedule terms: step 3.
+        let s = McmSchedule::compile(4, McmVariant::PaperFaithful);
+        let h = mcm_hazards(&s);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0].reader, 9);
+        assert_eq!(h[0].operand, 8);
+        assert_eq!(h[0].step, h[0].finalized);
+    }
+
+    #[test]
+    fn sdp_pipeline_never_has_hazards() {
+        forall("sdp freshness", 120, |g| {
+            let k = g.usize(1..9);
+            let max = (k as i64) + g.i64(0..24);
+            let offs = g.offsets(k, max);
+            let n = offs[0] as usize + 1 + g.usize(0..96);
+            let s = SdpSchedule::new(n, offs);
+            let h = sdp_hazards(&s);
+            if h.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{:?}", h[0]))
+            }
+        });
+    }
+
+    #[test]
+    fn sdp_writes_always_distinct() {
+        forall("sdp write distinct", 60, |g| {
+            let k = g.usize(1..8);
+            let offs = g.offsets(k, k as i64 + 12);
+            let n = offs[0] as usize + 1 + g.usize(0..40);
+            let s = SdpSchedule::new(n, offs);
+            for i in s.step_range() {
+                let mut tgts: Vec<usize> = s.step(i).iter().map(|a| a.tgt).collect();
+                tgts.sort_unstable();
+                let len = tgts.len();
+                tgts.dedup();
+                if tgts.len() != len {
+                    return Err(format!("step {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fig4_consecutive_offsets_serialize_by_k() {
+        // a = (k, …, 1): every full step has a k-way read collision
+        for k in [2usize, 4, 8] {
+            let offs: Vec<i64> = (1..=k as i64).rev().collect();
+            let s = SdpSchedule::new(64, offs);
+            let r = analyze_sdp(&s);
+            assert_eq!(r.max_degree, k, "k={k}");
+            // mean factor approaches k for n ≫ k
+            assert!(r.mean_factor() > (k as f64) * 0.8, "k={k}: {}", r.mean_factor());
+        }
+    }
+
+    #[test]
+    fn conflict_free_offsets_have_factor_one() {
+        // spread offsets (no consecutive pair) → no collisions at all
+        let s = SdpSchedule::new(64, vec![9, 5, 1]);
+        let r = analyze_sdp(&s);
+        assert_eq!(r.max_degree, 1);
+        assert_eq!(r.conflicted_substeps, 0);
+        assert_eq!(r.mean_factor(), 1.0);
+    }
+
+    #[test]
+    fn partial_run_partial_factor() {
+        // a = (9, 5, 4, 3, 1): run (5,4,3) of length 3 collides 3-way
+        let s = SdpSchedule::new(64, vec![9, 5, 4, 3, 1]);
+        let r = analyze_sdp(&s);
+        assert_eq!(r.max_degree, 3);
+    }
+
+    #[test]
+    fn collision_degree_edge_cases() {
+        assert_eq!(collision_degree(&[]), 1);
+        assert_eq!(collision_degree(&[7]), 1);
+        assert_eq!(collision_degree(&[7, 7, 7]), 3);
+        assert_eq!(collision_degree(&[1, 2, 1, 2, 1]), 3);
+    }
+}

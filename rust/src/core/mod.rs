@@ -1,0 +1,15 @@
+//! Problem definitions and the schedule compiler — the paper's
+//! coordination contribution, made explicit.
+//!
+//! * [`semigroup`] — the `⊗` operators of Definition 1.
+//! * [`problem`] — validated S-DP and MCM problem instances.
+//! * [`schedule`] — the schedule compiler: Fig. 2 / Fig. 8 pipelines as
+//!   explicit step-synchronous schedules (published-faithful and
+//!   hazard-corrected variants).
+//! * [`conflict`] — the access-trace analyzer: Theorem-1 conflict checks,
+//!   staleness-hazard detection, and the GPU serialization-factor model.
+
+pub mod conflict;
+pub mod problem;
+pub mod schedule;
+pub mod semigroup;

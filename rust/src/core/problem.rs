@@ -1,0 +1,234 @@
+//! Validated problem instances: the S-DP problem of Definition 1 and the
+//! matrix-chain multiplication problem of §IV.
+
+use crate::core::semigroup::Op;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// A simplified DP problem (Definition 1):
+/// `ST[i] = ⊗_{1≤j≤k} ST[i - a_j]` with `a_1 > a_2 > … > a_k > 0` and
+/// `ST[0..a_1)` preset with `init`.
+#[derive(Debug, Clone)]
+pub struct SdpProblem {
+    pub n: usize,
+    pub offsets: Vec<i64>,
+    pub op: Op,
+    /// The preset values `ST[0..a_1)`.
+    pub init: Vec<i64>,
+}
+
+impl SdpProblem {
+    /// Validate and build an instance.  `init` must have exactly `a_1`
+    /// entries and `n` must leave at least one element to compute.
+    pub fn new(n: usize, offsets: Vec<i64>, op: Op, init: Vec<i64>) -> Result<SdpProblem> {
+        if offsets.is_empty() {
+            return Err(Error::InvalidProblem("offsets must be non-empty".into()));
+        }
+        if offsets.iter().any(|&a| a <= 0) {
+            return Err(Error::InvalidProblem(
+                "offsets must be strictly positive (Definition 1)".into(),
+            ));
+        }
+        if !offsets.windows(2).all(|w| w[0] > w[1]) {
+            return Err(Error::InvalidProblem(
+                "offsets must be strictly decreasing (Definition 1)".into(),
+            ));
+        }
+        let a1 = offsets[0] as usize;
+        if n <= a1 {
+            return Err(Error::InvalidProblem(format!(
+                "n = {n} must exceed a_1 = {a1} so there is something to compute"
+            )));
+        }
+        if init.len() != a1 {
+            return Err(Error::InvalidProblem(format!(
+                "init must have exactly a_1 = {a1} entries, got {}",
+                init.len()
+            )));
+        }
+        Ok(SdpProblem {
+            n,
+            offsets,
+            op,
+            init,
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn a1(&self) -> usize {
+        self.offsets[0] as usize
+    }
+
+    /// The initial table: preset head, zeros elsewhere (overwritten).
+    pub fn initial_table(&self) -> Vec<i64> {
+        let mut st = vec![0i64; self.n];
+        st[..self.a1()].copy_from_slice(&self.init);
+        st
+    }
+
+    /// Longest run of *consecutive* offsets (`a_m = a_{m+1} + 1`) — the
+    /// paper's §III-A serialization factor: the inner loop is `q−p+1`×
+    /// slower in the worst case.
+    pub fn longest_consecutive_run(&self) -> usize {
+        let mut best = 1;
+        let mut cur = 1;
+        for w in self.offsets.windows(2) {
+            if w[0] == w[1] + 1 {
+                cur += 1;
+                best = best.max(cur);
+            } else {
+                cur = 1;
+            }
+        }
+        best
+    }
+
+    /// The Fibonacci instance the paper uses as its Definition 1 example.
+    pub fn fibonacci(n: usize) -> SdpProblem {
+        SdpProblem::new(n, vec![2, 1], Op::Add, vec![1, 1]).expect("static instance")
+    }
+
+    /// Random instance drawn like the paper's Table I workloads: `n` and
+    /// `k` uniform in the given bands, offsets distinct in `[1, 2k]`,
+    /// initial values uniform small non-negative.
+    pub fn random(rng: &mut Rng, n_range: std::ops::Range<usize>, k_range: std::ops::Range<usize>, op: Op) -> SdpProblem {
+        let n = rng.range(n_range.start as i64..n_range.end as i64) as usize;
+        let k = rng.range(k_range.start as i64..k_range.end as i64) as usize;
+        let offsets = rng.offsets(k, (2 * k) as i64);
+        let a1 = offsets[0] as usize;
+        let init: Vec<i64> = (0..a1).map(|_| rng.range(0..1_000_000)).collect();
+        SdpProblem::new(n.max(a1 + 1), offsets, op, init).expect("random instance is valid")
+    }
+
+    /// The Fig. 4 worst case: consecutive offsets `(k, k-1, …, 1)`.
+    pub fn worst_case(n: usize, k: usize, op: Op, rng: &mut Rng) -> SdpProblem {
+        let offsets: Vec<i64> = (1..=k as i64).rev().collect();
+        let init: Vec<i64> = (0..k).map(|_| rng.range(0..1_000_000)).collect();
+        SdpProblem::new(n, offsets, op, init).expect("worst case instance is valid")
+    }
+}
+
+/// A matrix-chain multiplication instance: `n` matrices where matrix `i`
+/// (1-based) is `dims[i-1] × dims[i]`.
+#[derive(Debug, Clone)]
+pub struct McmProblem {
+    pub dims: Vec<i64>,
+}
+
+impl McmProblem {
+    pub fn new(dims: Vec<i64>) -> Result<McmProblem> {
+        if dims.len() < 2 {
+            return Err(Error::InvalidProblem(
+                "need at least 2 dims (one matrix)".into(),
+            ));
+        }
+        if dims.iter().any(|&d| d <= 0) {
+            return Err(Error::InvalidProblem("dims must be positive".into()));
+        }
+        Ok(McmProblem { dims })
+    }
+
+    /// Number of matrices in the chain.
+    pub fn n(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// `f(l, r)` weight for combining at split `(pa, pb, pc)` — the scalar
+    /// multiplication count `p_a · p_b · p_c`.
+    #[inline(always)]
+    pub fn weight(&self, pa: usize, pb: usize, pc: usize) -> i64 {
+        self.dims[pa] * self.dims[pb] * self.dims[pc]
+    }
+
+    /// The CLRS 15.2 textbook instance (optimal cost 15125).
+    pub fn clrs() -> McmProblem {
+        McmProblem::new(vec![30, 35, 15, 5, 10, 20, 25]).expect("static instance")
+    }
+
+    /// The n=4 counterexample on which the published Fig. 8 schedule
+    /// returns a wrong optimal cost (DESIGN.md §1.1).
+    pub fn hazard_counterexample() -> McmProblem {
+        McmProblem::new(vec![24, 3, 6, 7, 6]).expect("static instance")
+    }
+
+    /// Random chain with dims in `[1, max_dim]`.
+    pub fn random(rng: &mut Rng, n: usize, max_dim: i64) -> McmProblem {
+        McmProblem::new((0..=n).map(|_| rng.range(1..max_dim + 1)).collect())
+            .expect("random instance is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn rejects_empty_offsets() {
+        assert!(SdpProblem::new(10, vec![], Op::Min, vec![]).is_err());
+    }
+
+    #[test]
+    fn rejects_nondecreasing_offsets() {
+        assert!(SdpProblem::new(10, vec![2, 2], Op::Min, vec![1, 1]).is_err());
+        assert!(SdpProblem::new(10, vec![1, 2], Op::Min, vec![1]).is_err());
+    }
+
+    #[test]
+    fn rejects_nonpositive_offsets() {
+        assert!(SdpProblem::new(10, vec![2, 0], Op::Min, vec![1, 1]).is_err());
+        assert!(SdpProblem::new(10, vec![-1], Op::Min, vec![]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_init_len() {
+        assert!(SdpProblem::new(10, vec![3, 1], Op::Min, vec![1, 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_n_not_exceeding_a1() {
+        assert!(SdpProblem::new(3, vec![3, 1], Op::Min, vec![1, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn fibonacci_instance() {
+        let p = SdpProblem::fibonacci(10);
+        assert_eq!(p.k(), 2);
+        assert_eq!(p.a1(), 2);
+        assert_eq!(p.initial_table()[..2], [1, 1]);
+    }
+
+    #[test]
+    fn consecutive_run_detection() {
+        let p = SdpProblem::new(20, vec![9, 5, 4, 3, 1], Op::Min, vec![0; 9]).unwrap();
+        assert_eq!(p.longest_consecutive_run(), 3); // 5,4,3
+        let w = SdpProblem::worst_case(20, 4, Op::Min, &mut Rng::seeded(0));
+        assert_eq!(w.longest_consecutive_run(), 4);
+        let f = SdpProblem::fibonacci(10);
+        assert_eq!(f.longest_consecutive_run(), 2);
+    }
+
+    #[test]
+    fn random_instances_always_valid() {
+        forall("random sdp valid", 100, |g| {
+            let mut rng = g.rng().fork();
+            let p = SdpProblem::random(&mut rng, 32..128, 2..9, Op::Min);
+            if p.initial_table().len() == p.n && p.n > p.a1() {
+                Ok(())
+            } else {
+                Err(format!("{p:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn mcm_validation() {
+        assert!(McmProblem::new(vec![5]).is_err());
+        assert!(McmProblem::new(vec![5, 0]).is_err());
+        assert_eq!(McmProblem::clrs().n(), 6);
+        assert_eq!(McmProblem::clrs().weight(0, 1, 2), 30 * 35 * 15);
+    }
+}

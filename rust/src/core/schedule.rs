@@ -1,0 +1,554 @@
+//! The schedule compiler — the paper's contribution made explicit.
+//!
+//! A *schedule* maps (cell, term) → (outer step, thread lane).  This module
+//! builds:
+//!
+//! * [`SdpSchedule`] — the Fig. 2 S-DP pipeline (affine, always hazard-free
+//!   thanks to strictly-decreasing offsets; proved in `sdp::pipeline`
+//!   tests).
+//! * [`McmSchedule`] — the Fig. 8 MCM pipeline, in two variants:
+//!   [`McmVariant::PaperFaithful`] (the published schedule, which has
+//!   staleness hazards for `n ≥ 4` — DESIGN.md §1.1) and
+//!   [`McmVariant::Corrected`] (dataflow-delayed, hazard-free, same
+//!   pipeline shape).
+//!
+//! Schedules drive four executors: the native step-synchronous solvers
+//! ([`crate::sdp`], [`crate::mcm`]), the multi-threaded solvers, the SIMT
+//! GPU cost simulator ([`crate::simulator`]), and — encoded as a dense
+//! `i32[S, T, 8]` tensor — the Pallas schedule-executor kernel via PJRT
+//! ([`crate::runtime::engine`]).  The tensor layout matches
+//! `python/compile/schedule.py` exactly and is covered by golden-file
+//! cross-language tests.
+
+use crate::{Error, Result};
+
+/// Linearization of the triangular MCM table (Fig. 5): diagonal-major,
+/// 0-based.  Cell `(r, c)` with `d = c - r` lives at `offset(d) + r`.
+pub mod linear {
+    /// First linear index of diagonal `d`.
+    #[inline]
+    pub fn diag_offset(n: usize, d: usize) -> usize {
+        d * n - d * (d.saturating_sub(1)) / 2
+    }
+
+    /// Total number of cells, `n(n+1)/2`.
+    #[inline]
+    pub fn num_cells(n: usize) -> usize {
+        n * (n + 1) / 2
+    }
+
+    /// Linear index of cell `(r, c)`.
+    #[inline]
+    pub fn cell_index(n: usize, r: usize, c: usize) -> usize {
+        debug_assert!(r <= c && c < n);
+        diag_offset(n, c - r) + r
+    }
+
+    /// Inverse of [`cell_index`].
+    pub fn cell_coords(n: usize, idx: usize) -> (usize, usize) {
+        debug_assert!(idx < num_cells(n));
+        let mut d = 0;
+        while d + 1 < n && diag_offset(n, d + 1) <= idx {
+            d += 1;
+        }
+        let r = idx - diag_offset(n, d);
+        (r, r + d)
+    }
+}
+
+/// Flag values in the schedule tensor (shared with Python).
+pub const FLAG_INACTIVE: i32 = 0;
+pub const FLAG_FIRST: i32 = 1;
+pub const FLAG_COMBINE: i32 = 2;
+
+/// One scheduled term: thread-visible work for a single (cell, term) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Entry {
+    /// Linear index of the cell being combined into (write target).
+    pub tgt: u32,
+    /// Linear index of the left operand (substep-1 read).
+    pub l: u32,
+    /// Linear index of the right operand (substep-2 read).
+    pub r: u32,
+    /// Dims indices of the weight `p[pa]·p[pb]·p[pc]`.
+    pub pa: u32,
+    pub pb: u32,
+    pub pc: u32,
+    /// 1-based term number `j` (1 = overwrite, >1 = combine).
+    pub term: u32,
+}
+
+impl Entry {
+    pub fn is_first(&self) -> bool {
+        self.term == 1
+    }
+}
+
+/// Which MCM pipeline schedule to compile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum McmVariant {
+    /// Fig. 8 verbatim: cell `i` term `j` at outer step `i + j − 1`.
+    PaperFaithful,
+    /// Dataflow-delayed: every term waits until its operands are final.
+    Corrected,
+}
+
+impl McmVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            McmVariant::PaperFaithful => "faithful",
+            McmVariant::Corrected => "corrected",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<McmVariant> {
+        match s {
+            "faithful" | "paper" => Ok(McmVariant::PaperFaithful),
+            "corrected" | "fixed" => Ok(McmVariant::Corrected),
+            other => Err(Error::Schedule(format!("unknown variant '{other}'"))),
+        }
+    }
+}
+
+/// A compiled step-synchronous MCM pipeline schedule.
+#[derive(Debug, Clone)]
+pub struct McmSchedule {
+    pub n: usize,
+    pub variant: McmVariant,
+    /// `steps[s]` = the terms executed concurrently at outer step `s`.
+    pub steps: Vec<Vec<Entry>>,
+    /// Per-cell start step (`usize::MAX` for initial-diagonal cells).
+    pub start: Vec<usize>,
+}
+
+/// Terms of cell `(r, c)`: `(l, r, pa, pb, pc)` for `j = 1..=d`.
+/// Term `j` is `f(ST[(r, r+j-1)], ST[(r+j, c)])` weighted
+/// `p[r]·p[r+j]·p[c+1]` (§IV-B; verified against the paper's ST[13]/ST[12]
+/// worked example in tests).
+pub fn cell_terms(n: usize, r: usize, c: usize) -> Vec<(usize, usize, usize, usize, usize)> {
+    (1..=(c - r))
+        .map(|j| {
+            (
+                linear::cell_index(n, r, r + j - 1),
+                linear::cell_index(n, r + j, c),
+                r,
+                r + j,
+                c + 1,
+            )
+        })
+        .collect()
+}
+
+impl McmSchedule {
+    /// Compile a schedule for a chain of `n` matrices.
+    pub fn compile(n: usize, variant: McmVariant) -> McmSchedule {
+        let ncells = linear::num_cells(n);
+        let width = (n - 1).max(1);
+        let mut start = vec![usize::MAX; ncells];
+
+        match variant {
+            McmVariant::PaperFaithful => {
+                for x in n..ncells {
+                    start[x] = x - n;
+                }
+            }
+            McmVariant::Corrected => {
+                // Greedy dataflow delay in linear (diagonal-major) order;
+                // identical to python/compile/schedule.py::corrected.
+                let mut finalize = vec![-1i64; ncells];
+                let mut occupancy: std::collections::HashMap<usize, usize> =
+                    std::collections::HashMap::new();
+                for x in n..ncells {
+                    let (r, c) = linear::cell_coords(n, x);
+                    let d = c - r;
+                    let mut s0 = (x - n) as i64;
+                    for (j, (li, ri, _, _, _)) in cell_terms(n, r, c).iter().enumerate() {
+                        let j = j as i64; // j = term-1
+                        s0 = s0.max(finalize[*li] + 1 - j);
+                        s0 = s0.max(finalize[*ri] + 1 - j);
+                    }
+                    let mut s0 = s0 as usize;
+                    // thread-count capacity: at most `width` terms per step
+                    while (0..d).any(|j| occupancy.get(&(s0 + j)).copied().unwrap_or(0) >= width) {
+                        s0 += 1;
+                    }
+                    for j in 0..d {
+                        *occupancy.entry(s0 + j).or_insert(0) += 1;
+                    }
+                    start[x] = s0;
+                    finalize[x] = (s0 + d - 1) as i64;
+                }
+            }
+        }
+
+        // materialize the per-step term lists
+        let mut steps_map: std::collections::BTreeMap<usize, Vec<Entry>> =
+            std::collections::BTreeMap::new();
+        for x in n..ncells {
+            let (r, c) = linear::cell_coords(n, x);
+            for (j, (li, ri, pa, pb, pc)) in cell_terms(n, r, c).iter().enumerate() {
+                let s = start[x] + j;
+                steps_map.entry(s).or_default().push(Entry {
+                    tgt: x as u32,
+                    l: *li as u32,
+                    r: *ri as u32,
+                    pa: *pa as u32,
+                    pb: *pb as u32,
+                    pc: *pc as u32,
+                    term: (j + 1) as u32,
+                });
+            }
+        }
+        let num_steps = steps_map.keys().next_back().map(|s| s + 1).unwrap_or(0);
+        let mut steps = vec![Vec::new(); num_steps];
+        for (s, mut entries) in steps_map {
+            entries.sort_by_key(|e| e.term);
+            steps[s] = entries;
+        }
+        McmSchedule {
+            n,
+            variant,
+            steps,
+            start,
+        }
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Widest step (must be ≤ n−1: the paper's thread count).
+    pub fn max_width(&self) -> usize {
+        self.steps.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+
+    /// Step after which linear cell `x` is final (`None` = initial cell,
+    /// final from the start).
+    pub fn finalize_step(&self, x: usize) -> Option<usize> {
+        if x < self.n {
+            return None;
+        }
+        let (r, c) = linear::cell_coords(self.n, x);
+        Some(self.start[x] + (c - r) - 1)
+    }
+
+    /// Total scheduled terms (= Σ_d d·(n−d), the DP work).
+    pub fn num_terms(&self) -> usize {
+        self.steps.iter().map(|s| s.len()).sum()
+    }
+
+    /// Encode as the dense `i32[S, T, 8]` tensor the Pallas executor and
+    /// the numpy oracle consume; pads with inactive lanes.
+    pub fn to_tensor(&self, num_steps: usize, width: usize) -> Result<Vec<i32>> {
+        if num_steps < self.num_steps() || width < self.max_width() {
+            return Err(Error::Schedule(format!(
+                "tensor {}x{} cannot hold schedule {}x{}",
+                num_steps,
+                width,
+                self.num_steps(),
+                self.max_width()
+            )));
+        }
+        let mut out = vec![0i32; num_steps * width * 8];
+        for (s, entries) in self.steps.iter().enumerate() {
+            for (lane, e) in entries.iter().enumerate() {
+                let base = (s * width + lane) * 8;
+                out[base] = e.tgt as i32;
+                out[base + 1] = e.l as i32;
+                out[base + 2] = e.r as i32;
+                out[base + 3] = e.pa as i32;
+                out[base + 4] = e.pb as i32;
+                out[base + 5] = e.pc as i32;
+                out[base + 6] = if e.is_first() { FLAG_FIRST } else { FLAG_COMBINE };
+                out[base + 7] = e.term as i32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The Fig. 2 S-DP pipeline schedule, kept implicit (it is affine): at
+/// outer step `i`, thread `j ∈ [1, k]` works on `i_j = i − j + 1` applying
+/// offset `a_j`.  This type only materializes per-step access lists for
+/// the conflict analyzer, the trace printer, and the GPU simulator.
+#[derive(Debug, Clone)]
+pub struct SdpSchedule {
+    pub n: usize,
+    pub offsets: Vec<i64>,
+}
+
+/// One thread's work at one S-DP pipeline step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SdpAccess {
+    /// Thread index `j` (1-based, as in the paper).
+    pub thread: usize,
+    /// Element written: `i_j = i − j + 1`.
+    pub tgt: usize,
+    /// Element read: `i_j − a_j`.
+    pub src: usize,
+    /// Whether this is the thread-1 overwrite or a `⊗`-combine.
+    pub first: bool,
+}
+
+impl SdpSchedule {
+    pub fn new(n: usize, offsets: Vec<i64>) -> SdpSchedule {
+        SdpSchedule { n, offsets }
+    }
+
+    pub fn k(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn a1(&self) -> usize {
+        self.offsets[0] as usize
+    }
+
+    /// Outer step range: `i = a_1 ..= n + k − 2` (paper Fig. 2).
+    pub fn step_range(&self) -> std::ops::RangeInclusive<usize> {
+        self.a1()..=(self.n + self.k() - 2)
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.n + self.k() - 1 - self.a1()
+    }
+
+    /// The accesses performed at outer step `i`.
+    pub fn step(&self, i: usize) -> Vec<SdpAccess> {
+        let mut out = Vec::with_capacity(self.k());
+        for (idx, &a) in self.offsets.iter().enumerate() {
+            let j = idx + 1;
+            if j > i + 1 {
+                break;
+            }
+            let ij = i - j + 1;
+            if ij >= self.a1() && ij < self.n {
+                out.push(SdpAccess {
+                    thread: j,
+                    tgt: ij,
+                    src: ij - a as usize,
+                    first: j == 1,
+                });
+            }
+        }
+        out
+    }
+
+    /// Step after which element `x ≥ a_1` is final: `x + k − 1`.
+    pub fn finalize_step(&self, x: usize) -> Option<usize> {
+        if x < self.a1() {
+            None
+        } else {
+            Some(x + self.k() - 1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    // ---- linearization (Fig. 5) ------------------------------------------
+
+    #[test]
+    fn fig5_numbering() {
+        // paper numbers cells 1..15 for n = 5; we are 0-based
+        let n = 5;
+        let first_diag: Vec<usize> = (0..5).map(|r| linear::cell_index(n, r, r) + 1).collect();
+        assert_eq!(first_diag, vec![1, 2, 3, 4, 5]);
+        let second: Vec<usize> = (0..4).map(|r| linear::cell_index(n, r, r + 1) + 1).collect();
+        assert_eq!(second, vec![6, 7, 8, 9]);
+        assert_eq!(linear::cell_index(n, 0, 4) + 1, 15);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        forall("linear roundtrip", 200, |g| {
+            let n = g.usize(1..50);
+            let idx = g.usize(0..linear::num_cells(n));
+            let (r, c) = linear::cell_coords(n, idx);
+            if r <= c && c < n && linear::cell_index(n, r, c) == idx {
+                Ok(())
+            } else {
+                Err(format!("n={n} idx={idx} -> ({r},{c})"))
+            }
+        });
+    }
+
+    #[test]
+    fn fig6_st13_terms() {
+        // ST[13] = f(ST[1],ST[11]) ↓ f(ST[6],ST[8]) ↓ f(ST[10],ST[4])
+        let n = 5;
+        let (r, c) = linear::cell_coords(n, 12);
+        let got: Vec<(usize, usize)> = cell_terms(n, r, c)
+            .iter()
+            .map(|&(l, rr, _, _, _)| (l + 1, rr + 1))
+            .collect();
+        assert_eq!(got, vec![(1, 11), (6, 8), (10, 4)]);
+    }
+
+    #[test]
+    fn fig6_st12_terms() {
+        // ST[12] = f(ST[3],ST[9]) ↓ f(ST[8],ST[5])
+        let n = 5;
+        let (r, c) = linear::cell_coords(n, 11);
+        let got: Vec<(usize, usize)> = cell_terms(n, r, c)
+            .iter()
+            .map(|&(l, rr, _, _, _)| (l + 1, rr + 1))
+            .collect();
+        assert_eq!(got, vec![(3, 9), (8, 5)]);
+    }
+
+    // ---- faithful schedule -------------------------------------------------
+
+    #[test]
+    fn faithful_step_count_matches_paper_loop() {
+        // outer loop: i = n+1 ..= n(n+1)/2 + n − 2  →  N − 3 + 1 steps (n=5: 13)
+        let s = McmSchedule::compile(5, McmVariant::PaperFaithful);
+        assert_eq!(s.num_steps(), 13);
+    }
+
+    #[test]
+    fn faithful_start_is_affine() {
+        let s = McmSchedule::compile(7, McmVariant::PaperFaithful);
+        for x in 7..linear::num_cells(7) {
+            assert_eq!(s.start[x], x - 7);
+        }
+    }
+
+    #[test]
+    fn width_bounded_by_thread_count() {
+        for n in 2..12 {
+            for v in [McmVariant::PaperFaithful, McmVariant::Corrected] {
+                let s = McmSchedule::compile(n, v);
+                assert!(
+                    s.max_width() <= n - 1 || n == 1,
+                    "n={n} {v:?} width {}",
+                    s.max_width()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_term_scheduled_once() {
+        forall("terms once", 30, |g| {
+            let n = g.usize(2..16);
+            let v = if g.bool() {
+                McmVariant::PaperFaithful
+            } else {
+                McmVariant::Corrected
+            };
+            let s = McmSchedule::compile(n, v);
+            let mut seen = std::collections::HashSet::new();
+            for entries in &s.steps {
+                for e in entries {
+                    if !seen.insert((e.tgt, e.term)) {
+                        return Err(format!("duplicate ({}, {})", e.tgt, e.term));
+                    }
+                }
+            }
+            let want: usize = (1..n).map(|d| d * (n - d)).sum();
+            if seen.len() == want {
+                Ok(())
+            } else {
+                Err(format!("n={n}: {} terms != {want}", seen.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn terms_of_a_cell_on_consecutive_steps() {
+        for v in [McmVariant::PaperFaithful, McmVariant::Corrected] {
+            let s = McmSchedule::compile(9, v);
+            let mut pos = std::collections::HashMap::new();
+            for (step, entries) in s.steps.iter().enumerate() {
+                for e in entries {
+                    pos.insert((e.tgt, e.term), step);
+                }
+            }
+            for (&(cell, term), &step) in &pos {
+                if let Some(&next) = pos.get(&(cell, term + 1)) {
+                    assert_eq!(next, step + 1, "{v:?} cell {cell} term {term}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrected_steps_still_quadratic() {
+        for n in [8, 16, 32, 64] {
+            let s = McmSchedule::compile(n, McmVariant::Corrected);
+            assert!(
+                s.num_steps() <= 3 * linear::num_cells(n) / 2,
+                "n={n}: {} steps",
+                s.num_steps()
+            );
+        }
+    }
+
+    #[test]
+    fn tensor_layout_and_padding() {
+        let s = McmSchedule::compile(5, McmVariant::Corrected);
+        let (steps, width) = (s.num_steps() + 2, s.max_width() + 1);
+        let t = s.to_tensor(steps, width).unwrap();
+        assert_eq!(t.len(), steps * width * 8);
+        // padded tail is all inactive
+        let last = &t[(steps - 1) * width * 8..];
+        assert!(last.iter().all(|&v| v == 0));
+        // too-small tensor rejected
+        assert!(s.to_tensor(1, width).is_err());
+    }
+
+    #[test]
+    fn finalize_step_matches_start_plus_d() {
+        let s = McmSchedule::compile(6, McmVariant::Corrected);
+        assert_eq!(s.finalize_step(2), None); // initial cell
+        for x in 6..linear::num_cells(6) {
+            let (r, c) = linear::cell_coords(6, x);
+            assert_eq!(s.finalize_step(x), Some(s.start[x] + (c - r) - 1));
+        }
+    }
+
+    // ---- S-DP schedule (Fig. 2 / Fig. 3) -----------------------------------
+
+    #[test]
+    fn fig3_execution_example() {
+        // k = 3, a = (5, 3, 1), initial values in ST[0..5)
+        let s = SdpSchedule::new(8, vec![5, 3, 1]);
+        // Step 1 of the paper = outer i = 5: only thread 1, ST[5] ← ST[0]
+        let step1 = s.step(5);
+        assert_eq!(
+            step1,
+            vec![SdpAccess { thread: 1, tgt: 5, src: 0, first: true }]
+        );
+        // Step 2 = i = 6: thread 1 on ST[6], thread 2 on ST[5]
+        let step2 = s.step(6);
+        assert_eq!(step2.len(), 2);
+        assert_eq!((step2[0].tgt, step2[0].src), (6, 1));
+        assert_eq!((step2[1].tgt, step2[1].src), (5, 2));
+        // Step 3 = i = 7: all three threads on ST[7], ST[6], ST[5];
+        // ST[5] becomes final after this step.
+        let step3 = s.step(7);
+        assert_eq!(step3.len(), 3);
+        assert_eq!((step3[2].tgt, step3[2].src), (5, 4));
+        assert_eq!(s.finalize_step(5), Some(7));
+    }
+
+    #[test]
+    fn sdp_step_range_and_count() {
+        let s = SdpSchedule::new(10, vec![4, 2, 1]);
+        assert_eq!(s.step_range(), 4..=11);
+        assert_eq!(s.num_steps(), 8);
+    }
+
+    #[test]
+    fn fig4_worst_case_reads_collide() {
+        // a = (4, 3, 2, 1): all threads read ST[i - 4] at step i
+        let s = SdpSchedule::new(12, vec![4, 3, 2, 1]);
+        let accesses = s.step(8);
+        assert_eq!(accesses.len(), 4);
+        let srcs: Vec<usize> = accesses.iter().map(|a| a.src).collect();
+        assert!(srcs.iter().all(|&x| x == 4), "{srcs:?}");
+    }
+}

@@ -1,0 +1,110 @@
+//! The semigroup operator `⊗` of Definition 1.
+//!
+//! The paper's experiments use `min`; Fibonacci (its own example) uses `+`.
+//! We carry the operator as a small enum rather than a generic parameter so
+//! problem instances stay wire-encodable for the coordinator and route
+//! directly to the matching AOT artifact.
+
+use crate::{Error, Result};
+
+/// A semigroup binary operator over `i64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Min,
+    Max,
+    Add,
+}
+
+impl Op {
+    /// Apply the operator.
+    #[inline(always)]
+    pub fn apply(self, a: i64, b: i64) -> i64 {
+        match self {
+            Op::Min => a.min(b),
+            Op::Max => a.max(b),
+            Op::Add => a.wrapping_add(b),
+        }
+    }
+
+    /// Fold a non-empty slice.
+    pub fn fold(self, xs: &[i64]) -> i64 {
+        assert!(!xs.is_empty(), "semigroup fold needs at least one operand");
+        xs[1..].iter().fold(xs[0], |acc, &x| self.apply(acc, x))
+    }
+
+    /// Wire / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Min => "min",
+            Op::Max => "max",
+            Op::Add => "add",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Op> {
+        match s {
+            "min" => Ok(Op::Min),
+            "max" => Ok(Op::Max),
+            "add" | "+" | "sum" => Ok(Op::Add),
+            other => Err(Error::InvalidProblem(format!("unknown operator '{other}'"))),
+        }
+    }
+
+    pub const ALL: [Op; 3] = [Op::Min, Op::Max, Op::Add];
+}
+
+impl std::fmt::Display for Op {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn apply_matches_std() {
+        assert_eq!(Op::Min.apply(3, -4), -4);
+        assert_eq!(Op::Max.apply(3, -4), 3);
+        assert_eq!(Op::Add.apply(3, -4), -1);
+    }
+
+    #[test]
+    fn fold_left() {
+        assert_eq!(Op::Min.fold(&[5, 2, 9]), 2);
+        assert_eq!(Op::Add.fold(&[1, 2, 3, 4]), 10);
+        assert_eq!(Op::Max.fold(&[7]), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one operand")]
+    fn fold_empty_panics() {
+        Op::Min.fold(&[]);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for op in Op::ALL {
+            assert_eq!(Op::parse(op.name()).unwrap(), op);
+        }
+        assert!(Op::parse("xor").is_err());
+    }
+
+    #[test]
+    fn associativity_property() {
+        // the pipeline's correctness leans on ⊗ associativity — check it
+        forall("semigroup associative", 300, |g| {
+            let op = *g.choose(&Op::ALL);
+            let (a, b, c) = (g.i64(-1000..1000), g.i64(-1000..1000), g.i64(-1000..1000));
+            let lhs = op.apply(op.apply(a, b), c);
+            let rhs = op.apply(a, op.apply(b, c));
+            if lhs == rhs {
+                Ok(())
+            } else {
+                Err(format!("{op}: ({a}⊗{b})⊗{c} = {lhs} ≠ {rhs}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,71 @@
+//! # pipedp — pipeline dynamic programming
+//!
+//! A reproduction of *“Solving Dynamic Programming Problem by Pipeline
+//! Implementation on GPU”* (Matsumae & Miyazaki, IJACSA 2020) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: schedule
+//!   compilation ([`core::schedule`]), conflict/hazard analysis
+//!   ([`core::conflict`]), native step-synchronous and multi-threaded
+//!   executors ([`sdp`], [`mcm`]), a cycle-level SIMT GPU cost model
+//!   ([`simulator`]) standing in for the paper's GTX TITAN Black, and a
+//!   serving coordinator ([`coordinator`]) with routing, dynamic batching
+//!   and a worker pool.
+//! * **Layer 2/1 (build time)** — JAX graphs calling Pallas kernels, AOT
+//!   lowered to HLO text and executed from Rust through PJRT
+//!   ([`runtime`]); Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record of every table and figure.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use pipedp::core::problem::SdpProblem;
+//! use pipedp::core::semigroup::Op;
+//! use pipedp::sdp;
+//!
+//! // Fibonacci is the S-DP instance k=2, a=(2,1), ⊗=+ (paper §II-A).
+//! let p = SdpProblem::new(16, vec![2, 1], Op::Add, vec![1, 1]).unwrap();
+//! let st = sdp::pipeline::solve(&p);
+//! assert_eq!(st[15], 987);
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod core;
+pub mod mcm;
+pub mod prop;
+pub mod runtime;
+pub mod sdp;
+pub mod simulator;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("invalid problem: {0}")]
+    InvalidProblem(String),
+    #[error("schedule error: {0}")]
+    Schedule(String),
+    #[error("artifact registry: {0}")]
+    Registry(String),
+    #[error("runtime: {0}")]
+    Runtime(String),
+    #[error("server: {0}")]
+    Server(String),
+    #[error("json: {0}")]
+    Json(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,420 @@
+//! `pipedp` — command-line entrypoint for the pipeline-DP system.
+//!
+//! Subcommands:
+//!   solve-sdp   solve an S-DP instance (native or XLA backend)
+//!   solve-mcm   solve a matrix-chain instance (+ parenthesization)
+//!   trace       print the Fig. 3 / Fig. 7 execution traces
+//!   schedule    compile an MCM schedule and emit it as JSON
+//!   verify      conflict-freedom (Thm. 1) + staleness-hazard report
+//!   simulate    price the Table I bands on the GPU cost model
+//!   serve       run the coordinator server
+//!   client      send one request to a running server
+//!   info        artifact registry and platform info
+
+use pipedp::coordinator::request::{Backend, Request, RequestBody};
+use pipedp::coordinator::server::{Client, Config, Server};
+use pipedp::core::conflict;
+use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::schedule::{McmSchedule, McmVariant};
+use pipedp::core::semigroup::Op;
+use pipedp::simulator::{calibrate, GpuModel};
+use pipedp::util::cli::Args;
+use pipedp::util::json::Json;
+use pipedp::util::table::Table;
+use pipedp::Result;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let result = match cmd.as_str() {
+        "solve-sdp" => cmd_solve_sdp(argv),
+        "solve-mcm" => cmd_solve_mcm(argv),
+        "trace" => cmd_trace(argv),
+        "schedule" => cmd_schedule(argv),
+        "verify" => cmd_verify(argv),
+        "simulate" => cmd_simulate(argv),
+        "serve" => cmd_serve(argv),
+        "client" => cmd_client(argv),
+        "info" => cmd_info(argv),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("pipedp: {e}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "pipedp <subcommand> [flags]
+
+  solve-sdp   --n N --offsets 7,5,2 --op min [--init 1,2,…|--seed S] [--backend auto|native|xla]
+  solve-mcm   --dims 30,35,15,5,10,20,25 [--variant corrected|faithful] [--backend …] [--parens]
+  trace       --kind sdp|mcm [--n N] [--offsets …] [--variant …] [--steps S]
+  schedule    --n N --variant corrected|faithful [--json]
+  verify      [--max-n N]
+  simulate    [--samples S]
+  serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T]
+  client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats]
+  info";
+
+fn parse_backend(args: &Args) -> Result<Backend> {
+    Backend::parse(args.get("backend").unwrap_or("auto"))
+}
+
+fn build_sdp(args: &Args) -> Result<SdpProblem> {
+    let n = args.get_usize("n")?;
+    let offsets = args.get_i64_list("offsets")?;
+    let op = Op::parse(args.get("op").unwrap_or("min"))?;
+    let a1 = *offsets.first().unwrap_or(&0) as usize;
+    let init = match args.get("init") {
+        Some(_) => args.get_i64_list("init")?,
+        None => {
+            let seed = args.get("seed").unwrap_or("42").parse().unwrap_or(42);
+            let mut rng = pipedp::util::rng::Rng::seeded(seed);
+            (0..a1).map(|_| rng.range(0..1000)).collect()
+        }
+    };
+    SdpProblem::new(n, offsets, op, init)
+}
+
+fn cmd_solve_sdp(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("solve-sdp", "solve an S-DP instance")
+        .flag("n", "table size", None)
+        .flag("offsets", "comma-separated offsets a_1>…>a_k", None)
+        .flag("op", "semigroup operator (min|max|add)", Some("min"))
+        .flag("init", "comma-separated preset values (len a_1)", None)
+        .flag("seed", "random init seed when --init absent", Some("42"))
+        .flag("backend", "auto|native|xla", Some("auto"))
+        .boolflag("full", "print the whole table")
+        .parse(argv)?;
+    let p = build_sdp(&args)?;
+    let backend = parse_backend(&args)?;
+    let (st, served) = match backend {
+        Backend::Xla => {
+            let engine = pipedp::runtime::engine::Engine::load()?;
+            (engine.solve_sdp(&p)?, "xla")
+        }
+        _ => (pipedp::sdp::pipeline::solve(&p), "native"),
+    };
+    if args.get_bool("full") {
+        println!("{st:?}");
+    }
+    println!(
+        "ST[{}] = {}   (n={} k={} op={} backend={served})",
+        p.n - 1,
+        st[p.n - 1],
+        p.n,
+        p.k(),
+        p.op
+    );
+    Ok(())
+}
+
+fn cmd_solve_mcm(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("solve-mcm", "solve a matrix-chain instance")
+        .flag("dims", "comma-separated dimensions p0,…,pn", None)
+        .flag("variant", "corrected|faithful", Some("corrected"))
+        .flag("backend", "auto|native|xla", Some("auto"))
+        .boolflag("parens", "print the optimal parenthesization")
+        .boolflag("full", "print the whole linearized table")
+        .parse(argv)?;
+    let p = McmProblem::new(args.get_i64_list("dims")?)?;
+    let variant = McmVariant::parse(args.get_str("variant")?)?;
+    let backend = parse_backend(&args)?;
+    let (st, served) = match backend {
+        Backend::Xla => {
+            let engine = pipedp::runtime::engine::Engine::load()?;
+            match variant {
+                McmVariant::Corrected => (engine.solve_mcm(&p)?, "xla:diagonal"),
+                McmVariant::PaperFaithful => {
+                    (engine.solve_mcm_pipeline(&p, variant)?, "xla:pipeline")
+                }
+            }
+        }
+        _ => (pipedp::mcm::pipeline::solve(&p, variant), "native"),
+    };
+    println!(
+        "optimal cost = {}   (n={} variant={} backend={served})",
+        st.last().unwrap(),
+        p.n(),
+        variant.name()
+    );
+    if variant == McmVariant::PaperFaithful {
+        let truth = pipedp::mcm::seq::cost(&p);
+        if *st.last().unwrap() != truth {
+            println!(
+                "⚠ published schedule mis-computed this instance: true optimum = {truth} \
+                 (staleness hazard, DESIGN.md §1.1)"
+            );
+        }
+    }
+    if args.get_bool("parens") {
+        println!(
+            "parenthesization: {}",
+            pipedp::mcm::seq::parenthesization(&p)
+        );
+    }
+    if args.get_bool("full") {
+        println!("{st:?}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("trace", "print pipeline execution traces")
+        .flag("kind", "sdp|mcm", Some("sdp"))
+        .flag("n", "size", Some("8"))
+        .flag("offsets", "S-DP offsets", Some("5,3,1"))
+        .flag("dims", "MCM dims (default: CLRS example)", None)
+        .flag("variant", "corrected|faithful", Some("corrected"))
+        .flag("steps", "max steps to print", Some("20"))
+        .parse(argv)?;
+    let steps = args.get_usize("steps")?;
+    match args.get_str("kind")? {
+        "sdp" => {
+            let offsets = args.get_i64_list("offsets")?;
+            let n = args.get_usize("n")?;
+            let a1 = offsets[0] as usize;
+            let p = SdpProblem::new(n, offsets, Op::Min, vec![0; a1])?;
+            print!("{}", pipedp::sdp::pipeline::trace(&p, steps));
+        }
+        "mcm" => {
+            let p = match args.get("dims") {
+                Some(_) => McmProblem::new(args.get_i64_list("dims")?)?,
+                None => McmProblem::clrs(),
+            };
+            let variant = McmVariant::parse(args.get_str("variant")?)?;
+            print!("{}", pipedp::mcm::pipeline::trace(&p, variant, steps));
+        }
+        other => {
+            return Err(pipedp::Error::InvalidProblem(format!(
+                "unknown trace kind '{other}'"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_schedule(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("schedule", "compile an MCM schedule")
+        .flag("n", "number of matrices", None)
+        .flag("variant", "corrected|faithful", Some("corrected"))
+        .boolflag("json", "emit the full schedule as JSON")
+        .parse(argv)?;
+    let n = args.get_usize("n")?;
+    let variant = McmVariant::parse(args.get_str("variant")?)?;
+    let sched = McmSchedule::compile(n, variant);
+    if args.get_bool("json") {
+        println!("{}", schedule_json(&sched).to_string());
+    } else {
+        let report = conflict::analyze_mcm(&sched);
+        let hazards = conflict::mcm_hazards(&sched);
+        println!(
+            "n={n} variant={} steps={} width={} terms={} conflicts={} hazards={}",
+            variant.name(),
+            sched.num_steps(),
+            sched.max_width(),
+            sched.num_terms(),
+            report.conflicted_substeps,
+            hazards.len()
+        );
+    }
+    Ok(())
+}
+
+/// JSON encoding shared with the Python golden cross-checks
+/// (python/tests/test_golden.py regenerates the same structure).
+fn schedule_json(sched: &McmSchedule) -> Json {
+    Json::obj(vec![
+        ("n", Json::int(sched.n as i64)),
+        ("variant", Json::str(sched.variant.name())),
+        ("num_steps", Json::int(sched.num_steps() as i64)),
+        (
+            "steps",
+            Json::arr(sched.steps.iter().map(|entries| {
+                Json::arr(entries.iter().map(|e| {
+                    Json::arr(
+                        [e.tgt, e.l, e.r, e.pa, e.pb, e.pc, e.term]
+                            .iter()
+                            .map(|&v| Json::int(v as i64)),
+                    )
+                }))
+            })),
+        ),
+    ])
+}
+
+fn cmd_verify(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("verify", "Theorem 1 + hazard report")
+        .flag("max-n", "largest chain length to check", Some("24"))
+        .parse(argv)?;
+    let max_n = args.get_usize("max-n")?;
+    let mut t = Table::new(vec![
+        "n",
+        "variant",
+        "steps",
+        "conflicts (Thm.1)",
+        "staleness hazards",
+        "matches DP",
+    ]);
+    let mut rng = pipedp::util::rng::Rng::seeded(1);
+    for n in 2..=max_n {
+        for variant in [McmVariant::PaperFaithful, McmVariant::Corrected] {
+            let sched = McmSchedule::compile(n, variant);
+            let report = conflict::analyze_mcm(&sched);
+            let hazards = conflict::mcm_hazards(&sched);
+            let p = McmProblem::random(&mut rng, n, 30);
+            let matches = pipedp::mcm::pipeline::execute(&p, &sched)
+                == pipedp::mcm::seq::linear_table(&p);
+            t.row(vec![
+                n.to_string(),
+                variant.name().into(),
+                sched.num_steps().to_string(),
+                report.conflicted_substeps.to_string(),
+                hazards.len().to_string(),
+                if matches { "yes".into() } else { "NO".into() },
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "\nTheorem 1 (conflict-freedom) holds for both variants; the published\n\
+         (faithful) schedule has staleness hazards for n ≥ 4 and mis-computes\n\
+         some instances — the corrected schedule never does (DESIGN.md §1.1)."
+    );
+    Ok(())
+}
+
+fn cmd_simulate(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("simulate", "price Table I on the GPU cost model")
+        .flag("samples", "random draws per band", Some("10"))
+        .parse(argv)?;
+    let samples = args.get_usize("samples")?;
+    let model = GpuModel::default();
+    let mut t = Table::new(vec![
+        "band",
+        "SEQ paper",
+        "SEQ model",
+        "NAIVE paper",
+        "NAIVE model",
+        "PIPE paper",
+        "PIPE model",
+    ]);
+    for (name, paper, modeled) in calibrate::shape_report(&model, samples) {
+        t.row(vec![
+            name,
+            format!("{:.0}", paper[0]),
+            format!("{:.0}", modeled[0]),
+            format!("{:.0}", paper[1]),
+            format!("{:.0}", modeled[1]),
+            format!("{:.0}", paper[2]),
+            format!("{:.0}", modeled[2]),
+        ]);
+    }
+    println!("Table I reproduction (ms, mean of {samples} draws/band):");
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("serve", "run the coordinator server")
+        .flag("addr", "bind address", Some("127.0.0.1:7070"))
+        .flag("workers", "worker threads", Some("4"))
+        .flag(
+            "max-batch",
+            "dynamic batching: max requests per dispatch",
+            Some("8"),
+        )
+        .flag("max-wait-ms", "dynamic batching: window in ms", Some("2"))
+        .parse(argv)?;
+    let cfg = Config {
+        addr: args.get_str("addr")?.to_string(),
+        workers: args.get_usize("workers")?,
+        policy: pipedp::coordinator::batcher::Policy {
+            max_batch: args.get_usize("max-batch")?,
+            max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms")? as u64),
+        },
+        allow_engineless: true,
+        warm: true,
+    };
+    let server = Server::start(cfg)?;
+    println!("pipedp server listening on {}", server.local_addr);
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("client", "send one request to a server")
+        .flag("addr", "server address", Some("127.0.0.1:7070"))
+        .flag("n", "S-DP table size", None)
+        .flag("offsets", "S-DP offsets", None)
+        .flag("op", "S-DP operator", Some("min"))
+        .flag("seed", "S-DP init seed", Some("42"))
+        .flag("dims", "MCM dims", None)
+        .flag("variant", "MCM variant", Some("corrected"))
+        .flag("backend", "auto|native|xla", Some("auto"))
+        .boolflag("stats", "fetch server stats instead")
+        .parse(argv)?;
+    let mut client = Client::connect(args.get_str("addr")?)?;
+    let backend = parse_backend(&args)?;
+    let body = if args.get_bool("stats") {
+        RequestBody::Stats
+    } else if args.get("dims").is_some() {
+        RequestBody::Mcm {
+            problem: McmProblem::new(args.get_i64_list("dims")?)?,
+            variant: McmVariant::parse(args.get_str("variant")?)?,
+        }
+    } else {
+        RequestBody::Sdp(build_sdp(&args)?)
+    };
+    let resp = client.call(Request {
+        id: 0,
+        body,
+        backend,
+        full: false,
+    })?;
+    if let Some(stats) = resp.stats {
+        println!("{}", stats.to_string());
+    } else if resp.ok {
+        println!("value = {} (served_by {})", resp.value, resp.served_by);
+    } else {
+        println!("error: {}", resp.error.unwrap_or_default());
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let _args = Args::new("info", "registry + platform info").parse(argv)?;
+    match pipedp::runtime::engine::Engine::load() {
+        Ok(engine) => {
+            println!("artifacts: {}", pipedp::runtime::artifacts_dir().display());
+            let mut t = Table::new(vec!["artifact", "kind", "algo", "op", "n", "k", "batch"]);
+            for a in &engine.registry.artifacts {
+                t.row(vec![
+                    a.name.clone(),
+                    format!("{:?}", a.kind),
+                    a.algo.clone(),
+                    a.op.name().into(),
+                    a.n.to_string(),
+                    a.k.to_string(),
+                    a.batch.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        Err(e) => println!("no artifact registry: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Matrix-chain multiplication (§IV): the paper's showcase DP problem.
+//!
+//! * [`seq`] — classic `O(n³)` DP (+ parenthesization reconstruction); the
+//!   oracle.
+//! * [`diagonal`] — diagonal-wavefront parallel baseline.
+//! * [`pipeline`] — the Fig. 8 pipeline executed over compiled
+//!   [`crate::core::schedule::McmSchedule`]s (published-faithful and
+//!   corrected variants), step-synchronous and multi-threaded.
+
+pub mod diagonal;
+pub mod pipeline;
+pub mod seq;
+pub mod triangulation;

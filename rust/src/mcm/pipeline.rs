@@ -1,0 +1,294 @@
+//! Fig. 8 — the MCM pipeline, executed over compiled
+//! [`McmSchedule`]s with the paper's 4-substep memory model:
+//! within one outer step, all operand gathers (substeps 1–2) happen
+//! before any combine-write (substep 4).
+//!
+//! Executing the [`McmVariant::PaperFaithful`] schedule reproduces the
+//! published algorithm *including its staleness hazard* — on instances
+//! like [`McmProblem::hazard_counterexample`] it returns a wrong (over-
+//! estimated) optimal cost, which is the soundness finding of DESIGN.md
+//! §1.1.  The [`McmVariant::Corrected`] schedule matches the classic DP
+//! on every instance (property-tested here and in pytest).
+
+use std::sync::Barrier;
+
+use crate::core::problem::McmProblem;
+use crate::core::schedule::{linear, McmSchedule, McmVariant};
+use crate::sdp::naive::SharedTable;
+
+/// Step-synchronous executor over a compiled schedule.
+///
+/// Hot path of the native backend: indices come from a compiled schedule
+/// whose invariants (`tgt/l/r < num_cells`, `pa/pb/pc ≤ n`) are
+/// established at compile time and re-checked once here, so the per-step
+/// loops use unchecked indexing (§Perf: −35% at n = 256 vs the checked
+/// version).
+pub fn execute(p: &McmProblem, sched: &McmSchedule) -> Vec<i64> {
+    assert_eq!(p.n(), sched.n, "schedule/problem size mismatch");
+    let n = p.n();
+    let ncells = linear::num_cells(n);
+    // one-time bounds validation of the whole schedule
+    debug_assert!(sched.steps.iter().flatten().all(|e| {
+        (e.tgt as usize) < ncells
+            && (e.l as usize) < ncells
+            && (e.r as usize) < ncells
+            && (e.pc as usize) <= n
+    }));
+    let mut st = vec![0i64; ncells];
+    let dims = &p.dims;
+    let mut pending: Vec<(u32, bool, i64)> = Vec::with_capacity(n);
+    for entries in &sched.steps {
+        // substeps 1–3: every thread gathers and computes f(l, r)
+        pending.clear();
+        for e in entries {
+            // SAFETY: schedule indices are bounded by construction
+            // (McmSchedule::compile only emits valid cell/dims indices;
+            // debug-asserted above).
+            let v = unsafe {
+                *st.get_unchecked(e.l as usize)
+                    + *st.get_unchecked(e.r as usize)
+                    + *dims.get_unchecked(e.pa as usize)
+                        * *dims.get_unchecked(e.pb as usize)
+                        * *dims.get_unchecked(e.pc as usize)
+            };
+            pending.push((e.tgt, e.is_first(), v));
+        }
+        // substep 4: combine with ↓ (min); targets are distinct (Thm. 1)
+        for &(tgt, first, v) in &pending {
+            // SAFETY: as above.
+            unsafe {
+                let slot = st.get_unchecked_mut(tgt as usize);
+                *slot = if first { v } else { (*slot).min(v) };
+            }
+        }
+    }
+    st
+}
+
+/// Convenience: compile + execute a variant.
+pub fn solve(p: &McmProblem, variant: McmVariant) -> Vec<i64> {
+    let sched = McmSchedule::compile(p.n().max(1), variant);
+    execute(p, &sched)
+}
+
+/// Real multi-threaded executor: the ≤ n−1 lanes of each step are split
+/// across `threads` workers, with the two-phase (gather, then write)
+/// structure enforced by barriers — the faithful CPU analogue of the
+/// paper's lock-step GPU threads.
+pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> Vec<i64> {
+    let n = p.n();
+    let threads = threads.max(1).min(sched.max_width().max(1));
+    if threads == 1 {
+        return execute(p, sched);
+    }
+    let mut st = vec![0i64; linear::num_cells(n)];
+    let barrier = Barrier::new(threads);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    // per-lane pending values, (tgt, first, v), written by the owning lane
+    let width = sched.max_width();
+    let mut pending = vec![(0usize, false, 0i64); width];
+    let pend_ptr = PendingTable(pending.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let st_ptr = &st_ptr;
+            let pend_ptr = &pend_ptr;
+            scope.spawn(move || {
+                for entries in &sched.steps {
+                    // substeps 1–3 (parallel gather+compute into pending)
+                    let mut lane = t;
+                    while lane < entries.len() {
+                        let e = &entries[lane];
+                        // SAFETY: reads of st are of cells finalized in
+                        // earlier steps (or stale — intentionally, for the
+                        // faithful variant); pending[lane] is lane-owned.
+                        unsafe {
+                            let v = st_ptr.read(e.l as usize)
+                                + st_ptr.read(e.r as usize)
+                                + p.weight(e.pa as usize, e.pb as usize, e.pc as usize);
+                            pend_ptr.write(lane, (e.tgt as usize, e.is_first(), v));
+                        }
+                        lane += threads;
+                    }
+                    barrier.wait(); // end of substep 3
+                    // substep 4 (parallel combine; targets distinct)
+                    let mut lane = t;
+                    while lane < entries.len() {
+                        // SAFETY: targets are distinct within a step
+                        // (Theorem 1, checked by core::conflict), so each
+                        // st slot is written by exactly one lane.
+                        unsafe {
+                            let (tgt, first, v) = pend_ptr.read(lane);
+                            let cur = st_ptr.read(tgt);
+                            st_ptr.write(tgt, if first { v } else { cur.min(v) });
+                        }
+                        lane += threads;
+                    }
+                    barrier.wait(); // end of outer step
+                }
+            });
+        }
+    });
+    st
+}
+
+struct PendingTable(*mut (usize, bool, i64));
+unsafe impl Sync for PendingTable {}
+unsafe impl Send for PendingTable {}
+impl PendingTable {
+    #[inline(always)]
+    unsafe fn read(&self, i: usize) -> (usize, bool, i64) {
+        unsafe { *self.0.add(i) }
+    }
+    #[inline(always)]
+    unsafe fn write(&self, i: usize, v: (usize, bool, i64)) {
+        unsafe { *self.0.add(i) = v }
+    }
+}
+
+/// Execution trace of the first `max_steps` steps (regenerates Fig. 7's
+/// style of walkthrough).
+pub fn trace(p: &McmProblem, variant: McmVariant, max_steps: usize) -> String {
+    let n = p.n();
+    let sched = McmSchedule::compile(n, variant);
+    let mut out = format!(
+        "MCM pipeline trace ({}), n={}, {} cells, {} steps, width ≤ {}\n",
+        variant.name(),
+        n,
+        linear::num_cells(n),
+        sched.num_steps(),
+        sched.max_width()
+    );
+    for (s, entries) in sched.steps.iter().enumerate() {
+        if s >= max_steps {
+            out.push_str("…\n");
+            break;
+        }
+        out.push_str(&format!("step {:>3}:", s + 1));
+        for e in entries {
+            let opsym = if e.is_first() { "=" } else { "↓=" };
+            out.push_str(&format!(
+                "  ST[{}] {} f(ST[{}],ST[{}])",
+                e.tgt + 1,
+                opsym,
+                e.l + 1,
+                e.r + 1
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcm::seq;
+    use crate::prop::forall;
+
+    #[test]
+    fn corrected_matches_oracle_property() {
+        forall("mcm corrected == seq", 50, |g| {
+            let n = g.usize(1..14);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            if solve(&p, McmVariant::Corrected) == seq::linear_table(&p) {
+                Ok(())
+            } else {
+                Err(format!("{:?}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn corrected_threaded_matches_oracle() {
+        forall("mcm corrected threaded == seq", 15, |g| {
+            let n = g.usize(4..24);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let threads = g.usize(2..5);
+            let sched = McmSchedule::compile(n, McmVariant::Corrected);
+            if execute_threaded(&p, &sched, threads) == seq::linear_table(&p) {
+                Ok(())
+            } else {
+                Err(format!("n={n} threads={threads} dims={:?}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn faithful_correct_for_n_le_3() {
+        forall("mcm faithful small == seq", 30, |g| {
+            let n = g.usize(1..4);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            if solve(&p, McmVariant::PaperFaithful) == seq::linear_table(&p) {
+                Ok(())
+            } else {
+                Err(format!("{:?}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn faithful_wrong_on_counterexample() {
+        // The central soundness finding: the published schedule returns a
+        // wrong optimal cost on dims [24, 3, 6, 7, 6].
+        let p = McmProblem::hazard_counterexample();
+        let faithful = solve(&p, McmVariant::PaperFaithful);
+        let truth = seq::linear_table(&p);
+        assert_ne!(faithful.last(), truth.last(), "expected divergence");
+        assert!(faithful.last().unwrap() > truth.last().unwrap());
+        // …and the corrected schedule fixes it.
+        assert_eq!(solve(&p, McmVariant::Corrected), truth);
+    }
+
+    #[test]
+    fn faithful_never_underestimates() {
+        forall("mcm faithful >= seq", 40, |g| {
+            let n = g.usize(2..12);
+            let p = McmProblem::new(g.dims(n, 30)).unwrap();
+            let f = solve(&p, McmVariant::PaperFaithful);
+            let truth = seq::linear_table(&p);
+            if f.iter().zip(&truth).all(|(a, b)| a >= b) {
+                Ok(())
+            } else {
+                Err(format!("{:?}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn faithful_threaded_reproduces_stale_semantics() {
+        // even the hazard must be deterministic: the threaded executor's
+        // two-phase barriers make stale reads reproducible
+        forall("mcm faithful threaded == faithful", 15, |g| {
+            let n = g.usize(4..20);
+            let p = McmProblem::new(g.dims(n, 30)).unwrap();
+            let sched = McmSchedule::compile(n, McmVariant::PaperFaithful);
+            let a = execute(&p, &sched);
+            let b = execute_threaded(&p, &sched, g.usize(2..5));
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("n={n} dims={:?}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn clrs_both_variants() {
+        let p = McmProblem::clrs();
+        assert_eq!(*solve(&p, McmVariant::Corrected).last().unwrap(), 15125);
+        // n=6 ≥ 4 → the faithful schedule may or may not diverge on this
+        // instance; on CLRS it happens to overestimate
+        let f = *solve(&p, McmVariant::PaperFaithful).last().unwrap();
+        assert!(f >= 15125);
+    }
+
+    #[test]
+    fn trace_mentions_first_computed_cell() {
+        let p = McmProblem::clrs();
+        let t = trace(&p, McmVariant::Corrected, 4);
+        // first computed cell is ST[7] (paper 1-based), from ST[1], ST[2]
+        assert!(t.contains("ST[7] = f(ST[1],ST[2])"), "{t}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Classic sequential MCM dynamic program (CLRS 15.2): `O(n³)` time,
+//! `O(n²)` space.  The correctness oracle for every parallel executor,
+//! plus optimal-parenthesization reconstruction.
+
+use crate::core::problem::McmProblem;
+use crate::core::schedule::linear;
+
+/// The (n, n) cost table as a flat row-major vector; upper triangle valid.
+pub fn table(p: &McmProblem) -> Vec<i64> {
+    let n = p.n();
+    let mut t = vec![0i64; n * n];
+    for d in 1..n {
+        for r in 0..(n - d) {
+            let c = r + d;
+            let mut best = i64::MAX;
+            for m in r..c {
+                let v = t[r * n + m] + t[(m + 1) * n + c] + p.weight(r, m + 1, c + 1);
+                best = best.min(v);
+            }
+            t[r * n + c] = best;
+        }
+    }
+    t
+}
+
+/// Optimal scalar-multiplication count.
+pub fn cost(p: &McmProblem) -> i64 {
+    let n = p.n();
+    if n == 1 {
+        return 0;
+    }
+    table(p)[n - 1]
+}
+
+/// The cost table in the paper's diagonal-major linear layout (Fig. 5) —
+/// the output format shared by every MCM backend.
+pub fn linear_table(p: &McmProblem) -> Vec<i64> {
+    let n = p.n();
+    let t = table(p);
+    let mut st = vec![0i64; linear::num_cells(n)];
+    for r in 0..n {
+        for c in r..n {
+            st[linear::cell_index(n, r, c)] = t[r * n + c];
+        }
+    }
+    st
+}
+
+/// Optimal parenthesization, e.g. `((A1(A2A3))((A4A5)A6))`.
+pub fn parenthesization(p: &McmProblem) -> String {
+    let n = p.n();
+    let mut t = vec![0i64; n * n];
+    let mut split = vec![0usize; n * n];
+    for d in 1..n {
+        for r in 0..(n - d) {
+            let c = r + d;
+            let mut best = i64::MAX;
+            let mut bm = r;
+            for m in r..c {
+                let v = t[r * n + m] + t[(m + 1) * n + c] + p.weight(r, m + 1, c + 1);
+                if v < best {
+                    best = v;
+                    bm = m;
+                }
+            }
+            t[r * n + c] = best;
+            split[r * n + c] = bm;
+        }
+    }
+    fn emit(split: &[usize], n: usize, r: usize, c: usize, out: &mut String) {
+        if r == c {
+            out.push('A');
+            out.push_str(&(r + 1).to_string());
+        } else {
+            out.push('(');
+            let m = split[r * n + c];
+            emit(split, n, r, m, out);
+            emit(split, n, m + 1, c, out);
+            out.push(')');
+        }
+    }
+    let mut out = String::new();
+    emit(&split, n, 0, n - 1, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn clrs_textbook_instance() {
+        let p = McmProblem::clrs();
+        assert_eq!(cost(&p), 15125);
+        assert_eq!(parenthesization(&p), "((A1(A2A3))((A4A5)A6))");
+    }
+
+    #[test]
+    fn two_matrices() {
+        let p = McmProblem::new(vec![10, 20, 30]).unwrap();
+        assert_eq!(cost(&p), 10 * 20 * 30);
+        assert_eq!(parenthesization(&p), "(A1A2)");
+    }
+
+    #[test]
+    fn single_matrix_zero_cost() {
+        let p = McmProblem::new(vec![5, 9]).unwrap();
+        assert_eq!(cost(&p), 0);
+        assert_eq!(parenthesization(&p), "A1");
+    }
+
+    #[test]
+    fn three_matrices_both_orders() {
+        // (A1 A2) A3: 2*3*4 + 2*4*5 = 64 ; A1 (A2 A3): 3*4*5 + 2*3*5 = 90
+        let p = McmProblem::new(vec![2, 3, 4, 5]).unwrap();
+        assert_eq!(cost(&p), 64);
+        assert_eq!(parenthesization(&p), "((A1A2)A3)");
+    }
+
+    #[test]
+    fn linear_table_matches_square() {
+        let p = McmProblem::clrs();
+        let n = p.n();
+        let sq = table(&p);
+        let lin = linear_table(&p);
+        for r in 0..n {
+            for c in r..n {
+                assert_eq!(lin[linear::cell_index(n, r, c)], sq[r * n + c]);
+            }
+        }
+        assert_eq!(*lin.last().unwrap(), 15125);
+    }
+
+    #[test]
+    fn cost_monotone_under_dim_scaling() {
+        forall("mcm scale monotone", 40, |g| {
+            let n = g.usize(2..9);
+            let dims = g.dims(n, 12);
+            let p = McmProblem::new(dims.clone()).unwrap();
+            let scaled = McmProblem::new(dims.iter().map(|d| d * 2).collect()).unwrap();
+            if cost(&scaled) >= cost(&p) {
+                Ok(())
+            } else {
+                Err(format!("{dims:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn parenthesization_balanced_parens() {
+        forall("parens balanced", 40, |g| {
+            let n = g.usize(1..10);
+            let p = McmProblem::new(g.dims(n, 20)).unwrap();
+            let s = parenthesization(&p);
+            let mut depth = 0i32;
+            for ch in s.chars() {
+                match ch {
+                    '(' => depth += 1,
+                    ')' => depth -= 1,
+                    _ => {}
+                }
+                if depth < 0 {
+                    return Err(s);
+                }
+            }
+            if depth == 0 && s.matches('A').count() == n {
+                Ok(())
+            } else {
+                Err(s)
+            }
+        });
+    }
+}

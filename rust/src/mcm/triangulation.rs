@@ -1,0 +1,136 @@
+//! Optimal convex-polygon triangulation — the DP from the paper's
+//! reference [2] (Ito & Nakano 2013), included to show the schedule
+//! compiler generalizes beyond matrix chains.
+//!
+//! For a convex polygon with weighted vertices `w_0..w_n`, minimize the
+//! total triangle weight `Σ w_i·w_k·w_j` over all triangulations:
+//!
+//! ```text
+//! T[i][j] = min_{i<k<j} T[i][k] + T[k][j] + w_i·w_k·w_j   (j > i+1)
+//! ```
+//!
+//! This is MCM-isomorphic with a shifted weight pattern: reindexing
+//! `c = j−1` maps it onto the MCM cell grid `(r, c)` with term `j` weight
+//! `w_r · w_{r+j} · w_{c+1}` — *exactly* the `(pa, pb, pc)` triple the
+//! [`McmSchedule`] entries already carry.  A triangulation instance is
+//! therefore solved by the *same* compiled schedules (faithful or
+//! corrected), the same native/threaded executors, and the same Pallas
+//! schedule-executor artifact — only the input vector changes meaning:
+//! `dims[i] = w_i` for an (n+1)-gon where `n = dims.len() − 1` chain
+//! positions exist.  The published schedule's staleness hazard therefore
+//! afflicts this problem identically (property-tested below).
+
+use crate::core::problem::McmProblem;
+use crate::core::schedule::McmVariant;
+
+/// An optimal polygon-triangulation instance: vertex weights of an
+/// (m)-gon, `m = weights.len() ≥ 3`.
+#[derive(Debug, Clone)]
+pub struct TriangulationProblem {
+    pub weights: Vec<i64>,
+}
+
+impl TriangulationProblem {
+    pub fn new(weights: Vec<i64>) -> crate::Result<TriangulationProblem> {
+        if weights.len() < 3 {
+            return Err(crate::Error::InvalidProblem(
+                "a polygon needs at least 3 vertices".into(),
+            ));
+        }
+        if weights.iter().any(|&w| w <= 0) {
+            return Err(crate::Error::InvalidProblem(
+                "vertex weights must be positive".into(),
+            ));
+        }
+        Ok(TriangulationProblem { weights })
+    }
+
+    /// The isomorphic MCM instance (`dims = weights`): chain of
+    /// `weights.len() − 1` pseudo-matrices.
+    pub fn as_mcm(&self) -> McmProblem {
+        McmProblem::new(self.weights.clone()).expect("validated weights")
+    }
+}
+
+/// Reference `O(m³)` DP directly on the triangulation recurrence.
+pub fn cost_ref(p: &TriangulationProblem) -> i64 {
+    let w = &p.weights;
+    let m = w.len();
+    let mut t = vec![0i64; m * m];
+    for d in 2..m {
+        for i in 0..(m - d) {
+            let j = i + d;
+            let mut best = i64::MAX;
+            for k in (i + 1)..j {
+                best = best.min(t[i * m + k] + t[k * m + j] + w[i] * w[k] * w[j]);
+            }
+            t[i * m + j] = best;
+        }
+    }
+    t[m - 1]
+}
+
+/// Solve through the pipeline machinery (any schedule variant).
+pub fn solve(p: &TriangulationProblem, variant: McmVariant) -> i64 {
+    *crate::mcm::pipeline::solve(&p.as_mcm(), variant)
+        .last()
+        .expect("non-empty table")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    #[test]
+    fn square_two_triangulations() {
+        // square w = [1, 2, 3, 4]: diagonals give 1·2·4 + 2·3·4 = 32
+        // or 1·2·3 + 1·3·4 = 18 → optimum 18
+        let p = TriangulationProblem::new(vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(cost_ref(&p), 18);
+        assert_eq!(solve(&p, McmVariant::Corrected), 18);
+    }
+
+    #[test]
+    fn triangle_is_its_own_triangulation() {
+        // a 3-gon's only triangulation is the single triangle itself
+        let p = TriangulationProblem::new(vec![5, 7, 9]).unwrap();
+        assert_eq!(cost_ref(&p), 5 * 7 * 9);
+        assert_eq!(solve(&p, McmVariant::Corrected), 5 * 7 * 9);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(TriangulationProblem::new(vec![1, 2]).is_err());
+        assert!(TriangulationProblem::new(vec![1, 0, 2]).is_err());
+    }
+
+    #[test]
+    fn mcm_isomorphism_property() {
+        // the reduction is exact: pipeline-solved triangulation equals the
+        // direct recurrence on random polygons
+        forall("triangulation == mcm pipeline", 40, |g| {
+            let m = g.usize(3..14);
+            let weights = g.vec_i64(m, 1..25).iter().map(|w| w.abs().max(1)).collect();
+            let p = TriangulationProblem::new(weights).unwrap();
+            let want = cost_ref(&p);
+            let got = solve(&p, McmVariant::Corrected);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{:?}: {got} != {want}", p.weights))
+            }
+        });
+    }
+
+    #[test]
+    fn published_schedule_hazard_carries_over() {
+        // the MCM counterexample weights, read as a pentagon, also break
+        // the published schedule for triangulation
+        let p = TriangulationProblem::new(vec![24, 3, 6, 7, 6]).unwrap();
+        let truth = cost_ref(&p);
+        let faithful = solve(&p, McmVariant::PaperFaithful);
+        assert!(faithful > truth, "{faithful} vs {truth}");
+        assert_eq!(solve(&p, McmVariant::Corrected), truth);
+    }
+}

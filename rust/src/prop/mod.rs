@@ -1,0 +1,194 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! A property is a closure from a seeded [`Gen`] to `Result<(), String>`;
+//! the runner executes it for a configurable number of cases with
+//! deterministic per-case seeds, and on failure reports the failing seed so
+//! a case can be replayed exactly:
+//!
+//! ```
+//! use pipedp::prop::{forall, Gen};
+//! forall("addition commutes", 100, |g: &mut Gen| {
+//!     let a = g.i64(-1000..1000);
+//!     let b = g.i64(-1000..1000);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case value generator (a thin layer over [`Rng`] with domain-specific
+/// draws used across the suite).
+pub struct Gen {
+    rng: Rng,
+    /// Human-readable log of drawn values, included in failure reports.
+    log: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::seeded(seed),
+            log: Vec::new(),
+        }
+    }
+
+    fn note(&mut self, label: &str, v: impl std::fmt::Debug) {
+        if self.log.len() < 64 {
+            self.log.push(format!("{label}={v:?}"));
+        }
+    }
+
+    pub fn i64(&mut self, range: std::ops::Range<i64>) -> i64 {
+        let v = self.rng.range(range);
+        self.note("i64", v);
+        v
+    }
+
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        let v = self.rng.range(range.start as i64..range.end as i64) as usize;
+        self.note("usize", v);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.note("bool", v);
+        v
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        let v = self.rng.f64();
+        self.note("f64", v);
+        v
+    }
+
+    /// A vector of i64 values.
+    pub fn vec_i64(&mut self, len: usize, range: std::ops::Range<i64>) -> Vec<i64> {
+        let v: Vec<i64> = (0..len).map(|_| self.rng.range(range.clone())).collect();
+        self.note("vec", &v);
+        v
+    }
+
+    /// A valid S-DP offset vector: k distinct decreasing values in [1, max].
+    pub fn offsets(&mut self, k: usize, max: i64) -> Vec<i64> {
+        let v = self.rng.offsets(k, max);
+        self.note("offsets", &v);
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Matrix-chain dims vector of n+1 entries in [1, max_dim].
+    pub fn dims(&mut self, n: usize, max_dim: i64) -> Vec<i64> {
+        let v: Vec<i64> = (0..=n).map(|_| self.rng.range(1..max_dim + 1)).collect();
+        self.note("dims", &v);
+        v
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` instances of a property; panic with seed + draw log on the
+/// first failure.  Seeds are derived deterministically from the property
+/// name so failures reproduce across runs and machines.
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n  draws: [{}]",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed (debugging helper).
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) -> Result<(), String> {
+    prop(&mut Gen::new(seed))
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("always ok", 50, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_context() {
+        forall("always fails", 10, |g| {
+            let v = g.i64(0..10);
+            Err(format!("saw {v}"))
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<i64> = Vec::new();
+        forall("det", 20, |g| {
+            first.push(g.i64(0..1_000_000));
+            Ok(())
+        });
+        let mut second: Vec<i64> = Vec::new();
+        forall("det", 20, |g| {
+            second.push(g.i64(0..1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn offsets_valid() {
+        forall("offsets valid", 100, |g| {
+            let k = g.usize(1..9);
+            let max = (k as i64) + g.i64(0..30);
+            let offs = g.offsets(k, max);
+            if offs.windows(2).all(|w| w[0] > w[1]) && offs[offs.len() - 1] >= 1 {
+                Ok(())
+            } else {
+                Err(format!("{offs:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut a = Gen::new(99);
+        let x = a.i64(0..1000);
+        let r = replay(99, |g| {
+            let y = g.i64(0..1000);
+            if y == x {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+        assert!(r.is_ok());
+    }
+}

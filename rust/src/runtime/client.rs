@@ -1,0 +1,142 @@
+//! PJRT client wrapper: HLO text → compiled executable, with caching.
+//!
+//! The interchange format is HLO *text* (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md and
+//! DESIGN.md §3).  Every artifact is lowered with `return_tuple=True`, so
+//! outputs are unwrapped with `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use once_cell::sync::OnceCell;
+
+use crate::{Error, Result};
+
+/// A compiled artifact bound to a PJRT client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given input literals; returns the elements of the
+    /// output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// A PJRT CPU client plus an executable cache keyed by artifact name.
+pub struct Client {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+// xla::PjRtClient wraps a thread-safe C++ client; executions are
+// synchronized by XLA itself.
+unsafe impl Sync for Client {}
+unsafe impl Send for Client {}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        Ok(Client {
+            client: xla::PjRtClient::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The process-wide client (PJRT CPU clients are heavyweight; one is
+    /// enough and lets executable caching work across the coordinator).
+    pub fn global() -> Result<&'static Client> {
+        static GLOBAL: OnceCell<Client> = OnceCell::new();
+        GLOBAL.get_or_try_init(Client::cpu)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text file, memoized by `name`.
+    pub fn load(&self, name: &str, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?;
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact file {path_str} missing (run `make artifacts`)"
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exec = std::sync::Arc::new(Executable {
+            exe,
+            name: name.to_string(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Number of cached executables (observability).
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Build an i32 literal of the given shape from i64 data (values must fit;
+/// the problem validators keep everything well under 2^31).
+pub fn i32_literal(data: &[i64], dims: &[i64]) -> Result<xla::Literal> {
+    let narrowed: Vec<i32> = data
+        .iter()
+        .map(|&v| {
+            i32::try_from(v).map_err(|_| Error::Runtime(format!("value {v} exceeds i32 range")))
+        })
+        .collect::<Result<_>>()?;
+    let lit = xla::Literal::vec1(&narrowed);
+    Ok(lit.reshape(dims)?)
+}
+
+/// Extract a literal back into i64s.
+pub fn to_i64_vec(lit: &xla::Literal) -> Result<Vec<i64>> {
+    Ok(lit.to_vec::<i32>()?.into_iter().map(|v| v as i64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let lit = i32_literal(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_i64_vec(&lit).unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn i32_literal_overflow_rejected() {
+        assert!(i32_literal(&[i64::MAX], &[1]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_typed_error() {
+        let c = Client::global().unwrap();
+        let err = c.load("nope", Path::new("/nonexistent/x.hlo.txt"));
+        assert!(matches!(err, Err(Error::Runtime(_))));
+    }
+
+    #[test]
+    fn global_client_is_cpu() {
+        let c = Client::global().unwrap();
+        assert!(c.platform().to_lowercase().contains("cpu") || !c.platform().is_empty());
+    }
+}

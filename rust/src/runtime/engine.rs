@@ -1,0 +1,356 @@
+//! Typed execution entrypoints over the artifact registry — the bridge
+//! between problem structs and PJRT literals.
+//!
+//! Size-bucketing contract (mirrors the kernels):
+//!
+//! * **S-DP**: an instance `(n, k)` runs on any artifact with `n_a ≥ n`,
+//!   `k_a ≥ k`.  The table is padded with zeros beyond `n`; the offsets
+//!   vector is padded by *repeating decreasing values below `a_k`* — no:
+//!   padding offsets must keep Definition 1's strict decrease AND not
+//!   touch indices < a₁; instead we pad by extending the offsets upward
+//!   (prepending larger offsets would change semantics), so padding is
+//!   done on the *problem* side: the engine requires `k == k_a` and
+//!   `n == n_a` after padding by [`pad_sdp`], which embeds the instance
+//!   into the bucket exactly (see its docs for the invariant argument).
+//! * **MCM diagonal**: dims are padded with trailing 1s to `n_a`; padded
+//!   chain suffix multiplies cost-0 1×1 matrices appended after the real
+//!   chain — the real chain's optimal cost is recovered at the linear
+//!   index of cell `(0, n−1)` of the *bucket* table: appending matrices
+//!   can reuse the real prefix… it cannot — appending changes upper
+//!   cells, but cell `(0, n−1)` of the padded table is exactly the real
+//!   instance's root because it only depends on cells within the first
+//!   `n` rows/cols.  The engine reads that cell.
+//! * **MCM pipeline**: exact-size schedule tensors are compiled by Rust
+//!   ([`McmSchedule::to_tensor`]) padded to the artifact's static
+//!   `(S, T)`.
+
+use crate::core::problem::{McmProblem, SdpProblem};
+use crate::core::schedule::{linear, McmSchedule, McmVariant};
+use crate::runtime::client::{i32_literal, to_i64_vec, Client};
+use crate::runtime::registry::Registry;
+use crate::{Error, Result};
+
+/// The engine: a registry + the global PJRT client.
+pub struct Engine {
+    pub registry: Registry,
+    client: &'static Client,
+}
+
+impl Engine {
+    /// Load the default artifact directory.
+    pub fn load() -> Result<Engine> {
+        let dir = crate::runtime::artifacts_dir();
+        Ok(Engine {
+            registry: Registry::load(&dir)?,
+            client: Client::global()?,
+        })
+    }
+
+    pub fn with_registry(registry: Registry) -> Result<Engine> {
+        Ok(Engine {
+            registry,
+            client: Client::global()?,
+        })
+    }
+
+    /// Solve an S-DP instance through the Pallas pipeline artifact.
+    /// Returns the first `p.n` table entries.
+    pub fn solve_sdp(&self, p: &SdpProblem) -> Result<Vec<i64>> {
+        let spec = self
+            .registry
+            .route_sdp(p.n, p.k(), p.op, 1)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no artifact bucket fits sdp n={} k={} op={}",
+                    p.n,
+                    p.k(),
+                    p.op
+                ))
+            })?
+            .clone();
+        let (st, offs) = pad_sdp(p, spec.n, spec.k)?;
+        let exe = self.client.load(&spec.name, &spec.file)?;
+        let out = exe.run(&[
+            i32_literal(&st, &[spec.n as i64])?,
+            i32_literal(&offs, &[spec.k as i64])?,
+        ])?;
+        let full = to_i64_vec(&out[0])?;
+        Ok(full[..p.n].to_vec())
+    }
+
+    /// Batched S-DP: all instances must share (n, k, op); one dispatch.
+    pub fn solve_sdp_batch(&self, ps: &[&SdpProblem]) -> Result<Vec<Vec<i64>>> {
+        let first = ps
+            .first()
+            .ok_or_else(|| Error::Runtime("empty batch".into()))?;
+        let spec = self
+            .registry
+            .route_sdp(first.n, first.k(), first.op, ps.len())
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no batch-{} artifact for sdp n={} k={}",
+                    ps.len(),
+                    first.n,
+                    first.k()
+                ))
+            })?
+            .clone();
+        let mut st_all = Vec::with_capacity(spec.batch * spec.n);
+        let mut offs_all = Vec::with_capacity(spec.batch * spec.k);
+        for p in ps {
+            let (st, offs) = pad_sdp(p, spec.n, spec.k)?;
+            st_all.extend_from_slice(&st);
+            offs_all.extend_from_slice(&offs);
+        }
+        let exe = self.client.load(&spec.name, &spec.file)?;
+        let out = exe.run(&[
+            i32_literal(&st_all, &[spec.batch as i64, spec.n as i64])?,
+            i32_literal(&offs_all, &[spec.batch as i64, spec.k as i64])?,
+        ])?;
+        let full = to_i64_vec(&out[0])?;
+        Ok(ps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| full[i * spec.n..i * spec.n + p.n].to_vec())
+            .collect())
+    }
+
+    /// Solve an MCM instance with the diagonal-wavefront artifact.
+    /// Returns the instance's linearized table (real `n`, unpadded).
+    pub fn solve_mcm(&self, p: &McmProblem) -> Result<Vec<i64>> {
+        let n = p.n();
+        let spec = self
+            .registry
+            .route_mcm(n, "diagonal", 1)
+            .ok_or_else(|| Error::Runtime(format!("no artifact bucket fits mcm n={n}")))?
+            .clone();
+        let dims = pad_dims(&p.dims, spec.n);
+        let exe = self.client.load(&spec.name, &spec.file)?;
+        let out = exe.run(&[i32_literal(&dims, &[spec.n as i64 + 1])?])?;
+        let padded = to_i64_vec(&out[0])?;
+        Ok(extract_linear(&padded, spec.n, n))
+    }
+
+    /// Batched MCM (shared bucket, one dispatch).
+    pub fn solve_mcm_batch(&self, ps: &[&McmProblem]) -> Result<Vec<Vec<i64>>> {
+        let n_max = ps.iter().map(|p| p.n()).max().ok_or_else(|| {
+            Error::Runtime("empty batch".into())
+        })?;
+        let spec = self
+            .registry
+            .route_mcm(n_max, "diagonal", ps.len())
+            .ok_or_else(|| {
+                Error::Runtime(format!("no batch-{} artifact for mcm n={n_max}", ps.len()))
+            })?
+            .clone();
+        let mut dims_all = Vec::with_capacity(ps.len() * (spec.n + 1));
+        for p in ps {
+            dims_all.extend_from_slice(&pad_dims(&p.dims, spec.n));
+        }
+        let exe = self.client.load(&spec.name, &spec.file)?;
+        let out = exe.run(&[i32_literal(
+            &dims_all,
+            &[spec.batch as i64, spec.n as i64 + 1],
+        )?])?;
+        let full = to_i64_vec(&out[0])?;
+        let cells = linear::num_cells(spec.n);
+        Ok(ps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| extract_linear(&full[i * cells..(i + 1) * cells], spec.n, p.n()))
+            .collect())
+    }
+
+    /// Solve an MCM instance through the schedule-executor artifact with
+    /// the given schedule variant compiled at exact instance size.
+    /// Requires an exact-`n` artifact (the schedule encodes `n`).
+    pub fn solve_mcm_pipeline(&self, p: &McmProblem, variant: McmVariant) -> Result<Vec<i64>> {
+        let n = p.n();
+        let spec = self
+            .registry
+            .artifacts
+            .iter()
+            .find(|a| a.kind == crate::runtime::registry::Kind::Mcm
+                && a.algo == "pipeline" && a.n == n && a.batch == 1)
+            .ok_or_else(|| {
+                Error::Runtime(format!("no mcm_pipeline artifact for exactly n={n}"))
+            })?
+            .clone();
+        let sched = McmSchedule::compile(n, variant);
+        let tensor = sched.to_tensor(spec.sched_steps, spec.sched_width)?;
+        let tensor64: Vec<i64> = tensor.iter().map(|&v| v as i64).collect();
+        let exe = self.client.load(&spec.name, &spec.file)?;
+        let out = exe.run(&[
+            i32_literal(&p.dims, &[n as i64 + 1])?,
+            i32_literal(
+                &tensor64,
+                &[spec.sched_steps as i64, spec.sched_width as i64, 8],
+            )?,
+        ])?;
+        to_i64_vec(&out[0])
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.client.cached()
+    }
+
+    /// Compile every artifact in the registry into the executable cache.
+    ///
+    /// PJRT compilation of a bucket takes tens to hundreds of ms; without
+    /// warmup the first request to each bucket eats that as tail latency
+    /// (measured as a 2.1 s p99 in the end-to-end driver — EXPERIMENTS.md
+    /// §Perf).  Returns the number of executables compiled.
+    pub fn warm_all(&self) -> usize {
+        let mut compiled = 0;
+        for spec in &self.registry.artifacts {
+            if self.client.load(&spec.name, &spec.file).is_ok() {
+                compiled += 1;
+            }
+        }
+        compiled
+    }
+}
+
+/// Embed an S-DP instance into a larger (n_a, k_a) bucket.
+///
+/// * Table: zero-padded past `p.n`; the padded tail computes garbage the
+///   caller discards (reads never wrap below 0).
+/// * Offsets: padded to `k_a` by **duplicating `a₁` at the front**.  The
+///   kernel does not require distinct offsets; lane 1 still overwrites
+///   with `ST[i − a₁]` and the duplicate lanes re-combine the *same*
+///   value, which is a no-op for an idempotent ⊗ (min/max).  Freshness is
+///   preserved: a duplicate at lane `j′ ≤ pad + 1` needs
+///   `a₁ ≥ k_a − j′ + 1`, and `a₁ ≥ k ≥ k_a − pad` always holds; the real
+///   offsets keep their original bound shifted by `pad`.  `offs[0] = a₁`
+///   is unchanged, so the kernel's init boundary is untouched.
+///
+/// `Add` is not idempotent, so k-padding is refused for it — routing must
+/// find an exact-k bucket for additive instances.
+pub fn pad_sdp(p: &SdpProblem, n_a: usize, k_a: usize) -> Result<(Vec<i64>, Vec<i64>)> {
+    if k_a < p.k() || n_a < p.n {
+        return Err(Error::Runtime("bucket smaller than instance".into()));
+    }
+    let pad = k_a - p.k();
+    if pad > 0 && p.op == crate::core::semigroup::Op::Add {
+        return Err(Error::Runtime(
+            "k-padding requires an idempotent operator (min/max); \
+             route add-instances to an exact-k bucket"
+                .into(),
+        ));
+    }
+    let mut offsets = Vec::with_capacity(k_a);
+    offsets.extend(std::iter::repeat(p.offsets[0]).take(pad));
+    offsets.extend_from_slice(&p.offsets);
+    let mut st = vec![0i64; n_a];
+    st[..p.a1()].copy_from_slice(&p.init);
+    Ok((st, offsets))
+}
+
+/// Pad an MCM dims vector with trailing 1s to chain length `n_a`.
+fn pad_dims(dims: &[i64], n_a: usize) -> Vec<i64> {
+    let mut out = dims.to_vec();
+    out.resize(n_a + 1, 1);
+    out
+}
+
+/// Extract the linearized table of the leading n×n sub-triangle from a
+/// padded bucket's linearized table.
+fn extract_linear(padded: &[i64], n_pad: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; linear::num_cells(n)];
+    for r in 0..n {
+        for c in r..n {
+            out[linear::cell_index(n, r, c)] = padded[linear::cell_index(n_pad, r, c)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::semigroup::Op;
+    use crate::prop::forall;
+
+    #[test]
+    fn pad_dims_appends_ones() {
+        assert_eq!(pad_dims(&[3, 4, 5], 5), vec![3, 4, 5, 1, 1, 1]);
+    }
+
+    #[test]
+    fn extract_identity_when_same_size() {
+        let p = McmProblem::clrs();
+        let lin = crate::mcm::seq::linear_table(&p);
+        assert_eq!(extract_linear(&lin, 6, 6), lin);
+    }
+
+    #[test]
+    fn padded_mcm_preserves_prefix_cells() {
+        // solving a 1-padded chain natively must leave the real sub-
+        // triangle's cells unchanged (1×1 suffix matrices can't help)
+        forall("mcm pad prefix stable", 30, |g| {
+            let n = g.usize(2..8);
+            let dims = g.dims(n, 20);
+            let p = McmProblem::new(dims.clone()).unwrap();
+            let padded = McmProblem::new(pad_dims(&dims, n + 3)).unwrap();
+            let full = crate::mcm::seq::linear_table(&padded);
+            let got = extract_linear(&full, n + 3, n);
+            if got == crate::mcm::seq::linear_table(&p) {
+                Ok(())
+            } else {
+                Err(format!("{dims:?}"))
+            }
+        });
+    }
+
+    /// Reference executor for padded instances (duplicate offsets are not
+    /// representable as an `SdpProblem`, so run Fig. 1 semantics inline).
+    fn solve_with_duplicates(st0: &[i64], offsets: &[i64], op: Op) -> Vec<i64> {
+        let mut st = st0.to_vec();
+        let a1 = offsets[0] as usize;
+        for i in a1..st.len() {
+            let mut acc = st[i - a1];
+            for &a in &offsets[1..] {
+                acc = op.apply(acc, st[i - a as usize]);
+            }
+            st[i] = acc;
+        }
+        st
+    }
+
+    #[test]
+    fn pad_sdp_semantics_preserved_for_min_max() {
+        // the padded instance must agree with the original on the first n
+        forall("sdp pad preserves", 60, |g| {
+            let k = g.usize(1..6);
+            let offs = g.offsets(k, k as i64 + 10);
+            let a1 = offs[0] as usize;
+            let n = a1 + 8 + g.usize(0..40);
+            let init = g.vec_i64(a1, -50..50);
+            let op = *g.choose(&[Op::Min, Op::Max]);
+            let p = SdpProblem::new(n, offs, op, init).unwrap();
+            let (st, offsets) = pad_sdp(&p, n + 16, k + 3).unwrap();
+            let table = solve_with_duplicates(&st, &offsets, op);
+            let native = crate::sdp::seq::solve(&p);
+            if table[..p.n] == native[..] {
+                Ok(())
+            } else {
+                Err(format!("offs={:?} n={n} op={op}", p.offsets))
+            }
+        });
+    }
+
+    #[test]
+    fn pad_sdp_identity_when_exact() {
+        let p = SdpProblem::fibonacci(10);
+        let (st, offsets) = pad_sdp(&p, 10, 2).unwrap();
+        assert_eq!(offsets, vec![2, 1]);
+        assert_eq!(st, p.initial_table());
+    }
+
+    #[test]
+    fn pad_sdp_rejects_add() {
+        let p = SdpProblem::fibonacci(10);
+        assert!(pad_sdp(&p, 20, 4).is_err());
+        assert!(pad_sdp(&p, 20, 2).is_ok()); // exact k is fine
+    }
+}

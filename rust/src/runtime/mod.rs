@@ -1,0 +1,24 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! * [`registry`] — parses `artifacts/manifest.json` into typed
+//!   [`registry::ArtifactSpec`]s and resolves size buckets.
+//! * [`client`] — the PJRT CPU client wrapper: HLO text → compile →
+//!   cached executable.
+//! * [`engine`] — typed entrypoints (`solve_sdp`, `solve_mcm`,
+//!   `solve_mcm_pipeline`, batched variants) that marshal problems into
+//!   literals and results back into `Vec<i64>`.
+//!
+//! Python runs only at build time; after `make artifacts` the binary is
+//! self-contained.
+
+pub mod client;
+pub mod engine;
+pub mod registry;
+
+/// Default artifact directory, overridable with `PIPEDP_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PIPEDP_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

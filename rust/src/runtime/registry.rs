@@ -1,0 +1,205 @@
+//! Artifact registry: the typed view of `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::core::semigroup::Op;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Which algorithm family an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Sdp,
+    Mcm,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Result<Kind> {
+        match s {
+            "sdp" => Ok(Kind::Sdp),
+            "mcm" => Ok(Kind::Mcm),
+            other => Err(Error::Registry(format!("unknown kind '{other}'"))),
+        }
+    }
+}
+
+/// One compiled artifact as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: Kind,
+    /// "pipeline" | "prefix" | "diagonal".
+    pub algo: String,
+    pub op: Op,
+    pub dtype: String,
+    pub n: usize,
+    /// S-DP offset count (0 for MCM).
+    pub k: usize,
+    pub batch: usize,
+    /// MCM schedule-executor tensor shape (steps, width); 0 otherwise.
+    pub sched_steps: usize,
+    pub sched_width: usize,
+}
+
+/// The parsed artifact catalogue.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Registry(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (split out for testability).
+    pub fn parse(text: &str, dir: &Path) -> Result<Registry> {
+        let root = Json::parse(text)?;
+        let format = root.i64_field("format")?;
+        if format != 1 {
+            return Err(Error::Registry(format!(
+                "unsupported manifest format {format}"
+            )));
+        }
+        let mut artifacts = Vec::new();
+        for a in root.arr_field("artifacts")? {
+            artifacts.push(ArtifactSpec {
+                name: a.str_field("name")?.to_string(),
+                file: dir.join(a.str_field("file")?),
+                kind: Kind::parse(a.str_field("kind")?)?,
+                algo: a.str_field("algo")?.to_string(),
+                op: Op::parse(a.str_field("op")?)?,
+                dtype: a.str_field("dtype")?.to_string(),
+                n: a.usize_field("n")?,
+                k: a.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                batch: a.get("batch").and_then(|v| v.as_usize()).unwrap_or(1),
+                sched_steps: a.get("sched_steps").and_then(|v| v.as_usize()).unwrap_or(0),
+                sched_width: a.get("sched_width").and_then(|v| v.as_usize()).unwrap_or(0),
+            });
+        }
+        Ok(Registry { artifacts })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest S-DP pipeline bucket that fits `(n, k, op, batch)`.
+    pub fn route_sdp(&self, n: usize, k: usize, op: Op, batch: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == Kind::Sdp
+                    && a.algo == "pipeline"
+                    && a.op == op
+                    && a.dtype == "int32"
+                    && a.n >= n
+                    && a.k >= k
+                    && a.batch == batch
+            })
+            .min_by_key(|a| (a.n, a.k))
+    }
+
+    /// Smallest MCM bucket (given algo) that fits `n`.
+    pub fn route_mcm(&self, n: usize, algo: &str, batch: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == Kind::Mcm && a.algo == algo && a.n >= n && a.batch == batch)
+            .min_by_key(|a| a.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {"name": "sdp_pipeline_min_i32_n256_k8", "file": "a.hlo.txt",
+         "kind": "sdp", "algo": "pipeline", "op": "min", "dtype": "int32",
+         "n": 256, "k": 8, "batch": 1},
+        {"name": "sdp_pipeline_min_i32_n1024_k16", "file": "b.hlo.txt",
+         "kind": "sdp", "algo": "pipeline", "op": "min", "dtype": "int32",
+         "n": 1024, "k": 16, "batch": 1},
+        {"name": "mcm_diagonal_i32_n16", "file": "c.hlo.txt",
+         "kind": "mcm", "algo": "diagonal", "op": "min", "dtype": "int32",
+         "n": 16, "batch": 1},
+        {"name": "mcm_pipeline_i32_n16", "file": "d.hlo.txt",
+         "kind": "mcm", "algo": "pipeline", "op": "min", "dtype": "int32",
+         "n": 16, "batch": 1, "sched_steps": 150, "sched_width": 15}
+      ]
+    }"#;
+
+    fn reg() -> Registry {
+        Registry::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_all_fields() {
+        let r = reg();
+        assert_eq!(r.artifacts.len(), 4);
+        let a = r.by_name("mcm_pipeline_i32_n16").unwrap();
+        assert_eq!(a.kind, Kind::Mcm);
+        assert_eq!(a.sched_steps, 150);
+        assert_eq!(a.sched_width, 15);
+        assert!(a.file.ends_with("d.hlo.txt"));
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let r = reg();
+        assert_eq!(
+            r.route_sdp(100, 5, Op::Min, 1).unwrap().name,
+            "sdp_pipeline_min_i32_n256_k8"
+        );
+        assert_eq!(
+            r.route_sdp(300, 5, Op::Min, 1).unwrap().name,
+            "sdp_pipeline_min_i32_n1024_k16"
+        );
+        assert_eq!(
+            r.route_sdp(100, 12, Op::Min, 1).unwrap().name,
+            "sdp_pipeline_min_i32_n1024_k16"
+        );
+    }
+
+    #[test]
+    fn oversized_requests_unroutable() {
+        let r = reg();
+        assert!(r.route_sdp(5000, 4, Op::Min, 1).is_none());
+        assert!(r.route_sdp(100, 4, Op::Max, 1).is_none());
+        assert!(r.route_mcm(64, "diagonal", 1).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format_version() {
+        let bad = r#"{"format": 2, "artifacts": []}"#;
+        assert!(Registry::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"format": 1, "artifacts": [{"name": "x"}]}"#;
+        assert!(Registry::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration smoke: if the repo's artifacts are built, parse them
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let r = Registry::load(&dir).unwrap();
+            assert!(!r.artifacts.is_empty());
+            assert!(r.route_sdp(1000, 16, Op::Min, 1).is_some());
+        }
+    }
+}

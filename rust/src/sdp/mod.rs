@@ -1,0 +1,41 @@
+//! Native executors for the S-DP problem (Definition 1): the paper's four
+//! algorithms plus the companion paper's 2-by-2 variant.
+//!
+//! | module       | paper section | steps (paper cost model) |
+//! |--------------|---------------|--------------------------|
+//! | [`seq`]      | Fig. 1        | `O(nk)`                  |
+//! | [`naive`]    | §II-B         | `O(nk)` (conflict-serialized) |
+//! | [`prefix`]   | §II-B         | `O(n log k)`             |
+//! | [`pipeline`] | Fig. 2        | `O(n + k)`               |
+//! | [`two_by_two`] | [5] §III-A  | pipeline with halved conflict factor |
+//!
+//! Every executor returns the full solved table and is checked against
+//! [`seq`] (which itself is checked against the Python oracle via golden
+//! files).  [`pipeline::solve_threaded`] is the real multi-core executor
+//! used for Table I wall-clock reproduction; the others are
+//! step-synchronous models that also drive the GPU simulator.
+
+pub mod naive;
+pub mod pipeline;
+pub mod prefix;
+pub mod seq;
+pub mod two_by_two;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::core::problem::SdpProblem;
+    use crate::core::semigroup::Op;
+    use crate::prop::Gen;
+
+    /// Draw a random valid S-DP instance for cross-executor properties.
+    pub fn random_problem(g: &mut Gen) -> SdpProblem {
+        let k = g.usize(1..9);
+        let max = k as i64 + g.i64(0..24);
+        let offsets = g.offsets(k, max);
+        let a1 = offsets[0] as usize;
+        let n = a1 + 1 + g.usize(0..160);
+        let op = *g.choose(&[Op::Min, Op::Max, Op::Add]);
+        let init = g.vec_i64(a1, -1000..1000);
+        SdpProblem::new(n, offsets, op, init).unwrap()
+    }
+}

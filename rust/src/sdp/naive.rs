@@ -1,0 +1,154 @@
+//! §II-B — the naive multi-thread implementation: `k−1` threads combine
+//! into one `ST[i]` concurrently.
+//!
+//! On the paper's GPU this is memory-conflict *serialized* and stays
+//! `O(nk)`.  Two executors:
+//!
+//! * [`solve`] — the step-synchronous model (semantically identical to the
+//!   sequential algorithm; its *cost* is modeled by the simulator, which
+//!   charges k serialized cycles per element).
+//! * [`solve_threaded`] — the real multi-core analogue for wall-clock
+//!   benchmarks: the inner ⊗-fold over k operands is chunked across `t`
+//!   worker threads with per-thread partials and a serialized merge —
+//!   the CPU equivalent of what warp-parallel atomics buy the GPU.
+
+use std::sync::Barrier;
+
+use crate::core::problem::SdpProblem;
+
+/// Step-synchronous naive-parallel solve (bit-identical to `seq::solve`;
+/// exists so all three Table I columns share one calling convention).
+pub fn solve(p: &SdpProblem) -> Vec<i64> {
+    crate::sdp::seq::solve(p)
+}
+
+/// Real multi-threaded naive-parallel executor with `threads` workers.
+pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
+    let threads = threads.max(1);
+    if threads == 1 || p.k() < 2 * threads {
+        // not enough inner parallelism to pay for synchronization
+        return crate::sdp::seq::solve(p);
+    }
+    let mut st = p.initial_table();
+    let n = p.n;
+    let a1 = p.a1();
+    let k = p.k();
+    let op = p.op;
+    let offsets = &p.offsets;
+
+    // Chunk the k offsets across workers once.
+    let chunk = k.div_ceil(threads);
+    let barrier = Barrier::new(threads);
+    let partials: Vec<std::sync::atomic::AtomicI64> = (0..threads)
+        .map(|_| std::sync::atomic::AtomicI64::new(0))
+        .collect();
+    let st_ptr = SharedTable(st.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let partials = &partials;
+            let st_ptr = &st_ptr;
+            scope.spawn(move || {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(k);
+                for i in a1..n {
+                    // parallel partial fold over this worker's offset chunk
+                    if lo < hi {
+                        // SAFETY: workers only read indices < i here; the
+                        // write to index i happens after the barrier below,
+                        // by worker 0 alone.
+                        let mut acc = unsafe { st_ptr.read(i - offsets[lo] as usize) };
+                        for &a in &offsets[lo + 1..hi] {
+                            let v = unsafe { st_ptr.read(i - a as usize) };
+                            acc = op.apply(acc, v);
+                        }
+                        partials[t].store(acc, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    barrier.wait();
+                    // serialized merge — the GPU's conflict serialization
+                    if t == 0 {
+                        let mut acc = partials[0].load(std::sync::atomic::Ordering::Relaxed);
+                        for (w, px) in partials.iter().enumerate().skip(1) {
+                            if w * chunk < k {
+                                acc = op.apply(acc, px.load(std::sync::atomic::Ordering::Relaxed));
+                            }
+                        }
+                        unsafe { st_ptr.write(i, acc) };
+                    }
+                    barrier.wait();
+                }
+            });
+        }
+    });
+    st
+}
+
+/// Shared mutable table with externally-enforced disjointness.
+///
+/// SAFETY invariant: within one outer step, every index is written by at
+/// most one thread, and reads only touch indices finalized in earlier
+/// steps; steps are separated by barriers (release/acquire via
+/// `Barrier::wait`).
+pub(crate) struct SharedTable(pub *mut i64);
+
+unsafe impl Sync for SharedTable {}
+unsafe impl Send for SharedTable {}
+
+impl SharedTable {
+    #[inline(always)]
+    pub unsafe fn read(&self, i: usize) -> i64 {
+        unsafe { *self.0.add(i) }
+    }
+
+    #[inline(always)]
+    pub unsafe fn write(&self, i: usize, v: i64) {
+        unsafe { *self.0.add(i) = v }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::semigroup::Op;
+    use crate::prop::forall;
+    use crate::sdp::{seq, testutil};
+
+    #[test]
+    fn matches_sequential_small() {
+        let p = SdpProblem::fibonacci(24);
+        assert_eq!(solve(&p), seq::solve(&p));
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        forall("naive threaded == seq", 25, |g| {
+            let p = testutil::random_problem(g);
+            let threads = g.usize(1..5);
+            let a = solve_threaded(&p, threads);
+            let b = seq::solve(&p);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("threads={threads} n={} k={}", p.n, p.k()))
+            }
+        });
+    }
+
+    #[test]
+    fn threaded_with_large_k() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seeded(11);
+        let offsets = rng.offsets(64, 128);
+        let a1 = offsets[0] as usize;
+        let init: Vec<i64> = (0..a1).map(|_| rng.range(0..1000)).collect();
+        let p = SdpProblem::new(a1 + 500, offsets, Op::Min, init).unwrap();
+        assert_eq!(solve_threaded(&p, 4), seq::solve(&p));
+    }
+
+    #[test]
+    fn threads_one_falls_back() {
+        let p = SdpProblem::fibonacci(16);
+        assert_eq!(solve_threaded(&p, 1), seq::solve(&p));
+    }
+}

@@ -1,0 +1,81 @@
+//! §II-B — the parallel-prefix (tournament) implementation: the k-operand
+//! ⊗-combine for each element is reduced in ⌈log₂ k⌉ rounds, `O(n log k)`
+//! steps with k threads in the paper's cost model.  Not work-optimal —
+//! half the threads idle after round one (the motivation for the
+//! pipeline).
+
+use crate::core::problem::SdpProblem;
+
+/// Step-synchronous tournament solve.  The tournament shape (not a plain
+/// left fold) is intentional so that non-commutative-sensitive orderings
+/// and the simulator's round structure match the GPU algorithm.
+pub fn solve(p: &SdpProblem) -> Vec<i64> {
+    let mut st = p.initial_table();
+    let op = p.op;
+    let k = p.k();
+    let mut vals = vec![0i64; k];
+    for i in p.a1()..p.n {
+        for (j, &a) in p.offsets.iter().enumerate() {
+            vals[j] = st[i - a as usize];
+        }
+        // tournament: m → ⌈m/2⌉ survivors per round
+        let mut m = k;
+        while m > 1 {
+            let half = m.div_ceil(2);
+            for j in 0..(m - half) {
+                vals[j] = op.apply(vals[j], vals[j + half]);
+            }
+            m = half;
+        }
+        st[i] = vals[0];
+    }
+    st
+}
+
+/// Number of tournament rounds for a k-operand combine (the simulator's
+/// per-element step count).
+pub fn rounds(k: usize) -> usize {
+    let mut m = k;
+    let mut r = 0;
+    while m > 1 {
+        m = m.div_ceil(2);
+        r += 1;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::sdp::{seq, testutil};
+
+    #[test]
+    fn matches_sequential() {
+        forall("prefix == seq", 60, |g| {
+            let p = testutil::random_problem(g);
+            if solve(&p) == seq::solve(&p) {
+                Ok(())
+            } else {
+                Err(format!("n={} k={} op={}", p.n, p.k(), p.op))
+            }
+        });
+    }
+
+    #[test]
+    fn fibonacci() {
+        let p = SdpProblem::fibonacci(16);
+        assert_eq!(solve(&p)[15], 987);
+    }
+
+    #[test]
+    fn rounds_is_ceil_log2() {
+        assert_eq!(rounds(1), 0);
+        assert_eq!(rounds(2), 1);
+        assert_eq!(rounds(3), 2);
+        assert_eq!(rounds(4), 2);
+        assert_eq!(rounds(5), 3);
+        assert_eq!(rounds(8), 3);
+        assert_eq!(rounds(9), 4);
+    }
+}

@@ -1,0 +1,69 @@
+//! Fig. 1 — the sequential S-DP algorithm.  `O(nk)` work; the correctness
+//! oracle for every other executor and the SEQUENTIAL column of Table I.
+
+use crate::core::problem::SdpProblem;
+
+/// Solve sequentially, returning the filled table.
+pub fn solve(p: &SdpProblem) -> Vec<i64> {
+    let mut st = p.initial_table();
+    solve_into(p, &mut st);
+    st
+}
+
+/// In-place variant used by the benchmarks to avoid re-allocating the
+/// table inside the timed region.
+pub fn solve_into(p: &SdpProblem, st: &mut Vec<i64>) {
+    debug_assert_eq!(st.len(), p.n);
+    let a1 = p.a1();
+    let op = p.op;
+    for i in a1..p.n {
+        // inner loop of Fig. 1: ST[i] = ST[i-a_1] ⊗ ST[i-a_2] ⊗ …
+        let mut acc = st[i - a1];
+        for &a in &p.offsets[1..] {
+            acc = op.apply(acc, st[i - a as usize]);
+        }
+        st[i] = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::SdpProblem;
+    use crate::core::semigroup::Op;
+
+    #[test]
+    fn fibonacci() {
+        let st = solve(&SdpProblem::fibonacci(12));
+        assert_eq!(st, vec![1, 1, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144]);
+    }
+
+    #[test]
+    fn min_small_hand_computed() {
+        // n=7, a=(3,1), min; init = [5, 9, 2]
+        // ST[3]=min(ST[0],ST[2])=2, ST[4]=min(ST[1],ST[3])=2,
+        // ST[5]=min(ST[2],ST[4])=2, ST[6]=min(ST[3],ST[5])=2
+        let p = SdpProblem::new(7, vec![3, 1], Op::Min, vec![5, 9, 2]).unwrap();
+        assert_eq!(solve(&p), vec![5, 9, 2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn max_propagates() {
+        let p = SdpProblem::new(6, vec![2, 1], Op::Max, vec![3, 7]).unwrap();
+        assert_eq!(solve(&p), vec![3, 7, 7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn single_offset_is_strided_copy() {
+        let p = SdpProblem::new(9, vec![3], Op::Min, vec![4, 5, 6]).unwrap();
+        assert_eq!(solve(&p), vec![4, 5, 6, 4, 5, 6, 4, 5, 6]);
+    }
+
+    #[test]
+    fn solve_into_matches_solve() {
+        let p = SdpProblem::fibonacci(20);
+        let mut st = p.initial_table();
+        solve_into(&p, &mut st);
+        assert_eq!(st, solve(&p));
+    }
+}

@@ -1,0 +1,104 @@
+//! The 2-by-2 pipeline of the companion paper [5] — the mitigation for the
+//! Fig. 4 worst case (consecutive offsets).
+//!
+//! Each pipeline thread executes *two* ⊗-computations per element per
+//! step, so the pipe has ⌈k/2⌉ stages instead of k.  For a run of
+//! consecutive offsets of length L, at most ⌈L/2⌉ threads now read the
+//! same address in one substep — the serialization factor halves, at the
+//! price of each step doing 2 serial combines per thread.
+//!
+//! Freshness still holds: thread `j` applies offsets `a_{2j−1}, a_{2j}`;
+//! the tightest read needs `a_{2j} ≥ ⌈k/2⌉ − j + 1`, which follows from
+//! the strict decrease of Definition 1 (`a_{2j} ≥ k − 2j + 1`).  The
+//! property test below exercises the bound across random instances.
+
+use crate::core::problem::SdpProblem;
+
+/// Number of pipeline stages (threads): ⌈k/2⌉.
+pub fn stages(k: usize) -> usize {
+    k.div_ceil(2)
+}
+
+/// Step-synchronous 2-by-2 pipeline solve.
+pub fn solve(p: &SdpProblem) -> Vec<i64> {
+    let mut st = p.initial_table();
+    let op = p.op;
+    let (n, k, a1) = (p.n, p.k(), p.a1());
+    let k2 = stages(k);
+    for i in a1..=(n + k2 - 2) {
+        for j in 1..=k2.min(i + 1) {
+            let ij = i - j + 1;
+            if ij < a1 || ij >= n {
+                continue;
+            }
+            // first of the pair: offset a_{2j-1}
+            let a = p.offsets[2 * j - 2] as usize;
+            let v = st[ij - a];
+            st[ij] = if j == 1 { v } else { op.apply(st[ij], v) };
+            // second of the pair: offset a_{2j} (absent when k odd, j = k2)
+            if 2 * j - 1 < k {
+                let b = p.offsets[2 * j - 1] as usize;
+                let w = st[ij - b];
+                st[ij] = op.apply(st[ij], w);
+            }
+        }
+    }
+    st
+}
+
+/// Worst-case same-address read degree for a consecutive-offset run of
+/// length `run` under the plain pipeline vs the 2-by-2 pipeline.
+pub fn conflict_degree(run: usize) -> (usize, usize) {
+    (run, run.div_ceil(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::semigroup::Op;
+    use crate::prop::forall;
+    use crate::sdp::{seq, testutil};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_sequential_property() {
+        forall("two_by_two == seq", 80, |g| {
+            let p = testutil::random_problem(g);
+            if solve(&p) == seq::solve(&p) {
+                Ok(())
+            } else {
+                Err(format!("n={} k={} a={:?} op={}", p.n, p.k(), p.offsets, p.op))
+            }
+        });
+    }
+
+    #[test]
+    fn worst_case_consecutive() {
+        let mut rng = Rng::seeded(5);
+        for k in [2, 3, 4, 7, 8] {
+            let p = SdpProblem::worst_case(150, k, Op::Min, &mut rng);
+            assert_eq!(solve(&p), seq::solve(&p), "k={k}");
+        }
+    }
+
+    #[test]
+    fn fibonacci() {
+        assert_eq!(solve(&SdpProblem::fibonacci(16))[15], 987);
+    }
+
+    #[test]
+    fn stage_count() {
+        assert_eq!(stages(1), 1);
+        assert_eq!(stages(2), 1);
+        assert_eq!(stages(3), 2);
+        assert_eq!(stages(8), 4);
+        assert_eq!(stages(9), 5);
+    }
+
+    #[test]
+    fn halves_conflict_degree() {
+        assert_eq!(conflict_degree(8), (8, 4));
+        assert_eq!(conflict_degree(5), (5, 3));
+        assert_eq!(conflict_degree(1), (1, 1));
+    }
+}

@@ -1,0 +1,233 @@
+//! Price a step-cost trace under a [`GpuModel`].
+//!
+//! Per expanded step the model charges
+//!
+//! ```text
+//! launch [+ barrier if devicewide_sync]
+//!   + max(latency-bound, bandwidth-bound)
+//!   + replay + atomic
+//!
+//!   latency-bound   = mem_latency + alu_ops·alu_cycles
+//!   bandwidth-bound = (threads·mem_ops + F·(F−1)) / mem_bw_per_cycle
+//!   replay          = (F−1)·conflict_penalty        (F = conflict degree)
+//!   atomic          = atomic_merges·atomic_cycles
+//! ```
+//!
+//! i.e. enough threads in flight hide latency until aggregate bandwidth
+//! saturates (the paper's own §V diagnosis: "limitations on the bandwidth
+//! of memory on GPU"); a same-address collision of degree F replays its
+//! group F times (the `F·(F−1)` extra transactions) plus a fixed replay
+//! penalty — for the Fig. 4 worst case (F = k) this is what collapses the
+//! plain pipeline and what the 2-by-2 variant halves.  Single-thread
+//! sequential traces are priced on the host-CPU side instead.
+
+use super::machine::GpuModel;
+use super::trace::StepCost;
+
+/// Cycle totals for one priced trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CycleBreakdown {
+    pub total: u64,
+    pub launch: u64,
+    pub sync: u64,
+    pub memory: u64,
+    pub compute: u64,
+    pub serialization: u64,
+    pub steps: u64,
+}
+
+impl CycleBreakdown {
+    pub fn ms(&self, model: &GpuModel) -> f64 {
+        model.gpu_ms(self.total)
+    }
+}
+
+/// Price a GPU trace.
+pub fn simulate(model: &GpuModel, trace: &[StepCost]) -> CycleBreakdown {
+    let mut out = CycleBreakdown::default();
+    for step in trace {
+        let f = step.conflict_degree.max(1);
+        let transactions = step.threads as f64 * step.mem_ops as f64 + (f * (f - 1)) as f64;
+        let bw_bound = transactions / model.mem_bw_per_cycle;
+        let lat_bound = (model.mem_latency + step.alu_ops * model.alu_cycles) as f64;
+        let mem = bw_bound.max(lat_bound);
+        let replay = (f - 1) * model.conflict_penalty;
+        let atomic = step.atomic_merges as f64 * model.atomic_cycles;
+        let sync = if step.devicewide_sync {
+            model.barrier_cycles
+        } else {
+            0
+        };
+        let per_step =
+            (model.launch_cycles + sync) as f64 + mem + replay as f64 + atomic;
+        out.launch += model.launch_cycles * step.repeat;
+        out.sync += sync * step.repeat;
+        out.memory += (mem * step.repeat as f64) as u64;
+        out.compute += step.alu_ops * model.alu_cycles * step.repeat;
+        out.serialization += ((replay as f64 + atomic) * step.repeat as f64) as u64;
+        out.total += (per_step * step.repeat as f64) as u64;
+        out.steps += step.repeat;
+    }
+    out
+}
+
+/// Price a host-CPU (sequential) trace: straight-line ops, no launch or
+/// conflict machinery.
+pub fn simulate_cpu(model: &GpuModel, trace: &[StepCost]) -> CycleBreakdown {
+    let mut out = CycleBreakdown::default();
+    for step in trace {
+        let ops = (step.mem_ops + step.alu_ops) as f64 * model.cpu_cycles_per_op;
+        out.total += (ops * step.repeat as f64) as u64;
+        out.compute = out.total;
+        out.steps += step.repeat;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::trace;
+
+    fn model() -> GpuModel {
+        GpuModel::default()
+    }
+
+    #[test]
+    fn empty_trace_is_zero() {
+        let b = simulate(&model(), &[]);
+        assert_eq!(b.total, 0);
+        assert_eq!(b.steps, 0);
+    }
+
+    #[test]
+    fn launch_dominates_tiny_steps() {
+        let m = model();
+        let b = simulate(
+            &m,
+            &[StepCost {
+                threads: 1,
+                mem_ops: 1,
+                conflict_degree: 1,
+                alu_ops: 1,
+                atomic_merges: 0,
+                devicewide_sync: false,
+                repeat: 100,
+            }],
+        );
+        assert_eq!(b.launch, m.launch_cycles * 100);
+        assert_eq!(b.sync, 0);
+        assert!(b.total >= b.launch);
+    }
+
+    #[test]
+    fn bandwidth_bound_scales_with_threads() {
+        let m = model();
+        // threads·mem_ops ≫ bw·latency ⇒ memory ≈ threads/bw per step
+        let wide = simulate(&m, &trace::naive_trace(1, 1 << 22));
+        let expect = (1u64 << 22) as f64 / m.mem_bw_per_cycle;
+        let got = wide.memory as f64;
+        assert!(
+            (got / expect - 1.0).abs() < 0.05,
+            "memory {got} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn latency_floor_for_narrow_steps() {
+        let m = model();
+        let narrow = simulate(&m, &trace::naive_trace(1, 4));
+        assert_eq!(narrow.memory, m.mem_latency + 1 * m.alu_cycles);
+    }
+
+    #[test]
+    fn conflicts_cost_cycles() {
+        let m = model();
+        let free = StepCost {
+            threads: 64,
+            mem_ops: 2,
+            conflict_degree: 1,
+            alu_ops: 1,
+            atomic_merges: 0,
+            devicewide_sync: true,
+            repeat: 1000,
+        };
+        let conflicted = StepCost {
+            conflict_degree: 64,
+            ..free.clone()
+        };
+        let a = simulate(&m, &[free]);
+        let b = simulate(&m, &[conflicted]);
+        assert!(b.total > a.total);
+        assert!(b.serialization > 0);
+    }
+
+    #[test]
+    fn devicewide_sync_charged() {
+        let m = model();
+        let base = StepCost {
+            threads: 32,
+            mem_ops: 1,
+            conflict_degree: 1,
+            alu_ops: 1,
+            atomic_merges: 0,
+            devicewide_sync: false,
+            repeat: 10,
+        };
+        let synced = StepCost {
+            devicewide_sync: true,
+            ..base.clone()
+        };
+        let a = simulate(&m, &[base]);
+        let b = simulate(&m, &[synced]);
+        assert_eq!(b.total - a.total, m.barrier_cycles * 10);
+        assert_eq!(b.sync, m.barrier_cycles * 10);
+    }
+
+    #[test]
+    fn repeat_is_linear() {
+        let m = model();
+        let one = StepCost {
+            threads: 32,
+            mem_ops: 2,
+            conflict_degree: 2,
+            alu_ops: 1,
+            atomic_merges: 3,
+            devicewide_sync: true,
+            repeat: 1,
+        };
+        let many = StepCost {
+            repeat: 1000,
+            ..one.clone()
+        };
+        let a = simulate(&m, &[one]);
+        let b = simulate(&m, &[many]);
+        assert!((b.total as f64 / a.total as f64 - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn cpu_pricing_ignores_launch() {
+        let m = model();
+        let b = simulate_cpu(&m, &trace::sequential_trace(1000, 8));
+        assert_eq!(b.launch, 0);
+        assert!(b.total > 0);
+    }
+
+    #[test]
+    fn worst_case_pipeline_collapse_and_2x2_rescue() {
+        use crate::core::problem::SdpProblem;
+        use crate::core::semigroup::Op;
+        use crate::util::rng::Rng;
+        let m = model();
+        let mut rng = Rng::seeded(9);
+        let p = SdpProblem::worst_case(4096, 512, Op::Min, &mut rng);
+        let plain = simulate(&m, &trace::pipeline_trace(&p));
+        let two = simulate(&m, &trace::two_by_two_trace(&p));
+        assert!(
+            two.total < plain.total,
+            "2-by-2 ({}) must beat plain pipeline ({}) in the worst case",
+            two.total,
+            plain.total
+        );
+    }
+}

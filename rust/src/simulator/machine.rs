@@ -1,0 +1,99 @@
+//! Machine parameters for the SIMT cost model.
+//!
+//! Defaults are *calibrated* against the paper's own Table I (GTX TITAN
+//! Black, CUDA 9.2, host Xeon E3-1245 v3) — see [`crate::simulator::calibrate`]
+//! for the fit and EXPERIMENTS.md §E1s for the residuals.  The paper's
+//! numbers imply, per element/step:
+//!
+//! * sequential (host): ~6 cycles per table access+⊗ pair in every band
+//!   → `cpu_cycles_per_op = 3.0` over the (mem + alu) op count;
+//! * naive: `2000 + max(404, k/95) + 0.04·k` cycles per element
+//!   (kernel launch + latency/bandwidth + same-address combine);
+//! * pipeline: `2000 + 1700 + max(404, 3k/95)` cycles per outer step
+//!   (launch + device-wide pipeline-step synchronization + one
+//!   read-src/read-tgt/write-tgt sweep at aggregate bandwidth).
+
+/// A parameterized GPU (defaults ≈ GTX TITAN Black: 2880 cores @ 0.98 GHz,
+/// ~336 GB/s GDDR5).
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    /// Core clock in GHz (converts cycles → milliseconds).
+    pub clock_ghz: f64,
+    /// Fixed per-step kernel-launch overhead in cycles (~2 µs).
+    pub launch_cycles: u64,
+    /// Device-wide synchronization cost per pipeline step (cooperative
+    /// barrier across all blocks); charged only for traces that set
+    /// `StepCost::devicewide_sync`.
+    pub barrier_cycles: u64,
+    /// Global-memory round-trip latency in cycles.
+    pub mem_latency: u64,
+    /// Aggregate memory throughput in coalesced 4-byte transactions per
+    /// cycle (336 GB/s ÷ 4 B ÷ 0.98 GHz ≈ 86; fitted 95).
+    pub mem_bw_per_cycle: f64,
+    /// Extra serialized cycles charged per colliding transaction beyond
+    /// the first (same-address replay).
+    pub conflict_penalty: u64,
+    /// ALU cycles per arithmetic op.
+    pub alu_cycles: u64,
+    /// Amortized serialized combine cost per operand for the naive
+    /// implementation's same-address merge (warp-aggregated atomics).
+    pub atomic_cycles: f64,
+    /// Host CPU clock in GHz and cycles per (mem + alu) op for the
+    /// SEQUENTIAL column (g++ on the host Xeon).
+    pub cpu_ghz: f64,
+    pub cpu_cycles_per_op: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            clock_ghz: 0.98,
+            launch_cycles: 2000,
+            barrier_cycles: 1700,
+            mem_latency: 400,
+            mem_bw_per_cycle: 95.0,
+            conflict_penalty: 32,
+            alu_cycles: 4,
+            atomic_cycles: 0.04,
+            cpu_ghz: 3.4,
+            cpu_cycles_per_op: 3.0,
+        }
+    }
+}
+
+impl GpuModel {
+    /// Convert GPU cycles to wall-clock milliseconds.
+    pub fn gpu_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_ghz * 1e9) * 1e3
+    }
+
+    /// Convert host-CPU cycles to wall-clock milliseconds.
+    pub fn cpu_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.cpu_ghz * 1e9) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        let m = GpuModel {
+            clock_ghz: 1.0,
+            cpu_ghz: 2.0,
+            ..Default::default()
+        };
+        assert!((m.gpu_ms(1_000_000) - 1.0).abs() < 1e-9);
+        assert!((m.cpu_ms(1_000_000) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let m = GpuModel::default();
+        assert!(m.mem_latency > m.alu_cycles);
+        assert!(m.mem_bw_per_cycle > 1.0);
+        assert!(m.launch_cycles > 0);
+        assert!(m.barrier_cycles > 0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Cycle-level SIMT GPU cost model — the stand-in for the paper's GTX
+//! TITAN Black + CUDA 9.2 testbed (DESIGN.md §1.2).
+//!
+//! The paper's quantitative claims are about *step counts* and
+//! *memory-conflict serialization*, both architecture-level properties.
+//! We model exactly those: every algorithm is compiled (by [`trace`]) into
+//! a sequence of step descriptors — how many threads issue, how many
+//! memory transactions each makes, the worst same-address collision
+//! degree, how many ALU ops follow — and [`exec`] prices the sequence
+//! under a parameterized machine ([`machine::GpuModel`]): kernel-launch
+//! overhead per step, memory latency, aggregate memory bandwidth, and a
+//! same-address serialization multiplier.  [`calibrate`] documents how the
+//! default parameters reproduce the shape of Table I.
+//!
+//! This is deliberately *not* a functional simulator (the native executors
+//! in [`crate::sdp`]/[`crate::mcm`] are the functional models); it is the
+//! cost half, kept separate so the benches can price huge bands
+//! (n = 2^19) without materializing them.
+
+pub mod calibrate;
+pub mod exec;
+pub mod machine;
+pub mod trace;
+
+pub use exec::{simulate, CycleBreakdown};
+pub use machine::GpuModel;
+pub use trace::{mcm_pipeline_trace, naive_trace, pipeline_trace, prefix_trace, sequential_trace, StepCost};

@@ -1,0 +1,294 @@
+//! Compile algorithms into step-cost traces for the SIMT cost model.
+//!
+//! A [`StepCost`] describes one lock-step GPU step: thread count, memory
+//! transactions per thread, the worst same-address collision degree, ALU
+//! ops, serialized-atomic operand count, and whether the step needs a
+//! device-wide pipeline barrier.  Identical step descriptors are
+//! run-length compressed (`repeat`) so a 2^19-element band traces in
+//! microseconds.
+
+use crate::core::problem::SdpProblem;
+use crate::core::schedule::McmSchedule;
+
+/// One (possibly repeated) lock-step step of a GPU program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepCost {
+    /// Active threads issuing this step.
+    pub threads: u64,
+    /// Memory transactions per thread (reads + writes).
+    pub mem_ops: u64,
+    /// Worst same-address collision degree across the step's substeps
+    /// (1 = conflict-free; the paper's serialization factor).
+    pub conflict_degree: u64,
+    /// ALU operations per thread.
+    pub alu_ops: u64,
+    /// Operands merged through the serialized same-address combine
+    /// (naive implementation only; 0 elsewhere).
+    pub atomic_merges: u64,
+    /// Step ends with a device-wide barrier (pipeline-style programs).
+    pub devicewide_sync: bool,
+    /// Run-length: this step repeats `repeat` times.
+    pub repeat: u64,
+}
+
+impl StepCost {
+    fn new(threads: u64, mem_ops: u64, repeat: u64) -> StepCost {
+        StepCost {
+            threads,
+            mem_ops,
+            conflict_degree: 1,
+            alu_ops: 1,
+            atomic_merges: 0,
+            devicewide_sync: false,
+            repeat,
+        }
+    }
+}
+
+/// Host-sequential trace (Fig. 1): `n` elements × `k` operand folds on one
+/// CPU thread.  Priced on the CPU side of the model.
+pub fn sequential_trace(n: u64, k: u64) -> Vec<StepCost> {
+    vec![StepCost {
+        threads: 1,
+        mem_ops: k + 1,
+        alu_ops: k,
+        ..StepCost::new(1, k + 1, n)
+    }]
+}
+
+/// Naive multi-thread trace (§II-B): one kernel per element; k threads
+/// read their operands in parallel, then combine into the single target —
+/// same-address serialized (atomic merge).
+pub fn naive_trace(n: u64, k: u64) -> Vec<StepCost> {
+    vec![StepCost {
+        atomic_merges: k,
+        ..StepCost::new(k, 1, n)
+    }]
+}
+
+/// Parallel-prefix trace (§II-B): each element takes a gather step plus a
+/// ⌈log₂k⌉-round tournament, every round a separate synchronized step —
+/// exactly the extra-synchronization cost that makes it non-work-optimal.
+pub fn prefix_trace(n: u64, k: u64) -> Vec<StepCost> {
+    let mut rounds = vec![StepCost::new(k, 1, n)];
+    let mut m = k;
+    while m > 1 {
+        let half = m.div_ceil(2);
+        rounds.push(StepCost::new(m - half, 2, n));
+        m = half;
+    }
+    rounds
+}
+
+/// Pipeline trace (Fig. 2): `n + k − 1 − a₁` device-synchronized steps of
+/// k threads, each doing read-src / read-tgt / write-tgt.  The steady-
+/// state conflict degree equals the longest consecutive-offset run
+/// (§III-A); computing it from the offsets directly (O(k)) keeps 2^19
+/// bands traceable and is verified against the full O(nk) access-trace
+/// analyzer in tests.
+pub fn pipeline_trace(p: &SdpProblem) -> Vec<StepCost> {
+    let degree = p.longest_consecutive_run() as u64;
+    let n = p.n as u64;
+    let k = p.k() as u64;
+    let a1 = p.offsets[0] as u64;
+    let total = n + k - 1 - a1; // outer steps
+    let ramp = (k - 1).min(total);
+    let steady = total - ramp;
+    let mut steps = Vec::new();
+    // fill/drain ramp: 1, 2, …, k−1 threads — approximated at k/2 average
+    if ramp > 0 {
+        steps.push(StepCost {
+            conflict_degree: degree,
+            devicewide_sync: true,
+            ..StepCost::new((k / 2).max(1), 3, ramp)
+        });
+    }
+    if steady > 0 {
+        steps.push(StepCost {
+            conflict_degree: degree,
+            devicewide_sync: true,
+            ..StepCost::new(k, 3, steady)
+        });
+    }
+    steps
+}
+
+/// 2-by-2 pipeline trace ([5]): ⌈k/2⌉ threads, two computations each,
+/// halved conflict degree.
+pub fn two_by_two_trace(p: &SdpProblem) -> Vec<StepCost> {
+    let degree = (p.longest_consecutive_run() as u64).div_ceil(2);
+    let n = p.n as u64;
+    let k2 = (p.k() as u64).div_ceil(2);
+    let a1 = p.offsets[0] as u64;
+    let total = n + k2 - 1 - a1;
+    vec![StepCost {
+        conflict_degree: degree,
+        alu_ops: 2,
+        devicewide_sync: true,
+        ..StepCost::new(k2, 4, total)
+    }]
+}
+
+/// MCM pipeline trace (Fig. 8): one descriptor per outer step with the
+/// step's true width and collision degree.  Consecutive compatible
+/// descriptors are merged.
+pub fn mcm_pipeline_trace(sched: &McmSchedule) -> Vec<StepCost> {
+    let mut out: Vec<StepCost> = Vec::new();
+    for entries in &sched.steps {
+        let mut degree = 1u64;
+        for field in 0..2 {
+            let mut addrs: Vec<u32> = entries
+                .iter()
+                .map(|e| if field == 0 { e.l } else { e.r })
+                .collect();
+            addrs.sort_unstable();
+            let mut run = 1u64;
+            for w in addrs.windows(2) {
+                if w[0] == w[1] {
+                    run += 1;
+                    degree = degree.max(run);
+                } else {
+                    run = 1;
+                }
+            }
+        }
+        let step = StepCost {
+            conflict_degree: degree,
+            // substeps 1, 2 (reads) + substep 4 (read-modify-write)
+            alu_ops: 4, // 2 mul + 2 add of f, plus the ↓ combine
+            devicewide_sync: true,
+            ..StepCost::new(entries.len().max(1) as u64, 4, 1)
+        };
+        match out.last_mut() {
+            Some(prev)
+                if prev.threads == step.threads
+                    && prev.conflict_degree == step.conflict_degree =>
+            {
+                prev.repeat += 1
+            }
+            _ => out.push(step),
+        }
+    }
+    out
+}
+
+/// MCM diagonal-wavefront trace: diagonal `d` = one kernel of `n−d`
+/// threads each folding `d` operand pairs.
+pub fn mcm_diagonal_trace(n: u64) -> Vec<StepCost> {
+    (1..n)
+        .map(|d| StepCost {
+            alu_ops: 4 * d,
+            ..StepCost::new(n - d, 2 * d + 1, 1)
+        })
+        .collect()
+}
+
+/// MCM sequential trace: Σ d·(n−d) operand folds on one host thread.
+pub fn mcm_sequential_trace(n: u64) -> Vec<StepCost> {
+    let work: u64 = (1..n).map(|d| d * (n - d)).sum();
+    vec![StepCost {
+        alu_ops: 4,
+        ..StepCost::new(1, 3, work)
+    }]
+}
+
+/// Total steps in a trace (expanded).
+pub fn total_steps(trace: &[StepCost]) -> u64 {
+    trace.iter().map(|s| s.repeat).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::SdpProblem;
+    use crate::core::schedule::{McmSchedule, McmVariant};
+    use crate::core::semigroup::Op;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sequential_work_is_n_elements() {
+        let t = sequential_trace(100, 8);
+        assert_eq!(total_steps(&t), 100);
+        assert_eq!(t[0].mem_ops, 9);
+    }
+
+    #[test]
+    fn prefix_rounds_are_log_k() {
+        let t = prefix_trace(10, 8);
+        // 1 gather + 3 rounds
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[1].threads, 4);
+        assert_eq!(t[2].threads, 2);
+        assert_eq!(t[3].threads, 1);
+    }
+
+    #[test]
+    fn pipeline_steps_linear_in_n() {
+        let mut rng = Rng::seeded(1);
+        let p = SdpProblem::random(&mut rng, 1000..1001, 8..9, Op::Min);
+        let t = pipeline_trace(&p);
+        let steps = total_steps(&t);
+        let expect = p.n as u64 + p.k() as u64 - 1 - p.offsets[0] as u64;
+        assert_eq!(steps, expect);
+        assert!(t.iter().all(|s| s.devicewide_sync));
+    }
+
+    #[test]
+    fn pipeline_worst_case_degree_is_k() {
+        let mut rng = Rng::seeded(2);
+        let p = SdpProblem::worst_case(256, 8, Op::Min, &mut rng);
+        let t = pipeline_trace(&p);
+        assert!(t.iter().all(|s| s.conflict_degree == 8));
+        let t2 = two_by_two_trace(&p);
+        assert!(t2.iter().all(|s| s.conflict_degree == 4));
+    }
+
+    #[test]
+    fn pipeline_degree_matches_full_analyzer() {
+        use crate::core::conflict;
+        use crate::core::schedule::SdpSchedule;
+        use crate::prop::forall;
+        forall("trace degree == analyzer", 40, |g| {
+            let k = g.usize(1..9);
+            let offs = g.offsets(k, k as i64 + 10);
+            // n large enough that every thread is simultaneously active in
+            // some step, so the full consecutive run materializes
+            let n = offs[0] as usize + k + 1 + g.usize(0..60);
+            let init = vec![0i64; offs[0] as usize];
+            let p = SdpProblem::new(n, offs.clone(), Op::Min, init).unwrap();
+            let sched = SdpSchedule::new(n, offs);
+            let analyzed = conflict::analyze_sdp(&sched).max_degree.max(1) as u64;
+            let traced = pipeline_trace(&p)[0].conflict_degree;
+            if traced == analyzed {
+                Ok(())
+            } else {
+                Err(format!(
+                    "traced {traced} != analyzed {analyzed} for {:?}",
+                    p.offsets
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn mcm_trace_steps_match_schedule() {
+        let sched = McmSchedule::compile(12, McmVariant::Corrected);
+        let t = mcm_pipeline_trace(&sched);
+        assert_eq!(total_steps(&t), sched.num_steps() as u64);
+    }
+
+    #[test]
+    fn mcm_diagonal_thread_counts() {
+        let t = mcm_diagonal_trace(6);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t[0].threads, 5);
+        assert_eq!(t[4].threads, 1);
+    }
+
+    #[test]
+    fn mcm_sequential_total_work() {
+        // n=4: Σ d(n−d) = 3 + 4 + 3 = 10
+        let t = mcm_sequential_trace(4);
+        assert_eq!(total_steps(&t), 10);
+    }
+}

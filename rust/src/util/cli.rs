@@ -1,0 +1,243 @@
+//! Tiny declarative CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// One registered flag.
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    boolean: bool,
+}
+
+/// Declarative argument parser.
+///
+/// ```
+/// use pipedp::util::cli::Args;
+/// let args = Args::new("demo", "demo command")
+///     .flag("n", "problem size", Some("64"))
+///     .boolflag("verbose", "print more")
+///     .parse_from(vec!["--n".into(), "128".into(), "--verbose".into()])
+///     .unwrap();
+/// assert_eq!(args.get_usize("n").unwrap(), 128);
+/// assert!(args.get_bool("verbose"));
+/// ```
+pub struct Args {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Args {
+            program,
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Register a value flag with an optional default.
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&str>) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            boolean: false,
+        });
+        self
+    }
+
+    /// Register a boolean flag (present = true).
+    pub fn boolflag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: None,
+            boolean: true,
+        });
+        self
+    }
+
+    /// Parse from an explicit vector (testing) — see [`Args::parse`] for
+    /// process args.
+    pub fn parse_from(mut self, argv: Vec<String>) -> Result<Args> {
+        // seed defaults
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                self.values.insert(s.name.to_string(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                eprintln!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| Error::InvalidProblem(format!("unknown flag --{name}")))?;
+                let value = if spec.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            Error::InvalidProblem(format!("--{name} needs a value"))
+                        })?,
+                    }
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse the process arguments after the subcommand.
+    pub fn parse(self, argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        self.parse_from(argv.into_iter().collect())
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nflags:\n", self.program, self.about);
+        for s in &self.specs {
+            let default = s
+                .default
+                .as_deref()
+                .map(|d| format!(" (default {d})"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<14} {}{}\n", s.name, s.help, default));
+        }
+        out
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| Error::InvalidProblem(format!("--{name} must be a non-negative integer")))
+    }
+
+    pub fn get_i64(&self, name: &str) -> Result<i64> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| Error::InvalidProblem(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| Error::InvalidProblem(format!("--{name} must be a number")))
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<&str> {
+        self.req(name)
+    }
+
+    /// Comma-separated i64 list, e.g. `--offsets 7,5,2`.
+    pub fn get_i64_list(&self, name: &str) -> Result<Vec<i64>> {
+        self.req(name)?
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| Error::InvalidProblem(format!("--{name}: bad integer '{s}'")))
+            })
+            .collect()
+    }
+
+    fn req(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::InvalidProblem(format!("missing required flag --{name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Args {
+        Args::new("t", "test")
+            .flag("n", "size", Some("10"))
+            .flag("op", "operator", None)
+            .boolflag("fast", "go fast")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = base().parse_from(vec![]).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 10);
+        assert!(!a.get_bool("fast"));
+        assert!(a.get_str("op").is_err());
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = base()
+            .parse_from(vec!["--n".into(), "42".into(), "--op=min".into()])
+            .unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 42);
+        assert_eq!(a.get_str("op").unwrap(), "min");
+    }
+
+    #[test]
+    fn bool_flag() {
+        let a = base().parse_from(vec!["--fast".into()]).unwrap();
+        assert!(a.get_bool("fast"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(base().parse_from(vec!["--wat".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(base().parse_from(vec!["--n".into()]).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = base()
+            .parse_from(vec!["pos1".into(), "--n".into(), "5".into(), "pos2".into()])
+            .unwrap();
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn i64_list() {
+        let a = base()
+            .parse_from(vec!["--op".into(), "7,5, 2".into()])
+            .unwrap();
+        assert_eq!(a.get_i64_list("op").unwrap(), vec![7, 5, 2]);
+    }
+}

@@ -1,0 +1,11 @@
+//! From-scratch utility substrates.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so the conveniences a project would normally pull from
+//! crates.io (serde_json, clap, rand, prettytable) are implemented here
+//! from first principles: [`json`], [`cli`], [`rng`], [`table`].
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,192 @@
+//! Deterministic PRNG (SplitMix64 seeding + xoshiro256**), plus the
+//! workload-distribution helpers the benchmarks use.
+//!
+//! Not cryptographic; chosen for reproducible benchmarks and property
+//! tests.  The same seeds are used by the Python golden-file generator so
+//! both languages see identical workloads.
+
+/// xoshiro256** with SplitMix64 seed expansion.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn seeded(seed: u64) -> Self {
+        // SplitMix64 to fill the state; never all-zero.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Next raw 64 bits.
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[range.start, range.end)` (end exclusive, must be
+    /// non-empty).  Uses rejection sampling — unbiased.
+    pub fn range(&mut self, range: std::ops::Range<i64>) -> i64 {
+        assert!(range.start < range.end, "empty range");
+        let span = (range.end - range.start) as u64;
+        // rejection sampling to kill modulo bias
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return range.start + (v % span) as i64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[0, n)`.
+    pub fn index(&mut self, n: usize) -> usize {
+        self.range(0..n as i64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// `k` distinct values sampled from `[1, max]`, sorted strictly
+    /// decreasing — i.e. a valid S-DP offset vector (Definition 1).
+    pub fn offsets(&mut self, k: usize, max: i64) -> Vec<i64> {
+        assert!(k as i64 <= max, "cannot draw {k} distinct offsets from [1, {max}]");
+        // Floyd's algorithm for distinct sampling.
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (max - k as i64 + 1)..=max {
+            let t = self.range(1..j + 1);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        let mut v: Vec<i64> = chosen.into_iter().collect();
+        v.reverse();
+        v
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random sub-generator (for parallel workers with decorrelated streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::seeded(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seeded(7);
+        let mut b = Rng::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelated() {
+        let x = Rng::seeded(1).next_u64();
+        let y = Rng::seeded(2).next_u64();
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut rng = Rng::seeded(3);
+        for _ in 0..10_000 {
+            let v = rng.range(-5..17);
+            assert!((-5..17).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_hits_all_values() {
+        let mut rng = Rng::seeded(4);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[rng.range(0..8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::seeded(5);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn offsets_are_valid_sdp_offsets() {
+        let mut rng = Rng::seeded(6);
+        for _ in 0..200 {
+            let k = rng.index(10) + 1;
+            let max = k as i64 + rng.range(0..40);
+            let offs = rng.offsets(k, max);
+            assert_eq!(offs.len(), k);
+            assert!(offs.windows(2).all(|w| w[0] > w[1]), "{offs:?}");
+            assert!(*offs.last().unwrap() >= 1);
+            assert!(offs[0] <= max);
+        }
+    }
+
+    #[test]
+    fn offsets_full_range() {
+        // k == max forces the consecutive worst case (Fig. 4)
+        let mut rng = Rng::seeded(7);
+        let offs = rng.offsets(5, 5);
+        assert_eq!(offs, vec![5, 4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut rng = Rng::seeded(8);
+        let mut v: Vec<i64> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

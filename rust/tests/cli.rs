@@ -1,0 +1,109 @@
+//! CLI integration: drive the real `pipedp` binary end-to-end.
+
+use std::process::{Command, Output};
+
+fn pipedp(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_pipedp"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn solve_sdp_fibonacci() {
+    let out = pipedp(&[
+        "solve-sdp", "--n", "16", "--offsets", "2,1", "--op", "add",
+        "--init", "1,1", "--backend", "native",
+    ]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("ST[15] = 987"), "{}", stdout(&out));
+}
+
+#[test]
+fn solve_mcm_clrs_with_parens() {
+    let out = pipedp(&["solve-mcm", "--dims", "30,35,15,5,10,20,25", "--parens"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("optimal cost = 15125"), "{s}");
+    assert!(s.contains("((A1(A2A3))((A4A5)A6))"), "{s}");
+}
+
+#[test]
+fn solve_mcm_faithful_warns_on_counterexample() {
+    let out = pipedp(&["solve-mcm", "--dims", "24,3,6,7,6", "--variant", "faithful"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("optimal cost = 792"), "{s}");
+    assert!(s.contains("true optimum = 684"), "{s}");
+}
+
+#[test]
+fn trace_fig3() {
+    let out = pipedp(&["trace", "--kind", "sdp", "--n", "8", "--offsets", "5,3,1"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("T1 ST[5] ← ST[0]"), "{s}");
+    assert!(s.contains("⇒ ST[5] final"), "{s}");
+}
+
+#[test]
+fn schedule_summary_and_json() {
+    let out = pipedp(&["schedule", "--n", "8", "--variant", "faithful"]);
+    let s = stdout(&out);
+    assert!(s.contains("steps=34") && s.contains("hazards=7"), "{s}");
+
+    let out = pipedp(&["schedule", "--n", "5", "--variant", "corrected", "--json"]);
+    assert!(out.status.success());
+    let v = pipedp::util::json::Json::parse(stdout(&out).trim()).expect("valid json");
+    assert_eq!(v.i64_field("n").unwrap(), 5);
+    assert_eq!(v.str_field("variant").unwrap(), "corrected");
+    assert!(v.arr_field("steps").unwrap().len() >= 13);
+}
+
+#[test]
+fn verify_reports_hazard_asymmetry() {
+    let out = pipedp(&["verify", "--max-n", "6"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    // faithful rows show hazards ≥ 1 from n=4; corrected rows show 0
+    assert!(s.contains("faithful"), "{s}");
+    assert!(s.contains("corrected"), "{s}");
+    assert!(s.contains("Theorem 1"), "{s}");
+}
+
+#[test]
+fn simulate_prints_three_bands() {
+    let out = pipedp(&["simulate", "--samples", "2"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("2^14≤n≤2^15"), "{s}");
+    assert!(s.contains("2^18≤n≤2^19"), "{s}");
+}
+
+#[test]
+fn unknown_subcommand_exits_2() {
+    let out = pipedp(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn bad_flags_exit_1_with_message() {
+    let out = pipedp(&["solve-sdp", "--n", "10", "--offsets", "1,2", "--init", "0"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("strictly decreasing"));
+}
+
+#[test]
+fn xla_backend_via_cli_when_artifacts_exist() {
+    if !std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists() {
+        return;
+    }
+    let out = pipedp(&["solve-mcm", "--dims", "30,35,15,5,10,20,25", "--backend", "xla"]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("optimal cost = 15125"), "{}", stdout(&out));
+}

@@ -1,0 +1,110 @@
+//! Cross-language golden tests: the Rust schedule compiler and reference
+//! semantics must agree bit-for-bit with the Python layer's
+//! (`python/compile/golden.py` regenerates `rust/tests/golden/*.json`).
+
+use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::schedule::{McmSchedule, McmVariant};
+use pipedp::core::semigroup::Op;
+use pipedp::util::json::Json;
+
+fn load(name: &str) -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden")
+        .join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden file {path:?} ({e}); run `python -m compile.golden`"));
+    Json::parse(&text).expect("golden file parses")
+}
+
+#[test]
+fn schedules_match_python() {
+    let golden = load("schedules.json");
+    for n in [2usize, 4, 5, 8, 11] {
+        for (variant, name) in [
+            (McmVariant::PaperFaithful, "faithful"),
+            (McmVariant::Corrected, "corrected"),
+        ] {
+            let expect = golden.field(&format!("n{n}_{name}")).unwrap();
+            let sched = McmSchedule::compile(n, variant);
+            assert_eq!(
+                sched.num_steps(),
+                expect.usize_field("num_steps").unwrap(),
+                "n={n} {name}: step count"
+            );
+            assert_eq!(
+                sched.max_width(),
+                expect.usize_field("max_width").unwrap(),
+                "n={n} {name}: width"
+            );
+            let steps = expect.arr_field("steps").unwrap();
+            assert_eq!(sched.steps.len(), steps.len());
+            for (s, (got, want)) in sched.steps.iter().zip(steps).enumerate() {
+                let want = want.as_arr().unwrap();
+                assert_eq!(got.len(), want.len(), "n={n} {name} step {s}: lane count");
+                for (e, w) in got.iter().zip(want) {
+                    let w: Vec<i64> = w
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.as_i64().unwrap())
+                        .collect();
+                    let got_row = [
+                        e.tgt as i64,
+                        e.l as i64,
+                        e.r as i64,
+                        e.pa as i64,
+                        e.pb as i64,
+                        e.pc as i64,
+                        e.term as i64,
+                    ];
+                    assert_eq!(got_row.as_slice(), w.as_slice(), "n={n} {name} step {s}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sdp_semantics_match_python() {
+    let golden = load("sdp_cases.json");
+    for case in golden.as_arr().unwrap() {
+        let n = case.usize_field("n").unwrap();
+        let offsets = case.i64_vec_field("offsets").unwrap();
+        let op = Op::parse(case.str_field("op").unwrap()).unwrap();
+        let init = case.i64_vec_field("init").unwrap();
+        let want = case.i64_vec_field("solved").unwrap();
+        let p = SdpProblem::new(n, offsets, op, init).unwrap();
+        assert_eq!(pipedp::sdp::seq::solve(&p), want, "seq, n={n} op={op}");
+        assert_eq!(pipedp::sdp::pipeline::solve(&p), want, "pipeline, n={n}");
+        assert_eq!(pipedp::sdp::prefix::solve(&p), want, "prefix, n={n}");
+        assert_eq!(pipedp::sdp::two_by_two::solve(&p), want, "2x2, n={n}");
+    }
+}
+
+#[test]
+fn mcm_semantics_match_python() {
+    let golden = load("mcm_cases.json");
+    for case in golden.as_arr().unwrap() {
+        let dims = case.i64_vec_field("dims").unwrap();
+        let p = McmProblem::new(dims.clone()).unwrap();
+        let linear = case.i64_vec_field("linear_table").unwrap();
+        let faithful = case.i64_vec_field("faithful_exec").unwrap();
+        let corrected = case.i64_vec_field("corrected_exec").unwrap();
+        let parens = case.str_field("parens").unwrap();
+        assert_eq!(pipedp::mcm::seq::linear_table(&p), linear, "{dims:?}");
+        assert_eq!(
+            pipedp::mcm::pipeline::solve(&p, McmVariant::PaperFaithful),
+            faithful,
+            "faithful exec {dims:?}"
+        );
+        assert_eq!(
+            pipedp::mcm::pipeline::solve(&p, McmVariant::Corrected),
+            corrected,
+            "corrected exec {dims:?}"
+        );
+        assert_eq!(pipedp::mcm::seq::parenthesization(&p), parens, "{dims:?}");
+        // corrected always equals the DP truth (re-assert the invariant
+        // through the *python-generated* fixtures)
+        assert_eq!(corrected, linear);
+    }
+}

@@ -1,0 +1,222 @@
+//! End-to-end server tests: a real TCP round trip through the accept
+//! thread, batcher, worker pool and router.
+
+use std::time::Duration;
+
+use pipedp::coordinator::batcher::Policy;
+use pipedp::coordinator::request::{Backend, Request, RequestBody};
+use pipedp::coordinator::server::{Client, Config, Server};
+use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::schedule::McmVariant;
+use pipedp::core::semigroup::Op;
+
+fn start_server() -> Server {
+    Server::start(Config {
+        addr: "127.0.0.1:0".into(), // ephemeral port
+        workers: 2,
+        policy: Policy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        warm: true,
+    })
+    .expect("server starts")
+}
+
+fn sdp_request(p: SdpProblem, backend: Backend, full: bool) -> Request {
+    Request {
+        id: 0,
+        body: RequestBody::Sdp(p),
+        backend,
+        full,
+    }
+}
+
+#[test]
+fn fibonacci_round_trip() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let resp = client
+        .call(sdp_request(SdpProblem::fibonacci(32), Backend::Native, false))
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 2178309); // fib(32) with ST[0]=ST[1]=1
+    assert_eq!(resp.served_by, "native:sdp_pipeline");
+}
+
+#[test]
+fn mcm_round_trip_with_table() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: true,
+        })
+        .unwrap();
+    assert!(resp.ok);
+    assert_eq!(resp.value, 15125);
+    let table = resp.table.unwrap();
+    assert_eq!(table.len(), 21); // 6·7/2 cells
+    assert_eq!(*table.last().unwrap(), 15125);
+}
+
+#[test]
+fn faithful_variant_served_with_divergence() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let p = McmProblem::hazard_counterexample();
+    let truth = pipedp::mcm::seq::cost(&p);
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Mcm {
+                problem: p,
+                variant: McmVariant::PaperFaithful,
+            },
+            backend: Backend::Native,
+            full: false,
+        })
+        .unwrap();
+    assert!(resp.ok);
+    assert!(
+        resp.value > truth,
+        "server must faithfully serve the published schedule's wrong answer"
+    );
+}
+
+#[test]
+fn malformed_and_invalid_requests_get_errors_not_disconnects() {
+    let server = start_server();
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    for bad in [
+        "this is not json\n",
+        "{\"id\": 1}\n",
+        "{\"id\": 1, \"kind\": \"sdp\", \"n\": 4, \"offsets\": [1, 2], \"op\": \"min\", \"init\": [0]}\n",
+    ] {
+        writer.write_all(bad.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = pipedp::coordinator::request::Response::decode(line.trim()).unwrap();
+        assert!(!resp.ok, "bad input {bad:?} must produce an error response");
+        assert!(resp.error.is_some());
+    }
+    // the connection still works afterwards
+    let mut good = pipedp::coordinator::request::Request {
+        id: 5,
+        body: RequestBody::Sdp(SdpProblem::fibonacci(10)),
+        backend: Backend::Native,
+        full: false,
+    }
+    .encode();
+    good.push('\n');
+    writer.write_all(good.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = pipedp::coordinator::request::Response::decode(line.trim()).unwrap();
+    assert!(resp.ok);
+    assert_eq!(resp.value, 55);
+}
+
+#[test]
+fn pipelined_requests_all_answered_in_order() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let reqs: Vec<Request> = (0..20)
+        .map(|i| {
+            sdp_request(
+                SdpProblem::new(16 + i, vec![2, 1], Op::Min, vec![9, 4]).unwrap(),
+                Backend::Native,
+                false,
+            )
+        })
+        .collect();
+    let resps = client.call_pipelined(reqs).unwrap();
+    assert_eq!(resps.len(), 20);
+    assert!(resps.iter().all(|r| r.ok));
+    assert!(resps.windows(2).all(|w| w[0].id < w[1].id));
+    // min of {9, 4} propagates to 4 everywhere
+    assert!(resps.iter().all(|r| r.value == 4));
+}
+
+#[test]
+fn stats_request_reports_metrics() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    for _ in 0..5 {
+        client
+            .call(sdp_request(SdpProblem::fibonacci(16), Backend::Native, false))
+            .unwrap();
+    }
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Stats,
+            backend: Backend::Auto,
+            full: false,
+        })
+        .unwrap();
+    assert!(resp.ok);
+    let stats = resp.stats.unwrap();
+    assert!(stats.i64_field("requests").unwrap() >= 5);
+    assert_eq!(stats.i64_field("errors").unwrap(), 0);
+}
+
+#[test]
+fn concurrent_clients() {
+    let server = start_server();
+    let addr = server.local_addr.to_string();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for i in 0..10 {
+                    let n = 12 + ((t * 10 + i) % 20);
+                    let resp = client
+                        .call(sdp_request(SdpProblem::fibonacci(n), Backend::Native, false))
+                        .unwrap();
+                    assert!(resp.ok);
+                }
+            });
+        }
+    });
+    assert!(server.metrics.latency.count() >= 40);
+}
+
+#[test]
+fn xla_backend_served_when_artifacts_present() {
+    if !pipedp::runtime::artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let mut rng = pipedp::util::rng::Rng::seeded(3);
+    let p = McmProblem::random(&mut rng, 12, 20);
+    let want = pipedp::mcm::seq::cost(&p);
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Mcm {
+                problem: p,
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Xla,
+            full: false,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, want);
+    assert!(resp.served_by.starts_with("xla:"), "{}", resp.served_by);
+}
