@@ -1,0 +1,249 @@
+//! E10 — schedule representation ablation: the flat structure-of-arrays
+//! arena (this repo, DESIGN.md §Perf) vs the seed's nested
+//! `Vec<Vec<Entry>>` schedule, plus the surrounding MCM executor field
+//! (sequential DP, diagonal wavefront, threaded pipeline) — all in
+//! ns/cell so sizes are comparable.
+//!
+//! The nested baseline is a faithful copy of the seed: per-step
+//! `Vec<Entry>` (28-byte AoS rows, one heap allocation per outer step,
+//! `BTreeMap` materialization) with the two-phase strided executor it
+//! shipped with.  At n = 1024 either representation holds ~179M terms
+//! (~5 GB), so the two are built and measured sequentially, never held
+//! at the same time.
+//!
+//! Run: `cargo bench --bench schedule_repr`          (table to stdout)
+//!      `cargo bench --bench schedule_repr -- --json` (also writes
+//!      BENCH_pipeline.json at the repo root)
+//! Env: `PIPEDP_BENCH_FAST=1` shrinks runs; `PIPEDP_BENCH_MAX_N=256`
+//!      drops the larger sizes (memory-constrained machines).
+
+use pipedp::bench::{measure, Config};
+use pipedp::core::problem::McmProblem;
+use pipedp::core::schedule::{cell_terms, linear, Entry, McmSchedule, McmVariant};
+use pipedp::util::json::Json;
+use pipedp::util::rng::Rng;
+use pipedp::util::table::Table;
+
+/// The seed's nested schedule representation: one heap-allocated entry
+/// list per outer step.
+struct NestedSchedule {
+    steps: Vec<Vec<Entry>>,
+}
+
+/// Verbatim port of the seed's materialization: BTreeMap of per-step
+/// `Vec<Entry>`, sorted by term within a step.
+fn materialize_nested(n: usize, start: &[usize]) -> NestedSchedule {
+    let ncells = linear::num_cells(n);
+    let mut steps_map: std::collections::BTreeMap<usize, Vec<Entry>> =
+        std::collections::BTreeMap::new();
+    for x in n..ncells {
+        let (r, c) = linear::cell_coords(n, x);
+        for (j, (li, ri, pa, pb, pc)) in cell_terms(n, r, c).iter().enumerate() {
+            steps_map.entry(start[x] + j).or_default().push(Entry {
+                tgt: x as u32,
+                l: *li as u32,
+                r: *ri as u32,
+                pa: *pa as u32,
+                pb: *pb as u32,
+                pc: *pc as u32,
+                term: (j + 1) as u32,
+            });
+        }
+    }
+    let num_steps = steps_map.keys().next_back().map(|s| s + 1).unwrap_or(0);
+    let mut steps = vec![Vec::new(); num_steps];
+    for (s, mut entries) in steps_map {
+        entries.sort_by_key(|e| e.term);
+        steps[s] = entries;
+    }
+    NestedSchedule { steps }
+}
+
+/// Verbatim port of the seed's step-synchronous executor over the nested
+/// representation (two-phase, AoS entry loads).
+fn execute_nested(p: &McmProblem, sched: &NestedSchedule, n: usize) -> Vec<i64> {
+    let ncells = linear::num_cells(n);
+    let mut st = vec![0i64; ncells];
+    let dims = &p.dims;
+    let mut pending: Vec<(u32, bool, i64)> = Vec::with_capacity(n);
+    for entries in &sched.steps {
+        pending.clear();
+        for e in entries {
+            let v = st[e.l as usize]
+                + st[e.r as usize]
+                + dims[e.pa as usize] * dims[e.pb as usize] * dims[e.pc as usize];
+            pending.push((e.tgt, e.is_first(), v));
+        }
+        for &(tgt, first, v) in &pending {
+            let slot = &mut st[tgt as usize];
+            *slot = if first { v } else { (*slot).min(v) };
+        }
+    }
+    st
+}
+
+/// Two-phase executor over the *flat* arena (safe indexing, like the
+/// nested baseline): isolates the representation effect from the fused
+/// executor's algorithmic win — `flat 2-phase / nested` is layout alone,
+/// `flat (shipped) / nested` is layout + fusion.
+fn execute_flat_two_phase(p: &McmProblem, sched: &McmSchedule, n: usize) -> Vec<i64> {
+    let mut st = vec![0i64; linear::num_cells(n)];
+    let dims = &p.dims;
+    let mut pending: Vec<i64> = vec![0; sched.max_width()];
+    for s in 0..sched.num_steps() {
+        let view = sched.step_view(s);
+        for lane in 0..view.len() {
+            pending[lane] = st[view.l[lane] as usize]
+                + st[view.r[lane] as usize]
+                + dims[view.pa[lane] as usize]
+                    * dims[view.pb[lane] as usize]
+                    * dims[view.pc[lane] as usize];
+        }
+        for lane in 0..view.len() {
+            let slot = &mut st[view.tgt[lane] as usize];
+            let v = pending[lane];
+            *slot = if view.term[lane] == 1 { v } else { (*slot).min(v) };
+        }
+    }
+    st
+}
+
+fn ns_per_cell(mean: std::time::Duration, n: usize) -> f64 {
+    mean.as_nanos() as f64 / linear::num_cells(n) as f64
+}
+
+fn main() {
+    let emit_json = std::env::args().any(|a| a == "--json");
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let cfg = Config::from_env();
+    let max_n: usize = std::env::var("PIPEDP_BENCH_MAX_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let mut rng = Rng::seeded(31);
+
+    let mut table = Table::new(vec![
+        "n",
+        "SEQ O(n³)",
+        "DIAGONAL",
+        "PIPE nested (seed)",
+        "PIPE flat 2-phase",
+        "PIPE flat (shipped)",
+        "PIPE threaded",
+        "flat/nested",
+    ]);
+    let mut results: Vec<Json> = Vec::new();
+    let mut speedup_1024 = 0.0f64;
+
+    for n in [64usize, 256, 1024] {
+        if n > max_n {
+            println!("skipping n={n} (PIPEDP_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let p = McmProblem::random(&mut rng, n, 40);
+        let truth = pipedp::mcm::seq::linear_table(&p);
+
+        // --- flat arena first ------------------------------------------
+        let sched = McmSchedule::compile(n, McmVariant::Corrected);
+        assert_eq!(
+            pipedp::mcm::pipeline::execute(&p, &sched),
+            truth,
+            "n={n}: flat executor diverged from the DP oracle"
+        );
+        assert_eq!(
+            execute_flat_two_phase(&p, &sched, n),
+            truth,
+            "n={n}: flat two-phase diverged from the DP oracle"
+        );
+        let (flat_stats, _) = measure(&cfg, || {
+            *pipedp::mcm::pipeline::execute(&p, &sched).last().unwrap() as u64
+        });
+        let (flat2p_stats, _) = measure(&cfg, || {
+            *execute_flat_two_phase(&p, &sched, n).last().unwrap() as u64
+        });
+        let (thr_stats, _) = measure(&cfg, || {
+            *pipedp::mcm::pipeline::execute_threaded(&p, &sched, threads)
+                .last()
+                .unwrap() as u64
+        });
+
+        // --- nested seed baseline (flat dropped first: either schedule
+        // is ~5 GB at n = 1024, never hold both) ------------------------
+        let start = sched.start.clone();
+        drop(sched);
+        let nested = materialize_nested(n, &start);
+        assert_eq!(
+            execute_nested(&p, &nested, n),
+            truth,
+            "n={n}: nested baseline diverged from the DP oracle"
+        );
+        let (nested_stats, _) = measure(&cfg, || {
+            *execute_nested(&p, &nested, n).last().unwrap() as u64
+        });
+        drop(nested);
+
+        // --- non-schedule executors ------------------------------------
+        let (seq_stats, _) = measure(&cfg, || {
+            *pipedp::mcm::seq::linear_table(&p).last().unwrap() as u64
+        });
+        let (diag_stats, _) = measure(&cfg, || {
+            *pipedp::mcm::diagonal::solve(&p).last().unwrap() as u64
+        });
+
+        let seq = ns_per_cell(seq_stats.mean, n);
+        let diag = ns_per_cell(diag_stats.mean, n);
+        let nested_ns = ns_per_cell(nested_stats.mean, n);
+        let flat2p = ns_per_cell(flat2p_stats.mean, n);
+        let flat = ns_per_cell(flat_stats.mean, n);
+        let thr = ns_per_cell(thr_stats.mean, n);
+        let ratio = nested_ns / flat;
+        if n == 1024 {
+            speedup_1024 = ratio;
+        }
+        table.row(vec![
+            n.to_string(),
+            format!("{seq:.1}"),
+            format!("{diag:.1}"),
+            format!("{nested_ns:.1}"),
+            format!("{flat2p:.1}"),
+            format!("{flat:.1}"),
+            format!("{thr:.1}"),
+            format!("{ratio:.2}×"),
+        ]);
+        results.push(Json::obj(vec![
+            ("n", Json::int(n as i64)),
+            ("seq", Json::num(seq)),
+            ("diagonal", Json::num(diag)),
+            ("pipeline_nested", Json::num(nested_ns)),
+            ("pipeline_two_phase", Json::num(flat2p)),
+            ("pipeline", Json::num(flat)),
+            ("threaded", Json::num(thr)),
+        ]));
+    }
+
+    println!("\n== MCM schedule representation, ns/cell (threads={threads}) ==");
+    println!("{}", table.render());
+    if speedup_1024 > 0.0 {
+        println!(
+            "shipped flat-arena executor vs seed nested executor at n=1024: {speedup_1024:.2}× \
+             (flat 2-phase column isolates layout; the rest is gather/combine fusion)"
+        );
+    }
+
+    if emit_json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("schedule_repr")),
+            ("unit", Json::str("ns_per_cell")),
+            ("threads", Json::int(threads as i64)),
+            ("variant", Json::str("corrected")),
+            ("results", Json::arr(results)),
+            (
+                "speedup_flat_vs_nested_n1024",
+                Json::num((speedup_1024 * 100.0).round() / 100.0),
+            ),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_pipeline.json");
+        std::fs::write(&path, format!("{}\n", doc.to_string())).expect("write BENCH_pipeline.json");
+        println!("wrote {}", path.display());
+    }
+}

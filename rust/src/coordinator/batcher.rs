@@ -1,6 +1,13 @@
 //! Dynamic batching: hold compatible requests for up to `max_wait` (or
 //! until `max_batch` accumulate) so one PJRT dispatch serves many — the
 //! same policy a serving router applies to model invocations.
+//!
+//! Schedule compilation is *not* part of the dispatch cost the batcher
+//! amortizes: every execution path it flushes into (native MCM solve,
+//! XLA schedule-executor dispatch) fetches its schedule from the
+//! process-wide cache ([`crate::core::cache`]), so only the first request
+//! per `(kind, n, variant)` in the process lifetime compiles one, and the
+//! server warmup pre-warms the cache for every registered bucket.
 
 use std::collections::HashMap;
 use std::sync::mpsc;

@@ -93,6 +93,10 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Json {
+        // schedule-cache health rides along in every stats response: the
+        // cache is process-wide (crate::core::cache), so the snapshot is
+        // the coordinator's one observability window into it
+        let sched = crate::core::cache::global_stats();
         Json::obj(vec![
             ("requests", Json::int(self.requests.load(Ordering::Relaxed) as i64)),
             ("errors", Json::int(self.errors.load(Ordering::Relaxed) as i64)),
@@ -102,6 +106,9 @@ impl Metrics {
             ("latency_p50_us", Json::int(self.latency.percentile(0.5).as_micros() as i64)),
             ("latency_p99_us", Json::int(self.latency.percentile(0.99).as_micros() as i64)),
             ("queue_p99_us", Json::int(self.queue_wait.percentile(0.99).as_micros() as i64)),
+            ("sched_cache_hits", Json::int(sched.hits as i64)),
+            ("sched_cache_misses", Json::int(sched.misses as i64)),
+            ("sched_cache_entries", Json::int(sched.entries as i64)),
         ])
     }
 }

@@ -16,6 +16,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::request::{Request, RequestBody, Response};
 use crate::coordinator::router::Router;
+use crate::core::schedule::McmVariant;
 use crate::runtime::engine::Engine;
 use crate::{Error, Result};
 
@@ -71,8 +72,48 @@ impl Server {
                     .name("pipedp-warmup".into())
                     .spawn(move || {
                         let n = engine.warm_all();
+                        // Pre-warm the process-wide schedule cache for every
+                        // schedule-executor bucket so the first pipeline
+                        // request per size pays neither PJRT compile nor
+                        // schedule compile latency.  Ascending by n, and
+                        // skipping sizes whose term count exceeds the cache
+                        // budget: warming those would either thrash the
+                        // smaller entries or never stick at all.
+                        let cache_stats = crate::core::cache::global_stats();
+                        let budget = cache_stats.term_budget;
+                        let max_entries = cache_stats.capacity;
+                        let mut sizes: Vec<usize> = engine
+                            .registry
+                            .artifacts
+                            .iter()
+                            .filter(|s| s.sched_steps > 0)
+                            .map(|s| s.n)
+                            .collect();
+                        sizes.sort_unstable();
+                        sizes.dedup();
+                        let mut scheds = 0usize;
+                        let mut warmed_terms = 0usize;
+                        for n in sizes {
+                            let terms = (n * n * n - n) / 6; // Σ d·(n−d), per variant
+                            // stop once the *cumulative* warmed footprint
+                            // would exceed either cache limit — warming
+                            // past them would evict the smaller schedules
+                            // just warmed
+                            if warmed_terms + 2 * terms > budget || scheds + 2 > max_entries {
+                                break;
+                            }
+                            for variant in
+                                [McmVariant::PaperFaithful, McmVariant::Corrected]
+                            {
+                                crate::core::cache::mcm_schedule(n, variant);
+                                scheds += 1;
+                            }
+                            warmed_terms += 2 * terms;
+                        }
                         warmed.store(true, Ordering::Release);
-                        eprintln!("pipedp-server: warmed {n} executables");
+                        eprintln!(
+                            "pipedp-server: warmed {n} executables, {scheds} schedules"
+                        );
                     })
                     .expect("spawn warmup");
             }

@@ -1,0 +1,371 @@
+//! Process-wide schedule cache (DESIGN.md §Perf).
+//!
+//! Compiling an [`McmSchedule`] is `O(n²)` terms of work plus a sort —
+//! cheap once, but the coordinator used to pay it *per request*: every
+//! native MCM solve and every schedule-executor dispatch recompiled the
+//! schedule for its instance size.  Under serving traffic the size
+//! distribution is heavily repeated, so the compile cost is amortizable:
+//! this module memoizes compiled schedules behind `Arc`s in a bounded LRU
+//! keyed by `(problem kind, n, variant)`.
+//!
+//! * The S-DP schedule ([`crate::core::schedule::SdpSchedule`]) is affine
+//!   and never materialized on the request path, so only MCM keys exist
+//!   today; the key type carries the problem kind so future families
+//!   (LCS, triangulation-specific schedules, …) slot in without a schema
+//!   change.
+//! * Eviction is least-recently-used under two limits: an entry bound
+//!   ([`DEFAULT_CAPACITY`], env `PIPEDP_SCHED_CACHE_CAP`) and a budget on
+//!   total cached arena terms ([`DEFAULT_TERM_BUDGET`], env
+//!   `PIPEDP_SCHED_CACHE_TERMS`) — the latter is the real memory bound,
+//!   since schedules grow as n³/6 terms.  Schedules are behind `Arc`s, so
+//!   eviction never invalidates a schedule an executor is still running.
+//! * Compilation happens *outside* the map lock: concurrent first
+//!   requests for one size may compile twice (last insert wins), but no
+//!   request ever blocks on another size's compile.
+//! * Hit/miss counters feed the coordinator metrics snapshot
+//!   ([`crate::coordinator::metrics::Metrics::snapshot`]) so cache health
+//!   is observable from a `stats` request.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::core::schedule::{McmSchedule, McmVariant};
+
+/// Default maximum number of cached schedules (covers far more distinct
+/// sizes than realistic traffic exhibits).
+pub const DEFAULT_CAPACITY: usize = 128;
+
+/// Default budget on total cached arena *terms* across all entries — the
+/// honest memory bound, since entry sizes vary wildly with `n` (a
+/// schedule holds Σd·(n−d) ≈ n³/6 terms at 28 bytes each: n=64 ≈ 1.2 MB,
+/// n=256 ≈ 78 MB, n=1024 ≈ 5 GB).  48M terms ≈ 1.3 GB.  Overridable via
+/// `PIPEDP_SCHED_CACHE_TERMS`.
+pub const DEFAULT_TERM_BUDGET: usize = 48_000_000;
+
+/// Cache key: problem kind + instance size + schedule variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Key {
+    Mcm { n: usize, variant: McmVariant },
+}
+
+struct Inner {
+    map: HashMap<Key, (Arc<McmSchedule>, u64)>,
+    /// Monotone use counter backing the LRU order.
+    tick: u64,
+    /// Entry-count bound.
+    capacity: usize,
+    /// Total-arena-terms budget (the memory bound) and current total.
+    term_budget: usize,
+    total_terms: usize,
+}
+
+/// A bounded LRU of compiled schedules with hit/miss accounting.
+pub struct ScheduleCache {
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Point-in-time cache statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub capacity: usize,
+    /// Total arena terms currently cached (× 28 bytes ≈ resident memory).
+    pub terms: usize,
+    /// Configured term budget (the memory bound eviction enforces).
+    pub term_budget: usize,
+}
+
+impl ScheduleCache {
+    pub fn with_capacity(capacity: usize) -> ScheduleCache {
+        ScheduleCache::with_limits(capacity, DEFAULT_TERM_BUDGET)
+    }
+
+    pub fn with_limits(capacity: usize, term_budget: usize) -> ScheduleCache {
+        ScheduleCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                capacity: capacity.max(1),
+                term_budget: term_budget.max(1),
+                total_terms: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache used by every request path.
+    pub fn global() -> &'static ScheduleCache {
+        static GLOBAL: OnceLock<ScheduleCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cap = std::env::var("PIPEDP_SCHED_CACHE_CAP")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(DEFAULT_CAPACITY);
+            let terms = std::env::var("PIPEDP_SCHED_CACHE_TERMS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(DEFAULT_TERM_BUDGET);
+            ScheduleCache::with_limits(cap, terms)
+        })
+    }
+
+    /// Fetch the schedule for `key`, compiling with `build` on a miss.
+    ///
+    /// The build runs outside the lock; on a lost insert race the winner's
+    /// entry is kept and returned (the two are identical — compilation is
+    /// deterministic).
+    pub fn get_or_insert_with(
+        &self,
+        key: Key,
+        build: impl FnOnce() -> McmSchedule,
+    ) -> Arc<McmSchedule> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some((sched, used)) = inner.map.get_mut(&key) {
+                *used = tick;
+                let sched = sched.clone();
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return sched;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let sched = Arc::new(build());
+        let new_terms = sched.num_terms();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some((existing, used)) = inner.map.get_mut(&key) {
+            // lost the compile race: keep the winner's entry
+            *used = tick;
+            return existing.clone();
+        }
+        // An entry larger than the whole term budget can never fit by
+        // evicting others — draining the map for it would just thrash hot
+        // entries.  Cache it only when the cache is empty anyway (giant
+        // sizes as the sole traffic still amortize); otherwise hand it
+        // back uncached.
+        if new_terms > inner.term_budget && !inner.map.is_empty() {
+            return sched;
+        }
+        // evict least-recently-used entries (linear scans: the capacity is
+        // small and eviction is off the hot path) until both the entry
+        // bound and the term budget hold
+        while !inner.map.is_empty()
+            && (inner.map.len() >= inner.capacity
+                || inner.total_terms + new_terms > inner.term_budget)
+        {
+            if let Some(oldest) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| *k)
+            {
+                if let Some((evicted, _)) = inner.map.remove(&oldest) {
+                    inner.total_terms -= evicted.num_terms();
+                }
+            }
+        }
+        inner.total_terms += new_terms;
+        inner.map.insert(key, (sched.clone(), tick));
+        sched
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: inner.map.len(),
+            capacity: inner.capacity,
+            terms: inner.total_terms,
+            term_budget: inner.term_budget,
+        }
+    }
+}
+
+/// Fetch (or compile and cache) the MCM schedule for `(n, variant)` from
+/// the process-wide cache — the request-path replacement for
+/// [`McmSchedule::compile`].
+pub fn mcm_schedule(n: usize, variant: McmVariant) -> Arc<McmSchedule> {
+    ScheduleCache::global().get_or_insert_with(Key::Mcm { n, variant }, || {
+        McmSchedule::compile(n, variant)
+    })
+}
+
+/// Statistics of the process-wide cache (exported into coordinator
+/// metrics snapshots).
+pub fn global_stats() -> CacheStats {
+    ScheduleCache::global().stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: usize) -> Key {
+        Key::Mcm {
+            n,
+            variant: McmVariant::Corrected,
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits_without_rebuilding() {
+        let cache = ScheduleCache::with_capacity(8);
+        let mut builds = 0;
+        for _ in 0..3 {
+            let s = cache.get_or_insert_with(key(9), || {
+                builds += 1;
+                McmSchedule::compile(9, McmVariant::Corrected)
+            });
+            assert_eq!(s.n, 9);
+        }
+        assert_eq!(builds, 1, "only the first lookup may compile");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.entries, 1);
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct_entries() {
+        let cache = ScheduleCache::with_capacity(8);
+        let a = cache.get_or_insert_with(key(5), || {
+            McmSchedule::compile(5, McmVariant::Corrected)
+        });
+        let b = cache.get_or_insert_with(
+            Key::Mcm {
+                n: 5,
+                variant: McmVariant::PaperFaithful,
+            },
+            || McmSchedule::compile(5, McmVariant::PaperFaithful),
+        );
+        assert_eq!(a.variant, McmVariant::Corrected);
+        assert_eq!(b.variant, McmVariant::PaperFaithful);
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_at_capacity() {
+        let cache = ScheduleCache::with_capacity(2);
+        for n in [4usize, 5, 6] {
+            cache.get_or_insert_with(key(n), || McmSchedule::compile(n, McmVariant::Corrected));
+        }
+        // n=4 was least recently used → evicted; n=5 and n=6 remain
+        assert_eq!(cache.stats().entries, 2);
+        let mut builds = 0;
+        cache.get_or_insert_with(key(6), || {
+            builds += 1;
+            McmSchedule::compile(6, McmVariant::Corrected)
+        });
+        cache.get_or_insert_with(key(4), || {
+            builds += 1;
+            McmSchedule::compile(4, McmVariant::Corrected)
+        });
+        assert_eq!(builds, 1, "n=6 must still be cached, n=4 must rebuild");
+    }
+
+    #[test]
+    fn lru_refresh_on_hit_protects_hot_entries() {
+        let cache = ScheduleCache::with_capacity(2);
+        cache.get_or_insert_with(key(4), || McmSchedule::compile(4, McmVariant::Corrected));
+        cache.get_or_insert_with(key(5), || McmSchedule::compile(5, McmVariant::Corrected));
+        // touch n=4 so n=5 becomes the eviction candidate
+        cache.get_or_insert_with(key(4), || unreachable!("must hit"));
+        cache.get_or_insert_with(key(6), || McmSchedule::compile(6, McmVariant::Corrected));
+        let mut rebuilt_4 = false;
+        cache.get_or_insert_with(key(4), || {
+            rebuilt_4 = true;
+            McmSchedule::compile(4, McmVariant::Corrected)
+        });
+        assert!(!rebuilt_4, "recently-used n=4 must survive the eviction");
+    }
+
+    #[test]
+    fn term_budget_bounds_resident_arena() {
+        // budget fits roughly one n=24 schedule (Σd(n−d) = 2300 terms):
+        // inserting a second size must evict the first
+        let cache = ScheduleCache::with_limits(64, 3000);
+        cache.get_or_insert_with(key(24), || McmSchedule::compile(24, McmVariant::Corrected));
+        assert!(cache.stats().terms > 0);
+        cache.get_or_insert_with(key(23), || McmSchedule::compile(23, McmVariant::Corrected));
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 1, "term budget must have evicted n=24");
+        assert!(stats.terms <= 3000);
+    }
+
+    #[test]
+    fn oversized_schedule_never_thrashes_hot_entries() {
+        // n=24 (2300 terms) exceeds a 1000-term budget outright
+        let cache = ScheduleCache::with_limits(64, 1000);
+        // empty cache: the oversized entry caches alone
+        cache.get_or_insert_with(key(24), || McmSchedule::compile(24, McmVariant::Corrected));
+        assert_eq!(cache.stats().entries, 1);
+        // …and repeats hit it
+        let mut rebuilt = false;
+        cache.get_or_insert_with(key(24), || {
+            rebuilt = true;
+            McmSchedule::compile(24, McmVariant::Corrected)
+        });
+        assert!(!rebuilt);
+
+        // non-empty cache holding a small hot entry: an oversized miss
+        // must NOT drain it — the giant is handed back uncached
+        let cache = ScheduleCache::with_limits(64, 1000);
+        cache.get_or_insert_with(key(6), || McmSchedule::compile(6, McmVariant::Corrected));
+        let giant = cache
+            .get_or_insert_with(key(24), || McmSchedule::compile(24, McmVariant::Corrected));
+        assert_eq!(giant.n, 24);
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 1, "small hot entry must survive");
+        let mut small_rebuilt = false;
+        cache.get_or_insert_with(key(6), || {
+            small_rebuilt = true;
+            McmSchedule::compile(6, McmVariant::Corrected)
+        });
+        assert!(!small_rebuilt, "hot small schedule must still be cached");
+    }
+
+    #[test]
+    fn global_mcm_schedule_hits_on_repeat() {
+        // use a size unlikely to collide with other tests of the global
+        // cache in this process
+        let before = global_stats();
+        let a = mcm_schedule(61, McmVariant::Corrected);
+        let b = mcm_schedule(61, McmVariant::Corrected);
+        assert!(Arc::ptr_eq(&a, &b) || a.num_terms() == b.num_terms());
+        let after = global_stats();
+        assert!(after.hits > before.hits, "second fetch must hit");
+    }
+
+    #[test]
+    fn concurrent_access_is_safe_and_converges() {
+        let cache = std::sync::Arc::new(ScheduleCache::with_capacity(8));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cache = cache.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let sched = cache.get_or_insert_with(key(12), || {
+                            McmSchedule::compile(12, McmVariant::Corrected)
+                        });
+                        assert_eq!(sched.n, 12);
+                    }
+                });
+            }
+        });
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 1);
+        assert_eq!(stats.hits + stats.misses, 80);
+        assert!(stats.misses <= 4, "at most one racing miss per thread");
+    }
+}

@@ -48,19 +48,19 @@ pub struct Hazard {
     pub finalized: usize,
 }
 
-fn collision_degree(addrs: &[usize]) -> usize {
-    let mut seen: HashMap<usize, usize> = HashMap::with_capacity(addrs.len());
+/// Worst same-address collision degree of one substep's address list
+/// (1 = conflict-free).  Generic over the address width so the flat
+/// schedule arena's zero-copy `&[u32]` columns and the S-DP analyzer's
+/// `usize` lists share one implementation.
+fn collision_degree<T: Copy + Eq + std::hash::Hash>(addrs: &[T]) -> usize {
+    let mut seen: HashMap<T, usize> = HashMap::with_capacity(addrs.len());
     let mut worst = 1;
     for &a in addrs {
         let c = seen.entry(a).or_insert(0);
         *c += 1;
         worst = worst.max(*c);
     }
-    if addrs.is_empty() {
-        1
-    } else {
-        worst
-    }
+    worst
 }
 
 /// Analyze an MCM schedule's substep accesses (substep 1 = left reads,
@@ -70,18 +70,10 @@ pub fn analyze_mcm(sched: &McmSchedule) -> ConflictReport {
         steps: sched.num_steps(),
         ..Default::default()
     };
-    for entries in &sched.steps {
+    for view in sched.steps() {
         let mut step_factor = 1usize;
-        for substep in 0..3 {
-            let addrs: Vec<usize> = entries
-                .iter()
-                .map(|e| match substep {
-                    0 => e.l as usize,
-                    1 => e.r as usize,
-                    _ => e.tgt as usize,
-                })
-                .collect();
-            let degree = collision_degree(&addrs);
+        for addrs in [view.l, view.r, view.tgt] {
+            let degree = collision_degree(addrs);
             if degree > 1 {
                 report.conflicted_substeps += 1;
             }
@@ -104,8 +96,8 @@ pub fn mcm_conflict_free(sched: &McmSchedule) -> bool {
 /// value; the published schedule fails this for n ≥ 4).
 pub fn mcm_hazards(sched: &McmSchedule) -> Vec<Hazard> {
     let mut out = Vec::new();
-    for (s, entries) in sched.steps.iter().enumerate() {
-        for e in entries {
+    for (s, view) in sched.steps().enumerate() {
+        for e in view.iter() {
             for dep in [e.l as usize, e.r as usize] {
                 if let Some(fin) = sched.finalize_step(dep) {
                     if fin >= s {
@@ -217,11 +209,11 @@ mod tests {
         // reads may collide (free on TPU, serialized on GPU); writes never
         for n in 2..16 {
             let s = McmSchedule::compile(n, McmVariant::Corrected);
-            for entries in &s.steps {
-                let mut tgts: Vec<u32> = entries.iter().map(|e| e.tgt).collect();
+            for view in s.steps() {
+                let mut tgts: Vec<u32> = view.tgt.to_vec();
                 tgts.sort_unstable();
                 tgts.dedup();
-                assert_eq!(tgts.len(), entries.len(), "n={n}");
+                assert_eq!(tgts.len(), view.len(), "n={n}");
             }
         }
     }
@@ -308,7 +300,7 @@ mod tests {
 
     #[test]
     fn collision_degree_edge_cases() {
-        assert_eq!(collision_degree(&[]), 1);
+        assert_eq!(collision_degree::<usize>(&[]), 1);
         assert_eq!(collision_degree(&[7]), 1);
         assert_eq!(collision_degree(&[7, 7, 7]), 3);
         assert_eq!(collision_degree(&[1, 2, 1, 2, 1]), 3);

@@ -8,7 +8,11 @@
 //!   hazard-corrected variants).
 //! * [`conflict`] — the access-trace analyzer: Theorem-1 conflict checks,
 //!   staleness-hazard detection, and the GPU serialization-factor model.
+//! * [`cache`] — the process-wide LRU of compiled schedules keyed by
+//!   `(problem kind, n, variant)`; the request paths' front door to the
+//!   schedule compiler.
 
+pub mod cache;
 pub mod conflict;
 pub mod problem;
 pub mod schedule;

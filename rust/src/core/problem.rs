@@ -119,11 +119,25 @@ pub struct McmProblem {
 }
 
 impl McmProblem {
+    /// Largest supported chain length: the schedule arena indexes its
+    /// (n³−n)/6 terms as `u32` (see `core::schedule`), which caps n at
+    /// 2953 — already ~4.3G terms (~120 GB), far past materializable.
+    pub const MAX_CHAIN: usize = 2953;
+
     pub fn new(dims: Vec<i64>) -> Result<McmProblem> {
         if dims.len() < 2 {
             return Err(Error::InvalidProblem(
                 "need at least 2 dims (one matrix)".into(),
             ));
+        }
+        if dims.len() - 1 > Self::MAX_CHAIN {
+            // validate at the boundary so wire requests get a structured
+            // error instead of tripping the schedule compiler's assert
+            return Err(Error::InvalidProblem(format!(
+                "chain length {} exceeds the supported maximum {}",
+                dims.len() - 1,
+                Self::MAX_CHAIN
+            )));
         }
         if dims.iter().any(|&d| d <= 0) {
             return Err(Error::InvalidProblem("dims must be positive".into()));
@@ -230,5 +244,15 @@ mod tests {
         assert!(McmProblem::new(vec![5, 0]).is_err());
         assert_eq!(McmProblem::clrs().n(), 6);
         assert_eq!(McmProblem::clrs().weight(0, 1, 2), 30 * 35 * 15);
+    }
+
+    #[test]
+    fn mcm_rejects_oversized_chain() {
+        // a wire request beyond the u32 arena cap must fail with a typed
+        // error at validation, never reach the schedule compiler's assert
+        let dims = vec![1i64; McmProblem::MAX_CHAIN + 2];
+        assert!(McmProblem::new(dims).is_err());
+        let dims = vec![1i64; McmProblem::MAX_CHAIN + 1]; // n == MAX_CHAIN
+        assert!(McmProblem::new(dims).is_ok());
     }
 }

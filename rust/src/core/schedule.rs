@@ -12,13 +12,29 @@
 //!   [`McmVariant::Corrected`] (dataflow-delayed, hazard-free, same
 //!   pipeline shape).
 //!
+//! ## Flat arena representation (DESIGN.md §Perf)
+//!
+//! A compiled [`McmSchedule`] is stored as a structure-of-arrays *arena*:
+//! seven parallel `Vec<u32>` columns (`tgt, l, r, pa, pb, pc, term`), one
+//! slot per scheduled term, plus a CSR-style `step_offsets` vector —
+//! `step s` owns arena rows `step_offsets[s] .. step_offsets[s + 1]`.
+//! Compared to the previous nested `Vec<Vec<Entry>>` (one heap allocation
+//! per outer step, 28-byte AoS entries) this is two allocations total,
+//! fully contiguous, and lets executors stream each column linearly —
+//! the hot loops become pure sequential scans.  Consumers iterate via
+//! [`McmSchedule::steps`] / [`McmSchedule::step_view`], which hand out
+//! zero-copy [`StepView`] column slices (or materialized [`Entry`]s for
+//! non-hot-path callers).
+//!
 //! Schedules drive four executors: the native step-synchronous solvers
 //! ([`crate::sdp`], [`crate::mcm`]), the multi-threaded solvers, the SIMT
 //! GPU cost simulator ([`crate::simulator`]), and — encoded as a dense
 //! `i32[S, T, 8]` tensor — the Pallas schedule-executor kernel via PJRT
 //! ([`crate::runtime::engine`]).  The tensor layout matches
 //! `python/compile/schedule.py` exactly and is covered by golden-file
-//! cross-language tests.
+//! cross-language tests.  Compilation is memoized process-wide by
+//! [`crate::core::cache`]; executors should go through the cache rather
+//! than calling [`McmSchedule::compile`] per request.
 
 use crate::{Error, Result};
 
@@ -44,12 +60,29 @@ pub mod linear {
         diag_offset(n, c - r) + r
     }
 
-    /// Inverse of [`cell_index`].
+    /// Inverse of [`cell_index`], O(1).
+    ///
+    /// `idx = d·n − d(d−1)/2 + r` is monotone in `d` for fixed `r ≥ 0`, so
+    /// the diagonal is the floor root of the quadratic
+    /// `d² − (2n+1)·d + 2·idx = 0`:
+    /// `d = ⌊((2n+1) − √((2n+1)² − 8·idx)) / 2⌋.`
+    /// The two guard loops absorb any f64 rounding of the square root (for
+    /// all reachable sizes the guess is already exact; verified exhaustively
+    /// up to n = 200 and by sampling up to n = 2¹⁵ against the O(n) scan).
+    #[inline]
     pub fn cell_coords(n: usize, idx: usize) -> (usize, usize) {
         debug_assert!(idx < num_cells(n));
-        let mut d = 0;
+        let m = 2 * n + 1;
+        let disc = (m * m - 8 * idx) as f64;
+        let mut d = ((m as f64 - disc.sqrt()) / 2.0) as usize;
+        if d >= n {
+            d = n - 1;
+        }
         while d + 1 < n && diag_offset(n, d + 1) <= idx {
             d += 1;
+        }
+        while d > 0 && diag_offset(n, d) > idx {
+            d -= 1;
         }
         let r = idx - diag_offset(n, d);
         (r, r + d)
@@ -62,6 +95,8 @@ pub const FLAG_FIRST: i32 = 1;
 pub const FLAG_COMBINE: i32 = 2;
 
 /// One scheduled term: thread-visible work for a single (cell, term) pair.
+///
+/// This is the *iteration view*; storage is columnar ([`McmSchedule`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Entry {
     /// Linear index of the cell being combined into (write target).
@@ -110,13 +145,71 @@ impl McmVariant {
     }
 }
 
-/// A compiled step-synchronous MCM pipeline schedule.
+/// Zero-copy view of one outer step: parallel column slices over the
+/// schedule arena.  Hot executors read the columns directly; everything
+/// else materializes [`Entry`]s via [`StepView::iter`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepView<'a> {
+    pub tgt: &'a [u32],
+    pub l: &'a [u32],
+    pub r: &'a [u32],
+    pub pa: &'a [u32],
+    pub pb: &'a [u32],
+    pub pc: &'a [u32],
+    pub term: &'a [u32],
+}
+
+impl<'a> StepView<'a> {
+    /// Number of concurrent lanes in this step.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tgt.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tgt.is_empty()
+    }
+
+    /// Materialize lane `i` as an [`Entry`].
+    #[inline]
+    pub fn entry(&self, i: usize) -> Entry {
+        Entry {
+            tgt: self.tgt[i],
+            l: self.l[i],
+            r: self.r[i],
+            pa: self.pa[i],
+            pb: self.pb[i],
+            pc: self.pc[i],
+            term: self.term[i],
+        }
+    }
+
+    /// Iterate the step's lanes as materialized [`Entry`]s.
+    pub fn iter(&self) -> impl Iterator<Item = Entry> + 'a {
+        let v = *self;
+        (0..v.len()).map(move |i| v.entry(i))
+    }
+}
+
+/// A compiled step-synchronous MCM pipeline schedule in flat-arena form
+/// (see the module docs for the layout).
 #[derive(Debug, Clone)]
 pub struct McmSchedule {
     pub n: usize,
     pub variant: McmVariant,
-    /// `steps[s]` = the terms executed concurrently at outer step `s`.
-    pub steps: Vec<Vec<Entry>>,
+    /// CSR step boundaries: step `s` owns arena rows
+    /// `step_offsets[s] .. step_offsets[s + 1]`; length `num_steps + 1`.
+    pub step_offsets: Vec<u32>,
+    /// Arena columns, one row per scheduled term, grouped by step and
+    /// ordered (term, cell) within a step.
+    pub tgt: Vec<u32>,
+    pub l: Vec<u32>,
+    pub r: Vec<u32>,
+    pub pa: Vec<u32>,
+    pub pb: Vec<u32>,
+    pub pc: Vec<u32>,
+    pub term: Vec<u32>,
     /// Per-cell start step (`usize::MAX` for initial-diagonal cells).
     pub start: Vec<usize>,
 }
@@ -141,8 +234,20 @@ pub fn cell_terms(n: usize, r: usize, c: usize) -> Vec<(usize, usize, usize, usi
 
 impl McmSchedule {
     /// Compile a schedule for a chain of `n` matrices.
+    ///
+    /// Process-wide memoized by [`crate::core::cache::mcm_schedule`];
+    /// request paths should call that instead.
     pub fn compile(n: usize, variant: McmVariant) -> McmSchedule {
         let ncells = linear::num_cells(n);
+        // the arena indexes rows as u32: Σ d·(n−d) = (n³−n)/6 must fit,
+        // which caps n at exactly MAX_CHAIN = 2953 — far beyond what the
+        // O(n³) term count makes materializable anyway (n=1024 is already
+        // ~5 GB), but fail loudly rather than wrapping the CSR prefix
+        // sums.  Wire requests are rejected earlier, at McmProblem::new.
+        assert!(
+            n <= crate::core::problem::McmProblem::MAX_CHAIN,
+            "n={n}: schedule would exceed the u32 arena limit ((n³−n)/6 terms must fit u32)"
+        );
         let width = (n - 1).max(1);
         let mut start = vec![usize::MAX; ncells];
 
@@ -154,10 +259,11 @@ impl McmSchedule {
             }
             McmVariant::Corrected => {
                 // Greedy dataflow delay in linear (diagonal-major) order;
-                // identical to python/compile/schedule.py::corrected.
+                // identical output to python/compile/schedule.py::corrected.
                 let mut finalize = vec![-1i64; ncells];
-                let mut occupancy: std::collections::HashMap<usize, usize> =
-                    std::collections::HashMap::new();
+                // per-step occupancy as a dense vector (steps are compact
+                // from 0), grown on demand
+                let mut occupancy: Vec<usize> = Vec::new();
                 for x in n..ncells {
                     let (r, c) = linear::cell_coords(n, x);
                     let d = c - r;
@@ -168,12 +274,27 @@ impl McmSchedule {
                         s0 = s0.max(finalize[*ri] + 1 - j);
                     }
                     let mut s0 = s0 as usize;
-                    // thread-count capacity: at most `width` terms per step
-                    while (0..d).any(|j| occupancy.get(&(s0 + j)).copied().unwrap_or(0) >= width) {
-                        s0 += 1;
+                    // Thread-count capacity: at most `width` terms per step.
+                    // Find the smallest s0' ≥ s0 whose whole window
+                    // [s0', s0'+d) is below capacity.  Any window containing
+                    // a full step is invalid, so on hitting full step `q` we
+                    // can jump straight to `q + 1` — same fixpoint as the
+                    // naive `s0 += 1` rescan, without the quadratic rescans.
+                    'place: loop {
+                        for j in 0..d {
+                            let q = s0 + j;
+                            if occupancy.get(q).copied().unwrap_or(0) >= width {
+                                s0 = q + 1;
+                                continue 'place;
+                            }
+                        }
+                        break;
                     }
-                    for j in 0..d {
-                        *occupancy.entry(s0 + j).or_insert(0) += 1;
+                    if s0 + d > occupancy.len() {
+                        occupancy.resize(s0 + d, 0);
+                    }
+                    for slot in &mut occupancy[s0..s0 + d] {
+                        *slot += 1;
                     }
                     start[x] = s0;
                     finalize[x] = (s0 + d - 1) as i64;
@@ -181,45 +302,153 @@ impl McmSchedule {
             }
         }
 
-        // materialize the per-step term lists
-        let mut steps_map: std::collections::BTreeMap<usize, Vec<Entry>> =
-            std::collections::BTreeMap::new();
+        // Materialize the arena with a counting sort over steps — no
+        // row-sized temporary (the n = 1024 arena is ~5 GB; a sortable
+        // copy would transiently double that).
+        //
+        // Pass 1: per-step counts → CSR offsets.  Pass 2: cursor-fill the
+        // columns in cell-ascending emission order.  Pass 3: stable-sort
+        // each step's rows by term (small: ≤ n−1 rows per step), which
+        // yields the (term, cell) order the Python compiler's
+        // `sorted(..., key=term)` produces, bit-for-bit.
+        let mut num_steps = 0usize;
+        for x in n..ncells {
+            let (r, c) = linear::cell_coords(n, x);
+            num_steps = num_steps.max(start[x] + (c - r));
+        }
+        let mut step_offsets = vec![0u32; num_steps + 1];
+        for x in n..ncells {
+            let (r, c) = linear::cell_coords(n, x);
+            for j in 0..(c - r) {
+                step_offsets[start[x] + j + 1] += 1;
+            }
+        }
+        for s in 0..num_steps {
+            step_offsets[s + 1] += step_offsets[s];
+        }
+        let nrows = step_offsets[num_steps] as usize;
+        debug_assert!(nrows == (1..n).map(|d| d * (n - d)).sum::<usize>());
+        let mut cursor: Vec<u32> = step_offsets[..num_steps].to_vec();
+        let (mut tgt, mut l, mut r_col, mut pa_col, mut pb_col, mut pc_col, mut term) = (
+            vec![0u32; nrows],
+            vec![0u32; nrows],
+            vec![0u32; nrows],
+            vec![0u32; nrows],
+            vec![0u32; nrows],
+            vec![0u32; nrows],
+            vec![0u32; nrows],
+        );
         for x in n..ncells {
             let (r, c) = linear::cell_coords(n, x);
             for (j, (li, ri, pa, pb, pc)) in cell_terms(n, r, c).iter().enumerate() {
                 let s = start[x] + j;
-                steps_map.entry(s).or_default().push(Entry {
-                    tgt: x as u32,
-                    l: *li as u32,
-                    r: *ri as u32,
-                    pa: *pa as u32,
-                    pb: *pb as u32,
-                    pc: *pc as u32,
-                    term: (j + 1) as u32,
-                });
+                let i = cursor[s] as usize;
+                cursor[s] += 1;
+                tgt[i] = x as u32;
+                l[i] = *li as u32;
+                r_col[i] = *ri as u32;
+                pa_col[i] = *pa as u32;
+                pb_col[i] = *pb as u32;
+                pc_col[i] = *pc as u32;
+                term[i] = (j + 1) as u32;
             }
         }
-        let num_steps = steps_map.keys().next_back().map(|s| s + 1).unwrap_or(0);
-        let mut steps = vec![Vec::new(); num_steps];
-        for (s, mut entries) in steps_map {
-            entries.sort_by_key(|e| e.term);
-            steps[s] = entries;
+        let mut perm: Vec<u32> = Vec::new();
+        let mut scratch: Vec<u32> = Vec::new();
+        for s in 0..num_steps {
+            let lo = step_offsets[s] as usize;
+            let hi = step_offsets[s + 1] as usize;
+            if hi - lo <= 1 {
+                continue;
+            }
+            perm.clear();
+            perm.extend(0..(hi - lo) as u32);
+            // stable → cell-ascending emission order survives within
+            // equal terms
+            perm.sort_by_key(|&i| term[lo + i as usize]);
+            if perm.windows(2).all(|w| w[0] < w[1]) {
+                continue; // already in (term, cell) order
+            }
+            for col in [
+                &mut tgt,
+                &mut l,
+                &mut r_col,
+                &mut pa_col,
+                &mut pb_col,
+                &mut pc_col,
+                &mut term,
+            ] {
+                scratch.clear();
+                scratch.extend(perm.iter().map(|&i| col[lo + i as usize]));
+                col[lo..hi].copy_from_slice(&scratch);
+            }
         }
         McmSchedule {
             n,
             variant,
-            steps,
+            step_offsets,
+            tgt,
+            l,
+            r: r_col,
+            pa: pa_col,
+            pb: pb_col,
+            pc: pc_col,
+            term,
             start,
         }
     }
 
     pub fn num_steps(&self) -> usize {
-        self.steps.len()
+        self.step_offsets.len() - 1
+    }
+
+    /// Arena row range of step `s`.
+    #[inline]
+    pub fn step_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.step_offsets[s] as usize..self.step_offsets[s + 1] as usize
+    }
+
+    /// Zero-copy column view of step `s`.
+    #[inline]
+    pub fn step_view(&self, s: usize) -> StepView<'_> {
+        let range = self.step_range(s);
+        StepView {
+            tgt: &self.tgt[range.clone()],
+            l: &self.l[range.clone()],
+            r: &self.r[range.clone()],
+            pa: &self.pa[range.clone()],
+            pb: &self.pb[range.clone()],
+            pc: &self.pc[range.clone()],
+            term: &self.term[range],
+        }
+    }
+
+    /// Iterate the steps as [`StepView`]s (the replacement for the old
+    /// `for entries in &sched.steps` pattern).
+    pub fn steps(&self) -> impl Iterator<Item = StepView<'_>> + '_ {
+        (0..self.num_steps()).map(move |s| self.step_view(s))
+    }
+
+    /// Iterate every scheduled term in arena order.
+    pub fn entries(&self) -> impl Iterator<Item = Entry> + '_ {
+        (0..self.num_terms()).map(move |i| Entry {
+            tgt: self.tgt[i],
+            l: self.l[i],
+            r: self.r[i],
+            pa: self.pa[i],
+            pb: self.pb[i],
+            pc: self.pc[i],
+            term: self.term[i],
+        })
     }
 
     /// Widest step (must be ≤ n−1: the paper's thread count).
     pub fn max_width(&self) -> usize {
-        self.steps.iter().map(|s| s.len()).max().unwrap_or(0)
+        self.step_offsets
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as usize)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Step after which linear cell `x` is final (`None` = initial cell,
@@ -234,11 +463,14 @@ impl McmSchedule {
 
     /// Total scheduled terms (= Σ_d d·(n−d), the DP work).
     pub fn num_terms(&self) -> usize {
-        self.steps.iter().map(|s| s.len()).sum()
+        self.tgt.len()
     }
 
     /// Encode as the dense `i32[S, T, 8]` tensor the Pallas executor and
     /// the numpy oracle consume; pads with inactive lanes.
+    ///
+    /// With the columnar arena this is a strided scatter of seven
+    /// contiguous column scans — no per-step pointer chasing.
     pub fn to_tensor(&self, num_steps: usize, width: usize) -> Result<Vec<i32>> {
         if num_steps < self.num_steps() || width < self.max_width() {
             return Err(Error::Schedule(format!(
@@ -250,17 +482,22 @@ impl McmSchedule {
             )));
         }
         let mut out = vec![0i32; num_steps * width * 8];
-        for (s, entries) in self.steps.iter().enumerate() {
-            for (lane, e) in entries.iter().enumerate() {
+        for s in 0..self.num_steps() {
+            let range = self.step_range(s);
+            for (lane, i) in range.enumerate() {
                 let base = (s * width + lane) * 8;
-                out[base] = e.tgt as i32;
-                out[base + 1] = e.l as i32;
-                out[base + 2] = e.r as i32;
-                out[base + 3] = e.pa as i32;
-                out[base + 4] = e.pb as i32;
-                out[base + 5] = e.pc as i32;
-                out[base + 6] = if e.is_first() { FLAG_FIRST } else { FLAG_COMBINE };
-                out[base + 7] = e.term as i32;
+                out[base] = self.tgt[i] as i32;
+                out[base + 1] = self.l[i] as i32;
+                out[base + 2] = self.r[i] as i32;
+                out[base + 3] = self.pa[i] as i32;
+                out[base + 4] = self.pb[i] as i32;
+                out[base + 5] = self.pc[i] as i32;
+                out[base + 6] = if self.term[i] == 1 {
+                    FLAG_FIRST
+                } else {
+                    FLAG_COMBINE
+                };
+                out[base + 7] = self.term[i] as i32;
             }
         }
         Ok(out)
@@ -376,6 +613,49 @@ mod tests {
     }
 
     #[test]
+    fn coords_roundtrip_exhaustive_to_64() {
+        // closed-form O(1) inverse: cell_coords(cell_index(r, c)) == (r, c)
+        // for every cell of every table size up to n = 64
+        for n in 1..=64usize {
+            for r in 0..n {
+                for c in r..n {
+                    let idx = linear::cell_index(n, r, c);
+                    assert_eq!(
+                        linear::cell_coords(n, idx),
+                        (r, c),
+                        "n={n} r={r} c={c} idx={idx}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coords_closed_form_matches_linear_scan_large() {
+        // spot-check the closed form against the O(n) reference scan at
+        // sizes where f64 rounding could plausibly bite
+        fn scan(n: usize, idx: usize) -> (usize, usize) {
+            let mut d = 0;
+            while d + 1 < n && linear::diag_offset(n, d + 1) <= idx {
+                d += 1;
+            }
+            let r = idx - linear::diag_offset(n, d);
+            (r, r + d)
+        }
+        forall("closed form == scan", 300, |g| {
+            let n = 1 + g.usize(0..1 << 14);
+            let idx = g.usize(0..linear::num_cells(n));
+            let got = linear::cell_coords(n, idx);
+            let want = scan(n, idx);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("n={n} idx={idx}: {got:?} != {want:?}"))
+            }
+        });
+    }
+
+    #[test]
     fn fig6_st13_terms() {
         // ST[13] = f(ST[1],ST[11]) ↓ f(ST[6],ST[8]) ↓ f(ST[10],ST[4])
         let n = 5;
@@ -441,15 +721,13 @@ mod tests {
             };
             let s = McmSchedule::compile(n, v);
             let mut seen = std::collections::HashSet::new();
-            for entries in &s.steps {
-                for e in entries {
-                    if !seen.insert((e.tgt, e.term)) {
-                        return Err(format!("duplicate ({}, {})", e.tgt, e.term));
-                    }
+            for e in s.entries() {
+                if !seen.insert((e.tgt, e.term)) {
+                    return Err(format!("duplicate ({}, {})", e.tgt, e.term));
                 }
             }
             let want: usize = (1..n).map(|d| d * (n - d)).sum();
-            if seen.len() == want {
+            if seen.len() == want && s.num_terms() == want {
                 Ok(())
             } else {
                 Err(format!("n={n}: {} terms != {want}", seen.len()))
@@ -462,14 +740,47 @@ mod tests {
         for v in [McmVariant::PaperFaithful, McmVariant::Corrected] {
             let s = McmSchedule::compile(9, v);
             let mut pos = std::collections::HashMap::new();
-            for (step, entries) in s.steps.iter().enumerate() {
-                for e in entries {
+            for (step, view) in s.steps().enumerate() {
+                for e in view.iter() {
                     pos.insert((e.tgt, e.term), step);
                 }
             }
             for (&(cell, term), &step) in &pos {
                 if let Some(&next) = pos.get(&(cell, term + 1)) {
                     assert_eq!(next, step + 1, "{v:?} cell {cell} term {term}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_is_csr_consistent() {
+        for n in [1usize, 2, 3, 5, 9, 16] {
+            for v in [McmVariant::PaperFaithful, McmVariant::Corrected] {
+                let s = McmSchedule::compile(n, v);
+                // offsets are monotone and cover the arena exactly
+                assert_eq!(s.step_offsets[0], 0, "n={n} {v:?}");
+                assert!(
+                    s.step_offsets.windows(2).all(|w| w[0] <= w[1]),
+                    "n={n} {v:?}"
+                );
+                assert_eq!(
+                    *s.step_offsets.last().unwrap() as usize,
+                    s.num_terms(),
+                    "n={n} {v:?}"
+                );
+                // every column has one slot per term
+                for col in [&s.tgt, &s.l, &s.r, &s.pa, &s.pb, &s.pc, &s.term] {
+                    assert_eq!(col.len(), s.num_terms(), "n={n} {v:?}");
+                }
+                // per-step views agree with the flat entry iterator
+                let flat: Vec<Entry> = s.entries().collect();
+                let via_steps: Vec<Entry> = s.steps().flat_map(|v| v.iter()).collect();
+                assert_eq!(flat, via_steps, "n={n} {v:?}");
+                // within a step, terms are ascending (the lane order the
+                // nested representation guaranteed by its stable sort)
+                for view in s.steps() {
+                    assert!(view.term.windows(2).all(|w| w[0] <= w[1]), "n={n} {v:?}");
                 }
             }
         }

@@ -31,6 +31,10 @@
 //! assert_eq!(st[15], 987);
 //! ```
 
+// Unsafe operations inside `unsafe fn` bodies require their own `unsafe`
+// block (the executors' SAFETY comments annotate exactly those blocks).
+#![warn(unsafe_op_in_unsafe_fn)]
+
 pub mod bench;
 pub mod coordinator;
 pub mod core;
@@ -41,25 +45,48 @@ pub mod sdp;
 pub mod simulator;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled: the offline build has no
+/// `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("invalid problem: {0}")]
     InvalidProblem(String),
-    #[error("schedule error: {0}")]
     Schedule(String),
-    #[error("artifact registry: {0}")]
     Registry(String),
-    #[error("runtime: {0}")]
     Runtime(String),
-    #[error("server: {0}")]
     Server(String),
-    #[error("json: {0}")]
     Json(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidProblem(m) => write!(f, "invalid problem: {m}"),
+            Error::Schedule(m) => write!(f, "schedule error: {m}"),
+            Error::Registry(m) => write!(f, "artifact registry: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Server(m) => write!(f, "server: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

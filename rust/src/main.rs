@@ -241,8 +241,8 @@ fn schedule_json(sched: &McmSchedule) -> Json {
         ("num_steps", Json::int(sched.num_steps() as i64)),
         (
             "steps",
-            Json::arr(sched.steps.iter().map(|entries| {
-                Json::arr(entries.iter().map(|e| {
+            Json::arr(sched.steps().map(|view| {
+                Json::arr(view.iter().map(|e| {
                     Json::arr(
                         [e.tgt, e.l, e.r, e.pa, e.pb, e.pc, e.term]
                             .iter()

@@ -9,9 +9,23 @@
 //! estimated) optimal cost, which is the soundness finding of DESIGN.md
 //! §1.1.  The [`McmVariant::Corrected`] schedule matches the classic DP
 //! on every instance (property-tested here and in pytest).
+//!
+//! §Perf (DESIGN.md §Perf): executors stream the schedule's flat-arena
+//! columns sequentially instead of chasing per-step `Vec`s.  For the
+//! `Corrected` variant the gather and combine phases are *fused*: every
+//! operand a corrected schedule reads is final by construction (its
+//! finalize step precedes the reading step — the hazard-freedom property
+//! checked in `core::conflict`), and a cell written in a step is by the
+//! same argument never read in that step, so applying each write
+//! immediately is observably identical to the two-phase model and needs
+//! no pending buffer.  The faithful variant keeps the two-phase model —
+//! its documented stale-read semantics depend on it.  The threaded
+//! executors assign lanes to workers in contiguous chunks (not strided),
+//! so each worker scans a dense run of every column per step.
 
 use std::sync::Barrier;
 
+use crate::core::cache;
 use crate::core::problem::McmProblem;
 use crate::core::schedule::{linear, McmSchedule, McmVariant};
 use crate::sdp::naive::SharedTable;
@@ -28,55 +42,105 @@ pub fn execute(p: &McmProblem, sched: &McmSchedule) -> Vec<i64> {
     let n = p.n();
     let ncells = linear::num_cells(n);
     // one-time bounds validation of the whole schedule
-    debug_assert!(sched.steps.iter().flatten().all(|e| {
+    debug_assert!(sched.entries().all(|e| {
         (e.tgt as usize) < ncells
             && (e.l as usize) < ncells
             && (e.r as usize) < ncells
             && (e.pc as usize) <= n
     }));
     let mut st = vec![0i64; ncells];
-    let dims = &p.dims;
-    let mut pending: Vec<(u32, bool, i64)> = Vec::with_capacity(n);
-    for entries in &sched.steps {
-        // substeps 1–3: every thread gathers and computes f(l, r)
-        pending.clear();
-        for e in entries {
-            // SAFETY: schedule indices are bounded by construction
-            // (McmSchedule::compile only emits valid cell/dims indices;
-            // debug-asserted above).
-            let v = unsafe {
-                *st.get_unchecked(e.l as usize)
-                    + *st.get_unchecked(e.r as usize)
-                    + *dims.get_unchecked(e.pa as usize)
-                        * *dims.get_unchecked(e.pb as usize)
-                        * *dims.get_unchecked(e.pc as usize)
-            };
-            pending.push((e.tgt, e.is_first(), v));
-        }
-        // substep 4: combine with ↓ (min); targets are distinct (Thm. 1)
-        for &(tgt, first, v) in &pending {
-            // SAFETY: as above.
-            unsafe {
-                let slot = st.get_unchecked_mut(tgt as usize);
-                *slot = if first { v } else { (*slot).min(v) };
-            }
-        }
+    match sched.variant {
+        McmVariant::Corrected => execute_fused(p, sched, &mut st),
+        McmVariant::PaperFaithful => execute_two_phase(p, sched, &mut st),
     }
     st
 }
 
-/// Convenience: compile + execute a variant.
+/// Fused single pass (corrected schedules only): compute-and-write per
+/// lane, no pending buffer.  Sound because corrected schedules are
+/// hazard-free — see the module docs.
+fn execute_fused(p: &McmProblem, sched: &McmSchedule, st: &mut [i64]) {
+    let dims = &p.dims;
+    let nterms = sched.num_terms();
+    for i in 0..nterms {
+        // SAFETY: schedule indices are bounded by construction
+        // (McmSchedule::compile only emits valid cell/dims indices;
+        // debug-asserted in `execute`).  Step boundaries need no special
+        // handling here: hazard-freedom makes each term's reads final
+        // regardless of where the step cuts fall, so the arena can be
+        // swept as one flat loop.
+        unsafe {
+            let v = *st.get_unchecked(*sched.l.get_unchecked(i) as usize)
+                + *st.get_unchecked(*sched.r.get_unchecked(i) as usize)
+                + *dims.get_unchecked(*sched.pa.get_unchecked(i) as usize)
+                    * *dims.get_unchecked(*sched.pb.get_unchecked(i) as usize)
+                    * *dims.get_unchecked(*sched.pc.get_unchecked(i) as usize);
+            let slot = st.get_unchecked_mut(*sched.tgt.get_unchecked(i) as usize);
+            *slot = if *sched.term.get_unchecked(i) == 1 {
+                v
+            } else {
+                (*slot).min(v)
+            };
+        }
+    }
+}
+
+/// The paper's 4-substep memory model: gather every lane of a step, then
+/// apply the writes.  Required for the faithful variant's stale-read
+/// semantics.
+fn execute_two_phase(p: &McmProblem, sched: &McmSchedule, st: &mut [i64]) {
+    let dims = &p.dims;
+    let mut pending: Vec<i64> = vec![0; sched.max_width()];
+    for s in 0..sched.num_steps() {
+        let view = sched.step_view(s);
+        // substeps 1–3: every thread gathers and computes f(l, r)
+        for (lane, ((&li, &ri), ((&pa, &pb), &pc))) in view
+            .l
+            .iter()
+            .zip(view.r)
+            .zip(view.pa.iter().zip(view.pb).zip(view.pc))
+            .enumerate()
+        {
+            // SAFETY: schedule indices are bounded by construction;
+            // pending has max_width() ≥ view.len() slots.
+            unsafe {
+                *pending.get_unchecked_mut(lane) = *st.get_unchecked(li as usize)
+                    + *st.get_unchecked(ri as usize)
+                    + *dims.get_unchecked(pa as usize)
+                        * *dims.get_unchecked(pb as usize)
+                        * *dims.get_unchecked(pc as usize);
+            }
+        }
+        // substep 4: combine with ↓ (min); targets are distinct (Thm. 1)
+        for (lane, (&tgt, &term)) in view.tgt.iter().zip(view.term).enumerate() {
+            // SAFETY: as above.
+            unsafe {
+                let v = *pending.get_unchecked(lane);
+                let slot = st.get_unchecked_mut(tgt as usize);
+                *slot = if term == 1 { v } else { (*slot).min(v) };
+            }
+        }
+    }
+}
+
+/// Convenience: fetch the `(n, variant)` schedule from the process-wide
+/// cache and execute.  Serving paths (the coordinator's native route)
+/// land here, so a repeated instance size never recompiles its schedule.
 pub fn solve(p: &McmProblem, variant: McmVariant) -> Vec<i64> {
-    let sched = McmSchedule::compile(p.n().max(1), variant);
+    let sched = cache::mcm_schedule(p.n().max(1), variant);
     execute(p, &sched)
 }
 
 /// Real multi-threaded executor: the ≤ n−1 lanes of each step are split
-/// across `threads` workers, with the two-phase (gather, then write)
-/// structure enforced by barriers — the faithful CPU analogue of the
-/// paper's lock-step GPU threads.
+/// across `threads` workers in contiguous chunks (cache-dense column
+/// runs), with the two-phase (gather, then write) structure enforced by
+/// barriers for the faithful variant — the faithful CPU analogue of the
+/// paper's lock-step GPU threads.  Corrected schedules run fused (one
+/// barrier per step instead of two); see the module docs for why that is
+/// observably identical.
 pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> Vec<i64> {
     let n = p.n();
+    assert_eq!(n, sched.n, "schedule/problem size mismatch");
     let threads = threads.max(1).min(sched.max_width().max(1));
     if threads == 1 {
         return execute(p, sched);
@@ -84,10 +148,11 @@ pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> 
     let mut st = vec![0i64; linear::num_cells(n)];
     let barrier = Barrier::new(threads);
     let st_ptr = SharedTable(st.as_mut_ptr());
-    // per-lane pending values, (tgt, first, v), written by the owning lane
+    let fused = sched.variant == McmVariant::Corrected;
+    // per-lane pending values, written by the owning lane (faithful only)
     let width = sched.max_width();
-    let mut pending = vec![(0usize, false, 0i64); width];
-    let pend_ptr = PendingTable(pending.as_mut_ptr());
+    let mut pending = vec![0i64; width];
+    let pend_ptr = SharedTable(pending.as_mut_ptr());
 
     std::thread::scope(|scope| {
         for t in 0..threads {
@@ -95,35 +160,66 @@ pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> 
             let st_ptr = &st_ptr;
             let pend_ptr = &pend_ptr;
             scope.spawn(move || {
-                for entries in &sched.steps {
+                for s in 0..sched.num_steps() {
+                    let view = sched.step_view(s);
+                    // contiguous chunk of lanes owned by this worker
+                    let chunk = view.len().div_ceil(threads);
+                    let lo = (t * chunk).min(view.len());
+                    let hi = ((t + 1) * chunk).min(view.len());
+                    if fused {
+                        // single fused pass: reads are of cells finalized
+                        // in earlier steps (hazard-freedom), which are
+                        // disjoint from this step's write set, and writes
+                        // are lane-distinct (Thm. 1) — no data race.
+                        for lane in lo..hi {
+                            unsafe {
+                                let v = st_ptr.read(view.l[lane] as usize)
+                                    + st_ptr.read(view.r[lane] as usize)
+                                    + p.weight(
+                                        view.pa[lane] as usize,
+                                        view.pb[lane] as usize,
+                                        view.pc[lane] as usize,
+                                    );
+                                let tgt = view.tgt[lane] as usize;
+                                let newv = if view.term[lane] == 1 {
+                                    v
+                                } else {
+                                    st_ptr.read(tgt).min(v)
+                                };
+                                st_ptr.write(tgt, newv);
+                            }
+                        }
+                        barrier.wait(); // end of outer step
+                        continue;
+                    }
                     // substeps 1–3 (parallel gather+compute into pending)
-                    let mut lane = t;
-                    while lane < entries.len() {
-                        let e = &entries[lane];
+                    for lane in lo..hi {
                         // SAFETY: reads of st are of cells finalized in
                         // earlier steps (or stale — intentionally, for the
                         // faithful variant); pending[lane] is lane-owned.
                         unsafe {
-                            let v = st_ptr.read(e.l as usize)
-                                + st_ptr.read(e.r as usize)
-                                + p.weight(e.pa as usize, e.pb as usize, e.pc as usize);
-                            pend_ptr.write(lane, (e.tgt as usize, e.is_first(), v));
+                            let v = st_ptr.read(view.l[lane] as usize)
+                                + st_ptr.read(view.r[lane] as usize)
+                                + p.weight(
+                                    view.pa[lane] as usize,
+                                    view.pb[lane] as usize,
+                                    view.pc[lane] as usize,
+                                );
+                            pend_ptr.write(lane, v);
                         }
-                        lane += threads;
                     }
                     barrier.wait(); // end of substep 3
                     // substep 4 (parallel combine; targets distinct)
-                    let mut lane = t;
-                    while lane < entries.len() {
+                    for lane in lo..hi {
                         // SAFETY: targets are distinct within a step
                         // (Theorem 1, checked by core::conflict), so each
                         // st slot is written by exactly one lane.
                         unsafe {
-                            let (tgt, first, v) = pend_ptr.read(lane);
+                            let v = pend_ptr.read(lane);
+                            let tgt = view.tgt[lane] as usize;
                             let cur = st_ptr.read(tgt);
-                            st_ptr.write(tgt, if first { v } else { cur.min(v) });
+                            st_ptr.write(tgt, if view.term[lane] == 1 { v } else { cur.min(v) });
                         }
-                        lane += threads;
                     }
                     barrier.wait(); // end of outer step
                 }
@@ -133,25 +229,11 @@ pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> 
     st
 }
 
-struct PendingTable(*mut (usize, bool, i64));
-unsafe impl Sync for PendingTable {}
-unsafe impl Send for PendingTable {}
-impl PendingTable {
-    #[inline(always)]
-    unsafe fn read(&self, i: usize) -> (usize, bool, i64) {
-        unsafe { *self.0.add(i) }
-    }
-    #[inline(always)]
-    unsafe fn write(&self, i: usize, v: (usize, bool, i64)) {
-        unsafe { *self.0.add(i) = v }
-    }
-}
-
 /// Execution trace of the first `max_steps` steps (regenerates Fig. 7's
 /// style of walkthrough).
 pub fn trace(p: &McmProblem, variant: McmVariant, max_steps: usize) -> String {
     let n = p.n();
-    let sched = McmSchedule::compile(n, variant);
+    let sched = cache::mcm_schedule(n, variant);
     let mut out = format!(
         "MCM pipeline trace ({}), n={}, {} cells, {} steps, width ≤ {}\n",
         variant.name(),
@@ -160,13 +242,13 @@ pub fn trace(p: &McmProblem, variant: McmVariant, max_steps: usize) -> String {
         sched.num_steps(),
         sched.max_width()
     );
-    for (s, entries) in sched.steps.iter().enumerate() {
+    for (s, view) in sched.steps().enumerate() {
         if s >= max_steps {
             out.push_str("…\n");
             break;
         }
         out.push_str(&format!("step {:>3}:", s + 1));
-        for e in entries {
+        for e in view.iter() {
             let opsym = if e.is_first() { "=" } else { "↓=" };
             out.push_str(&format!(
                 "  ST[{}] {} f(ST[{}],ST[{}])",
@@ -193,6 +275,27 @@ mod tests {
             let n = g.usize(1..14);
             let p = McmProblem::new(g.dims(n, 25)).unwrap();
             if solve(&p, McmVariant::Corrected) == seq::linear_table(&p) {
+                Ok(())
+            } else {
+                Err(format!("{:?}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn fused_matches_two_phase_on_corrected() {
+        // the §Perf fusion claim, asserted directly: the fused sweep and
+        // the 4-substep memory model are byte-identical on hazard-free
+        // schedules
+        forall("mcm fused == two-phase", 40, |g| {
+            let n = g.usize(2..18);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let sched = McmSchedule::compile(n, McmVariant::Corrected);
+            let mut fused = vec![0i64; linear::num_cells(n)];
+            let mut phased = vec![0i64; linear::num_cells(n)];
+            execute_fused(&p, &sched, &mut fused);
+            execute_two_phase(&p, &sched, &mut phased);
+            if fused == phased {
                 Ok(())
             } else {
                 Err(format!("{:?}", p.dims))

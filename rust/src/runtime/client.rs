@@ -8,9 +8,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
-
-use once_cell::sync::OnceCell;
+use std::sync::{Mutex, OnceLock};
 
 use crate::{Error, Result};
 
@@ -52,8 +50,19 @@ impl Client {
     /// The process-wide client (PJRT CPU clients are heavyweight; one is
     /// enough and lets executable caching work across the coordinator).
     pub fn global() -> Result<&'static Client> {
-        static GLOBAL: OnceCell<Client> = OnceCell::new();
-        GLOBAL.get_or_try_init(Client::cpu)
+        static GLOBAL: OnceLock<Client> = OnceLock::new();
+        static INIT: Mutex<()> = Mutex::new(());
+        if let Some(c) = GLOBAL.get() {
+            return Ok(c);
+        }
+        // serialize the miss path so exactly one heavyweight PJRT client
+        // is ever constructed (OnceLock alone can't fallibly initialize)
+        let _guard = INIT.lock().unwrap();
+        if GLOBAL.get().is_none() {
+            let built = Client::cpu()?;
+            let _ = GLOBAL.set(built);
+        }
+        Ok(GLOBAL.get().expect("initialized under lock"))
     }
 
     pub fn platform(&self) -> String {
@@ -91,6 +100,13 @@ impl Client {
     pub fn cached(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
+}
+
+/// Build an i32 literal of the given shape directly from i32 data (no
+/// widening round-trip — used for cached schedule tensors).
+pub fn i32_literal_raw(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
 }
 
 /// Build an i32 literal of the given shape from i64 data (values must fit;

@@ -21,12 +21,16 @@
 //!   instance's root because it only depends on cells within the first
 //!   `n` rows/cols.  The engine reads that cell.
 //! * **MCM pipeline**: exact-size schedule tensors are compiled by Rust
-//!   ([`McmSchedule::to_tensor`]) padded to the artifact's static
+//!   ([`crate::core::schedule::McmSchedule::to_tensor`], memoized by the
+//!   process-wide schedule cache) padded to the artifact's static
 //!   `(S, T)`.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use crate::core::problem::{McmProblem, SdpProblem};
-use crate::core::schedule::{linear, McmSchedule, McmVariant};
-use crate::runtime::client::{i32_literal, to_i64_vec, Client};
+use crate::core::schedule::{linear, McmVariant};
+use crate::runtime::client::{i32_literal, i32_literal_raw, to_i64_vec, Client};
 use crate::runtime::registry::Registry;
 use crate::{Error, Result};
 
@@ -34,6 +38,12 @@ use crate::{Error, Result};
 pub struct Engine {
     pub registry: Registry,
     client: &'static Client,
+    /// Encoded `i32` schedule tensors per (artifact, variant) — the
+    /// dispatch-ready payload at native width, so repeated
+    /// schedule-executor requests pay neither schedule compilation (the
+    /// schedule cache) nor re-encoding, and the cache holds no widened
+    /// copy.
+    sched_tensors: Mutex<HashMap<(String, McmVariant), Arc<Vec<i32>>>>,
 }
 
 impl Engine {
@@ -43,6 +53,7 @@ impl Engine {
         Ok(Engine {
             registry: Registry::load(&dir)?,
             client: Client::global()?,
+            sched_tensors: Mutex::new(HashMap::new()),
         })
     }
 
@@ -50,6 +61,7 @@ impl Engine {
         Ok(Engine {
             registry,
             client: Client::global()?,
+            sched_tensors: Mutex::new(HashMap::new()),
         })
     }
 
@@ -164,6 +176,8 @@ impl Engine {
     /// Solve an MCM instance through the schedule-executor artifact with
     /// the given schedule variant compiled at exact instance size.
     /// Requires an exact-`n` artifact (the schedule encodes `n`).
+    /// The schedule comes from the process-wide cache, so repeated
+    /// requests for one size pay the compile exactly once.
     pub fn solve_mcm_pipeline(&self, p: &McmProblem, variant: McmVariant) -> Result<Vec<i64>> {
         let n = p.n();
         let spec = self
@@ -176,14 +190,27 @@ impl Engine {
                 Error::Runtime(format!("no mcm_pipeline artifact for exactly n={n}"))
             })?
             .clone();
-        let sched = McmSchedule::compile(n, variant);
-        let tensor = sched.to_tensor(spec.sched_steps, spec.sched_width)?;
-        let tensor64: Vec<i64> = tensor.iter().map(|&v| v as i64).collect();
+        let key = (spec.name.clone(), variant);
+        let cached = self.sched_tensors.lock().unwrap().get(&key).cloned();
+        let tensor = match cached {
+            Some(t) => t,
+            None => {
+                // encode outside the lock; a racing encoder's identical
+                // result is simply kept (deterministic)
+                let t = Arc::new(spec.schedule_tensor(variant)?);
+                self.sched_tensors
+                    .lock()
+                    .unwrap()
+                    .entry(key)
+                    .or_insert(t)
+                    .clone()
+            }
+        };
         let exe = self.client.load(&spec.name, &spec.file)?;
         let out = exe.run(&[
             i32_literal(&p.dims, &[n as i64 + 1])?,
-            i32_literal(
-                &tensor64,
+            i32_literal_raw(
+                &tensor,
                 &[spec.sched_steps as i64, spec.sched_width as i64, 8],
             )?,
         ])?;

@@ -2,6 +2,8 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::core::cache;
+use crate::core::schedule::McmVariant;
 use crate::core::semigroup::Op;
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -40,6 +42,23 @@ pub struct ArtifactSpec {
     /// MCM schedule-executor tensor shape (steps, width); 0 otherwise.
     pub sched_steps: usize,
     pub sched_width: usize,
+}
+
+impl ArtifactSpec {
+    /// The `i32[S, T, 8]` schedule tensor this artifact consumes, for the
+    /// given variant — compiled through the process-wide schedule cache
+    /// ([`crate::core::cache`]) and padded to the artifact's static shape,
+    /// so repeated dispatches to one bucket never recompile the schedule.
+    pub fn schedule_tensor(&self, variant: McmVariant) -> Result<Vec<i32>> {
+        if self.sched_steps == 0 || self.sched_width == 0 {
+            return Err(Error::Registry(format!(
+                "artifact '{}' is not a schedule executor",
+                self.name
+            )));
+        }
+        let sched = cache::mcm_schedule(self.n, variant);
+        sched.to_tensor(self.sched_steps, self.sched_width)
+    }
 }
 
 /// The parsed artifact catalogue.

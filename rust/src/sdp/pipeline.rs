@@ -66,6 +66,12 @@ fn solve_with(p: &SdpProblem, st: &mut [i64], f: impl Fn(i64, i64) -> i64) {
 
 /// Real multi-core pipeline executor: `threads` workers share the k lanes
 /// of each outer step; a barrier separates steps.
+///
+/// Lanes are assigned in contiguous chunks (worker `t` owns
+/// `j ∈ [t·⌈k/threads⌉ + 1, (t+1)·⌈k/threads⌉]`), not strided: each
+/// worker then touches a dense run of the offsets vector and a dense run
+/// of write targets (`ij = i − j + 1` is contiguous in `j`), which keeps
+/// its table traffic within a few cache lines per step (DESIGN.md §Perf).
 pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
     let threads = threads.max(1).min(p.k());
     if threads == 1 {
@@ -77,16 +83,21 @@ pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
     let offsets = &p.offsets;
     let barrier = Barrier::new(threads);
     let st_ptr = SharedTable(st.as_mut_ptr());
+    let chunk = k.div_ceil(threads);
 
     std::thread::scope(|scope| {
         for t in 0..threads {
             let barrier = &barrier;
             let st_ptr = &st_ptr;
             scope.spawn(move || {
+                // worker t owns the contiguous lanes j = jlo..=jhi
+                let jlo = (t * chunk + 1).min(k + 1);
+                let jhi = ((t + 1) * chunk).min(k);
                 for i in a1..=(n + k - 2) {
-                    // worker t owns lanes j = t+1, t+1+threads, …
-                    let mut j = t + 1;
-                    while j <= k && j <= i + 1 {
+                    for j in jlo..=jhi {
+                        if j > i + 1 {
+                            break; // pipe not filled this deep yet
+                        }
                         let ij = i - j + 1;
                         if ij >= a1 && ij < n {
                             let a = offsets[j - 1] as usize;
@@ -101,7 +112,6 @@ pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
                                 st_ptr.write(ij, newv);
                             }
                         }
-                        j += threads;
                     }
                     barrier.wait();
                 }

@@ -131,19 +131,20 @@ pub fn two_by_two_trace(p: &SdpProblem) -> Vec<StepCost> {
 
 /// MCM pipeline trace (Fig. 8): one descriptor per outer step with the
 /// step's true width and collision degree.  Consecutive compatible
-/// descriptors are merged.
+/// descriptors are merged.  The flat-arena schedule hands the per-substep
+/// address lists over as zero-copy column slices; one scratch buffer is
+/// reused across every step for the sort-based collision count.
 pub fn mcm_pipeline_trace(sched: &McmSchedule) -> Vec<StepCost> {
     let mut out: Vec<StepCost> = Vec::new();
-    for entries in &sched.steps {
+    let mut scratch: Vec<u32> = Vec::with_capacity(sched.max_width());
+    for view in sched.steps() {
         let mut degree = 1u64;
-        for field in 0..2 {
-            let mut addrs: Vec<u32> = entries
-                .iter()
-                .map(|e| if field == 0 { e.l } else { e.r })
-                .collect();
-            addrs.sort_unstable();
+        for addrs in [view.l, view.r] {
+            scratch.clear();
+            scratch.extend_from_slice(addrs);
+            scratch.sort_unstable();
             let mut run = 1u64;
-            for w in addrs.windows(2) {
+            for w in scratch.windows(2) {
                 if w[0] == w[1] {
                     run += 1;
                     degree = degree.max(run);
@@ -157,7 +158,7 @@ pub fn mcm_pipeline_trace(sched: &McmSchedule) -> Vec<StepCost> {
             // substeps 1, 2 (reads) + substep 4 (read-modify-write)
             alu_ops: 4, // 2 mul + 2 add of f, plus the ↓ combine
             devicewide_sync: true,
-            ..StepCost::new(entries.len().max(1) as u64, 4, 1)
+            ..StepCost::new(view.len().max(1) as u64, 4, 1)
         };
         match out.last_mut() {
             Some(prev)

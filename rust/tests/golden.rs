@@ -37,8 +37,8 @@ fn schedules_match_python() {
                 "n={n} {name}: width"
             );
             let steps = expect.arr_field("steps").unwrap();
-            assert_eq!(sched.steps.len(), steps.len());
-            for (s, (got, want)) in sched.steps.iter().zip(steps).enumerate() {
+            assert_eq!(sched.num_steps(), steps.len());
+            for (s, (got, want)) in sched.steps().zip(steps).enumerate() {
                 let want = want.as_arr().unwrap();
                 assert_eq!(got.len(), want.len(), "n={n} {name} step {s}: lane count");
                 for (e, w) in got.iter().zip(want) {

@@ -173,6 +173,79 @@ fn stats_request_reports_metrics() {
 }
 
 #[test]
+fn schedule_cache_serves_repeated_sizes() {
+    // Two identical MCM requests: the first may compile the (n, variant)
+    // schedule, the second MUST be served from the process-wide schedule
+    // cache — observable as a hit-counter increase in the stats snapshot
+    // between the two calls (and correct answers both times).
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    // n chosen to be distinctive: no other native-path test uses 41, so
+    // the second request below cannot be a cold miss even though the
+    // cache (and its counters) are shared process-wide across tests
+    let mut rng = pipedp::util::rng::Rng::seeded(23);
+    let p = McmProblem::random(&mut rng, 41, 20);
+    let want = *pipedp::mcm::seq::linear_table(&p).last().unwrap();
+    let mcm_request = |p: &McmProblem| Request {
+        id: 0,
+        body: RequestBody::Mcm {
+            problem: p.clone(),
+            variant: McmVariant::Corrected,
+        },
+        backend: Backend::Native,
+        full: false,
+    };
+    let stats_request = || Request {
+        id: 0,
+        body: RequestBody::Stats,
+        backend: Backend::Auto,
+        full: false,
+    };
+    let snapshot_hits = |client: &mut Client| {
+        let resp = client.call(stats_request()).unwrap();
+        let stats = resp.stats.unwrap();
+        (
+            stats.i64_field("sched_cache_hits").unwrap(),
+            stats.i64_field("sched_cache_misses").unwrap(),
+        )
+    };
+
+    let first = client.call(mcm_request(&p)).unwrap();
+    assert!(first.ok, "{:?}", first.error);
+    assert_eq!(first.value, want);
+    let (hits_after_first, misses_after_first) = snapshot_hits(&mut client);
+
+    let second = client.call(mcm_request(&p)).unwrap();
+    assert!(second.ok, "{:?}", second.error);
+    assert_eq!(second.value, want, "cached schedule must not change results");
+    let (hits_after_second, _misses) = snapshot_hits(&mut client);
+
+    assert!(
+        hits_after_second > hits_after_first,
+        "second request for n=41 must hit the schedule cache \
+         (hits {hits_after_first} -> {hits_after_second})"
+    );
+    assert!(
+        hits_after_second >= 1 && misses_after_first >= 1,
+        "sanity: counters must be live"
+    );
+
+    // every further identical request must also be hit-served — no
+    // per-request schedule compilation for repeated sizes
+    for _ in 0..3 {
+        let (h_before, _) = snapshot_hits(&mut client);
+        let again = client.call(mcm_request(&p)).unwrap();
+        assert!(again.ok);
+        assert_eq!(again.value, want);
+        let (h_after, _) = snapshot_hits(&mut client);
+        assert!(
+            h_after > h_before,
+            "repeat request must be served from the schedule cache"
+        );
+    }
+}
+
+#[test]
 fn concurrent_clients() {
     let server = start_server();
     let addr = server.local_addr.to_string();

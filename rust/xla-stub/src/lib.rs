@@ -1,0 +1,184 @@
+//! Offline stub of the `xla` PJRT bindings (see README.md).
+//!
+//! [`Literal`] is a real host-side container; the device-facing types
+//! ([`PjRtClient::compile`], [`HloModuleProto::from_text_file`], …) return
+//! typed [`Error`]s so callers degrade gracefully when no XLA backend is
+//! linked.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' surface.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA backend not linked (offline stub build; see rust/xla-stub/README.md)"
+    ))
+}
+
+/// Element types the stub can carry (only i32 is used by pipedp).
+pub trait NativeType: Copy {
+    fn from_i32(v: i32) -> Self;
+    fn to_i32(self) -> i32;
+}
+
+impl NativeType for i32 {
+    fn from_i32(v: i32) -> i32 {
+        v
+    }
+    fn to_i32(self) -> i32 {
+        self
+    }
+}
+
+/// A host literal: flat data plus a shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Literal {
+    data: Vec<i32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            data: values.iter().map(|v| v.to_i32()).collect(),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    /// Reshape without copying; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({} elements)",
+                self.dims,
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_i32(v)).collect())
+    }
+
+    /// Unpack a tuple literal. The stub never produces real tuples (no
+    /// execution path); a plain literal unpacks to itself for symmetry.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Ok(vec![self])
+    }
+}
+
+/// Parsed HLO module (opaque; never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parse HLO text {path}")))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer handle (never materialized by the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("buffer readback"))
+    }
+}
+
+/// A compiled executable (never produced by the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// A PJRT client. Construction succeeds (it is a host-only handle) so the
+/// process-wide client can be probed; compilation reports the stub.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {
+            platform: "cpu (pipedp offline stub)",
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        assert_eq!(lit.element_count(), 6);
+        let m = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.shape(), &[2, 3]);
+        assert_eq!(m.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn device_paths_report_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("cpu"));
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+    }
+}
