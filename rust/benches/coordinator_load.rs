@@ -1,0 +1,193 @@
+//! E11 — coordinator load bench: drive pipelined clients at saturation
+//! through the real TCP coordinator (accept → batcher → bounded worker
+//! queue → native executors) and record the serving-side health numbers:
+//! queue-wait p50/p99, shed rate at the admission gate, and goodput.
+//!
+//! The pool is sized deliberately small (2 workers, 32 queue slots) so a
+//! modest client fleet actually saturates it — the point is to exercise
+//! the admission gate and the queue-wait tail, not to size the box.
+//!
+//! Run: `cargo bench --bench coordinator_load`           (table to stdout)
+//!      `cargo bench --bench coordinator_load -- --json` (also writes
+//!      BENCH_coordinator.json at the repo root)
+//! Env: `PIPEDP_BENCH_FAST=1` shrinks the workload (CI smoke mode).
+
+use std::time::{Duration, Instant};
+
+use pipedp::coordinator::batcher::Policy;
+use pipedp::coordinator::request::{Backend, Request, RequestBody};
+use pipedp::coordinator::server::{Client, Config, Server};
+use pipedp::core::problem::SdpProblem;
+use pipedp::core::semigroup::Op;
+use pipedp::util::json::Json;
+use pipedp::util::table::{fmt_duration, Table};
+
+struct ClientTotals {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+}
+
+fn main() {
+    let emit_json = std::env::args().any(|a| a == "--json");
+    let fast = std::env::var("PIPEDP_BENCH_FAST").as_deref() == Ok("1");
+    // (clients, requests per client, S-DP size): big native S-DP solves
+    // keep each worker busy for a while so the burst outruns the pool
+    let (clients, per_client, n_sdp) = if fast {
+        (2usize, 200usize, 4_000usize)
+    } else {
+        (8, 2_000, 40_000)
+    };
+
+    let server = Server::start(Config {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        policy: Policy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        warm: false,
+        queue_cap: 32,
+    })
+    .expect("server starts");
+    let addr = server.local_addr.to_string();
+
+    let started = Instant::now();
+    let totals = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut totals = ClientTotals {
+                        sent: 0,
+                        ok: 0,
+                        shed: 0,
+                        errors: 0,
+                    };
+                    let mut remaining = per_client;
+                    while remaining > 0 {
+                        let burst = 50.min(remaining);
+                        remaining -= burst;
+                        let reqs: Vec<Request> = (0..burst)
+                            .map(|i| {
+                                let n = n_sdp + (c * 7 + i) % 64;
+                                Request {
+                                    id: 0,
+                                    body: RequestBody::Sdp(
+                                        SdpProblem::new(n, vec![2, 1], Op::Min, vec![9, 4])
+                                            .unwrap(),
+                                    ),
+                                    backend: Backend::Native,
+                                    full: false,
+                                }
+                            })
+                            .collect();
+                        totals.sent += burst as u64;
+                        match client.call_pipelined(reqs) {
+                            Ok(resps) => {
+                                for r in &resps {
+                                    if r.ok {
+                                        totals.ok += 1;
+                                    } else if r.overloaded {
+                                        totals.shed += 1;
+                                    } else {
+                                        totals.errors += 1;
+                                    }
+                                }
+                            }
+                            Err(_) => totals.errors += burst as u64,
+                        }
+                    }
+                    totals
+                })
+            })
+            .collect();
+        let mut acc = ClientTotals {
+            sent: 0,
+            ok: 0,
+            shed: 0,
+            errors: 0,
+        };
+        for h in handles {
+            let t = h.join().expect("client thread");
+            acc.sent += t.sent;
+            acc.ok += t.ok;
+            acc.shed += t.shed;
+            acc.errors += t.errors;
+        }
+        acc
+    });
+    let elapsed = started.elapsed();
+
+    let m = &server.metrics;
+    let queue_p50 = m.queue_wait.percentile(0.5);
+    let queue_p99 = m.queue_wait.percentile(0.99);
+    let latency_p50 = m.latency.percentile(0.5);
+    let latency_p99 = m.latency.percentile(0.99);
+    let shed_rate = totals.shed as f64 / totals.sent.max(1) as f64;
+    let throughput = totals.ok as f64 / elapsed.as_secs_f64();
+
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests sent".into(), totals.sent.to_string()]);
+    t.row(vec!["served ok".into(), totals.ok.to_string()]);
+    t.row(vec![
+        "shed (typed overloaded)".into(),
+        format!("{} ({:.1}%)", totals.shed, 100.0 * shed_rate),
+    ]);
+    t.row(vec!["errors".into(), totals.errors.to_string()]);
+    t.row(vec!["wall clock".into(), fmt_duration(elapsed)]);
+    t.row(vec![
+        "goodput".into(),
+        format!("{throughput:.0} ok/s"),
+    ]);
+    t.row(vec![
+        "queue wait p50 / p99".into(),
+        format!("{} / {}", fmt_duration(queue_p50), fmt_duration(queue_p99)),
+    ]);
+    t.row(vec![
+        "latency p50 / p99".into(),
+        format!("{} / {}", fmt_duration(latency_p50), fmt_duration(latency_p99)),
+    ]);
+    println!(
+        "\n== coordinator under saturation ({clients} clients × {per_client} S-DP n≈{n_sdp}, \
+         2 workers, queue 32) =="
+    );
+    println!("{}", t.render());
+    if totals.errors > 0 {
+        println!("WARNING: {} non-overload errors (expected 0)", totals.errors);
+    }
+
+    // drained exit is part of what this bench certifies: a hang here is a
+    // shutdown regression, caught by CI's overall job timeout
+    server.shutdown();
+
+    if emit_json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("coordinator_load")),
+            ("clients", Json::int(clients as i64)),
+            ("per_client", Json::int(per_client as i64)),
+            ("n_sdp", Json::int(n_sdp as i64)),
+            ("workers", Json::int(2)),
+            ("queue_cap", Json::int(32)),
+            ("sent", Json::int(totals.sent as i64)),
+            ("ok", Json::int(totals.ok as i64)),
+            ("shed", Json::int(totals.shed as i64)),
+            ("errors", Json::int(totals.errors as i64)),
+            ("shed_rate", Json::num((shed_rate * 1e4).round() / 1e4)),
+            ("throughput_ok_per_s", Json::num(throughput.round())),
+            ("queue_p50_us", Json::int(queue_p50.as_micros() as i64)),
+            ("queue_p99_us", Json::int(queue_p99.as_micros() as i64)),
+            ("latency_p50_us", Json::int(latency_p50.as_micros() as i64)),
+            ("latency_p99_us", Json::int(latency_p99.as_micros() as i64)),
+            ("wall_ms", Json::int(elapsed.as_millis() as i64)),
+        ]);
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_coordinator.json");
+        std::fs::write(&path, format!("{}\n", doc.to_string()))
+            .expect("write BENCH_coordinator.json");
+        println!("wrote {}", path.display());
+    }
+}

@@ -108,6 +108,7 @@ fn main() {
             },
             allow_engineless: true,
             warm: true,
+            queue_cap: 0,
         })
         .expect("server");
         let addr = server.local_addr.to_string();

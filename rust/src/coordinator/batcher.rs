@@ -2,6 +2,18 @@
 //! until `max_batch` accumulate) so one PJRT dispatch serves many — the
 //! same policy a serving router applies to model invocations.
 //!
+//! Deadlines are tracked in a min-heap keyed by `enqueued + max_wait`
+//! (one entry per group creation, lazily invalidated), and expired groups
+//! are flushed on **every** loop iteration — not only when the request
+//! channel goes quiet.  The seed flushed deadlines only from the
+//! `recv_timeout` timeout arm, so a steady trickle of traffic to *other*
+//! group keys could starve a partial batch far past its deadline.
+//!
+//! Admission is gated before anything enters the batcher: when the worker
+//! pool's bounded queue is full, `submit_request` sheds the request with a
+//! typed `overloaded` reply (and a `shed` metrics tick) instead of
+//! queueing it without bound (DESIGN.md §2).
+//!
 //! Schedule compilation is *not* part of the dispatch cost the batcher
 //! amortizes: every execution path it flushes into (native MCM solve,
 //! XLA schedule-executor dispatch) fetches its schedule from the
@@ -9,9 +21,10 @@
 //! per `(kind, n, variant)` in the process lifetime compiles one, and the
 //! server warmup pre-warms the cache for every registered bucket.
 
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
@@ -43,11 +56,20 @@ impl Default for Policy {
     }
 }
 
-/// The batcher thread: owns the pending map, flushes groups to the pool.
+/// What flows to the batcher thread: requests, or the drain signal.
+enum Msg {
+    Req(Box<Pending>),
+    Stop,
+}
+
+/// The batcher thread: owns the pending map + deadline heap, flushes
+/// groups to the pool.
 pub struct Batcher {
-    tx: mpsc::Sender<Pending>,
+    tx: mpsc::Sender<Msg>,
     router: Arc<Router>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    pool: Arc<WorkerPool>,
+    metrics: Arc<Metrics>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Batcher {
@@ -57,9 +79,11 @@ impl Batcher {
         metrics: Arc<Metrics>,
         policy: Policy,
     ) -> Batcher {
-        let (tx, rx) = mpsc::channel::<Pending>();
+        let (tx, rx) = mpsc::channel::<Msg>();
         let handle = {
             let router = router.clone();
+            let pool = pool.clone();
+            let metrics = metrics.clone();
             std::thread::Builder::new()
                 .name("pipedp-batcher".into())
                 .spawn(move || run(rx, router, pool, metrics, policy))
@@ -68,74 +92,141 @@ impl Batcher {
         Batcher {
             tx,
             router,
-            handle: Some(handle),
+            pool,
+            metrics,
+            handle: Mutex::new(Some(handle)),
         }
     }
 
-    /// Hand a pre-routed request to the batcher.
-    pub fn submit(&self, pending: Pending) {
-        // a send failure means the batcher thread exited: the reply channel
-        // is dropped and the connection sees a disconnect
-        let _ = self.tx.send(pending);
+    /// Hand a pre-routed request to the batcher, counting it in flight
+    /// (the slot is released when its reply is sent), so direct
+    /// submissions and gate-admitted ones share one accounting and the
+    /// admission bound stays honest under mixed use.  `false` means the
+    /// batcher thread is gone and the pending (with its reply sender)
+    /// was dropped — the connection sees a disconnect for that request.
+    pub fn submit(&self, pending: Pending) -> bool {
+        self.metrics.inflight.fetch_add(1, Ordering::Relaxed);
+        self.enqueue(pending)
     }
 
-    /// Route + enqueue; routing failures answer immediately.
-    pub fn submit_request(
-        &self,
-        request: Request,
-        reply: mpsc::Sender<crate::coordinator::request::Response>,
-    ) {
+    /// Send a pending whose in-flight slot is already claimed; on a dead
+    /// batcher thread the slot is released here.
+    fn enqueue(&self, pending: Pending) -> bool {
+        let ok = self.tx.send(Msg::Req(Box::new(pending))).is_ok();
+        if !ok {
+            self.metrics.dec_inflight();
+        }
+        ok
+    }
+
+    /// Route + enqueue; routing failures answer immediately, and a
+    /// saturated coordinator sheds with a typed `overloaded` reply.
+    ///
+    /// The admission gate bounds *total requests in flight* (batcher
+    /// channel + pending groups + worker queue + executing) by the worker
+    /// queue capacity — gating on the pool backlog alone would let a
+    /// fast-arriving burst hide in the batcher's channel and bypass the
+    /// bound.  The backlog check stays as a second trigger for work that
+    /// enters the pool without passing this gate.
+    pub fn submit_request(&self, request: Request, reply: mpsc::Sender<Response>) {
+        let cap = self.pool.capacity();
+        // reserve-then-check: the fetch_add atomically claims an in-flight
+        // slot, so concurrent connection threads cannot jointly race a
+        // load-then-increment past the bound; a failed claim is undone
+        let saturated = if self.pool.backlog() >= cap {
+            true
+        } else if self.metrics.inflight.fetch_add(1, Ordering::Relaxed) >= cap as u64 {
+            self.metrics.dec_inflight();
+            true
+        } else {
+            false
+        };
+        if saturated {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Response::overloaded(request.id));
+            return;
+        }
         match self.router.route(&request) {
-            Ok(route) => self.submit(Pending {
-                request,
-                route,
-                enqueued: Instant::now(),
-                reply,
-            }),
-            Err(e) => {
-                let _ = reply.send(crate::coordinator::request::Response::err(
-                    request.id,
-                    e.to_string(),
-                ));
+            // the claimed slot is released when the reply is sent (flush) —
+            // see Metrics::dec_inflight for the saturating contract
+            Ok(route) => {
+                let request_id = request.id;
+                let reply2 = reply.clone();
+                // enqueue, not submit: the gate's fetch_add above already
+                // claimed this request's slot, and enqueue releases it if
+                // the batcher thread is gone (else the gauge would ratchet
+                // to cap and shed forever)
+                let accepted = self.enqueue(Pending {
+                    request,
+                    route,
+                    enqueued: Instant::now(),
+                    reply,
+                });
+                if !accepted {
+                    let _ = reply2
+                        .send(Response::err(request_id, "batcher unavailable".to_string()));
+                }
             }
+            Err(e) => {
+                let _ = reply.send(Response::err(request.id, e.to_string()));
+                self.metrics.dec_inflight(); // answered now: not in flight
+            }
+        }
+    }
+
+    /// Drain every pending group into the pool and join the batcher
+    /// thread.  Idempotent; `Drop` calls it too.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
         }
     }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // closing tx ends the loop after a final flush
-        let (dead_tx, _) = mpsc::channel();
-        self.tx = dead_tx;
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
+/// Idle wait when no group holds a deadline.
+const IDLE_WAIT: Duration = Duration::from_millis(50);
+
 fn run(
-    rx: mpsc::Receiver<Pending>,
+    rx: mpsc::Receiver<Msg>,
     router: Arc<Router>,
     pool: Arc<WorkerPool>,
     metrics: Arc<Metrics>,
     policy: Policy,
 ) {
     let mut groups: HashMap<GroupKey, Vec<Pending>> = HashMap::new();
+    // Min-heap of (deadline, key).  One entry is pushed per group
+    // *creation*; entries whose group was since flushed (a re-created
+    // group pushes its own fresh entry) are dropped lazily on surfacing.
+    let mut deadlines: BinaryHeap<Reverse<(Instant, GroupKey)>> = BinaryHeap::new();
     loop {
-        // wait bounded by the oldest pending deadline
-        let timeout = groups
-            .values()
-            .flat_map(|g| g.iter().map(|p| p.enqueued))
-            .min()
-            .map(|oldest| {
-                policy
-                    .max_wait
-                    .saturating_sub(oldest.elapsed())
-                    .max(Duration::from_micros(50))
-            })
-            .unwrap_or(Duration::from_millis(50));
+        // flush everything past its deadline on every iteration — a busy
+        // receive stream must never postpone another group's deadline
+        flush_expired(
+            &mut groups,
+            &mut deadlines,
+            &router,
+            &pool,
+            &metrics,
+            policy.max_wait,
+        );
+        // after flush_expired the heap top (if any) is live and in the
+        // future, so it is exactly the next wake-up time
+        let timeout = match deadlines.peek() {
+            Some(Reverse((at, _))) => at
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_micros(50)),
+            None => IDLE_WAIT,
+        };
         match rx.recv_timeout(timeout) {
-            Ok(p) => {
+            Ok(Msg::Req(p)) => {
+                let p = *p;
                 let key = group_key(&p.request, p.route);
                 // Single keys can never grow — dispatch immediately rather
                 // than paying the batching window for nothing.
@@ -144,32 +235,67 @@ fn run(
                     continue;
                 }
                 let group = groups.entry(key.clone()).or_default();
+                if group.is_empty() {
+                    // first pending defines the group deadline (arrivals
+                    // are appended, so index 0 stays the oldest)
+                    deadlines.push(Reverse((p.enqueued + policy.max_wait, key.clone())));
+                }
                 group.push(p);
                 if group.len() >= policy.max_batch {
                     let batch = groups.remove(&key).unwrap();
                     flush(batch, &router, &pool, &metrics);
                 }
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                let expired: Vec<GroupKey> = groups
-                    .iter()
-                    .filter(|(_, g)| {
-                        g.iter().any(|p| p.enqueued.elapsed() >= policy.max_wait)
-                    })
-                    .map(|(k, _)| k.clone())
-                    .collect();
-                for key in expired {
-                    let batch = groups.remove(&key).unwrap();
-                    flush(batch, &router, &pool, &metrics);
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Ok(Msg::Stop) | Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for (_, batch) in groups.drain() {
                     flush(batch, &router, &pool, &metrics);
                 }
                 return;
             }
         }
+    }
+}
+
+/// Pop and flush every group whose deadline has passed.  Stale heap
+/// entries — the group was flushed by size, whether or not a later
+/// re-creation (with its own fresh entry) exists — are discarded here,
+/// so on return the heap top is a live, future deadline.
+fn flush_expired(
+    groups: &mut HashMap<GroupKey, Vec<Pending>>,
+    deadlines: &mut BinaryHeap<Reverse<(Instant, GroupKey)>>,
+    router: &Arc<Router>,
+    pool: &Arc<WorkerPool>,
+    metrics: &Arc<Metrics>,
+    max_wait: Duration,
+) {
+    let now = Instant::now();
+    loop {
+        let (at, key) = match deadlines.peek() {
+            Some(Reverse((at, key))) => (*at, key.clone()),
+            None => return,
+        };
+        let live = match groups.get(&key) {
+            // group already flushed: drop the stale entry
+            None => {
+                deadlines.pop();
+                continue;
+            }
+            Some(g) => g[0].enqueued + max_wait,
+        };
+        if live > at {
+            // the key was flushed by size and re-created since this entry
+            // was pushed; the re-creation pushed its own (later) entry,
+            // so this stale one is simply dropped
+            deadlines.pop();
+            continue;
+        }
+        if at > now {
+            return; // heap top is live and future — nothing else expired
+        }
+        deadlines.pop();
+        let batch = groups.remove(&key).unwrap();
+        flush(batch, router, pool, metrics);
     }
 }
 
@@ -197,6 +323,7 @@ fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metr
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
             let _ = p.reply.send(resp);
+            metrics.dec_inflight();
         }
         let _ = elapsed;
     });
@@ -212,6 +339,17 @@ mod tests {
         Request {
             id,
             body: RequestBody::Sdp(SdpProblem::fibonacci(16)),
+            backend: Backend::Native,
+            full: false,
+        }
+    }
+
+    /// Same-shape request in a *different* batching bucket than
+    /// [`native_request`] (n = 32 vs 16 → distinct `GroupKey::Sdp`).
+    fn other_bucket_request(id: i64) -> Request {
+        Request {
+            id,
+            body: RequestBody::Sdp(SdpProblem::fibonacci(32)),
             backend: Backend::Native,
             full: false,
         }
@@ -322,5 +460,165 @@ mod tests {
         // answered well before the 60 s window
         let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert!(resp.ok);
+    }
+
+    /// Regression for the deadline-starvation bug: the seed flushed
+    /// expired groups only from the `recv_timeout` *timeout* arm, with a
+    /// 50 µs floor on the timeout — so traffic to key A arriving faster
+    /// than every 50 µs kept the loop in the `Ok` arm forever and a lone
+    /// pending on key B waited until the traffic stopped.  The deadline
+    /// heap flushes B on time regardless of how busy the channel is.
+    #[test]
+    fn cross_key_traffic_does_not_starve_other_groups() {
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(Metrics::default());
+        let max_wait = Duration::from_millis(100);
+        let batcher = Batcher::start(
+            router,
+            pool,
+            metrics,
+            Policy {
+                max_batch: 4,
+                max_wait,
+            },
+        );
+        // lone pending on key B (n = 32 bucket)
+        let (tx_b, rx_b) = mpsc::channel();
+        let started = Instant::now();
+        batcher.submit(Pending {
+            request: other_bucket_request(1000),
+            route: Route::Xla,
+            enqueued: started,
+            reply: tx_b,
+        });
+        std::thread::scope(|s| {
+            // key-A producer: one request every ~20 µs (well under the
+            // seed's 50 µs receive-timeout floor) for well past
+            // 2× max_wait; A keeps flushing by size, never by deadline.
+            // The pacing loop yields rather than pure-spins so the
+            // batcher thread is never starved of a core on small CI
+            // runners — the 2× bound leaves ~max_wait of jitter margin.
+            s.spawn(|| {
+                let gap = Duration::from_micros(20);
+                let mut i = 0i64;
+                while started.elapsed() < Duration::from_millis(250) {
+                    let (tx, _rx) = mpsc::channel(); // A replies discarded
+                    batcher.submit(Pending {
+                        request: native_request(i),
+                        route: Route::Xla,
+                        enqueued: Instant::now(),
+                        reply: tx,
+                    });
+                    i += 1;
+                    let next = started.elapsed() + gap;
+                    while started.elapsed() < next {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+            let resp = rx_b
+                .recv_timeout(Duration::from_secs(5))
+                .expect("key B must be answered at all");
+            let waited = started.elapsed();
+            assert!(!resp.ok); // engine-less Xla → typed error; timing is the point
+            assert!(
+                waited <= 2 * max_wait,
+                "lone pending starved behind cross-key traffic: waited {waited:?} \
+                 with max_wait {max_wait:?}"
+            );
+        });
+    }
+
+    /// The admission gate: with the single worker parked and `capacity`
+    /// requests admitted (in flight), the next `submit_request` must
+    /// answer `overloaded` immediately and tick the shed counter — even
+    /// though the shed request never reaches the pool queue.
+    #[test]
+    fn admission_gate_sheds_when_saturated() {
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::with_capacity(1, 2));
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::start(
+            router,
+            pool.clone(),
+            metrics.clone(),
+            Policy::default(),
+        );
+        // park the worker so admitted requests cannot complete
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        pool.submit(move || {
+            let _ = release_rx.recv();
+        });
+        let t0 = Instant::now();
+        while pool.backlog() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5));
+            std::thread::yield_now();
+        }
+        // fill the in-flight budget (capacity = 2) through the gate
+        let mut admitted = Vec::new();
+        for i in 0..2 {
+            let (tx, rx) = mpsc::channel();
+            batcher.submit_request(native_request(i), tx);
+            admitted.push(rx);
+        }
+        assert_eq!(metrics.inflight.load(Ordering::Relaxed), 2);
+
+        let (tx, rx) = mpsc::channel();
+        batcher.submit_request(native_request(42), tx);
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(!resp.ok);
+        assert!(resp.overloaded, "shed reply must be typed");
+        assert_eq!(resp.id, 42, "shed reply must keep the request id");
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+
+        // release the plug: the admitted requests complete and the gate
+        // re-opens for new traffic
+        release_tx.send(()).unwrap();
+        for rx in admitted {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(resp.ok, "{:?}", resp.error);
+        }
+        let t0 = Instant::now();
+        while metrics.inflight.load(Ordering::Relaxed) != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5));
+            std::thread::yield_now();
+        }
+        let (tx, rx) = mpsc::channel();
+        batcher.submit_request(native_request(43), tx);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+    }
+
+    /// `shutdown` drains pending groups (their replies arrive) and joins
+    /// the batcher thread; calling it twice is fine.
+    #[test]
+    fn shutdown_drains_pending_groups() {
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::start(
+            router,
+            pool.clone(),
+            metrics,
+            Policy {
+                max_batch: 64,
+                max_wait: Duration::from_secs(60), // would park without drain
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        batcher.submit(Pending {
+            request: native_request(5),
+            route: Route::Xla, // groupable key: sits in the pending map
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        batcher.shutdown();
+        pool.shutdown(); // run the drained flush job
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(!resp.ok); // engine-less Xla → typed error, but *answered*
+        batcher.shutdown(); // idempotent
     }
 }

@@ -48,12 +48,17 @@ impl Histogram {
     }
 
     /// Approximate percentile (upper bucket bound), q in [0, 1].
+    ///
+    /// `q = 0.0` answers with the first *occupied* bucket's bound (the
+    /// smallest recorded sample's bucket), not the histogram floor: the
+    /// target rank is clamped to ≥ 1 so the accumulator must actually
+    /// reach a sample before answering.
     pub fn percentile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
             return Duration::ZERO;
         }
-        let target = ((total as f64) * q).ceil() as u64;
+        let target = (((total as f64) * q).ceil() as u64).max(1);
         let mut acc = 0;
         for (b, bucket) in self.buckets.iter().enumerate() {
             acc += bucket.load(Ordering::Relaxed);
@@ -72,11 +77,29 @@ pub struct Metrics {
     pub queue_wait: Histogram,
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests refused by the admission gate (typed `overloaded` reply)
+    /// instead of queueing past the worker-pool bound.
+    pub shed: AtomicU64,
+    /// Gauge: submitted requests not yet answered (batcher channel +
+    /// pending groups + worker queue + executing), counted for gated and
+    /// direct submissions alike.  The admission gate sheds against it,
+    /// so saturation cannot hide in any intermediate queue.  Decrements
+    /// saturate at 0 ([`Metrics::dec_inflight`]).
+    pub inflight: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
 }
 
 impl Metrics {
+    /// Saturating in-flight decrement: shutdown-drain edge paths can
+    /// answer pendings whose claims died with the batcher channel, so
+    /// the gauge clamps at 0 instead of wrapping.
+    pub fn dec_inflight(&self) {
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
@@ -100,11 +123,14 @@ impl Metrics {
         Json::obj(vec![
             ("requests", Json::int(self.requests.load(Ordering::Relaxed) as i64)),
             ("errors", Json::int(self.errors.load(Ordering::Relaxed) as i64)),
+            ("shed", Json::int(self.shed.load(Ordering::Relaxed) as i64)),
+            ("inflight", Json::int(self.inflight.load(Ordering::Relaxed) as i64)),
             ("batches", Json::int(self.batches.load(Ordering::Relaxed) as i64)),
             ("mean_batch_size", Json::num(self.mean_batch_size())),
             ("latency_mean_us", Json::int(self.latency.mean().as_micros() as i64)),
             ("latency_p50_us", Json::int(self.latency.percentile(0.5).as_micros() as i64)),
             ("latency_p99_us", Json::int(self.latency.percentile(0.99).as_micros() as i64)),
+            ("queue_p50_us", Json::int(self.queue_wait.percentile(0.5).as_micros() as i64)),
             ("queue_p99_us", Json::int(self.queue_wait.percentile(0.99).as_micros() as i64)),
             ("sched_cache_hits", Json::int(sched.hits as i64)),
             ("sched_cache_misses", Json::int(sched.misses as i64)),
@@ -154,6 +180,71 @@ mod tests {
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
         let snap = m.snapshot();
         assert_eq!(snap.i64_field("batches").unwrap(), 2);
+    }
+
+    #[test]
+    fn percentile_zero_answers_first_occupied_bucket() {
+        // q = 0.0 on a non-empty histogram must reflect the smallest
+        // recorded sample's bucket, not the histogram floor (1–2 µs)
+        let h = Histogram::default();
+        h.record(Duration::from_micros(300)); // bucket [256, 512)
+        assert_eq!(h.percentile(0.0), Duration::from_micros(512));
+        assert_eq!(h.percentile(1.0), Duration::from_micros(512));
+    }
+
+    #[test]
+    fn samples_above_top_bucket_saturate_not_panic() {
+        // the top bucket is [2^24, 2^25) µs ≈ 16.8–33.5 s; anything larger
+        // (a stalled request, a wedged backend) lands there
+        let h = Histogram::default();
+        h.record(Duration::from_secs(40));
+        h.record(Duration::from_secs(3600));
+        assert_eq!(h.count(), 2);
+        let cap = Duration::from_micros(1 << NBUCKETS);
+        assert_eq!(h.percentile(0.5), cap);
+        assert_eq!(h.percentile(0.99), cap);
+        assert!(h.mean() >= Duration::from_secs(40));
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_q() {
+        let h = Histogram::default();
+        let mut x = 88172645463325252u64; // xorshift64
+        for _ in 0..5000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            h.record(Duration::from_micros(1 + x % 3_000_000));
+        }
+        let mut last = Duration::ZERO;
+        for i in 0..=100u32 {
+            let q = f64::from(i) / 100.0;
+            let p = h.percentile(q);
+            assert!(
+                p >= last,
+                "percentile must be monotone in q: p({q}) = {p:?} < {last:?}"
+            );
+            last = p;
+        }
+    }
+
+    #[test]
+    fn shed_counter_in_snapshot() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().i64_field("shed").unwrap(), 0);
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(m.snapshot().i64_field("shed").unwrap(), 3);
+    }
+
+    #[test]
+    fn inflight_gauge_saturates_at_zero() {
+        let m = Metrics::default();
+        m.dec_inflight(); // un-counted path: must clamp, not wrap
+        assert_eq!(m.inflight.load(Ordering::Relaxed), 0);
+        m.inflight.fetch_add(2, Ordering::Relaxed);
+        m.dec_inflight();
+        assert_eq!(m.inflight.load(Ordering::Relaxed), 1);
+        assert_eq!(m.snapshot().i64_field("inflight").unwrap(), 1);
     }
 
     #[test]

@@ -9,13 +9,17 @@
 //!                                                                    └ GPU cost simulator
 //! ```
 //!
-//! * [`request`] — wire protocol types + JSON codec.
+//! * [`request`] — wire protocol types + JSON codec (incl. the typed
+//!   `overloaded` load-shed reply).
 //! * [`router`] — backend selection (native / XLA bucket / simulator).
 //! * [`batcher`] — dynamic batching: group compatible requests within a
-//!   deadline window so one PJRT dispatch serves many requests.
-//! * [`pool`] — the worker thread pool.
+//!   deadline window (deadline min-heap, flushed every loop iteration)
+//!   so one PJRT dispatch serves many requests; admission-gates against
+//!   the worker queue bound.
+//! * [`pool`] — the worker thread pool (bounded queue).
 //! * [`metrics`] — latency histograms and throughput counters.
-//! * [`server`] — the TCP server and a blocking client.
+//! * [`server`] — the TCP server (tracked, drainable connections) and a
+//!   blocking client.
 
 pub mod batcher;
 pub mod metrics;

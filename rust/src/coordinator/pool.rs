@@ -1,26 +1,59 @@
 //! A bounded worker thread pool (no tokio offline; condvar-based queue).
+//!
+//! The queue holds at most `capacity` jobs.  `submit` blocks for a free
+//! slot — backpressure on the batcher thread, the memory-safety backstop —
+//! while the coordinator's admission gate watches `backlog()` against
+//! `capacity()` and sheds *before* anything would block (DESIGN.md §2).
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct Shared {
-    queue: Mutex<(VecDeque<Job>, bool)>, // (jobs, shutting_down)
-    available: Condvar,
+/// Default queue bound (jobs, i.e. dispatched batches), overridable with
+/// `PIPEDP_POOL_QUEUE_CAP`.
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutting_down: bool,
 }
 
-/// Fixed-size worker pool; jobs are FIFO.
+struct Shared {
+    state: Mutex<State>,
+    capacity: usize,
+    /// Signalled when a job is pushed; workers wait on it.
+    available: Condvar,
+    /// Signalled when a job is popped; blocked submitters wait on it.
+    space: Condvar,
+}
+
+/// Fixed-size worker pool; jobs are FIFO, the queue is bounded.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl WorkerPool {
+    /// Pool with the default (env-overridable) queue bound.
     pub fn new(workers: usize) -> WorkerPool {
+        let capacity = std::env::var("PIPEDP_POOL_QUEUE_CAP")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&c| c > 0)
+            .unwrap_or(DEFAULT_QUEUE_CAP);
+        WorkerPool::with_capacity(workers, capacity)
+    }
+
+    pub fn with_capacity(workers: usize, capacity: usize) -> WorkerPool {
         let shared = Arc::new(Shared {
-            queue: Mutex::new((VecDeque::new(), false)),
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                shutting_down: false,
+            }),
+            capacity: capacity.max(1),
             available: Condvar::new(),
+            space: Condvar::new(),
         });
         let handles = (0..workers.max(1))
             .map(|i| {
@@ -29,12 +62,13 @@ impl WorkerPool {
                     .name(format!("pipedp-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
-                            let mut guard = shared.queue.lock().unwrap();
+                            let mut guard = shared.state.lock().unwrap();
                             loop {
-                                if let Some(job) = guard.0.pop_front() {
+                                if let Some(job) = guard.jobs.pop_front() {
+                                    shared.space.notify_one();
                                     break job;
                                 }
-                                if guard.1 {
+                                if guard.shutting_down {
                                     return;
                                 }
                                 guard = shared.available.wait(guard).unwrap();
@@ -45,33 +79,47 @@ impl WorkerPool {
                     .expect("spawn worker")
             })
             .collect();
-        WorkerPool { shared, handles }
+        WorkerPool {
+            shared,
+            handles: Mutex::new(handles),
+        }
     }
 
-    /// Enqueue a job.
+    /// The queue bound (jobs) — the admission gate's shed threshold.
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    /// Enqueue a job, blocking while the queue is full.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        let mut guard = self.shared.queue.lock().unwrap();
-        if guard.1 {
+        let mut guard = self.shared.state.lock().unwrap();
+        while guard.jobs.len() >= self.shared.capacity && !guard.shutting_down {
+            guard = self.shared.space.wait(guard).unwrap();
+        }
+        if guard.shutting_down {
             return; // shutting down: drop silently (server is exiting)
         }
-        guard.0.push_back(Box::new(job));
+        guard.jobs.push_back(Box::new(job));
         drop(guard);
         self.shared.available.notify_one();
     }
 
     /// Jobs currently queued (not including running ones).
     pub fn backlog(&self) -> usize {
-        self.shared.queue.lock().unwrap().0.len()
+        self.shared.state.lock().unwrap().jobs.len()
     }
 
-    /// Finish queued jobs, then stop the workers.
-    pub fn shutdown(mut self) {
+    /// Finish queued jobs, then stop and join the workers.  Idempotent and
+    /// callable through an `Arc` (shutdown order is the server's concern).
+    pub fn shutdown(&self) {
         {
-            let mut guard = self.shared.queue.lock().unwrap();
-            guard.1 = true;
+            let mut guard = self.shared.state.lock().unwrap();
+            guard.shutting_down = true;
         }
         self.shared.available.notify_all();
-        for h in self.handles.drain(..) {
+        self.shared.space.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -79,14 +127,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        {
-            let mut guard = self.shared.queue.lock().unwrap();
-            guard.1 = true;
-        }
-        self.shared.available.notify_all();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -94,6 +135,7 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
 
     #[test]
     fn executes_all_jobs() {
@@ -154,5 +196,71 @@ mod tests {
         pool.shutdown();
         let got = order.lock().unwrap().clone();
         assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    /// Park the single worker on a job that blocks until released, and
+    /// wait until the queue is empty again (the worker holds the plug).
+    fn plug_worker(pool: &WorkerPool) -> std::sync::mpsc::Sender<()> {
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        pool.submit(move || {
+            let _ = release_rx.recv();
+        });
+        let t0 = Instant::now();
+        while pool.backlog() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "worker never started");
+            std::thread::yield_now();
+        }
+        release_tx
+    }
+
+    #[test]
+    fn backlog_counts_queued_jobs_exactly() {
+        let pool = WorkerPool::with_capacity(1, 16);
+        assert_eq!(pool.capacity(), 16);
+        assert_eq!(pool.backlog(), 0);
+        let release = plug_worker(&pool);
+        for k in 1..=5 {
+            pool.submit(|| {});
+            assert_eq!(pool.backlog(), k, "backlog must track each enqueue");
+        }
+        release.send(()).unwrap();
+        pool.shutdown();
+        assert_eq!(pool.backlog(), 0, "shutdown drains the queue");
+    }
+
+    #[test]
+    fn submit_blocks_at_capacity_until_space_frees() {
+        let pool = Arc::new(WorkerPool::with_capacity(1, 2));
+        let release = plug_worker(&pool);
+        pool.submit(|| {});
+        pool.submit(|| {});
+        assert_eq!(pool.backlog(), 2);
+        // a third submit must block until the plug releases
+        let submitted = Arc::new(AtomicUsize::new(0));
+        let waiter = {
+            let pool = pool.clone();
+            let submitted = submitted.clone();
+            std::thread::spawn(move || {
+                pool.submit(|| {});
+                submitted.store(1, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(
+            submitted.load(Ordering::SeqCst),
+            0,
+            "submit past capacity must block"
+        );
+        release.send(()).unwrap();
+        waiter.join().unwrap();
+        assert_eq!(submitted.load(Ordering::SeqCst), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn env_default_capacity_applies() {
+        // no env override in the test environment ⇒ the documented default
+        let pool = WorkerPool::new(1);
+        assert!(pool.capacity() >= 1);
     }
 }

@@ -137,6 +137,10 @@ pub struct Response {
     /// Which backend actually served it, e.g. "xla:mcm_diagonal_i32_n16".
     pub served_by: String,
     pub error: Option<String>,
+    /// Typed load-shed marker: the admission gate refused the request
+    /// because the worker queue was full.  Distinct from `error` so
+    /// clients can retry-with-backoff on overload but not on bad input.
+    pub overloaded: bool,
     /// Raw stats payload for `kind: stats`.
     pub stats: Option<Json>,
 }
@@ -150,6 +154,7 @@ impl Response {
             table,
             served_by,
             error: None,
+            overloaded: false,
             stats: None,
         }
     }
@@ -162,7 +167,16 @@ impl Response {
             table: None,
             served_by: String::new(),
             error: Some(msg),
+            overloaded: false,
             stats: None,
+        }
+    }
+
+    /// The admission gate's shed reply (DESIGN.md §2).
+    pub fn overloaded(id: i64) -> Response {
+        Response {
+            overloaded: true,
+            ..Response::err(id, "overloaded".into())
         }
     }
 
@@ -178,6 +192,9 @@ impl Response {
         }
         if let Some(e) = &self.error {
             fields.push(("error", Json::str(e.clone())));
+        }
+        if self.overloaded {
+            fields.push(("overloaded", Json::Bool(true)));
         }
         if let Some(s) = &self.stats {
             fields.push(("stats", s.clone()));
@@ -206,6 +223,10 @@ impl Response {
                 .unwrap_or("")
                 .to_string(),
             error: v.get("error").and_then(|x| x.as_str()).map(String::from),
+            overloaded: v
+                .get("overloaded")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
             stats: v.get("stats").cloned(),
         })
     }
@@ -283,6 +304,17 @@ mod tests {
         let r = Response::err(9, "no bucket".into());
         let back = Response::decode(&r.encode()).unwrap();
         assert!(!back.ok);
+        assert!(!back.overloaded);
         assert_eq!(back.error.unwrap(), "no bucket");
+    }
+
+    #[test]
+    fn overloaded_response_roundtrip() {
+        let r = Response::overloaded(12);
+        let back = Response::decode(&r.encode()).unwrap();
+        assert_eq!(back.id, 12);
+        assert!(!back.ok);
+        assert!(back.overloaded, "shed replies must stay typed on the wire");
+        assert_eq!(back.error.unwrap(), "overloaded");
     }
 }

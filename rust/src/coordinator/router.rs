@@ -199,7 +199,11 @@ impl Router {
 }
 
 /// Batching key: requests with equal keys can share one dispatch.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// `Ord` exists for the batcher's deadline heap (`Reverse<(Instant,
+/// GroupKey)>` entries need a total order); the ordering itself carries
+/// no meaning.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum GroupKey {
     Sdp {
         n: usize,

@@ -5,11 +5,18 @@
 //! thread serializes responses back (so batched completions from worker
 //! threads never interleave bytes).  `kind: "stats"` requests are answered
 //! inline with a metrics snapshot.
+//!
+//! Every thread the server spawns is tracked: `shutdown` stops the accept
+//! loop, unblocks parked connection readers with a socket `shutdown`,
+//! drains the batcher's pending groups through the worker pool (so every
+//! in-flight request is answered or its reply channel closed), and joins
+//! everything — a process embedding the server exits cleanly.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::metrics::Metrics;
@@ -18,6 +25,7 @@ use crate::coordinator::request::{Request, RequestBody, Response};
 use crate::coordinator::router::Router;
 use crate::core::schedule::McmVariant;
 use crate::runtime::engine::Engine;
+use crate::util::json::Json;
 use crate::{Error, Result};
 
 /// Server configuration.
@@ -30,6 +38,10 @@ pub struct Config {
     /// Pre-compile every artifact in the background at startup so the
     /// first request per bucket does not pay PJRT compilation latency.
     pub warm: bool,
+    /// Worker-queue bound (jobs); past it the admission gate sheds with a
+    /// typed `overloaded` reply.  `0` means `PIPEDP_POOL_QUEUE_CAP` or
+    /// the built-in default ([`crate::coordinator::pool::DEFAULT_QUEUE_CAP`]).
+    pub queue_cap: usize,
 }
 
 impl Default for Config {
@@ -40,22 +52,75 @@ impl Default for Config {
             policy: Policy::default(),
             allow_engineless: true,
             warm: true,
+            queue_cap: 0,
         }
     }
 }
 
-/// A running server (owns the accept thread; `shutdown` is cooperative).
+/// Distinguishes this server instance's connection threads in
+/// `/proc/self/task` (tests assert drain against the tag; names are
+/// capped at 15 bytes on Linux, so the tag stays short).
+static SERVER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Live-connection registry: the accept loop records each connection's
+/// stream (so `shutdown` can unblock its parked reader) and reader-thread
+/// handle (so it can join them).
+struct Connections {
+    tag: String,
+    next_id: AtomicU64,
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    handles: Mutex<HashMap<u64, std::thread::JoinHandle<()>>>,
+    /// Ids whose threads have finished; the accept loop reaps (joins)
+    /// these as it goes, so handles do not accumulate for the server's
+    /// lifetime under connection churn.
+    finished: Mutex<Vec<u64>>,
+}
+
+impl Connections {
+    /// Join every connection thread that announced completion.  Each join
+    /// is near-instant (the thread pushed its id as its last act).
+    fn reap_finished(&self) {
+        let done: Vec<u64> = std::mem::take(&mut *self.finished.lock().unwrap());
+        if done.is_empty() {
+            return;
+        }
+        let mut reaped = Vec::with_capacity(done.len());
+        {
+            let mut handles = self.handles.lock().unwrap();
+            for id in done {
+                if let Some(h) = handles.remove(&id) {
+                    reaped.push(h);
+                }
+            }
+        }
+        for h in reaped {
+            let _ = h.join(); // outside the lock: joins must not block registration
+        }
+    }
+}
+
+/// A running server (owns every thread it spawned; `shutdown` drains and
+/// joins them all).
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     warmed: Arc<AtomicBool>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
+    warm_handle: Option<std::thread::JoinHandle<()>>,
+    batcher: Arc<Batcher>,
+    pool: Arc<WorkerPool>,
+    conns: Arc<Connections>,
 }
 
 impl Server {
     /// Bind and start serving in background threads.
     pub fn start(cfg: Config) -> Result<Server> {
+        // bind first: it is the only fallible step besides engine loading,
+        // and every `?` after a thread spawns would leak that thread
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
         let engine = match Engine::load() {
             Ok(e) => Some(Arc::new(e)),
             Err(e) if cfg.allow_engineless => {
@@ -64,14 +129,21 @@ impl Server {
             }
             Err(e) => return Err(e),
         };
+        let stop = Arc::new(AtomicBool::new(false));
         let warmed = Arc::new(AtomicBool::new(!cfg.warm || engine.is_none()));
+        let mut warm_handle = None;
         if cfg.warm {
             if let Some(engine) = engine.clone() {
                 let warmed = warmed.clone();
-                std::thread::Builder::new()
+                let stop = stop.clone();
+                let handle = std::thread::Builder::new()
                     .name("pipedp-warmup".into())
                     .spawn(move || {
-                        let n = engine.warm_all();
+                        // abandon warming between buckets when the server
+                        // shuts down — `stop_and_drain` joins this thread,
+                        // and a fresh shutdown must not wait out every
+                        // remaining PJRT compile
+                        let n = engine.warm_all_while(|| !stop.load(Ordering::Relaxed));
                         // Pre-warm the process-wide schedule cache for every
                         // schedule-executor bucket so the first pipeline
                         // request per size pays neither PJRT compile nor
@@ -94,6 +166,9 @@ impl Server {
                         let mut scheds = 0usize;
                         let mut warmed_terms = 0usize;
                         for n in sizes {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
                             let terms = (n * n * n - n) / 6; // Σ d·(n−d), per variant
                             // stop once the *cumulative* warmed footprint
                             // would exceed either cache limit — warming
@@ -116,38 +191,78 @@ impl Server {
                         );
                     })
                     .expect("spawn warmup");
+                warm_handle = Some(handle);
             }
         }
         let router = Arc::new(Router::new(engine));
-        let pool = Arc::new(WorkerPool::new(cfg.workers));
+        let pool = Arc::new(if cfg.queue_cap > 0 {
+            WorkerPool::with_capacity(cfg.workers, cfg.queue_cap)
+        } else {
+            WorkerPool::new(cfg.workers)
+        });
         let metrics = Arc::new(Metrics::default());
         let batcher = Arc::new(Batcher::start(
             router,
-            pool,
+            pool.clone(),
             metrics.clone(),
             cfg.policy.clone(),
         ));
-
-        let listener = TcpListener::bind(&cfg.addr)?;
-        let local_addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Connections {
+            tag: format!("pd{}-", SERVER_SEQ.fetch_add(1, Ordering::Relaxed)),
+            next_id: AtomicU64::new(0),
+            streams: Mutex::new(HashMap::new()),
+            handles: Mutex::new(HashMap::new()),
+            finished: Mutex::new(Vec::new()),
+        });
 
         let accept_handle = {
             let stop = stop.clone();
             let metrics = metrics.clone();
+            let batcher = batcher.clone();
+            let conns = conns.clone();
             std::thread::Builder::new()
                 .name("pipedp-accept".into())
                 .spawn(move || {
                     while !stop.load(Ordering::Relaxed) {
+                        // join threads of connections that already ended so
+                        // handles do not accumulate for the server lifetime
+                        conns.reap_finished();
                         match listener.accept() {
                             Ok((stream, _)) => {
+                                let id = conns.next_id.fetch_add(1, Ordering::Relaxed);
+                                // registered *before* the reader spawns so
+                                // `shutdown` (which joins this accept thread
+                                // first) can always unblock it; a connection
+                                // whose stream cannot be cloned (fd pressure)
+                                // is dropped rather than parked un-unblockable
+                                match stream.try_clone() {
+                                    Ok(s) => {
+                                        conns.streams.lock().unwrap().insert(id, s);
+                                    }
+                                    Err(_) => continue,
+                                }
                                 let batcher = batcher.clone();
                                 let metrics = metrics.clone();
                                 let stop = stop.clone();
-                                std::thread::spawn(move || {
-                                    let _ = handle_connection(stream, batcher, metrics, stop);
-                                });
+                                let conns2 = conns.clone();
+                                let writer_name = format!("{}w{}", conns.tag, id);
+                                let handle = std::thread::Builder::new()
+                                    .name(format!("{}c{}", conns.tag, id))
+                                    .spawn(move || {
+                                        let _ = handle_connection(
+                                            stream,
+                                            batcher,
+                                            metrics,
+                                            stop,
+                                            writer_name,
+                                        );
+                                        conns2.streams.lock().unwrap().remove(&id);
+                                        // last act: announce completion for
+                                        // the accept loop's reaper
+                                        conns2.finished.lock().unwrap().push(id);
+                                    })
+                                    .expect("spawn connection thread");
+                                conns.handles.lock().unwrap().insert(id, handle);
                             }
                             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -165,6 +280,10 @@ impl Server {
             stop,
             warmed,
             accept_handle: Some(accept_handle),
+            warm_handle,
+            batcher,
+            pool,
+            conns,
         })
     }
 
@@ -182,9 +301,77 @@ impl Server {
         true
     }
 
+    /// The per-instance thread-name prefix of this server's connection
+    /// threads (observability hook: tests scan `/proc/self/task` for it
+    /// to prove the drain joined everything).
+    pub fn thread_tag(&self) -> &str {
+        &self.conns.tag
+    }
+
+    /// Stop accepting, unblock and join every connection thread, flush
+    /// in-flight batches, and join the batcher + workers.  After this
+    /// returns, no thread the server spawned is alive.
     pub fn shutdown(mut self) {
+        self.stop_and_drain();
+    }
+
+    fn stop_and_drain(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // 1. stop accepting (joining first means the registry below is
+        //    complete: no connection can be mid-registration)
         if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // 2. unblock every parked connection reader; their `lines()` sees
+        //    EOF and each reader drops its reply sender.  Read half only:
+        //    the write half stays open so replies to requests drained in
+        //    steps 3–4 still reach the client before the sockets close
+        //    (they close — and send FIN — when the joined threads drop
+        //    their stream handles)
+        {
+            let streams = self.conns.streams.lock().unwrap();
+            for s in streams.values() {
+                let _ = s.shutdown(std::net::Shutdown::Read);
+            }
+        }
+        // 3. drain the batcher: every pending group flushes into the pool
+        self.batcher.shutdown();
+        // 4. run the queued flushes so in-flight requests are answered;
+        //    the last reply sender drops here, releasing writer threads
+        self.pool.shutdown();
+        // 4b. bounded delivery window: after step 4 every reply sender is
+        //     dropped, so each writer thread drains its channel onto the
+        //     wire and exits — and its connection thread then removes its
+        //     stream from the registry.  Wait for that (bounded) so the
+        //     replies the drain just computed actually reach clients.
+        let drain_deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while std::time::Instant::now() < drain_deadline {
+            if self.conns.streams.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // 4c. force-close both halves of whatever remains: a peer that
+        //     stopped *reading* must not park a writer in `write_all`
+        //     past the window and hang the joins below (data already in
+        //     the kernel send buffer still flushes after FIN)
+        {
+            let streams = self.conns.streams.lock().unwrap();
+            for s in streams.values() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        // 5. join the connection threads (each joins its own writer)
+        let handles: Vec<_> = {
+            let mut map = self.conns.handles.lock().unwrap();
+            map.drain().map(|(_, h)| h).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // 6. the warmup thread finishes on its own; wait for it
+        if let Some(h) = self.warm_handle.take() {
             let _ = h.join();
         }
     }
@@ -192,11 +379,93 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_handle.take() {
-            let _ = h.join();
+        self.stop_and_drain();
+    }
+}
+
+/// Best-effort id recovery from a line `Request::decode` rejected, so the
+/// error reply stays correlatable.  The seed replied with `id: 0`, which
+/// a pipelined client cannot match to any request — and which collides
+/// with a real `id: 0` request.
+fn extract_request_id(line: &str) -> i64 {
+    // the line may be valid JSON that is merely an invalid request
+    if let Ok(v) = Json::parse(line) {
+        if let Ok(id) = v.i64_field("id") {
+            return id;
         }
     }
+    // Not valid JSON: scan for a *top-level* `"id"` key — brace depth 1,
+    // outside strings, in key position (preceded by `{` or `,`) — so
+    // neither an `"id"` nested in a sub-object nor a string *value* that
+    // happens to be `id` can be mistaken for (and collide with) another
+    // live request's id.
+    let bytes = line.as_bytes();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut prev = 0u8; // last non-space byte seen outside strings
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i];
+        if in_str {
+            match c {
+                b'\\' => i += 1, // skip the escaped byte
+                b'"' => in_str = false,
+                _ => {}
+            }
+        } else {
+            match c {
+                b'{' | b'[' => depth += 1,
+                b'}' | b']' => depth -= 1,
+                b'"' => {
+                    if depth == 1
+                        && (prev == b'{' || prev == b',')
+                        && line[i..].starts_with("\"id\"")
+                    {
+                        if let Some(id) = parse_int_after(line, i + 4) {
+                            return id;
+                        }
+                    }
+                    in_str = true;
+                }
+                _ => {}
+            }
+            if !is_json_ws(c) {
+                prev = c;
+            }
+        }
+        i += 1;
+    }
+    0
+}
+
+/// JSON insignificant whitespace (RFC 8259 §2; `\n` cannot occur in a
+/// line-delimited request but costs nothing to accept).
+fn is_json_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\r' | b'\n')
+}
+
+/// Parse the integer in `": <int>"` at `i`; `None` when the colon or the
+/// digits are missing (the caller keeps scanning).
+fn parse_int_after(line: &str, mut i: usize) -> Option<i64> {
+    let bytes = line.as_bytes();
+    while i < bytes.len() && is_json_ws(bytes[i]) {
+        i += 1;
+    }
+    if i >= bytes.len() || bytes[i] != b':' {
+        return None;
+    }
+    i += 1;
+    while i < bytes.len() && is_json_ws(bytes[i]) {
+        i += 1;
+    }
+    let start = i;
+    if i < bytes.len() && bytes[i] == b'-' {
+        i += 1;
+    }
+    while i < bytes.len() && bytes[i].is_ascii_digit() {
+        i += 1;
+    }
+    line[start..i].parse::<i64>().ok()
 }
 
 fn handle_connection(
@@ -204,27 +473,34 @@ fn handle_connection(
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    writer_name: String,
 ) -> Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     // responses funnel through one channel so writes never interleave
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
-    let writer_handle = std::thread::spawn(move || {
-        while let Ok(resp) = resp_rx.recv() {
-            let mut line = resp.encode();
-            line.push('\n');
-            if writer.write_all(line.as_bytes()).is_err() {
-                break;
+    let writer_handle = std::thread::Builder::new()
+        .name(writer_name)
+        .spawn(move || {
+            while let Ok(resp) = resp_rx.recv() {
+                let mut line = resp.encode();
+                line.push('\n');
+                if writer.write_all(line.as_bytes()).is_err() {
+                    break;
+                }
+                let _ = writer.flush();
             }
-            let _ = writer.flush();
-        }
-    });
+        })
+        .expect("spawn connection writer");
 
     for line in reader.lines() {
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        let line = line?;
+        let line = match line {
+            Ok(line) => line,
+            Err(_) => break, // socket shut down mid-read: drain and exit
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -240,7 +516,7 @@ fn handle_connection(
             Ok(req) => batcher.submit_request(req, resp_tx.clone()),
             Err(e) => {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = resp_tx.send(Response::err(0, e.to_string()));
+                let _ = resp_tx.send(Response::err(extract_request_id(&line), e.to_string()));
             }
         }
     }
@@ -284,8 +560,15 @@ impl Client {
 
     /// Send `reqs` pipelined (all writes, then all reads) — how a
     /// throughput-oriented client drives the batcher.
+    ///
+    /// Responses whose id matches a request from this batch are returned
+    /// sorted by id; replies the server could not correlate (an error
+    /// reply whose id could not be recovered from a malformed line) are
+    /// appended after them in arrival order instead of corrupting the
+    /// sorted prefix.
     pub fn call_pipelined(&mut self, reqs: Vec<Request>) -> Result<Vec<Response>> {
         let n = reqs.len();
+        let first_id = self.next_id;
         let mut payload = String::new();
         for mut req in reqs {
             req.id = self.next_id;
@@ -293,19 +576,58 @@ impl Client {
             payload.push_str(&req.encode());
             payload.push('\n');
         }
+        let sent_ids = first_id..self.next_id;
         self.writer.write_all(payload.as_bytes())?;
         self.writer.flush()?;
-        let mut responses = Vec::with_capacity(n);
+        let mut matched = Vec::with_capacity(n);
+        let mut orphans = Vec::new();
         for _ in 0..n {
             let mut line = String::new();
             self.reader.read_line(&mut line)?;
             if line.is_empty() {
                 return Err(Error::Server("connection closed mid-batch".into()));
             }
-            responses.push(Response::decode(line.trim_end())?);
+            let resp = Response::decode(line.trim_end())?;
+            if sent_ids.contains(&resp.id) {
+                matched.push(resp);
+            } else {
+                orphans.push(resp);
+            }
         }
         // responses may complete out of order across buckets; re-order
-        responses.sort_by_key(|r| r.id);
-        Ok(responses)
+        matched.sort_by_key(|r| r.id);
+        matched.extend(orphans);
+        Ok(matched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_recovery_from_broken_lines() {
+        // valid JSON, invalid request (missing kind)
+        assert_eq!(extract_request_id(r#"{"id": 42}"#), 42);
+        // invalid JSON with a recoverable id
+        assert_eq!(extract_request_id(r#"{"id": 37, "kind": "sdp", BROKEN"#), 37);
+        assert_eq!(extract_request_id(r#"{"id":-5,"kind":1}"#), -5);
+        // the top-level id is found even after a nested object
+        assert_eq!(extract_request_id(r#"{"a":{"x":1},"id": 9, BROKEN"#), 9);
+        // a string *value* of "id" is not the key; the real key after it
+        // is still recovered
+        assert_eq!(extract_request_id(r#"{"kind": "id", "id": 37, BROKEN"#), 37);
+        // tabs are JSON whitespace too
+        assert_eq!(extract_request_id("{\t\"id\"\t: 21, BROKEN"), 21);
+        // nothing to recover
+        assert_eq!(extract_request_id("not json at all"), 0);
+        assert_eq!(extract_request_id(r#"{"id": "seven"}"#), 0);
+        assert_eq!(extract_request_id(""), 0);
+        // a *nested* "id" must never be recovered: it could collide with
+        // a different live request on the same connection
+        assert_eq!(extract_request_id(r#"{"kind":"mcm","problem":{"id":3,"#), 0);
+        assert_eq!(extract_request_id(r#"{"dims":[1,2],"meta":{"id":7}"#), 0);
+        // an "id" inside a string value is not a key
+        assert_eq!(extract_request_id(r#"{"note":"the \"id\" is 8", BROKEN"#), 0);
     }
 }

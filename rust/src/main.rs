@@ -336,6 +336,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             Some("8"),
         )
         .flag("max-wait-ms", "dynamic batching: window in ms", Some("2"))
+        .flag(
+            "queue-cap",
+            "worker-queue bound (jobs) before load shedding; 0 = env/default",
+            Some("0"),
+        )
         .parse(argv)?;
     let cfg = Config {
         addr: args.get_str("addr")?.to_string(),
@@ -346,6 +351,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         },
         allow_engineless: true,
         warm: true,
+        queue_cap: args.get_usize("queue-cap")?,
     };
     let server = Server::start(cfg)?;
     println!("pipedp server listening on {}", server.local_addr);

@@ -228,8 +228,18 @@ impl Engine {
     /// (measured as a 2.1 s p99 in the end-to-end driver — EXPERIMENTS.md
     /// §Perf).  Returns the number of executables compiled.
     pub fn warm_all(&self) -> usize {
+        self.warm_all_while(|| true)
+    }
+
+    /// [`Engine::warm_all`], checking `keep_going` between buckets so a
+    /// caller shutting down does not wait out the remaining compiles (one
+    /// in-flight bucket compile is the cancellation granularity).
+    pub fn warm_all_while(&self, keep_going: impl Fn() -> bool) -> usize {
         let mut compiled = 0;
         for spec in &self.registry.artifacts {
+            if !keep_going() {
+                break;
+            }
             if self.client.load(&spec.name, &spec.file).is_ok() {
                 compiled += 1;
             }

@@ -20,8 +20,29 @@ fn start_server() -> Server {
         },
         allow_engineless: true,
         warm: true,
+        queue_cap: 0,
     })
     .expect("server starts")
+}
+
+/// Count live threads of this process whose name starts with `tag`
+/// (each server instance tags its connection reader/writer threads).
+#[cfg(target_os = "linux")]
+fn live_threads_with_prefix(tag: &str) -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .map(|entries| {
+            entries
+                .filter_map(|e| e.ok())
+                .filter_map(|e| std::fs::read_to_string(e.path().join("comm")).ok())
+                .filter(|comm| comm.trim_end().starts_with(tag))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn live_threads_with_prefix(_tag: &str) -> usize {
+    0
 }
 
 fn sdp_request(p: SdpProblem, backend: Backend, full: bool) -> Request {
@@ -241,6 +262,158 @@ fn schedule_cache_serves_repeated_sizes() {
         assert!(
             h_after > h_before,
             "repeat request must be served from the schedule cache"
+        );
+    }
+}
+
+/// `shutdown` must unblock connection readers parked in `lines()` and
+/// join every thread the server spawned — the seed joined only the
+/// accept thread, so an embedding process could never exit cleanly.
+#[test]
+fn shutdown_unblocks_connections_and_joins_threads() {
+    use std::io::Read;
+    use std::time::Instant;
+
+    let server = start_server();
+    let tag = server.thread_tag().to_string();
+    // one idle connection parked in the reader, one that did real work
+    let mut idle = std::net::TcpStream::connect(server.local_addr).unwrap();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let resp = client
+        .call(sdp_request(SdpProblem::fibonacci(16), Backend::Native, false))
+        .unwrap();
+    assert!(resp.ok);
+    // wait for the accept loop to register the idle connection
+    let t0 = Instant::now();
+    while live_threads_with_prefix(&tag) < 2 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    if cfg!(target_os = "linux") {
+        assert!(
+            live_threads_with_prefix(&tag) >= 2,
+            "both connection threads should be live before shutdown"
+        );
+    }
+
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown must not hang on parked connections"
+    );
+    assert_eq!(
+        live_threads_with_prefix(&tag),
+        0,
+        "no pipedp connection thread may survive shutdown"
+    );
+    // the sockets were really closed server-side: reads see EOF
+    idle.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    let mut buf = [0u8; 16];
+    assert_eq!(idle.read(&mut buf).unwrap_or(0), 0);
+}
+
+/// Saturation sheds with a typed `overloaded` reply (visible in `stats`
+/// as `shed`) instead of queueing without bound: 1 worker, 2 queue
+/// slots, a 40-request pipelined burst of slow MCM solves.
+#[test]
+fn saturated_server_sheds_with_typed_overloaded_response() {
+    let server = Server::start(Config {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        policy: Policy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        warm: false,
+        queue_cap: 2,
+    })
+    .expect("server starts");
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    // n = 173 is distinctive (no other test warms this size): every solve
+    // walks ~860k schedule terms, slow enough that the burst outruns the
+    // single worker
+    let mut rng = pipedp::util::rng::Rng::seeded(7);
+    let problem = McmProblem::random(&mut rng, 173, 25);
+    let want = *pipedp::mcm::seq::linear_table(&problem).last().unwrap();
+    let reqs: Vec<Request> = (0..40)
+        .map(|_| Request {
+            id: 0,
+            body: RequestBody::Mcm {
+                problem: problem.clone(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: false,
+        })
+        .collect();
+    let resps = client.call_pipelined(reqs).unwrap();
+    assert_eq!(resps.len(), 40, "every request gets exactly one reply");
+    let shed: Vec<_> = resps.iter().filter(|r| r.overloaded).collect();
+    let served: Vec<_> = resps.iter().filter(|r| r.ok).collect();
+    assert_eq!(
+        shed.len() + served.len(),
+        40,
+        "every reply is either served or typed-overloaded: {:?}",
+        resps
+            .iter()
+            .find(|r| !r.ok && !r.overloaded)
+            .map(|r| r.error.clone())
+    );
+    assert!(
+        !shed.is_empty(),
+        "a 40-burst against 1 worker + 2 queue slots must shed"
+    );
+    assert!(!served.is_empty(), "admitted requests must still be served");
+    for r in &shed {
+        assert_eq!(r.error.as_deref(), Some("overloaded"));
+        assert!(r.id > 0, "shed replies keep their request id");
+    }
+    for r in &served {
+        assert_eq!(r.value, want, "admitted answers must stay correct");
+    }
+    // the gate is observable in the stats snapshot
+    let stats_resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Stats,
+            backend: Backend::Auto,
+            full: false,
+        })
+        .unwrap();
+    let stats = stats_resp.stats.unwrap();
+    assert_eq!(
+        stats.i64_field("shed").unwrap(),
+        shed.len() as i64,
+        "shed counter must match the typed replies"
+    );
+    server.shutdown();
+}
+
+/// Decode failures must answer with the *request's* id when it is
+/// recoverable — the seed replied `id: 0`, which pipelined clients
+/// cannot correlate (and which collides with a real id 0).
+#[test]
+fn decode_errors_preserve_request_id() {
+    let server = start_server();
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    for (bad, want_id) in [
+        ("{\"id\": 42}\n", 42),                                // valid JSON, no kind
+        ("{\"id\": 37, \"kind\": \"sdp\", BROKEN\n", 37),      // invalid JSON
+        ("{\"kind\": \"nope\"}\n", 0),                         // nothing to recover
+    ] {
+        writer.write_all(bad.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = pipedp::coordinator::request::Response::decode(line.trim()).unwrap();
+        assert!(!resp.ok);
+        assert_eq!(
+            resp.id, want_id,
+            "error reply for {bad:?} must carry the recoverable id"
         );
     }
 }
