@@ -99,6 +99,7 @@ fn main() -> pipedp::Result<()> {
                         .map(|r| match &r.body {
                             RequestBody::Mcm { problem, .. } => pipedp::mcm::seq::cost(problem),
                             RequestBody::Sdp(p) => *pipedp::sdp::seq::solve(p).last().unwrap(),
+                            RequestBody::Align(p) => pipedp::align::seq::score(p),
                             RequestBody::Stats => 0,
                         })
                         .collect();

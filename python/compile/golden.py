@@ -86,6 +86,74 @@ def mcm_fixture() -> list:
     return cases
 
 
+def _align_tables(a, b, match_s=2, mismatch=-1, gap=-1):
+    """Row-major (m+1)x(n+1) tables for all three alignment variants.
+
+    Plain-python reference (no numpy) so the recurrences stay legible —
+    these pin rust align/seq.rs and align/wavefront.rs bit-for-bit.
+    """
+    m, n = len(a), len(b)
+    lcs = [[0] * (n + 1) for _ in range(m + 1)]
+    edit = [[0] * (n + 1) for _ in range(m + 1)]
+    local = [[0] * (n + 1) for _ in range(m + 1)]
+    for j in range(n + 1):
+        edit[0][j] = j
+    for i in range(m + 1):
+        edit[i][0] = i
+    for i in range(1, m + 1):
+        for j in range(1, n + 1):
+            if a[i - 1] == b[j - 1]:
+                lcs[i][j] = lcs[i - 1][j - 1] + 1
+            else:
+                lcs[i][j] = max(lcs[i - 1][j], lcs[i][j - 1])
+            edit[i][j] = min(
+                edit[i - 1][j] + 1,
+                edit[i][j - 1] + 1,
+                edit[i - 1][j - 1] + (a[i - 1] != b[j - 1]),
+            )
+            s = match_s if a[i - 1] == b[j - 1] else mismatch
+            local[i][j] = max(
+                0,
+                local[i - 1][j - 1] + s,
+                local[i - 1][j] + gap,
+                local[i][j - 1] + gap,
+            )
+    flat = lambda t: [v for row in t for v in row]
+    return flat(lcs), flat(edit), flat(local)
+
+
+def align_fixture() -> list:
+    cases = []
+    rng = np.random.default_rng(7117)
+    pairs = [
+        # LCS("ABCBDAB","BDCABA") = 4; levenshtein("kitten","sitting") = 3
+        ([1, 2, 3, 2, 4, 1, 2], [2, 4, 3, 1, 2, 1]),
+        ([10, 8, 19, 19, 4, 13], [18, 8, 19, 19, 8, 13, 6]),
+        ([5], [5]),
+        ([1, 1, 1], [2, 2]),
+    ] + [
+        (
+            rng.integers(0, 4, int(rng.integers(1, 24))).tolist(),
+            rng.integers(0, 4, int(rng.integers(1, 24))).tolist(),
+        )
+        for _ in range(6)
+    ]
+    for a, b in pairs:
+        a = [int(x) for x in a]
+        b = [int(x) for x in b]
+        lcs, edit, local = _align_tables(a, b)
+        cases.append({
+            "a": a,
+            "b": b,
+            "lcs_table": lcs,
+            "edit_table": edit,
+            "local_table": local,
+            # scoring used for local_table: [match, mismatch, gap]
+            "local_scoring": [2, -1, -1],
+        })
+    return cases
+
+
 def main() -> None:
     here = os.path.dirname(os.path.abspath(__file__))
     out_dir = os.path.normpath(os.path.join(here, "..", "..", "rust", "tests", "golden"))
@@ -94,6 +162,7 @@ def main() -> None:
         "schedules.json": schedule_fixture(),
         "sdp_cases.json": sdp_fixture(),
         "mcm_cases.json": mcm_fixture(),
+        "align_cases.json": align_fixture(),
     }
     for name, data in fixtures.items():
         path = os.path.join(out_dir, name)

@@ -1,6 +1,6 @@
 """Layer-1 Pallas kernel: the Fig. 2 S-DP pipeline.
 
-GPU → TPU adaptation (DESIGN.md §5): the paper's k-stage pipeline of CUDA
+GPU → TPU adaptation (DESIGN.md §6): the paper's k-stage pipeline of CUDA
 threads becomes a k-lane *vector* per outer step.  One ``fori_loop``
 iteration is one outer step ``i``; lane ``j`` (0-based) plays thread ``j+1``:
 

@@ -1,0 +1,142 @@
+//! E12 — alignment wavefront bench: the grid-DP workload family priced
+//! two ways.
+//!
+//! * **Wall-clock (ns/cell)**: sequential row-major oracle vs the fused
+//!   wavefront sweep over the flat arena vs the threaded executor, on
+//!   square grids (every executor is verified against the oracle before
+//!   timing).
+//! * **GPU cost model**: the anti-diagonal wavefront trace vs the host
+//!   sequential trace on the calibrated GTX-TITAN-Black model
+//!   ([`pipedp::simulator`]) at band sizes the paper's Table I uses —
+//!   the simulator costing the ISSUE's tentpole asks for.
+//!
+//! Run: `cargo bench --bench align_wavefront`           (table to stdout)
+//!      `cargo bench --bench align_wavefront -- --json` (also writes
+//!      BENCH_align.json at the repo root)
+//! Env: `PIPEDP_BENCH_FAST=1` shrinks runs; `PIPEDP_BENCH_MAX_N=256`
+//!      drops the larger grids.
+
+use pipedp::bench::{measure, Config};
+use pipedp::core::problem::AlignProblem;
+use pipedp::core::schedule::AlignSchedule;
+use pipedp::simulator::{self, GpuModel};
+use pipedp::util::json::Json;
+use pipedp::util::rng::Rng;
+use pipedp::util::table::Table;
+
+fn ns_per_cell(mean: std::time::Duration, cells: usize) -> f64 {
+    mean.as_nanos() as f64 / cells as f64
+}
+
+fn main() {
+    let emit_json = std::env::args().any(|a| a == "--json");
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let cfg = Config::from_env();
+    let max_n: usize = std::env::var("PIPEDP_BENCH_MAX_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let mut rng = Rng::seeded(47);
+
+    let mut table = Table::new(vec![
+        "grid",
+        "SEQ row-major",
+        "WAVEFRONT flat",
+        "WAVEFRONT threaded",
+    ]);
+    let mut results: Vec<Json> = Vec::new();
+
+    for n in [64usize, 256, 1024] {
+        if n > max_n {
+            println!("skipping n={n} (PIPEDP_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let a: Vec<i64> = (0..n).map(|_| rng.range(0..4)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.range(0..4)).collect();
+        let p = AlignProblem::lcs(a, b).expect("valid instance");
+        let cells = n * n;
+        let sched = AlignSchedule::compile(n, n);
+        let truth = pipedp::align::seq::solve(&p);
+        assert_eq!(
+            pipedp::align::wavefront::execute(&p, &sched),
+            truth,
+            "n={n}: wavefront diverged from the oracle"
+        );
+        assert_eq!(
+            pipedp::align::wavefront::execute_threaded(&p, &sched, threads),
+            truth,
+            "n={n}: threaded wavefront diverged from the oracle"
+        );
+
+        let (seq_stats, _) = measure(&cfg, || {
+            *pipedp::align::seq::solve(&p).last().unwrap() as u64
+        });
+        let (wave_stats, _) = measure(&cfg, || {
+            *pipedp::align::wavefront::execute(&p, &sched).last().unwrap() as u64
+        });
+        let (thr_stats, _) = measure(&cfg, || {
+            *pipedp::align::wavefront::execute_threaded(&p, &sched, threads)
+                .last()
+                .unwrap() as u64
+        });
+
+        let seq = ns_per_cell(seq_stats.mean, cells);
+        let wave = ns_per_cell(wave_stats.mean, cells);
+        let thr = ns_per_cell(thr_stats.mean, cells);
+        table.row(vec![
+            format!("{n}x{n}"),
+            format!("{seq:.2}"),
+            format!("{wave:.2}"),
+            format!("{thr:.2}"),
+        ]);
+        results.push(Json::obj(vec![
+            ("n", Json::int(n as i64)),
+            ("seq", Json::num(seq)),
+            ("wavefront", Json::num(wave)),
+            ("threaded", Json::num(thr)),
+        ]));
+    }
+
+    println!("\n== alignment wavefront, ns/cell (threads={threads}) ==");
+    println!("{}", table.render());
+
+    // GPU cost model: wavefront vs host-sequential on Table-I-style bands
+    let model = GpuModel::default();
+    let mut model_table = Table::new(vec!["band", "SEQ host ms", "WAVEFRONT gpu ms", "speedup"]);
+    let mut model_results: Vec<Json> = Vec::new();
+    for exp in [12u32, 14, 16] {
+        let side = 1u64 << exp;
+        let cpu =
+            simulator::exec::simulate_cpu(&model, &simulator::align_sequential_trace(side, side));
+        let gpu = simulator::simulate(&model, &simulator::align_wavefront_trace(side, side));
+        let cpu_ms = model.cpu_ms(cpu.total);
+        let gpu_ms = model.gpu_ms(gpu.total);
+        model_table.row(vec![
+            format!("2^{exp} x 2^{exp}"),
+            format!("{cpu_ms:.1}"),
+            format!("{gpu_ms:.1}"),
+            format!("{:.1}×", cpu_ms / gpu_ms),
+        ]);
+        model_results.push(Json::obj(vec![
+            ("side_log2", Json::int(exp as i64)),
+            ("seq_host_ms", Json::num((cpu_ms * 100.0).round() / 100.0)),
+            ("wavefront_gpu_ms", Json::num((gpu_ms * 100.0).round() / 100.0)),
+        ]));
+    }
+    println!("\n== GTX-TITAN cost model, square alignment bands ==");
+    println!("{}", model_table.render());
+
+    if emit_json {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("align_wavefront")),
+            ("unit", Json::str("ns_per_cell")),
+            ("threads", Json::int(threads as i64)),
+            ("variant", Json::str("lcs")),
+            ("results", Json::arr(results)),
+            ("model", Json::arr(model_results)),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_align.json");
+        std::fs::write(&path, format!("{}\n", doc.to_string())).expect("write BENCH_align.json");
+        println!("wrote {}", path.display());
+    }
+}

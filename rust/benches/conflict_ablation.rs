@@ -4,7 +4,7 @@
 //! Measured two ways: (a) modeled GPU cycles at a large band, (b) real
 //! CPU wall-clock of the step-synchronous executors (where the conflict
 //! costs nothing — demonstrating it is a GPU-architecture effect, which
-//! is also why the TPU mapping in DESIGN.md §5 is conflict-immune).
+//! is also why the TPU mapping in DESIGN.md §6 is conflict-immune).
 //!
 //! Run: `cargo bench --bench conflict_ablation`
 

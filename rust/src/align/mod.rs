@@ -1,0 +1,18 @@
+//! Sequence alignment — the O(1)-dependency grid-DP workload family
+//! (LCS, edit distance, Smith–Waterman-style local alignment), opened to
+//! prove the schedule arena and coordinator are problem-generic rather
+//! than MCM-shaped (DESIGN.md §4).
+//!
+//! All three variants fill an `(m+1)×(n+1)` table whose cell `(i, j)`
+//! depends only on `(i−1, j)`, `(i, j−1)` and `(i−1, j−1)` — the
+//! canonical anti-diagonal wavefront shape (Helal et al.; Ding, Gu &
+//! Sun).  Modules:
+//!
+//! * [`seq`] — classic row-major `O(mn)` DP: the oracle.
+//! * [`wavefront`] — executors over the compiled
+//!   [`crate::core::schedule::AlignSchedule`] flat arena: the fused
+//!   step-synchronous sweep and the real multi-threaded executor with
+//!   contiguous lane assignment.
+
+pub mod seq;
+pub mod wavefront;

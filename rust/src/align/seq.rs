@@ -1,0 +1,150 @@
+//! Classic row-major sequential alignment DP — the oracle every
+//! wavefront executor is property-tested against.
+
+use crate::core::problem::{AlignProblem, AlignVariant};
+use crate::core::schedule::grid;
+
+/// Solve the full `(m+1)×(n+1)` table row-major.
+pub fn solve(p: &AlignProblem) -> Vec<i64> {
+    let (m, n) = (p.rows(), p.cols());
+    let mut st = p.initial_table();
+    for i in 1..=m {
+        for j in 1..=n {
+            let up = st[grid::cell_index(n, i - 1, j)];
+            let left = st[grid::cell_index(n, i, j - 1)];
+            let diag = st[grid::cell_index(n, i - 1, j - 1)];
+            st[grid::cell_index(n, i, j)] =
+                cell(p.variant, &p.scoring, up, left, diag, p.a[i - 1], p.b[j - 1]);
+        }
+    }
+    st
+}
+
+/// The variant's scalar answer (LCS length / edit distance / best local
+/// score).
+pub fn score(p: &AlignProblem) -> i64 {
+    p.scalar(&solve(p))
+}
+
+/// One cell of the recurrence — shared with the wavefront executors so
+/// the oracle and the pipeline cannot drift apart semantically (they
+/// differ only in traversal order, which hazard-freedom makes
+/// observationally equivalent).
+#[inline(always)]
+pub(crate) fn cell(
+    variant: AlignVariant,
+    scoring: &crate::core::problem::AlignScoring,
+    up: i64,
+    left: i64,
+    diag: i64,
+    av: i64,
+    bv: i64,
+) -> i64 {
+    match variant {
+        AlignVariant::Lcs => {
+            if av == bv {
+                diag + 1
+            } else {
+                up.max(left)
+            }
+        }
+        AlignVariant::Edit => {
+            let sub = diag + i64::from(av != bv);
+            sub.min(up + 1).min(left + 1)
+        }
+        AlignVariant::Local => {
+            let s = if av == bv {
+                scoring.match_s
+            } else {
+                scoring.mismatch
+            };
+            (diag + s).max(up + scoring.gap).max(left + scoring.gap).max(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::AlignScoring;
+
+    #[test]
+    fn lcs_textbook() {
+        // LCS("ABCBDAB", "BDCABA") = 4 (e.g. "BCBA"), encoded as ints
+        let a = vec![1, 2, 3, 2, 4, 1, 2]; // A B C B D A B
+        let b = vec![2, 4, 3, 1, 2, 1]; // B D C A B A
+        let p = AlignProblem::lcs(a, b).unwrap();
+        assert_eq!(score(&p), 4);
+    }
+
+    #[test]
+    fn edit_textbook() {
+        // levenshtein("kitten", "sitting") = 3
+        let a = vec![10, 8, 19, 19, 4, 13]; // k i t t e n
+        let b = vec![18, 8, 19, 19, 8, 13, 6]; // s i t t i n g
+        let p = AlignProblem::new(a, b, AlignVariant::Edit, AlignScoring::default()).unwrap();
+        assert_eq!(score(&p), 3);
+    }
+
+    #[test]
+    fn edit_degenerate_cases() {
+        // identical sequences: distance 0; disjoint: max(m, n)
+        let p = AlignProblem::new(
+            vec![1, 2, 3],
+            vec![1, 2, 3],
+            AlignVariant::Edit,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        assert_eq!(score(&p), 0);
+        let p = AlignProblem::new(
+            vec![1, 1],
+            vec![2, 2, 2, 2],
+            AlignVariant::Edit,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        assert_eq!(score(&p), 4);
+    }
+
+    #[test]
+    fn local_finds_embedded_match() {
+        // a shared run of 3 symbols scores 3·match with default scoring
+        let p = AlignProblem::new(
+            vec![9, 9, 1, 2, 3, 9],
+            vec![7, 1, 2, 3, 7, 7],
+            AlignVariant::Local,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        assert_eq!(score(&p), 6); // 3 matches × match_s = 2
+    }
+
+    #[test]
+    fn local_never_negative() {
+        let p = AlignProblem::new(
+            vec![1, 2, 3],
+            vec![4, 5, 6],
+            AlignVariant::Local,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        assert!(solve(&p).iter().all(|&v| v >= 0));
+        assert_eq!(score(&p), 0);
+    }
+
+    #[test]
+    fn lcs_bounded_by_shorter_sequence() {
+        use crate::prop::forall;
+        forall("lcs bounds", 60, |g| {
+            let mut rng = g.rng().fork();
+            let p = AlignProblem::random(&mut rng, 1..32, 3, AlignVariant::Lcs);
+            let s = score(&p);
+            if s >= 0 && s <= p.rows().min(p.cols()) as i64 {
+                Ok(())
+            } else {
+                Err(format!("lcs {s} of {}x{}", p.rows(), p.cols()))
+            }
+        });
+    }
+}

@@ -1,0 +1,248 @@
+//! Anti-diagonal wavefront executors over the compiled
+//! [`AlignSchedule`] flat arena.
+//!
+//! Hazard-freedom (every operand of a step-`s` cell is final after step
+//! `s−1` at the latest — property-checked in `core::conflict`) makes the
+//! step-synchronous sweep *fusable*: the arena can be swept as one flat
+//! loop with immediate writes, exactly like the corrected-MCM executor
+//! (DESIGN.md §Perf / §4).  The threaded executor splits each step's
+//! lanes across workers in contiguous chunks with one barrier per step —
+//! reads land on earlier anti-diagonals (disjoint from the step's write
+//! set) and writes are lane-distinct (Theorem 1 for the wavefront), so
+//! the fused form is race-free.
+
+use std::sync::Barrier;
+
+use crate::align::seq;
+use crate::core::cache;
+use crate::core::problem::AlignProblem;
+use crate::core::schedule::AlignSchedule;
+use crate::sdp::naive::SharedTable;
+
+/// Step-synchronous executor over a compiled schedule: one fused flat
+/// sweep of the arena (sound by hazard-freedom; see module docs).
+pub fn execute(p: &AlignProblem, sched: &AlignSchedule) -> Vec<i64> {
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    let mut st = p.initial_table();
+    // one-time bounds validation of the whole arena (indices are grid- and
+    // sequence-bounded by construction in AlignSchedule::compile)
+    debug_assert!((0..sched.num_terms()).all(|i| {
+        (sched.tgt[i] as usize) < st.len()
+            && (sched.up[i] as usize) < st.len()
+            && (sched.left[i] as usize) < st.len()
+            && (sched.diag[i] as usize) < st.len()
+            && (sched.ai[i] as usize) < p.a.len()
+            && (sched.bj[i] as usize) < p.b.len()
+    }));
+    let variant = p.variant;
+    let scoring = p.scoring;
+    for i in 0..sched.num_terms() {
+        let v = seq::cell(
+            variant,
+            &scoring,
+            st[sched.up[i] as usize],
+            st[sched.left[i] as usize],
+            st[sched.diag[i] as usize],
+            p.a[sched.ai[i] as usize],
+            p.b[sched.bj[i] as usize],
+        );
+        st[sched.tgt[i] as usize] = v;
+    }
+    st
+}
+
+/// Convenience: fetch the `(rows, cols)` wavefront from the process-wide
+/// schedule cache and execute.  Serving paths (the coordinator's native
+/// route) land here, so a repeated grid shape never recompiles its
+/// schedule.
+pub fn solve(p: &AlignProblem) -> Vec<i64> {
+    let sched = cache::align_schedule(p.rows(), p.cols());
+    execute(p, &sched)
+}
+
+/// Real multi-threaded executor: the ≤ `min(m, n)` lanes of each step are
+/// split across `threads` workers in contiguous chunks, one barrier per
+/// step (the fused form — see module docs for why that is race-free).
+pub fn execute_threaded(p: &AlignProblem, sched: &AlignSchedule, threads: usize) -> Vec<i64> {
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    let threads = threads.max(1).min(sched.max_width().max(1));
+    if threads == 1 {
+        return execute(p, sched);
+    }
+    let mut st = p.initial_table();
+    let barrier = Barrier::new(threads);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let variant = p.variant;
+    let scoring = p.scoring;
+
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let st_ptr = &st_ptr;
+            let a = &p.a;
+            let b = &p.b;
+            let scoring = &scoring;
+            scope.spawn(move || {
+                for s in 0..sched.num_steps() {
+                    let view = sched.step_view(s);
+                    let chunk = view.len().div_ceil(threads);
+                    let lo = (t * chunk).min(view.len());
+                    let hi = ((t + 1) * chunk).min(view.len());
+                    for lane in lo..hi {
+                        // SAFETY: reads are of cells finalized on earlier
+                        // anti-diagonals (hazard-freedom), disjoint from
+                        // this step's write set; writes are lane-distinct
+                        // within a step (Theorem 1) — no data race.
+                        unsafe {
+                            let v = seq::cell(
+                                variant,
+                                scoring,
+                                st_ptr.read(view.up[lane] as usize),
+                                st_ptr.read(view.left[lane] as usize),
+                                st_ptr.read(view.diag[lane] as usize),
+                                a[view.ai[lane] as usize],
+                                b[view.bj[lane] as usize],
+                            );
+                            st_ptr.write(view.tgt[lane] as usize, v);
+                        }
+                    }
+                    barrier.wait(); // end of outer step
+                }
+            });
+        }
+    });
+    st
+}
+
+/// Execution trace of the first `max_steps` wavefront steps (Fig. 7-style
+/// walkthrough for the grid family).
+pub fn trace(p: &AlignProblem, max_steps: usize) -> String {
+    let sched = cache::align_schedule(p.rows(), p.cols());
+    let mut out = format!(
+        "alignment wavefront trace ({}), {}x{} grid, {} cells, {} steps, width ≤ {}\n",
+        p.variant.name(),
+        p.rows() + 1,
+        p.cols() + 1,
+        p.num_cells(),
+        sched.num_steps(),
+        sched.max_width()
+    );
+    for (s, view) in sched.steps().enumerate() {
+        if s >= max_steps {
+            out.push_str("…\n");
+            break;
+        }
+        out.push_str(&format!("step {:>3}:", s + 1));
+        for lane in 0..view.len() {
+            let cols = sched.cols;
+            let (i, j) = crate::core::schedule::grid::cell_coords(cols, view.tgt[lane] as usize);
+            out.push_str(&format!("  T[{i},{j}]"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::{AlignScoring, AlignVariant};
+    use crate::prop::forall;
+
+    #[test]
+    fn wavefront_matches_oracle_property() {
+        // the acceptance-criteria property: all three variants, sizes up
+        // to 256 on a sparse tail so the suite stays fast
+        forall("align wavefront == seq", 60, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let big = g.usize(0..10) == 0; // occasional large instance
+            let range = if big { 128..257 } else { 1..48 };
+            let p = AlignProblem::random(&mut rng, range, 4, v);
+            let sched = crate::core::schedule::AlignSchedule::compile(p.rows(), p.cols());
+            if execute(&p, &sched) == seq::solve(&p) {
+                Ok(())
+            } else {
+                Err(format!("{:?} {}x{}", v, p.rows(), p.cols()))
+            }
+        });
+    }
+
+    #[test]
+    fn threaded_matches_oracle() {
+        forall("align threaded == seq", 20, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 4..64, 4, v);
+            let threads = g.usize(2..5);
+            let sched = crate::core::schedule::AlignSchedule::compile(p.rows(), p.cols());
+            if execute_threaded(&p, &sched, threads) == seq::solve(&p) {
+                Ok(())
+            } else {
+                Err(format!("{:?} {}x{} threads={threads}", v, p.rows(), p.cols()))
+            }
+        });
+    }
+
+    #[test]
+    fn solve_uses_cached_schedule_and_matches() {
+        let p = AlignProblem::lcs(vec![1, 2, 3, 4, 7], vec![2, 3, 9, 4]).unwrap();
+        assert_eq!(solve(&p), seq::solve(&p));
+        assert_eq!(p.scalar(&solve(&p)), 3); // LCS {2, 3, 4}
+        // second solve of the same shape must hit the process-wide cache
+        let before = crate::core::cache::global_stats().hits;
+        let _ = solve(&p);
+        assert!(crate::core::cache::global_stats().hits > before);
+    }
+
+    #[test]
+    fn local_scoring_respected_by_wavefront() {
+        let scoring = AlignScoring {
+            match_s: 3,
+            mismatch: -2,
+            gap: -2,
+        };
+        let p = AlignProblem::new(
+            vec![5, 1, 2, 3, 5],
+            vec![8, 1, 2, 3, 8],
+            AlignVariant::Local,
+            scoring,
+        )
+        .unwrap();
+        assert_eq!(p.scalar(&solve(&p)), 9); // 3 matches × 3
+        assert_eq!(solve(&p), seq::solve(&p));
+    }
+
+    #[test]
+    fn degenerate_single_symbol_grids() {
+        for v in AlignVariant::ALL {
+            let p =
+                AlignProblem::new(vec![4], vec![4], v, AlignScoring::default()).unwrap();
+            let sched = crate::core::schedule::AlignSchedule::compile(1, 1);
+            assert_eq!(execute(&p, &sched), seq::solve(&p), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn trace_shows_first_antidiagonal() {
+        let p = AlignProblem::lcs(vec![1, 2], vec![3, 4]).unwrap();
+        let t = trace(&p, 2);
+        assert!(t.contains("T[1,1]"), "{t}");
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn executor_rejects_mismatched_schedule() {
+        let p = AlignProblem::lcs(vec![1, 2], vec![3, 4]).unwrap();
+        let sched = crate::core::schedule::AlignSchedule::compile(3, 3);
+        execute(&p, &sched);
+    }
+}

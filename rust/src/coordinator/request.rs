@@ -1,6 +1,6 @@
 //! Wire protocol: line-delimited JSON requests/responses.
 
-use crate::core::problem::{McmProblem, SdpProblem};
+use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
 use crate::core::schedule::McmVariant;
 use crate::core::semigroup::Op;
 use crate::util::json::Json;
@@ -53,6 +53,9 @@ pub enum RequestBody {
         problem: McmProblem,
         variant: McmVariant,
     },
+    /// Sequence alignment (LCS / edit distance / local alignment) over
+    /// the anti-diagonal wavefront schedule.
+    Align(AlignProblem),
     /// Server status probe.
     Stats,
 }
@@ -86,6 +89,31 @@ impl Request {
                     variant,
                 }
             }
+            "align" => {
+                let a = v.i64_vec_field("a")?;
+                let b = v.i64_vec_field("b")?;
+                let variant = match v.get("variant") {
+                    Some(s) => AlignVariant::parse(s.as_str().unwrap_or("?"))?,
+                    None => AlignVariant::Lcs,
+                };
+                let d = AlignScoring::default();
+                // absent fields default; *present* fields of the wrong
+                // type are typed errors, not silent default substitution
+                let field_or = |key: &str, fallback: i64| -> Result<i64> {
+                    match v.get(key) {
+                        None => Ok(fallback),
+                        Some(x) => x.as_i64().ok_or_else(|| {
+                            Error::Json(format!("field '{key}' is not an integer"))
+                        }),
+                    }
+                };
+                let scoring = AlignScoring {
+                    match_s: field_or("match", d.match_s)?,
+                    mismatch: field_or("mismatch", d.mismatch)?,
+                    gap: field_or("gap", d.gap)?,
+                };
+                RequestBody::Align(AlignProblem::new(a, b, variant, scoring)?)
+            }
             "stats" => RequestBody::Stats,
             other => return Err(Error::Json(format!("unknown kind '{other}'"))),
         };
@@ -118,6 +146,15 @@ impl Request {
                 fields.push(("kind", Json::str("mcm")));
                 fields.push(("dims", Json::arr(problem.dims.iter().map(|&v| Json::int(v)))));
                 fields.push(("variant", Json::str(variant.name())));
+            }
+            RequestBody::Align(p) => {
+                fields.push(("kind", Json::str("align")));
+                fields.push(("a", Json::arr(p.a.iter().map(|&v| Json::int(v)))));
+                fields.push(("b", Json::arr(p.b.iter().map(|&v| Json::int(v)))));
+                fields.push(("variant", Json::str(p.variant.name())));
+                fields.push(("match", Json::int(p.scoring.match_s)));
+                fields.push(("mismatch", Json::int(p.scoring.mismatch)));
+                fields.push(("gap", Json::int(p.scoring.gap)));
             }
             RequestBody::Stats => fields.push(("kind", Json::str("stats"))),
         }
@@ -287,6 +324,75 @@ mod tests {
         assert!(Request::decode(r#"{"id": 1, "kind": "sdp", "n": 10, "offsets": [1, 2], "op": "min", "init": [0]}"#).is_err()); // increasing offsets
         assert!(Request::decode(r#"{"id": 1, "kind": "mcm", "dims": [5]}"#).is_err());
         assert!(Request::decode(r#"{"id": 1, "kind": "wat"}"#).is_err());
+        // align: empty sequences and bad variants are typed errors
+        assert!(Request::decode(r#"{"id": 1, "kind": "align", "a": [], "b": [1]}"#).is_err());
+        assert!(
+            Request::decode(r#"{"id": 1, "kind": "align", "a": [1], "b": [1], "variant": "x"}"#)
+                .is_err()
+        );
+        // local alignment with nonsensical scoring is rejected at decode
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "align", "a": [1], "b": [1], "variant": "local", "gap": 3}"#
+        )
+        .is_err());
+        // a *present* scoring field of the wrong type must be a typed
+        // error, never a silent fall-back to the default
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "align", "a": [1], "b": [1], "gap": "-3"}"#
+        )
+        .is_err());
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "align", "a": [1], "b": [1], "match": 2.5}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn align_request_roundtrip() {
+        let p = AlignProblem::new(
+            vec![1, 2, 3, 4],
+            vec![2, 3, 9],
+            AlignVariant::Local,
+            AlignScoring {
+                match_s: 3,
+                mismatch: -2,
+                gap: -1,
+            },
+        )
+        .unwrap();
+        let req = Request {
+            id: 11,
+            body: RequestBody::Align(p),
+            backend: Backend::Auto,
+            full: true,
+        };
+        let back = Request::decode(&req.encode()).unwrap();
+        assert_eq!(back.id, 11);
+        match back.body {
+            RequestBody::Align(p) => {
+                assert_eq!(p.a, vec![1, 2, 3, 4]);
+                assert_eq!(p.b, vec![2, 3, 9]);
+                assert_eq!(p.variant, AlignVariant::Local);
+                assert_eq!(p.scoring.match_s, 3);
+                assert_eq!(p.scoring.mismatch, -2);
+                assert_eq!(p.scoring.gap, -1);
+            }
+            _ => panic!("wrong body"),
+        }
+    }
+
+    #[test]
+    fn align_request_defaults() {
+        // variant and scoring default when absent
+        let back =
+            Request::decode(r#"{"id": 2, "kind": "align", "a": [1, 2], "b": [2]}"#).unwrap();
+        match back.body {
+            RequestBody::Align(p) => {
+                assert_eq!(p.variant, AlignVariant::Lcs);
+                assert_eq!(p.scoring, AlignScoring::default());
+            }
+            _ => panic!("wrong body"),
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::request::{Backend, Request, RequestBody, Response};
-use crate::core::problem::{McmProblem, SdpProblem};
+use crate::core::problem::{AlignProblem, McmProblem, SdpProblem};
 use crate::core::schedule::McmVariant;
 use crate::runtime::engine::Engine;
 use crate::{Error, Result};
@@ -17,6 +17,10 @@ use crate::{Error, Result};
 /// PJRT dispatch (measured in `bench xla_engine`; see EXPERIMENTS.md §Perf).
 pub const NATIVE_SDP_CUTOFF: usize = 64;
 pub const NATIVE_MCM_CUTOFF: usize = 8;
+/// Alignment grids with both sides at or below this stay native (the
+/// wavefront sweep is O(mn) with a tiny constant; a 128×128 grid solves
+/// in ~the PJRT dispatch overhead alone).
+pub const NATIVE_ALIGN_CUTOFF: usize = 128;
 
 /// Resolved routing decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +58,9 @@ impl Router {
                         .iter()
                         .any(|a| a.algo == "pipeline" && a.n == problem.n()),
                 },
+                RequestBody::Align(p) => {
+                    engine.registry.route_align(p.rows(), p.cols(), 1).is_some()
+                }
                 RequestBody::Stats => false,
             }
         };
@@ -72,6 +79,9 @@ impl Router {
                 let small = match &req.body {
                     RequestBody::Sdp(p) => p.n <= NATIVE_SDP_CUTOFF,
                     RequestBody::Mcm { problem, .. } => problem.n() <= NATIVE_MCM_CUTOFF,
+                    RequestBody::Align(p) => {
+                        p.rows().max(p.cols()) <= NATIVE_ALIGN_CUTOFF
+                    }
                     RequestBody::Stats => true,
                 };
                 if !small && fits_xla(req) {
@@ -105,6 +115,11 @@ impl Router {
                 let st = crate::mcm::pipeline::solve(problem, *variant);
                 Ok(self.done(req, st, &format!("native:mcm_pipeline_{}", variant.name())))
             }
+            RequestBody::Align(p) => {
+                let st = crate::align::wavefront::solve(p);
+                let value = p.scalar(&st); // local alignment's scalar is the max, not the corner
+                Ok(self.done_scored(req, value, st, "native:align_wavefront"))
+            }
             RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
         }
     }
@@ -127,6 +142,11 @@ impl Router {
                     }
                 };
                 Ok(self.done(req, st, "xla:mcm"))
+            }
+            RequestBody::Align(p) => {
+                let st = engine.solve_align(p)?;
+                let value = p.scalar(&st);
+                Ok(self.done_scored(req, value, st, "xla:align_wavefront"))
             }
             RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
         }
@@ -183,12 +203,46 @@ impl Router {
                         .collect(),
                 )
             }
+            RequestBody::Align(_) => {
+                let ps: Vec<&AlignProblem> = reqs
+                    .iter()
+                    .map(|r| match &r.body {
+                        RequestBody::Align(p) => p,
+                        _ => unreachable!("batch key mixes kinds"),
+                    })
+                    .collect();
+                let rows = ps.iter().map(|p| p.rows()).max()?;
+                let cols = ps.iter().map(|p| p.cols()).max()?;
+                engine.registry.route_align(rows, cols, ps.len())?;
+                let tables = engine.solve_align_batch(&ps).ok()?;
+                Some(
+                    reqs.iter()
+                        .zip(ps.iter().zip(tables))
+                        .map(|(r, (p, st))| {
+                            let value = p.scalar(&st);
+                            self.done_scored(r, value, st, "xla:align_wavefront[batched]")
+                        })
+                        .collect(),
+                )
+            }
             RequestBody::Stats => None,
         }
     }
 
     fn done(&self, req: &Request, table: Vec<i64>, served_by: &str) -> Response {
         let value = *table.last().unwrap_or(&0);
+        self.done_scored(req, value, table, served_by)
+    }
+
+    /// Like [`Router::done`] for workloads whose scalar answer is not the
+    /// table's last cell (local alignment reports the table maximum).
+    fn done_scored(
+        &self,
+        req: &Request,
+        value: i64,
+        table: Vec<i64>,
+        served_by: &str,
+    ) -> Response {
         Response::ok(
             req.id,
             value,
@@ -214,6 +268,13 @@ pub enum GroupKey {
         n: usize,
         variant: &'static str,
     },
+    /// Variant and scoring are deliberately absent: the batched dispatch
+    /// carries them per instance in the params literal, so same-shape
+    /// requests of different variants share one dispatch.
+    Align {
+        rows: usize,
+        cols: usize,
+    },
     Single(i64),
 }
 
@@ -232,6 +293,10 @@ pub fn group_key(req: &Request, route: Route) -> GroupKey {
         RequestBody::Mcm { problem, variant } => GroupKey::Mcm {
             n: problem.n(),
             variant: variant.name(),
+        },
+        RequestBody::Align(p) => GroupKey::Align {
+            rows: p.rows(),
+            cols: p.cols(),
         },
         RequestBody::Stats => GroupKey::Single(req.id),
     }
@@ -307,6 +372,89 @@ mod tests {
         // the published schedule overestimates this instance
         let truth = crate::mcm::seq::cost(&McmProblem::hazard_counterexample());
         assert!(resp.value > truth);
+    }
+
+    #[test]
+    fn align_native_execution_scores_by_variant() {
+        use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+        let r = Router::new(None);
+        // LCS: corner cell
+        let req = Request {
+            id: 4,
+            body: RequestBody::Align(
+                AlignProblem::lcs(vec![1, 2, 3, 4, 7], vec![2, 3, 9, 4]).unwrap(),
+            ),
+            backend: Backend::Native,
+            full: true,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.value, 3);
+        assert_eq!(resp.served_by, "native:align_wavefront");
+        assert_eq!(resp.table.unwrap().len(), 6 * 5);
+        // local alignment: the value is the table max, not the corner
+        let p = AlignProblem::new(
+            vec![1, 2, 3, 9],
+            vec![8, 1, 2, 3],
+            AlignVariant::Local,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        let want = crate::align::seq::score(&p);
+        let req = Request {
+            id: 5,
+            body: RequestBody::Align(p),
+            backend: Backend::Native,
+            full: false,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok);
+        assert_eq!(resp.value, want);
+        assert_eq!(want, 6); // run {1,2,3} × match_s 2
+    }
+
+    #[test]
+    fn align_auto_routes_native_without_engine() {
+        let r = Router::new(None);
+        let req = Request {
+            id: 6,
+            body: RequestBody::Align(
+                crate::core::problem::AlignProblem::lcs(vec![1; 500], vec![2; 500]).unwrap(),
+            ),
+            backend: Backend::Auto,
+            full: false,
+        };
+        // large grid, but engineless → native; pinned xla → typed error
+        assert_eq!(r.route(&req).unwrap(), Route::Native);
+        let mut pinned = req;
+        pinned.backend = Backend::Xla;
+        assert!(r.route(&pinned).is_err());
+    }
+
+    #[test]
+    fn align_group_keys_split_by_shape_only() {
+        use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+        let mk = |id, variant| Request {
+            id,
+            body: RequestBody::Align(
+                AlignProblem::new(vec![1, 2], vec![3, 4, 5], variant, AlignScoring::default())
+                    .unwrap(),
+            ),
+            backend: Backend::Auto,
+            full: false,
+        };
+        let a = mk(1, AlignVariant::Lcs);
+        let b = mk(2, AlignVariant::Lcs);
+        // same shape, different variant: still one dispatch (variant and
+        // scoring ride the per-instance params literal)
+        let c = mk(3, AlignVariant::Edit);
+        assert_eq!(group_key(&a, Route::Xla), group_key(&b, Route::Xla));
+        assert_eq!(group_key(&a, Route::Xla), group_key(&c, Route::Xla));
+        let mut d = mk(4, AlignVariant::Lcs);
+        if let RequestBody::Align(p) = &mut d.body {
+            p.b.push(6); // different shape → different bucket
+        }
+        assert_ne!(group_key(&a, Route::Xla), group_key(&d, Route::Xla));
     }
 
     #[test]

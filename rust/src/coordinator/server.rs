@@ -185,6 +185,30 @@ impl Server {
                             }
                             warmed_terms += 2 * terms;
                         }
+                        // alignment wavefronts for every align bucket (one
+                        // schedule serves all variants — keyed by grid
+                        // shape only), under the same cumulative budget
+                        let mut grids: Vec<(usize, usize)> = engine
+                            .registry
+                            .artifacts
+                            .iter()
+                            .filter(|s| s.kind == crate::runtime::registry::Kind::Align)
+                            .map(|s| (s.n, s.k))
+                            .collect();
+                        grids.sort_unstable();
+                        grids.dedup();
+                        for (rows, cols) in grids {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let terms = rows * cols;
+                            if warmed_terms + terms > budget || scheds + 1 > max_entries {
+                                break;
+                            }
+                            crate::core::cache::align_schedule(rows, cols);
+                            scheds += 1;
+                            warmed_terms += terms;
+                        }
                         warmed.store(true, Ordering::Release);
                         eprintln!(
                             "pipedp-server: warmed {n} executables, {scheds} schedules"

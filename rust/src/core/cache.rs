@@ -9,10 +9,10 @@
 //! keyed by `(problem kind, n, variant)`.
 //!
 //! * The S-DP schedule ([`crate::core::schedule::SdpSchedule`]) is affine
-//!   and never materialized on the request path, so only MCM keys exist
-//!   today; the key type carries the problem kind so future families
-//!   (LCS, triangulation-specific schedules, …) slot in without a schema
-//!   change.
+//!   and never materialized on the request path.  Two arena families are
+//!   cached: MCM pipelines keyed `(n, variant)` and alignment wavefronts
+//!   keyed `(rows, cols)` — the [`CachedSchedule`] enum holds either, and
+//!   [`CacheableSchedule`] keeps lookups typed at the call site.
 //! * Eviction is least-recently-used under two limits: an entry bound
 //!   ([`DEFAULT_CAPACITY`], env `PIPEDP_SCHED_CACHE_CAP`) and a budget on
 //!   total cached arena terms ([`DEFAULT_TERM_BUDGET`], env
@@ -30,7 +30,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::core::schedule::{McmSchedule, McmVariant};
+use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant};
 
 /// Default maximum number of cached schedules (covers far more distinct
 /// sizes than realistic traffic exhibits).
@@ -47,10 +47,68 @@ pub const DEFAULT_TERM_BUDGET: usize = 48_000_000;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Key {
     Mcm { n: usize, variant: McmVariant },
+    /// The alignment wavefront depends only on the grid shape — no
+    /// variant: one arena serves LCS, edit distance, and local alignment.
+    Align { rows: usize, cols: usize },
+}
+
+/// A cached compiled schedule of any workload family.  Typed entry/exit
+/// goes through [`CacheableSchedule`], so call sites stay monomorphic.
+#[derive(Clone)]
+pub enum CachedSchedule {
+    Mcm(Arc<McmSchedule>),
+    Align(Arc<AlignSchedule>),
+}
+
+impl CachedSchedule {
+    fn num_terms(&self) -> usize {
+        match self {
+            CachedSchedule::Mcm(s) => s.num_terms(),
+            CachedSchedule::Align(s) => s.num_terms(),
+        }
+    }
+}
+
+/// Schedule types the cache can hold.  Key variants map 1:1 to schedule
+/// types, so a kind mismatch on lookup is a caller bug (asserted).
+pub trait CacheableSchedule: Sized {
+    fn terms(&self) -> usize;
+    fn into_cached(this: Arc<Self>) -> CachedSchedule;
+    fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>>;
+}
+
+impl CacheableSchedule for McmSchedule {
+    fn terms(&self) -> usize {
+        self.num_terms()
+    }
+    fn into_cached(this: Arc<Self>) -> CachedSchedule {
+        CachedSchedule::Mcm(this)
+    }
+    fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
+        match cached {
+            CachedSchedule::Mcm(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl CacheableSchedule for AlignSchedule {
+    fn terms(&self) -> usize {
+        self.num_terms()
+    }
+    fn into_cached(this: Arc<Self>) -> CachedSchedule {
+        CachedSchedule::Align(this)
+    }
+    fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
+        match cached {
+            CachedSchedule::Align(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
 }
 
 struct Inner {
-    map: HashMap<Key, (Arc<McmSchedule>, u64)>,
+    map: HashMap<Key, (CachedSchedule, u64)>,
     /// Monotone use counter backing the LRU order.
     tick: u64,
     /// Entry-count bound.
@@ -120,18 +178,18 @@ impl ScheduleCache {
     /// The build runs outside the lock; on a lost insert race the winner's
     /// entry is kept and returned (the two are identical — compilation is
     /// deterministic).
-    pub fn get_or_insert_with(
+    pub fn get_or_insert_with<T: CacheableSchedule>(
         &self,
         key: Key,
-        build: impl FnOnce() -> McmSchedule,
-    ) -> Arc<McmSchedule> {
+        build: impl FnOnce() -> T,
+    ) -> Arc<T> {
         {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
             if let Some((sched, used)) = inner.map.get_mut(&key) {
                 *used = tick;
-                let sched = sched.clone();
+                let sched = T::from_cached(sched).expect("cache key/schedule kind mismatch");
                 drop(inner);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return sched;
@@ -139,14 +197,14 @@ impl ScheduleCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let sched = Arc::new(build());
-        let new_terms = sched.num_terms();
+        let new_terms = sched.terms();
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
         if let Some((existing, used)) = inner.map.get_mut(&key) {
             // lost the compile race: keep the winner's entry
             *used = tick;
-            return existing.clone();
+            return T::from_cached(existing).expect("cache key/schedule kind mismatch");
         }
         // An entry larger than the whole term budget can never fit by
         // evicting others — draining the map for it would just thrash hot
@@ -175,7 +233,7 @@ impl ScheduleCache {
             }
         }
         inner.total_terms += new_terms;
-        inner.map.insert(key, (sched.clone(), tick));
+        inner.map.insert(key, (T::into_cached(sched.clone()), tick));
         sched
     }
 
@@ -198,6 +256,15 @@ impl ScheduleCache {
 pub fn mcm_schedule(n: usize, variant: McmVariant) -> Arc<McmSchedule> {
     ScheduleCache::global().get_or_insert_with(Key::Mcm { n, variant }, || {
         McmSchedule::compile(n, variant)
+    })
+}
+
+/// Fetch (or compile and cache) the alignment wavefront for an
+/// `(m+1)×(n+1)` grid — the request-path replacement for
+/// [`AlignSchedule::compile`].
+pub fn align_schedule(rows: usize, cols: usize) -> Arc<AlignSchedule> {
+    ScheduleCache::global().get_or_insert_with(Key::Align { rows, cols }, || {
+        AlignSchedule::compile(rows, cols)
     })
 }
 
@@ -280,7 +347,7 @@ mod tests {
         cache.get_or_insert_with(key(4), || McmSchedule::compile(4, McmVariant::Corrected));
         cache.get_or_insert_with(key(5), || McmSchedule::compile(5, McmVariant::Corrected));
         // touch n=4 so n=5 becomes the eviction candidate
-        cache.get_or_insert_with(key(4), || unreachable!("must hit"));
+        cache.get_or_insert_with::<McmSchedule>(key(4), || unreachable!("must hit"));
         cache.get_or_insert_with(key(6), || McmSchedule::compile(6, McmVariant::Corrected));
         let mut rebuilt_4 = false;
         cache.get_or_insert_with(key(4), || {
@@ -333,6 +400,45 @@ mod tests {
             McmSchedule::compile(6, McmVariant::Corrected)
         });
         assert!(!small_rebuilt, "hot small schedule must still be cached");
+    }
+
+    #[test]
+    fn mixed_kinds_coexist_and_stay_typed() {
+        let cache = ScheduleCache::with_capacity(8);
+        let m = cache.get_or_insert_with(key(7), || {
+            McmSchedule::compile(7, McmVariant::Corrected)
+        });
+        let a = cache.get_or_insert_with(
+            Key::Align { rows: 5, cols: 9 },
+            || AlignSchedule::compile(5, 9),
+        );
+        assert_eq!(m.n, 7);
+        assert_eq!((a.rows, a.cols), (5, 9));
+        assert_eq!(cache.stats().entries, 2);
+        // align terms (m·n) are accounted alongside MCM terms
+        assert_eq!(
+            cache.stats().terms,
+            m.num_terms() + a.num_terms(),
+        );
+        // repeated align lookups hit without rebuilding
+        let mut rebuilt = false;
+        let a2 = cache.get_or_insert_with(Key::Align { rows: 5, cols: 9 }, || {
+            rebuilt = true;
+            AlignSchedule::compile(5, 9)
+        });
+        assert!(!rebuilt);
+        assert!(Arc::ptr_eq(&a, &a2));
+    }
+
+    #[test]
+    fn global_align_schedule_hits_on_repeat() {
+        // distinctive shape so other tests cannot pre-warm it
+        let before = global_stats();
+        let a = align_schedule(37, 53);
+        let b = align_schedule(37, 53);
+        assert!(Arc::ptr_eq(&a, &b) || a.num_terms() == b.num_terms());
+        let after = global_stats();
+        assert!(after.hits > before.hits, "second fetch must hit");
     }
 
     #[test]

@@ -175,6 +175,209 @@ impl McmProblem {
     }
 }
 
+/// Which grid-DP recurrence an [`AlignProblem`] runs over its
+/// `(m+1)×(n+1)` table.  All three share the O(1)-dependency stencil
+/// `(i−1, j), (i, j−1), (i−1, j−1)`, so one anti-diagonal wavefront
+/// schedule serves every variant (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlignVariant {
+    /// Longest common subsequence length.
+    Lcs,
+    /// Levenshtein edit distance (unit insert/delete/substitute costs).
+    Edit,
+    /// Smith–Waterman-style local alignment score (0-clamped).
+    Local,
+}
+
+impl AlignVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlignVariant::Lcs => "lcs",
+            AlignVariant::Edit => "edit",
+            AlignVariant::Local => "local",
+        }
+    }
+
+    /// Stable numeric id used by the XLA scoring-params literal.
+    pub fn id(self) -> i64 {
+        match self {
+            AlignVariant::Lcs => 0,
+            AlignVariant::Edit => 1,
+            AlignVariant::Local => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AlignVariant> {
+        match s {
+            "lcs" => Ok(AlignVariant::Lcs),
+            "edit" | "levenshtein" => Ok(AlignVariant::Edit),
+            "local" | "sw" => Ok(AlignVariant::Local),
+            other => Err(Error::InvalidProblem(format!(
+                "unknown alignment variant '{other}'"
+            ))),
+        }
+    }
+
+    pub const ALL: [AlignVariant; 3] = [AlignVariant::Lcs, AlignVariant::Edit, AlignVariant::Local];
+}
+
+/// Local-alignment scoring parameters (ignored by LCS / edit distance,
+/// whose costs are fixed by the variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AlignScoring {
+    /// Score added when `a[i] == b[j]` (must be positive for `Local`).
+    pub match_s: i64,
+    /// Score added when the symbols differ (≤ 0 for `Local`).
+    pub mismatch: i64,
+    /// Score added per gap (insertion/deletion; ≤ 0 for `Local`).
+    pub gap: i64,
+}
+
+impl Default for AlignScoring {
+    fn default() -> Self {
+        AlignScoring {
+            match_s: 2,
+            mismatch: -1,
+            gap: -1,
+        }
+    }
+}
+
+/// A sequence-alignment instance over i64-scored symbols: the second
+/// canonical DP family next to S-DP/MCM — an O(1)-dependency grid DP
+/// solved by anti-diagonal wavefronts (Helal et al.; Ding, Gu & Sun).
+#[derive(Debug, Clone)]
+pub struct AlignProblem {
+    pub a: Vec<i64>,
+    pub b: Vec<i64>,
+    pub variant: AlignVariant,
+    pub scoring: AlignScoring,
+}
+
+impl AlignProblem {
+    /// The wavefront schedule arena indexes grid cells as `u32`, so the
+    /// `(m+1)·(n+1)` table must fit (validated at the wire boundary, like
+    /// [`McmProblem::MAX_CHAIN`]).
+    pub const MAX_CELLS: usize = u32::MAX as usize;
+
+    pub fn new(
+        a: Vec<i64>,
+        b: Vec<i64>,
+        variant: AlignVariant,
+        scoring: AlignScoring,
+    ) -> Result<AlignProblem> {
+        if a.is_empty() || b.is_empty() {
+            return Err(Error::InvalidProblem(
+                "alignment needs two non-empty sequences".into(),
+            ));
+        }
+        let cells = (a.len() + 1)
+            .checked_mul(b.len() + 1)
+            .filter(|&c| c <= Self::MAX_CELLS);
+        if cells.is_none() {
+            return Err(Error::InvalidProblem(format!(
+                "grid {}×{} exceeds the u32 schedule-arena limit",
+                a.len() + 1,
+                b.len() + 1
+            )));
+        }
+        // The XLA wavefront kernel carries symbols and scoring as i32
+        // literals; validate here (the wire boundary) so an auto-routed
+        // large grid cannot fail at dispatch with a narrowing error the
+        // native backend would not have hit.
+        let fits_i32 = |v: i64| i32::try_from(v).is_ok();
+        if !a.iter().chain(&b).all(|&s| fits_i32(s)) {
+            return Err(Error::InvalidProblem(
+                "sequence symbols must fit i32 (the kernel dtype)".into(),
+            ));
+        }
+        if ![scoring.match_s, scoring.mismatch, scoring.gap]
+            .into_iter()
+            .all(fits_i32)
+        {
+            return Err(Error::InvalidProblem(
+                "scoring parameters must fit i32 (the kernel dtype)".into(),
+            ));
+        }
+        if variant == AlignVariant::Local
+            && (scoring.match_s <= 0 || scoring.mismatch > 0 || scoring.gap > 0)
+        {
+            return Err(Error::InvalidProblem(
+                "local alignment needs match > 0 and mismatch/gap ≤ 0 \
+                 (otherwise the 0-clamp is meaningless)"
+                    .into(),
+            ));
+        }
+        Ok(AlignProblem {
+            a,
+            b,
+            variant,
+            scoring,
+        })
+    }
+
+    /// Number of grid rows minus one (= `|a|`).
+    pub fn rows(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Number of grid columns minus one (= `|b|`).
+    pub fn cols(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Total table cells, `(m+1)·(n+1)`.
+    pub fn num_cells(&self) -> usize {
+        (self.rows() + 1) * (self.cols() + 1)
+    }
+
+    /// The preset table: borders per variant, zeros elsewhere
+    /// (overwritten by the wavefront).
+    pub fn initial_table(&self) -> Vec<i64> {
+        let (m, n) = (self.rows(), self.cols());
+        let mut st = vec![0i64; (m + 1) * (n + 1)];
+        if self.variant == AlignVariant::Edit {
+            for j in 0..=n {
+                st[j] = j as i64;
+            }
+            for i in 0..=m {
+                st[i * (n + 1)] = i as i64;
+            }
+        }
+        st
+    }
+
+    /// The variant's scalar answer extracted from a solved table: the
+    /// corner cell for LCS/edit, the table maximum for local alignment.
+    pub fn scalar(&self, table: &[i64]) -> i64 {
+        match self.variant {
+            AlignVariant::Lcs | AlignVariant::Edit => *table.last().unwrap_or(&0),
+            AlignVariant::Local => table.iter().copied().max().unwrap_or(0),
+        }
+    }
+
+    /// LCS instance with default scoring (the common case).
+    pub fn lcs(a: Vec<i64>, b: Vec<i64>) -> Result<AlignProblem> {
+        AlignProblem::new(a, b, AlignVariant::Lcs, AlignScoring::default())
+    }
+
+    /// Random instance: sequence lengths uniform in `len_range`, symbols
+    /// uniform in `[0, alphabet)` (small alphabets make matches likely).
+    pub fn random(
+        rng: &mut Rng,
+        len_range: std::ops::Range<usize>,
+        alphabet: i64,
+        variant: AlignVariant,
+    ) -> AlignProblem {
+        let m = rng.range(len_range.start as i64..len_range.end as i64) as usize;
+        let n = rng.range(len_range.start as i64..len_range.end as i64) as usize;
+        let a: Vec<i64> = (0..m.max(1)).map(|_| rng.range(0..alphabet.max(1))).collect();
+        let b: Vec<i64> = (0..n.max(1)).map(|_| rng.range(0..alphabet.max(1))).collect();
+        AlignProblem::new(a, b, variant, AlignScoring::default())
+            .expect("random instance is valid")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +447,94 @@ mod tests {
         assert!(McmProblem::new(vec![5, 0]).is_err());
         assert_eq!(McmProblem::clrs().n(), 6);
         assert_eq!(McmProblem::clrs().weight(0, 1, 2), 30 * 35 * 15);
+    }
+
+    #[test]
+    fn align_validation() {
+        assert!(AlignProblem::lcs(vec![], vec![1]).is_err());
+        assert!(AlignProblem::lcs(vec![1], vec![]).is_err());
+        assert!(AlignProblem::lcs(vec![1, 2], vec![2, 1]).is_ok());
+        // local alignment rejects non-sensible scoring
+        let bad = AlignScoring {
+            match_s: 0,
+            mismatch: -1,
+            gap: -1,
+        };
+        assert!(AlignProblem::new(vec![1], vec![1], AlignVariant::Local, bad).is_err());
+        let bad_gap = AlignScoring {
+            match_s: 2,
+            mismatch: -1,
+            gap: 1,
+        };
+        assert!(AlignProblem::new(vec![1], vec![1], AlignVariant::Local, bad_gap).is_err());
+        // …but the same scoring is fine for LCS (ignored there)
+        assert!(AlignProblem::new(vec![1], vec![1], AlignVariant::Lcs, bad_gap).is_ok());
+        // symbols and scoring beyond i32 are rejected at the boundary so
+        // the XLA narrowing can never fail mid-dispatch
+        assert!(AlignProblem::lcs(vec![5_000_000_000], vec![1]).is_err());
+        assert!(AlignProblem::lcs(vec![1], vec![i64::MIN]).is_err());
+        let big = AlignScoring {
+            match_s: i64::MAX,
+            mismatch: -1,
+            gap: -1,
+        };
+        assert!(AlignProblem::new(vec![1], vec![1], AlignVariant::Local, big).is_err());
+        assert!(AlignProblem::lcs(vec![i32::MAX as i64], vec![i32::MIN as i64]).is_ok());
+    }
+
+    #[test]
+    fn align_initial_table_borders() {
+        let p = AlignProblem::new(
+            vec![7, 8],
+            vec![9, 10, 11],
+            AlignVariant::Edit,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        let st = p.initial_table();
+        assert_eq!(st.len(), 12); // 3 × 4
+        assert_eq!(&st[..4], &[0, 1, 2, 3]); // top row = j
+        assert_eq!(st[4], 1); // first column = i
+        assert_eq!(st[8], 2);
+        // LCS / local start all-zero
+        let p0 = AlignProblem::lcs(vec![7, 8], vec![9, 10, 11]).unwrap();
+        assert!(p0.initial_table().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn align_scalar_extraction() {
+        let p = AlignProblem::lcs(vec![1], vec![1]).unwrap();
+        assert_eq!(p.scalar(&[0, 0, 0, 5]), 5); // corner
+        let p = AlignProblem::new(
+            vec![1],
+            vec![1],
+            AlignVariant::Local,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        assert_eq!(p.scalar(&[0, 9, 0, 5]), 9); // max over the table
+    }
+
+    #[test]
+    fn align_variant_parse_roundtrip() {
+        for v in AlignVariant::ALL {
+            assert_eq!(AlignVariant::parse(v.name()).unwrap(), v);
+        }
+        assert!(AlignVariant::parse("global").is_err());
+    }
+
+    #[test]
+    fn align_random_instances_always_valid() {
+        forall("random align valid", 50, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..64, 4, v);
+            if p.num_cells() == (p.rows() + 1) * (p.cols() + 1) && !p.a.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{p:?}"))
+            }
+        });
     }
 
     #[test]

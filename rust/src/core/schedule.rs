@@ -504,6 +504,192 @@ impl McmSchedule {
     }
 }
 
+/// Row-major grid helpers for the alignment wavefront's `(m+1)×(n+1)`
+/// table — the analogue of [`linear`] for the triangular MCM table.
+pub mod grid {
+    /// Row-major index of cell `(i, j)` in a grid with `cols + 1` columns.
+    #[inline]
+    pub fn cell_index(cols: usize, i: usize, j: usize) -> usize {
+        i * (cols + 1) + j
+    }
+
+    /// Inverse of [`cell_index`].
+    #[inline]
+    pub fn cell_coords(cols: usize, idx: usize) -> (usize, usize) {
+        (idx / (cols + 1), idx % (cols + 1))
+    }
+
+    /// Total table cells, `(rows+1)·(cols+1)`.
+    #[inline]
+    pub fn num_cells(rows: usize, cols: usize) -> usize {
+        (rows + 1) * (cols + 1)
+    }
+}
+
+/// Zero-copy view of one wavefront step (parallel column slices, like
+/// [`StepView`] for MCM).
+#[derive(Debug, Clone, Copy)]
+pub struct AlignStepView<'a> {
+    /// Grid index written this step.
+    pub tgt: &'a [u32],
+    /// Grid indices read: `(i−1, j)`, `(i, j−1)`, `(i−1, j−1)`.
+    pub up: &'a [u32],
+    pub left: &'a [u32],
+    pub diag: &'a [u32],
+    /// Symbol indices compared: `a[ai]` vs `b[bj]`.
+    pub ai: &'a [u32],
+    pub bj: &'a [u32],
+}
+
+impl<'a> AlignStepView<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tgt.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tgt.is_empty()
+    }
+}
+
+/// The anti-diagonal wavefront schedule for an `(m+1)×(n+1)` grid DP in
+/// the same flat SoA arena form as [`McmSchedule`]: six parallel `u32`
+/// columns plus CSR `step_offsets`.  Step `s` computes every interior
+/// cell `(i, j)` with `i + j = s + 2` — all three operands land on
+/// earlier anti-diagonals, so the schedule is hazard-free by
+/// construction, and within a step each substep's addresses are distinct
+/// (cells on one anti-diagonal have distinct rows), so it is Theorem-1
+/// conflict-free.  Both properties are re-checked by
+/// [`crate::core::conflict`].
+///
+/// The schedule depends only on the grid shape `(rows, cols)`, never on
+/// sequence content or variant — one compiled arena serves LCS, edit
+/// distance, and local alignment alike, and the process-wide cache keys
+/// it as `Key::Align { rows, cols }`.
+#[derive(Debug, Clone)]
+pub struct AlignSchedule {
+    /// `m` = first-sequence length.
+    pub rows: usize,
+    /// `n` = second-sequence length.
+    pub cols: usize,
+    /// CSR step boundaries; length `num_steps + 1`.
+    pub step_offsets: Vec<u32>,
+    pub tgt: Vec<u32>,
+    pub up: Vec<u32>,
+    pub left: Vec<u32>,
+    pub diag: Vec<u32>,
+    pub ai: Vec<u32>,
+    pub bj: Vec<u32>,
+}
+
+impl AlignSchedule {
+    /// Compile the wavefront for an `(m+1)×(n+1)` grid.
+    ///
+    /// Process-wide memoized by [`crate::core::cache::align_schedule`];
+    /// request paths should call that instead.
+    pub fn compile(rows: usize, cols: usize) -> AlignSchedule {
+        assert!(rows >= 1 && cols >= 1, "alignment grid needs both sequences");
+        assert!(
+            (rows + 1)
+                .checked_mul(cols + 1)
+                .is_some_and(|c| c <= u32::MAX as usize),
+            "grid {rows}x{cols} exceeds the u32 arena limit"
+        );
+        let num_steps = rows + cols - 1;
+        let nterms = rows * cols;
+        let mut step_offsets = Vec::with_capacity(num_steps + 1);
+        step_offsets.push(0u32);
+        let (mut tgt, mut up, mut left, mut diag, mut ai, mut bj) = (
+            Vec::with_capacity(nterms),
+            Vec::with_capacity(nterms),
+            Vec::with_capacity(nterms),
+            Vec::with_capacity(nterms),
+            Vec::with_capacity(nterms),
+            Vec::with_capacity(nterms),
+        );
+        // steps are emitted in order, rows ascending within a step, so the
+        // arena fills sequentially — no counting sort needed
+        for s in 0..num_steps {
+            let d = s + 2; // i + j on this anti-diagonal
+            let i_lo = 1.max(d.saturating_sub(cols));
+            let i_hi = rows.min(d - 1);
+            for i in i_lo..=i_hi {
+                let j = d - i;
+                tgt.push(grid::cell_index(cols, i, j) as u32);
+                up.push(grid::cell_index(cols, i - 1, j) as u32);
+                left.push(grid::cell_index(cols, i, j - 1) as u32);
+                diag.push(grid::cell_index(cols, i - 1, j - 1) as u32);
+                ai.push((i - 1) as u32);
+                bj.push((j - 1) as u32);
+            }
+            step_offsets.push(tgt.len() as u32);
+        }
+        debug_assert_eq!(tgt.len(), nterms);
+        AlignSchedule {
+            rows,
+            cols,
+            step_offsets,
+            tgt,
+            up,
+            left,
+            diag,
+            ai,
+            bj,
+        }
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.step_offsets.len() - 1
+    }
+
+    /// Total scheduled cells (= `m·n`, the DP work).
+    pub fn num_terms(&self) -> usize {
+        self.tgt.len()
+    }
+
+    /// Arena row range of step `s`.
+    #[inline]
+    pub fn step_range(&self, s: usize) -> std::ops::Range<usize> {
+        self.step_offsets[s] as usize..self.step_offsets[s + 1] as usize
+    }
+
+    /// Zero-copy column view of step `s`.
+    #[inline]
+    pub fn step_view(&self, s: usize) -> AlignStepView<'_> {
+        let range = self.step_range(s);
+        AlignStepView {
+            tgt: &self.tgt[range.clone()],
+            up: &self.up[range.clone()],
+            left: &self.left[range.clone()],
+            diag: &self.diag[range.clone()],
+            ai: &self.ai[range.clone()],
+            bj: &self.bj[range],
+        }
+    }
+
+    /// Iterate the steps as [`AlignStepView`]s.
+    pub fn steps(&self) -> impl Iterator<Item = AlignStepView<'_>> + '_ {
+        (0..self.num_steps()).map(move |s| self.step_view(s))
+    }
+
+    /// Widest step (= `min(m, n)`, the wavefront's peak parallelism).
+    pub fn max_width(&self) -> usize {
+        self.rows.min(self.cols)
+    }
+
+    /// Step after which grid cell `x` is final (`None` for border cells,
+    /// final from the start).
+    pub fn finalize_step(&self, x: usize) -> Option<usize> {
+        let (i, j) = grid::cell_coords(self.cols, x);
+        if i == 0 || j == 0 {
+            None
+        } else {
+            Some(i + j - 2)
+        }
+    }
+}
+
 /// The Fig. 2 S-DP pipeline schedule, kept implicit (it is affine): at
 /// outer step `i`, thread `j ∈ [1, k]` works on `i_j = i − j + 1` applying
 /// offset `a_j`.  This type only materializes per-step access lists for
@@ -819,6 +1005,96 @@ mod tests {
             let (r, c) = linear::cell_coords(6, x);
             assert_eq!(s.finalize_step(x), Some(s.start[x] + (c - r) - 1));
         }
+    }
+
+    // ---- alignment wavefront ----------------------------------------------
+
+    #[test]
+    fn align_grid_roundtrip() {
+        for cols in 1..8usize {
+            for i in 0..6 {
+                for j in 0..=cols {
+                    let idx = grid::cell_index(cols, i, j);
+                    assert_eq!(grid::cell_coords(cols, idx), (i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn align_schedule_covers_every_interior_cell_once() {
+        forall("align cells once", 40, |g| {
+            let rows = g.usize(1..24);
+            let cols = g.usize(1..24);
+            let s = AlignSchedule::compile(rows, cols);
+            if s.num_terms() != rows * cols {
+                return Err(format!("{rows}x{cols}: {} terms", s.num_terms()));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &t in &s.tgt {
+                if !seen.insert(t) {
+                    return Err(format!("duplicate cell {t}"));
+                }
+                let (i, j) = grid::cell_coords(cols, t as usize);
+                if i == 0 || j == 0 || i > rows || j > cols {
+                    return Err(format!("non-interior cell ({i},{j})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn align_steps_are_antidiagonals() {
+        let s = AlignSchedule::compile(3, 5);
+        assert_eq!(s.num_steps(), 7);
+        for (step, view) in s.steps().enumerate() {
+            for lane in 0..view.len() {
+                let (i, j) = grid::cell_coords(5, view.tgt[lane] as usize);
+                assert_eq!(i + j, step + 2, "step {step} holds cell ({i},{j})");
+                assert_eq!(view.up[lane] as usize, grid::cell_index(5, i - 1, j));
+                assert_eq!(view.left[lane] as usize, grid::cell_index(5, i, j - 1));
+                assert_eq!(view.diag[lane] as usize, grid::cell_index(5, i - 1, j - 1));
+                assert_eq!(view.ai[lane] as usize, i - 1);
+                assert_eq!(view.bj[lane] as usize, j - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn align_width_is_min_side() {
+        for (rows, cols) in [(1usize, 1usize), (1, 9), (9, 1), (4, 7), (7, 4), (6, 6)] {
+            let s = AlignSchedule::compile(rows, cols);
+            let widest = s
+                .steps()
+                .map(|v| v.len())
+                .max()
+                .unwrap_or(0);
+            assert_eq!(widest, rows.min(cols), "{rows}x{cols}");
+            assert_eq!(s.max_width(), rows.min(cols));
+        }
+    }
+
+    #[test]
+    fn align_csr_consistent() {
+        for (rows, cols) in [(1usize, 1usize), (2, 5), (5, 2), (8, 8)] {
+            let s = AlignSchedule::compile(rows, cols);
+            assert_eq!(s.step_offsets[0], 0);
+            assert!(s.step_offsets.windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(*s.step_offsets.last().unwrap() as usize, s.num_terms());
+            for col in [&s.tgt, &s.up, &s.left, &s.diag, &s.ai, &s.bj] {
+                assert_eq!(col.len(), s.num_terms(), "{rows}x{cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn align_finalize_step_matches_antidiagonal() {
+        let s = AlignSchedule::compile(4, 3);
+        assert_eq!(s.finalize_step(grid::cell_index(3, 0, 2)), None); // border
+        assert_eq!(s.finalize_step(grid::cell_index(3, 2, 0)), None); // border
+        assert_eq!(s.finalize_step(grid::cell_index(3, 1, 1)), Some(0));
+        assert_eq!(s.finalize_step(grid::cell_index(3, 4, 3)), Some(5));
     }
 
     // ---- S-DP schedule (Fig. 2 / Fig. 3) -----------------------------------

@@ -7,7 +7,7 @@
 //! * **Layer 3 (this crate)** — the coordination contribution: schedule
 //!   compilation ([`core::schedule`]), conflict/hazard analysis
 //!   ([`core::conflict`]), native step-synchronous and multi-threaded
-//!   executors ([`sdp`], [`mcm`]), a cycle-level SIMT GPU cost model
+//!   executors ([`sdp`], [`mcm`], [`align`]), a cycle-level SIMT GPU cost model
 //!   ([`simulator`]) standing in for the paper's GTX TITAN Black, and a
 //!   serving coordinator ([`coordinator`]) with routing, dynamic batching
 //!   and a worker pool.
@@ -35,6 +35,7 @@
 // block (the executors' SAFETY comments annotate exactly those blocks).
 #![warn(unsafe_op_in_unsafe_fn)]
 
+pub mod align;
 pub mod bench;
 pub mod coordinator;
 pub mod core;

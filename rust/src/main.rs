@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   solve-sdp   solve an S-DP instance (native or XLA backend)
 //!   solve-mcm   solve a matrix-chain instance (+ parenthesization)
+//!   align       LCS / edit distance / local alignment via the wavefront
 //!   trace       print the Fig. 3 / Fig. 7 execution traces
 //!   schedule    compile an MCM schedule and emit it as JSON
 //!   verify      conflict-freedom (Thm. 1) + staleness-hazard report
@@ -14,7 +15,7 @@
 use pipedp::coordinator::request::{Backend, Request, RequestBody};
 use pipedp::coordinator::server::{Client, Config, Server};
 use pipedp::core::conflict;
-use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
 use pipedp::core::schedule::{McmSchedule, McmVariant};
 use pipedp::core::semigroup::Op;
 use pipedp::simulator::{calibrate, GpuModel};
@@ -33,6 +34,7 @@ fn main() {
     let result = match cmd.as_str() {
         "solve-sdp" => cmd_solve_sdp(argv),
         "solve-mcm" => cmd_solve_mcm(argv),
+        "align" => cmd_align(argv),
         "trace" => cmd_trace(argv),
         "schedule" => cmd_schedule(argv),
         "verify" => cmd_verify(argv),
@@ -59,6 +61,7 @@ const USAGE: &str = "pipedp <subcommand> [flags]
 
   solve-sdp   --n N --offsets 7,5,2 --op min [--init 1,2,…|--seed S] [--backend auto|native|xla]
   solve-mcm   --dims 30,35,15,5,10,20,25 [--variant corrected|faithful] [--backend …] [--parens]
+  align       --a 1,2,3,4 --b 2,3,9 [--variant lcs|edit|local] [--match 2 --mismatch -1 --gap -1] [--backend …]
   trace       --kind sdp|mcm [--n N] [--offsets …] [--variant …] [--steps S]
   schedule    --n N --variant corrected|faithful [--json]
   verify      [--max-n N]
@@ -164,6 +167,54 @@ fn cmd_solve_mcm(argv: Vec<String>) -> Result<()> {
             pipedp::mcm::seq::parenthesization(&p)
         );
     }
+    if args.get_bool("full") {
+        println!("{st:?}");
+    }
+    Ok(())
+}
+
+fn cmd_align(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("align", "sequence alignment via the wavefront pipeline")
+        .flag("a", "comma-separated first sequence (i64 symbols)", None)
+        .flag("b", "comma-separated second sequence", None)
+        .flag("variant", "lcs|edit|local", Some("lcs"))
+        .flag("match", "local-alignment match score", Some("2"))
+        .flag("mismatch", "local-alignment mismatch score", Some("-1"))
+        .flag("gap", "local-alignment gap score", Some("-1"))
+        .flag("backend", "auto|native|xla", Some("auto"))
+        .boolflag("full", "print the whole table")
+        .parse(argv)?;
+    let variant = AlignVariant::parse(args.get_str("variant")?)?;
+    let p = AlignProblem::new(
+        args.get_i64_list("a")?,
+        args.get_i64_list("b")?,
+        variant,
+        AlignScoring {
+            match_s: args.get_i64("match")?,
+            mismatch: args.get_i64("mismatch")?,
+            gap: args.get_i64("gap")?,
+        },
+    )?;
+    let backend = parse_backend(&args)?;
+    let (st, served) = match backend {
+        Backend::Xla => {
+            let engine = pipedp::runtime::engine::Engine::load()?;
+            (engine.solve_align(&p)?, "xla")
+        }
+        _ => (pipedp::align::wavefront::solve(&p), "native"),
+    };
+    let label = match variant {
+        AlignVariant::Lcs => "lcs length",
+        AlignVariant::Edit => "edit distance",
+        AlignVariant::Local => "local score",
+    };
+    println!(
+        "{label} = {}   (m={} n={} variant={} backend={served})",
+        p.scalar(&st),
+        p.rows(),
+        p.cols(),
+        variant.name()
+    );
     if args.get_bool("full") {
         println!("{st:?}");
     }

@@ -28,8 +28,8 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::core::problem::{McmProblem, SdpProblem};
-use crate::core::schedule::{linear, McmVariant};
+use crate::core::problem::{AlignProblem, McmProblem, SdpProblem};
+use crate::core::schedule::{grid, linear, McmVariant};
 use crate::runtime::client::{i32_literal, i32_literal_raw, to_i64_vec, Client};
 use crate::runtime::registry::Registry;
 use crate::{Error, Result};
@@ -80,6 +80,12 @@ impl Engine {
                 ))
             })?
             .clone();
+        if spec.batch > 1 {
+            // only a batched bucket fits: ride it as a group of one (the
+            // batch path pads the literal's batch dimension)
+            let mut out = self.solve_sdp_batch(&[p])?;
+            return Ok(out.remove(0));
+        }
         let (st, offs) = pad_sdp(p, spec.n, spec.k)?;
         let exe = self.client.load(&spec.name, &spec.file)?;
         let out = exe.run(&[
@@ -114,6 +120,16 @@ impl Engine {
             st_all.extend_from_slice(&st);
             offs_all.extend_from_slice(&offs);
         }
+        // partial group on a larger-batch bucket (route_sdp guarantees
+        // spec.batch >= ps.len()): replicate the last instance to fill
+        // the literal's batch dimension; the extra rows are discarded
+        if let Some(p) = ps.last() {
+            let (st, offs) = pad_sdp(p, spec.n, spec.k)?;
+            for _ in ps.len()..spec.batch {
+                st_all.extend_from_slice(&st);
+                offs_all.extend_from_slice(&offs);
+            }
+        }
         let exe = self.client.load(&spec.name, &spec.file)?;
         let out = exe.run(&[
             i32_literal(&st_all, &[spec.batch as i64, spec.n as i64])?,
@@ -136,6 +152,10 @@ impl Engine {
             .route_mcm(n, "diagonal", 1)
             .ok_or_else(|| Error::Runtime(format!("no artifact bucket fits mcm n={n}")))?
             .clone();
+        if spec.batch > 1 {
+            let mut out = self.solve_mcm_batch(&[p])?;
+            return Ok(out.remove(0));
+        }
         let dims = pad_dims(&p.dims, spec.n);
         let exe = self.client.load(&spec.name, &spec.file)?;
         let out = exe.run(&[i32_literal(&dims, &[spec.n as i64 + 1])?])?;
@@ -155,9 +175,16 @@ impl Engine {
                 Error::Runtime(format!("no batch-{} artifact for mcm n={n_max}", ps.len()))
             })?
             .clone();
-        let mut dims_all = Vec::with_capacity(ps.len() * (spec.n + 1));
+        let mut dims_all = Vec::with_capacity(spec.batch * (spec.n + 1));
         for p in ps {
             dims_all.extend_from_slice(&pad_dims(&p.dims, spec.n));
+        }
+        // fill a partial group's batch dimension (see solve_sdp_batch)
+        if let Some(p) = ps.last() {
+            let filler = pad_dims(&p.dims, spec.n);
+            for _ in ps.len()..spec.batch {
+                dims_all.extend_from_slice(&filler);
+            }
         }
         let exe = self.client.load(&spec.name, &spec.file)?;
         let out = exe.run(&[i32_literal(
@@ -215,6 +242,89 @@ impl Engine {
             )?,
         ])?;
         to_i64_vec(&out[0])
+    }
+
+    /// Solve an alignment instance through the wavefront artifact.
+    /// Returns the instance's `(m+1)×(n+1)` table (real size, unpadded).
+    ///
+    /// Sequences are zero-padded to the bucket shape; every cell `(i, j)`
+    /// with `i ≤ m, j ≤ n` depends only on cells with smaller indices
+    /// and symbols `a[..i]`, `b[..j]`, so suffix padding never perturbs
+    /// the extracted sub-rectangle (property-tested below), whatever the
+    /// pad values.  Variant + scoring travel as a 4-element params
+    /// literal `[variant_id, match, mismatch, gap]`.
+    pub fn solve_align(&self, p: &AlignProblem) -> Result<Vec<i64>> {
+        let (m, n) = (p.rows(), p.cols());
+        let spec = self
+            .registry
+            .route_align(m, n, 1)
+            .ok_or_else(|| {
+                Error::Runtime(format!("no artifact bucket fits align {m}x{n}"))
+            })?
+            .clone();
+        if spec.batch > 1 {
+            let mut out = self.solve_align_batch(&[p])?;
+            return Ok(out.remove(0));
+        }
+        let a = pad_seq(&p.a, spec.n);
+        let b = pad_seq(&p.b, spec.k);
+        let exe = self.client.load(&spec.name, &spec.file)?;
+        let out = exe.run(&[
+            i32_literal(&a, &[spec.n as i64])?,
+            i32_literal(&b, &[spec.k as i64])?,
+            i32_literal(&align_params(p), &[4])?,
+        ])?;
+        let padded = to_i64_vec(&out[0])?;
+        Ok(extract_grid(&padded, spec.k, m, n))
+    }
+
+    /// Batched alignment (shared bucket, one dispatch); a partial group's
+    /// batch dimension is filled like [`Engine::solve_sdp_batch`].
+    pub fn solve_align_batch(&self, ps: &[&AlignProblem]) -> Result<Vec<Vec<i64>>> {
+        let rows_max = ps.iter().map(|p| p.rows()).max().ok_or_else(|| {
+            Error::Runtime("empty batch".into())
+        })?;
+        let cols_max = ps.iter().map(|p| p.cols()).max().unwrap_or(1);
+        let spec = self
+            .registry
+            .route_align(rows_max, cols_max, ps.len())
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no batch-{} artifact for align {rows_max}x{cols_max}",
+                    ps.len()
+                ))
+            })?
+            .clone();
+        let mut a_all = Vec::with_capacity(spec.batch * spec.n);
+        let mut b_all = Vec::with_capacity(spec.batch * spec.k);
+        let mut params_all = Vec::with_capacity(spec.batch * 4);
+        for p in ps {
+            a_all.extend_from_slice(&pad_seq(&p.a, spec.n));
+            b_all.extend_from_slice(&pad_seq(&p.b, spec.k));
+            params_all.extend_from_slice(&align_params(p));
+        }
+        if let Some(p) = ps.last() {
+            for _ in ps.len()..spec.batch {
+                a_all.extend_from_slice(&pad_seq(&p.a, spec.n));
+                b_all.extend_from_slice(&pad_seq(&p.b, spec.k));
+                params_all.extend_from_slice(&align_params(p));
+            }
+        }
+        let exe = self.client.load(&spec.name, &spec.file)?;
+        let out = exe.run(&[
+            i32_literal(&a_all, &[spec.batch as i64, spec.n as i64])?,
+            i32_literal(&b_all, &[spec.batch as i64, spec.k as i64])?,
+            i32_literal(&params_all, &[spec.batch as i64, 4])?,
+        ])?;
+        let full = to_i64_vec(&out[0])?;
+        let cells = grid::num_cells(spec.n, spec.k);
+        Ok(ps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                extract_grid(&full[i * cells..(i + 1) * cells], spec.k, p.rows(), p.cols())
+            })
+            .collect())
     }
 
     pub fn cached_executables(&self) -> usize {
@@ -287,6 +397,35 @@ pub fn pad_sdp(p: &SdpProblem, n_a: usize, k_a: usize) -> Result<(Vec<i64>, Vec<
 fn pad_dims(dims: &[i64], n_a: usize) -> Vec<i64> {
     let mut out = dims.to_vec();
     out.resize(n_a + 1, 1);
+    out
+}
+
+/// Zero-pad a sequence to bucket length (pad values are irrelevant: the
+/// extracted sub-rectangle never reads them — see [`Engine::solve_align`]).
+fn pad_seq(seq: &[i64], len: usize) -> Vec<i64> {
+    let mut out = seq.to_vec();
+    out.resize(len, 0);
+    out
+}
+
+/// The wavefront kernel's scoring-params literal.
+fn align_params(p: &AlignProblem) -> [i64; 4] {
+    [
+        p.variant.id(),
+        p.scoring.match_s,
+        p.scoring.mismatch,
+        p.scoring.gap,
+    ]
+}
+
+/// Extract the leading `(rows+1)×(cols+1)` sub-grid from a padded
+/// bucket's `(rows_pad+1)×(cols_pad+1)` row-major table.
+fn extract_grid(padded: &[i64], cols_pad: usize, rows: usize, cols: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(grid::num_cells(rows, cols));
+    for i in 0..=rows {
+        let base = i * (cols_pad + 1);
+        out.extend_from_slice(&padded[base..base + cols + 1]);
+    }
     out
 }
 
@@ -382,6 +521,58 @@ mod tests {
         let (st, offsets) = pad_sdp(&p, 10, 2).unwrap();
         assert_eq!(offsets, vec![2, 1]);
         assert_eq!(st, p.initial_table());
+    }
+
+    #[test]
+    fn extract_grid_identity_when_same_size() {
+        let p = crate::core::problem::AlignProblem::lcs(vec![1, 2, 3], vec![2, 3]).unwrap();
+        let table = crate::align::seq::solve(&p);
+        assert_eq!(extract_grid(&table, 2, 3, 2), table);
+    }
+
+    #[test]
+    fn padded_align_preserves_sub_rectangle() {
+        // solving a padded grid natively must leave the real sub-grid's
+        // cells unchanged, for every variant — the invariant solve_align's
+        // bucket extraction rests on
+        use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+        forall("align pad prefix stable", 40, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..16, 4, v);
+            let (m, n) = (p.rows(), p.cols());
+            let padded = AlignProblem::new(
+                pad_seq(&p.a, m + 3),
+                pad_seq(&p.b, n + 5),
+                v,
+                AlignScoring::default(),
+            )
+            .unwrap();
+            let full = crate::align::seq::solve(&padded);
+            let got = extract_grid(&full, n + 5, m, n);
+            if got == crate::align::seq::solve(&p) {
+                Ok(())
+            } else {
+                Err(format!("{v:?} {m}x{n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn align_params_encode_variant_and_scoring() {
+        use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+        let p = AlignProblem::new(
+            vec![1],
+            vec![2],
+            AlignVariant::Local,
+            AlignScoring {
+                match_s: 5,
+                mismatch: -3,
+                gap: -2,
+            },
+        )
+        .unwrap();
+        assert_eq!(align_params(&p), [2, 5, -3, -2]);
     }
 
     #[test]

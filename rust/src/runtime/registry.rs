@@ -13,6 +13,7 @@ use crate::{Error, Result};
 pub enum Kind {
     Sdp,
     Mcm,
+    Align,
 }
 
 impl Kind {
@@ -20,6 +21,7 @@ impl Kind {
         match s {
             "sdp" => Ok(Kind::Sdp),
             "mcm" => Ok(Kind::Mcm),
+            "align" => Ok(Kind::Align),
             other => Err(Error::Registry(format!("unknown kind '{other}'"))),
         }
     }
@@ -36,7 +38,8 @@ pub struct ArtifactSpec {
     pub op: Op,
     pub dtype: String,
     pub n: usize,
-    /// S-DP offset count (0 for MCM).
+    /// S-DP offset count, or the align bucket's max second-sequence
+    /// length (0 for MCM).
     pub k: usize,
     pub batch: usize,
     /// MCM schedule-executor tensor shape (steps, width); 0 otherwise.
@@ -91,7 +94,7 @@ impl Registry {
         }
         let mut artifacts = Vec::new();
         for a in root.arr_field("artifacts")? {
-            artifacts.push(ArtifactSpec {
+            let spec = ArtifactSpec {
                 name: a.str_field("name")?.to_string(),
                 file: dir.join(a.str_field("file")?),
                 kind: Kind::parse(a.str_field("kind")?)?,
@@ -103,7 +106,17 @@ impl Registry {
                 batch: a.get("batch").and_then(|v| v.as_usize()).unwrap_or(1),
                 sched_steps: a.get("sched_steps").and_then(|v| v.as_usize()).unwrap_or(0),
                 sched_width: a.get("sched_width").and_then(|v| v.as_usize()).unwrap_or(0),
-            });
+            };
+            // align buckets need both grid bounds: a missing/0 `k` would
+            // be unroutable yet still reach the server warmup, where
+            // AlignSchedule::compile(n, 0) asserts
+            if spec.kind == Kind::Align && (spec.n == 0 || spec.k == 0) {
+                return Err(Error::Registry(format!(
+                    "align artifact '{}' needs n ≥ 1 and k ≥ 1 (max rows/cols)",
+                    spec.name
+                )));
+            }
+            artifacts.push(spec);
         }
         Ok(Registry { artifacts })
     }
@@ -113,6 +126,12 @@ impl Registry {
     }
 
     /// Smallest S-DP pipeline bucket that fits `(n, k, op, batch)`.
+    ///
+    /// Batch routing is `a.batch >= batch`, smallest batch first: a
+    /// partial group (e.g. 3 requests against a batch-4 bucket) still
+    /// routes — the engine pads the literal's batch dimension and the
+    /// router truncates the replies.  Requiring `==` here starved partial
+    /// groups back to per-request native execution.
     pub fn route_sdp(&self, n: usize, k: usize, op: Op, batch: usize) -> Option<&ArtifactSpec> {
         self.artifacts
             .iter()
@@ -123,17 +142,34 @@ impl Registry {
                     && a.dtype == "int32"
                     && a.n >= n
                     && a.k >= k
-                    && a.batch == batch
+                    && a.batch >= batch
             })
-            .min_by_key(|a| (a.n, a.k))
+            .min_by_key(|a| (a.batch, a.n, a.k))
     }
 
-    /// Smallest MCM bucket (given algo) that fits `n`.
+    /// Smallest MCM bucket (given algo) that fits `n`; batch routing as
+    /// in [`Registry::route_sdp`].
     pub fn route_mcm(&self, n: usize, algo: &str, batch: usize) -> Option<&ArtifactSpec> {
         self.artifacts
             .iter()
-            .filter(|a| a.kind == Kind::Mcm && a.algo == algo && a.n >= n && a.batch == batch)
-            .min_by_key(|a| a.n)
+            .filter(|a| a.kind == Kind::Mcm && a.algo == algo && a.n >= n && a.batch >= batch)
+            .min_by_key(|a| (a.batch, a.n))
+    }
+
+    /// Smallest alignment-wavefront bucket that fits a `(rows, cols)`
+    /// grid (artifact `n` = max first-sequence length, `k` = max second);
+    /// batch routing as in [`Registry::route_sdp`].
+    pub fn route_align(&self, rows: usize, cols: usize, batch: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == Kind::Align
+                    && a.algo == "wavefront"
+                    && a.n >= rows
+                    && a.k >= cols
+                    && a.batch >= batch
+            })
+            .min_by_key(|a| (a.batch, a.n, a.k))
     }
 }
 
@@ -155,7 +191,16 @@ mod tests {
          "n": 16, "batch": 1},
         {"name": "mcm_pipeline_i32_n16", "file": "d.hlo.txt",
          "kind": "mcm", "algo": "pipeline", "op": "min", "dtype": "int32",
-         "n": 16, "batch": 1, "sched_steps": 150, "sched_width": 15}
+         "n": 16, "batch": 1, "sched_steps": 150, "sched_width": 15},
+        {"name": "mcm_diagonal_i32_n16_b4", "file": "e.hlo.txt",
+         "kind": "mcm", "algo": "diagonal", "op": "min", "dtype": "int32",
+         "n": 16, "batch": 4},
+        {"name": "align_wavefront_i32_n64x64", "file": "f.hlo.txt",
+         "kind": "align", "algo": "wavefront", "op": "min", "dtype": "int32",
+         "n": 64, "k": 64, "batch": 1},
+        {"name": "align_wavefront_i32_n64x64_b4", "file": "g.hlo.txt",
+         "kind": "align", "algo": "wavefront", "op": "min", "dtype": "int32",
+         "n": 64, "k": 64, "batch": 4}
       ]
     }"#;
 
@@ -166,12 +211,54 @@ mod tests {
     #[test]
     fn parses_all_fields() {
         let r = reg();
-        assert_eq!(r.artifacts.len(), 4);
+        assert_eq!(r.artifacts.len(), 7);
         let a = r.by_name("mcm_pipeline_i32_n16").unwrap();
         assert_eq!(a.kind, Kind::Mcm);
         assert_eq!(a.sched_steps, 150);
         assert_eq!(a.sched_width, 15);
         assert!(a.file.ends_with("d.hlo.txt"));
+        let al = r.by_name("align_wavefront_i32_n64x64").unwrap();
+        assert_eq!(al.kind, Kind::Align);
+        assert_eq!((al.n, al.k, al.batch), (64, 64, 1));
+    }
+
+    #[test]
+    fn align_routing() {
+        let r = reg();
+        assert_eq!(
+            r.route_align(30, 64, 1).unwrap().name,
+            "align_wavefront_i32_n64x64"
+        );
+        // grids larger than the bucket on either side are unroutable
+        assert!(r.route_align(65, 10, 1).is_none());
+        assert!(r.route_align(10, 65, 1).is_none());
+        // batched bucket serves group sizes up to 4
+        assert_eq!(
+            r.route_align(30, 30, 3).unwrap().name,
+            "align_wavefront_i32_n64x64_b4"
+        );
+        assert!(r.route_align(30, 30, 5).is_none());
+    }
+
+    #[test]
+    fn partial_groups_route_to_larger_batch_buckets() {
+        // the seed required a.batch == batch, so a 3-request group with
+        // only a batch-4 artifact fell back to per-request execution
+        let r = reg();
+        for group in 2..=4usize {
+            assert_eq!(
+                r.route_mcm(12, "diagonal", group).unwrap().name,
+                "mcm_diagonal_i32_n16_b4",
+                "group of {group} must ride the batch-4 bucket"
+            );
+        }
+        // a single request still prefers the exact batch-1 bucket
+        assert_eq!(
+            r.route_mcm(12, "diagonal", 1).unwrap().name,
+            "mcm_diagonal_i32_n16"
+        );
+        // …and groups larger than every bucket stay unroutable
+        assert!(r.route_mcm(12, "diagonal", 5).is_none());
     }
 
     #[test]
@@ -208,6 +295,17 @@ mod tests {
     #[test]
     fn rejects_missing_fields() {
         let bad = r#"{"format": 1, "artifacts": [{"name": "x"}]}"#;
+        assert!(Registry::parse(bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_align_artifact_without_cols_bound() {
+        // a k-less align bucket is unroutable and would panic the server
+        // warmup (AlignSchedule::compile(n, 0) asserts)
+        let bad = r#"{"format": 1, "artifacts": [
+            {"name": "align_bad", "file": "x.hlo.txt", "kind": "align",
+             "algo": "wavefront", "op": "min", "dtype": "int32", "n": 64}
+        ]}"#;
         assert!(Registry::parse(bad, Path::new("/tmp")).is_err());
     }
 

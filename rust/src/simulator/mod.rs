@@ -24,4 +24,7 @@ pub mod trace;
 
 pub use exec::{simulate, CycleBreakdown};
 pub use machine::GpuModel;
-pub use trace::{mcm_pipeline_trace, naive_trace, pipeline_trace, prefix_trace, sequential_trace, StepCost};
+pub use trace::{
+    align_sequential_trace, align_wavefront_trace, mcm_pipeline_trace, naive_trace,
+    pipeline_trace, prefix_trace, sequential_trace, StepCost,
+};

@@ -184,6 +184,44 @@ pub fn mcm_diagonal_trace(n: u64) -> Vec<StepCost> {
         .collect()
 }
 
+/// Alignment wavefront trace: `m + n − 1` device-synchronized
+/// anti-diagonal steps; each active thread makes 3 table reads, 2 symbol
+/// reads and 1 write, all collision-free (`core::conflict::analyze_align`
+/// proves degree 1).  The fill/drain ramps (widths 1 … min−1 on each
+/// side) are approximated at half peak width, like [`pipeline_trace`],
+/// so a 2^19-symbol band traces in three descriptors.
+pub fn align_wavefront_trace(rows: u64, cols: u64) -> Vec<StepCost> {
+    assert!(rows >= 1 && cols >= 1, "alignment needs both sequences");
+    let w = rows.min(cols);
+    let total = rows + cols - 1;
+    let ramp = 2 * (w - 1); // fill + drain steps, widths 1..w-1 each side
+    let steady = total - ramp;
+    let mut steps = Vec::new();
+    if ramp > 0 {
+        steps.push(StepCost {
+            alu_ops: 3,
+            devicewide_sync: true,
+            ..StepCost::new((w / 2).max(1), 6, ramp)
+        });
+    }
+    if steady > 0 {
+        steps.push(StepCost {
+            alu_ops: 3,
+            devicewide_sync: true,
+            ..StepCost::new(w, 6, steady)
+        });
+    }
+    steps
+}
+
+/// Alignment sequential trace: `m·n` cells on one host thread.
+pub fn align_sequential_trace(rows: u64, cols: u64) -> Vec<StepCost> {
+    vec![StepCost {
+        alu_ops: 3,
+        ..StepCost::new(1, 6, rows * cols)
+    }]
+}
+
 /// MCM sequential trace: Σ d·(n−d) operand folds on one host thread.
 pub fn mcm_sequential_trace(n: u64) -> Vec<StepCost> {
     let work: u64 = (1..n).map(|d| d * (n - d)).sum();
@@ -284,6 +322,50 @@ mod tests {
         assert_eq!(t.len(), 5);
         assert_eq!(t[0].threads, 5);
         assert_eq!(t[4].threads, 1);
+    }
+
+    #[test]
+    fn align_wavefront_steps_and_width() {
+        // 8×5 grid: 12 anti-diagonal steps, peak width 5, all synced,
+        // conflict-free by construction
+        let t = align_wavefront_trace(8, 5);
+        assert_eq!(total_steps(&t), 12);
+        assert!(t.iter().all(|s| s.devicewide_sync));
+        assert!(t.iter().all(|s| s.conflict_degree == 1));
+        assert!(t.iter().all(|s| s.threads <= 5));
+        // square 1×1 grid degenerates to a single step
+        let t = align_wavefront_trace(1, 1);
+        assert_eq!(total_steps(&t), 1);
+        assert_eq!(t[0].threads, 1);
+    }
+
+    #[test]
+    fn align_wavefront_steady_width_is_min_side() {
+        let t = align_wavefront_trace(1 << 16, 1 << 10);
+        let steady = t.last().unwrap();
+        assert_eq!(steady.threads, 1 << 10);
+        assert_eq!(total_steps(&t), (1 << 16) + (1 << 10) - 1);
+    }
+
+    #[test]
+    fn align_sequential_total_work() {
+        let t = align_sequential_trace(7, 9);
+        assert_eq!(total_steps(&t), 63);
+        assert_eq!(t[0].threads, 1);
+    }
+
+    #[test]
+    fn align_wavefront_beats_sequential_on_model() {
+        use crate::simulator::{exec, GpuModel};
+        let m = GpuModel::default();
+        let gpu = exec::simulate(&m, &align_wavefront_trace(1 << 12, 1 << 12));
+        let cpu = exec::simulate_cpu(&m, &align_sequential_trace(1 << 12, 1 << 12));
+        assert!(
+            gpu.total < cpu.total,
+            "wavefront ({}) must beat sequential ({}) at 2^12 per side",
+            gpu.total,
+            cpu.total
+        );
     }
 
     #[test]

@@ -146,7 +146,12 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                if !n.is_finite() {
+                    // bare `inf`/`NaN` tokens are not JSON — no peer (nor
+                    // our own parser) could read them back; `null` is the
+                    // interoperable encoding of a non-value
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -183,6 +188,7 @@ impl Json {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -215,9 +221,16 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting the recursive-descent parser accepts.  The
+/// parser recurses per `[`/`{`, so unbounded depth lets a wire request
+/// like `"[[[[…"` overflow the stack (an abort, not a catchable error);
+/// 128 levels is far beyond any legitimate payload.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -273,12 +286,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Guard one level of container recursion (decremented by the caller
+    /// on success; errors abort the whole parse, so leaks don't matter).
+    fn descend(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than 128 levels"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json> {
         self.expect(b'[')?;
+        self.descend()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -287,7 +312,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(items)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -295,10 +323,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json> {
         self.expect(b'{')?;
+        self.descend()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -312,7 +342,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(map));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -336,14 +369,25 @@ impl<'a> Parser<'a> {
                     Some(b't') => s.push('\t'),
                     Some(b'u') => {
                         let code = self.hex4()?;
-                        // surrogate pair handling
+                        // Surrogate-pair handling.  A high surrogate must
+                        // be followed by `\u` + a *low* surrogate: the seed
+                        // computed `lo - 0xDC00` unchecked, so a malformed
+                        // line like `"\ud800A"` underflowed (panic in
+                        // debug, garbage char in release) inside the
+                        // server's per-connection decoder.
                         let c = if (0xD800..0xDC00).contains(&code) {
-                            self.expect(b'\\')?;
-                            self.expect(b'u')?;
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("unpaired high surrogate"));
+                            }
                             let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
                             let combined =
                                 0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
                             char::from_u32(combined)
+                        } else if (0xDC00..0xE000).contains(&code) {
+                            return Err(self.err("unpaired low surrogate"));
                         } else {
                             char::from_u32(code)
                         };
@@ -498,6 +542,144 @@ mod tests {
     fn rejects_garbage() {
         for bad in ["", "{", "[1,", "tru", "\"unterminated", "{\"a\" 1}", "1 2"] {
             assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_surrogates_without_panicking() {
+        // regression for the wire-reachable underflow: a high surrogate
+        // followed by a non-low `\u` escape computed `lo - 0xDC00` on
+        // lo = 0x41 (debug panic / release garbage char)
+        for bad in [
+            r#""\ud800\u0041""#, // the underflow case: lo = 0x41 < 0xDC00
+            r#""\ud800A""#,      // high surrogate, no second escape
+            r#""\ud800""#,       // high surrogate at end of string
+            r#""\ud800\n""#,     // high surrogate then a non-\u escape
+            r#""\ud800\ud800""#, // high followed by another high
+            r#""\udc00""#,       // lone low surrogate
+            r#""\udfff x""#,     // lone low surrogate mid-string
+            r#""\ud8""#,         // truncated hex
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // a valid pair still decodes
+        assert_eq!(
+            Json::parse(r#""😀""#).unwrap().as_str().unwrap(),
+            "😀"
+        );
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // regression: `{n}` Display emitted bare `inf`/`NaN` tokens no
+        // parser (including ours) accepts
+        for v in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let line = Json::Num(v).to_string();
+            assert_eq!(line, "null", "{v} must not leak into the output");
+            // the roundtrip stays parseable end-to-end
+            assert_eq!(Json::parse(&line).unwrap(), Json::Null);
+        }
+        // …and inside containers
+        let doc = Json::obj(vec![("x", Json::Num(f64::NAN)), ("y", Json::int(3))]);
+        let text = doc.to_string();
+        assert_eq!(text, r#"{"x":null,"y":3}"#);
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        for (open, close) in [("[", "]"), ("{\"k\":", "}")] {
+            // far past MAX_DEPTH: must come back as Err, not abort
+            let deep = open.repeat(100_000) + &close.repeat(100_000);
+            assert!(Json::parse(&deep).is_err());
+            // truncated version (no closers) as well
+            assert!(Json::parse(&open.repeat(100_000)).is_err());
+        }
+        // depths at and under the limit still parse
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        let over = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(Json::parse(&over).is_err());
+        // sibling containers don't accumulate depth
+        let siblings = format!("[{}]", vec!["[[1]]"; 200].join(","));
+        assert!(Json::parse(&siblings).is_ok());
+    }
+
+    #[test]
+    fn malformed_corpus_always_errors_never_panics() {
+        let corpus = [
+            // truncated escapes
+            r#""\"#,
+            r#""\u"#,
+            r#""\u12"#,
+            r#""\u12G4""#,
+            r#""\x41""#,
+            // lone / invalid surrogates (see the dedicated test too)
+            r#""\udc00\ud800""#,
+            r#"{"k": "\ud800 "}"#,
+            // raw control characters in strings
+            "\"a\u{1}b\"",
+            "\"\t\"",
+            // structural garbage
+            "{\"a\":}",
+            "[,]",
+            "[1 2]",
+            "{\"a\":1,}",
+            "{1: 2}",
+            "nul",
+            "+1",
+            "- 1",
+            "--help",
+            "\u{FEFF}{}", // BOM is not JSON whitespace
+            "[\"closed\", ",
+        ];
+        for bad in corpus {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_over_generated_trees() {
+        use crate::prop::forall;
+        forall("json roundtrip", 150, |g| {
+            let v = gen_json(g, 4);
+            let text = v.to_string();
+            match Json::parse(&text) {
+                Ok(back) if back == v => Ok(()),
+                Ok(back) => Err(format!("{text} reparsed as {back:?}")),
+                Err(e) => Err(format!("{text}: {e}")),
+            }
+        });
+    }
+
+    /// Generator for the roundtrip property: all scalar kinds (finite
+    /// floats included), escapes-heavy and non-ASCII strings, nested
+    /// containers.
+    fn gen_json(g: &mut crate::prop::Gen, depth: usize) -> Json {
+        let choice = if depth == 0 { g.usize(0..5) } else { g.usize(0..7) };
+        match choice {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::int(g.i64(-1_000_000_000..1_000_000_000)),
+            3 => {
+                // finite float with a short exact decimal expansion
+                let v = g.i64(-1_000_000..1_000_000) as f64 / 64.0;
+                Json::Num(v)
+            }
+            4 => {
+                let pool = [
+                    "", "plain", "with \"quotes\"", "back\\slash", "tab\tnl\n",
+                    "ünïcødé", "🚀🔧", "control\u{1}char", "line\rreturn",
+                    "nul\u{0}byte",
+                ];
+                Json::str(*g.choose(&pool))
+            }
+            5 => Json::Arr((0..g.usize(0..4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize(0..4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
         }
     }
 

@@ -43,6 +43,34 @@ fn solve_mcm_faithful_warns_on_counterexample() {
 }
 
 #[test]
+fn align_lcs_edit_local() {
+    let out = pipedp(&["align", "--a", "1,2,3,4,7", "--b", "2,3,9,4"]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("lcs length = 3"), "{}", stdout(&out));
+
+    // kitten → sitting
+    let out = pipedp(&[
+        "align", "--a", "10,8,19,19,4,13", "--b", "18,8,19,19,8,13,6",
+        "--variant", "edit",
+    ]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("edit distance = 3"), "{}", stdout(&out));
+
+    let out = pipedp(&[
+        "align", "--a", "9,1,2,3,9", "--b", "7,1,2,3", "--variant", "local",
+        "--match", "3", "--mismatch", "-2", "--gap", "-2",
+    ]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("local score = 9"), "{}", stdout(&out));
+}
+
+#[test]
+fn align_rejects_empty_sequence() {
+    let out = pipedp(&["align", "--a", "1,2", "--b", ""]);
+    assert_eq!(out.status.code(), Some(1));
+}
+
+#[test]
 fn trace_fig3() {
     let out = pipedp(&["trace", "--kind", "sdp", "--n", "8", "--offsets", "5,3,1"]);
     assert!(out.status.success());

@@ -2,7 +2,7 @@
 //! semantics must agree bit-for-bit with the Python layer's
 //! (`python/compile/golden.py` regenerates `rust/tests/golden/*.json`).
 
-use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
 use pipedp::core::schedule::{McmSchedule, McmVariant};
 use pipedp::core::semigroup::Op;
 use pipedp::util::json::Json;
@@ -78,6 +78,39 @@ fn sdp_semantics_match_python() {
         assert_eq!(pipedp::sdp::pipeline::solve(&p), want, "pipeline, n={n}");
         assert_eq!(pipedp::sdp::prefix::solve(&p), want, "prefix, n={n}");
         assert_eq!(pipedp::sdp::two_by_two::solve(&p), want, "2x2, n={n}");
+    }
+}
+
+#[test]
+fn align_semantics_match_python() {
+    let golden = load("align_cases.json");
+    for case in golden.as_arr().unwrap() {
+        let a = case.i64_vec_field("a").unwrap();
+        let b = case.i64_vec_field("b").unwrap();
+        let scoring_vec = case.i64_vec_field("local_scoring").unwrap();
+        let scoring = AlignScoring {
+            match_s: scoring_vec[0],
+            mismatch: scoring_vec[1],
+            gap: scoring_vec[2],
+        };
+        for (variant, field) in [
+            (AlignVariant::Lcs, "lcs_table"),
+            (AlignVariant::Edit, "edit_table"),
+            (AlignVariant::Local, "local_table"),
+        ] {
+            let want = case.i64_vec_field(field).unwrap();
+            let p = AlignProblem::new(a.clone(), b.clone(), variant, scoring).unwrap();
+            assert_eq!(
+                pipedp::align::seq::solve(&p),
+                want,
+                "seq {variant:?} a={a:?} b={b:?}"
+            );
+            assert_eq!(
+                pipedp::align::wavefront::solve(&p),
+                want,
+                "wavefront {variant:?} a={a:?} b={b:?}"
+            );
+        }
     }
 }
 

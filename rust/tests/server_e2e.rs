@@ -6,7 +6,7 @@ use std::time::Duration;
 use pipedp::coordinator::batcher::Policy;
 use pipedp::coordinator::request::{Backend, Request, RequestBody};
 use pipedp::coordinator::server::{Client, Config, Server};
-use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
 use pipedp::core::schedule::McmVariant;
 use pipedp::core::semigroup::Op;
 
@@ -86,6 +86,126 @@ fn mcm_round_trip_with_table() {
     let table = resp.table.unwrap();
     assert_eq!(table.len(), 21); // 6·7/2 cells
     assert_eq!(*table.last().unwrap(), 15125);
+}
+
+/// The tentpole acceptance check: an `align` request round-trips through
+/// the live coordinator (accept thread → batcher → pool → router →
+/// wavefront executor) for all three variants, with correct scalars and
+/// tables.
+#[test]
+fn align_round_trip_all_variants() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    // LCS: value is the corner cell; full table comes back
+    let lcs = AlignProblem::lcs(vec![1, 2, 3, 4, 7], vec![2, 3, 9, 4]).unwrap();
+    let want_table = pipedp::align::seq::solve(&lcs);
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Align(lcs.clone()),
+            backend: Backend::Native,
+            full: true,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 3);
+    assert_eq!(resp.served_by, "native:align_wavefront");
+    assert_eq!(resp.table.unwrap(), want_table);
+
+    // edit distance through the auto route (small grid → native)
+    let edit = AlignProblem::new(
+        vec![10, 8, 19, 19, 4, 13],
+        vec![18, 8, 19, 19, 8, 13, 6],
+        AlignVariant::Edit,
+        AlignScoring::default(),
+    )
+    .unwrap();
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Align(edit),
+            backend: Backend::Auto,
+            full: false,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 3); // levenshtein("kitten", "sitting")
+
+    // local alignment: the wire value is the table max, not the corner
+    let local = AlignProblem::new(
+        vec![9, 1, 2, 3, 9],
+        vec![7, 1, 2, 3],
+        AlignVariant::Local,
+        AlignScoring::default(),
+    )
+    .unwrap();
+    let want = pipedp::align::seq::score(&local);
+    assert_eq!(want, 6);
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Align(local),
+            backend: Backend::Native,
+            full: false,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, want);
+}
+
+/// Repeated align shapes must be served from the process-wide schedule
+/// cache, exactly like MCM sizes.
+#[test]
+fn align_schedule_cache_serves_repeated_shapes() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    // distinctive 43×29 grid: no other test touches this shape
+    let mut rng = pipedp::util::rng::Rng::seeded(61);
+    let p = AlignProblem::random(&mut rng, 29..44, 4, AlignVariant::Lcs);
+    let want = pipedp::align::seq::score(&p);
+    let call = |client: &mut Client, p: &AlignProblem| {
+        client
+            .call(Request {
+                id: 0,
+                body: RequestBody::Align(p.clone()),
+                backend: Backend::Native,
+                full: false,
+            })
+            .unwrap()
+    };
+    let first = call(&mut client, &p);
+    assert!(first.ok);
+    assert_eq!(first.value, want);
+    let hits_before = {
+        let resp = client
+            .call(Request {
+                id: 0,
+                body: RequestBody::Stats,
+                backend: Backend::Auto,
+                full: false,
+            })
+            .unwrap();
+        resp.stats.unwrap().i64_field("sched_cache_hits").unwrap()
+    };
+    let second = call(&mut client, &p);
+    assert!(second.ok);
+    assert_eq!(second.value, want);
+    let hits_after = {
+        let resp = client
+            .call(Request {
+                id: 0,
+                body: RequestBody::Stats,
+                backend: Backend::Auto,
+                full: false,
+            })
+            .unwrap();
+        resp.stats.unwrap().i64_field("sched_cache_hits").unwrap()
+    };
+    assert!(
+        hits_after > hits_before,
+        "repeat align shape must hit the schedule cache ({hits_before} -> {hits_after})"
+    );
 }
 
 #[test]
