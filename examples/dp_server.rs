@@ -37,6 +37,7 @@ fn main() -> pipedp::Result<()> {
         allow_engineless: true,
         warm: true,
         queue_cap: 0, // PIPEDP_POOL_QUEUE_CAP or the built-in default
+        exec_threads: 0, // PIPEDP_EXEC_THREADS or available parallelism
     })?;
     println!("coordinator listening on {}", server.local_addr);
     // §Perf: without this, the first request per bucket pays PJRT compile

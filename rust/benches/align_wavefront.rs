@@ -2,9 +2,12 @@
 //! two ways.
 //!
 //! * **Wall-clock (ns/cell)**: sequential row-major oracle vs the fused
-//!   wavefront sweep over the flat arena vs the threaded executor, on
-//!   square grids (every executor is verified against the oracle before
-//!   timing).
+//!   wavefront sweep over the flat arena vs the pooled block-tiled
+//!   executor on the persistent exec pool (DESIGN.md §7), on square
+//!   grids (every executor is verified against the oracle before
+//!   timing).  The measured seq/fused/pooled costs are installed as the
+//!   adaptive policy's align table and each JSON row records the choice
+//!   it makes at that size.
 //! * **GPU cost model**: the anti-diagonal wavefront trace vs the host
 //!   sequential trace on the calibrated GTX-TITAN-Black model
 //!   ([`pipedp::simulator`]) at band sizes the paper's Table I uses —
@@ -17,8 +20,9 @@
 //!      drops the larger grids.
 
 use pipedp::bench::{measure, Config};
+use pipedp::core::policy::{ExecutorChoice, PolicyTable, Workload};
 use pipedp::core::problem::AlignProblem;
-use pipedp::core::schedule::AlignSchedule;
+use pipedp::core::schedule::{default_align_tile, AlignSchedule};
 use pipedp::simulator::{self, GpuModel};
 use pipedp::util::json::Json;
 use pipedp::util::rng::Rng;
@@ -30,7 +34,8 @@ fn ns_per_cell(mean: std::time::Duration, cells: usize) -> f64 {
 
 fn main() {
     let emit_json = std::env::args().any(|a| a == "--json");
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let threads = pipedp::runtime::exec_pool::default_threads();
+    let pool = pipedp::runtime::exec_pool::global_with_hint(threads);
     let cfg = Config::from_env();
     let max_n: usize = std::env::var("PIPEDP_BENCH_MAX_N")
         .ok()
@@ -42,9 +47,11 @@ fn main() {
         "grid",
         "SEQ row-major",
         "WAVEFRONT flat",
-        "WAVEFRONT threaded",
+        "WAVEFRONT pooled (tile)",
+        "policy",
     ]);
     let mut results: Vec<Json> = Vec::new();
+    let mut policy = PolicyTable::uncalibrated(threads);
 
     for n in [64usize, 256, 1024] {
         if n > max_n {
@@ -56,6 +63,8 @@ fn main() {
         let p = AlignProblem::lcs(a, b).expect("valid instance");
         let cells = n * n;
         let sched = AlignSchedule::compile(n, n);
+        let tile = default_align_tile(n, n);
+        let tiled = AlignSchedule::compile_tiled(n, n, tile);
         let truth = pipedp::align::seq::solve(&p);
         assert_eq!(
             pipedp::align::wavefront::execute(&p, &sched),
@@ -63,9 +72,9 @@ fn main() {
             "n={n}: wavefront diverged from the oracle"
         );
         assert_eq!(
-            pipedp::align::wavefront::execute_threaded(&p, &sched, threads),
+            pipedp::align::wavefront::execute_pooled(&p, &tiled, pool, threads),
             truth,
-            "n={n}: threaded wavefront diverged from the oracle"
+            "n={n}: pooled block wavefront diverged from the oracle"
         );
 
         let (seq_stats, _) = measure(&cfg, || {
@@ -74,28 +83,44 @@ fn main() {
         let (wave_stats, _) = measure(&cfg, || {
             *pipedp::align::wavefront::execute(&p, &sched).last().unwrap() as u64
         });
-        let (thr_stats, _) = measure(&cfg, || {
-            *pipedp::align::wavefront::execute_threaded(&p, &sched, threads)
+        let (pooled_stats, _) = measure(&cfg, || {
+            *pipedp::align::wavefront::execute_pooled(&p, &tiled, pool, threads)
                 .last()
                 .unwrap() as u64
         });
 
         let seq = ns_per_cell(seq_stats.mean, cells);
         let wave = ns_per_cell(wave_stats.mean, cells);
-        let thr = ns_per_cell(thr_stats.mean, cells);
+        let pooled = ns_per_cell(pooled_stats.mean, cells);
+        policy.push_measurement(
+            Workload::Align,
+            n,
+            vec![
+                (ExecutorChoice::Seq, seq),
+                (ExecutorChoice::Fused, wave),
+                (ExecutorChoice::Pooled, pooled),
+            ],
+        );
+        let choice =
+            pipedp::core::policy::CrossoverTable::row_winner(policy.align.rows().last().unwrap());
         table.row(vec![
             format!("{n}x{n}"),
             format!("{seq:.2}"),
             format!("{wave:.2}"),
-            format!("{thr:.2}"),
+            format!("{pooled:.2} (B={tile})"),
+            choice.name().to_string(),
         ]);
         results.push(Json::obj(vec![
             ("n", Json::int(n as i64)),
             ("seq", Json::num(seq)),
             ("wavefront", Json::num(wave)),
-            ("threaded", Json::num(thr)),
+            ("threaded", Json::num(pooled)),
+            ("tile", Json::int(tile as i64)),
+            ("policy", Json::str(choice.name())),
         ]));
     }
+    // this run is the align table's full-scale calibration pass
+    pipedp::core::policy::install(policy);
 
     println!("\n== alignment wavefront, ns/cell (threads={threads}) ==");
     println!("{}", table.render());

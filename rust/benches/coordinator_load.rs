@@ -50,6 +50,7 @@ fn main() {
         allow_engineless: true,
         warm: false,
         queue_cap: 32,
+        exec_threads: 0,
     })
     .expect("server starts");
     let addr = server.local_addr.to_string();

@@ -1,25 +1,41 @@
 //! E10 — schedule representation ablation: the flat structure-of-arrays
 //! arena (this repo, DESIGN.md §Perf) vs the seed's nested
 //! `Vec<Vec<Entry>>` schedule, plus the surrounding MCM executor field
-//! (sequential DP, diagonal wavefront, threaded pipeline) — all in
-//! ns/cell so sizes are comparable.
+//! (sequential DP, diagonal wavefront, pooled superstep-tiled threaded
+//! pipeline) — all in ns/cell so sizes are comparable.
 //!
 //! The nested baseline is a faithful copy of the seed: per-step
 //! `Vec<Entry>` (28-byte AoS rows, one heap allocation per outer step,
 //! `BTreeMap` materialization) with the two-phase strided executor it
 //! shipped with.  At n = 1024 either representation holds ~179M terms
-//! (~5 GB), so the two are built and measured sequentially, never held
-//! at the same time.
+//! (~5 GB), so schedules are built and measured one at a time, never two
+//! held together.
+//!
+//! The `threaded` column runs [`pipedp::mcm::pipeline::execute_pooled`]
+//! on the process-wide persistent [`pipedp::runtime::exec_pool`] over a
+//! superstep-tiled schedule — steady-state execution, not per-solve
+//! spawn cost (DESIGN.md §7; the seed's scoped-thread executor measured
+//! 1460 ns/cell at n = 64, all of it synchronization).
+//!
+//! The run doubles as the full-scale calibration pass for the adaptive
+//! executor policy: the measured seq/fused/pooled costs are installed as
+//! a [`pipedp::core::policy::PolicyTable`] and each JSON row records the
+//! choice the policy makes at that size — by construction the measured
+//! winner.
 //!
 //! Run: `cargo bench --bench schedule_repr`          (table to stdout)
 //!      `cargo bench --bench schedule_repr -- --json` (also writes
 //!      BENCH_pipeline.json at the repo root)
 //! Env: `PIPEDP_BENCH_FAST=1` shrinks runs; `PIPEDP_BENCH_MAX_N=256`
-//!      drops the larger sizes (memory-constrained machines).
+//!      drops the larger sizes (memory-constrained machines);
+//!      `PIPEDP_EXEC_THREADS` sizes the persistent pool.
 
 use pipedp::bench::{measure, Config};
+use pipedp::core::policy::{ExecutorChoice, PolicyTable, Workload};
 use pipedp::core::problem::McmProblem;
-use pipedp::core::schedule::{cell_terms, linear, Entry, McmSchedule, McmVariant};
+use pipedp::core::schedule::{
+    cell_terms, default_mcm_tile, linear, Entry, McmSchedule, McmVariant,
+};
 use pipedp::util::json::Json;
 use pipedp::util::rng::Rng;
 use pipedp::util::table::Table;
@@ -112,9 +128,21 @@ fn ns_per_cell(mean: std::time::Duration, n: usize) -> f64 {
     mean.as_nanos() as f64 / linear::num_cells(n) as f64
 }
 
+struct SizeResult {
+    n: usize,
+    tile: usize,
+    seq: f64,
+    diag: f64,
+    nested: f64,
+    flat2p: f64,
+    flat: f64,
+    pooled: f64,
+}
+
 fn main() {
     let emit_json = std::env::args().any(|a| a == "--json");
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let threads = pipedp::runtime::exec_pool::default_threads();
+    let pool = pipedp::runtime::exec_pool::global_with_hint(threads);
     let cfg = Config::from_env();
     let max_n: usize = std::env::var("PIPEDP_BENCH_MAX_N")
         .ok()
@@ -122,19 +150,7 @@ fn main() {
         .unwrap_or(1024);
     let mut rng = Rng::seeded(31);
 
-    let mut table = Table::new(vec![
-        "n",
-        "SEQ O(n³)",
-        "DIAGONAL",
-        "PIPE nested (seed)",
-        "PIPE flat 2-phase",
-        "PIPE flat (shipped)",
-        "PIPE threaded",
-        "flat/nested",
-    ]);
-    let mut results: Vec<Json> = Vec::new();
-    let mut speedup_1024 = 0.0f64;
-
+    let mut measured: Vec<SizeResult> = Vec::new();
     for n in [64usize, 256, 1024] {
         if n > max_n {
             println!("skipping n={n} (PIPEDP_BENCH_MAX_N={max_n})");
@@ -143,7 +159,7 @@ fn main() {
         let p = McmProblem::random(&mut rng, n, 40);
         let truth = pipedp::mcm::seq::linear_table(&p);
 
-        // --- flat arena first ------------------------------------------
+        // --- flat arena (untiled) --------------------------------------
         let sched = McmSchedule::compile(n, McmVariant::Corrected);
         assert_eq!(
             pipedp::mcm::pipeline::execute(&p, &sched),
@@ -161,16 +177,25 @@ fn main() {
         let (flat2p_stats, _) = measure(&cfg, || {
             *execute_flat_two_phase(&p, &sched, n).last().unwrap() as u64
         });
-        let (thr_stats, _) = measure(&cfg, || {
-            *pipedp::mcm::pipeline::execute_threaded(&p, &sched, threads)
+        let start = sched.start.clone();
+        drop(sched);
+
+        // --- pooled superstep-tiled executor on the persistent pool ----
+        let tile = default_mcm_tile(n);
+        let tiled = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+        assert_eq!(
+            pipedp::mcm::pipeline::execute_pooled(&p, &tiled, pool, threads),
+            truth,
+            "n={n}: pooled tiled executor diverged from the DP oracle"
+        );
+        let (pooled_stats, _) = measure(&cfg, || {
+            *pipedp::mcm::pipeline::execute_pooled(&p, &tiled, pool, threads)
                 .last()
                 .unwrap() as u64
         });
+        drop(tiled);
 
-        // --- nested seed baseline (flat dropped first: either schedule
-        // is ~5 GB at n = 1024, never hold both) ------------------------
-        let start = sched.start.clone();
-        drop(sched);
+        // --- nested seed baseline (one ~5 GB schedule at a time) -------
         let nested = materialize_nested(n, &start);
         assert_eq!(
             execute_nested(&p, &nested, n),
@@ -190,34 +215,75 @@ fn main() {
             *pipedp::mcm::diagonal::solve(&p).last().unwrap() as u64
         });
 
-        let seq = ns_per_cell(seq_stats.mean, n);
-        let diag = ns_per_cell(diag_stats.mean, n);
-        let nested_ns = ns_per_cell(nested_stats.mean, n);
-        let flat2p = ns_per_cell(flat2p_stats.mean, n);
-        let flat = ns_per_cell(flat_stats.mean, n);
-        let thr = ns_per_cell(thr_stats.mean, n);
-        let ratio = nested_ns / flat;
-        if n == 1024 {
+        measured.push(SizeResult {
+            n,
+            tile,
+            seq: ns_per_cell(seq_stats.mean, n),
+            diag: ns_per_cell(diag_stats.mean, n),
+            nested: ns_per_cell(nested_stats.mean, n),
+            flat2p: ns_per_cell(flat2p_stats.mean, n),
+            flat: ns_per_cell(flat_stats.mean, n),
+            pooled: ns_per_cell(pooled_stats.mean, n),
+        });
+    }
+
+    // install the measured costs as the adaptive policy — this run IS the
+    // full-scale calibration pass — and record the per-size choice
+    let mut policy = PolicyTable::uncalibrated(threads);
+    for r in &measured {
+        policy.push_measurement(
+            Workload::Mcm,
+            r.n,
+            vec![
+                (ExecutorChoice::Seq, r.seq),
+                (ExecutorChoice::Fused, r.flat),
+                (ExecutorChoice::Pooled, r.pooled),
+            ],
+        );
+    }
+    pipedp::core::policy::install(policy);
+    let policy = pipedp::core::policy::current();
+
+    let mut table = Table::new(vec![
+        "n",
+        "SEQ O(n³)",
+        "DIAGONAL",
+        "PIPE nested (seed)",
+        "PIPE flat 2-phase",
+        "PIPE flat (shipped)",
+        "PIPE pooled (tile)",
+        "flat/nested",
+        "policy",
+    ]);
+    let mut results: Vec<Json> = Vec::new();
+    let mut speedup_1024 = 0.0f64;
+    for r in &measured {
+        let ratio = r.nested / r.flat;
+        if r.n == 1024 {
             speedup_1024 = ratio;
         }
+        let choice = policy.band_choice(Workload::Mcm, r.n);
         table.row(vec![
-            n.to_string(),
-            format!("{seq:.1}"),
-            format!("{diag:.1}"),
-            format!("{nested_ns:.1}"),
-            format!("{flat2p:.1}"),
-            format!("{flat:.1}"),
-            format!("{thr:.1}"),
+            r.n.to_string(),
+            format!("{:.1}", r.seq),
+            format!("{:.1}", r.diag),
+            format!("{:.1}", r.nested),
+            format!("{:.1}", r.flat2p),
+            format!("{:.1}", r.flat),
+            format!("{:.1} (T={})", r.pooled, r.tile),
             format!("{ratio:.2}×"),
+            choice.name().to_string(),
         ]);
         results.push(Json::obj(vec![
-            ("n", Json::int(n as i64)),
-            ("seq", Json::num(seq)),
-            ("diagonal", Json::num(diag)),
-            ("pipeline_nested", Json::num(nested_ns)),
-            ("pipeline_two_phase", Json::num(flat2p)),
-            ("pipeline", Json::num(flat)),
-            ("threaded", Json::num(thr)),
+            ("n", Json::int(r.n as i64)),
+            ("seq", Json::num(r.seq)),
+            ("diagonal", Json::num(r.diag)),
+            ("pipeline_nested", Json::num(r.nested)),
+            ("pipeline_two_phase", Json::num(r.flat2p)),
+            ("pipeline", Json::num(r.flat)),
+            ("threaded", Json::num(r.pooled)),
+            ("tile", Json::int(r.tile as i64)),
+            ("policy", Json::str(choice.name())),
         ]));
     }
 
@@ -229,6 +295,11 @@ fn main() {
              (flat 2-phase column isolates layout; the rest is gather/combine fusion)"
         );
     }
+    let pool_stats = pool.stats();
+    println!(
+        "persistent pool: {} threads, {} pooled solves this run",
+        pool_stats.threads, pool_stats.solves
+    );
 
     if emit_json {
         let doc = Json::obj(vec![
@@ -236,6 +307,22 @@ fn main() {
             ("unit", Json::str("ns_per_cell")),
             ("threads", Json::int(threads as i64)),
             ("variant", Json::str("corrected")),
+            (
+                "note",
+                Json::str(
+                    "reference run; regenerate with `cargo bench --bench schedule_repr -- \
+                     --json` (PIPEDP_BENCH_FAST=1 to shrink, PIPEDP_BENCH_MAX_N=256 on \
+                     small-memory machines, PIPEDP_EXEC_THREADS to size the pool). \
+                     `pipeline` is the fused flat-arena executor; `pipeline_two_phase` runs \
+                     the flat arena under the seed's two-phase memory model to isolate the \
+                     layout effect from fusion; `threaded` is the pooled superstep-tiled \
+                     executor on the persistent exec pool (steady state — resident workers, \
+                     sense-reversing barrier once per superstep of `tile` steps), not the \
+                     seed's spawn-per-solve scoped threads; `policy` is the executor the \
+                     installed adaptive policy picks at that size (calibrated from this \
+                     run's own measurements, so it names the measured winner).",
+                ),
+            ),
             ("results", Json::arr(results)),
             (
                 "speedup_flat_vs_nested_n1024",

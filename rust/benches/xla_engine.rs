@@ -109,6 +109,7 @@ fn main() {
             allow_engineless: true,
             warm: true,
             queue_cap: 0,
+            exec_threads: 0,
         })
         .expect("server");
         let addr = server.local_addr.to_string();

@@ -16,7 +16,8 @@ use std::sync::Barrier;
 use crate::align::seq;
 use crate::core::cache;
 use crate::core::problem::AlignProblem;
-use crate::core::schedule::AlignSchedule;
+use crate::core::schedule::{default_align_tile, AlignSchedule};
+use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
 use crate::sdp::naive::SharedTable;
 
 /// Step-synchronous executor over a compiled schedule: one fused flat
@@ -73,6 +74,14 @@ pub fn execute_threaded(p: &AlignProblem, sched: &AlignSchedule, threads: usize)
         (sched.rows, sched.cols),
         "schedule/problem size mismatch"
     );
+    // a block-tiled schedule's "steps" have intra-step dependencies
+    // (cells within a block); splitting their lanes into per-thread
+    // chunks would race — only the unit-aware pooled executor may run
+    // tiled schedules
+    assert_eq!(
+        sched.tile, 1,
+        "execute_threaded requires an untiled schedule; use execute_pooled for tiled ones"
+    );
     let threads = threads.max(1).min(sched.max_width().max(1));
     if threads == 1 {
         return execute(p, sched);
@@ -120,6 +129,114 @@ pub fn execute_threaded(p: &AlignProblem, sched: &AlignSchedule, threads: usize)
         }
     });
     st
+}
+
+/// Pooled tiled executor (DESIGN.md §7): resident [`ExecPool`] workers,
+/// one [`SenseBarrier`] wait per step.  On a blocked schedule
+/// (`tile > 1`) a step is a *block-anti-diagonal* and workers claim whole
+/// blocks round-robin — each block is swept sequentially in row-major
+/// order (which satisfies every intra-block dependency), blocks of one
+/// diagonal are mutually independent, so `⌈m/B⌉ + ⌈n/B⌉ − 1` barriers
+/// replace the cell-wavefront's `m + n − 1`
+/// ([`crate::core::conflict::align_tile_hazards`] proves the fusion).
+/// On an untiled schedule each *lane* is a unit (classic wavefront,
+/// barrier per anti-diagonal) — correct, but without the barrier
+/// amortization.
+pub fn execute_pooled(
+    p: &AlignProblem,
+    sched: &AlignSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> Vec<i64> {
+    execute_pooled_counted(p, sched, pool, threads).0
+}
+
+/// [`execute_pooled`] + the number of barrier rounds it cost (the
+/// sync-budget hook the superstep tests assert on).
+pub fn execute_pooled_counted(
+    p: &AlignProblem,
+    sched: &AlignSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<i64>, u64) {
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    let parties = threads.max(1).min(pool.threads());
+    if parties <= 1 {
+        return (execute(p, sched), 0);
+    }
+    let mut st = p.initial_table();
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let variant = p.variant;
+    let scoring = p.scoring;
+    let a = &p.a;
+    let b = &p.b;
+    let blocked = sched.tile > 1;
+    // one lane, fused: reads are of earlier diagonals or earlier lanes of
+    // the worker's own current block
+    let do_lane = |i: usize| {
+        // SAFETY: see the function docs; unit ownership keeps intra-block
+        // reads on the writing worker, everything else is finalized
+        // behind a barrier.
+        unsafe {
+            let v = seq::cell(
+                variant,
+                &scoring,
+                st_ptr.read(sched.up[i] as usize),
+                st_ptr.read(sched.left[i] as usize),
+                st_ptr.read(sched.diag[i] as usize),
+                a[sched.ai[i] as usize],
+                b[sched.bj[i] as usize],
+            );
+            st_ptr.write(sched.tgt[i] as usize, v);
+        }
+    };
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for s in 0..sched.num_steps() {
+            if blocked {
+                for (k, u) in sched.step_unit_range(s).enumerate() {
+                    if k % parties != t {
+                        continue;
+                    }
+                    for i in sched.unit_range(u) {
+                        do_lane(i);
+                    }
+                }
+            } else {
+                for (k, i) in sched.step_range(s).enumerate() {
+                    if k % parties != t {
+                        continue;
+                    }
+                    do_lane(i);
+                }
+            }
+            waiter.wait(); // end of (block-)anti-diagonal
+        }
+    });
+    (st, barrier.rounds())
+}
+
+/// Convenience: solve on the process-wide pool with the cached
+/// default-blocked schedule — the adaptive policy's `pooled` route.
+///
+/// Grids whose short side does not exceed the block tile have one block
+/// per diagonal — nothing to spread across workers — and fall back to
+/// the fused sweep (the policy keys align on the short side, so this is
+/// a belt-and-suspenders guard, not the normal path).
+pub fn solve_pooled(p: &AlignProblem) -> Vec<i64> {
+    let (rows, cols) = (p.rows(), p.cols());
+    let tile = default_align_tile(rows, cols);
+    if rows.min(cols) <= tile {
+        return solve(p);
+    }
+    let sched = cache::align_schedule_tiled(rows, cols, tile);
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled(p, &sched, pool, pool.threads())
 }
 
 /// Execution trace of the first `max_steps` wavefront steps (Fig. 7-style
@@ -193,6 +310,64 @@ mod tests {
     }
 
     #[test]
+    fn pooled_tiled_matches_oracle_across_threads() {
+        // the ISSUE's property matrix: block sizes × threads ∈
+        // {1, 2, 3, 8} × non-divisible grids × all variants, against the
+        // row-major oracle
+        let pool = ExecPool::new(8);
+        forall("align pooled == seq", 24, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..70, 4, v);
+            let tile = *g.choose(&[1usize, 2, 3, 8, 16]);
+            let threads = *g.choose(&[1usize, 2, 3, 8]);
+            let sched =
+                crate::core::schedule::AlignSchedule::compile_tiled(p.rows(), p.cols(), tile);
+            if execute_pooled(&p, &sched, &pool, threads) == seq::solve(&p) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{v:?} {}x{} tile={tile} threads={threads}",
+                    p.rows(),
+                    p.cols()
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_block_barrier_budget() {
+        // one barrier per block-diagonal: ⌈m/B⌉ + ⌈n/B⌉ − 1, itself
+        // ≤ ⌈(m + n − 1)/B⌉ — the superstep sync-reduction contract
+        let pool = ExecPool::new(3);
+        let mut rng = crate::util::rng::Rng::seeded(11);
+        for (rows, cols, tile) in [(17usize, 9usize, 4usize), (33, 33, 8), (5, 40, 3)] {
+            let a: Vec<i64> = (0..rows).map(|_| rng.range(0..4)).collect();
+            let b: Vec<i64> = (0..cols).map(|_| rng.range(0..4)).collect();
+            let p = AlignProblem::lcs(a, b).unwrap();
+            let sched =
+                crate::core::schedule::AlignSchedule::compile_tiled(rows, cols, tile);
+            let (st, rounds) = execute_pooled_counted(&p, &sched, &pool, 3);
+            assert_eq!(st, seq::solve(&p), "{rows}x{cols} tile={tile}");
+            assert_eq!(rounds as usize, sched.num_steps());
+            let untiled_steps = rows + cols - 1;
+            assert!(
+                (rounds as usize) <= untiled_steps.div_ceil(tile),
+                "{rows}x{cols} tile={tile}: {rounds} barriers for {untiled_steps} anti-diagonals"
+            );
+        }
+    }
+
+    #[test]
+    fn solve_pooled_matches_all_variants() {
+        let mut rng = crate::util::rng::Rng::seeded(23);
+        for v in AlignVariant::ALL {
+            let p = AlignProblem::random(&mut rng, 20..60, 4, v);
+            assert_eq!(solve_pooled(&p), seq::solve(&p), "{v:?}");
+        }
+    }
+
+    #[test]
     fn solve_uses_cached_schedule_and_matches() {
         let p = AlignProblem::lcs(vec![1, 2, 3, 4, 7], vec![2, 3, 9, 4]).unwrap();
         assert_eq!(solve(&p), seq::solve(&p));
@@ -236,6 +411,16 @@ mod tests {
         let p = AlignProblem::lcs(vec![1, 2], vec![3, 4]).unwrap();
         let t = trace(&p, 2);
         assert!(t.contains("T[1,1]"), "{t}");
+    }
+
+    #[test]
+    #[should_panic(expected = "untiled")]
+    fn threaded_rejects_tiled_schedules() {
+        // the per-step chunked executor's safety argument only holds for
+        // cell-level anti-diagonals; blocked schedules must be refused
+        let p = AlignProblem::lcs(vec![1, 2, 3, 4], vec![1, 2, 3, 4]).unwrap();
+        let sched = crate::core::schedule::AlignSchedule::compile_tiled(4, 4, 2);
+        execute_threaded(&p, &sched, 2);
     }
 
     #[test]

@@ -118,8 +118,14 @@ impl Metrics {
     pub fn snapshot(&self) -> Json {
         // schedule-cache health rides along in every stats response: the
         // cache is process-wide (crate::core::cache), so the snapshot is
-        // the coordinator's one observability window into it
+        // the coordinator's one observability window into it — likewise
+        // the adaptive executor policy's choice counters and the
+        // persistent exec pool's occupancy (DESIGN.md §7).  Pool stats
+        // are zero when no pooled solve has run yet: the stats path must
+        // not lazily spawn the pool's workers.
         let sched = crate::core::cache::global_stats();
+        let policy = crate::core::policy::stats();
+        let pool = crate::runtime::exec_pool::try_global_stats();
         Json::obj(vec![
             ("requests", Json::int(self.requests.load(Ordering::Relaxed) as i64)),
             ("errors", Json::int(self.errors.load(Ordering::Relaxed) as i64)),
@@ -135,6 +141,26 @@ impl Metrics {
             ("sched_cache_hits", Json::int(sched.hits as i64)),
             ("sched_cache_misses", Json::int(sched.misses as i64)),
             ("sched_cache_entries", Json::int(sched.entries as i64)),
+            ("policy_calibrated", Json::Bool(policy.calibrated)),
+            ("policy_seq", Json::int(policy.seq as i64)),
+            ("policy_fused", Json::int(policy.fused as i64)),
+            ("policy_pooled", Json::int(policy.pooled as i64)),
+            (
+                "exec_pool_threads",
+                Json::int(pool.map_or(0, |p| p.threads as i64)),
+            ),
+            (
+                "exec_pool_solves",
+                Json::int(pool.map_or(0, |p| p.solves as i64)),
+            ),
+            (
+                "exec_pool_active",
+                Json::int(pool.map_or(0, |p| p.active as i64)),
+            ),
+            (
+                "exec_pool_contended",
+                Json::int(pool.map_or(0, |p| p.contended as i64)),
+            ),
         ])
     }
 }
@@ -226,6 +252,22 @@ mod tests {
             );
             last = p;
         }
+    }
+
+    #[test]
+    fn snapshot_exposes_policy_and_pool_fields() {
+        let m = Metrics::default();
+        let snap = m.snapshot();
+        // the fields exist and are well-typed even before any pooled
+        // solve ran (pool stats default to zero, never spawn the pool)
+        assert!(snap.i64_field("policy_seq").unwrap() >= 0);
+        assert!(snap.i64_field("policy_fused").unwrap() >= 0);
+        assert!(snap.i64_field("policy_pooled").unwrap() >= 0);
+        assert!(snap.get("policy_calibrated").unwrap().as_bool().is_some());
+        assert!(snap.i64_field("exec_pool_threads").unwrap() >= 0);
+        assert!(snap.i64_field("exec_pool_solves").unwrap() >= 0);
+        assert!(snap.i64_field("exec_pool_active").unwrap() >= 0);
+        assert!(snap.i64_field("exec_pool_contended").unwrap() >= 0);
     }
 
     #[test]

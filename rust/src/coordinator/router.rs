@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::request::{Backend, Request, RequestBody, Response};
+use crate::core::policy::{self, ExecutorChoice, Workload};
 use crate::core::problem::{AlignProblem, McmProblem, SdpProblem};
 use crate::core::schedule::McmVariant;
 use crate::runtime::engine::Engine;
@@ -95,8 +96,14 @@ impl Router {
 
     /// Execute one request (already routed).
     pub fn execute(&self, req: &Request, route: Route) -> Response {
+        self.execute_with_batch(req, route, 1)
+    }
+
+    /// [`Router::execute`] with the same-kind group width threaded
+    /// through to the native policy (see [`Router::execute_native`]).
+    fn execute_with_batch(&self, req: &Request, route: Route, batch: usize) -> Response {
         let result = match route {
-            Route::Native => self.execute_native(req),
+            Route::Native => self.execute_native(req, batch),
             Route::Xla => self.execute_xla(req),
         };
         match result {
@@ -105,20 +112,76 @@ impl Router {
         }
     }
 
-    fn execute_native(&self, req: &Request) -> Result<Response> {
+    /// Native execution through the adaptive executor policy
+    /// (DESIGN.md §7): every request takes the empirically fastest of
+    /// seq / fused / pooled for its kind and size, and the chosen
+    /// executor is recorded in `served_by` (e.g.
+    /// `native:mcm_pipeline_corrected[pooled]`) so clients and tests can
+    /// observe the decision.  `batch` is the same-kind group width the
+    /// request arrived in — wide groups bias the policy away from the
+    /// shared pool (it would serialize them).
+    fn execute_native(&self, req: &Request, batch: usize) -> Result<Response> {
+        let table = policy::current();
         match &req.body {
             RequestBody::Sdp(p) => {
-                let st = crate::sdp::pipeline::solve(p);
-                Ok(self.done(req, st, "native:sdp_pipeline"))
+                // keyed by k: the S-DP pipeline's parallelism is its lane
+                // count, not the table length — a long, narrow pipe has
+                // nothing for the pooled executor to spread
+                let choice = table.choose(Workload::Sdp, p.k(), batch);
+                let st = match choice {
+                    ExecutorChoice::Seq => crate::sdp::seq::solve(p),
+                    ExecutorChoice::Fused => crate::sdp::pipeline::solve(p),
+                    ExecutorChoice::Pooled => crate::sdp::pipeline::solve_pooled(p),
+                };
+                Ok(self.done(
+                    req,
+                    st,
+                    &format!("native:sdp_pipeline[{}]", choice.name()),
+                ))
             }
-            RequestBody::Mcm { problem, variant } => {
-                let st = crate::mcm::pipeline::solve(problem, *variant);
-                Ok(self.done(req, st, &format!("native:mcm_pipeline_{}", variant.name())))
-            }
+            RequestBody::Mcm { problem, variant } => match variant {
+                McmVariant::Corrected => {
+                    let choice = table.choose(Workload::Mcm, problem.n(), batch);
+                    let st = match choice {
+                        ExecutorChoice::Seq => crate::mcm::seq::linear_table(problem),
+                        ExecutorChoice::Fused => {
+                            crate::mcm::pipeline::solve(problem, McmVariant::Corrected)
+                        }
+                        ExecutorChoice::Pooled => crate::mcm::pipeline::solve_pooled(problem),
+                    };
+                    Ok(self.done(
+                        req,
+                        st,
+                        &format!("native:mcm_pipeline_corrected[{}]", choice.name()),
+                    ))
+                }
+                // the faithful variant reproduces the published schedule's
+                // stale-read semantics — only the two-phase pipeline
+                // executor realizes those, so the policy does not apply
+                McmVariant::PaperFaithful => {
+                    let st = crate::mcm::pipeline::solve(problem, McmVariant::PaperFaithful);
+                    Ok(self.done(req, st, "native:mcm_pipeline_faithful"))
+                }
+            },
             RequestBody::Align(p) => {
-                let st = crate::align::wavefront::solve(p);
+                // keyed by the SHORT side: the wavefront's parallelism is
+                // min(m, n), so a skinny grid has nothing for the pooled
+                // block executor to spread and belongs to seq/fused even
+                // when its long side is huge
+                let choice =
+                    table.choose(Workload::Align, p.rows().min(p.cols()), batch);
+                let st = match choice {
+                    ExecutorChoice::Seq => crate::align::seq::solve(p),
+                    ExecutorChoice::Fused => crate::align::wavefront::solve(p),
+                    ExecutorChoice::Pooled => crate::align::wavefront::solve_pooled(p),
+                };
                 let value = p.scalar(&st); // local alignment's scalar is the max, not the corner
-                Ok(self.done_scored(req, value, st, "native:align_wavefront"))
+                Ok(self.done_scored(
+                    req,
+                    value,
+                    st,
+                    &format!("native:align_wavefront[{}]", choice.name()),
+                ))
             }
             RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
         }
@@ -153,14 +216,19 @@ impl Router {
     }
 
     /// Execute a group of same-bucket requests, batched when a batch
-    /// artifact exists; falls back to per-request execution.
+    /// artifact exists; falls back to per-request execution (native
+    /// fallbacks tell the policy the group width so it spreads wide
+    /// groups across pool-free executors).
     pub fn execute_group(&self, reqs: &[Request], route: Route) -> Vec<Response> {
         if route == Route::Xla && reqs.len() > 1 {
             if let Some(responses) = self.try_execute_batched(reqs) {
                 return responses;
             }
         }
-        reqs.iter().map(|r| self.execute(r, route)).collect()
+        let batch = reqs.len();
+        reqs.iter()
+            .map(|r| self.execute_with_batch(r, route, batch))
+            .collect()
     }
 
     fn try_execute_batched(&self, reqs: &[Request]) -> Option<Vec<Response>> {
@@ -390,7 +458,11 @@ mod tests {
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
         assert_eq!(resp.value, 3);
-        assert_eq!(resp.served_by, "native:align_wavefront");
+        assert!(
+            resp.served_by.starts_with("native:align_wavefront["),
+            "policy choice must be visible: {}",
+            resp.served_by
+        );
         assert_eq!(resp.table.unwrap().len(), 6 * 5);
         // local alignment: the value is the table max, not the corner
         let p = AlignProblem::new(
@@ -411,6 +483,80 @@ mod tests {
         assert!(resp.ok);
         assert_eq!(resp.value, want);
         assert_eq!(want, 6); // run {1,2,3} × match_s 2
+    }
+
+    #[test]
+    fn native_served_by_reports_policy_choice() {
+        // whatever the installed policy picks, the suffix must name one
+        // of the three executors and the answer must match the oracle
+        let r = Router::new(None);
+        let p = McmProblem::clrs();
+        let want = crate::mcm::seq::cost(&p);
+        let req = Request {
+            id: 7,
+            body: RequestBody::Mcm {
+                problem: p,
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: false,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok);
+        assert_eq!(resp.value, want);
+        let suffix_ok = ["[seq]", "[fused]", "[pooled]"]
+            .iter()
+            .any(|s| resp.served_by.ends_with(s));
+        assert!(
+            resp.served_by.starts_with("native:mcm_pipeline_corrected[") && suffix_ok,
+            "{}",
+            resp.served_by
+        );
+    }
+
+    #[test]
+    fn every_policy_choice_solves_correctly_via_router() {
+        // pin each choice through an explicit table: all three executors
+        // answer identically through the native path
+        use crate::core::policy::{ExecutorChoice, PolicyTable, Workload};
+        let _guard = crate::core::policy::test_install_lock()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let r = Router::new(None);
+        let p = McmProblem::clrs();
+        let want = crate::mcm::seq::cost(&p);
+        for choice in ExecutorChoice::ALL {
+            let mut t = PolicyTable::uncalibrated(4);
+            // a single row whose winner is the pinned choice at any size
+            let costs = ExecutorChoice::ALL
+                .iter()
+                .map(|&c| (c, if c == choice { 1.0 } else { 2.0 }))
+                .collect();
+            t.push_measurement(Workload::Mcm, 6, costs);
+            crate::core::policy::install(t);
+            let req = Request {
+                id: 8,
+                body: RequestBody::Mcm {
+                    problem: p.clone(),
+                    variant: McmVariant::Corrected,
+                },
+                backend: Backend::Native,
+                full: false,
+            };
+            let resp = r.execute(&req, Route::Native);
+            assert!(resp.ok, "{choice:?}");
+            assert_eq!(resp.value, want, "{choice:?}");
+            // a pinned Pooled choice may legitimately report [fused] if a
+            // concurrent test keeps the shared pool busy at this instant
+            // (the deterministic downgrade logic is unit-tested in
+            // core::policy); seq/fused are never rerouted
+            let served_ok = resp.served_by.ends_with(&format!("[{}]", choice.name()))
+                || (choice == ExecutorChoice::Pooled
+                    && resp.served_by.ends_with("[fused]"));
+            assert!(served_ok, "{choice:?}: {}", resp.served_by);
+        }
+        // leave a clean slate for other tests in this process
+        crate::core::policy::install(PolicyTable::uncalibrated(4));
     }
 
     #[test]

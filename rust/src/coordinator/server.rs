@@ -42,6 +42,12 @@ pub struct Config {
     /// typed `overloaded` reply.  `0` means `PIPEDP_POOL_QUEUE_CAP` or
     /// the built-in default ([`crate::coordinator::pool::DEFAULT_QUEUE_CAP`]).
     pub queue_cap: usize,
+    /// Total parallelism of the persistent DP execution pool
+    /// ([`crate::runtime::exec_pool`]) used by pooled native solves.
+    /// `0` means `PIPEDP_EXEC_THREADS` or the machine's available
+    /// parallelism.  First server in a process wins (the pool is
+    /// process-wide).
+    pub exec_threads: usize,
 }
 
 impl Default for Config {
@@ -53,6 +59,7 @@ impl Default for Config {
             allow_engineless: true,
             warm: true,
             queue_cap: 0,
+            exec_threads: 0,
         }
     }
 }
@@ -130,88 +137,120 @@ impl Server {
             Err(e) => return Err(e),
         };
         let stop = Arc::new(AtomicBool::new(false));
-        let warmed = Arc::new(AtomicBool::new(!cfg.warm || engine.is_none()));
+        // the process-wide persistent execution pool for pooled native
+        // solves; sized here (first server wins) so warmup calibration
+        // and serving use the same parallelism
+        let exec_pool = crate::runtime::exec_pool::global_with_hint(cfg.exec_threads);
+        let warmed = Arc::new(AtomicBool::new(!cfg.warm));
         let mut warm_handle = None;
         if cfg.warm {
-            if let Some(engine) = engine.clone() {
+            let engine_for_warm = engine.clone();
+            {
                 let warmed = warmed.clone();
                 let stop = stop.clone();
                 let handle = std::thread::Builder::new()
                     .name("pipedp-warmup".into())
                     .spawn(move || {
-                        // abandon warming between buckets when the server
-                        // shuts down — `stop_and_drain` joins this thread,
-                        // and a fresh shutdown must not wait out every
-                        // remaining PJRT compile
-                        let n = engine.warm_all_while(|| !stop.load(Ordering::Relaxed));
-                        // Pre-warm the process-wide schedule cache for every
-                        // schedule-executor bucket so the first pipeline
-                        // request per size pays neither PJRT compile nor
-                        // schedule compile latency.  Ascending by n, and
-                        // skipping sizes whose term count exceeds the cache
-                        // budget: warming those would either thrash the
-                        // smaller entries or never stick at all.
-                        let cache_stats = crate::core::cache::global_stats();
-                        let budget = cache_stats.term_budget;
-                        let max_entries = cache_stats.capacity;
-                        let mut sizes: Vec<usize> = engine
-                            .registry
-                            .artifacts
-                            .iter()
-                            .filter(|s| s.sched_steps > 0)
-                            .map(|s| s.n)
-                            .collect();
-                        sizes.sort_unstable();
-                        sizes.dedup();
+                        let mut executables = 0usize;
                         let mut scheds = 0usize;
-                        let mut warmed_terms = 0usize;
-                        for n in sizes {
-                            if stop.load(Ordering::Relaxed) {
-                                break;
+                        if let Some(engine) = engine_for_warm {
+                            // abandon warming between buckets when the
+                            // server shuts down — `stop_and_drain` joins
+                            // this thread, and a fresh shutdown must not
+                            // wait out every remaining PJRT compile
+                            executables =
+                                engine.warm_all_while(|| !stop.load(Ordering::Relaxed));
+                            // Pre-warm the process-wide schedule cache for
+                            // every schedule-executor bucket so the first
+                            // pipeline request per size pays neither PJRT
+                            // compile nor schedule compile latency.
+                            // Ascending by n, and skipping sizes whose term
+                            // count exceeds the cache budget: warming those
+                            // would either thrash the smaller entries or
+                            // never stick at all.
+                            let cache_stats = crate::core::cache::global_stats();
+                            let budget = cache_stats.term_budget;
+                            let max_entries = cache_stats.capacity;
+                            let mut sizes: Vec<usize> = engine
+                                .registry
+                                .artifacts
+                                .iter()
+                                .filter(|s| s.sched_steps > 0)
+                                .map(|s| s.n)
+                                .collect();
+                            sizes.sort_unstable();
+                            sizes.dedup();
+                            let mut warmed_terms = 0usize;
+                            for n in sizes {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                                let terms = (n * n * n - n) / 6; // Σ d·(n−d), per variant
+                                // stop once the *cumulative* warmed
+                                // footprint would exceed either cache limit
+                                // — warming past them would evict the
+                                // smaller schedules just warmed
+                                if warmed_terms + 2 * terms > budget
+                                    || scheds + 2 > max_entries
+                                {
+                                    break;
+                                }
+                                for variant in
+                                    [McmVariant::PaperFaithful, McmVariant::Corrected]
+                                {
+                                    crate::core::cache::mcm_schedule(n, variant);
+                                    scheds += 1;
+                                }
+                                warmed_terms += 2 * terms;
                             }
-                            let terms = (n * n * n - n) / 6; // Σ d·(n−d), per variant
-                            // stop once the *cumulative* warmed footprint
-                            // would exceed either cache limit — warming
-                            // past them would evict the smaller schedules
-                            // just warmed
-                            if warmed_terms + 2 * terms > budget || scheds + 2 > max_entries {
-                                break;
-                            }
-                            for variant in
-                                [McmVariant::PaperFaithful, McmVariant::Corrected]
-                            {
-                                crate::core::cache::mcm_schedule(n, variant);
+                            // alignment wavefronts for every align bucket
+                            // (one schedule serves all variants — keyed by
+                            // grid shape only), under the same cumulative
+                            // budget
+                            let mut grids: Vec<(usize, usize)> = engine
+                                .registry
+                                .artifacts
+                                .iter()
+                                .filter(|s| {
+                                    s.kind == crate::runtime::registry::Kind::Align
+                                })
+                                .map(|s| (s.n, s.k))
+                                .collect();
+                            grids.sort_unstable();
+                            grids.dedup();
+                            for (rows, cols) in grids {
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                                let terms = rows * cols;
+                                if warmed_terms + terms > budget
+                                    || scheds + 1 > max_entries
+                                {
+                                    break;
+                                }
+                                crate::core::cache::align_schedule(rows, cols);
                                 scheds += 1;
+                                warmed_terms += terms;
                             }
-                            warmed_terms += 2 * terms;
                         }
-                        // alignment wavefronts for every align bucket (one
-                        // schedule serves all variants — keyed by grid
-                        // shape only), under the same cumulative budget
-                        let mut grids: Vec<(usize, usize)> = engine
-                            .registry
-                            .artifacts
-                            .iter()
-                            .filter(|s| s.kind == crate::runtime::registry::Kind::Align)
-                            .map(|s| (s.n, s.k))
-                            .collect();
-                        grids.sort_unstable();
-                        grids.dedup();
-                        for (rows, cols) in grids {
-                            if stop.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            let terms = rows * cols;
-                            if warmed_terms + terms > budget || scheds + 1 > max_entries {
-                                break;
-                            }
-                            crate::core::cache::align_schedule(rows, cols);
-                            scheds += 1;
-                            warmed_terms += terms;
+                        // Calibrate the adaptive executor policy on the
+                        // persistent pool (engine or not: the native
+                        // executors it arbitrates always exist).  A stale
+                        // stop flag aborts between measurements.
+                        if !stop.load(Ordering::Relaxed) {
+                            crate::core::policy::calibrate_and_install(exec_pool, || {
+                                !stop.load(Ordering::Relaxed)
+                            });
                         }
                         warmed.store(true, Ordering::Release);
                         eprintln!(
-                            "pipedp-server: warmed {n} executables, {scheds} schedules"
+                            "pipedp-server: warmed {executables} executables, {scheds} \
+                             schedules; executor policy {}",
+                            if crate::core::policy::current().calibrated {
+                                "calibrated"
+                            } else {
+                                "uncalibrated (shutdown during warmup)"
+                            }
                         );
                     })
                     .expect("spawn warmup");
@@ -311,9 +350,12 @@ impl Server {
         })
     }
 
-    /// Block until warmup finished (immediately true when warmup is off or
-    /// no engine is loaded).  Serving deployments call this before opening
-    /// the floodgates so no request pays PJRT-compile tail latency.
+    /// Block until warmup finished — executable + schedule pre-compiles
+    /// (engine only) *and* executor-policy calibration (always, a few ms
+    /// in debug builds to a few hundred ms in release).  Immediately true
+    /// only when `warm` is off.  Serving deployments call this before
+    /// opening the floodgates so no request pays PJRT-compile tail
+    /// latency or runs on an uncalibrated policy.
     pub fn wait_ready(&self, timeout: std::time::Duration) -> bool {
         let deadline = std::time::Instant::now() + timeout;
         while !self.warmed.load(Ordering::Acquire) {

@@ -6,13 +6,17 @@
 //! schedule for its instance size.  Under serving traffic the size
 //! distribution is heavily repeated, so the compile cost is amortizable:
 //! this module memoizes compiled schedules behind `Arc`s in a bounded LRU
-//! keyed by `(problem kind, n, variant)`.
+//! keyed by `(problem kind, n, variant, tile)`.
 //!
 //! * The S-DP schedule ([`crate::core::schedule::SdpSchedule`]) is affine
 //!   and never materialized on the request path.  Two arena families are
-//!   cached: MCM pipelines keyed `(n, variant)` and alignment wavefronts
-//!   keyed `(rows, cols)` — the [`CachedSchedule`] enum holds either, and
-//!   [`CacheableSchedule`] keeps lookups typed at the call site.
+//!   cached: MCM pipelines keyed `(n, variant, tile)` and alignment
+//!   wavefronts keyed `(rows, cols, tile)` — the [`CachedSchedule`] enum
+//!   holds either, and [`CacheableSchedule`] keeps lookups typed at the
+//!   call site.  The superstep-tiled arenas the pooled executors run
+//!   (DESIGN.md §7) cache alongside the untiled ones; the adaptive
+//!   executor policy ([`crate::core::policy`]) lives next door and is
+//!   installed process-wide the same way.
 //! * Eviction is least-recently-used under two limits: an entry bound
 //!   ([`DEFAULT_CAPACITY`], env `PIPEDP_SCHED_CACHE_CAP`) and a budget on
 //!   total cached arena terms ([`DEFAULT_TERM_BUDGET`], env
@@ -43,13 +47,24 @@ pub const DEFAULT_CAPACITY: usize = 128;
 /// `PIPEDP_SCHED_CACHE_TERMS`.
 pub const DEFAULT_TERM_BUDGET: usize = 48_000_000;
 
-/// Cache key: problem kind + instance size + schedule variant.
+/// Cache key: problem kind + instance size + schedule variant + superstep
+/// tile (1 = untiled; tiled and untiled arenas of one size are distinct
+/// compilations and cache as distinct entries).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Key {
-    Mcm { n: usize, variant: McmVariant },
-    /// The alignment wavefront depends only on the grid shape — no
-    /// variant: one arena serves LCS, edit distance, and local alignment.
-    Align { rows: usize, cols: usize },
+    Mcm {
+        n: usize,
+        variant: McmVariant,
+        tile: usize,
+    },
+    /// The alignment wavefront depends only on the grid shape (and block
+    /// tile) — no variant: one arena serves LCS, edit distance, and local
+    /// alignment.
+    Align {
+        rows: usize,
+        cols: usize,
+        tile: usize,
+    },
 }
 
 /// A cached compiled schedule of any workload family.  Typed entry/exit
@@ -250,21 +265,37 @@ impl ScheduleCache {
     }
 }
 
-/// Fetch (or compile and cache) the MCM schedule for `(n, variant)` from
-/// the process-wide cache — the request-path replacement for
-/// [`McmSchedule::compile`].
+/// Fetch (or compile and cache) the untiled MCM schedule for
+/// `(n, variant)` from the process-wide cache — the request-path
+/// replacement for [`McmSchedule::compile`].
 pub fn mcm_schedule(n: usize, variant: McmVariant) -> Arc<McmSchedule> {
-    ScheduleCache::global().get_or_insert_with(Key::Mcm { n, variant }, || {
-        McmSchedule::compile(n, variant)
+    mcm_schedule_tiled(n, variant, 1)
+}
+
+/// Fetch (or compile and cache) a superstep-tiled MCM schedule — the
+/// request-path replacement for [`McmSchedule::compile_tiled`], used by
+/// the pooled executor route.
+pub fn mcm_schedule_tiled(n: usize, variant: McmVariant, tile: usize) -> Arc<McmSchedule> {
+    let tile = tile.max(1);
+    ScheduleCache::global().get_or_insert_with(Key::Mcm { n, variant, tile }, || {
+        McmSchedule::compile_tiled(n, variant, tile)
     })
 }
 
-/// Fetch (or compile and cache) the alignment wavefront for an
+/// Fetch (or compile and cache) the untiled alignment wavefront for an
 /// `(m+1)×(n+1)` grid — the request-path replacement for
 /// [`AlignSchedule::compile`].
 pub fn align_schedule(rows: usize, cols: usize) -> Arc<AlignSchedule> {
-    ScheduleCache::global().get_or_insert_with(Key::Align { rows, cols }, || {
-        AlignSchedule::compile(rows, cols)
+    align_schedule_tiled(rows, cols, 1)
+}
+
+/// Fetch (or compile and cache) a block-tiled alignment wavefront — the
+/// request-path replacement for [`AlignSchedule::compile_tiled`], used by
+/// the pooled executor route.
+pub fn align_schedule_tiled(rows: usize, cols: usize, tile: usize) -> Arc<AlignSchedule> {
+    let tile = tile.max(1);
+    ScheduleCache::global().get_or_insert_with(Key::Align { rows, cols, tile }, || {
+        AlignSchedule::compile_tiled(rows, cols, tile)
     })
 }
 
@@ -282,6 +313,7 @@ mod tests {
         Key::Mcm {
             n,
             variant: McmVariant::Corrected,
+            tile: 1,
         }
     }
 
@@ -313,6 +345,7 @@ mod tests {
             Key::Mcm {
                 n: 5,
                 variant: McmVariant::PaperFaithful,
+                tile: 1,
             },
             || McmSchedule::compile(5, McmVariant::PaperFaithful),
         );
@@ -409,7 +442,7 @@ mod tests {
             McmSchedule::compile(7, McmVariant::Corrected)
         });
         let a = cache.get_or_insert_with(
-            Key::Align { rows: 5, cols: 9 },
+            Key::Align { rows: 5, cols: 9, tile: 1 },
             || AlignSchedule::compile(5, 9),
         );
         assert_eq!(m.n, 7);
@@ -422,12 +455,58 @@ mod tests {
         );
         // repeated align lookups hit without rebuilding
         let mut rebuilt = false;
-        let a2 = cache.get_or_insert_with(Key::Align { rows: 5, cols: 9 }, || {
+        let a2 = cache.get_or_insert_with(Key::Align { rows: 5, cols: 9, tile: 1 }, || {
             rebuilt = true;
             AlignSchedule::compile(5, 9)
         });
         assert!(!rebuilt);
         assert!(Arc::ptr_eq(&a, &a2));
+    }
+
+    #[test]
+    fn tiled_and_untiled_schedules_are_distinct_entries() {
+        let cache = ScheduleCache::with_capacity(8);
+        let untiled = cache.get_or_insert_with(key(10), || {
+            McmSchedule::compile(10, McmVariant::Corrected)
+        });
+        let tiled = cache.get_or_insert_with(
+            Key::Mcm {
+                n: 10,
+                variant: McmVariant::Corrected,
+                tile: 8,
+            },
+            || McmSchedule::compile_tiled(10, McmVariant::Corrected, 8),
+        );
+        assert_eq!(untiled.tile, 1);
+        assert_eq!(tiled.tile, 8);
+        assert_eq!(cache.stats().entries, 2);
+        // both hit on repeat without rebuilding
+        let mut rebuilt = false;
+        cache.get_or_insert_with(
+            Key::Mcm {
+                n: 10,
+                variant: McmVariant::Corrected,
+                tile: 8,
+            },
+            || {
+                rebuilt = true;
+                McmSchedule::compile_tiled(10, McmVariant::Corrected, 8)
+            },
+        );
+        assert!(!rebuilt);
+    }
+
+    #[test]
+    fn global_tiled_helpers_hit_on_repeat() {
+        let before = global_stats();
+        let a = mcm_schedule_tiled(59, McmVariant::Corrected, 16);
+        let b = mcm_schedule_tiled(59, McmVariant::Corrected, 16);
+        assert!(Arc::ptr_eq(&a, &b) || a.num_terms() == b.num_terms());
+        let ta = align_schedule_tiled(41, 59, 8);
+        let tb = align_schedule_tiled(41, 59, 8);
+        assert_eq!(ta.tile, 8);
+        assert!(Arc::ptr_eq(&ta, &tb) || ta.num_terms() == tb.num_terms());
+        assert!(global_stats().hits >= before.hits + 2);
     }
 
     #[test]

@@ -115,6 +115,46 @@ pub fn mcm_hazards(sched: &McmSchedule) -> Vec<Hazard> {
     out
 }
 
+/// Superstep tile-fusion hazards of an MCM schedule (DESIGN.md §7): a
+/// pooled executor sweeps a whole superstep between barriers, so every
+/// operand must finalize **before the superstep's first step**, not
+/// merely before the reading step.  Empty ⇔ tile fusion is sound; the
+/// quantized greedy ([`McmSchedule::compile_tiled`] with `tile > 1`)
+/// guarantees it by construction, and naively grouping an *untiled*
+/// schedule violates it (tested below) — which is exactly why the tiled
+/// executors refuse schedules this checker rejects.
+pub fn mcm_superstep_hazards(sched: &McmSchedule) -> Vec<Hazard> {
+    let mut out = Vec::new();
+    for g in 0..sched.num_supersteps() {
+        let steps = sched.superstep_step_range(g);
+        let superstep_start = steps.start;
+        for s in steps {
+            let view = sched.step_view(s);
+            for e in view.iter() {
+                for dep in [e.l as usize, e.r as usize] {
+                    if let Some(fin) = sched.finalize_step(dep) {
+                        if fin >= superstep_start {
+                            out.push(Hazard {
+                                step: s,
+                                reader: e.tgt as usize,
+                                operand: dep,
+                                finalized: fin,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// True iff every superstep of the schedule may be fused (swept with one
+/// barrier) without a read racing a same-superstep write.
+pub fn mcm_superstep_fusion_safe(sched: &McmSchedule) -> bool {
+    mcm_superstep_hazards(sched).is_empty()
+}
+
 /// Analyze an alignment wavefront's substep accesses (substeps 1–3 = the
 /// up/left/diag operand gathers, substep 4 = writes).  Cells on one
 /// anti-diagonal have pairwise-distinct rows *and* columns, so every
@@ -168,6 +208,66 @@ pub fn align_hazards(sched: &AlignSchedule) -> Vec<Hazard> {
         }
     }
     out
+}
+
+/// Tile-fusion hazards of a *blocked* alignment wavefront (DESIGN.md §7).
+///
+/// A pooled executor gives each worker whole blocks (work units) of a
+/// block-anti-diagonal and barriers once per diagonal, so a lane's
+/// operand must be either (a) a border cell, (b) finalized on an earlier
+/// block-diagonal, or (c) an **earlier lane of the same unit** — the
+/// intra-block row-major sweep order makes those reads
+/// sequentially-consistent on one worker.  Anything else is a hazard.
+/// For `tile == 1` (no units) this degenerates to [`align_hazards`].
+pub fn align_tile_hazards(sched: &AlignSchedule) -> Vec<Hazard> {
+    if sched.tile == 1 {
+        return align_hazards(sched);
+    }
+    let ncells = crate::core::schedule::grid::num_cells(sched.rows, sched.cols);
+    // lane position and unit of every interior cell
+    let mut pos = vec![u32::MAX; ncells];
+    for (p, &t) in sched.tgt.iter().enumerate() {
+        pos[t as usize] = p as u32;
+    }
+    let num_units = sched.unit_offsets.len() - 1;
+    let mut unit_of = vec![0u32; sched.num_terms()];
+    for u in 0..num_units {
+        for p in sched.unit_range(u) {
+            unit_of[p] = u as u32;
+        }
+    }
+    let mut out = Vec::new();
+    for (s, view) in sched.steps().enumerate() {
+        let base = sched.step_range(s).start;
+        for lane in 0..view.len() {
+            let p = base + lane;
+            for dep in [view.up[lane], view.left[lane], view.diag[lane]] {
+                let Some(fin) = sched.finalize_step(dep as usize) else {
+                    continue; // border cell, final from the start
+                };
+                if fin < s {
+                    continue; // earlier block-diagonal
+                }
+                let dp = pos[dep as usize] as usize;
+                if fin == s && unit_of[dp] == unit_of[p] && dp < p {
+                    continue; // earlier lane of the same unit
+                }
+                out.push(Hazard {
+                    step: s,
+                    reader: view.tgt[lane] as usize,
+                    operand: dep as usize,
+                    finalized: fin,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// True iff the blocked wavefront may run one barrier per block-diagonal
+/// with unit-granular work assignment.
+pub fn align_tile_fusion_safe(sched: &AlignSchedule) -> bool {
+    align_tile_hazards(sched).is_empty()
 }
 
 /// Analyze the S-DP pipeline's reads (Fig. 2 has one read + one write per
@@ -351,6 +451,85 @@ mod tests {
         let s = SdpSchedule::new(64, vec![9, 5, 4, 3, 1]);
         let r = analyze_sdp(&s);
         assert_eq!(r.max_degree, 3);
+    }
+
+    #[test]
+    fn tiled_corrected_schedules_are_superstep_fusion_safe() {
+        // the tiling proof obligation: quantized compilation must place
+        // every read strictly after its operand's superstep
+        forall("mcm superstep fusion safe", 24, |g| {
+            let n = g.usize(2..26);
+            let tile = *g.choose(&[1usize, 2, 4, 8, 16, 64]);
+            let s = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            let h = mcm_superstep_hazards(&s);
+            if h.is_empty() && mcm_superstep_fusion_safe(&s) {
+                Ok(())
+            } else {
+                Err(format!("n={n} tile={tile}: {:?}", &h[..h.len().min(3)]))
+            }
+        });
+    }
+
+    #[test]
+    fn naive_grouping_of_untiled_schedule_is_rejected() {
+        // grouping an UNTILED corrected schedule into supersteps of 4
+        // without the quantized re-compile must trip the checker — this is
+        // the failure mode the analyzer exists to catch (measured: n=8
+        // grouped by 4 has 6 cross-group reads of same-group writes)
+        let mut s = McmSchedule::compile(8, McmVariant::Corrected);
+        assert!(mcm_superstep_fusion_safe(&s), "tile=1 is trivially safe");
+        let steps = s.num_steps();
+        s.tile = 4;
+        s.superstep_offsets = (0..steps as u32)
+            .step_by(4)
+            .chain(std::iter::once(steps as u32))
+            .collect();
+        let h = mcm_superstep_hazards(&s);
+        assert!(
+            !h.is_empty(),
+            "naively grouped untiled schedule must report fusion hazards"
+        );
+        // every reported hazard is a real same-superstep read
+        for hz in &h {
+            assert!(hz.finalized >= (hz.step / 4) * 4, "{hz:?}");
+        }
+    }
+
+    #[test]
+    fn tiled_align_wavefront_fusion_safe() {
+        forall("align tile fusion safe", 30, |g| {
+            let rows = g.usize(1..40);
+            let cols = g.usize(1..40);
+            let tile = *g.choose(&[1usize, 2, 3, 4, 8, 16]);
+            let s = AlignSchedule::compile_tiled(rows, cols, tile);
+            let h = align_tile_hazards(&s);
+            if h.is_empty() && align_tile_fusion_safe(&s) {
+                Ok(())
+            } else {
+                Err(format!("{rows}x{cols} tile {tile}: {:?}", h[0]))
+            }
+        });
+    }
+
+    #[test]
+    fn align_tile_checker_rejects_cross_unit_same_step_reads() {
+        // corrupt a tiled schedule so one lane reads a cell produced by a
+        // *different* unit of the same block-diagonal: must be reported
+        let mut s = AlignSchedule::compile_tiled(4, 4, 2);
+        // block-diagonal 1 holds blocks (0,1) and (1,0); make the first
+        // lane of block (1,0) read the first cell of block (0,1)
+        let step = 1;
+        let units = s.step_unit_range(step);
+        assert!(units.len() >= 2, "need two units on diagonal 1");
+        let first_unit_first_lane = s.unit_range(units.start).start;
+        let second_unit_first_lane = s.unit_range(units.start + 1).start;
+        s.up[second_unit_first_lane] = s.tgt[first_unit_first_lane];
+        let h = align_tile_hazards(&s);
+        assert!(
+            h.iter()
+                .any(|hz| hz.operand == s.tgt[first_unit_first_lane] as usize),
+            "cross-unit same-step read must be a hazard: {h:?}"
+        );
     }
 
     #[test]

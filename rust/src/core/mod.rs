@@ -9,11 +9,15 @@
 //! * [`conflict`] — the access-trace analyzer: Theorem-1 conflict checks,
 //!   staleness-hazard detection, and the GPU serialization-factor model.
 //! * [`cache`] — the process-wide LRU of compiled schedules keyed by
-//!   `(problem kind, n, variant)`; the request paths' front door to the
-//!   schedule compiler.
+//!   `(problem kind, n, variant, tile)`; the request paths' front door to
+//!   the schedule compiler.
+//! * [`policy`] — the calibrated adaptive executor policy: per-kind
+//!   seq/fused/pooled crossover tables measured at warmup and consulted
+//!   by the router's native path (DESIGN.md §7).
 
 pub mod cache;
 pub mod conflict;
+pub mod policy;
 pub mod problem;
 pub mod schedule;
 pub mod semigroup;

@@ -1,0 +1,691 @@
+//! Calibrated adaptive executor policy (DESIGN.md §7).
+//!
+//! Three native executors can serve a DP request: the classic sequential
+//! DP (`seq`), the fused single-thread flat-arena sweep (`fused`), and
+//! the pooled superstep-tiled executor on the persistent
+//! [`crate::runtime::exec_pool`] (`pooled`).  Which one is fastest
+//! depends on instance size, thread count and machine — the paper's own
+//! Table I is exactly such a crossover study (naive beats pipeline at
+//! the small band, pipeline wins the large one).  Hard-coding the
+//! crossovers wires one machine's constants into every deployment, so
+//! the policy is *measured*:
+//!
+//! * [`CrossoverTable`] — per-kind cost rows `(n, cost-per-choice)`; the
+//!   winner for a size is the argmin of the nearest measured row.  The
+//!   type is generic over the choice label so the GPU-simulator
+//!   calibration ([`crate::simulator::calibrate`]) reuses it for the
+//!   paper's naive/pipeline crossover.
+//! * [`calibrate`] — runs each executor briefly over a size ladder (a
+//!   few ms per size) and builds the [`PolicyTable`].  The server does
+//!   this at warmup, right after pre-compiling schedules; benches do it
+//!   from their own measurements.
+//! * [`PolicyTable::choose`] — the serving decision: band winner, then
+//!   two dynamic downgrades of `pooled` — a batch at least as wide as
+//!   the pool (per-request parallelism already saturates the host) and
+//!   a busy pool (queueing behind the run lock would serialize anyway)
+//!   both fall back to `fused`.
+//!
+//! The installed table lives process-wide next to the schedule cache
+//! ([`install`] / [`current`]); choice counters surface in coordinator
+//! stats ([`stats`]).  `PIPEDP_EXEC_POLICY=seq|fused|pooled` pins every
+//! decision (bench/debug escape hatch).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::core::schedule::{default_align_tile, default_mcm_tile, McmVariant};
+use crate::runtime::exec_pool::{self, ExecPool};
+
+/// One measured size: costs per choice (lower is better).  Units are
+/// caller-defined but must be uniform within a table (the executor
+/// calibration uses ns/cell; the simulator reuse uses modeled ms).
+#[derive(Debug, Clone)]
+pub struct CrossoverRow<C> {
+    pub n: usize,
+    pub costs: Vec<(C, f64)>,
+}
+
+/// A crossover table: measured cost rows sorted by size, queried for the
+/// winning choice at any size.
+#[derive(Debug, Clone, Default)]
+pub struct CrossoverTable<C> {
+    rows: Vec<CrossoverRow<C>>,
+}
+
+impl<C: Copy + PartialEq> CrossoverTable<C> {
+    pub fn new() -> CrossoverTable<C> {
+        CrossoverTable { rows: Vec::new() }
+    }
+
+    /// Add a measured row, keeping rows sorted by `n`.
+    pub fn push_row(&mut self, n: usize, costs: Vec<(C, f64)>) {
+        assert!(!costs.is_empty(), "a crossover row needs at least one cost");
+        let at = self.rows.partition_point(|r| r.n < n);
+        self.rows.insert(at, CrossoverRow { n, costs });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn rows(&self) -> &[CrossoverRow<C>] {
+        &self.rows
+    }
+
+    /// The cheapest choice of one row.
+    pub fn row_winner(row: &CrossoverRow<C>) -> C {
+        row.costs
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|&(c, _)| c)
+            .expect("rows are non-empty")
+    }
+
+    /// The row governing size `n`: the smallest measured size ≥ `n`,
+    /// else the largest measured size (extrapolate the top band).
+    pub fn row_at(&self, n: usize) -> Option<&CrossoverRow<C>> {
+        if self.rows.is_empty() {
+            return None;
+        }
+        let at = self.rows.partition_point(|r| r.n < n);
+        Some(&self.rows[at.min(self.rows.len() - 1)])
+    }
+
+    /// Winner for size `n` (`None` on an empty table).
+    pub fn winner_at(&self, n: usize) -> Option<C> {
+        self.row_at(n).map(Self::row_winner)
+    }
+
+    /// The measured cost of `choice` at the row governing `n`.
+    pub fn cost_at(&self, n: usize, choice: C) -> Option<f64> {
+        self.row_at(n)?
+            .costs
+            .iter()
+            .find(|&&(c, _)| c == choice)
+            .map(|&(_, cost)| cost)
+    }
+
+    /// Smallest measured size whose winner is `choice` — the crossover
+    /// point into that choice (`None` if it never wins).
+    pub fn crossover_to(&self, choice: C) -> Option<usize> {
+        self.rows
+            .iter()
+            .find(|r| Self::row_winner(r) == choice)
+            .map(|r| r.n)
+    }
+}
+
+/// The three native execution strategies the policy arbitrates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecutorChoice {
+    /// Classic sequential DP (`mcm::seq`, `align::seq`, `sdp::seq`).
+    Seq,
+    /// Fused single-thread flat-arena sweep (the untiled pipeline).
+    Fused,
+    /// Superstep-tiled executor on the persistent pool.
+    Pooled,
+}
+
+impl ExecutorChoice {
+    pub const ALL: [ExecutorChoice; 3] = [
+        ExecutorChoice::Seq,
+        ExecutorChoice::Fused,
+        ExecutorChoice::Pooled,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecutorChoice::Seq => "seq",
+            ExecutorChoice::Fused => "fused",
+            ExecutorChoice::Pooled => "pooled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExecutorChoice> {
+        match s {
+            "seq" => Some(ExecutorChoice::Seq),
+            "fused" => Some(ExecutorChoice::Fused),
+            "pooled" => Some(ExecutorChoice::Pooled),
+            _ => None,
+        }
+    }
+}
+
+/// Native workload families the policy covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Sdp,
+    Mcm,
+    Align,
+}
+
+/// The per-kind crossover tables plus the context they were measured in.
+#[derive(Debug, Clone)]
+pub struct PolicyTable {
+    /// Pool parallelism the tables were measured with.
+    pub threads: usize,
+    /// False until [`calibrate`] (or a bench) filled the tables; empty
+    /// tables answer with static heuristics.
+    pub calibrated: bool,
+    pub mcm: CrossoverTable<ExecutorChoice>,
+    pub align: CrossoverTable<ExecutorChoice>,
+    pub sdp: CrossoverTable<ExecutorChoice>,
+}
+
+impl PolicyTable {
+    /// A table with no measurements: [`PolicyTable::choose`] falls back
+    /// to conservative static crossovers (sequential below the sizes
+    /// where parallel sync costs amortize — the pre-measurement analogue
+    /// of the router's old NATIVE_*_CUTOFF constants).
+    pub fn uncalibrated(threads: usize) -> PolicyTable {
+        PolicyTable {
+            threads: threads.max(1),
+            calibrated: false,
+            mcm: CrossoverTable::new(),
+            align: CrossoverTable::new(),
+            sdp: CrossoverTable::new(),
+        }
+    }
+
+    pub fn table(&self, w: Workload) -> &CrossoverTable<ExecutorChoice> {
+        match w {
+            Workload::Sdp => &self.sdp,
+            Workload::Mcm => &self.mcm,
+            Workload::Align => &self.align,
+        }
+    }
+
+    fn table_mut(&mut self, w: Workload) -> &mut CrossoverTable<ExecutorChoice> {
+        match w {
+            Workload::Sdp => &mut self.sdp,
+            Workload::Mcm => &mut self.mcm,
+            Workload::Align => &mut self.align,
+        }
+    }
+
+    /// Record a measured row (benches use this to install their own
+    /// full-scale measurements as the policy).
+    pub fn push_measurement(
+        &mut self,
+        w: Workload,
+        n: usize,
+        costs: Vec<(ExecutorChoice, f64)>,
+    ) {
+        self.table_mut(w).push_row(n, costs);
+        self.calibrated = true;
+    }
+
+    /// Band winner for `(workload, n)` — no dynamic downgrades.
+    pub fn band_choice(&self, w: Workload, n: usize) -> ExecutorChoice {
+        if let Some(c) = self.table(w).winner_at(n) {
+            return c;
+        }
+        // static pre-calibration heuristics.  Each kind is keyed by its
+        // *parallelism*: MCM by chain length, align by the grid's short
+        // side, S-DP by the lane count k (a long narrow pipe has nothing
+        // to spread).
+        match w {
+            // the S-DP pipeline sweep ≈ the sequential loop (both O(nk)
+            // scans); pooling pays only for genuinely wide pipes
+            Workload::Sdp => {
+                if n >= 256 {
+                    ExecutorChoice::Pooled
+                } else {
+                    ExecutorChoice::Fused
+                }
+            }
+            Workload::Mcm => {
+                if n < 192 {
+                    ExecutorChoice::Seq
+                } else {
+                    ExecutorChoice::Pooled
+                }
+            }
+            Workload::Align => {
+                if n < 256 {
+                    ExecutorChoice::Seq
+                } else {
+                    ExecutorChoice::Pooled
+                }
+            }
+        }
+    }
+
+    /// The serving decision for a request of size `n` arriving in a
+    /// batch of `batch` same-kind requests.  See the module docs for the
+    /// two `pooled → fused` downgrades; `PIPEDP_EXEC_POLICY` pins the
+    /// answer.  Counts every decision into [`stats`].
+    pub fn choose(&self, w: Workload, n: usize, batch: usize) -> ExecutorChoice {
+        let pool_busy = exec_pool::try_global_stats().is_some_and(|s| s.active > 0);
+        let choice = if let Some(forced) = forced_choice() {
+            forced
+        } else {
+            self.choose_with(w, n, batch, pool_busy)
+        };
+        let counter = match choice {
+            ExecutorChoice::Seq => &COUNTERS.seq,
+            ExecutorChoice::Fused => &COUNTERS.fused,
+            ExecutorChoice::Pooled => &COUNTERS.pooled,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        choice
+    }
+
+    /// [`PolicyTable::choose`] with the pool-occupancy probe passed in —
+    /// the pure decision function (deterministic, directly testable): a
+    /// `pooled` band winner downgrades to `fused` when the batch is at
+    /// least as wide as the pool or the pool is already busy.
+    pub fn choose_with(
+        &self,
+        w: Workload,
+        n: usize,
+        batch: usize,
+        pool_busy: bool,
+    ) -> ExecutorChoice {
+        let mut c = self.band_choice(w, n);
+        if c == ExecutorChoice::Pooled && (batch >= self.threads.max(2) || pool_busy) {
+            c = ExecutorChoice::Fused;
+        }
+        c
+    }
+}
+
+fn forced_choice() -> Option<ExecutorChoice> {
+    static FORCED: OnceLock<Option<ExecutorChoice>> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("PIPEDP_EXEC_POLICY")
+            .ok()
+            .and_then(|v| ExecutorChoice::parse(&v))
+    })
+}
+
+struct Counters {
+    seq: AtomicU64,
+    fused: AtomicU64,
+    pooled: AtomicU64,
+}
+
+static COUNTERS: Counters = Counters {
+    seq: AtomicU64::new(0),
+    fused: AtomicU64::new(0),
+    pooled: AtomicU64::new(0),
+};
+
+/// Point-in-time policy statistics (exported into coordinator stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyStats {
+    pub seq: u64,
+    pub fused: u64,
+    pub pooled: u64,
+    pub calibrated: bool,
+}
+
+pub fn stats() -> PolicyStats {
+    PolicyStats {
+        seq: COUNTERS.seq.load(Ordering::Relaxed),
+        fused: COUNTERS.fused.load(Ordering::Relaxed),
+        pooled: COUNTERS.pooled.load(Ordering::Relaxed),
+        calibrated: current().calibrated,
+    }
+}
+
+fn cell() -> &'static RwLock<Arc<PolicyTable>> {
+    static CURRENT: OnceLock<RwLock<Arc<PolicyTable>>> = OnceLock::new();
+    CURRENT.get_or_init(|| {
+        RwLock::new(Arc::new(PolicyTable::uncalibrated(
+            exec_pool::default_threads(),
+        )))
+    })
+}
+
+/// The currently-installed process-wide policy.
+pub fn current() -> Arc<PolicyTable> {
+    cell().read().unwrap().clone()
+}
+
+/// Install a policy table process-wide (warmup calibration, benches).
+pub fn install(table: PolicyTable) {
+    *cell().write().unwrap() = Arc::new(table);
+}
+
+/// Size ladders and repetition count for [`calibrate`].  The defaults
+/// cost a few hundred ms total — sized for server warmup, not for bench
+/// fidelity (benches install their own full-scale measurements).
+#[derive(Debug, Clone)]
+pub struct CalibrationConfig {
+    pub mcm_ladder: Vec<usize>,
+    /// Square grid sides.
+    pub align_ladder: Vec<usize>,
+    /// `(n, k)` pairs.
+    pub sdp_ladder: Vec<(usize, usize)>,
+    /// Timed repetitions per (size, executor); the minimum is kept.
+    pub runs: usize,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        if cfg!(debug_assertions) {
+            // debug builds (tests spin up many warm servers) get a
+            // milliseconds ladder; fidelity only matters in release
+            CalibrationConfig {
+                mcm_ladder: vec![12, 24],
+                align_ladder: vec![16, 32],
+                sdp_ladder: vec![(256, 8)],
+                runs: 1,
+            }
+        } else {
+            CalibrationConfig {
+                mcm_ladder: vec![16, 48, 96, 192],
+                align_ladder: vec![32, 96, 256],
+                sdp_ladder: vec![(1 << 10, 16), (1 << 14, 128)],
+                runs: 3,
+            }
+        }
+    }
+}
+
+/// Minimum wall-clock of `runs` executions, in ns.
+fn time_min_ns(runs: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_nanos() as f64);
+    }
+    best
+}
+
+/// Measure the three executors over the config's ladders and build a
+/// [`PolicyTable`].  `keep_going` is polled between sizes so a server
+/// shutting down mid-warmup abandons the remaining measurements.
+pub fn calibrate(
+    cfg: &CalibrationConfig,
+    pool: &ExecPool,
+    keep_going: impl Fn() -> bool,
+) -> PolicyTable {
+    use ExecutorChoice::{Fused, Pooled, Seq};
+    let mut rng = crate::util::rng::Rng::seeded(0x9e3779b9);
+    let mut table = PolicyTable::uncalibrated(pool.threads());
+    let runs = cfg.runs;
+
+    for &n in &cfg.mcm_ladder {
+        if !keep_going() {
+            return table;
+        }
+        let p = crate::core::problem::McmProblem::random(&mut rng, n, 40);
+        let cells = crate::core::schedule::linear::num_cells(n) as f64;
+        let fused_sched = crate::core::cache::mcm_schedule(n, McmVariant::Corrected);
+        let tiled_sched = crate::core::cache::mcm_schedule_tiled(
+            n,
+            McmVariant::Corrected,
+            default_mcm_tile(n),
+        );
+        let seq = time_min_ns(runs, || {
+            std::hint::black_box(crate::mcm::seq::linear_table(&p));
+        }) / cells;
+        let fused = time_min_ns(runs, || {
+            std::hint::black_box(crate::mcm::pipeline::execute(&p, &fused_sched));
+        }) / cells;
+        let pooled = time_min_ns(runs, || {
+            std::hint::black_box(crate::mcm::pipeline::execute_pooled(
+                &p,
+                &tiled_sched,
+                pool,
+                pool.threads(),
+            ));
+        }) / cells;
+        table.push_measurement(
+            Workload::Mcm,
+            n,
+            vec![(Seq, seq), (Fused, fused), (Pooled, pooled)],
+        );
+    }
+
+    for &side in &cfg.align_ladder {
+        if !keep_going() {
+            return table;
+        }
+        let a: Vec<i64> = (0..side).map(|_| rng.range(0..4)).collect();
+        let b: Vec<i64> = (0..side).map(|_| rng.range(0..4)).collect();
+        let p = crate::core::problem::AlignProblem::lcs(a, b).expect("valid instance");
+        let cells = (side * side) as f64;
+        let fused_sched = crate::core::cache::align_schedule(side, side);
+        let tiled_sched = crate::core::cache::align_schedule_tiled(
+            side,
+            side,
+            default_align_tile(side, side),
+        );
+        let seq = time_min_ns(runs, || {
+            std::hint::black_box(crate::align::seq::solve(&p));
+        }) / cells;
+        let fused = time_min_ns(runs, || {
+            std::hint::black_box(crate::align::wavefront::execute(&p, &fused_sched));
+        }) / cells;
+        let pooled = time_min_ns(runs, || {
+            std::hint::black_box(crate::align::wavefront::execute_pooled(
+                &p,
+                &tiled_sched,
+                pool,
+                pool.threads(),
+            ));
+        }) / cells;
+        table.push_measurement(
+            Workload::Align,
+            side,
+            vec![(Seq, seq), (Fused, fused), (Pooled, pooled)],
+        );
+    }
+
+    for &(n, k) in &cfg.sdp_ladder {
+        if !keep_going() {
+            return table;
+        }
+        let p = crate::core::problem::SdpProblem::random(
+            &mut rng,
+            n..n + 1,
+            k..k + 1,
+            crate::core::semigroup::Op::Min,
+        );
+        let elems = p.n as f64;
+        let seq = time_min_ns(runs, || {
+            std::hint::black_box(crate::sdp::seq::solve(&p));
+        }) / elems;
+        let fused = time_min_ns(runs, || {
+            std::hint::black_box(crate::sdp::pipeline::solve(&p));
+        }) / elems;
+        let pooled = time_min_ns(runs, || {
+            std::hint::black_box(crate::sdp::pipeline::execute_pooled(
+                &p,
+                pool,
+                pool.threads(),
+            ));
+        }) / elems;
+        // keyed by k — the pipe's lane count is its parallelism, and the
+        // router looks S-DP requests up by k (see the band docs)
+        table.push_measurement(
+            Workload::Sdp,
+            p.k(),
+            vec![(Seq, seq), (Fused, fused), (Pooled, pooled)],
+        );
+    }
+    table
+}
+
+/// [`calibrate`] with defaults + [`install`] — the server-warmup call.
+pub fn calibrate_and_install(pool: &ExecPool, keep_going: impl Fn() -> bool) {
+    install(calibrate(&CalibrationConfig::default(), pool, keep_going));
+}
+
+/// Serializes tests that install a process-wide policy table (the
+/// installed table is global state; concurrent installs would make those
+/// tests flaky).  Test-build only.
+#[cfg(test)]
+pub(crate) fn test_install_lock() -> &'static std::sync::Mutex<()> {
+    static LOCK: OnceLock<std::sync::Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_from(rows: &[(usize, [f64; 3])]) -> CrossoverTable<ExecutorChoice> {
+        let mut t = CrossoverTable::new();
+        for &(n, [s, f, p]) in rows {
+            t.push_row(
+                n,
+                vec![
+                    (ExecutorChoice::Seq, s),
+                    (ExecutorChoice::Fused, f),
+                    (ExecutorChoice::Pooled, p),
+                ],
+            );
+        }
+        t
+    }
+
+    #[test]
+    fn winner_uses_nearest_band_and_extrapolates_top() {
+        let t = table_from(&[
+            (64, [25.0, 28.0, 40.0]),
+            (256, [100.0, 110.0, 70.0]),
+            (1024, [800.0, 1500.0, 700.0]),
+        ]);
+        assert_eq!(t.winner_at(10), Some(ExecutorChoice::Seq));
+        assert_eq!(t.winner_at(64), Some(ExecutorChoice::Seq));
+        assert_eq!(t.winner_at(65), Some(ExecutorChoice::Pooled)); // 256 row
+        assert_eq!(t.winner_at(256), Some(ExecutorChoice::Pooled));
+        assert_eq!(t.winner_at(4096), Some(ExecutorChoice::Pooled)); // top band
+        assert_eq!(t.crossover_to(ExecutorChoice::Pooled), Some(256));
+        assert_eq!(t.crossover_to(ExecutorChoice::Fused), None);
+        assert_eq!(t.cost_at(256, ExecutorChoice::Pooled), Some(70.0));
+    }
+
+    #[test]
+    fn rows_stay_sorted_regardless_of_insertion_order() {
+        let mut t = CrossoverTable::new();
+        t.push_row(256, vec![(ExecutorChoice::Seq, 2.0)]);
+        t.push_row(16, vec![(ExecutorChoice::Fused, 1.0)]);
+        t.push_row(64, vec![(ExecutorChoice::Pooled, 3.0)]);
+        let sizes: Vec<usize> = t.rows().iter().map(|r| r.n).collect();
+        assert_eq!(sizes, vec![16, 64, 256]);
+        assert_eq!(t.winner_at(20), Some(ExecutorChoice::Pooled));
+    }
+
+    #[test]
+    fn choose_downgrades_pooled_for_wide_batches_and_busy_pool() {
+        let mut table = PolicyTable::uncalibrated(4);
+        table.push_measurement(
+            Workload::Mcm,
+            64,
+            vec![
+                (ExecutorChoice::Seq, 100.0),
+                (ExecutorChoice::Fused, 50.0),
+                (ExecutorChoice::Pooled, 10.0),
+            ],
+        );
+        assert_eq!(
+            table.choose_with(Workload::Mcm, 64, 1, false),
+            ExecutorChoice::Pooled
+        );
+        // a batch as wide as the pool saturates per-request parallelism
+        assert_eq!(
+            table.choose_with(Workload::Mcm, 64, 4, false),
+            ExecutorChoice::Fused
+        );
+        // a busy pool means queueing behind the run lock — don't
+        assert_eq!(
+            table.choose_with(Workload::Mcm, 64, 1, true),
+            ExecutorChoice::Fused
+        );
+        // seq/fused winners are never downgraded
+        let mut t2 = PolicyTable::uncalibrated(4);
+        t2.push_measurement(
+            Workload::Mcm,
+            64,
+            vec![(ExecutorChoice::Seq, 1.0), (ExecutorChoice::Pooled, 2.0)],
+        );
+        assert_eq!(t2.choose_with(Workload::Mcm, 64, 8, true), ExecutorChoice::Seq);
+    }
+
+    #[test]
+    fn uncalibrated_heuristics_are_size_monotone() {
+        let t = PolicyTable::uncalibrated(4);
+        assert!(!t.calibrated);
+        assert_eq!(t.band_choice(Workload::Mcm, 8), ExecutorChoice::Seq);
+        assert_eq!(t.band_choice(Workload::Mcm, 1024), ExecutorChoice::Pooled);
+        assert_eq!(t.band_choice(Workload::Align, 16), ExecutorChoice::Seq);
+        assert_eq!(
+            t.band_choice(Workload::Align, 2048),
+            ExecutorChoice::Pooled
+        );
+        assert_eq!(t.band_choice(Workload::Sdp, 128), ExecutorChoice::Fused);
+    }
+
+    #[test]
+    fn choose_counts_into_stats() {
+        let before = stats();
+        let t = PolicyTable::uncalibrated(4);
+        let _ = t.choose(Workload::Mcm, 8, 1);
+        let after = stats();
+        assert!(
+            after.seq + after.fused + after.pooled
+                > before.seq + before.fused + before.pooled
+        );
+    }
+
+    #[test]
+    fn calibration_fills_every_kind_and_picks_sane_small_n_winners() {
+        let pool = ExecPool::new(2);
+        let cfg = CalibrationConfig {
+            mcm_ladder: vec![12, 24],
+            align_ladder: vec![16, 32],
+            sdp_ladder: vec![(256, 8)],
+            runs: 2,
+        };
+        let table = calibrate(&cfg, &pool, || true);
+        assert!(table.calibrated);
+        assert_eq!(table.mcm.rows().len(), 2);
+        assert_eq!(table.align.rows().len(), 2);
+        assert_eq!(table.sdp.rows().len(), 1);
+        // every measured cost is finite and positive
+        for w in [Workload::Mcm, Workload::Align, Workload::Sdp] {
+            for row in table.table(w).rows() {
+                assert_eq!(row.costs.len(), 3);
+                for &(_, cost) in &row.costs {
+                    assert!(cost.is_finite() && cost > 0.0, "{w:?} n={}", row.n);
+                }
+            }
+        }
+        // and a decision exists at any size
+        let _ = table.band_choice(Workload::Mcm, 10_000);
+    }
+
+    #[test]
+    fn calibration_aborts_between_sizes_when_stopped() {
+        let pool = ExecPool::new(2);
+        let table = calibrate(&CalibrationConfig::default(), &pool, || false);
+        assert!(!table.calibrated, "stopped calibration must stay empty");
+    }
+
+    #[test]
+    fn install_and_current_roundtrip() {
+        let _guard = test_install_lock().lock().unwrap_or_else(|e| e.into_inner());
+        let mut t = PolicyTable::uncalibrated(3);
+        t.push_measurement(
+            Workload::Align,
+            77,
+            vec![(ExecutorChoice::Seq, 1.0)],
+        );
+        install(t);
+        let got = current();
+        assert!(got.calibrated);
+        assert_eq!(
+            got.band_choice(Workload::Align, 77),
+            ExecutorChoice::Seq
+        );
+        // restore an uncalibrated table for other tests in this process
+        install(PolicyTable::uncalibrated(3));
+    }
+}

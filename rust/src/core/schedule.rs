@@ -194,13 +194,35 @@ impl<'a> StepView<'a> {
 
 /// A compiled step-synchronous MCM pipeline schedule in flat-arena form
 /// (see the module docs for the layout).
+///
+/// ## Superstep tiling (DESIGN.md §7)
+///
+/// A third CSR level groups consecutive steps into *supersteps* of
+/// `tile` steps each: superstep `g` owns steps
+/// `superstep_offsets[g] .. superstep_offsets[g + 1]`.  For `tile > 1`
+/// (Corrected only) the greedy placement is *quantized*: every term is
+/// delayed until its operands finalize in an **earlier superstep**, so a
+/// pooled executor may sweep a whole superstep's arena rows with a single
+/// barrier at the end — reads never race the superstep's writes.  Within
+/// a superstep the only remaining write-order constraint is between terms
+/// of one *cell* (term 1 overwrites, later terms ⊗-combine), which the
+/// executor keeps on one worker.  The proof obligation is discharged at
+/// runtime by [`crate::core::conflict::mcm_superstep_hazards`].
+/// `tile == 1` degenerates to the untiled schedule (every step is its own
+/// superstep) and compiles bit-identically to the previous compiler.
 #[derive(Debug, Clone)]
 pub struct McmSchedule {
     pub n: usize,
     pub variant: McmVariant,
+    /// Superstep length in steps (1 = untiled).
+    pub tile: usize,
     /// CSR step boundaries: step `s` owns arena rows
     /// `step_offsets[s] .. step_offsets[s + 1]`; length `num_steps + 1`.
     pub step_offsets: Vec<u32>,
+    /// CSR superstep boundaries over *step indices*: superstep `g` owns
+    /// steps `superstep_offsets[g] .. superstep_offsets[g + 1]`; length
+    /// `num_supersteps + 1`.
+    pub superstep_offsets: Vec<u32>,
     /// Arena columns, one row per scheduled term, grouped by step and
     /// ordered (term, cell) within a step.
     pub tgt: Vec<u32>,
@@ -212,6 +234,47 @@ pub struct McmSchedule {
     pub term: Vec<u32>,
     /// Per-cell start step (`usize::MAX` for initial-diagonal cells).
     pub start: Vec<usize>,
+}
+
+/// Superstep lane budget: the tile length is chosen so one superstep
+/// holds roughly this many arena rows (the window a pooled worker
+/// re-scans per barrier stays cache-resident).  Override with
+/// `PIPEDP_TILE_LANES`.
+pub const DEFAULT_TILE_LANES: usize = 4096;
+
+fn tile_lane_budget() -> usize {
+    static BUDGET: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        std::env::var("PIPEDP_TILE_LANES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&v: &usize| v > 0)
+            .unwrap_or(DEFAULT_TILE_LANES)
+    })
+}
+
+/// Default superstep length for an MCM chain of `n` matrices: the
+/// corrected schedule's mean step width is ≈ n/4 (measured across the
+/// size ladder), so `budget / (n/4)` steps fill the lane budget; clamped
+/// to [4, 64] — below 4 the barrier amortization is not worth the step
+/// inflation, above 64 the quantization delay starts to dominate small
+/// chains.
+pub fn default_mcm_tile(n: usize) -> usize {
+    (4 * tile_lane_budget() / n.max(1)).clamp(4, 64)
+}
+
+/// Default block side for a tiled alignment wavefront:
+/// `clamp(min_side / 8, 8, 128)` — at least 8 rows/cols per block so
+/// intra-block sweeps amortize the unit dispatch, and (for grids whose
+/// short side is ≥ 64) at most `min_side / 8` so the middle
+/// block-diagonals still carry enough blocks to spread across workers.
+/// Grids with a short side below the floor of 8 get a tile *larger than
+/// the short side* — one block per diagonal, no parallelism; callers
+/// that pool (`align::wavefront::solve_pooled`) fall back to the fused
+/// sweep in that regime, and the policy keys align on the short side so
+/// it is not chosen for such grids anyway.
+pub fn default_align_tile(rows: usize, cols: usize) -> usize {
+    (rows.min(cols) / 8).clamp(8, 128)
 }
 
 /// Terms of cell `(r, c)`: `(l, r, pa, pb, pc)` for `j = 1..=d`.
@@ -233,11 +296,25 @@ pub fn cell_terms(n: usize, r: usize, c: usize) -> Vec<(usize, usize, usize, usi
 }
 
 impl McmSchedule {
-    /// Compile a schedule for a chain of `n` matrices.
+    /// Compile a schedule for a chain of `n` matrices (untiled: every
+    /// step is its own superstep).
     ///
     /// Process-wide memoized by [`crate::core::cache::mcm_schedule`];
     /// request paths should call that instead.
     pub fn compile(n: usize, variant: McmVariant) -> McmSchedule {
+        McmSchedule::compile_tiled(n, variant, 1)
+    }
+
+    /// Compile with superstep tiling: steps are grouped into supersteps
+    /// of `tile` steps, and (for `tile > 1`) the Corrected greedy is
+    /// quantized so every operand finalizes in an earlier superstep —
+    /// see the type docs.  `tile == 1` is exactly [`McmSchedule::compile`].
+    pub fn compile_tiled(n: usize, variant: McmVariant, tile: usize) -> McmSchedule {
+        let tile = tile.max(1);
+        assert!(
+            tile == 1 || variant == McmVariant::Corrected,
+            "superstep tiling requires the hazard-free Corrected schedule"
+        );
         let ncells = linear::num_cells(n);
         // the arena indexes rows as u32: Σ d·(n−d) = (n³−n)/6 must fit,
         // which caps n at exactly MAX_CHAIN = 2953 — far beyond what the
@@ -259,8 +336,23 @@ impl McmSchedule {
             }
             McmVariant::Corrected => {
                 // Greedy dataflow delay in linear (diagonal-major) order;
-                // identical output to python/compile/schedule.py::corrected.
+                // identical output to python/compile/schedule.py::corrected
+                // for tile == 1.  For tile > 1 the dataflow bound is
+                // quantized to the next superstep boundary after the
+                // operand's finalize step, so reads never land in the
+                // superstep that produces their operand.
                 let mut finalize = vec![-1i64; ncells];
+                let tile_i = tile as i64;
+                // earliest step at which a value finalized at `f` may be
+                // read: f + 1 untiled, the next superstep start tiled
+                // (f < 0 = initial cell, readable from step 0)
+                let ready = |f: i64| -> i64 {
+                    if f < 0 {
+                        0
+                    } else {
+                        (f / tile_i + 1) * tile_i
+                    }
+                };
                 // per-step occupancy as a dense vector (steps are compact
                 // from 0), grown on demand
                 let mut occupancy: Vec<usize> = Vec::new();
@@ -270,8 +362,8 @@ impl McmSchedule {
                     let mut s0 = (x - n) as i64;
                     for (j, (li, ri, _, _, _)) in cell_terms(n, r, c).iter().enumerate() {
                         let j = j as i64; // j = term-1
-                        s0 = s0.max(finalize[*li] + 1 - j);
-                        s0 = s0.max(finalize[*ri] + 1 - j);
+                        s0 = s0.max(ready(finalize[*li]) - j);
+                        s0 = s0.max(ready(finalize[*ri]) - j);
                     }
                     let mut s0 = s0 as usize;
                     // Thread-count capacity: at most `width` terms per step.
@@ -383,10 +475,22 @@ impl McmSchedule {
                 col[lo..hi].copy_from_slice(&scratch);
             }
         }
+        // superstep CSR over step indices: fixed blocks of `tile` steps
+        // (the quantized greedy above makes fixed blocks hazard-free; the
+        // conflict analyzer re-proves it)
+        let mut superstep_offsets = Vec::with_capacity(num_steps / tile + 2);
+        let mut s = 0;
+        while s < num_steps {
+            superstep_offsets.push(s as u32);
+            s += tile;
+        }
+        superstep_offsets.push(num_steps as u32);
         McmSchedule {
             n,
             variant,
+            tile,
             step_offsets,
+            superstep_offsets,
             tgt,
             l,
             r: r_col,
@@ -400,6 +504,26 @@ impl McmSchedule {
 
     pub fn num_steps(&self) -> usize {
         self.step_offsets.len() - 1
+    }
+
+    /// Number of supersteps (= pooled-executor barriers); exactly
+    /// `⌈num_steps / tile⌉`.
+    pub fn num_supersteps(&self) -> usize {
+        self.superstep_offsets.len() - 1
+    }
+
+    /// Step-index range of superstep `g`.
+    #[inline]
+    pub fn superstep_step_range(&self, g: usize) -> std::ops::Range<usize> {
+        self.superstep_offsets[g] as usize..self.superstep_offsets[g + 1] as usize
+    }
+
+    /// Arena row range of superstep `g` (the rows of all its steps —
+    /// contiguous because steps are).
+    #[inline]
+    pub fn superstep_range(&self, g: usize) -> std::ops::Range<usize> {
+        let steps = self.superstep_step_range(g);
+        self.step_offsets[steps.start] as usize..self.step_offsets[steps.end] as usize
     }
 
     /// Arena row range of step `s`.
@@ -563,18 +687,43 @@ impl<'a> AlignStepView<'a> {
 /// conflict-free.  Both properties are re-checked by
 /// [`crate::core::conflict`].
 ///
-/// The schedule depends only on the grid shape `(rows, cols)`, never on
-/// sequence content or variant — one compiled arena serves LCS, edit
-/// distance, and local alignment alike, and the process-wide cache keys
-/// it as `Key::Align { rows, cols }`.
+/// The schedule depends only on the grid shape `(rows, cols)` and block
+/// tile, never on sequence content or variant — one compiled arena
+/// serves LCS, edit distance, and local alignment alike, and the
+/// process-wide cache keys it as `Key::Align { rows, cols, tile }`.
+/// ## Block tiling (DESIGN.md §7)
+///
+/// For `tile > 1` the schedule is compiled as a *block wavefront*: the
+/// interior grid is cut into `tile × tile` blocks, a "step" becomes one
+/// block-anti-diagonal (all blocks `(I, J)` with `I + J = g`), lanes are
+/// emitted block-major (each block's cells row-major), and
+/// [`AlignSchedule::unit_offsets`] marks block boundaries.  A block is an
+/// indivisible *work unit*: one worker sweeps it sequentially (row-major
+/// order satisfies all intra-block dependencies), blocks on one
+/// block-diagonal are mutually independent (their operands lie in blocks
+/// of earlier diagonals), so one barrier per block-diagonal suffices —
+/// `⌈m/B⌉ + ⌈n/B⌉ − 1 ≤ ⌈(m + n − 1)/B⌉` barriers instead of `m + n − 1`.
+/// The proof obligation is discharged at runtime by
+/// [`crate::core::conflict::align_tile_hazards`].
 #[derive(Debug, Clone)]
 pub struct AlignSchedule {
     /// `m` = first-sequence length.
     pub rows: usize,
     /// `n` = second-sequence length.
     pub cols: usize,
-    /// CSR step boundaries; length `num_steps + 1`.
+    /// Block side (1 = classic cell-level anti-diagonal wavefront).
+    pub tile: usize,
+    /// CSR step boundaries; length `num_steps + 1`.  A step is one
+    /// anti-diagonal (`tile == 1`) or one block-anti-diagonal
+    /// (`tile > 1`).
     pub step_offsets: Vec<u32>,
+    /// `tile > 1` only: CSR arena-row boundaries of the work units
+    /// (blocks), length `num_units + 1`; empty when `tile == 1` (each
+    /// lane is its own unit).
+    pub unit_offsets: Vec<u32>,
+    /// `tile > 1` only: CSR unit-index boundaries per step, length
+    /// `num_steps + 1`; empty when `tile == 1`.
+    pub step_units: Vec<u32>,
     pub tgt: Vec<u32>,
     pub up: Vec<u32>,
     pub left: Vec<u32>,
@@ -584,11 +733,17 @@ pub struct AlignSchedule {
 }
 
 impl AlignSchedule {
-    /// Compile the wavefront for an `(m+1)×(n+1)` grid.
+    /// Compile the wavefront for an `(m+1)×(n+1)` grid (untiled).
     ///
     /// Process-wide memoized by [`crate::core::cache::align_schedule`];
     /// request paths should call that instead.
     pub fn compile(rows: usize, cols: usize) -> AlignSchedule {
+        AlignSchedule::compile_tiled(rows, cols, 1)
+    }
+
+    /// Compile the block wavefront with `tile × tile` blocks — see the
+    /// type docs.  `tile == 1` is exactly [`AlignSchedule::compile`].
+    pub fn compile_tiled(rows: usize, cols: usize, tile: usize) -> AlignSchedule {
         assert!(rows >= 1 && cols >= 1, "alignment grid needs both sequences");
         assert!(
             (rows + 1)
@@ -596,47 +751,107 @@ impl AlignSchedule {
                 .is_some_and(|c| c <= u32::MAX as usize),
             "grid {rows}x{cols} exceeds the u32 arena limit"
         );
-        let num_steps = rows + cols - 1;
+        let tile = tile.max(1);
         let nterms = rows * cols;
-        let mut step_offsets = Vec::with_capacity(num_steps + 1);
-        step_offsets.push(0u32);
-        let (mut tgt, mut up, mut left, mut diag, mut ai, mut bj) = (
-            Vec::with_capacity(nterms),
-            Vec::with_capacity(nterms),
-            Vec::with_capacity(nterms),
-            Vec::with_capacity(nterms),
-            Vec::with_capacity(nterms),
-            Vec::with_capacity(nterms),
-        );
-        // steps are emitted in order, rows ascending within a step, so the
-        // arena fills sequentially — no counting sort needed
-        for s in 0..num_steps {
-            let d = s + 2; // i + j on this anti-diagonal
-            let i_lo = 1.max(d.saturating_sub(cols));
-            let i_hi = rows.min(d - 1);
-            for i in i_lo..=i_hi {
-                let j = d - i;
-                tgt.push(grid::cell_index(cols, i, j) as u32);
-                up.push(grid::cell_index(cols, i - 1, j) as u32);
-                left.push(grid::cell_index(cols, i, j - 1) as u32);
-                diag.push(grid::cell_index(cols, i - 1, j - 1) as u32);
-                ai.push((i - 1) as u32);
-                bj.push((j - 1) as u32);
-            }
-            step_offsets.push(tgt.len() as u32);
+        // local SoA accumulator so the emission loops can both push lanes
+        // and read the running lane count for the CSR boundaries
+        struct Arena {
+            tgt: Vec<u32>,
+            up: Vec<u32>,
+            left: Vec<u32>,
+            diag: Vec<u32>,
+            ai: Vec<u32>,
+            bj: Vec<u32>,
         }
-        debug_assert_eq!(tgt.len(), nterms);
+        impl Arena {
+            fn push_cell(&mut self, cols: usize, i: usize, j: usize) {
+                self.tgt.push(grid::cell_index(cols, i, j) as u32);
+                self.up.push(grid::cell_index(cols, i - 1, j) as u32);
+                self.left.push(grid::cell_index(cols, i, j - 1) as u32);
+                self.diag.push(grid::cell_index(cols, i - 1, j - 1) as u32);
+                self.ai.push((i - 1) as u32);
+                self.bj.push((j - 1) as u32);
+            }
+            fn len(&self) -> usize {
+                self.tgt.len()
+            }
+        }
+        let mut arena = Arena {
+            tgt: Vec::with_capacity(nterms),
+            up: Vec::with_capacity(nterms),
+            left: Vec::with_capacity(nterms),
+            diag: Vec::with_capacity(nterms),
+            ai: Vec::with_capacity(nterms),
+            bj: Vec::with_capacity(nterms),
+        };
+        let mut step_offsets = Vec::new();
+        let mut unit_offsets = Vec::new();
+        let mut step_units = Vec::new();
+        step_offsets.push(0u32);
+        if tile == 1 {
+            // cell-level anti-diagonals, rows ascending within a step —
+            // the arena fills sequentially, no counting sort needed
+            let num_steps = rows + cols - 1;
+            for s in 0..num_steps {
+                let d = s + 2; // i + j on this anti-diagonal
+                let i_lo = 1.max(d.saturating_sub(cols));
+                let i_hi = rows.min(d - 1);
+                for i in i_lo..=i_hi {
+                    arena.push_cell(cols, i, d - i);
+                }
+                step_offsets.push(arena.len() as u32);
+            }
+        } else {
+            // block-level anti-diagonals: blocks (I, J) with I + J = g,
+            // I ascending; cells row-major within a block
+            let bi = rows.div_ceil(tile);
+            let bj_blocks = cols.div_ceil(tile);
+            unit_offsets.push(0u32);
+            step_units.push(0u32);
+            for g in 0..bi + bj_blocks - 1 {
+                let i_lo = g.saturating_sub(bj_blocks - 1);
+                let i_hi = (bi - 1).min(g);
+                for bi_idx in i_lo..=i_hi {
+                    let bj_idx = g - bi_idx;
+                    for i in (bi_idx * tile + 1)..=((bi_idx + 1) * tile).min(rows) {
+                        for j in (bj_idx * tile + 1)..=((bj_idx + 1) * tile).min(cols) {
+                            arena.push_cell(cols, i, j);
+                        }
+                    }
+                    unit_offsets.push(arena.len() as u32);
+                }
+                step_offsets.push(arena.len() as u32);
+                step_units.push(unit_offsets.len() as u32 - 1);
+            }
+        }
+        debug_assert_eq!(arena.len(), nterms);
         AlignSchedule {
             rows,
             cols,
+            tile,
             step_offsets,
-            tgt,
-            up,
-            left,
-            diag,
-            ai,
-            bj,
+            unit_offsets,
+            step_units,
+            tgt: arena.tgt,
+            up: arena.up,
+            left: arena.left,
+            diag: arena.diag,
+            ai: arena.ai,
+            bj: arena.bj,
         }
+    }
+
+    /// Work-unit index range of step `s` (`tile > 1` schedules only).
+    #[inline]
+    pub fn step_unit_range(&self, s: usize) -> std::ops::Range<usize> {
+        debug_assert!(self.tile > 1, "untiled schedules have per-lane units");
+        self.step_units[s] as usize..self.step_units[s + 1] as usize
+    }
+
+    /// Arena row range of work unit `u` (`tile > 1` schedules only).
+    #[inline]
+    pub fn unit_range(&self, u: usize) -> std::ops::Range<usize> {
+        self.unit_offsets[u] as usize..self.unit_offsets[u + 1] as usize
     }
 
     pub fn num_steps(&self) -> usize {
@@ -673,19 +888,30 @@ impl AlignSchedule {
         (0..self.num_steps()).map(move |s| self.step_view(s))
     }
 
-    /// Widest step (= `min(m, n)`, the wavefront's peak parallelism).
+    /// Widest step: `min(m, n)` untiled (the wavefront's peak
+    /// parallelism), the heaviest block-diagonal's lane count tiled.
     pub fn max_width(&self) -> usize {
-        self.rows.min(self.cols)
+        if self.tile == 1 {
+            self.rows.min(self.cols)
+        } else {
+            self.step_offsets
+                .windows(2)
+                .map(|w| (w[1] - w[0]) as usize)
+                .max()
+                .unwrap_or(0)
+        }
     }
 
     /// Step after which grid cell `x` is final (`None` for border cells,
-    /// final from the start).
+    /// final from the start).  For tiled schedules the step is the cell's
+    /// block-anti-diagonal; for `tile == 1` the formula degenerates to
+    /// the cell anti-diagonal `i + j − 2`.
     pub fn finalize_step(&self, x: usize) -> Option<usize> {
         let (i, j) = grid::cell_coords(self.cols, x);
         if i == 0 || j == 0 {
             None
         } else {
-            Some(i + j - 2)
+            Some((i - 1) / self.tile + (j - 1) / self.tile)
         }
     }
 }
@@ -1095,6 +1321,239 @@ mod tests {
         assert_eq!(s.finalize_step(grid::cell_index(3, 2, 0)), None); // border
         assert_eq!(s.finalize_step(grid::cell_index(3, 1, 1)), Some(0));
         assert_eq!(s.finalize_step(grid::cell_index(3, 4, 3)), Some(5));
+    }
+
+    // ---- superstep tiling --------------------------------------------------
+
+    #[test]
+    fn untiled_compile_is_tile_one() {
+        for n in [2usize, 5, 9, 16] {
+            for v in [McmVariant::PaperFaithful, McmVariant::Corrected] {
+                let a = McmSchedule::compile(n, v);
+                let b = McmSchedule::compile_tiled(n, v, 1);
+                assert_eq!(a.tile, 1);
+                assert_eq!(a.step_offsets, b.step_offsets, "n={n} {v:?}");
+                assert_eq!(a.tgt, b.tgt, "n={n} {v:?}");
+                assert_eq!(a.start, b.start, "n={n} {v:?}");
+                // every step is its own superstep
+                assert_eq!(a.num_supersteps(), a.num_steps());
+            }
+        }
+    }
+
+    #[test]
+    fn mcm_superstep_csr_consistent() {
+        forall("mcm superstep csr", 30, |g| {
+            let n = g.usize(2..24);
+            let tile = g.usize(1..40);
+            let s = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            if s.superstep_offsets[0] != 0 {
+                return Err("first offset".into());
+            }
+            if *s.superstep_offsets.last().unwrap() as usize != s.num_steps() {
+                return Err("last offset".into());
+            }
+            if !s.superstep_offsets.windows(2).all(|w| w[0] < w[1]) {
+                return Err("not strictly monotone".into());
+            }
+            // exactly ⌈steps/tile⌉ supersteps of ≤ tile steps each — the
+            // barrier-budget contract the pooled executor's sync-count
+            // assertion rests on
+            if s.num_supersteps() != s.num_steps().div_ceil(tile) {
+                return Err(format!(
+                    "n={n} tile={tile}: {} supersteps for {} steps",
+                    s.num_supersteps(),
+                    s.num_steps()
+                ));
+            }
+            for g_idx in 0..s.num_supersteps() {
+                let r = s.superstep_step_range(g_idx);
+                if r.len() > tile {
+                    return Err(format!("superstep {g_idx} spans {} steps", r.len()));
+                }
+                // arena range is the concatenation of the step ranges
+                let rows = s.superstep_range(g_idx);
+                if rows.start != s.step_offsets[r.start] as usize
+                    || rows.end != s.step_offsets[r.end] as usize
+                {
+                    return Err("superstep rows disagree with step rows".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_schedule_keeps_core_invariants() {
+        // quantization may only delay: width cap, one-slot-per-term and
+        // consecutive per-cell steps all survive tiling
+        forall("tiled core invariants", 20, |g| {
+            let n = g.usize(2..20);
+            let tile = *g.choose(&[2usize, 4, 8, 16, 64]);
+            let s = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            if s.max_width() > (n - 1).max(1) {
+                return Err(format!("width {}", s.max_width()));
+            }
+            let want: usize = (1..n).map(|d| d * (n - d)).sum();
+            if s.num_terms() != want {
+                return Err(format!("{} terms != {want}", s.num_terms()));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for e in s.entries() {
+                if !seen.insert((e.tgt, e.term)) {
+                    return Err(format!("duplicate ({}, {})", e.tgt, e.term));
+                }
+            }
+            // terms of a cell still land on consecutive steps
+            let mut pos = std::collections::HashMap::new();
+            for (step, view) in s.steps().enumerate() {
+                for e in view.iter() {
+                    pos.insert((e.tgt, e.term), step);
+                }
+            }
+            for (&(cell, term), &step) in &pos {
+                if let Some(&next) = pos.get(&(cell, term + 1)) {
+                    if next != step + 1 {
+                        return Err(format!("cell {cell} term {term}: {step} -> {next}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tiled_operands_finalize_in_earlier_supersteps() {
+        // the tiling proof obligation, asserted directly at the schedule
+        // level (core::conflict re-checks it through the analyzer API)
+        forall("tiled quantized reads", 20, |g| {
+            let n = g.usize(2..20);
+            let tile = g.usize(2..32);
+            let s = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            for (step, view) in s.steps().enumerate() {
+                let superstep_start = (step / tile) * tile;
+                for e in view.iter() {
+                    for dep in [e.l as usize, e.r as usize] {
+                        if let Some(fin) = s.finalize_step(dep) {
+                            if fin >= superstep_start {
+                                return Err(format!(
+                                    "n={n} tile={tile}: dep {dep} final at {fin}, read at \
+                                     step {step} (superstep start {superstep_start})"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn default_tiles_are_sane() {
+        for n in [1usize, 8, 64, 256, 1024, 4096] {
+            let t = default_mcm_tile(n);
+            assert!((4..=64).contains(&t), "n={n}: tile {t}");
+        }
+        assert!(default_mcm_tile(64) >= default_mcm_tile(1024));
+        for (r, c) in [(1usize, 1usize), (64, 64), (1024, 1024), (4, 4096)] {
+            let t = default_align_tile(r, c);
+            assert!((8..=128).contains(&t), "{r}x{c}: tile {t}");
+        }
+    }
+
+    #[test]
+    fn align_untiled_compile_is_tile_one() {
+        let a = AlignSchedule::compile(5, 9);
+        let b = AlignSchedule::compile_tiled(5, 9, 1);
+        assert_eq!(a.tile, 1);
+        assert_eq!(a.step_offsets, b.step_offsets);
+        assert_eq!(a.tgt, b.tgt);
+        assert!(a.unit_offsets.is_empty() && a.step_units.is_empty());
+    }
+
+    #[test]
+    fn align_tiled_csr_and_coverage() {
+        forall("align tiled csr", 40, |g| {
+            let rows = g.usize(1..40);
+            let cols = g.usize(1..40);
+            let tile = *g.choose(&[2usize, 3, 4, 8, 16]);
+            let s = AlignSchedule::compile_tiled(rows, cols, tile);
+            if s.num_terms() != rows * cols {
+                return Err(format!("{} terms", s.num_terms()));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &t in &s.tgt {
+                if !seen.insert(t) {
+                    return Err(format!("duplicate cell {t}"));
+                }
+            }
+            // superstep bound: ⌈m/B⌉ + ⌈n/B⌉ − 1 ≤ ⌈(m+n−1)/B⌉
+            let want_steps = rows.div_ceil(tile) + cols.div_ceil(tile) - 1;
+            if s.num_steps() != want_steps {
+                return Err(format!("{} block-diagonals", s.num_steps()));
+            }
+            if s.num_steps() > (rows + cols - 1).div_ceil(tile) {
+                return Err("block-diagonal count exceeds ⌈steps/tile⌉".into());
+            }
+            // unit CSRs cover the arena exactly and nest inside steps
+            if s.unit_offsets[0] != 0
+                || *s.unit_offsets.last().unwrap() as usize != s.num_terms()
+                || !s.unit_offsets.windows(2).all(|w| w[0] < w[1])
+            {
+                return Err("unit CSR broken".into());
+            }
+            if s.step_units.len() != s.num_steps() + 1 {
+                return Err("step_units length".into());
+            }
+            for step in 0..s.num_steps() {
+                let units = s.step_unit_range(step);
+                let rows_range = s.step_range(step);
+                if s.unit_offsets[units.start] as usize != rows_range.start
+                    || s.unit_offsets[units.end] as usize != rows_range.end
+                {
+                    return Err(format!("step {step}: units disagree with rows"));
+                }
+                // every block is at most tile×tile cells
+                for u in units {
+                    if s.unit_range(u).len() > tile * tile {
+                        return Err(format!("unit {u} oversized"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn align_tiled_block_sweep_is_sequential_safe() {
+        // arena order must respect every dependency when swept
+        // sequentially: operands are earlier in the arena or border cells
+        // (the stronger per-unit property is checked in core::conflict)
+        forall("align tiled arena order", 30, |g| {
+            let rows = g.usize(1..30);
+            let cols = g.usize(1..30);
+            let tile = g.usize(2..9);
+            let s = AlignSchedule::compile_tiled(rows, cols, tile);
+            let mut pos = vec![usize::MAX; grid::num_cells(rows, cols)];
+            for (p, &t) in s.tgt.iter().enumerate() {
+                pos[t as usize] = p;
+            }
+            for p in 0..s.num_terms() {
+                for dep in [s.up[p], s.left[p], s.diag[p]] {
+                    let (i, j) = grid::cell_coords(cols, dep as usize);
+                    if i == 0 || j == 0 {
+                        continue;
+                    }
+                    if pos[dep as usize] >= p {
+                        return Err(format!(
+                            "{rows}x{cols} tile {tile}: lane {p} reads later lane"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     // ---- S-DP schedule (Fig. 2 / Fig. 3) -----------------------------------

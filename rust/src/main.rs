@@ -41,6 +41,7 @@ fn main() {
         "simulate" => cmd_simulate(argv),
         "serve" => cmd_serve(argv),
         "client" => cmd_client(argv),
+        "bench-check" => cmd_bench_check(argv),
         "info" => cmd_info(argv),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
@@ -66,8 +67,9 @@ const USAGE: &str = "pipedp <subcommand> [flags]
   schedule    --n N --variant corrected|faithful [--json]
   verify      [--max-n N]
   simulate    [--samples S]
-  serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T]
+  serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E]
   client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats]
+  bench-check --baseline BENCH_x.json --current BENCH_x.json [--tolerance 0.30] [--relative-to seq]
   info";
 
 fn parse_backend(args: &Args) -> Result<Backend> {
@@ -392,6 +394,11 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "worker-queue bound (jobs) before load shedding; 0 = env/default",
             Some("0"),
         )
+        .flag(
+            "exec-threads",
+            "persistent execution-pool parallelism; 0 = PIPEDP_EXEC_THREADS/auto",
+            Some("0"),
+        )
         .parse(argv)?;
     let cfg = Config {
         addr: args.get_str("addr")?.to_string(),
@@ -403,6 +410,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         allow_engineless: true,
         warm: true,
         queue_cap: args.get_usize("queue-cap")?,
+        exec_threads: args.get_usize("exec-threads")?,
     };
     let server = Server::start(cfg)?;
     println!("pipedp server listening on {}", server.local_addr);
@@ -450,6 +458,151 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
         println!("error: {}", resp.error.unwrap_or_default());
     }
     Ok(())
+}
+
+/// Compare a freshly-generated `BENCH_*.json` against a committed
+/// baseline and fail on ns/cell regressions beyond the tolerance — the
+/// CI bench-regression gate.
+///
+/// Matches rows by `n` and compares every numeric per-executor field
+/// present in *both* rows (a fast-mode run that skipped large sizes
+/// simply compares the intersection).  Only regressions fail; a faster
+/// current run always passes.  Two portability rules keep the gate
+/// meaningful when baseline and CI run on different machines:
+///
+/// * `--relative-to seq` (what CI uses) gates each executor's ratio to
+///   the same run's `seq` column instead of absolute ns/cell — `seq` is
+///   the machine-speed anchor, so a uniformly slower runner passes while
+///   a *relative* executor regression (sync bitrot, layout bitrot) still
+///   fails.
+/// * when the two records report different `threads`, the pooled
+///   `threaded` column is skipped — its ratio to seq legitimately scales
+///   with the pool width.
+fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("bench-check", "bench-regression gate for BENCH_*.json records")
+        .flag("baseline", "committed baseline JSON", None)
+        .flag("current", "freshly generated JSON", None)
+        .flag(
+            "tolerance",
+            "allowed fractional slowdown before failing",
+            Some("0.30"),
+        )
+        .flag(
+            "relative-to",
+            "gate each field's ratio to this column (machine-portable)",
+            None,
+        )
+        .parse(argv)?;
+    let tolerance = args.get_f64("tolerance")?;
+    let rel_key = args.get("relative-to");
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            pipedp::Error::InvalidProblem(format!("cannot read {path}: {e}"))
+        })?;
+        Json::parse(&text)
+    };
+    let baseline = load(args.get_str("baseline")?)?;
+    let current = load(args.get_str("current")?)?;
+    let skip_threaded = {
+        let bt = baseline.get("threads").and_then(|v| v.as_i64());
+        let ct = current.get("threads").and_then(|v| v.as_i64());
+        let skip = bt != ct;
+        if skip {
+            println!(
+                "bench-check: thread counts differ (baseline {bt:?}, current {ct:?}) — \
+                 skipping the pool-width-dependent `threaded` column"
+            );
+        }
+        skip
+    };
+    let base_rows = baseline.arr_field("results")?;
+    let cur_rows = current.arr_field("results")?;
+    let mut compared = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    for base_row in base_rows {
+        let n = base_row.i64_field("n")?;
+        let Some(cur_row) = cur_rows
+            .iter()
+            .find(|r| r.i64_field("n").ok() == Some(n))
+        else {
+            continue; // size skipped in this run (PIPEDP_BENCH_MAX_N)
+        };
+        // the normalizers, when gating relative ratios
+        let normalizers = match rel_key {
+            None => None,
+            Some(rk) => {
+                let (Some(b), Some(c)) = (
+                    base_row.get(rk).and_then(|v| v.as_f64()),
+                    cur_row.get(rk).and_then(|v| v.as_f64()),
+                ) else {
+                    continue; // row has no anchor column: nothing to gate
+                };
+                if b <= 0.0 || c <= 0.0 {
+                    continue;
+                }
+                Some((b, c))
+            }
+        };
+        let Json::Obj(fields) = base_row else { continue };
+        for (key, base_val) in fields {
+            // configuration fields ride in the rows next to the timings;
+            // gating them would flag a retuned default (e.g. a different
+            // superstep tile) as a perf regression
+            if key == "n" || key == "tile" {
+                continue;
+            }
+            if skip_threaded && key == "threaded" {
+                continue;
+            }
+            if rel_key.is_some_and(|rk| rk == key) {
+                continue; // the anchor gates everything else, not itself
+            }
+            let (Some(base_ns), Some(cur_ns)) = (
+                base_val.as_f64(),
+                cur_row.get(key).and_then(|v| v.as_f64()),
+            ) else {
+                continue; // non-numeric or absent in the current run
+            };
+            if base_ns <= 0.0 {
+                continue;
+            }
+            compared += 1;
+            let (base_m, cur_m, unit) = match normalizers {
+                None => (base_ns, cur_ns, "ns/cell"),
+                Some((b, c)) => (base_ns / b, cur_ns / c, "x seq"),
+            };
+            let ratio = cur_m / base_m;
+            if ratio > 1.0 + tolerance {
+                failures.push(format!(
+                    "n={n} {key}: {cur_m:.2} {unit} vs baseline {base_m:.2} \
+                     ({ratio:.2}x, tolerance {:.2}x)",
+                    1.0 + tolerance
+                ));
+            }
+        }
+    }
+    if compared == 0 {
+        return Err(pipedp::Error::InvalidProblem(
+            "bench-check compared nothing: baseline and current share no (n, field) pairs"
+                .into(),
+        ));
+    }
+    if failures.is_empty() {
+        println!(
+            "bench-check: OK — {compared} measurements within {:.0}% of baseline",
+            tolerance * 100.0
+        );
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("bench-check: REGRESSION {f}");
+        }
+        Err(pipedp::Error::InvalidProblem(format!(
+            "{} of {compared} measurements regressed beyond {:.0}%",
+            failures.len(),
+            tolerance * 100.0
+        )))
+    }
 }
 
 fn cmd_info(argv: Vec<String>) -> Result<()> {

@@ -27,7 +27,8 @@ use std::sync::Barrier;
 
 use crate::core::cache;
 use crate::core::problem::McmProblem;
-use crate::core::schedule::{linear, McmSchedule, McmVariant};
+use crate::core::schedule::{default_mcm_tile, linear, McmSchedule, McmVariant};
+use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
 use crate::sdp::naive::SharedTable;
 
 /// Step-synchronous executor over a compiled schedule.
@@ -229,6 +230,100 @@ pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> 
     st
 }
 
+/// Pooled superstep-tiled executor (DESIGN.md §7): resident
+/// [`ExecPool`] workers sweep one *superstep* of the arena between
+/// [`SenseBarrier`] waits — `⌈steps/tile⌉` cheap barriers instead of
+/// one/two mutex-condvar barriers per step, and no per-solve
+/// spawn/join.
+///
+/// Work assignment is by **target cell** (`tgt % parties`): all terms of
+/// one cell stay on one worker in arena (step) order, so the term-1
+/// overwrite always precedes that cell's ⊗-combines.  Reads are safe
+/// because the schedule's superstep tiling is fusion-proof: every
+/// operand finalizes in an *earlier* superstep
+/// ([`crate::core::conflict::mcm_superstep_hazards`] is empty — the
+/// quantized greedy guarantees it, and an untiled schedule's
+/// tile-1 supersteps satisfy it trivially).  Each worker scans the whole
+/// superstep window (≤ the compile-time lane budget, cache-resident) and
+/// executes only its cells.
+pub fn execute_pooled(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> Vec<i64> {
+    execute_pooled_counted(p, sched, pool, threads).0
+}
+
+/// [`execute_pooled`] + the number of barrier rounds it cost — the
+/// observability hook the superstep sync-budget tests assert on.
+pub fn execute_pooled_counted(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<i64>, u64) {
+    let n = p.n();
+    assert_eq!(n, sched.n, "schedule/problem size mismatch");
+    assert_eq!(
+        sched.variant,
+        McmVariant::Corrected,
+        "pooled execution requires the hazard-free Corrected schedule"
+    );
+    let parties = threads
+        .max(1)
+        .min(pool.threads())
+        .min(sched.max_width().max(1));
+    let mut st = vec![0i64; linear::num_cells(n)];
+    if parties <= 1 {
+        execute_fused(p, sched, &mut st);
+        return (st, 0);
+    }
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for g in 0..sched.num_supersteps() {
+            for i in sched.superstep_range(g) {
+                let tgt = sched.tgt[i] as usize;
+                if tgt % parties != t {
+                    continue;
+                }
+                // SAFETY: operands finalized in earlier supersteps
+                // (superstep fusion proof), this cell is written only by
+                // this worker (tgt-modulo ownership) in term order (arena
+                // order), supersteps are barrier-separated.
+                unsafe {
+                    let v = st_ptr.read(sched.l[i] as usize)
+                        + st_ptr.read(sched.r[i] as usize)
+                        + p.weight(
+                            sched.pa[i] as usize,
+                            sched.pb[i] as usize,
+                            sched.pc[i] as usize,
+                        );
+                    let newv = if sched.term[i] == 1 {
+                        v
+                    } else {
+                        st_ptr.read(tgt).min(v)
+                    };
+                    st_ptr.write(tgt, newv);
+                }
+            }
+            waiter.wait(); // end of superstep
+        }
+    });
+    (st, barrier.rounds())
+}
+
+/// Convenience: corrected solve on the process-wide pool with the cached
+/// default-tiled schedule — the adaptive policy's `pooled` route.
+pub fn solve_pooled(p: &McmProblem) -> Vec<i64> {
+    let n = p.n().max(1);
+    let sched = cache::mcm_schedule_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled(p, &sched, pool, pool.threads())
+}
+
 /// Execution trace of the first `max_steps` steps (regenerates Fig. 7's
 /// style of walkthrough).
 pub fn trace(p: &McmProblem, variant: McmVariant, max_steps: usize) -> String {
@@ -316,6 +411,68 @@ mod tests {
                 Err(format!("n={n} threads={threads} dims={:?}", p.dims))
             }
         });
+    }
+
+    #[test]
+    fn pooled_tiled_matches_oracle_across_threads() {
+        // the ISSUE's property matrix: tiles × threads ∈ {1, 2, 3, 8} ×
+        // non-divisible sizes, all against the classic-DP oracle
+        let pool = ExecPool::new(8);
+        forall("mcm pooled == seq", 24, |g| {
+            let n = g.usize(2..28);
+            let tile = *g.choose(&[1usize, 2, 4, 8, 64]);
+            let threads = *g.choose(&[1usize, 2, 3, 8]);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let sched = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            if execute_pooled(&p, &sched, &pool, threads) == seq::linear_table(&p) {
+                Ok(())
+            } else {
+                Err(format!("n={n} tile={tile} threads={threads} dims={:?}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_superstep_barrier_budget() {
+        // supersteps reduce syncs to exactly num_supersteps = ⌈steps/T⌉
+        let pool = ExecPool::new(3);
+        let mut rng = crate::util::rng::Rng::seeded(5);
+        for (n, tile) in [(9usize, 2usize), (16, 4), (24, 8), (17, 5)] {
+            let p = McmProblem::random(&mut rng, n, 25);
+            let sched = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            let (st, rounds) = execute_pooled_counted(&p, &sched, &pool, 3);
+            assert_eq!(st, seq::linear_table(&p), "n={n} tile={tile}");
+            assert_eq!(rounds as usize, sched.num_supersteps(), "n={n} tile={tile}");
+            assert!(
+                (rounds as usize) <= sched.num_steps().div_ceil(tile),
+                "n={n} tile={tile}: {rounds} barriers for {} steps",
+                sched.num_steps()
+            );
+            // tiling must actually amortize: far fewer barriers than the
+            // per-step executor's one-per-step
+            assert!((rounds as usize) < sched.num_steps());
+        }
+    }
+
+    #[test]
+    fn solve_pooled_uses_cached_tiled_schedule() {
+        let p = McmProblem::clrs();
+        assert_eq!(*solve_pooled(&p).last().unwrap(), 15125);
+        let before = crate::core::cache::global_stats().hits;
+        assert_eq!(*solve_pooled(&p).last().unwrap(), 15125);
+        assert!(
+            crate::core::cache::global_stats().hits > before,
+            "second pooled solve must hit the schedule cache"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "Corrected")]
+    fn pooled_rejects_faithful_schedules() {
+        let p = McmProblem::clrs();
+        let sched = McmSchedule::compile(6, McmVariant::PaperFaithful);
+        let pool = ExecPool::new(2);
+        execute_pooled(&p, &sched, &pool, 2);
     }
 
     #[test]

@@ -1,0 +1,549 @@
+//! Process-wide persistent worker pool for DP execution (DESIGN.md §7).
+//!
+//! The paper's pipeline keeps its stages *resident*: threads are launched
+//! once and synchronize with hardware barriers, so a step costs a barrier,
+//! not a thread launch.  The previous CPU executors instead paid
+//! `thread::scope` spawn/join per solve plus a mutex-condvar
+//! `std::sync::Barrier` per wavefront step — measured as ~1.4 µs/step of
+//! pure synchronization at n = 64, which dominated every small instance
+//! (`BENCH_pipeline.json`: 1460 ns/cell threaded vs 25 ns/cell
+//! sequential).  This module is the resident analogue:
+//!
+//! * **Workers are spawned once** (process-wide [`ExecPool::global`]) and
+//!   *parked on a condvar between solves* — dispatching a solve costs one
+//!   mutex round-trip and a `notify_all`, not `threads` clone+spawn+join.
+//! * **Per-step synchronization** uses [`SenseBarrier`], a sense-reversing
+//!   atomic barrier: one `fetch_add` per participant and a bounded
+//!   spin-then-yield wait (tens of ns uncontended, no mutex, no syscall on
+//!   the fast path).
+//! * The **caller participates** as party 0, so a `parties`-way solve
+//!   occupies `parties − 1` pool workers and never context-switches the
+//!   submitting thread out.
+//!
+//! Concurrent solves serialize on a run lock (the pool is one shared
+//! resource; the adaptive policy in [`crate::core::policy`] downgrades to
+//! the fused single-thread executor when the pool is busy rather than
+//! queueing behind it).  Occupancy and solve counters surface in the
+//! coordinator's stats snapshot.
+//!
+//! ## Safety model
+//!
+//! `run` smuggles a borrowed closure to the workers as a raw pointer and
+//! is sound for the same reason `thread::scope` is: it does not return
+//! until every participating worker has finished executing the closure
+//! (`remaining == 0`), so the borrow outlives every use.  A worker panic
+//! inside the closure is caught (`catch_unwind`), the completion count
+//! still drops, and the panic is re-raised on the calling thread — the
+//! pool itself stays usable.  (A panic *between* two barrier waits of a
+//! multi-barrier job can still wedge the job's other participants on the
+//! barrier; executors are oracle-property-tested precisely so that class
+//! of bug cannot ship.)
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Sense-reversing barrier: one atomic `fetch_add` per arrival, a
+/// spin-then-yield wait, no mutex.  Each participant keeps a *local*
+/// sense flag (see [`SenseBarrier::waiter`]) that flips every round; the
+/// last arriver resets the count and publishes the new global sense.
+///
+/// Memory ordering: every pre-wait write of every participant
+/// happens-before every post-wait read of every participant (arrivals are
+/// `AcqRel`, the sense publish is `Release`, spinners load `Acquire`), so
+/// executors may hand tables across steps without further fencing —
+/// exactly the guarantee `std::sync::Barrier` gives, at a fraction of the
+/// cost.
+pub struct SenseBarrier {
+    parties: usize,
+    count: AtomicUsize,
+    sense: AtomicBool,
+    /// Completed rounds (incremented by the last arriver) — the
+    /// observability hook the superstep tests assert barrier budgets on.
+    rounds: AtomicU64,
+}
+
+/// Spins before each yield while waiting for the sense flip.  Small: with
+/// more runnable threads than cores (2-core CI runners run 8-party
+/// property tests) long spins burn the very cycles the straggler needs.
+const SPINS_BEFORE_YIELD: u32 = 128;
+
+impl SenseBarrier {
+    pub fn new(parties: usize) -> SenseBarrier {
+        SenseBarrier {
+            parties: parties.max(1),
+            count: AtomicUsize::new(0),
+            sense: AtomicBool::new(false),
+            rounds: AtomicU64::new(0),
+        }
+    }
+
+    /// A per-participant handle holding the local sense flag.  Every
+    /// participant must create exactly one and use it for every round.
+    pub fn waiter(&self) -> Waiter<'_> {
+        Waiter {
+            barrier: self,
+            sense: false,
+        }
+    }
+
+    /// Completed rounds so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    fn wait(&self, local_sense: &mut bool) {
+        *local_sense = !*local_sense;
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.parties {
+            self.count.store(0, Ordering::Relaxed);
+            self.rounds.fetch_add(1, Ordering::Relaxed);
+            self.sense.store(*local_sense, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.sense.load(Ordering::Acquire) != *local_sense {
+                if spins < SPINS_BEFORE_YIELD {
+                    spins += 1;
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// One participant's handle on a [`SenseBarrier`].
+pub struct Waiter<'a> {
+    barrier: &'a SenseBarrier,
+    sense: bool,
+}
+
+impl Waiter<'_> {
+    /// Block (spin, then yield) until all parties arrive.
+    #[inline]
+    pub fn wait(&mut self) {
+        self.barrier.wait(&mut self.sense);
+    }
+}
+
+/// The job handed to workers: a lifetime-erased closure pointer plus the
+/// party count.  Soundness: `ExecPool::run` blocks until `remaining == 0`,
+/// so the pointee outlives every dereference.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    parties: usize,
+}
+
+// SAFETY: the pointee is Sync (bound on `run`) and outlives the job (run
+// blocks until all participants finish); the raw pointer itself is plain
+// data.
+unsafe impl Send for Job {}
+
+struct JobState {
+    /// Bumped per dispatched job; workers run at most the latest job and
+    /// each job exactly once (dispatches are serialized by the run lock).
+    generation: u64,
+    job: Option<Job>,
+    /// Participating workers still inside the current job.
+    remaining: usize,
+    /// A participant panicked while executing the current job.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// Point-in-time pool statistics (exported into coordinator stats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Total parallelism (pool workers + the participating caller).
+    pub threads: usize,
+    /// Solves dispatched through the pool (including single-party runs
+    /// executed inline).
+    pub solves: u64,
+    /// Runs currently executing (0 or 1: runs serialize on the run lock).
+    pub active: usize,
+    /// Runs that found the pool busy and had to wait for the run lock.
+    pub contended: u64,
+}
+
+/// A persistent execution pool of `threads − 1` resident workers (the
+/// caller is party 0).  See the module docs for the lifecycle.
+pub struct ExecPool {
+    shared: std::sync::Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    run_lock: Mutex<()>,
+    threads: usize,
+    solves: AtomicU64,
+    active: AtomicUsize,
+    contended: AtomicU64,
+}
+
+impl ExecPool {
+    /// Spawn a pool with total parallelism `threads` (≥ 1): `threads − 1`
+    /// resident workers plus the participating caller.
+    pub fn new(threads: usize) -> ExecPool {
+        let threads = threads.max(1);
+        let shared = std::sync::Arc::new(Shared {
+            state: Mutex::new(JobState {
+                generation: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 0..threads - 1 {
+            let shared = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pipedp-exec{}", w + 1))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn exec-pool worker"),
+            );
+        }
+        ExecPool {
+            shared,
+            handles: Mutex::new(handles),
+            run_lock: Mutex::new(()),
+            threads,
+            solves: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            contended: AtomicU64::new(0),
+        }
+    }
+
+    /// Total parallelism (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Whether a run currently holds the pool (the adaptive policy checks
+    /// this to fall back to the fused executor instead of queueing).
+    pub fn is_busy(&self) -> bool {
+        self.active.load(Ordering::Relaxed) > 0
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            threads: self.threads,
+            solves: self.solves.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            contended: self.contended.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute `f(party)` on `parties` participants (clamped to the pool
+    /// size): the caller runs party 0 inline, resident workers run
+    /// parties `1..parties`.  Returns after every participant finished.
+    /// `f` typically captures a [`SenseBarrier`] for per-step sync.
+    pub fn run<F: Fn(usize) + Sync>(&self, parties: usize, f: F) {
+        let parties = parties.clamp(1, self.threads);
+        self.solves.fetch_add(1, Ordering::Relaxed);
+        if parties == 1 {
+            f(0);
+            return;
+        }
+        let guard = match self.run_lock.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                self.run_lock.lock().unwrap()
+            }
+        };
+        self.active.fetch_add(1, Ordering::Relaxed);
+        // Lifetime-erase the borrowed closure; sound because this function
+        // does not return until remaining == 0 (see the module docs).
+        let erased: &(dyn Fn(usize) + Sync) = &f;
+        let job = Job {
+            f: unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(erased)
+            } as *const _,
+            parties,
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.generation += 1;
+            st.job = Some(job);
+            st.remaining = parties - 1;
+            st.panicked = false;
+        }
+        self.shared.work_cv.notify_all();
+        // run party 0 on the calling thread; catch so a caller-side panic
+        // still waits out the workers before unwinding (they may hold the
+        // closure borrow)
+        let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        drop(guard);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if panicked {
+            panic!("exec-pool worker panicked during a pooled solve");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, w: usize) {
+    let mut last_seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != last_seen {
+                    last_seen = st.generation;
+                    // A cleared job under a bumped generation means that
+                    // dispatch already completed without this worker (it
+                    // lost the wakeup race as a non-participant — `run`
+                    // only waits for workers below the job's party
+                    // count).  Not an error: keep waiting for the next
+                    // dispatch.  Participants always observe `Some`:
+                    // `run` cannot clear the job until they decremented
+                    // `remaining`.
+                    if let Some(job) = st.job {
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // worker w is party w + 1; workers beyond the job's party count
+        // skip straight back to the condvar
+        if w + 1 < job.parties {
+            // SAFETY: `run` blocks until we decrement `remaining`, so the
+            // closure is alive for the whole call.
+            let result = catch_unwind(AssertUnwindSafe(|| unsafe { (&*job.f)(w + 1) }));
+            let mut st = shared.state.lock().unwrap();
+            if result.is_err() {
+                st.panicked = true;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Default total parallelism: `PIPEDP_EXEC_THREADS`, else the machine's
+/// available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("PIPEDP_EXEC_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|t| t.get())
+                .unwrap_or(4)
+        })
+}
+
+static GLOBAL: OnceLock<ExecPool> = OnceLock::new();
+
+/// The process-wide pool every pooled executor shares.  Sized by
+/// [`default_threads`] on first use; [`global_with_hint`] lets the server
+/// (or a bench) size it explicitly *before* first use.
+pub fn global() -> &'static ExecPool {
+    GLOBAL.get_or_init(|| ExecPool::new(default_threads()))
+}
+
+/// [`global`], sizing the pool with `threads` if (and only if) it has not
+/// been created yet — later hints are ignored, matching `OnceLock`
+/// semantics.  `0` means [`default_threads`].
+pub fn global_with_hint(threads: usize) -> &'static ExecPool {
+    GLOBAL.get_or_init(|| {
+        ExecPool::new(if threads == 0 {
+            default_threads()
+        } else {
+            threads
+        })
+    })
+}
+
+/// Stats of the global pool if it exists (a stats request must not
+/// lazily spawn workers).
+pub fn try_global_stats() -> Option<PoolStats> {
+    GLOBAL.get().map(|p| p.stats())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+
+    #[test]
+    fn run_executes_every_party_exactly_once() {
+        let pool = ExecPool::new(4);
+        for parties in [1usize, 2, 3, 4, 9] {
+            let hits: Vec<TestCounter> = (0..4).map(|_| TestCounter::new(0)).collect();
+            pool.run(parties, |p| {
+                hits[p].fetch_add(1, Ordering::Relaxed);
+            });
+            let want = parties.min(4);
+            for (p, h) in hits.iter().enumerate() {
+                let expected = u64::from(p < want);
+                assert_eq!(
+                    h.load(Ordering::Relaxed),
+                    expected,
+                    "parties={parties} party={p}"
+                );
+            }
+        }
+        assert_eq!(pool.stats().solves, 5);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_solves() {
+        // the whole point: repeated runs must not spawn threads; assert
+        // the resident workers survive 100 dispatches and the counters add
+        // up (a spawn-per-solve implementation would leak or re-create)
+        let pool = ExecPool::new(3);
+        let total = TestCounter::new(0);
+        for _ in 0..100 {
+            pool.run(3, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 300);
+        assert_eq!(pool.stats().solves, 100);
+        assert_eq!(pool.stats().active, 0);
+    }
+
+    #[test]
+    fn partial_party_runs_do_not_kill_lagging_workers() {
+        // regression: a non-participating worker can wake only after the
+        // dispatch completed and the job slot was cleared; it must treat
+        // that as "not needed" and keep waiting — not die on a missing
+        // job.  With the bug, workers 2-3 eventually die and the final
+        // full-width run deadlocks (caught by the test timeout).
+        let pool = ExecPool::new(4);
+        for _ in 0..200 {
+            pool.run(2, |_| {});
+        }
+        let hits = TestCounter::new(0);
+        pool.run(4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn sense_barrier_orders_phases() {
+        // classic phased-write test: every participant writes its slot,
+        // waits, then must observe every other slot of the phase
+        let pool = ExecPool::new(4);
+        const PHASES: usize = 50;
+        let slots: Vec<TestCounter> = (0..4).map(|_| TestCounter::new(0)).collect();
+        let barrier = SenseBarrier::new(4);
+        pool.run(4, |p| {
+            let mut w = barrier.waiter();
+            for phase in 1..=PHASES as u64 {
+                slots[p].store(phase, Ordering::Relaxed);
+                w.wait();
+                for (i, s) in slots.iter().enumerate() {
+                    let v = s.load(Ordering::Relaxed);
+                    assert!(
+                        v == phase || v == phase + 1,
+                        "party {p} phase {phase}: slot {i} = {v}"
+                    );
+                }
+                w.wait();
+            }
+        });
+        assert_eq!(barrier.rounds(), 2 * PHASES as u64);
+    }
+
+    #[test]
+    fn concurrent_runs_serialize_and_both_complete() {
+        let pool = std::sync::Arc::new(ExecPool::new(2));
+        let total = std::sync::Arc::new(TestCounter::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let total = total.clone();
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        pool.run(2, |_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 25 * 2);
+        assert_eq!(pool.stats().active, 0);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ExecPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, |p| {
+                if p == 1 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must reach the caller");
+        // the pool still works afterwards
+        let hits = TestCounter::new(0);
+        pool.run(2, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ExecPool::new(4);
+        pool.run(4, |_| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn single_party_runs_inline() {
+        let pool = ExecPool::new(1);
+        let hit = TestCounter::new(0);
+        pool.run(8, |p| {
+            assert_eq!(p, 0);
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+}

@@ -14,6 +14,7 @@
 
 pub mod client;
 pub mod engine;
+pub mod exec_pool;
 pub mod registry;
 
 /// Default artifact directory, overridable with `PIPEDP_ARTIFACTS`.

@@ -25,6 +25,7 @@ use std::sync::Barrier;
 
 use crate::core::problem::SdpProblem;
 use crate::core::schedule::SdpSchedule;
+use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
 use crate::sdp::naive::SharedTable;
 
 /// Step-synchronous pipeline solve (Fig. 2 verbatim).
@@ -121,6 +122,59 @@ pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
     st
 }
 
+/// Pooled pipeline executor (DESIGN.md §7): the same contiguous-chunk
+/// lane assignment as [`solve_threaded`], but on resident
+/// [`ExecPool`] workers with one [`SenseBarrier`] wait per outer step —
+/// no per-solve spawn/join and no mutex-condvar barrier.  The S-DP
+/// freshness bound (module docs) is the safety argument, unchanged.
+pub fn execute_pooled(p: &SdpProblem, pool: &ExecPool, threads: usize) -> Vec<i64> {
+    let parties = threads.max(1).min(pool.threads()).min(p.k());
+    if parties == 1 {
+        return solve(p);
+    }
+    let mut st = p.initial_table();
+    let (n, k, a1) = (p.n, p.k(), p.a1());
+    let op = p.op;
+    let offsets = &p.offsets;
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let chunk = k.div_ceil(parties);
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        // worker t owns the contiguous lanes j = jlo..=jhi
+        let jlo = (t * chunk + 1).min(k + 1);
+        let jhi = ((t + 1) * chunk).min(k);
+        for i in a1..=(n + k - 2) {
+            for j in jlo..=jhi {
+                if j > i + 1 {
+                    break; // pipe not filled this deep yet
+                }
+                let ij = i - j + 1;
+                if ij >= a1 && ij < n {
+                    let a = offsets[j - 1] as usize;
+                    // SAFETY: identical disjointness/freshness argument
+                    // to `solve_threaded`; steps are barrier-separated.
+                    unsafe {
+                        let v = st_ptr.read(ij - a);
+                        let cur = st_ptr.read(ij);
+                        let newv = if j == 1 { v } else { op.apply(cur, v) };
+                        st_ptr.write(ij, newv);
+                    }
+                }
+            }
+            waiter.wait();
+        }
+    });
+    st
+}
+
+/// Convenience: pooled solve on the process-wide pool — the adaptive
+/// policy's `pooled` route for S-DP.
+pub fn solve_pooled(p: &SdpProblem) -> Vec<i64> {
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled(p, pool, pool.threads())
+}
+
 /// A human-readable execution trace (regenerates the paper's Fig. 3).
 pub fn trace(p: &SdpProblem, max_steps: usize) -> String {
     let sched = SdpSchedule::new(p.n, p.offsets.clone());
@@ -193,6 +247,31 @@ mod tests {
                 Err(format!("threads={threads} n={} k={} a={:?}", p.n, p.k(), p.offsets))
             }
         });
+    }
+
+    #[test]
+    fn pooled_matches_sequential_property() {
+        let pool = ExecPool::new(8);
+        forall("pipeline pooled == seq", 24, |g| {
+            let p = testutil::random_problem(g);
+            let threads = *g.choose(&[1usize, 2, 3, 8]);
+            if execute_pooled(&p, &pool, threads) == seq::solve(&p) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "threads={threads} n={} k={} a={:?}",
+                    p.n,
+                    p.k(),
+                    p.offsets
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn solve_pooled_fibonacci() {
+        let p = SdpProblem::fibonacci(16);
+        assert_eq!(solve_pooled(&p)[15], 987);
     }
 
     #[test]

@@ -127,6 +127,116 @@ fn bad_flags_exit_1_with_message() {
 }
 
 #[test]
+fn bench_check_gates_regressions() {
+    // the CI bench-regression gate: within tolerance passes, a >30%
+    // ns/cell slowdown fails, disjoint sizes compare the intersection
+    let dir = std::env::temp_dir().join(format!("pipedp-bench-check-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("base.json");
+    let ok = dir.join("ok.json");
+    let slow = dir.join("slow.json");
+    std::fs::write(
+        &base,
+        r#"{"bench":"x","results":[{"n":64,"seq":100.0,"threaded":50.0},{"n":1024,"seq":800.0}]}"#,
+    )
+    .unwrap();
+    // n=1024 skipped (fast mode), n=64 within 30%
+    std::fs::write(
+        &ok,
+        r#"{"bench":"x","results":[{"n":64,"seq":120.0,"threaded":55.0}]}"#,
+    )
+    .unwrap();
+    // threaded regressed 2x
+    std::fs::write(
+        &slow,
+        r#"{"bench":"x","results":[{"n":64,"seq":100.0,"threaded":100.0}]}"#,
+    )
+    .unwrap();
+    let base_s = base.to_str().unwrap();
+    let out = pipedp(&["bench-check", "--baseline", base_s, "--current", ok.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout(&out).contains("OK"), "{}", stdout(&out));
+    let out = pipedp(&[
+        "bench-check",
+        "--baseline",
+        base_s,
+        "--current",
+        slow.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("REGRESSION"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // relative mode: a uniformly slower machine passes (ratios to seq
+    // unchanged), a relative executor regression still fails, and a
+    // thread-count mismatch skips the pool-width-dependent column
+    let base8 = dir.join("base8.json");
+    std::fs::write(
+        &base8,
+        r#"{"threads":8,"results":[{"n":64,"seq":100.0,"pipeline":110.0,"threaded":50.0}]}"#,
+    )
+    .unwrap();
+    let slower_machine = dir.join("slower.json");
+    std::fs::write(
+        &slower_machine,
+        r#"{"threads":8,"results":[{"n":64,"seq":300.0,"pipeline":330.0,"threaded":150.0}]}"#,
+    )
+    .unwrap();
+    let rel_bad = dir.join("rel_bad.json");
+    std::fs::write(
+        &rel_bad,
+        r#"{"threads":8,"results":[{"n":64,"seq":100.0,"pipeline":200.0,"threaded":50.0}]}"#,
+    )
+    .unwrap();
+    let fewer_threads = dir.join("fewer.json");
+    std::fs::write(
+        &fewer_threads,
+        r#"{"threads":2,"results":[{"n":64,"seq":100.0,"pipeline":110.0,"threaded":400.0}]}"#,
+    )
+    .unwrap();
+    let base8_s = base8.to_str().unwrap();
+    let rel = |current: &std::path::Path| {
+        pipedp(&[
+            "bench-check",
+            "--baseline",
+            base8_s,
+            "--current",
+            current.to_str().unwrap(),
+            "--relative-to",
+            "seq",
+        ])
+    };
+    let out = rel(&slower_machine);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = rel(&rel_bad);
+    assert_eq!(out.status.code(), Some(1), "pipeline/seq doubled must fail");
+    let out = rel(&fewer_threads);
+    assert!(
+        out.status.success(),
+        "threaded skipped on thread mismatch: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout(&out).contains("skipping"), "{}", stdout(&out));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_accepts_exec_threads_flag() {
+    // bad value must be rejected by the flag parser (exit 1), proving the
+    // flag is wired; a full serve run is covered by the e2e suite
+    let out = pipedp(&["serve", "--exec-threads", "not-a-number"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("exec-threads"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn xla_backend_via_cli_when_artifacts_exist() {
     if !std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists() {
         return;

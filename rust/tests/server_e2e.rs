@@ -21,6 +21,7 @@ fn start_server() -> Server {
         allow_engineless: true,
         warm: true,
         queue_cap: 0,
+        exec_threads: 0,
     })
     .expect("server starts")
 }
@@ -63,7 +64,11 @@ fn fibonacci_round_trip() {
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
     assert_eq!(resp.value, 2178309); // fib(32) with ST[0]=ST[1]=1
-    assert_eq!(resp.served_by, "native:sdp_pipeline");
+    assert!(
+        resp.served_by.starts_with("native:sdp_pipeline["),
+        "{}",
+        resp.served_by
+    );
 }
 
 #[test]
@@ -110,7 +115,11 @@ fn align_round_trip_all_variants() {
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
     assert_eq!(resp.value, 3);
-    assert_eq!(resp.served_by, "native:align_wavefront");
+    assert!(
+        resp.served_by.starts_with("native:align_wavefront["),
+        "{}",
+        resp.served_by
+    );
     assert_eq!(resp.table.unwrap(), want_table);
 
     // edit distance through the auto route (small grid → native)
@@ -154,13 +163,20 @@ fn align_round_trip_all_variants() {
     assert_eq!(resp.value, want);
 }
 
-/// Repeated align shapes must be served from the process-wide schedule
-/// cache, exactly like MCM sizes.
+/// Repeated shapes must be served from the process-wide schedule cache.
+///
+/// The cache-hit assertion drives the *faithful* MCM variant: its native
+/// path always executes a compiled schedule, whereas the adaptive
+/// executor policy (DESIGN.md §7) may legitimately serve a small align
+/// or corrected-MCM request through the sequential oracle, which touches
+/// no schedule at all.  Repeated align shapes still round-trip
+/// identically (answer stability is asserted), whichever executor the
+/// policy picked.
 #[test]
-fn align_schedule_cache_serves_repeated_shapes() {
+fn schedule_cache_serves_repeated_shapes() {
     let server = start_server();
     let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
-    // distinctive 43×29 grid: no other test touches this shape
+    // distinctive grid: no other test touches this shape
     let mut rng = pipedp::util::rng::Rng::seeded(61);
     let p = AlignProblem::random(&mut rng, 29..44, 4, AlignVariant::Lcs);
     let want = pipedp::align::seq::score(&p);
@@ -177,21 +193,26 @@ fn align_schedule_cache_serves_repeated_shapes() {
     let first = call(&mut client, &p);
     assert!(first.ok);
     assert_eq!(first.value, want);
-    let hits_before = {
-        let resp = client
-            .call(Request {
-                id: 0,
-                body: RequestBody::Stats,
-                backend: Backend::Auto,
-                full: false,
-            })
-            .unwrap();
-        resp.stats.unwrap().i64_field("sched_cache_hits").unwrap()
-    };
     let second = call(&mut client, &p);
     assert!(second.ok);
     assert_eq!(second.value, want);
-    let hits_after = {
+
+    // distinctive chain length (no other test solves faithful n=31)
+    let mcm = McmProblem::random(&mut rng, 31, 20);
+    let mcm_call = |client: &mut Client| {
+        client
+            .call(Request {
+                id: 0,
+                body: RequestBody::Mcm {
+                    problem: mcm.clone(),
+                    variant: McmVariant::PaperFaithful,
+                },
+                backend: Backend::Native,
+                full: false,
+            })
+            .unwrap()
+    };
+    let stats_hits = |client: &mut Client| {
         let resp = client
             .call(Request {
                 id: 0,
@@ -202,9 +223,16 @@ fn align_schedule_cache_serves_repeated_shapes() {
             .unwrap();
         resp.stats.unwrap().i64_field("sched_cache_hits").unwrap()
     };
+    let first = mcm_call(&mut client);
+    assert!(first.ok);
+    let hits_before = stats_hits(&mut client);
+    let second = mcm_call(&mut client);
+    assert!(second.ok);
+    assert_eq!(first.value, second.value);
+    let hits_after = stats_hits(&mut client);
     assert!(
         hits_after > hits_before,
-        "repeat align shape must hit the schedule cache ({hits_before} -> {hits_after})"
+        "repeat shape must hit the schedule cache ({hits_before} -> {hits_after})"
     );
 }
 
@@ -447,6 +475,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
         allow_engineless: true,
         warm: false,
         queue_cap: 2,
+        exec_threads: 0,
     })
     .expect("server starts");
     let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
