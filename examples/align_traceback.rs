@@ -1,0 +1,74 @@
+//! Sequence-alignment traceback end-to-end: solve all three variants
+//! over the recording wavefront pipeline, reconstruct the edit script /
+//! aligned pairs / local span, and replay each script to prove it
+//! reproduces the reported score (DESIGN.md §8).
+//!
+//! Run: `cargo run --release --example align_traceback -- [a…] -- [b…]`
+//! e.g. `cargo run --release --example align_traceback -- 1 2 3 4 7 -- 2 3 9 4`
+
+use pipedp::align::{seq, wavefront};
+use pipedp::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+use pipedp::core::traceback;
+use pipedp::util::table::Table;
+
+fn main() -> pipedp::Result<()> {
+    // two symbol lists separated by a bare `--`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (a, b): (Vec<i64>, Vec<i64>) = match args.iter().position(|s| s == "--") {
+        Some(split) => (
+            args[..split].iter().filter_map(|s| s.parse().ok()).collect(),
+            args[split + 1..].iter().filter_map(|s| s.parse().ok()).collect(),
+        ),
+        None => (Vec::new(), Vec::new()),
+    };
+    let (a, b): (Vec<i64>, Vec<i64>) = if a.is_empty() || b.is_empty() {
+        // LCS("ABCBDAB", "BDCABA") textbook pair, symbol-encoded
+        (vec![1, 2, 3, 2, 4, 1, 2], vec![2, 4, 3, 1, 2, 1])
+    } else {
+        (a, b)
+    };
+    println!("a = {a:?}\nb = {b:?}\n");
+
+    let mut t = Table::new(vec![
+        "variant",
+        "score",
+        "script",
+        "span a",
+        "span b",
+        "pairs",
+        "replay ok?",
+    ]);
+    for variant in AlignVariant::ALL {
+        let p = AlignProblem::new(a.clone(), b.clone(), variant, AlignScoring::default())?;
+        // the recording wavefront executor fills the 2-bit move sidecar
+        // alongside the table; reconstruction walks it back
+        let (st, moves) = wavefront::solve_recorded(&p);
+        let sol = traceback::align_solution(&p, &st, &moves);
+        let replay_ok = sol.score == seq::score(&p);
+        t.row(vec![
+            variant.name().into(),
+            sol.score.to_string(),
+            sol.ops.clone(),
+            format!("[{}..{}]", sol.start.0, sol.end.0),
+            format!("[{}..{}]", sol.start.1, sol.end.1),
+            sol.pairs.len().to_string(),
+            if replay_ok { "yes".into() } else { "NO ⚠".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "\nscript ops: M aligned match, S aligned substitution, D consume a[i], \
+         I consume b[j]; spans are the traced window (whole sequences for \
+         lcs/edit, the optimal local window for local)."
+    );
+
+    // the same reconstruction over the wire: {"kind": "align",
+    // "want_solution": true} — see docs/PROTOCOL.md
+    let p = AlignProblem::lcs(a, b)?;
+    let sol = traceback::align_solution_from_table(&p, &seq::solve(&p));
+    println!(
+        "\nwire shape (docs/PROTOCOL.md): {}",
+        sol.to_json().to_string()
+    );
+    Ok(())
+}

@@ -58,6 +58,7 @@ fn main() -> pipedp::Result<()> {
                 },
                 backend: Backend::Auto,
                 full: false,
+                want_solution: false,
             }
         } else {
             let k = 4 + (i % 3);
@@ -70,6 +71,7 @@ fn main() -> pipedp::Result<()> {
                 body: RequestBody::Sdp(SdpProblem::new(n, offsets, Op::Min, init).unwrap()),
                 backend: Backend::Auto,
                 full: false,
+                want_solution: false,
             }
         }
     };

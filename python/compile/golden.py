@@ -76,12 +76,18 @@ def mcm_fixture() -> list:
         linear = ref.mcm_linear_ref(dims_arr)
         faithful_out = ref.mcm_schedule_exec_ref(dims_arr, S.faithful(n).to_tensor())
         corrected_out = ref.mcm_schedule_exec_ref(dims_arr, S.corrected(n).to_tensor())
+        splits = ref.mcm_splits_ref(dims_arr)
+        parens = ref.mcm_parens_ref(dims_arr)
+        # the sidecar must reproduce the classic reconstruction exactly
+        assert ref.mcm_parens_from_splits_ref(n, splits) == parens
         cases.append({
             "dims": [int(d) for d in dims],
             "linear_table": linear.tolist(),
             "faithful_exec": faithful_out.tolist(),
             "corrected_exec": corrected_out.tolist(),
-            "parens": ref.mcm_parens_ref(dims_arr),
+            "parens": parens,
+            # lowest-argmin split per linearized cell (DESIGN.md §8)
+            "splits": [int(s) for s in splits],
         })
     return cases
 
@@ -142,6 +148,16 @@ def align_fixture() -> list:
         a = [int(x) for x in a]
         b = [int(x) for x in b]
         lcs, edit, local = _align_tables(a, b)
+        solutions = {}
+        for variant, table in (("lcs", lcs), ("edit", edit), ("local", local)):
+            # the move-recording solver must agree with the plain tables
+            rec_table, _ = ref.align_moves_ref(a, b, variant)
+            assert rec_table == table, (variant, a, b)
+            sol = ref.align_solution_ref(a, b, variant)
+            # the replayed script score must equal the variant's scalar
+            want = table[-1] if variant != "local" else max(table)
+            assert sol["score"] == want, (variant, a, b, sol, want)
+            solutions[f"{variant}_solution"] = sol
         cases.append({
             "a": a,
             "b": b,
@@ -150,6 +166,8 @@ def align_fixture() -> list:
             "local_table": local,
             # scoring used for local_table: [match, mismatch, gap]
             "local_scoring": [2, -1, -1],
+            # traceback solutions under the pinned tie-break (DESIGN.md §8)
+            **solutions,
         })
     return cases
 

@@ -139,3 +139,184 @@ def mcm_parens_ref(dims: np.ndarray) -> str:
         return f"({emit(r, m)}{emit(m + 1, c)})"
 
     return emit(0, n - 1)
+
+
+# ---------------------------------------------------------------------------
+# Solution reconstruction (traceback) references — DESIGN.md §8
+# ---------------------------------------------------------------------------
+#
+# These pin the deterministic tie-break rules the Rust traceback subsystem
+# (rust/src/core/traceback.rs) must reproduce bit-for-bit:
+#
+# * MCM: the recorded split of cell (r, c) is the LOWEST m minimizing
+#   t[r,m] + t[m+1,c] + w  (ascending scan, strict improvement) — the same
+#   argmin the classic CLRS loop keeps.
+# * alignment: the move of cell (i, j) is chosen with the fixed preference
+#   diagonal > up > left among the optimal candidates; a local-alignment
+#   cell whose value is 0 records STOP (the traceback terminator).
+
+MOVE_STOP, MOVE_DIAG, MOVE_UP, MOVE_LEFT = 0, 1, 2, 3
+
+
+def mcm_splits_ref(dims: np.ndarray) -> list:
+    """Lowest-argmin split per linearized cell (0 for the length-1 cells).
+
+    Entry ``cell_index(n, r, c)`` holds the m of the optimal top split
+    ``(A_{r+1..m+1})(A_{m+2..c+1})`` (0-based, ``r <= m < c``); the
+    diagonal (single-matrix) cells hold 0.
+    """
+    dims = np.asarray(dims, dtype=np.int64)
+    n = dims.shape[0] - 1
+    t = np.zeros((n, n), dtype=np.int64)
+    splits = [0] * sched_mod.num_cells(n)
+    for d in range(1, n):
+        for r in range(0, n - d):
+            c = r + d
+            best, bm = None, r
+            for m in range(r, c):
+                v = t[r, m] + t[m + 1, c] + dims[r] * dims[m + 1] * dims[c + 1]
+                if best is None or v < best:
+                    best, bm = v, m
+            t[r, c] = best
+            splits[sched_mod.cell_index(n, r, c)] = bm
+    return splits
+
+
+def mcm_parens_from_splits_ref(n: int, splits: list) -> str:
+    """Rebuild the parenthesization from a linearized split sidecar."""
+
+    def emit(r: int, c: int) -> str:
+        if r == c:
+            return f"A{r + 1}"
+        m = splits[sched_mod.cell_index(n, r, c)]
+        return f"({emit(r, m)}{emit(m + 1, c)})"
+
+    return emit(0, n - 1)
+
+
+def align_cell_move_ref(variant, scoring, up, left, diag, av, bv):
+    """One alignment cell: (value, move code) under the pinned tie-break.
+
+    ``variant`` is "lcs" | "edit" | "local"; ``scoring`` is the
+    (match, mismatch, gap) triple (ignored except for "local").
+    """
+    match_s, mismatch, gap = scoring
+    if variant == "lcs":
+        if av == bv:
+            return diag + 1, MOVE_DIAG
+        return (up, MOVE_UP) if up >= left else (left, MOVE_LEFT)
+    if variant == "edit":
+        sub = diag + (1 if av != bv else 0)
+        best = min(sub, up + 1, left + 1)
+        if sub == best:
+            return best, MOVE_DIAG
+        if up + 1 == best:
+            return best, MOVE_UP
+        return best, MOVE_LEFT
+    assert variant == "local"
+    s = match_s if av == bv else mismatch
+    cands = [(diag + s, MOVE_DIAG), (up + gap, MOVE_UP), (left + gap, MOVE_LEFT)]
+    best = max(0, max(v for v, _ in cands))
+    if best == 0:
+        return 0, MOVE_STOP
+    for v, move in cands:
+        if v == best:
+            return best, move
+    raise AssertionError("unreachable")
+
+
+def align_moves_ref(a, b, variant, scoring=(2, -1, -1)):
+    """Solve the (m+1)x(n+1) table recording the per-cell move code.
+
+    Returns (flat row-major table, flat row-major moves); border cells
+    carry move 0.
+    """
+    m, n = len(a), len(b)
+    st = [[0] * (n + 1) for _ in range(m + 1)]
+    moves = [[MOVE_STOP] * (n + 1) for _ in range(m + 1)]
+    if variant == "edit":
+        for j in range(n + 1):
+            st[0][j] = j
+        for i in range(m + 1):
+            st[i][0] = i
+    for i in range(1, m + 1):
+        for j in range(1, n + 1):
+            st[i][j], moves[i][j] = align_cell_move_ref(
+                variant, scoring, st[i - 1][j], st[i][j - 1], st[i - 1][j - 1],
+                a[i - 1], b[j - 1],
+            )
+    flat = lambda t: [v for row in t for v in row]
+    return flat(st), flat(moves)
+
+
+def align_solution_ref(a, b, variant, scoring=(2, -1, -1)):
+    """Full traceback: edit script + aligned pairs + local span + score.
+
+    The script reads left-to-right: ``M`` aligned match, ``S`` aligned
+    substitution (diag, unequal symbols), ``D`` consume a[i] alone (up),
+    ``I`` consume b[j] alone (left).  ``pairs`` are the 0-based (i, j)
+    symbol index pairs of the aligned (M/S) ops.  ``start``/``end`` are
+    table coordinates: the solution spans a[start[0]:end[0]] vs
+    b[start[1]:end[1]] — the full sequences for lcs/edit, the optimal
+    local window for "local".  ``score`` replays the script (#M for lcs,
+    #S+#D+#I for edit, Σ match/mismatch/gap for local) and equals the
+    variant's scalar answer.
+    """
+    m, n = len(a), len(b)
+    st, moves = align_moves_ref(a, b, variant, scoring)
+    cols = n + 1
+    match_s, mismatch, gap = scoring
+    if variant == "local":
+        # deterministic end cell: FIRST row-major argmax (strict >)
+        ei, ej, best = 0, 0, 0
+        for i in range(m + 1):
+            for j in range(n + 1):
+                if st[i * cols + j] > best:
+                    best, ei, ej = st[i * cols + j], i, j
+    else:
+        ei, ej = m, n
+    i, j = ei, ej
+    ops, pairs = [], []
+    score = 0
+    while True:
+        if variant == "local":
+            if i == 0 or j == 0 or moves[i * cols + j] == MOVE_STOP:
+                break
+            code = moves[i * cols + j]
+        else:
+            if i == 0 and j == 0:
+                break
+            if i > 0 and j > 0:
+                code = moves[i * cols + j]
+            elif i > 0:
+                code = MOVE_UP
+            else:
+                code = MOVE_LEFT
+        if code == MOVE_DIAG:
+            matched = a[i - 1] == b[j - 1]
+            ops.append("M" if matched else "S")
+            pairs.append([i - 1, j - 1])
+            if variant == "lcs":
+                score += 1 if matched else 0
+            elif variant == "edit":
+                score += 0 if matched else 1
+            else:
+                score += match_s if matched else mismatch
+            i, j = i - 1, j - 1
+        elif code == MOVE_UP:
+            ops.append("D")
+            score += 0 if variant == "lcs" else (1 if variant == "edit" else gap)
+            i -= 1
+        else:
+            ops.append("I")
+            score += 0 if variant == "lcs" else (1 if variant == "edit" else gap)
+            j -= 1
+    ops.reverse()
+    pairs.reverse()
+    return {
+        "ops": "".join(ops),
+        "pairs": pairs,
+        "start": [i, j],
+        "end": [ei, ej],
+        "score": score,
+    }

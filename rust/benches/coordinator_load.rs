@@ -83,6 +83,7 @@ fn main() {
                                     ),
                                     backend: Backend::Native,
                                     full: false,
+                                    want_solution: false,
                                 }
                             })
                             .collect();

@@ -136,6 +136,7 @@ struct SizeResult {
     nested: f64,
     flat2p: f64,
     flat: f64,
+    rec: f64,
     pooled: f64,
 }
 
@@ -176,6 +177,22 @@ fn main() {
         });
         let (flat2p_stats, _) = measure(&cfg, || {
             *execute_flat_two_phase(&p, &sched, n).last().unwrap() as u64
+        });
+
+        // --- fused + traceback recording (the sidecar overhead the
+        // README's reconstruction note quotes — DESIGN.md §8) ----------
+        let (rec_st, rec_splits) = pipedp::mcm::pipeline::execute_recorded(&p, &sched);
+        assert_eq!(rec_st, truth, "n={n}: recording executor diverged");
+        assert_eq!(
+            pipedp::core::traceback::parenthesization(n, &rec_splits),
+            pipedp::mcm::seq::parenthesization(&p),
+            "n={n}: sidecar reconstruction diverged from the oracle"
+        );
+        let (rec_stats, _) = measure(&cfg, || {
+            *pipedp::mcm::pipeline::execute_recorded(&p, &sched)
+                .0
+                .last()
+                .unwrap() as u64
         });
         let start = sched.start.clone();
         drop(sched);
@@ -223,6 +240,7 @@ fn main() {
             nested: ns_per_cell(nested_stats.mean, n),
             flat2p: ns_per_cell(flat2p_stats.mean, n),
             flat: ns_per_cell(flat_stats.mean, n),
+            rec: ns_per_cell(rec_stats.mean, n),
             pooled: ns_per_cell(pooled_stats.mean, n),
         });
     }
@@ -251,6 +269,7 @@ fn main() {
         "PIPE nested (seed)",
         "PIPE flat 2-phase",
         "PIPE flat (shipped)",
+        "PIPE flat+traceback",
         "PIPE pooled (tile)",
         "flat/nested",
         "policy",
@@ -270,6 +289,7 @@ fn main() {
             format!("{:.1}", r.nested),
             format!("{:.1}", r.flat2p),
             format!("{:.1}", r.flat),
+            format!("{:.1}", r.rec),
             format!("{:.1} (T={})", r.pooled, r.tile),
             format!("{ratio:.2}×"),
             choice.name().to_string(),
@@ -281,6 +301,7 @@ fn main() {
             ("pipeline_nested", Json::num(r.nested)),
             ("pipeline_two_phase", Json::num(r.flat2p)),
             ("pipeline", Json::num(r.flat)),
+            ("pipeline_rec", Json::num(r.rec)),
             ("threaded", Json::num(r.pooled)),
             ("tile", Json::int(r.tile as i64)),
             ("policy", Json::str(choice.name())),
@@ -315,7 +336,9 @@ fn main() {
                      small-memory machines, PIPEDP_EXEC_THREADS to size the pool). \
                      `pipeline` is the fused flat-arena executor; `pipeline_two_phase` runs \
                      the flat arena under the seed's two-phase memory model to isolate the \
-                     layout effect from fusion; `threaded` is the pooled superstep-tiled \
+                     layout effect from fusion; `pipeline_rec` is the fused executor with \
+                     traceback-sidecar recording (DESIGN.md §8) — the delta to `pipeline` \
+                     is the cost of solution reconstruction; `threaded` is the pooled superstep-tiled \
                      executor on the persistent exec pool (steady state — resident workers, \
                      sense-reversing barrier once per superstep of `tile` steps), not the \
                      seed's spawn-per-solve scoped threads; `policy` is the executor the \

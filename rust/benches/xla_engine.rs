@@ -130,6 +130,7 @@ fn main() {
                                 },
                                 backend: Backend::Auto,
                                 full: false,
+                                want_solution: false,
                             })
                             .collect();
                         let resps = client.call_pipelined(reqs).unwrap();

@@ -8,11 +8,16 @@
 //! canonical anti-diagonal wavefront shape (Helal et al.; Ding, Gu &
 //! Sun).  Modules:
 //!
-//! * [`seq`] — classic row-major `O(mn)` DP: the oracle.
+//! * [`seq`] — classic row-major `O(mn)` DP: the oracle (plain and
+//!   move-recording forms).
 //! * [`wavefront`] — executors over the compiled
 //!   [`crate::core::schedule::AlignSchedule`] flat arena: the fused
 //!   step-synchronous sweep and the real multi-threaded executor with
-//!   contiguous lane assignment.
+//!   contiguous lane assignment.  Each has a `_recorded` sibling that
+//!   additionally fills the packed 2-bit move sidecar
+//!   ([`crate::core::traceback::MoveArena`]) from which
+//!   [`crate::core::traceback::align_solution`] reconstructs the edit
+//!   script, aligned pairs, and local span (DESIGN.md §8).
 
 pub mod seq;
 pub mod wavefront;

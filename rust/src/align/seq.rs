@@ -26,6 +26,32 @@ pub fn score(p: &AlignProblem) -> i64 {
     p.scalar(&solve(p))
 }
 
+/// [`solve`] + per-cell move recording through the shared traceback
+/// recurrence ([`crate::core::traceback::cell_move`]) — the sequential
+/// oracle the recording wavefront executors are pinned against
+/// (DESIGN.md §8).
+pub fn solve_with_moves(p: &AlignProblem) -> (Vec<i64>, crate::core::traceback::MoveArena) {
+    let (m, n) = (p.rows(), p.cols());
+    let mut st = p.initial_table();
+    let moves = crate::core::traceback::MoveArena::new(st.len());
+    for i in 1..=m {
+        for j in 1..=n {
+            let (v, code) = crate::core::traceback::cell_move(
+                p.variant,
+                &p.scoring,
+                st[grid::cell_index(n, i - 1, j)],
+                st[grid::cell_index(n, i, j - 1)],
+                st[grid::cell_index(n, i - 1, j - 1)],
+                p.a[i - 1],
+                p.b[j - 1],
+            );
+            st[grid::cell_index(n, i, j)] = v;
+            moves.set(grid::cell_index(n, i, j), code);
+        }
+    }
+    (st, moves)
+}
+
 /// One cell of the recurrence — shared with the wavefront executors so
 /// the oracle and the pipeline cannot drift apart semantically (they
 /// differ only in traversal order, which hazard-freedom makes
@@ -131,6 +157,28 @@ mod tests {
         .unwrap();
         assert!(solve(&p).iter().all(|&v| v >= 0));
         assert_eq!(score(&p), 0);
+    }
+
+    #[test]
+    fn solve_with_moves_table_matches_plain_solve() {
+        use crate::prop::forall;
+        forall("seq moves table == solve", 60, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..40, 4, v);
+            let (st, moves) = solve_with_moves(&p);
+            if st != solve(&p) {
+                return Err(format!("{v:?} {}x{} table", p.rows(), p.cols()));
+            }
+            // recorded moves == from-table recompute (one tie-break)
+            let recomputed = crate::core::traceback::align_moves_from_table(&p, &st);
+            for idx in 0..st.len() {
+                if moves.get(idx) != recomputed.get(idx) {
+                    return Err(format!("{v:?}: move mismatch at cell {idx}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

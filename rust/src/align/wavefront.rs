@@ -17,6 +17,7 @@ use crate::align::seq;
 use crate::core::cache;
 use crate::core::problem::AlignProblem;
 use crate::core::schedule::{default_align_tile, AlignSchedule};
+use crate::core::traceback::{cell_move, MoveArena};
 use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
 use crate::sdp::naive::SharedTable;
 
@@ -63,6 +64,42 @@ pub fn execute(p: &AlignProblem, sched: &AlignSchedule) -> Vec<i64> {
 pub fn solve(p: &AlignProblem) -> Vec<i64> {
     let sched = cache::align_schedule(p.rows(), p.cols());
     execute(p, &sched)
+}
+
+/// [`execute`] + per-cell move recording (DESIGN.md §8): the fused flat
+/// sweep evaluating [`crate::core::traceback::cell_move`] per lane and
+/// publishing each cell's 2-bit code into the packed sidecar.  Each cell
+/// is written exactly once — the same write-once invariant the table
+/// itself has — so recording adds no hazards.
+pub fn execute_recorded(p: &AlignProblem, sched: &AlignSchedule) -> (Vec<i64>, MoveArena) {
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    let mut st = p.initial_table();
+    let moves = MoveArena::new(st.len());
+    for i in 0..sched.num_terms() {
+        let (v, code) = cell_move(
+            p.variant,
+            &p.scoring,
+            st[sched.up[i] as usize],
+            st[sched.left[i] as usize],
+            st[sched.diag[i] as usize],
+            p.a[sched.ai[i] as usize],
+            p.b[sched.bj[i] as usize],
+        );
+        st[sched.tgt[i] as usize] = v;
+        moves.set(sched.tgt[i] as usize, code);
+    }
+    (st, moves)
+}
+
+/// Convenience: recorded solve over the cached untiled wavefront — the
+/// router's `fused` traceback route.
+pub fn solve_recorded(p: &AlignProblem) -> (Vec<i64>, MoveArena) {
+    let sched = cache::align_schedule(p.rows(), p.cols());
+    execute_recorded(p, &sched)
 }
 
 /// Real multi-threaded executor: the ≤ `min(m, n)` lanes of each step are
@@ -129,6 +166,73 @@ pub fn execute_threaded(p: &AlignProblem, sched: &AlignSchedule, threads: usize)
         }
     });
     st
+}
+
+/// [`execute_threaded`] + move recording.  The packed sidecar is safe
+/// under the same argument as the table: writes are lane-distinct within
+/// a step, and the [`MoveArena`]'s relaxed `fetch_or` publication makes
+/// byte-sharing neighbours race-free (DESIGN.md §8).
+pub fn execute_threaded_recorded(
+    p: &AlignProblem,
+    sched: &AlignSchedule,
+    threads: usize,
+) -> (Vec<i64>, MoveArena) {
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    assert_eq!(
+        sched.tile, 1,
+        "execute_threaded requires an untiled schedule; use execute_pooled for tiled ones"
+    );
+    let threads = threads.max(1).min(sched.max_width().max(1));
+    if threads == 1 {
+        return execute_recorded(p, sched);
+    }
+    let mut st = p.initial_table();
+    let moves = MoveArena::new(st.len());
+    let barrier = Barrier::new(threads);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let variant = p.variant;
+    let scoring = p.scoring;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let st_ptr = &st_ptr;
+            let moves = &moves;
+            let a = &p.a;
+            let b = &p.b;
+            let scoring = &scoring;
+            scope.spawn(move || {
+                for s in 0..sched.num_steps() {
+                    let view = sched.step_view(s);
+                    let chunk = view.len().div_ceil(threads);
+                    let lo = (t * chunk).min(view.len());
+                    let hi = ((t + 1) * chunk).min(view.len());
+                    for lane in lo..hi {
+                        // SAFETY: as in `execute_threaded`; the sidecar
+                        // write is the cell's only one and is atomic.
+                        unsafe {
+                            let (v, code) = cell_move(
+                                variant,
+                                scoring,
+                                st_ptr.read(view.up[lane] as usize),
+                                st_ptr.read(view.left[lane] as usize),
+                                st_ptr.read(view.diag[lane] as usize),
+                                a[view.ai[lane] as usize],
+                                b[view.bj[lane] as usize],
+                            );
+                            st_ptr.write(view.tgt[lane] as usize, v);
+                            moves.set(view.tgt[lane] as usize, code);
+                        }
+                    }
+                    barrier.wait(); // end of outer step
+                }
+            });
+        }
+    });
+    (st, moves)
 }
 
 /// Pooled tiled executor (DESIGN.md §7): resident [`ExecPool`] workers,
@@ -219,6 +323,93 @@ pub fn execute_pooled_counted(
         }
     });
     (st, barrier.rounds())
+}
+
+/// [`execute_pooled`] + move recording: block (or lane) ownership keeps
+/// each cell's single sidecar write on the worker computing it, and the
+/// [`MoveArena`]'s atomic publication covers byte-sharing across block
+/// boundaries (DESIGN.md §8).
+pub fn execute_pooled_recorded(
+    p: &AlignProblem,
+    sched: &AlignSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<i64>, MoveArena) {
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    let parties = threads.max(1).min(pool.threads());
+    if parties <= 1 {
+        return execute_recorded(p, sched);
+    }
+    let mut st = p.initial_table();
+    let moves = MoveArena::new(st.len());
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let variant = p.variant;
+    let scoring = p.scoring;
+    let a = &p.a;
+    let b = &p.b;
+    let blocked = sched.tile > 1;
+    let moves_ref = &moves;
+    let do_lane = |i: usize| {
+        // SAFETY: as in `execute_pooled`; the sidecar write is the
+        // cell's only one and is atomic.
+        unsafe {
+            let (v, code) = cell_move(
+                variant,
+                &scoring,
+                st_ptr.read(sched.up[i] as usize),
+                st_ptr.read(sched.left[i] as usize),
+                st_ptr.read(sched.diag[i] as usize),
+                a[sched.ai[i] as usize],
+                b[sched.bj[i] as usize],
+            );
+            st_ptr.write(sched.tgt[i] as usize, v);
+            moves_ref.set(sched.tgt[i] as usize, code);
+        }
+    };
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for s in 0..sched.num_steps() {
+            if blocked {
+                for (k, u) in sched.step_unit_range(s).enumerate() {
+                    if k % parties != t {
+                        continue;
+                    }
+                    for i in sched.unit_range(u) {
+                        do_lane(i);
+                    }
+                }
+            } else {
+                for (k, i) in sched.step_range(s).enumerate() {
+                    if k % parties != t {
+                        continue;
+                    }
+                    do_lane(i);
+                }
+            }
+            waiter.wait(); // end of (block-)anti-diagonal
+        }
+    });
+    (st, moves)
+}
+
+/// Convenience: recorded solve on the process-wide pool with the cached
+/// default-blocked schedule — the router's `pooled` traceback route.
+/// Falls back to the fused recorded sweep for grids whose short side
+/// does not exceed the block tile, like [`solve_pooled`].
+pub fn solve_pooled_recorded(p: &AlignProblem) -> (Vec<i64>, MoveArena) {
+    let (rows, cols) = (p.rows(), p.cols());
+    let tile = default_align_tile(rows, cols);
+    if rows.min(cols) <= tile {
+        return solve_recorded(p);
+    }
+    let sched = cache::align_schedule_tiled(rows, cols, tile);
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled_recorded(p, &sched, pool, pool.threads())
 }
 
 /// Convenience: solve on the process-wide pool with the cached
@@ -333,6 +524,97 @@ mod tests {
                 ))
             }
         });
+    }
+
+    #[test]
+    fn recorded_solution_cost_matches_oracle_property() {
+        // the ISSUE's property matrix: reconstruction from the pipeline
+        // sidecar replays to the sequential oracle's score on random
+        // instances up to n = 128, all variants, threads ∈ {1, 2, 8}
+        use crate::core::traceback::align_solution;
+        let pool = ExecPool::new(8);
+        forall("recorded solution replay == oracle", 40, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let big = g.usize(0..8) == 0;
+            let range = if big { 64..129 } else { 1..48 };
+            let p = AlignProblem::random(&mut rng, range, 4, v);
+            let want = seq::score(&p);
+            let threads = *g.choose(&[1usize, 2, 8]);
+            let sched =
+                crate::core::schedule::AlignSchedule::compile(p.rows(), p.cols());
+            let (st, moves) = execute_threaded_recorded(&p, &sched, threads);
+            let sol = align_solution(&p, &st, &moves);
+            if sol.score != want {
+                return Err(format!(
+                    "{v:?} {}x{} threads={threads}: {} != {want}",
+                    p.rows(),
+                    p.cols(),
+                    sol.score
+                ));
+            }
+            let tile = *g.choose(&[2usize, 3, 8]);
+            let tsched = crate::core::schedule::AlignSchedule::compile_tiled(
+                p.rows(),
+                p.cols(),
+                tile,
+            );
+            let (pst, pmoves) = execute_pooled_recorded(&p, &tsched, &pool, threads);
+            let psol = align_solution(&p, &pst, &pmoves);
+            if psol.score != want {
+                return Err(format!(
+                    "{v:?} {}x{} pooled tile={tile} threads={threads}: {} != {want}",
+                    p.rows(),
+                    p.cols(),
+                    psol.score
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recorded_moves_exactly_match_seq_tiebreak() {
+        // bit-identical sidecars under the deterministic tie-break —
+        // fused, threaded and pooled recorders vs the sequential oracle
+        let pool = ExecPool::new(3);
+        forall("recorded moves == seq moves", 30, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..50, 4, v);
+            let (want_st, want_moves) = seq::solve_with_moves(&p);
+            let sched =
+                crate::core::schedule::AlignSchedule::compile(p.rows(), p.cols());
+            let (st, moves) = execute_recorded(&p, &sched);
+            if st != want_st {
+                return Err(format!("{v:?}: fused table diverged"));
+            }
+            let tsched =
+                crate::core::schedule::AlignSchedule::compile_tiled(p.rows(), p.cols(), 4);
+            let (_, tmoves) = execute_threaded_recorded(&p, &sched, 3);
+            let (_, pmoves) = execute_pooled_recorded(&p, &tsched, &pool, 3);
+            for idx in 0..want_st.len() {
+                let w = want_moves.get(idx);
+                if moves.get(idx) != w || tmoves.get(idx) != w || pmoves.get(idx) != w {
+                    return Err(format!("{v:?}: move mismatch at cell {idx}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_recorded_agrees_with_solve() {
+        let mut rng = crate::util::rng::Rng::seeded(97);
+        for v in AlignVariant::ALL {
+            let p = AlignProblem::random(&mut rng, 10..40, 4, v);
+            let (st, _) = solve_recorded(&p);
+            assert_eq!(st, solve(&p), "{v:?}");
+            let (pst, pmoves) = solve_pooled_recorded(&p);
+            assert_eq!(pst, solve(&p), "{v:?}");
+            let sol = crate::core::traceback::align_solution(&p, &pst, &pmoves);
+            assert_eq!(sol.score, seq::score(&p), "{v:?}");
+        }
     }
 
     #[test]

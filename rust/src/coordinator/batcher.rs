@@ -341,6 +341,7 @@ mod tests {
             body: RequestBody::Sdp(SdpProblem::fibonacci(16)),
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         }
     }
 
@@ -352,6 +353,7 @@ mod tests {
             body: RequestBody::Sdp(SdpProblem::fibonacci(32)),
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         }
     }
 

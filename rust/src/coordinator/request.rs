@@ -1,4 +1,9 @@
 //! Wire protocol: line-delimited JSON requests/responses.
+//!
+//! The full protocol — every request kind, field, reply shape, the
+//! `overloaded` shed semantics and the id-correlation rules pipelined
+//! clients rely on — is specified in `docs/PROTOCOL.md`; this module is
+//! its reference implementation.
 
 use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
 use crate::core::schedule::McmVariant;
@@ -44,6 +49,11 @@ pub struct Request {
     pub backend: Backend,
     /// Return the full solved table (default: scalar summary only).
     pub full: bool,
+    /// Reconstruct and return the optimal solution (DESIGN.md §8): the
+    /// parenthesization for `mcm` (Corrected only), the edit script +
+    /// span for `align`.  Ignored by `sdp`/`stats`, which have no
+    /// solution structure beyond the table itself (docs/PROTOCOL.md).
+    pub want_solution: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -69,7 +79,18 @@ impl Request {
             Some(b) => Backend::parse(b.as_str().unwrap_or("?"))?,
             None => Backend::Auto,
         };
-        let full = v.get("full").and_then(|b| b.as_bool()).unwrap_or(false);
+        // absent flags default to false; a *present* flag of the wrong
+        // type is a typed error, like the string/scoring fields below
+        let bool_field = |key: &str| -> Result<bool> {
+            match v.get(key) {
+                None => Ok(false),
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| Error::Json(format!("field '{key}' is not a boolean"))),
+            }
+        };
+        let full = bool_field("full")?;
+        let want_solution = bool_field("want_solution")?;
         let body = match v.str_field("kind")? {
             "sdp" => {
                 let n = v.usize_field("n")?;
@@ -122,6 +143,7 @@ impl Request {
             body,
             backend,
             full,
+            want_solution,
         })
     }
 
@@ -133,6 +155,9 @@ impl Request {
         ];
         if self.full {
             fields.push(("full", Json::Bool(true)));
+        }
+        if self.want_solution {
+            fields.push(("want_solution", Json::Bool(true)));
         }
         match &self.body {
             RequestBody::Sdp(p) => {
@@ -173,6 +198,10 @@ pub struct Response {
     pub table: Option<Vec<i64>>,
     /// Which backend actually served it, e.g. "xla:mcm_diagonal_i32_n16".
     pub served_by: String,
+    /// Reconstructed solution when the request set `want_solution`
+    /// (docs/PROTOCOL.md): `{"parens": …}` for `mcm`,
+    /// `{"ops", "pairs", "start", "end", "score"}` for `align`.
+    pub solution: Option<Json>,
     pub error: Option<String>,
     /// Typed load-shed marker: the admission gate refused the request
     /// because the worker queue was full.  Distinct from `error` so
@@ -190,6 +219,7 @@ impl Response {
             value,
             table,
             served_by,
+            solution: None,
             error: None,
             overloaded: false,
             stats: None,
@@ -203,6 +233,7 @@ impl Response {
             value: 0,
             table: None,
             served_by: String::new(),
+            solution: None,
             error: Some(msg),
             overloaded: false,
             stats: None,
@@ -226,6 +257,9 @@ impl Response {
         ];
         if let Some(t) = &self.table {
             fields.push(("table", Json::arr(t.iter().map(|&v| Json::int(v)))));
+        }
+        if let Some(s) = &self.solution {
+            fields.push(("solution", s.clone()));
         }
         if let Some(e) = &self.error {
             fields.push(("error", Json::str(e.clone())));
@@ -259,6 +293,7 @@ impl Response {
                 .and_then(|x| x.as_str())
                 .unwrap_or("")
                 .to_string(),
+            solution: v.get("solution").cloned(),
             error: v.get("error").and_then(|x| x.as_str()).map(String::from),
             overloaded: v
                 .get("overloaded")
@@ -281,6 +316,7 @@ mod tests {
             body: RequestBody::Sdp(p),
             backend: Backend::Native,
             full: true,
+            want_solution: false,
         };
         let line = req.encode();
         let back = Request::decode(&line).unwrap();
@@ -306,6 +342,7 @@ mod tests {
             },
             backend: Backend::Auto,
             full: false,
+            want_solution: false,
         };
         let back = Request::decode(&req.encode()).unwrap();
         match back.body {
@@ -365,6 +402,7 @@ mod tests {
             body: RequestBody::Align(p),
             backend: Backend::Auto,
             full: true,
+            want_solution: false,
         };
         let back = Request::decode(&req.encode()).unwrap();
         assert_eq!(back.id, 11);
@@ -393,6 +431,49 @@ mod tests {
             }
             _ => panic!("wrong body"),
         }
+    }
+
+    #[test]
+    fn want_solution_roundtrip_and_default() {
+        let req = Request {
+            id: 4,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Auto,
+            full: false,
+            want_solution: true,
+        };
+        let line = req.encode();
+        assert!(line.contains("want_solution"), "{line}");
+        let back = Request::decode(&line).unwrap();
+        assert!(back.want_solution);
+        // absent field defaults to false
+        let plain = Request::decode(r#"{"id": 1, "kind": "mcm", "dims": [2, 3, 4]}"#).unwrap();
+        assert!(!plain.want_solution);
+        // a *present* flag of the wrong type is a typed error, never a
+        // silent false (docs/PROTOCOL.md)
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "mcm", "dims": [2, 3, 4], "want_solution": 1}"#
+        )
+        .is_err());
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "mcm", "dims": [2, 3, 4], "full": "yes"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn solution_field_roundtrip() {
+        let mut r = Response::ok(8, 64, "native:mcm_pipeline_corrected[fused]".into(), None);
+        r.solution = Some(Json::obj(vec![("parens", Json::str("((A1A2)A3)"))]));
+        let back = Response::decode(&r.encode()).unwrap();
+        let sol = back.solution.expect("solution survives the wire");
+        assert_eq!(sol.str_field("parens").unwrap(), "((A1A2)A3)");
+        // absent stays absent
+        let bare = Response::decode(&Response::ok(1, 0, "x".into(), None).encode()).unwrap();
+        assert!(bare.solution.is_none());
     }
 
     #[test]

@@ -11,8 +11,25 @@ use crate::coordinator::request::{Backend, Request, RequestBody, Response};
 use crate::core::policy::{self, ExecutorChoice, Workload};
 use crate::core::problem::{AlignProblem, McmProblem, SdpProblem};
 use crate::core::schedule::McmVariant;
+use crate::core::traceback;
 use crate::runtime::engine::Engine;
+use crate::util::json::Json;
 use crate::{Error, Result};
+
+/// The wire shape of an MCM solution (docs/PROTOCOL.md).
+fn mcm_solution_json(parens: &str) -> Json {
+    Json::obj(vec![("parens", Json::str(parens))])
+}
+
+/// Typed refusal for traceback on the faithful schedule: its stale-read
+/// argmins do not describe any optimal solution (DESIGN.md §8).
+fn faithful_solution_error() -> Error {
+    Error::InvalidProblem(
+        "solution reconstruction requires the corrected variant; the faithful \
+         schedule's stale reads make its argmins meaningless"
+            .into(),
+    )
+}
 
 /// Instances at or below these sizes are cheaper natively than through a
 /// PJRT dispatch (measured in `bench xla_engine`; see EXPERIMENTS.md §Perf).
@@ -142,6 +159,28 @@ impl Router {
             RequestBody::Mcm { problem, variant } => match variant {
                 McmVariant::Corrected => {
                     let choice = table.choose(Workload::Mcm, problem.n(), batch);
+                    let served = format!("native:mcm_pipeline_corrected[{}]", choice.name());
+                    if req.want_solution {
+                        // the recording executors fill the split sidecar
+                        // alongside the table; seq derives it from the
+                        // classic DP loop (one tie-break everywhere)
+                        let (st, splits) = match choice {
+                            ExecutorChoice::Seq => {
+                                crate::mcm::seq::linear_table_with_splits(problem)
+                            }
+                            ExecutorChoice::Fused => {
+                                crate::mcm::pipeline::solve_recorded(problem)
+                            }
+                            ExecutorChoice::Pooled => {
+                                crate::mcm::pipeline::solve_pooled_recorded(problem)
+                            }
+                        };
+                        let parens =
+                            traceback::parenthesization(problem.n().max(1), &splits);
+                        let mut resp = self.done(req, st, &served);
+                        resp.solution = Some(mcm_solution_json(&parens));
+                        return Ok(resp);
+                    }
                     let st = match choice {
                         ExecutorChoice::Seq => crate::mcm::seq::linear_table(problem),
                         ExecutorChoice::Fused => {
@@ -149,16 +188,16 @@ impl Router {
                         }
                         ExecutorChoice::Pooled => crate::mcm::pipeline::solve_pooled(problem),
                     };
-                    Ok(self.done(
-                        req,
-                        st,
-                        &format!("native:mcm_pipeline_corrected[{}]", choice.name()),
-                    ))
+                    Ok(self.done(req, st, &served))
                 }
                 // the faithful variant reproduces the published schedule's
                 // stale-read semantics — only the two-phase pipeline
                 // executor realizes those, so the policy does not apply
+                // (and no meaningful solution can be reconstructed)
                 McmVariant::PaperFaithful => {
+                    if req.want_solution {
+                        return Err(faithful_solution_error());
+                    }
                     let st = crate::mcm::pipeline::solve(problem, McmVariant::PaperFaithful);
                     Ok(self.done(req, st, "native:mcm_pipeline_faithful"))
                 }
@@ -170,18 +209,28 @@ impl Router {
                 // when its long side is huge
                 let choice =
                     table.choose(Workload::Align, p.rows().min(p.cols()), batch);
+                let served = format!("native:align_wavefront[{}]", choice.name());
+                if req.want_solution {
+                    let (st, moves) = match choice {
+                        ExecutorChoice::Seq => crate::align::seq::solve_with_moves(p),
+                        ExecutorChoice::Fused => crate::align::wavefront::solve_recorded(p),
+                        ExecutorChoice::Pooled => {
+                            crate::align::wavefront::solve_pooled_recorded(p)
+                        }
+                    };
+                    let sol = traceback::align_solution(p, &st, &moves);
+                    let value = p.scalar(&st);
+                    let mut resp = self.done_scored(req, value, st, &served);
+                    resp.solution = Some(sol.to_json());
+                    return Ok(resp);
+                }
                 let st = match choice {
                     ExecutorChoice::Seq => crate::align::seq::solve(p),
                     ExecutorChoice::Fused => crate::align::wavefront::solve(p),
                     ExecutorChoice::Pooled => crate::align::wavefront::solve_pooled(p),
                 };
                 let value = p.scalar(&st); // local alignment's scalar is the max, not the corner
-                Ok(self.done_scored(
-                    req,
-                    value,
-                    st,
-                    &format!("native:align_wavefront[{}]", choice.name()),
-                ))
+                Ok(self.done_scored(req, value, st, &served))
             }
             RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
         }
@@ -201,15 +250,35 @@ impl Router {
                 let st = match variant {
                     McmVariant::Corrected => engine.solve_mcm(problem)?,
                     McmVariant::PaperFaithful => {
+                        if req.want_solution {
+                            return Err(faithful_solution_error());
+                        }
                         engine.solve_mcm_pipeline(problem, McmVariant::PaperFaithful)?
                     }
                 };
-                Ok(self.done(req, st, "xla:mcm"))
+                // the XLA kernels return tables without argmin sidecars;
+                // reconstruction recomputes them from the extracted
+                // (unpadded) table — bit-identical by determinism, and
+                // pad-invariant because extraction is (engine tests)
+                let solution = (req.want_solution && *variant == McmVariant::Corrected)
+                    .then(|| {
+                        mcm_solution_json(&traceback::mcm_parenthesization_from_table(
+                            problem, &st,
+                        ))
+                    });
+                let mut resp = self.done(req, st, "xla:mcm");
+                resp.solution = solution;
+                Ok(resp)
             }
             RequestBody::Align(p) => {
                 let st = engine.solve_align(p)?;
                 let value = p.scalar(&st);
-                Ok(self.done_scored(req, value, st, "xla:align_wavefront"))
+                let solution = req
+                    .want_solution
+                    .then(|| traceback::align_solution_from_table(p, &st).to_json());
+                let mut resp = self.done_scored(req, value, st, "xla:align_wavefront");
+                resp.solution = solution;
+                Ok(resp)
             }
             RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
         }
@@ -266,8 +335,32 @@ impl Router {
                 let tables = engine.solve_mcm_batch(&ps).ok()?;
                 Some(
                     reqs.iter()
-                        .zip(tables)
-                        .map(|(r, st)| self.done(r, st, "xla:mcm_diagonal[batched]"))
+                        .zip(ps.iter().zip(tables))
+                        .map(|(r, (p, st))| {
+                            // group keys are variant-homogeneous; faithful
+                            // groups cannot reconstruct (see execute_xla)
+                            let solution = match (&r.body, r.want_solution) {
+                                (
+                                    RequestBody::Mcm {
+                                        variant: McmVariant::Corrected,
+                                        ..
+                                    },
+                                    true,
+                                ) => Some(mcm_solution_json(
+                                    &traceback::mcm_parenthesization_from_table(p, &st),
+                                )),
+                                (_, true) => {
+                                    return Response::err(
+                                        r.id,
+                                        faithful_solution_error().to_string(),
+                                    )
+                                }
+                                _ => None,
+                            };
+                            let mut resp = self.done(r, st, "xla:mcm_diagonal[batched]");
+                            resp.solution = solution;
+                            resp
+                        })
                         .collect(),
                 )
             }
@@ -288,7 +381,13 @@ impl Router {
                         .zip(ps.iter().zip(tables))
                         .map(|(r, (p, st))| {
                             let value = p.scalar(&st);
-                            self.done_scored(r, value, st, "xla:align_wavefront[batched]")
+                            let solution = r
+                                .want_solution
+                                .then(|| traceback::align_solution_from_table(p, &st).to_json());
+                            let mut resp =
+                                self.done_scored(r, value, st, "xla:align_wavefront[batched]");
+                            resp.solution = solution;
+                            resp
                         })
                         .collect(),
                 )
@@ -383,6 +482,7 @@ mod tests {
             ),
             backend,
             full: false,
+            want_solution: false,
         }
     }
 
@@ -416,6 +516,7 @@ mod tests {
             },
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -433,6 +534,7 @@ mod tests {
             },
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -454,6 +556,7 @@ mod tests {
             ),
             backend: Backend::Native,
             full: true,
+            want_solution: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -478,6 +581,7 @@ mod tests {
             body: RequestBody::Align(p),
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -500,6 +604,7 @@ mod tests {
             },
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -542,6 +647,7 @@ mod tests {
                 },
                 backend: Backend::Native,
                 full: false,
+                want_solution: false,
             };
             let resp = r.execute(&req, Route::Native);
             assert!(resp.ok, "{choice:?}");
@@ -560,6 +666,145 @@ mod tests {
     }
 
     #[test]
+    fn want_solution_native_mcm_and_align() {
+        use crate::core::problem::AlignProblem;
+        let r = Router::new(None);
+        // mcm corrected: the CLRS parenthesization rides the reply
+        let req = Request {
+            id: 9,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.value, 15125);
+        let sol = resp.solution.expect("mcm solution present");
+        assert_eq!(sol.str_field("parens").unwrap(), "((A1(A2A3))((A4A5)A6))");
+
+        // faithful + want_solution: typed refusal, not a wrong answer
+        let req = Request {
+            id: 10,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::PaperFaithful,
+            },
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(!resp.ok);
+        assert!(
+            resp.error.as_deref().unwrap_or("").contains("corrected"),
+            "{:?}",
+            resp.error
+        );
+
+        // align: script present, replayed score equals the wire value
+        let p = AlignProblem::lcs(vec![1, 2, 3, 4, 7], vec![2, 3, 9, 4]).unwrap();
+        let req = Request {
+            id: 11,
+            body: RequestBody::Align(p),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok, "{:?}", resp.error);
+        let sol = resp.solution.expect("align solution present");
+        assert_eq!(sol.i64_field("score").unwrap(), resp.value);
+        assert!(!sol.str_field("ops").unwrap().is_empty());
+        // solutions are opt-in: a plain request carries none
+        let plain = Request {
+            id: 12,
+            body: RequestBody::Align(
+                AlignProblem::lcs(vec![1, 2], vec![2, 1]).unwrap(),
+            ),
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+        };
+        let resp = r.execute(&plain, Route::Native);
+        assert!(resp.ok);
+        assert!(resp.solution.is_none());
+    }
+
+    #[test]
+    fn every_policy_choice_reconstructs_identical_solutions() {
+        // pin each executor choice: all three traceback routes must
+        // produce the same parenthesization and the same edit script
+        use crate::core::policy::{ExecutorChoice, PolicyTable, Workload};
+        use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+        let _guard = crate::core::policy::test_install_lock()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let r = Router::new(None);
+        let mcm = McmProblem::clrs();
+        let align = AlignProblem::new(
+            vec![10, 8, 19, 19, 4, 13],
+            vec![18, 8, 19, 19, 8, 13, 6],
+            AlignVariant::Edit,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        let mut parens_seen = std::collections::HashSet::new();
+        let mut ops_seen = std::collections::HashSet::new();
+        for choice in ExecutorChoice::ALL {
+            let mut t = PolicyTable::uncalibrated(4);
+            for wl in [Workload::Mcm, Workload::Align] {
+                let costs = ExecutorChoice::ALL
+                    .iter()
+                    .map(|&c| (c, if c == choice { 1.0 } else { 2.0 }))
+                    .collect();
+                t.push_measurement(wl, 6, costs);
+            }
+            crate::core::policy::install(t);
+            let resp = r.execute(
+                &Request {
+                    id: 1,
+                    body: RequestBody::Mcm {
+                        problem: mcm.clone(),
+                        variant: McmVariant::Corrected,
+                    },
+                    backend: Backend::Native,
+                    full: false,
+                    want_solution: true,
+                },
+                Route::Native,
+            );
+            assert!(resp.ok, "{choice:?}");
+            parens_seen.insert(
+                resp.solution
+                    .unwrap()
+                    .str_field("parens")
+                    .unwrap()
+                    .to_string(),
+            );
+            let resp = r.execute(
+                &Request {
+                    id: 2,
+                    body: RequestBody::Align(align.clone()),
+                    backend: Backend::Native,
+                    full: false,
+                    want_solution: true,
+                },
+                Route::Native,
+            );
+            assert!(resp.ok, "{choice:?}");
+            assert_eq!(resp.value, 3, "{choice:?}"); // kitten → sitting
+            ops_seen.insert(resp.solution.unwrap().str_field("ops").unwrap().to_string());
+        }
+        assert_eq!(parens_seen.len(), 1, "choices disagree: {parens_seen:?}");
+        assert_eq!(ops_seen.len(), 1, "choices disagree: {ops_seen:?}");
+        crate::core::policy::install(PolicyTable::uncalibrated(4));
+    }
+
+    #[test]
     fn align_auto_routes_native_without_engine() {
         let r = Router::new(None);
         let req = Request {
@@ -569,6 +814,7 @@ mod tests {
             ),
             backend: Backend::Auto,
             full: false,
+            want_solution: false,
         };
         // large grid, but engineless → native; pinned xla → typed error
         assert_eq!(r.route(&req).unwrap(), Route::Native);
@@ -588,6 +834,7 @@ mod tests {
             ),
             backend: Backend::Auto,
             full: false,
+            want_solution: false,
         };
         let a = mk(1, AlignVariant::Lcs);
         let b = mk(2, AlignVariant::Lcs);

@@ -1,5 +1,9 @@
 //! The TCP server (line-delimited JSON) and a blocking client.
 //!
+//! The wire protocol itself (request kinds, fields, reply shapes,
+//! `overloaded` shed semantics, id correlation) is specified in
+//! `docs/PROTOCOL.md`.
+//!
 //! One thread per connection reads request lines and hands them to the
 //! batcher with a per-request reply channel; a per-connection writer
 //! thread serializes responses back (so batched completions from worker

@@ -14,6 +14,10 @@
 //! * [`policy`] — the calibrated adaptive executor policy: per-kind
 //!   seq/fused/pooled crossover tables measured at warmup and consulted
 //!   by the router's native path (DESIGN.md §7).
+//! * [`traceback`] — solution reconstruction: sidecar argmin arenas
+//!   recorded by the executors and the reconstructors that turn them
+//!   into parenthesizations, edit scripts and local-alignment spans
+//!   (DESIGN.md §8).
 
 pub mod cache;
 pub mod conflict;
@@ -21,3 +25,4 @@ pub mod policy;
 pub mod problem;
 pub mod schedule;
 pub mod semigroup;
+pub mod traceback;

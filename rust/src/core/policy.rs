@@ -28,7 +28,11 @@
 //! The installed table lives process-wide next to the schedule cache
 //! ([`install`] / [`current`]); choice counters surface in coordinator
 //! stats ([`stats`]).  `PIPEDP_EXEC_POLICY=seq|fused|pooled` pins every
-//! decision (bench/debug escape hatch).
+//! decision (bench/debug escape hatch).  Requests asking for solution
+//! reconstruction (`want_solution`, DESIGN.md §8) take the same choice
+//! through the recording executor of the chosen tier — the policy
+//! arbitrates *where* a solve runs, never whether its sidecar is
+//! recorded.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};

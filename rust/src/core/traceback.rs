@@ -1,0 +1,679 @@
+//! Solution reconstruction (traceback) — DESIGN.md §8.
+//!
+//! A solved DP table answers *how much*; serving users means answering
+//! *which*: the optimal parenthesization of a matrix chain, the edit
+//! script between two sequences, the span of the best local alignment.
+//! This module is the traceback subsystem that turns argmin/argmax
+//! information into those answers:
+//!
+//! * **Sidecar arenas** — [`SplitArena`] (one `u32` split index per MCM
+//!   cell) and [`MoveArena`] (2-bit move codes, four cells per byte) are
+//!   allocated per solve alongside the flat solution table and filled by
+//!   the recording executors ([`crate::mcm::pipeline::execute_recorded`],
+//!   [`crate::align::wavefront::execute_recorded`] and their threaded /
+//!   pooled siblings).  Recording is race-free by construction: each
+//!   cell's argument is only touched by the step that computes that cell,
+//!   which is the same write-once discipline the executors already
+//!   discharge for the table itself (`core::conflict`); the arenas use
+//!   relaxed atomics so the multi-threaded executors need no extra
+//!   synchronization beyond their existing step barriers (DESIGN.md §8).
+//! * **Reconstructors** — [`parenthesization`] rebuilds the optimal
+//!   parenthesization from a split sidecar; [`align_solution`] walks a
+//!   move sidecar into an [`AlignSolution`] (edit script, aligned-pair
+//!   coordinates, and the local start/end span).
+//! * **From-table fallbacks** — [`mcm_splits_from_table`] and
+//!   [`align_moves_from_table`] recompute the sidecar from a solved
+//!   table, for backends that return tables without recording (the XLA
+//!   route, whose kernels do not emit argmins).  Determinism makes both
+//!   paths bit-identical.
+//!
+//! ## Deterministic tie-breaking (DESIGN.md §8)
+//!
+//! Optimal solutions are rarely unique, so every producer pins the same
+//! tie-break and reconstruction is reproducible across executors,
+//! backends and languages (the Python mirror is
+//! `python/compile/kernels/ref.py`, pinned by the golden fixtures):
+//!
+//! * **MCM**: the recorded split of cell `(r, c)` is the *lowest* `m`
+//!   minimizing `t[r,m] + t[m+1,c] + w` — an ascending scan keeping
+//!   strict improvements, which is also what the pipeline executors
+//!   produce for free: a cell's terms arrive in ascending split order
+//!   and only a strictly smaller value replaces the running best.
+//! * **Alignment**: the move of cell `(i, j)` is chosen with the fixed
+//!   preference diagonal > up > left among the optimal candidates
+//!   ([`cell_move`]); a local-alignment cell of value 0 records
+//!   [`MOVE_STOP`], and the local end cell is the *first* row-major
+//!   argmax of the table.
+
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+
+use crate::core::problem::{AlignProblem, AlignVariant, McmProblem};
+use crate::core::schedule::{grid, linear};
+use crate::util::json::Json;
+
+/// Move code of a border / unreached cell, and the local-alignment
+/// traceback terminator (a 0-valued cell).
+pub const MOVE_STOP: u8 = 0;
+/// Diagonal move `(i−1, j−1)`: aligned match or substitution.
+pub const MOVE_DIAG: u8 = 1;
+/// Up move `(i−1, j)`: consume `a[i−1]` alone (deletion).
+pub const MOVE_UP: u8 = 2;
+/// Left move `(i, j−1)`: consume `b[j−1]` alone (insertion).
+pub const MOVE_LEFT: u8 = 3;
+
+/// Packed 2-bit move codes, four cells per byte — the alignment sidecar.
+///
+/// Cells share bytes, so concurrent writers publish their 2 bits with a
+/// relaxed `fetch_or` into the zero-initialized word: each cell is
+/// written exactly once (the write-once invariant the executors already
+/// hold for the table), so OR-ing disjoint bit pairs is exact and
+/// race-free without locks.  The executors' step barriers order the
+/// final reads after every write.
+pub struct MoveArena {
+    bits: Vec<AtomicU8>,
+    cells: usize,
+}
+
+impl MoveArena {
+    /// Zeroed arena for `cells` grid cells (`⌈cells/4⌉` bytes).
+    pub fn new(cells: usize) -> MoveArena {
+        MoveArena {
+            bits: (0..cells.div_ceil(4)).map(|_| AtomicU8::new(0)).collect(),
+            cells,
+        }
+    }
+
+    /// Number of addressable cells.
+    pub fn len(&self) -> usize {
+        self.cells
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells == 0
+    }
+
+    /// Record the move of cell `idx` (must be the cell's only write).
+    #[inline]
+    pub fn set(&self, idx: usize, code: u8) {
+        debug_assert!(idx < self.cells && code < 4);
+        self.bits[idx / 4].fetch_or((code & 3) << ((idx % 4) * 2), Ordering::Relaxed);
+    }
+
+    /// Read the move of cell `idx` (0 for never-written cells).
+    #[inline]
+    pub fn get(&self, idx: usize) -> u8 {
+        debug_assert!(idx < self.cells);
+        (self.bits[idx / 4].load(Ordering::Relaxed) >> ((idx % 4) * 2)) & 3
+    }
+}
+
+/// Per-cell `u32` split indices — the MCM sidecar.
+///
+/// Unlike [`MoveArena`] this is updated as a *running* argmin: term `j`
+/// of a cell stores its split only when it strictly improves the cell's
+/// value.  All terms of one cell execute on one worker in ascending term
+/// order (arena order; `tgt`-modulo ownership in the pooled executor) or
+/// on barrier-separated consecutive steps (the chunked executor), so
+/// every store is ordered with respect to the cell's other stores and
+/// relaxed atomics suffice.
+pub struct SplitArena {
+    splits: Vec<AtomicU32>,
+}
+
+impl SplitArena {
+    /// Zeroed arena for `cells` linearized table cells.
+    pub fn new(cells: usize) -> SplitArena {
+        SplitArena {
+            splits: (0..cells).map(|_| AtomicU32::new(0)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.splits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.splits.is_empty()
+    }
+
+    /// Record cell `idx`'s current-best split `m`.
+    #[inline]
+    pub fn store(&self, idx: usize, m: u32) {
+        self.splits[idx].store(m, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> u32 {
+        self.splits[idx].load(Ordering::Relaxed)
+    }
+
+    /// Unwrap into the plain split vector the reconstructors consume.
+    pub fn into_vec(self) -> Vec<u32> {
+        self.splits.into_iter().map(|a| a.into_inner()).collect()
+    }
+}
+
+/// One alignment cell: `(value, move code)` under the pinned tie-break
+/// (see the module docs).  The value is bit-identical to
+/// [`crate::align::seq::solve`]'s recurrence — property-tested so the
+/// recording and plain executors cannot drift apart.
+#[inline(always)]
+pub fn cell_move(
+    variant: AlignVariant,
+    scoring: &crate::core::problem::AlignScoring,
+    up: i64,
+    left: i64,
+    diag: i64,
+    av: i64,
+    bv: i64,
+) -> (i64, u8) {
+    match variant {
+        AlignVariant::Lcs => {
+            if av == bv {
+                (diag + 1, MOVE_DIAG)
+            } else if up >= left {
+                (up, MOVE_UP)
+            } else {
+                (left, MOVE_LEFT)
+            }
+        }
+        AlignVariant::Edit => {
+            let sub = diag + i64::from(av != bv);
+            let best = sub.min(up + 1).min(left + 1);
+            if sub == best {
+                (best, MOVE_DIAG)
+            } else if up + 1 == best {
+                (best, MOVE_UP)
+            } else {
+                (best, MOVE_LEFT)
+            }
+        }
+        AlignVariant::Local => {
+            let s = if av == bv {
+                scoring.match_s
+            } else {
+                scoring.mismatch
+            };
+            let (d, u, l) = (diag + s, up + scoring.gap, left + scoring.gap);
+            let best = d.max(u).max(l).max(0);
+            if best == 0 {
+                (0, MOVE_STOP)
+            } else if d == best {
+                (best, MOVE_DIAG)
+            } else if u == best {
+                (best, MOVE_UP)
+            } else {
+                (best, MOVE_LEFT)
+            }
+        }
+    }
+}
+
+/// Recompute the lowest-argmin split sidecar from a solved linearized MCM
+/// table — the from-table fallback for backends that do not record
+/// (bit-identical to the recorded sidecar; see the module docs).
+pub fn mcm_splits_from_table(p: &McmProblem, table: &[i64]) -> Vec<u32> {
+    let n = p.n();
+    assert_eq!(table.len(), linear::num_cells(n), "table/problem size mismatch");
+    let mut splits = vec![0u32; table.len()];
+    for d in 1..n {
+        for r in 0..(n - d) {
+            let c = r + d;
+            let mut best = i64::MAX;
+            let mut bm = r;
+            for m in r..c {
+                let v = table[linear::cell_index(n, r, m)]
+                    + table[linear::cell_index(n, m + 1, c)]
+                    + p.weight(r, m + 1, c + 1);
+                if v < best {
+                    best = v;
+                    bm = m;
+                }
+            }
+            splits[linear::cell_index(n, r, c)] = bm as u32;
+        }
+    }
+    splits
+}
+
+/// Rebuild the optimal parenthesization (e.g. `((A1A2)A3)`) of an
+/// `n`-matrix chain from its linearized split sidecar.  Iterative (an
+/// explicit frame stack), so a maximally skewed chain cannot overflow
+/// the thread stack.
+pub fn parenthesization(n: usize, splits: &[u32]) -> String {
+    assert!(n >= 1, "empty chain has no parenthesization");
+    assert_eq!(splits.len(), linear::num_cells(n), "splits/chain size mismatch");
+    enum Frame {
+        Range(usize, usize),
+        Close,
+    }
+    let mut out = String::new();
+    let mut stack = vec![Frame::Range(0, n - 1)];
+    while let Some(frame) = stack.pop() {
+        match frame {
+            Frame::Range(r, c) => {
+                if r == c {
+                    out.push('A');
+                    out.push_str(&(r + 1).to_string());
+                } else {
+                    let m = splits[linear::cell_index(n, r, c)] as usize;
+                    assert!(
+                        r <= m && m < c,
+                        "corrupt split sidecar: cell ({r},{c}) splits at {m}"
+                    );
+                    out.push('(');
+                    stack.push(Frame::Close);
+                    stack.push(Frame::Range(m + 1, c));
+                    stack.push(Frame::Range(r, m));
+                }
+            }
+            Frame::Close => out.push(')'),
+        }
+    }
+    out
+}
+
+/// [`mcm_splits_from_table`] + [`parenthesization`] in one call — the
+/// XLA route's reconstruction from an extracted (unpadded) table.
+pub fn mcm_parenthesization_from_table(p: &McmProblem, table: &[i64]) -> String {
+    parenthesization(p.n().max(1), &mcm_splits_from_table(p, table))
+}
+
+/// Recompute the move sidecar from a solved alignment table (the
+/// from-table fallback; bit-identical to the recorded sidecar because
+/// [`cell_move`] is deterministic on the same operand values).
+pub fn align_moves_from_table(p: &AlignProblem, table: &[i64]) -> MoveArena {
+    let (m, n) = (p.rows(), p.cols());
+    assert_eq!(table.len(), grid::num_cells(m, n), "table/problem size mismatch");
+    let moves = MoveArena::new(table.len());
+    for i in 1..=m {
+        for j in 1..=n {
+            let (v, code) = cell_move(
+                p.variant,
+                &p.scoring,
+                table[grid::cell_index(n, i - 1, j)],
+                table[grid::cell_index(n, i, j - 1)],
+                table[grid::cell_index(n, i - 1, j - 1)],
+                p.a[i - 1],
+                p.b[j - 1],
+            );
+            debug_assert_eq!(
+                v,
+                table[grid::cell_index(n, i, j)],
+                "table is not a fixpoint of the recurrence at ({i},{j})"
+            );
+            moves.set(grid::cell_index(n, i, j), code);
+        }
+    }
+    moves
+}
+
+/// A reconstructed alignment solution (the wire's `solution` object for
+/// `kind: "align"` — docs/PROTOCOL.md).
+///
+/// * `ops` reads left-to-right: `M` aligned match, `S` aligned
+///   substitution, `D` consume `a[i]` alone (deletion), `I` consume
+///   `b[j]` alone (insertion).
+/// * `pairs` are the 0-based `(i, j)` symbol-index pairs of the aligned
+///   (`M`/`S`) ops, strictly increasing in both coordinates.
+/// * `start`/`end` are table coordinates: the script spans
+///   `a[start.0 .. end.0]` vs `b[start.1 .. end.1]` — the whole
+///   sequences for LCS/edit, the optimal local window for
+///   [`AlignVariant::Local`].
+/// * `score` replays the script (#`M` for LCS, #`S`+#`D`+#`I` for edit,
+///   Σ match/mismatch/gap over the span for local) and equals the
+///   variant's scalar answer — the property the acceptance tests pin.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AlignSolution {
+    pub ops: String,
+    pub pairs: Vec<(usize, usize)>,
+    pub start: (usize, usize),
+    pub end: (usize, usize),
+    pub score: i64,
+}
+
+impl AlignSolution {
+    /// The wire shape (docs/PROTOCOL.md): `{"ops", "pairs", "start",
+    /// "end", "score"}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ops", Json::str(self.ops.clone())),
+            (
+                "pairs",
+                Json::arr(self.pairs.iter().map(|&(i, j)| {
+                    Json::arr([Json::int(i as i64), Json::int(j as i64)])
+                })),
+            ),
+            (
+                "start",
+                Json::arr([
+                    Json::int(self.start.0 as i64),
+                    Json::int(self.start.1 as i64),
+                ]),
+            ),
+            (
+                "end",
+                Json::arr([Json::int(self.end.0 as i64), Json::int(self.end.1 as i64)]),
+            ),
+            ("score", Json::int(self.score)),
+        ])
+    }
+}
+
+/// Walk a move sidecar into the full [`AlignSolution`].
+///
+/// The table is needed only to locate the local-alignment end cell (the
+/// first row-major argmax); LCS/edit always start the walk at the
+/// corner.  Panics on a sidecar that is not a valid traceback for the
+/// variant (corrupt input is a caller bug — both producers are pinned
+/// by property tests).
+pub fn align_solution(p: &AlignProblem, table: &[i64], moves: &MoveArena) -> AlignSolution {
+    let (m, n) = (p.rows(), p.cols());
+    assert_eq!(table.len(), grid::num_cells(m, n), "table/problem size mismatch");
+    assert_eq!(moves.len(), table.len(), "moves/table size mismatch");
+    let idx = |i: usize, j: usize| grid::cell_index(n, i, j);
+    let (mut ei, mut ej) = (m, n);
+    if p.variant == AlignVariant::Local {
+        let mut best = 0i64;
+        (ei, ej) = (0, 0);
+        for i in 0..=m {
+            for j in 0..=n {
+                if table[idx(i, j)] > best {
+                    best = table[idx(i, j)];
+                    (ei, ej) = (i, j);
+                }
+            }
+        }
+    }
+    let (mut i, mut j) = (ei, ej);
+    let mut ops_rev: Vec<u8> = Vec::new();
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    let mut score = 0i64;
+    loop {
+        let code = if p.variant == AlignVariant::Local {
+            if i == 0 || j == 0 {
+                break;
+            }
+            let c = moves.get(idx(i, j));
+            if c == MOVE_STOP {
+                break;
+            }
+            c
+        } else {
+            if i == 0 && j == 0 {
+                break;
+            }
+            if i > 0 && j > 0 {
+                moves.get(idx(i, j))
+            } else if i > 0 {
+                MOVE_UP
+            } else {
+                MOVE_LEFT
+            }
+        };
+        match code {
+            MOVE_DIAG => {
+                let matched = p.a[i - 1] == p.b[j - 1];
+                ops_rev.push(if matched { b'M' } else { b'S' });
+                pairs.push((i - 1, j - 1));
+                score += match p.variant {
+                    AlignVariant::Lcs => i64::from(matched),
+                    AlignVariant::Edit => i64::from(!matched),
+                    AlignVariant::Local => {
+                        if matched {
+                            p.scoring.match_s
+                        } else {
+                            p.scoring.mismatch
+                        }
+                    }
+                };
+                i -= 1;
+                j -= 1;
+            }
+            MOVE_UP => {
+                ops_rev.push(b'D');
+                score += gap_cost(p);
+                i -= 1;
+            }
+            MOVE_LEFT => {
+                ops_rev.push(b'I');
+                score += gap_cost(p);
+                j -= 1;
+            }
+            other => panic!("corrupt move sidecar: code {other} at ({i},{j})"),
+        }
+    }
+    ops_rev.reverse();
+    pairs.reverse();
+    AlignSolution {
+        ops: String::from_utf8(ops_rev).expect("ops are ASCII"),
+        pairs,
+        start: (i, j),
+        end: (ei, ej),
+        score,
+    }
+}
+
+/// Score contribution of a gap (`D`/`I`) op under the variant's replay
+/// semantics.
+fn gap_cost(p: &AlignProblem) -> i64 {
+    match p.variant {
+        AlignVariant::Lcs => 0,
+        AlignVariant::Edit => 1,
+        AlignVariant::Local => p.scoring.gap,
+    }
+}
+
+/// [`align_moves_from_table`] + [`align_solution`] in one call — the XLA
+/// route's reconstruction from an extracted (unpadded) table.
+pub fn align_solution_from_table(p: &AlignProblem, table: &[i64]) -> AlignSolution {
+    align_solution(p, table, &align_moves_from_table(p, table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+    use crate::prop::forall;
+
+    #[test]
+    fn move_arena_packs_and_roundtrips() {
+        let arena = MoveArena::new(9); // 3 bytes, last byte partially used
+        assert_eq!(arena.len(), 9);
+        let codes = [1u8, 3, 0, 2, 2, 1, 3, 0, 1];
+        for (i, &c) in codes.iter().enumerate() {
+            arena.set(i, c);
+        }
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(arena.get(i), c, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn move_arena_concurrent_writes_stay_exact() {
+        // neighbours in one byte written from different threads: the
+        // fetch_or publication must never lose bits
+        let arena = MoveArena::new(64);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let arena = &arena;
+                s.spawn(move || {
+                    for i in (t..64).step_by(4) {
+                        arena.set(i, ((i % 3) + 1) as u8);
+                    }
+                });
+            }
+        });
+        for i in 0..64 {
+            assert_eq!(arena.get(i), ((i % 3) + 1) as u8, "cell {i}");
+        }
+    }
+
+    #[test]
+    fn split_arena_roundtrips() {
+        let arena = SplitArena::new(5);
+        arena.store(3, 41);
+        arena.store(3, 7); // running argmin: later stores overwrite
+        assert_eq!(arena.get(3), 7);
+        assert_eq!(arena.into_vec(), vec![0, 0, 0, 7, 0]);
+    }
+
+    #[test]
+    fn cell_move_value_matches_plain_recurrence() {
+        // the recording recurrence and the executor recurrence must be
+        // the same function on every input
+        forall("cell_move == seq::cell", 300, |g| {
+            let variant = *g.choose(&AlignVariant::ALL);
+            let scoring = AlignScoring {
+                match_s: g.i64(1..6),
+                mismatch: g.i64(-4..1),
+                gap: g.i64(-4..1),
+            };
+            let (up, left, diag) = (g.i64(-30..60), g.i64(-30..60), g.i64(-30..60));
+            let (av, bv) = (g.i64(0..4), g.i64(0..4));
+            let want = crate::align::seq::cell(variant, &scoring, up, left, diag, av, bv);
+            let (got, code) = cell_move(variant, &scoring, up, left, diag, av, bv);
+            if got == want && code < 4 {
+                Ok(())
+            } else {
+                Err(format!("{variant:?} up={up} left={left} diag={diag}: {got} != {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn parenthesization_matches_seq_reconstruction() {
+        forall("splits parens == seq parens", 80, |g| {
+            let n = g.usize(1..12);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let table = crate::mcm::seq::linear_table(&p);
+            let splits = mcm_splits_from_table(&p, &table);
+            let got = parenthesization(n, &splits);
+            let want = crate::mcm::seq::parenthesization(&p);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{:?}: {got} != {want}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "corrupt split sidecar")]
+    fn parenthesization_rejects_corrupt_splits() {
+        // split outside [r, c) must fail loudly, never loop or emit garbage
+        let splits = vec![0u32, 0, 0, 2, 0, 0]; // cell (0,1) claims split 2
+        parenthesization(3, &splits);
+    }
+
+    #[test]
+    fn clrs_parenthesization_via_sidecar() {
+        let p = McmProblem::clrs();
+        let got = mcm_parenthesization_from_table(&p, &crate::mcm::seq::linear_table(&p));
+        assert_eq!(got, "((A1(A2A3))((A4A5)A6))");
+    }
+
+    #[test]
+    fn lcs_textbook_script() {
+        // LCS("ABCBDAB", "BDCABA") = 4
+        let a = vec![1, 2, 3, 2, 4, 1, 2];
+        let b = vec![2, 4, 3, 1, 2, 1];
+        let p = AlignProblem::lcs(a, b).unwrap();
+        let table = crate::align::seq::solve(&p);
+        let sol = align_solution_from_table(&p, &table);
+        assert_eq!(sol.score, 4);
+        assert_eq!(sol.ops.matches('M').count(), 4);
+        let aligned = sol.ops.chars().filter(|&c| c == 'M' || c == 'S').count();
+        assert_eq!(sol.pairs.len(), aligned);
+        assert_eq!(sol.start, (0, 0));
+        assert_eq!(sol.end, (7, 6));
+    }
+
+    #[test]
+    fn edit_textbook_script_replays_distance() {
+        // levenshtein("kitten", "sitting") = 3: S..S.I or equivalent
+        let a = vec![10, 8, 19, 19, 4, 13];
+        let b = vec![18, 8, 19, 19, 8, 13, 6];
+        let p = AlignProblem::new(a, b, AlignVariant::Edit, AlignScoring::default()).unwrap();
+        let table = crate::align::seq::solve(&p);
+        let sol = align_solution_from_table(&p, &table);
+        assert_eq!(sol.score, 3);
+        let cost = sol
+            .ops
+            .chars()
+            .filter(|&c| c == 'S' || c == 'D' || c == 'I')
+            .count() as i64;
+        assert_eq!(cost, 3);
+        // the script consumes both sequences exactly
+        let consumed_a = sol.ops.chars().filter(|&c| c != 'I').count();
+        let consumed_b = sol.ops.chars().filter(|&c| c != 'D').count();
+        assert_eq!((consumed_a, consumed_b), (6, 7));
+    }
+
+    #[test]
+    fn local_solution_reports_span() {
+        // shared run {1,2,3} inside noise: span covers exactly the run
+        let p = AlignProblem::new(
+            vec![9, 9, 1, 2, 3, 9],
+            vec![7, 1, 2, 3, 7, 7],
+            AlignVariant::Local,
+            AlignScoring::default(),
+        )
+        .unwrap();
+        let table = crate::align::seq::solve(&p);
+        let sol = align_solution_from_table(&p, &table);
+        assert_eq!(sol.score, 6); // 3 matches × match_s 2
+        assert_eq!(sol.ops, "MMM");
+        assert_eq!(sol.start, (2, 1));
+        assert_eq!(sol.end, (5, 4));
+        assert_eq!(sol.pairs, vec![(2, 1), (3, 2), (4, 3)]);
+    }
+
+    #[test]
+    fn solution_replays_to_oracle_score_property() {
+        forall("align solution replay == score", 120, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..40, 4, v);
+            let table = crate::align::seq::solve(&p);
+            let sol = align_solution_from_table(&p, &table);
+            let want = p.scalar(&table);
+            if sol.score != want {
+                return Err(format!("{v:?}: replay {} != {want}", sol.score));
+            }
+            // structural replay over the claimed span
+            let (mut i, mut j) = sol.start;
+            for op in sol.ops.chars() {
+                match op {
+                    'M' | 'S' => {
+                        if (op == 'M') != (p.a[i] == p.b[j]) {
+                            return Err(format!("{v:?}: op {op} at ({i},{j})"));
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                    'D' => i += 1,
+                    'I' => j += 1,
+                    other => return Err(format!("bad op {other}")),
+                }
+            }
+            if (i, j) != sol.end {
+                return Err(format!("{v:?}: walked to ({i},{j}) != {:?}", sol.end));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solution_json_shape() {
+        let p = AlignProblem::lcs(vec![1, 2], vec![2, 1]).unwrap();
+        let table = crate::align::seq::solve(&p);
+        let sol = align_solution_from_table(&p, &table);
+        let j = sol.to_json();
+        assert_eq!(j.str_field("ops").unwrap().len(), sol.ops.len());
+        assert_eq!(j.i64_field("score").unwrap(), sol.score);
+        assert_eq!(j.arr_field("start").unwrap().len(), 2);
+        assert_eq!(j.arr_field("end").unwrap().len(), 2);
+        assert_eq!(j.arr_field("pairs").unwrap().len(), sol.pairs.len());
+    }
+}

@@ -7,10 +7,13 @@
 //! * **Layer 3 (this crate)** — the coordination contribution: schedule
 //!   compilation ([`core::schedule`]), conflict/hazard analysis
 //!   ([`core::conflict`]), native step-synchronous and multi-threaded
-//!   executors ([`sdp`], [`mcm`], [`align`]), a cycle-level SIMT GPU cost model
-//!   ([`simulator`]) standing in for the paper's GTX TITAN Black, and a
-//!   serving coordinator ([`coordinator`]) with routing, dynamic batching
-//!   and a worker pool.
+//!   executors ([`sdp`], [`mcm`], [`align`]), solution reconstruction
+//!   through per-solve traceback sidecars ([`core::traceback`] —
+//!   parenthesizations, edit scripts, local-alignment spans), a
+//!   cycle-level SIMT GPU cost model ([`simulator`]) standing in for the
+//!   paper's GTX TITAN Black, and a serving coordinator
+//!   ([`coordinator`]) with routing, dynamic batching and a worker pool
+//!   speaking the line-delimited JSON protocol of `docs/PROTOCOL.md`.
 //! * **Layer 2/1 (build time)** — JAX graphs calling Pallas kernels, AOT
 //!   lowered to HLO text and executed from Rust through PJRT
 //!   ([`runtime`]); Python never runs on the request path.

@@ -1,15 +1,21 @@
 //! `pipedp` — command-line entrypoint for the pipeline-DP system.
 //!
-//! Subcommands:
+//! Subcommands (this list is asserted against `--help` output by
+//! `rust/tests/cli.rs`, so it cannot drift from the dispatch table):
 //!   solve-sdp   solve an S-DP instance (native or XLA backend)
-//!   solve-mcm   solve a matrix-chain instance (+ parenthesization)
+//!   solve-mcm   solve a matrix-chain instance (`--parens` reconstructs
+//!               the optimal parenthesization through the pipeline's
+//!               traceback sidecar — DESIGN.md §8)
 //!   align       LCS / edit distance / local alignment via the wavefront
+//!               (`--script` reconstructs the edit script + local span)
 //!   trace       print the Fig. 3 / Fig. 7 execution traces
 //!   schedule    compile an MCM schedule and emit it as JSON
 //!   verify      conflict-freedom (Thm. 1) + staleness-hazard report
 //!   simulate    price the Table I bands on the GPU cost model
 //!   serve       run the coordinator server
-//!   client      send one request to a running server
+//!   client      send one request to a running server (`--solution` asks
+//!               for reconstruction over the wire — docs/PROTOCOL.md)
+//!   bench-check bench-regression gate over committed BENCH_*.json
 //!   info        artifact registry and platform info
 
 use pipedp::coordinator::request::{Backend, Request, RequestBody};
@@ -62,13 +68,13 @@ const USAGE: &str = "pipedp <subcommand> [flags]
 
   solve-sdp   --n N --offsets 7,5,2 --op min [--init 1,2,…|--seed S] [--backend auto|native|xla]
   solve-mcm   --dims 30,35,15,5,10,20,25 [--variant corrected|faithful] [--backend …] [--parens]
-  align       --a 1,2,3,4 --b 2,3,9 [--variant lcs|edit|local] [--match 2 --mismatch -1 --gap -1] [--backend …]
+  align       --a 1,2,3,4 --b 2,3,9 [--variant lcs|edit|local] [--match 2 --mismatch -1 --gap -1] [--backend …] [--script]
   trace       --kind sdp|mcm [--n N] [--offsets …] [--variant …] [--steps S]
   schedule    --n N --variant corrected|faithful [--json]
   verify      [--max-n N]
   simulate    [--samples S]
   serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E]
-  client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats]
+  client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution]
   bench-check --baseline BENCH_x.json --current BENCH_x.json [--tolerance 0.30] [--relative-to seq]
   info";
 
@@ -136,17 +142,40 @@ fn cmd_solve_mcm(argv: Vec<String>) -> Result<()> {
     let p = McmProblem::new(args.get_i64_list("dims")?)?;
     let variant = McmVariant::parse(args.get_str("variant")?)?;
     let backend = parse_backend(&args)?;
-    let (st, served) = match backend {
+    let want_parens = args.get_bool("parens");
+    if want_parens && variant == McmVariant::PaperFaithful {
+        return Err(pipedp::Error::InvalidProblem(
+            "--parens requires --variant corrected: the faithful schedule's stale \
+             argmins describe no optimal solution (DESIGN.md §8)"
+                .into(),
+        ));
+    }
+    // --parens goes through the *pipeline* traceback path (the recording
+    // executor's split sidecar natively, from-table reconstruction on the
+    // XLA route) — not the sequential oracle; both are pinned identical
+    // by property tests.
+    let (st, parens, served) = match backend {
         Backend::Xla => {
             let engine = pipedp::runtime::engine::Engine::load()?;
             match variant {
-                McmVariant::Corrected => (engine.solve_mcm(&p)?, "xla:diagonal"),
+                McmVariant::Corrected => {
+                    let st = engine.solve_mcm(&p)?;
+                    let parens = want_parens.then(|| {
+                        pipedp::core::traceback::mcm_parenthesization_from_table(&p, &st)
+                    });
+                    (st, parens, "xla:diagonal")
+                }
                 McmVariant::PaperFaithful => {
-                    (engine.solve_mcm_pipeline(&p, variant)?, "xla:pipeline")
+                    (engine.solve_mcm_pipeline(&p, variant)?, None, "xla:pipeline")
                 }
             }
         }
-        _ => (pipedp::mcm::pipeline::solve(&p, variant), "native"),
+        _ if want_parens => {
+            let (st, splits) = pipedp::mcm::pipeline::solve_recorded(&p);
+            let parens = pipedp::core::traceback::parenthesization(p.n(), &splits);
+            (st, Some(parens), "native")
+        }
+        _ => (pipedp::mcm::pipeline::solve(&p, variant), None, "native"),
     };
     println!(
         "optimal cost = {}   (n={} variant={} backend={served})",
@@ -163,11 +192,8 @@ fn cmd_solve_mcm(argv: Vec<String>) -> Result<()> {
             );
         }
     }
-    if args.get_bool("parens") {
-        println!(
-            "parenthesization: {}",
-            pipedp::mcm::seq::parenthesization(&p)
-        );
+    if let Some(parens) = parens {
+        println!("parenthesization: {parens}");
     }
     if args.get_bool("full") {
         println!("{st:?}");
@@ -184,6 +210,7 @@ fn cmd_align(argv: Vec<String>) -> Result<()> {
         .flag("mismatch", "local-alignment mismatch score", Some("-1"))
         .flag("gap", "local-alignment gap score", Some("-1"))
         .flag("backend", "auto|native|xla", Some("auto"))
+        .boolflag("script", "reconstruct and print the edit script + span")
         .boolflag("full", "print the whole table")
         .parse(argv)?;
     let variant = AlignVariant::parse(args.get_str("variant")?)?;
@@ -198,12 +225,24 @@ fn cmd_align(argv: Vec<String>) -> Result<()> {
         },
     )?;
     let backend = parse_backend(&args)?;
-    let (st, served) = match backend {
+    let want_script = args.get_bool("script");
+    // --script rides the wavefront traceback path (DESIGN.md §8): the
+    // recording executor's move sidecar natively, from-table
+    // reconstruction on the XLA route.
+    let (st, solution, served) = match backend {
         Backend::Xla => {
             let engine = pipedp::runtime::engine::Engine::load()?;
-            (engine.solve_align(&p)?, "xla")
+            let st = engine.solve_align(&p)?;
+            let sol = want_script
+                .then(|| pipedp::core::traceback::align_solution_from_table(&p, &st));
+            (st, sol, "xla")
         }
-        _ => (pipedp::align::wavefront::solve(&p), "native"),
+        _ if want_script => {
+            let (st, moves) = pipedp::align::wavefront::solve_recorded(&p);
+            let sol = pipedp::core::traceback::align_solution(&p, &st, &moves);
+            (st, Some(sol), "native")
+        }
+        _ => (pipedp::align::wavefront::solve(&p), None, "native"),
     };
     let label = match variant {
         AlignVariant::Lcs => "lcs length",
@@ -217,6 +256,21 @@ fn cmd_align(argv: Vec<String>) -> Result<()> {
         p.cols(),
         variant.name()
     );
+    if let Some(sol) = solution {
+        println!(
+            "script: {}   (M match, S substitute, D delete a[i], I insert b[j])",
+            sol.ops
+        );
+        println!(
+            "span: a[{}..{}] vs b[{}..{}], {} aligned pairs, replayed score {}",
+            sol.start.0,
+            sol.end.0,
+            sol.start.1,
+            sol.end.1,
+            sol.pairs.len(),
+            sol.score
+        );
+    }
     if args.get_bool("full") {
         println!("{st:?}");
     }
@@ -431,6 +485,10 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
         .flag("variant", "MCM variant", Some("corrected"))
         .flag("backend", "auto|native|xla", Some("auto"))
         .boolflag("stats", "fetch server stats instead")
+        .boolflag(
+            "solution",
+            "set want_solution: ask the server to reconstruct the optimal solution",
+        )
         .parse(argv)?;
     let mut client = Client::connect(args.get_str("addr")?)?;
     let backend = parse_backend(&args)?;
@@ -449,11 +507,15 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
         body,
         backend,
         full: false,
+        want_solution: args.get_bool("solution"),
     })?;
     if let Some(stats) = resp.stats {
         println!("{}", stats.to_string());
     } else if resp.ok {
         println!("value = {} (served_by {})", resp.value, resp.served_by);
+        if let Some(solution) = resp.solution {
+            println!("solution = {}", solution.to_string());
+        }
     } else {
         println!("error: {}", resp.error.unwrap_or_default());
     }

@@ -28,6 +28,7 @@ use std::sync::Barrier;
 use crate::core::cache;
 use crate::core::problem::McmProblem;
 use crate::core::schedule::{default_mcm_tile, linear, McmSchedule, McmVariant};
+use crate::core::traceback::SplitArena;
 use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
 use crate::sdp::naive::SharedTable;
 
@@ -86,6 +87,38 @@ fn execute_fused(p: &McmProblem, sched: &McmSchedule, st: &mut [i64]) {
     }
 }
 
+/// [`execute_fused`] + split recording (DESIGN.md §8): a term whose value
+/// overwrites (term 1) or strictly improves its cell also stores the
+/// term's split `m = pb − 1` into the sidecar.  Terms of a cell are swept
+/// in ascending term (= ascending split) order, so strict improvement
+/// keeps the *lowest* minimizing split — exactly the sequential oracle's
+/// tie-break ([`crate::mcm::seq::splits_linear`]).
+fn execute_fused_recorded(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    st: &mut [i64],
+    splits: &SplitArena,
+) {
+    let dims = &p.dims;
+    for i in 0..sched.num_terms() {
+        // SAFETY: identical bounds argument to `execute_fused`; the
+        // sidecar has one slot per table cell, indexed by the same tgt.
+        unsafe {
+            let v = *st.get_unchecked(*sched.l.get_unchecked(i) as usize)
+                + *st.get_unchecked(*sched.r.get_unchecked(i) as usize)
+                + *dims.get_unchecked(*sched.pa.get_unchecked(i) as usize)
+                    * *dims.get_unchecked(*sched.pb.get_unchecked(i) as usize)
+                    * *dims.get_unchecked(*sched.pc.get_unchecked(i) as usize);
+            let tgt = *sched.tgt.get_unchecked(i) as usize;
+            let slot = st.get_unchecked_mut(tgt);
+            if *sched.term.get_unchecked(i) == 1 || v < *slot {
+                *slot = v;
+                splits.store(tgt, *sched.pb.get_unchecked(i) - 1);
+            }
+        }
+    }
+}
+
 /// The paper's 4-substep memory model: gather every lane of a step, then
 /// apply the writes.  Required for the faithful variant's stale-read
 /// semantics.
@@ -130,6 +163,31 @@ fn execute_two_phase(p: &McmProblem, sched: &McmSchedule, st: &mut [i64]) {
 pub fn solve(p: &McmProblem, variant: McmVariant) -> Vec<i64> {
     let sched = cache::mcm_schedule(p.n().max(1), variant);
     execute(p, &sched)
+}
+
+/// Fused single-pass executor + traceback recording (DESIGN.md §8):
+/// returns the solved table and the per-cell lowest-argmin split sidecar.
+/// Corrected schedules only — the faithful variant's stale reads make
+/// its argmins meaningless, so recording refuses it.
+pub fn execute_recorded(p: &McmProblem, sched: &McmSchedule) -> (Vec<i64>, Vec<u32>) {
+    assert_eq!(p.n(), sched.n, "schedule/problem size mismatch");
+    assert_eq!(
+        sched.variant,
+        McmVariant::Corrected,
+        "traceback recording requires the hazard-free Corrected schedule"
+    );
+    let ncells = linear::num_cells(p.n());
+    let mut st = vec![0i64; ncells];
+    let splits = SplitArena::new(ncells);
+    execute_fused_recorded(p, sched, &mut st, &splits);
+    (st, splits.into_vec())
+}
+
+/// Convenience: recorded solve over the cached untiled Corrected
+/// schedule — the router's `fused` traceback route.
+pub fn solve_recorded(p: &McmProblem) -> (Vec<i64>, Vec<u32>) {
+    let sched = cache::mcm_schedule(p.n().max(1), McmVariant::Corrected);
+    execute_recorded(p, &sched)
 }
 
 /// Real multi-threaded executor: the ≤ n−1 lanes of each step are split
@@ -230,6 +288,71 @@ pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> 
     st
 }
 
+/// [`execute_threaded`] + traceback recording (Corrected fused form
+/// only).  The sidecar inherits the executor's safety argument: a cell
+/// is touched by exactly one lane per step (targets are step-distinct),
+/// its terms land on barrier-separated consecutive steps, and the
+/// strict-improvement rule reads the running value the same lane just
+/// read for the table write — so each sidecar slot sees an ordered,
+/// single-writer-per-step history (DESIGN.md §8).
+pub fn execute_threaded_recorded(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    threads: usize,
+) -> (Vec<i64>, Vec<u32>) {
+    let n = p.n();
+    assert_eq!(n, sched.n, "schedule/problem size mismatch");
+    assert_eq!(
+        sched.variant,
+        McmVariant::Corrected,
+        "traceback recording requires the hazard-free Corrected schedule"
+    );
+    let threads = threads.max(1).min(sched.max_width().max(1));
+    if threads == 1 {
+        return execute_recorded(p, sched);
+    }
+    let ncells = linear::num_cells(n);
+    let mut st = vec![0i64; ncells];
+    let splits = SplitArena::new(ncells);
+    let barrier = Barrier::new(threads);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let st_ptr = &st_ptr;
+            let splits = &splits;
+            scope.spawn(move || {
+                for s in 0..sched.num_steps() {
+                    let view = sched.step_view(s);
+                    let chunk = view.len().div_ceil(threads);
+                    let lo = (t * chunk).min(view.len());
+                    let hi = ((t + 1) * chunk).min(view.len());
+                    for lane in lo..hi {
+                        // SAFETY: as in `execute_threaded`'s fused pass;
+                        // the sidecar store shares the write's ownership.
+                        unsafe {
+                            let v = st_ptr.read(view.l[lane] as usize)
+                                + st_ptr.read(view.r[lane] as usize)
+                                + p.weight(
+                                    view.pa[lane] as usize,
+                                    view.pb[lane] as usize,
+                                    view.pc[lane] as usize,
+                                );
+                            let tgt = view.tgt[lane] as usize;
+                            if view.term[lane] == 1 || v < st_ptr.read(tgt) {
+                                st_ptr.write(tgt, v);
+                                splits.store(tgt, view.pb[lane] - 1);
+                            }
+                        }
+                    }
+                    barrier.wait(); // end of outer step
+                }
+            });
+        }
+    });
+    (st, splits.into_vec())
+}
+
 /// Pooled superstep-tiled executor (DESIGN.md §7): resident
 /// [`ExecPool`] workers sweep one *superstep* of the arena between
 /// [`SenseBarrier`] waits — `⌈steps/tile⌉` cheap barriers instead of
@@ -313,6 +436,76 @@ pub fn execute_pooled_counted(
         }
     });
     (st, barrier.rounds())
+}
+
+/// [`execute_pooled`] + traceback recording: `tgt`-modulo ownership
+/// keeps every cell's terms (and therefore every sidecar slot's stores)
+/// on one worker in arena order, so the strict-improvement recording is
+/// single-writer by construction (DESIGN.md §8).
+pub fn execute_pooled_recorded(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<i64>, Vec<u32>) {
+    let n = p.n();
+    assert_eq!(n, sched.n, "schedule/problem size mismatch");
+    assert_eq!(
+        sched.variant,
+        McmVariant::Corrected,
+        "traceback recording requires the hazard-free Corrected schedule"
+    );
+    let parties = threads
+        .max(1)
+        .min(pool.threads())
+        .min(sched.max_width().max(1));
+    let ncells = linear::num_cells(n);
+    let mut st = vec![0i64; ncells];
+    let splits = SplitArena::new(ncells);
+    if parties <= 1 {
+        execute_fused_recorded(p, sched, &mut st, &splits);
+        return (st, splits.into_vec());
+    }
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let splits_ref = &splits;
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for g in 0..sched.num_supersteps() {
+            for i in sched.superstep_range(g) {
+                let tgt = sched.tgt[i] as usize;
+                if tgt % parties != t {
+                    continue;
+                }
+                // SAFETY: as in `execute_pooled`; the sidecar slot is
+                // owned by the same worker that owns the table cell.
+                unsafe {
+                    let v = st_ptr.read(sched.l[i] as usize)
+                        + st_ptr.read(sched.r[i] as usize)
+                        + p.weight(
+                            sched.pa[i] as usize,
+                            sched.pb[i] as usize,
+                            sched.pc[i] as usize,
+                        );
+                    if sched.term[i] == 1 || v < st_ptr.read(tgt) {
+                        st_ptr.write(tgt, v);
+                        splits_ref.store(tgt, sched.pb[i] - 1);
+                    }
+                }
+            }
+            waiter.wait(); // end of superstep
+        }
+    });
+    (st, splits.into_vec())
+}
+
+/// Convenience: recorded solve on the process-wide pool with the cached
+/// default-tiled schedule — the router's `pooled` traceback route.
+pub fn solve_pooled_recorded(p: &McmProblem) -> (Vec<i64>, Vec<u32>) {
+    let n = p.n().max(1);
+    let sched = cache::mcm_schedule_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled_recorded(p, &sched, pool, pool.threads())
 }
 
 /// Convenience: corrected solve on the process-wide pool with the cached
@@ -430,6 +623,76 @@ mod tests {
                 Err(format!("n={n} tile={tile} threads={threads} dims={:?}", p.dims))
             }
         });
+    }
+
+    #[test]
+    fn recorded_pipeline_parenthesization_matches_seq_on_100_instances() {
+        // the acceptance criterion: the Corrected pipeline path and
+        // mcm::seq produce the IDENTICAL parenthesization (not merely
+        // equal cost) on 100 random instances
+        forall("pipeline parens == seq parens", 100, |g| {
+            let n = g.usize(1..20);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let (st, splits) = solve_recorded(&p);
+            if st != seq::linear_table(&p) {
+                return Err(format!("table diverged: {:?}", p.dims));
+            }
+            let got = crate::core::traceback::parenthesization(n, &splits);
+            let want = seq::parenthesization(&p);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{:?}: {got} != {want}", p.dims))
+            }
+        });
+    }
+
+    #[test]
+    fn recorded_splits_exactly_match_seq_tiebreak() {
+        // bit-identical sidecars, not just same-cost reconstructions —
+        // across the fused, chunked-threaded and pooled recorders
+        let pool = ExecPool::new(8);
+        forall("recorded splits == seq splits", 40, |g| {
+            let n = g.usize(1..24);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let want = seq::splits_linear(&p);
+            let sched = McmSchedule::compile(n, McmVariant::Corrected);
+            let (_, fused) = execute_recorded(&p, &sched);
+            if fused != want {
+                return Err(format!("fused splits: {:?}", p.dims));
+            }
+            let threads = *g.choose(&[1usize, 2, 8]);
+            let (tt, threaded) = execute_threaded_recorded(&p, &sched, threads);
+            if threaded != want || tt != seq::linear_table(&p) {
+                return Err(format!("threaded({threads}) splits: {:?}", p.dims));
+            }
+            let tile = *g.choose(&[1usize, 4, 64]);
+            let tsched = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            let (pt, pooled) = execute_pooled_recorded(&p, &tsched, &pool, threads);
+            if pooled != want || pt != seq::linear_table(&p) {
+                return Err(format!("pooled(t={threads},T={tile}) splits: {:?}", p.dims));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_pooled_recorded_reconstructs_clrs() {
+        let p = McmProblem::clrs();
+        let (st, splits) = solve_pooled_recorded(&p);
+        assert_eq!(*st.last().unwrap(), 15125);
+        assert_eq!(
+            crate::core::traceback::parenthesization(6, &splits),
+            "((A1(A2A3))((A4A5)A6))"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "Corrected")]
+    fn recording_rejects_faithful_schedules() {
+        let p = McmProblem::clrs();
+        let sched = McmSchedule::compile(6, McmVariant::PaperFaithful);
+        execute_recorded(&p, &sched);
     }
 
     #[test]

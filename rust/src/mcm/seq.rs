@@ -46,11 +46,20 @@ pub fn linear_table(p: &McmProblem) -> Vec<i64> {
     st
 }
 
-/// Optimal parenthesization, e.g. `((A1(A2A3))((A4A5)A6))`.
-pub fn parenthesization(p: &McmProblem) -> String {
+/// [`linear_table`] + the lowest-argmin split sidecar in one `O(n³)`
+/// pass — the sequential traceback route (recomputing them separately
+/// would double the solve cost for every `want_solution` request the
+/// policy sends to `seq`).
+///
+/// Sidecar layout: entry `cell_index(n, r, c)` holds the optimal top
+/// split `m` of cell `(r, c)` under the deterministic tie-break of
+/// [`crate::core::traceback`] (ascending scan, strict improvement);
+/// length-1 cells hold 0.  This is the oracle the recording pipeline
+/// executors are pinned against.
+pub fn linear_table_with_splits(p: &McmProblem) -> (Vec<i64>, Vec<u32>) {
     let n = p.n();
     let mut t = vec![0i64; n * n];
-    let mut split = vec![0usize; n * n];
+    let mut splits = vec![0u32; linear::num_cells(n)];
     for d in 1..n {
         for r in 0..(n - d) {
             let c = r + d;
@@ -64,24 +73,28 @@ pub fn parenthesization(p: &McmProblem) -> String {
                 }
             }
             t[r * n + c] = best;
-            split[r * n + c] = bm;
+            splits[linear::cell_index(n, r, c)] = bm as u32;
         }
     }
-    fn emit(split: &[usize], n: usize, r: usize, c: usize, out: &mut String) {
-        if r == c {
-            out.push('A');
-            out.push_str(&(r + 1).to_string());
-        } else {
-            out.push('(');
-            let m = split[r * n + c];
-            emit(split, n, r, m, out);
-            emit(split, n, m + 1, c, out);
-            out.push(')');
+    let mut st = vec![0i64; linear::num_cells(n)];
+    for r in 0..n {
+        for c in r..n {
+            st[linear::cell_index(n, r, c)] = t[r * n + c];
         }
     }
-    let mut out = String::new();
-    emit(&split, n, 0, n - 1, &mut out);
-    out
+    (st, splits)
+}
+
+/// The split sidecar alone — see [`linear_table_with_splits`].
+pub fn splits_linear(p: &McmProblem) -> Vec<u32> {
+    linear_table_with_splits(p).1
+}
+
+/// Optimal parenthesization, e.g. `((A1(A2A3))((A4A5)A6))` —
+/// reconstructed through the shared traceback subsystem from the
+/// [`splits_linear`] sidecar.
+pub fn parenthesization(p: &McmProblem) -> String {
+    crate::core::traceback::parenthesization(p.n(), &splits_linear(p))
 }
 
 #[cfg(test)]
@@ -143,6 +156,27 @@ mod tests {
                 Ok(())
             } else {
                 Err(format!("{dims:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn splits_match_from_table_recompute() {
+        // the oracle sidecar and the from-table fallback share one
+        // tie-break: they must be bit-identical, and the combined
+        // single-pass solve must agree with the plain table
+        forall("seq splits == from-table", 40, |g| {
+            let n = g.usize(1..10);
+            let p = McmProblem::new(g.dims(n, 20)).unwrap();
+            let (st, a) = linear_table_with_splits(&p);
+            if st != linear_table(&p) {
+                return Err(format!("combined table diverged: {:?}", p.dims));
+            }
+            let b = crate::core::traceback::mcm_splits_from_table(&p, &st);
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("{:?}", p.dims))
             }
         });
     }

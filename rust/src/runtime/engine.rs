@@ -559,6 +559,58 @@ mod tests {
     }
 
     #[test]
+    fn padded_mcm_solution_reconstruction_is_pad_invariant() {
+        // want_solution through the XLA route reconstructs from the
+        // extracted table; the parenthesization must be identical to the
+        // unpadded instance's, whatever bucket the request landed in
+        forall("mcm pad-invariant parens", 30, |g| {
+            let n = g.usize(2..8);
+            let dims = g.dims(n, 20);
+            let p = McmProblem::new(dims.clone()).unwrap();
+            let padded = McmProblem::new(pad_dims(&dims, n + 3)).unwrap();
+            let full = crate::mcm::seq::linear_table(&padded);
+            let extracted = extract_linear(&full, n + 3, n);
+            let got = crate::core::traceback::mcm_parenthesization_from_table(&p, &extracted);
+            let want = crate::mcm::seq::parenthesization(&p);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{dims:?}: {got} != {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn padded_align_solution_reconstruction_is_pad_invariant() {
+        use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+        forall("align pad-invariant solution", 30, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..14, 4, v);
+            let (m, n) = (p.rows(), p.cols());
+            let padded = AlignProblem::new(
+                pad_seq(&p.a, m + 4),
+                pad_seq(&p.b, n + 2),
+                v,
+                AlignScoring::default(),
+            )
+            .unwrap();
+            let full = crate::align::seq::solve(&padded);
+            let extracted = extract_grid(&full, n + 2, m, n);
+            let got = crate::core::traceback::align_solution_from_table(&p, &extracted);
+            let want = crate::core::traceback::align_solution_from_table(
+                &p,
+                &crate::align::seq::solve(&p),
+            );
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{v:?} {m}x{n}: {got:?} != {want:?}"))
+            }
+        });
+    }
+
+    #[test]
     fn align_params_encode_variant_and_scoring() {
         use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
         let p = AlignProblem::new(

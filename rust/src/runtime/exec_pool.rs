@@ -24,7 +24,11 @@
 //! resource; the adaptive policy in [`crate::core::policy`] downgrades to
 //! the fused single-thread executor when the pool is busy rather than
 //! queueing behind it).  Occupancy and solve counters surface in the
-//! coordinator's stats snapshot.
+//! coordinator's stats snapshot.  The traceback-recording executors
+//! ([`crate::mcm::pipeline::execute_pooled_recorded`],
+//! [`crate::align::wavefront::execute_pooled_recorded`]) run on the same
+//! pool with the same barrier discipline — the sidecar writes piggyback
+//! on the ownership the barriers already enforce (DESIGN.md §8).
 //!
 //! ## Safety model
 //!

@@ -65,6 +65,74 @@ fn align_lcs_edit_local() {
 }
 
 #[test]
+fn help_mentions_every_subcommand() {
+    // the file-top doc header and USAGE are regenerated from the real
+    // dispatch table; this pins them against drift (ISSUE 5 satellite)
+    let out = pipedp(&["--help"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    for sub in [
+        "solve-sdp",
+        "solve-mcm",
+        "align",
+        "trace",
+        "schedule",
+        "verify",
+        "simulate",
+        "serve",
+        "client",
+        "bench-check",
+        "info",
+    ] {
+        assert!(s.contains(sub), "--help is missing subcommand '{sub}':\n{s}");
+    }
+}
+
+#[test]
+fn solve_mcm_parens_rejects_faithful() {
+    let out = pipedp(&[
+        "solve-mcm", "--dims", "24,3,6,7,6", "--variant", "faithful", "--parens",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("corrected"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn align_script_reconstruction() {
+    // kitten → sitting: the script must replay to the reported distance
+    let out = pipedp(&[
+        "align", "--a", "10,8,19,19,4,13", "--b", "18,8,19,19,8,13,6",
+        "--variant", "edit", "--script",
+    ]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("edit distance = 3"), "{s}");
+    let script_line = s
+        .lines()
+        .find(|l| l.starts_with("script: "))
+        .unwrap_or_else(|| panic!("no script line in {s}"));
+    let ops: &str = script_line["script: ".len()..].split_whitespace().next().unwrap();
+    let cost = ops.chars().filter(|&c| c != 'M').count();
+    assert_eq!(cost, 3, "script {ops} does not replay to 3");
+    assert!(s.contains("replayed score 3"), "{s}");
+
+    // local alignment span: shared run {1,2,3} at known coordinates
+    let out = pipedp(&[
+        "align", "--a", "9,9,1,2,3,9", "--b", "7,1,2,3,7,7",
+        "--variant", "local", "--script",
+    ]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("local score = 6"), "{s}");
+    assert!(s.contains("script: MMM"), "{s}");
+    assert!(s.contains("span: a[2..5] vs b[1..4]"), "{s}");
+}
+
+#[test]
 fn align_rejects_empty_sequence() {
     let out = pipedp(&["align", "--a", "1,2", "--b", ""]);
     assert_eq!(out.status.code(), Some(1));

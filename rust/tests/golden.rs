@@ -115,6 +115,54 @@ fn align_semantics_match_python() {
 }
 
 #[test]
+fn align_traceback_solutions_match_python() {
+    // the recorded wavefront sidecar must reconstruct the exact solution
+    // the Python reference traceback pinned (same tie-break, same span,
+    // same script — DESIGN.md §8)
+    let golden = load("align_cases.json");
+    for case in golden.as_arr().unwrap() {
+        let a = case.i64_vec_field("a").unwrap();
+        let b = case.i64_vec_field("b").unwrap();
+        for variant in AlignVariant::ALL {
+            let p = AlignProblem::new(
+                a.clone(),
+                b.clone(),
+                variant,
+                AlignScoring::default(),
+            )
+            .unwrap();
+            let (st, moves) = pipedp::align::wavefront::solve_recorded(&p);
+            let sol = pipedp::core::traceback::align_solution(&p, &st, &moves);
+            let want = case
+                .field(&format!("{}_solution", variant.name()))
+                .unwrap();
+            let ctx = format!("{variant:?} a={a:?} b={b:?}");
+            assert_eq!(sol.ops, want.str_field("ops").unwrap(), "{ctx}");
+            assert_eq!(sol.score, want.i64_field("score").unwrap(), "{ctx}");
+            let start = want.i64_vec_field("start").unwrap();
+            let end = want.i64_vec_field("end").unwrap();
+            assert_eq!(
+                (sol.start.0 as i64, sol.start.1 as i64),
+                (start[0], start[1]),
+                "{ctx}"
+            );
+            assert_eq!((sol.end.0 as i64, sol.end.1 as i64), (end[0], end[1]), "{ctx}");
+            let want_pairs = want.arr_field("pairs").unwrap();
+            assert_eq!(sol.pairs.len(), want_pairs.len(), "{ctx}");
+            for (got, want_pair) in sol.pairs.iter().zip(want_pairs) {
+                let w: Vec<i64> = want_pair
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_i64().unwrap())
+                    .collect();
+                assert_eq!(vec![got.0 as i64, got.1 as i64], w, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
 fn mcm_semantics_match_python() {
     let golden = load("mcm_cases.json");
     for case in golden.as_arr().unwrap() {
@@ -139,5 +187,23 @@ fn mcm_semantics_match_python() {
         // corrected always equals the DP truth (re-assert the invariant
         // through the *python-generated* fixtures)
         assert_eq!(corrected, linear);
+        // the split sidecar is pinned cross-language: the sequential
+        // oracle AND the recording pipeline executor must both match the
+        // Python reference bit-for-bit (DESIGN.md §8)
+        let want_splits: Vec<u32> = case
+            .i64_vec_field("splits")
+            .unwrap()
+            .iter()
+            .map(|&v| v as u32)
+            .collect();
+        assert_eq!(pipedp::mcm::seq::splits_linear(&p), want_splits, "{dims:?}");
+        let (st, rec_splits) = pipedp::mcm::pipeline::solve_recorded(&p);
+        assert_eq!(st, linear, "recorded table {dims:?}");
+        assert_eq!(rec_splits, want_splits, "recorded splits {dims:?}");
+        assert_eq!(
+            pipedp::core::traceback::parenthesization(p.n(), &rec_splits),
+            parens,
+            "{dims:?}"
+        );
     }
 }

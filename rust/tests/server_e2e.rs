@@ -52,6 +52,7 @@ fn sdp_request(p: SdpProblem, backend: Backend, full: bool) -> Request {
         body: RequestBody::Sdp(p),
         backend,
         full,
+        want_solution: false,
     }
 }
 
@@ -84,6 +85,7 @@ fn mcm_round_trip_with_table() {
             },
             backend: Backend::Native,
             full: true,
+            want_solution: false,
         })
         .unwrap();
     assert!(resp.ok);
@@ -111,6 +113,7 @@ fn align_round_trip_all_variants() {
             body: RequestBody::Align(lcs.clone()),
             backend: Backend::Native,
             full: true,
+            want_solution: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -136,6 +139,7 @@ fn align_round_trip_all_variants() {
             body: RequestBody::Align(edit),
             backend: Backend::Auto,
             full: false,
+            want_solution: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -157,6 +161,7 @@ fn align_round_trip_all_variants() {
             body: RequestBody::Align(local),
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -187,6 +192,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 body: RequestBody::Align(p.clone()),
                 backend: Backend::Native,
                 full: false,
+                want_solution: false,
             })
             .unwrap()
     };
@@ -209,6 +215,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 },
                 backend: Backend::Native,
                 full: false,
+                want_solution: false,
             })
             .unwrap()
     };
@@ -219,6 +226,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 body: RequestBody::Stats,
                 backend: Backend::Auto,
                 full: false,
+                want_solution: false,
             })
             .unwrap();
         resp.stats.unwrap().i64_field("sched_cache_hits").unwrap()
@@ -233,6 +241,88 @@ fn schedule_cache_serves_repeated_shapes() {
     assert!(
         hits_after > hits_before,
         "repeat shape must hit the schedule cache ({hits_before} -> {hits_after})"
+    );
+}
+
+/// The acceptance criterion (ISSUE 5): a served `{"kind": "align",
+/// "want_solution": true, …}` request returns an edit script that
+/// replays to the reported score; an mcm request returns the identical
+/// parenthesization the sequential oracle produces; and the faithful
+/// variant refuses reconstruction with a typed error.
+#[test]
+fn want_solution_round_trip() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    // align edit distance: kitten → sitting over the wire
+    let p = AlignProblem::new(
+        vec![10, 8, 19, 19, 4, 13],
+        vec![18, 8, 19, 19, 8, 13, 6],
+        AlignVariant::Edit,
+        AlignScoring::default(),
+    )
+    .unwrap();
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Align(p.clone()),
+            backend: Backend::Auto,
+            full: false,
+            want_solution: true,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 3);
+    let sol = resp.solution.expect("align solution on the wire");
+    assert_eq!(sol.i64_field("score").unwrap(), resp.value);
+    // replay the script: edit cost = #S + #D + #I, and the walk must
+    // consume exactly both sequences
+    let ops = sol.str_field("ops").unwrap();
+    let cost = ops.chars().filter(|&c| c != 'M').count() as i64;
+    assert_eq!(cost, resp.value, "script {ops} does not replay to the score");
+    let consumed_a = ops.chars().filter(|&c| c != 'I').count();
+    let consumed_b = ops.chars().filter(|&c| c != 'D').count();
+    assert_eq!((consumed_a, consumed_b), (p.rows(), p.cols()));
+
+    // mcm corrected: the wire parenthesization equals the oracle's
+    let mut rng = pipedp::util::rng::Rng::seeded(83);
+    let mcm = McmProblem::random(&mut rng, 19, 20);
+    let want_parens = pipedp::mcm::seq::parenthesization(&mcm);
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Mcm {
+                problem: mcm.clone(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    let sol = resp.solution.expect("mcm solution on the wire");
+    assert_eq!(sol.str_field("parens").unwrap(), want_parens);
+
+    // faithful + want_solution: typed error, never a bogus solution
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Mcm {
+                problem: mcm,
+                variant: McmVariant::PaperFaithful,
+            },
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+        })
+        .unwrap();
+    assert!(!resp.ok);
+    assert!(resp.solution.is_none());
+    assert!(
+        resp.error.as_deref().unwrap_or("").contains("corrected"),
+        "{:?}",
+        resp.error
     );
 }
 
@@ -251,6 +341,7 @@ fn faithful_variant_served_with_divergence() {
             },
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         })
         .unwrap();
     assert!(resp.ok);
@@ -286,6 +377,7 @@ fn malformed_and_invalid_requests_get_errors_not_disconnects() {
         body: RequestBody::Sdp(SdpProblem::fibonacci(10)),
         backend: Backend::Native,
         full: false,
+        want_solution: false,
     }
     .encode();
     good.push('\n');
@@ -333,6 +425,7 @@ fn stats_request_reports_metrics() {
             body: RequestBody::Stats,
             backend: Backend::Auto,
             full: false,
+            want_solution: false,
         })
         .unwrap();
     assert!(resp.ok);
@@ -363,12 +456,14 @@ fn schedule_cache_serves_repeated_sizes() {
         },
         backend: Backend::Native,
         full: false,
+        want_solution: false,
     };
     let stats_request = || Request {
         id: 0,
         body: RequestBody::Stats,
         backend: Backend::Auto,
         full: false,
+        want_solution: false,
     };
     let snapshot_hits = |client: &mut Client| {
         let resp = client.call(stats_request()).unwrap();
@@ -494,6 +589,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
             },
             backend: Backend::Native,
             full: false,
+            want_solution: false,
         })
         .collect();
     let resps = client.call_pipelined(reqs).unwrap();
@@ -528,6 +624,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
             body: RequestBody::Stats,
             backend: Backend::Auto,
             full: false,
+            want_solution: false,
         })
         .unwrap();
     let stats = stats_resp.stats.unwrap();
@@ -609,6 +706,7 @@ fn xla_backend_served_when_artifacts_present() {
             },
             backend: Backend::Xla,
             full: false,
+            want_solution: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
