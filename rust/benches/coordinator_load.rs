@@ -51,6 +51,8 @@ fn main() {
         warm: false,
         queue_cap: 32,
         exec_threads: 0,
+        max_solve_bytes: 0,
+        line_stall_ms: 0,
     })
     .expect("server starts");
     let addr = server.local_addr.to_string();
@@ -84,6 +86,7 @@ fn main() {
                                     backend: Backend::Native,
                                     full: false,
                                     want_solution: false,
+                                    deadline_ms: None,
                                 }
                             })
                             .collect();

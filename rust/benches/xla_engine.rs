@@ -110,6 +110,8 @@ fn main() {
             warm: true,
             queue_cap: 0,
             exec_threads: 0,
+            max_solve_bytes: 0,
+            line_stall_ms: 0,
         })
         .expect("server");
         let addr = server.local_addr.to_string();
@@ -131,6 +133,7 @@ fn main() {
                                 backend: Backend::Auto,
                                 full: false,
                                 want_solution: false,
+                                deadline_ms: None,
                             })
                             .collect();
                         let resps = client.call_pipelined(reqs).unwrap();

@@ -11,6 +11,7 @@
 //! set) and writes are lane-distinct (Theorem 1 for the wavefront), so
 //! the fused form is race-free.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Barrier;
 
 use crate::align::seq;
@@ -18,7 +19,9 @@ use crate::core::cache;
 use crate::core::problem::AlignProblem;
 use crate::core::schedule::{default_align_tile, AlignSchedule};
 use crate::core::traceback::{cell_move, MoveArena};
-use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
+use crate::runtime::exec_pool::{
+    cancelled, CancelToken, ExecPool, SenseBarrier, CANCEL_POLL_STRIDE,
+};
 use crate::sdp::naive::SharedTable;
 
 /// Step-synchronous executor over a compiled schedule: one fused flat
@@ -64,6 +67,60 @@ pub fn execute(p: &AlignProblem, sched: &AlignSchedule) -> Vec<i64> {
 pub fn solve(p: &AlignProblem) -> Vec<i64> {
     let sched = cache::align_schedule(p.rows(), p.cols());
     execute(p, &sched)
+}
+
+/// [`execute`] with cooperative cancellation: the sweep runs
+/// (block-)anti-diagonal by (block-)anti-diagonal, polling the
+/// [`CancelToken`] every [`CANCEL_POLL_STRIDE`] steps and abandoning the
+/// grid with `Err(Timeout)` once it fires.  A never-token delegates to
+/// the fused flat sweep — the common path pays nothing.
+pub fn execute_cancellable(
+    p: &AlignProblem,
+    sched: &AlignSchedule,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(execute(p, sched));
+    }
+    token.check()?;
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    let mut st = p.initial_table();
+    let variant = p.variant;
+    let scoring = p.scoring;
+    let blocked = sched.tile > 1;
+    for s in 0..sched.num_steps() {
+        if s % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
+            return cancelled();
+        }
+        let mut do_lane = |i: usize| {
+            let v = seq::cell(
+                variant,
+                &scoring,
+                st[sched.up[i] as usize],
+                st[sched.left[i] as usize],
+                st[sched.diag[i] as usize],
+                p.a[sched.ai[i] as usize],
+                p.b[sched.bj[i] as usize],
+            );
+            st[sched.tgt[i] as usize] = v;
+        };
+        if blocked {
+            for u in sched.step_unit_range(s) {
+                for i in sched.unit_range(u) {
+                    do_lane(i);
+                }
+            }
+        } else {
+            for i in sched.step_range(s) {
+                do_lane(i);
+            }
+        }
+    }
+    Ok(st)
 }
 
 /// [`execute`] + per-cell move recording (DESIGN.md §8): the fused flat
@@ -325,6 +382,116 @@ pub fn execute_pooled_counted(
     (st, barrier.rounds())
 }
 
+/// [`execute_pooled`] with cooperative cancellation via the superstep
+/// cut protocol: party 0 polls the [`CancelToken`] at the *end* of each
+/// (block-)anti-diagonal and publishes the first step index every party
+/// must skip, *before* its barrier wait.  The break check compares step
+/// indices rather than a boolean, so a party that happens to observe the
+/// publication within the very step it was made still finishes that step
+/// and breaks one barrier later — all parties perform identical barrier
+/// waits (an inconsistent boolean flag could strand the barrier with a
+/// missing arrival), and the pool is released within one barrier round
+/// of the deadline firing.  An expired-at-entry token never engages the
+/// pool (zero barrier rounds).
+pub fn execute_pooled_cancellable(
+    p: &AlignProblem,
+    sched: &AlignSchedule,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    execute_pooled_cancellable_counted(p, sched, pool, threads, token).0
+}
+
+/// [`execute_pooled_cancellable`] + the number of barrier rounds it cost
+/// — the hook the cancellation-latency tests assert on.
+pub fn execute_pooled_cancellable_counted(
+    p: &AlignProblem,
+    sched: &AlignSchedule,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> (crate::Result<Vec<i64>>, u64) {
+    if token.is_never() {
+        let (st, rounds) = execute_pooled_counted(p, sched, pool, threads);
+        return (Ok(st), rounds);
+    }
+    if token.is_cancelled() {
+        return (cancelled(), 0);
+    }
+    assert_eq!(
+        (p.rows(), p.cols()),
+        (sched.rows, sched.cols),
+        "schedule/problem size mismatch"
+    );
+    let parties = threads.max(1).min(pool.threads());
+    if parties <= 1 {
+        return (execute_cancellable(p, sched, token), 0);
+    }
+    let mut st = p.initial_table();
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let variant = p.variant;
+    let scoring = p.scoring;
+    let a = &p.a;
+    let b = &p.b;
+    let blocked = sched.tile > 1;
+    let cut_at = AtomicUsize::new(usize::MAX);
+    let do_lane = |i: usize| {
+        // SAFETY: identical ownership/freshness argument to
+        // `execute_pooled`; cancellation only ever cuts whole steps.
+        unsafe {
+            let v = seq::cell(
+                variant,
+                &scoring,
+                st_ptr.read(sched.up[i] as usize),
+                st_ptr.read(sched.left[i] as usize),
+                st_ptr.read(sched.diag[i] as usize),
+                a[sched.ai[i] as usize],
+                b[sched.bj[i] as usize],
+            );
+            st_ptr.write(sched.tgt[i] as usize, v);
+        }
+    };
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for s in 0..sched.num_steps() {
+            // a cut published at the end of step s names s+1: false for
+            // every party still inside step s, true for every party at
+            // the top of s+1 (the publication happens-before their
+            // return from the step-s barrier)
+            if cut_at.load(Ordering::Relaxed) <= s {
+                break;
+            }
+            if blocked {
+                for (k, u) in sched.step_unit_range(s).enumerate() {
+                    if k % parties != t {
+                        continue;
+                    }
+                    for i in sched.unit_range(u) {
+                        do_lane(i);
+                    }
+                }
+            } else {
+                for (k, i) in sched.step_range(s).enumerate() {
+                    if k % parties != t {
+                        continue;
+                    }
+                    do_lane(i);
+                }
+            }
+            if t == 0 && token.is_cancelled() {
+                cut_at.store(s + 1, Ordering::Relaxed);
+            }
+            waiter.wait(); // end of (block-)anti-diagonal
+        }
+    });
+    if cut_at.load(Ordering::Relaxed) != usize::MAX {
+        return (cancelled(), barrier.rounds());
+    }
+    (Ok(st), barrier.rounds())
+}
+
 /// [`execute_pooled`] + move recording: block (or lane) ownership keeps
 /// each cell's single sidecar write on the worker computing it, and the
 /// [`MoveArena`]'s atomic publication covers byte-sharing across block
@@ -430,6 +597,31 @@ pub fn solve_pooled(p: &AlignProblem) -> Vec<i64> {
     execute_pooled(p, &sched, pool, pool.threads())
 }
 
+/// Convenience: cancellable solve over the cached untiled wavefront —
+/// the router's deadline-carrying `seq`/`fused` route.
+pub fn solve_cancellable(p: &AlignProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
+    let sched = cache::align_schedule(p.rows(), p.cols());
+    execute_cancellable(p, &sched, token)
+}
+
+/// Convenience: cancellable pooled solve on the process-wide pool — the
+/// router's deadline-carrying `pooled` route.  Falls back to the fused
+/// cancellable sweep for grids with one block per diagonal, like
+/// [`solve_pooled`].
+pub fn solve_pooled_cancellable(
+    p: &AlignProblem,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    let (rows, cols) = (p.rows(), p.cols());
+    let tile = default_align_tile(rows, cols);
+    if rows.min(cols) <= tile {
+        return solve_cancellable(p, token);
+    }
+    let sched = cache::align_schedule_tiled(rows, cols, tile);
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled_cancellable(p, &sched, pool, pool.threads(), token)
+}
+
 /// Execution trace of the first `max_steps` wavefront steps (Fig. 7-style
 /// walkthrough for the grid family).
 pub fn trace(p: &AlignProblem, max_steps: usize) -> String {
@@ -524,6 +716,57 @@ mod tests {
                 ))
             }
         });
+    }
+
+    #[test]
+    fn cancellable_with_never_or_live_token_matches_oracle() {
+        let pool = ExecPool::new(4);
+        forall("align cancellable == seq", 20, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 2..60, 4, v);
+            let tile = *g.choose(&[1usize, 3, 8]);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let want = seq::solve(&p);
+            let sched =
+                crate::core::schedule::AlignSchedule::compile_tiled(p.rows(), p.cols(), tile);
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            let a = execute_cancellable(&p, &sched, &CancelToken::never()).unwrap();
+            let b = execute_cancellable(&p, &sched, &live).unwrap();
+            let c = execute_pooled_cancellable(&p, &sched, &pool, threads, &live).unwrap();
+            if a == want && b == want && c == want {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{v:?} {}x{} tile={tile} threads={threads}",
+                    p.rows(),
+                    p.cols()
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn expired_deadline_cancels_with_zero_rounds_and_pool_idle() {
+        let pool = ExecPool::new(4);
+        let mut rng = crate::util::rng::Rng::seeded(41);
+        let p = AlignProblem::random(&mut rng, 40..41, 4, AlignVariant::Lcs);
+        let sched =
+            crate::core::schedule::AlignSchedule::compile_tiled(p.rows(), p.cols(), 4);
+        let expired = CancelToken::at(std::time::Instant::now());
+        let before = pool.stats().solves;
+        let (r, rounds) =
+            execute_pooled_cancellable_counted(&p, &sched, &pool, 4, &expired);
+        assert!(matches!(r, Err(crate::Error::Timeout(_))));
+        assert_eq!(rounds, 0, "entry gate must not engage the pool");
+        assert_eq!(pool.stats().solves, before);
+        assert_eq!(pool.stats().active, 0);
+        assert!(matches!(
+            execute_cancellable(&p, &sched, &expired),
+            Err(crate::Error::Timeout(_))
+        ));
+        // the pool still serves after the cancellation
+        assert_eq!(execute_pooled(&p, &sched, &pool, 4), seq::solve(&p));
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub struct Pending {
     pub request: Request,
     pub route: Route,
     pub enqueued: Instant,
+    /// Absolute deadline derived from the request's `deadline_ms` at
+    /// admission; `None` = unbounded.  Entries past it are shed from the
+    /// flush with a typed `timeout` reply instead of being solved, and
+    /// live ones thread it into the executors' cancel tokens.
+    pub deadline: Option<Instant>,
     pub reply: mpsc::Sender<Response>,
 }
 
@@ -69,6 +74,11 @@ pub struct Batcher {
     router: Arc<Router>,
     pool: Arc<WorkerPool>,
     metrics: Arc<Metrics>,
+    /// Memory admission bound (bytes of estimated solve footprint);
+    /// 0 = unlimited.  Checked in [`Batcher::submit_request`] *before*
+    /// the in-flight slot claim — an oversized request is refused with a
+    /// typed `too_large` reply and never allocates a table.
+    max_solve_bytes: usize,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
@@ -78,6 +88,17 @@ impl Batcher {
         pool: Arc<WorkerPool>,
         metrics: Arc<Metrics>,
         policy: Policy,
+    ) -> Batcher {
+        Batcher::start_with_limit(router, pool, metrics, policy, 0)
+    }
+
+    /// [`Batcher::start`] with a memory admission bound (0 = unlimited).
+    pub fn start_with_limit(
+        router: Arc<Router>,
+        pool: Arc<WorkerPool>,
+        metrics: Arc<Metrics>,
+        policy: Policy,
+        max_solve_bytes: usize,
     ) -> Batcher {
         let (tx, rx) = mpsc::channel::<Msg>();
         let handle = {
@@ -94,6 +115,7 @@ impl Batcher {
             router,
             pool,
             metrics,
+            max_solve_bytes,
             handle: Mutex::new(Some(handle)),
         }
     }
@@ -129,6 +151,21 @@ impl Batcher {
     /// bound.  The backlog check stays as a second trigger for work that
     /// enters the pool without passing this gate.
     pub fn submit_request(&self, request: Request, reply: mpsc::Sender<Response>) {
+        // memory admission: a statically-oversized request is refused
+        // before claiming anything — load cannot make it admissible
+        let est = request.body.estimated_solve_bytes(request.want_solution);
+        if self.max_solve_bytes > 0 && est > self.max_solve_bytes as u64 {
+            self.metrics.rejected_too_large.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Response::too_large(
+                request.id,
+                format!(
+                    "estimated solve footprint {est} B exceeds the admission \
+                     bound {} B",
+                    self.max_solve_bytes
+                ),
+            ));
+            return;
+        }
         let cap = self.pool.capacity();
         // reserve-then-check: the fetch_add atomically claims an in-flight
         // slot, so concurrent connection threads cannot jointly race a
@@ -152,6 +189,15 @@ impl Batcher {
             Ok(route) => {
                 let request_id = request.id;
                 let reply2 = reply.clone();
+                let now = Instant::now();
+                // the budget clock starts at admission: deadline_ms is
+                // relative to arrival, converted once to an absolute
+                // Instant that queue, shed, and executors all compare to
+                // checked_add: an astronomically large budget saturates to
+                // "unbounded" instead of panicking on Instant overflow
+                let deadline = request
+                    .deadline_ms
+                    .and_then(|ms| now.checked_add(Duration::from_millis(ms)));
                 // enqueue, not submit: the gate's fetch_add above already
                 // claimed this request's slot, and enqueue releases it if
                 // the batcher thread is gone (else the gauge would ratchet
@@ -159,7 +205,8 @@ impl Batcher {
                 let accepted = self.enqueue(Pending {
                     request,
                     route,
-                    enqueued: Instant::now(),
+                    enqueued: now,
+                    deadline,
                     reply,
                 });
                 if !accepted {
@@ -299,6 +346,18 @@ fn flush_expired(
     }
 }
 
+/// Best-effort text of a caught panic payload (`&str` and `String` cover
+/// every `panic!` in this crate; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
 fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metrics: &Arc<Metrics>) {
     if batch.is_empty() {
         return;
@@ -310,29 +369,76 @@ fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metr
         for p in &batch {
             metrics.queue_wait.record(p.enqueued.elapsed());
         }
-        let route = batch[0].route;
-        let reqs: Vec<Request> = batch.iter().map(|p| p.request.clone()).collect();
-        let started = Instant::now();
-        let responses = router.execute_group(&reqs, route);
-        let elapsed = started.elapsed();
-        for (p, resp) in batch.iter().zip(responses) {
+        // shed entries whose deadline passed while queued: a typed
+        // `timeout` reply now is strictly better than a solve whose
+        // answer nobody is waiting for (and whose table still costs RAM)
+        let now = Instant::now();
+        let (expired, live): (Vec<Pending>, Vec<Pending>) = batch
+            .into_iter()
+            .partition(|p| p.deadline.is_some_and(|d| d <= now));
+        for p in expired {
+            metrics.timeouts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            metrics
+                .errors
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             metrics.latency.record(p.enqueued.elapsed());
-            if !resp.ok {
-                metrics
-                    .errors
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            }
-            let _ = p.reply.send(resp);
+            let _ = p.reply.send(Response::timeout(p.request.id));
             metrics.dec_inflight();
         }
-        let _ = elapsed;
+        if live.is_empty() {
+            return;
+        }
+        let route = live[0].route;
+        let reqs: Vec<Request> = live.iter().map(|p| p.request.clone()).collect();
+        let deadlines: Vec<Option<Instant>> = live.iter().map(|p| p.deadline).collect();
+        // isolation boundary: an executor panic (a bug, or an injected
+        // fault) must answer every request in the group with a typed,
+        // id-correlated `panicked` reply instead of dropping the reply
+        // senders — the worker thread itself is shielded one level down
+        // (coordinator::pool), this is where replies are rescued
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            router.execute_group_with_deadlines(&reqs, route, &deadlines)
+        }));
+        match caught {
+            Ok(responses) => {
+                for (p, resp) in live.iter().zip(responses) {
+                    metrics.latency.record(p.enqueued.elapsed());
+                    if !resp.ok {
+                        metrics
+                            .errors
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if resp.error_kind
+                            == Some(crate::coordinator::request::ErrorKind::Timeout)
+                        {
+                            metrics
+                                .timeouts
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                    let _ = p.reply.send(resp);
+                    metrics.dec_inflight();
+                }
+            }
+            Err(payload) => {
+                let msg = format!("executor panicked: {}", panic_message(&*payload));
+                for p in &live {
+                    metrics.panics.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics
+                        .errors
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics.latency.record(p.enqueued.elapsed());
+                    let _ = p.reply.send(Response::panicked(p.request.id, msg.clone()));
+                    metrics.dec_inflight();
+                }
+            }
+        }
     });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{Backend, RequestBody};
+    use crate::coordinator::request::{Backend, ErrorKind, RequestBody};
     use crate::core::problem::SdpProblem;
 
     fn native_request(id: i64) -> Request {
@@ -342,6 +448,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         }
     }
 
@@ -354,6 +461,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         }
     }
 
@@ -365,6 +473,85 @@ mod tests {
         (b, metrics)
     }
 
+    /// The memory admission gate: an oversized request is refused with a
+    /// typed, id-correlated `too_large` reply before anything is claimed
+    /// (no in-flight slot, no table allocation), and a request under the
+    /// bound still solves through the same batcher.
+    #[test]
+    fn oversized_request_gets_typed_too_large() {
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(Metrics::default());
+        // fibonacci(16) estimates 16 × 8 = 128 B — set the bound below it
+        let batcher =
+            Batcher::start_with_limit(router, pool, metrics.clone(), Policy::default(), 64);
+        let (tx, rx) = mpsc::channel();
+        batcher.submit_request(native_request(7), tx);
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(!resp.ok);
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.error_kind, Some(ErrorKind::TooLarge));
+        assert_eq!(metrics.rejected_too_large.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            metrics.inflight.load(Ordering::Relaxed),
+            0,
+            "a refused request must not hold an in-flight slot"
+        );
+        // fibonacci(4) estimates 32 B — admitted and solved
+        let (tx, rx) = mpsc::channel();
+        batcher.submit_request(
+            Request {
+                id: 8,
+                body: RequestBody::Sdp(SdpProblem::fibonacci(4)),
+                backend: Backend::Native,
+                full: false,
+                want_solution: false,
+                deadline_ms: None,
+            },
+            tx,
+        );
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(metrics.rejected_too_large.load(Ordering::Relaxed), 1);
+    }
+
+    /// A request whose budget is already exhausted at admission is
+    /// answered with a typed `timeout` — never solved — and releases its
+    /// in-flight slot.
+    #[test]
+    fn expired_deadline_request_sheds_with_typed_timeout() {
+        let (batcher, metrics) = harness();
+        let mut req = native_request(9);
+        req.deadline_ms = Some(0);
+        let (tx, rx) = mpsc::channel();
+        batcher.submit_request(req, tx);
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(!resp.ok);
+        assert_eq!(resp.id, 9);
+        assert_eq!(resp.error_kind, Some(ErrorKind::Timeout));
+        assert_eq!(metrics.timeouts.load(Ordering::Relaxed), 1);
+        let t0 = Instant::now();
+        while metrics.inflight.load(Ordering::Relaxed) != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "slot never released");
+            std::thread::yield_now();
+        }
+    }
+
+    /// A generous budget changes nothing: the deadline-carrying path
+    /// produces the same answer as the unbounded one.
+    #[test]
+    fn generous_deadline_request_solves_normally() {
+        let (batcher, metrics) = harness();
+        let mut req = native_request(10);
+        req.deadline_ms = Some(600_000);
+        let (tx, rx) = mpsc::channel();
+        batcher.submit_request(req, tx);
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.value, 987);
+        assert_eq!(metrics.timeouts.load(Ordering::Relaxed), 0);
+    }
+
     #[test]
     fn single_request_flushes_after_deadline() {
         let (batcher, _m) = harness();
@@ -373,6 +560,7 @@ mod tests {
             request: native_request(1),
             route: Route::Native,
             enqueued: Instant::now(),
+            deadline: None,
             reply: tx,
         });
         let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
@@ -390,6 +578,7 @@ mod tests {
                 request: native_request(i),
                 route: Route::Native,
                 enqueued: Instant::now(),
+                deadline: None,
                 reply: tx,
             });
             receivers.push((i, rx));
@@ -427,6 +616,7 @@ mod tests {
                 request: native_request(i), // same (n, k, op) → same key
                 route: Route::Xla,
                 enqueued: Instant::now(),
+                deadline: None,
                 reply: tx,
             });
             receivers.push(rx);
@@ -457,6 +647,7 @@ mod tests {
             request: native_request(1),
             route: Route::Native,
             enqueued: Instant::now(),
+            deadline: None,
             reply: tx,
         });
         // answered well before the 60 s window
@@ -492,6 +683,7 @@ mod tests {
             request: other_bucket_request(1000),
             route: Route::Xla,
             enqueued: started,
+            deadline: None,
             reply: tx_b,
         });
         std::thread::scope(|s| {
@@ -510,6 +702,7 @@ mod tests {
                         request: native_request(i),
                         route: Route::Xla,
                         enqueued: Instant::now(),
+                        deadline: None,
                         reply: tx,
                     });
                     i += 1;
@@ -614,6 +807,7 @@ mod tests {
             request: native_request(5),
             route: Route::Xla, // groupable key: sits in the pending map
             enqueued: Instant::now(),
+            deadline: None,
             reply: tx,
         });
         std::thread::sleep(Duration::from_millis(20));

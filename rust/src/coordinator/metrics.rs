@@ -88,6 +88,16 @@ pub struct Metrics {
     pub inflight: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Requests answered with a typed `timeout` reply: the deadline
+    /// expired in the queue (shed before solving) or mid-solve (the
+    /// executor's cancel token fired at a superstep boundary).
+    pub timeouts: AtomicU64,
+    /// Requests answered with a typed `panicked` reply after the
+    /// coordinator isolation boundary caught an executor panic.
+    pub panics: AtomicU64,
+    /// Requests refused by the memory admission gate with a typed
+    /// `too_large` reply before any table allocation.
+    pub rejected_too_large: AtomicU64,
 }
 
 impl Metrics {
@@ -130,6 +140,12 @@ impl Metrics {
             ("requests", Json::int(self.requests.load(Ordering::Relaxed) as i64)),
             ("errors", Json::int(self.errors.load(Ordering::Relaxed) as i64)),
             ("shed", Json::int(self.shed.load(Ordering::Relaxed) as i64)),
+            ("timeouts", Json::int(self.timeouts.load(Ordering::Relaxed) as i64)),
+            ("panics", Json::int(self.panics.load(Ordering::Relaxed) as i64)),
+            (
+                "rejected_too_large",
+                Json::int(self.rejected_too_large.load(Ordering::Relaxed) as i64),
+            ),
             ("inflight", Json::int(self.inflight.load(Ordering::Relaxed) as i64)),
             ("batches", Json::int(self.batches.load(Ordering::Relaxed) as i64)),
             ("mean_batch_size", Json::num(self.mean_batch_size())),
@@ -276,6 +292,22 @@ mod tests {
         assert_eq!(m.snapshot().i64_field("shed").unwrap(), 0);
         m.shed.fetch_add(3, Ordering::Relaxed);
         assert_eq!(m.snapshot().i64_field("shed").unwrap(), 3);
+    }
+
+    #[test]
+    fn fault_counters_in_snapshot() {
+        let m = Metrics::default();
+        let snap = m.snapshot();
+        assert_eq!(snap.i64_field("timeouts").unwrap(), 0);
+        assert_eq!(snap.i64_field("panics").unwrap(), 0);
+        assert_eq!(snap.i64_field("rejected_too_large").unwrap(), 0);
+        m.timeouts.fetch_add(2, Ordering::Relaxed);
+        m.panics.fetch_add(1, Ordering::Relaxed);
+        m.rejected_too_large.fetch_add(5, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(snap.i64_field("timeouts").unwrap(), 2);
+        assert_eq!(snap.i64_field("panics").unwrap(), 1);
+        assert_eq!(snap.i64_field("rejected_too_large").unwrap(), 5);
     }
 
     #[test]

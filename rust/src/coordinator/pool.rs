@@ -74,7 +74,13 @@ impl WorkerPool {
                                 guard = shared.available.wait(guard).unwrap();
                             }
                         };
-                        job();
+                        // Isolation boundary: a panicking job must not kill
+                        // the worker thread — the pool would silently lose
+                        // capacity and, at zero workers, wedge the queue.
+                        // Reply construction for panicked solves happens one
+                        // level up (the batcher's flush closure); this catch
+                        // is the backstop that keeps the worker alive.
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                     })
                     .expect("spawn worker")
             })
@@ -255,6 +261,25 @@ mod tests {
         waiter.join().unwrap();
         assert_eq!(submitted.load(Ordering::SeqCst), 1);
         pool.shutdown();
+    }
+
+    #[test]
+    fn workers_survive_panicking_jobs() {
+        // one worker: if the panic killed it, the follow-up jobs would
+        // never run and shutdown would leave the counter short
+        let pool = WorkerPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..6 {
+            let c = counter.clone();
+            pool.submit(move || {
+                if i % 2 == 0 {
+                    panic!("injected job panic");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
     }
 
     #[test]

@@ -41,6 +41,55 @@ impl Backend {
     }
 }
 
+/// Typed failure taxonomy on the wire (docs/PROTOCOL.md): every error
+/// reply carries at most one kind, and clients branch on it — retry with
+/// backoff on `overloaded`, resubmit with a larger budget on `timeout`,
+/// shrink or split on `too_large`, report-and-retry-once on `panicked`.
+/// Plain validation errors (bad JSON, invalid problems) carry no kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request's `deadline_ms` budget expired before (or while)
+    /// solving; the solve was shed or cancelled at a superstep boundary.
+    Timeout,
+    /// The solve panicked; the fault was isolated at the worker-pool
+    /// boundary and the server remains healthy.
+    Panicked,
+    /// The admission gate refused the solve: its estimated table +
+    /// sidecar footprint exceeds the server's `max_solve_bytes` budget.
+    TooLarge,
+    /// The admission gate refused the request because the worker queue
+    /// was full (the legacy `overloaded` marker, now typed).
+    Overloaded,
+}
+
+impl ErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorKind::Timeout => "timeout",
+            ErrorKind::Panicked => "panicked",
+            ErrorKind::TooLarge => "too_large",
+            ErrorKind::Overloaded => "overloaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ErrorKind> {
+        match s {
+            "timeout" => Ok(ErrorKind::Timeout),
+            "panicked" => Ok(ErrorKind::Panicked),
+            "too_large" => Ok(ErrorKind::TooLarge),
+            "overloaded" => Ok(ErrorKind::Overloaded),
+            other => Err(Error::Json(format!("unknown error_kind '{other}'"))),
+        }
+    }
+
+    /// Whether a client may retry the identical request and plausibly
+    /// succeed (docs/PROTOCOL.md retry guidance): load and transient
+    /// faults are retryable, a structurally oversized solve is not.
+    pub fn retryable(self) -> bool {
+        !matches!(self, ErrorKind::TooLarge)
+    }
+}
+
 /// A parsed request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -54,6 +103,11 @@ pub struct Request {
     /// span for `align`.  Ignored by `sdp`/`stats`, which have no
     /// solution structure beyond the table itself (docs/PROTOCOL.md).
     pub want_solution: bool,
+    /// Per-request latency budget in milliseconds, measured from server
+    /// receipt.  Expired requests are shed from the queue (never solved)
+    /// and running solves are cancelled at the next superstep boundary;
+    /// both reply `error_kind: "timeout"`.  Absent means no deadline.
+    pub deadline_ms: Option<u64>,
 }
 
 #[derive(Debug, Clone)]
@@ -68,6 +122,34 @@ pub enum RequestBody {
     Align(AlignProblem),
     /// Server status probe.
     Stats,
+}
+
+impl RequestBody {
+    /// Estimated peak allocation of solving this body, in bytes: the DP
+    /// table plus (when `want_solution` records a sidecar) the traceback
+    /// arena.  A cheap upper-bound estimate computed *before* any
+    /// allocation — the admission gate compares it against the server's
+    /// `max_solve_bytes` budget so a megabase-scale table is refused with
+    /// `too_large` instead of OOM-killing the process.
+    pub fn estimated_solve_bytes(&self, want_solution: bool) -> u64 {
+        const CELL: u64 = std::mem::size_of::<i64>() as u64;
+        match self {
+            RequestBody::Sdp(p) => p.n as u64 * CELL,
+            RequestBody::Mcm { problem, .. } => {
+                // n×n flat arena bound; the split sidecar is u32 per cell
+                let cells = (problem.n() as u64).saturating_mul(problem.n() as u64);
+                let sidecar = if want_solution { cells * 4 } else { 0 };
+                cells.saturating_mul(CELL).saturating_add(sidecar)
+            }
+            RequestBody::Align(p) => {
+                let cells = p.num_cells() as u64;
+                // packed 2-bit moves: 4 cells per sidecar byte
+                let sidecar = if want_solution { cells.div_ceil(4) } else { 0 };
+                cells.saturating_mul(CELL).saturating_add(sidecar)
+            }
+            RequestBody::Stats => 0,
+        }
+    }
 }
 
 impl Request {
@@ -91,6 +173,18 @@ impl Request {
         };
         let full = bool_field("full")?;
         let want_solution = bool_field("want_solution")?;
+        // absent means "no deadline"; a *present* field that is not a
+        // non-negative integer is a typed error (same contract as flags)
+        let deadline_ms = match v.get("deadline_ms") {
+            None => None,
+            Some(x) => Some(
+                x.as_i64()
+                    .filter(|&d| d >= 0)
+                    .ok_or_else(|| {
+                        Error::Json("field 'deadline_ms' is not a non-negative integer".into())
+                    })? as u64,
+            ),
+        };
         let body = match v.str_field("kind")? {
             "sdp" => {
                 let n = v.usize_field("n")?;
@@ -144,6 +238,7 @@ impl Request {
             backend,
             full,
             want_solution,
+            deadline_ms,
         })
     }
 
@@ -158,6 +253,9 @@ impl Request {
         }
         if self.want_solution {
             fields.push(("want_solution", Json::Bool(true)));
+        }
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::int(d as i64)));
         }
         match &self.body {
             RequestBody::Sdp(p) => {
@@ -206,7 +304,13 @@ pub struct Response {
     /// Typed load-shed marker: the admission gate refused the request
     /// because the worker queue was full.  Distinct from `error` so
     /// clients can retry-with-backoff on overload but not on bad input.
+    /// Kept alongside [`ErrorKind::Overloaded`] for wire compatibility:
+    /// `overloaded == (error_kind == Some(Overloaded))`.
     pub overloaded: bool,
+    /// The typed failure taxonomy (docs/PROTOCOL.md): present on
+    /// `timeout` / `panicked` / `too_large` / `overloaded` errors, absent
+    /// on success and on plain validation errors.
+    pub error_kind: Option<ErrorKind>,
     /// Raw stats payload for `kind: stats`.
     pub stats: Option<Json>,
 }
@@ -222,6 +326,7 @@ impl Response {
             solution: None,
             error: None,
             overloaded: false,
+            error_kind: None,
             stats: None,
         }
     }
@@ -236,6 +341,7 @@ impl Response {
             solution: None,
             error: Some(msg),
             overloaded: false,
+            error_kind: None,
             stats: None,
         }
     }
@@ -244,7 +350,35 @@ impl Response {
     pub fn overloaded(id: i64) -> Response {
         Response {
             overloaded: true,
+            error_kind: Some(ErrorKind::Overloaded),
             ..Response::err(id, "overloaded".into())
+        }
+    }
+
+    /// The deadline reply: the request's latency budget expired before or
+    /// during the solve.
+    pub fn timeout(id: i64) -> Response {
+        Response {
+            error_kind: Some(ErrorKind::Timeout),
+            ..Response::err(id, "deadline exceeded".into())
+        }
+    }
+
+    /// The panic-isolation reply: the solve panicked and was contained at
+    /// the worker-pool boundary; the connection and server stay usable.
+    pub fn panicked(id: i64, msg: String) -> Response {
+        Response {
+            error_kind: Some(ErrorKind::Panicked),
+            ..Response::err(id, msg)
+        }
+    }
+
+    /// The memory-admission reply: the estimated solve footprint exceeds
+    /// the server's `max_solve_bytes` budget.
+    pub fn too_large(id: i64, msg: String) -> Response {
+        Response {
+            error_kind: Some(ErrorKind::TooLarge),
+            ..Response::err(id, msg)
         }
     }
 
@@ -266,6 +400,9 @@ impl Response {
         }
         if self.overloaded {
             fields.push(("overloaded", Json::Bool(true)));
+        }
+        if let Some(k) = self.error_kind {
+            fields.push(("error_kind", Json::str(k.name())));
         }
         if let Some(s) = &self.stats {
             fields.push(("stats", s.clone()));
@@ -299,6 +436,10 @@ impl Response {
                 .get("overloaded")
                 .and_then(|x| x.as_bool())
                 .unwrap_or(false),
+            error_kind: match v.get("error_kind").and_then(|x| x.as_str()) {
+                Some(s) => Some(ErrorKind::parse(s)?),
+                None => None,
+            },
             stats: v.get("stats").cloned(),
         })
     }
@@ -317,6 +458,7 @@ mod tests {
             backend: Backend::Native,
             full: true,
             want_solution: false,
+            deadline_ms: None,
         };
         let line = req.encode();
         let back = Request::decode(&line).unwrap();
@@ -343,6 +485,7 @@ mod tests {
             backend: Backend::Auto,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         let back = Request::decode(&req.encode()).unwrap();
         match back.body {
@@ -403,6 +546,7 @@ mod tests {
             backend: Backend::Auto,
             full: true,
             want_solution: false,
+            deadline_ms: None,
         };
         let back = Request::decode(&req.encode()).unwrap();
         assert_eq!(back.id, 11);
@@ -444,6 +588,7 @@ mod tests {
             backend: Backend::Auto,
             full: false,
             want_solution: true,
+            deadline_ms: None,
         };
         let line = req.encode();
         assert!(line.contains("want_solution"), "{line}");
@@ -503,5 +648,93 @@ mod tests {
         assert!(!back.ok);
         assert!(back.overloaded, "shed replies must stay typed on the wire");
         assert_eq!(back.error.unwrap(), "overloaded");
+        assert_eq!(back.error_kind, Some(ErrorKind::Overloaded));
+    }
+
+    #[test]
+    fn deadline_ms_roundtrip_and_validation() {
+        let mut req = Request {
+            id: 5,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Auto,
+            full: false,
+            want_solution: false,
+            deadline_ms: Some(250),
+        };
+        let line = req.encode();
+        assert!(line.contains("deadline_ms"), "{line}");
+        assert_eq!(Request::decode(&line).unwrap().deadline_ms, Some(250));
+        // absent means no deadline and is not emitted
+        req.deadline_ms = None;
+        let line = req.encode();
+        assert!(!line.contains("deadline_ms"), "{line}");
+        assert_eq!(Request::decode(&line).unwrap().deadline_ms, None);
+        // a *present* deadline of the wrong shape is a typed error
+        for bad in [
+            r#"{"id": 1, "kind": "stats", "deadline_ms": -5}"#,
+            r#"{"id": 1, "kind": "stats", "deadline_ms": "soon"}"#,
+            r#"{"id": 1, "kind": "stats", "deadline_ms": 1.5}"#,
+        ] {
+            assert!(Request::decode(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn error_kind_taxonomy_roundtrips() {
+        let cases: [(Response, ErrorKind, &str); 3] = [
+            (Response::timeout(1), ErrorKind::Timeout, "timeout"),
+            (
+                Response::panicked(2, "solver panicked".into()),
+                ErrorKind::Panicked,
+                "panicked",
+            ),
+            (
+                Response::too_large(3, "estimated 9GiB > budget".into()),
+                ErrorKind::TooLarge,
+                "too_large",
+            ),
+        ];
+        for (r, kind, name) in cases {
+            let line = r.encode();
+            assert!(line.contains(name), "{line}");
+            let back = Response::decode(&line).unwrap();
+            assert!(!back.ok);
+            assert!(!back.overloaded);
+            assert_eq!(back.error_kind, Some(kind));
+            assert!(back.error.is_some());
+        }
+        // ok replies and plain validation errors carry no kind
+        let ok = Response::decode(&Response::ok(4, 1, "x".into(), None).encode()).unwrap();
+        assert_eq!(ok.error_kind, None);
+        let plain = Response::decode(&Response::err(5, "bad input".into()).encode()).unwrap();
+        assert_eq!(plain.error_kind, None);
+        // unknown kinds on the wire are decode errors, not silent None
+        assert!(Response::decode(r#"{"id": 1, "ok": false, "error_kind": "melted"}"#).is_err());
+        // retry guidance: only too_large is structurally unretryable
+        assert!(ErrorKind::Timeout.retryable());
+        assert!(ErrorKind::Overloaded.retryable());
+        assert!(ErrorKind::Panicked.retryable());
+        assert!(!ErrorKind::TooLarge.retryable());
+    }
+
+    #[test]
+    fn estimated_solve_bytes_tracks_table_and_sidecar() {
+        let sdp = RequestBody::Sdp(SdpProblem::fibonacci(16));
+        assert_eq!(sdp.estimated_solve_bytes(false), 16 * 8);
+        let mcm = RequestBody::Mcm {
+            problem: McmProblem::clrs(), // n = 6
+            variant: McmVariant::Corrected,
+        };
+        assert_eq!(mcm.estimated_solve_bytes(false), 36 * 8);
+        assert_eq!(mcm.estimated_solve_bytes(true), 36 * 8 + 36 * 4);
+        let align = RequestBody::Align(
+            AlignProblem::lcs(vec![1, 2, 3], vec![4, 5]).unwrap(), // 4×3 cells
+        );
+        assert_eq!(align.estimated_solve_bytes(false), 12 * 8);
+        assert_eq!(align.estimated_solve_bytes(true), 12 * 8 + 3);
+        assert_eq!(RequestBody::Stats.estimated_solve_bytes(true), 0);
     }
 }

@@ -6,13 +6,16 @@
 //! groups against the chosen backend.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::coordinator::request::{Backend, Request, RequestBody, Response};
+use crate::core::faults;
 use crate::core::policy::{self, ExecutorChoice, Workload};
 use crate::core::problem::{AlignProblem, McmProblem, SdpProblem};
 use crate::core::schedule::McmVariant;
 use crate::core::traceback;
 use crate::runtime::engine::Engine;
+use crate::runtime::exec_pool::CancelToken;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -113,18 +116,42 @@ impl Router {
 
     /// Execute one request (already routed).
     pub fn execute(&self, req: &Request, route: Route) -> Response {
-        self.execute_with_batch(req, route, 1)
+        self.execute_with_batch(req, route, 1, None)
+    }
+
+    /// [`Router::execute`] with an absolute deadline: the native executors
+    /// poll a [`CancelToken`] derived from it at superstep boundaries and
+    /// give up with a typed `timeout` reply once it passes.
+    pub fn execute_with_deadline(
+        &self,
+        req: &Request,
+        route: Route,
+        deadline: Option<Instant>,
+    ) -> Response {
+        self.execute_with_batch(req, route, 1, deadline)
     }
 
     /// [`Router::execute`] with the same-kind group width threaded
-    /// through to the native policy (see [`Router::execute_native`]).
-    fn execute_with_batch(&self, req: &Request, route: Route, batch: usize) -> Response {
+    /// through to the native policy (see [`Router::execute_native`]) and
+    /// the caller-computed absolute deadline (if the request carried
+    /// `deadline_ms`).  Executor errors map to typed replies here:
+    /// `Timeout` → `timeout`, `TooLarge` → `too_large`, the rest keep the
+    /// untyped error string.
+    fn execute_with_batch(
+        &self,
+        req: &Request,
+        route: Route,
+        batch: usize,
+        deadline: Option<Instant>,
+    ) -> Response {
         let result = match route {
-            Route::Native => self.execute_native(req, batch),
+            Route::Native => self.execute_native(req, batch, deadline),
             Route::Xla => self.execute_xla(req),
         };
         match result {
             Ok(r) => r,
+            Err(Error::Timeout(_)) => Response::timeout(req.id),
+            Err(Error::TooLarge(m)) => Response::too_large(req.id, m),
             Err(e) => Response::err(req.id, e.to_string()),
         }
     }
@@ -137,18 +164,43 @@ impl Router {
     /// observe the decision.  `batch` is the same-kind group width the
     /// request arrived in — wide groups bias the policy away from the
     /// shared pool (it would serialize them).
-    fn execute_native(&self, req: &Request, batch: usize) -> Result<Response> {
+    fn execute_native(
+        &self,
+        req: &Request,
+        batch: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Response> {
         let table = policy::current();
+        let token = match deadline {
+            Some(d) => CancelToken::at(d),
+            None => CancelToken::never(),
+        };
+        token.check()?;
         match &req.body {
             RequestBody::Sdp(p) => {
+                faults::inject("sdp");
                 // keyed by k: the S-DP pipeline's parallelism is its lane
                 // count, not the table length — a long, narrow pipe has
                 // nothing for the pooled executor to spread
                 let choice = table.choose(Workload::Sdp, p.k(), batch);
-                let st = match choice {
-                    ExecutorChoice::Seq => crate::sdp::seq::solve(p),
-                    ExecutorChoice::Fused => crate::sdp::pipeline::solve(p),
-                    ExecutorChoice::Pooled => crate::sdp::pipeline::solve_pooled(p),
+                let st = if token.is_never() {
+                    match choice {
+                        ExecutorChoice::Seq => crate::sdp::seq::solve(p),
+                        ExecutorChoice::Fused => crate::sdp::pipeline::solve(p),
+                        ExecutorChoice::Pooled => crate::sdp::pipeline::solve_pooled(p),
+                    }
+                } else {
+                    // seq has no superstep boundaries to poll; the entry
+                    // check above is its only cancellation point
+                    match choice {
+                        ExecutorChoice::Seq => crate::sdp::seq::solve(p),
+                        ExecutorChoice::Fused => {
+                            crate::sdp::pipeline::solve_cancellable(p, &token)?
+                        }
+                        ExecutorChoice::Pooled => {
+                            crate::sdp::pipeline::solve_pooled_cancellable(p, &token)?
+                        }
+                    }
                 };
                 Ok(self.done(
                     req,
@@ -158,6 +210,7 @@ impl Router {
             }
             RequestBody::Mcm { problem, variant } => match variant {
                 McmVariant::Corrected => {
+                    faults::inject("mcm");
                     let choice = table.choose(Workload::Mcm, problem.n(), batch);
                     let served = format!("native:mcm_pipeline_corrected[{}]", choice.name());
                     if req.want_solution {
@@ -181,12 +234,28 @@ impl Router {
                         resp.solution = Some(mcm_solution_json(&parens));
                         return Ok(resp);
                     }
-                    let st = match choice {
-                        ExecutorChoice::Seq => crate::mcm::seq::linear_table(problem),
-                        ExecutorChoice::Fused => {
-                            crate::mcm::pipeline::solve(problem, McmVariant::Corrected)
+                    let st = if token.is_never() {
+                        match choice {
+                            ExecutorChoice::Seq => crate::mcm::seq::linear_table(problem),
+                            ExecutorChoice::Fused => {
+                                crate::mcm::pipeline::solve(problem, McmVariant::Corrected)
+                            }
+                            ExecutorChoice::Pooled => {
+                                crate::mcm::pipeline::solve_pooled(problem)
+                            }
                         }
-                        ExecutorChoice::Pooled => crate::mcm::pipeline::solve_pooled(problem),
+                    } else {
+                        match choice {
+                            ExecutorChoice::Seq => crate::mcm::seq::linear_table(problem),
+                            ExecutorChoice::Fused => crate::mcm::pipeline::solve_cancellable(
+                                problem,
+                                McmVariant::Corrected,
+                                &token,
+                            )?,
+                            ExecutorChoice::Pooled => {
+                                crate::mcm::pipeline::solve_pooled_cancellable(problem, &token)?
+                            }
+                        }
                     };
                     Ok(self.done(req, st, &served))
                 }
@@ -195,14 +264,24 @@ impl Router {
                 // executor realizes those, so the policy does not apply
                 // (and no meaningful solution can be reconstructed)
                 McmVariant::PaperFaithful => {
+                    faults::inject("mcm");
                     if req.want_solution {
                         return Err(faithful_solution_error());
                     }
-                    let st = crate::mcm::pipeline::solve(problem, McmVariant::PaperFaithful);
+                    let st = if token.is_never() {
+                        crate::mcm::pipeline::solve(problem, McmVariant::PaperFaithful)
+                    } else {
+                        crate::mcm::pipeline::solve_cancellable(
+                            problem,
+                            McmVariant::PaperFaithful,
+                            &token,
+                        )?
+                    };
                     Ok(self.done(req, st, "native:mcm_pipeline_faithful"))
                 }
             },
             RequestBody::Align(p) => {
+                faults::inject("align");
                 // keyed by the SHORT side: the wavefront's parallelism is
                 // min(m, n), so a skinny grid has nothing for the pooled
                 // block executor to spread and belongs to seq/fused even
@@ -224,10 +303,22 @@ impl Router {
                     resp.solution = Some(sol.to_json());
                     return Ok(resp);
                 }
-                let st = match choice {
-                    ExecutorChoice::Seq => crate::align::seq::solve(p),
-                    ExecutorChoice::Fused => crate::align::wavefront::solve(p),
-                    ExecutorChoice::Pooled => crate::align::wavefront::solve_pooled(p),
+                let st = if token.is_never() {
+                    match choice {
+                        ExecutorChoice::Seq => crate::align::seq::solve(p),
+                        ExecutorChoice::Fused => crate::align::wavefront::solve(p),
+                        ExecutorChoice::Pooled => crate::align::wavefront::solve_pooled(p),
+                    }
+                } else {
+                    match choice {
+                        ExecutorChoice::Seq => crate::align::seq::solve(p),
+                        ExecutorChoice::Fused => {
+                            crate::align::wavefront::solve_cancellable(p, &token)?
+                        }
+                        ExecutorChoice::Pooled => {
+                            crate::align::wavefront::solve_pooled_cancellable(p, &token)?
+                        }
+                    }
                 };
                 let value = p.scalar(&st); // local alignment's scalar is the max, not the corner
                 Ok(self.done_scored(req, value, st, &served))
@@ -289,6 +380,20 @@ impl Router {
     /// fallbacks tell the policy the group width so it spreads wide
     /// groups across pool-free executors).
     pub fn execute_group(&self, reqs: &[Request], route: Route) -> Vec<Response> {
+        self.execute_group_with_deadlines(reqs, route, &[])
+    }
+
+    /// [`Router::execute_group`] with per-request absolute deadlines
+    /// (parallel to `reqs`; missing/short slices mean "no deadline").
+    /// XLA dispatches are not cancellable mid-flight — the batcher sheds
+    /// already-expired entries before calling here, so a deadline only
+    /// cuts native solves at superstep boundaries.
+    pub fn execute_group_with_deadlines(
+        &self,
+        reqs: &[Request],
+        route: Route,
+        deadlines: &[Option<Instant>],
+    ) -> Vec<Response> {
         if route == Route::Xla && reqs.len() > 1 {
             if let Some(responses) = self.try_execute_batched(reqs) {
                 return responses;
@@ -296,7 +401,11 @@ impl Router {
         }
         let batch = reqs.len();
         reqs.iter()
-            .map(|r| self.execute_with_batch(r, route, batch))
+            .enumerate()
+            .map(|(i, r)| {
+                let deadline = deadlines.get(i).copied().flatten();
+                self.execute_with_batch(r, route, batch, deadline)
+            })
             .collect()
     }
 
@@ -483,6 +592,7 @@ mod tests {
             backend,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         }
     }
 
@@ -517,6 +627,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -535,6 +646,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -557,6 +669,7 @@ mod tests {
             backend: Backend::Native,
             full: true,
             want_solution: false,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -582,6 +695,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -605,6 +719,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -648,6 +763,7 @@ mod tests {
                 backend: Backend::Native,
                 full: false,
                 want_solution: false,
+                deadline_ms: None,
             };
             let resp = r.execute(&req, Route::Native);
             assert!(resp.ok, "{choice:?}");
@@ -679,6 +795,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: true,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -696,6 +813,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: true,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(!resp.ok);
@@ -713,6 +831,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: true,
+            deadline_ms: None,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -728,6 +847,7 @@ mod tests {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         let resp = r.execute(&plain, Route::Native);
         assert!(resp.ok);
@@ -774,6 +894,7 @@ mod tests {
                     backend: Backend::Native,
                     full: false,
                     want_solution: true,
+                    deadline_ms: None,
                 },
                 Route::Native,
             );
@@ -792,6 +913,7 @@ mod tests {
                     backend: Backend::Native,
                     full: false,
                     want_solution: true,
+                    deadline_ms: None,
                 },
                 Route::Native,
             );
@@ -815,6 +937,7 @@ mod tests {
             backend: Backend::Auto,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         // large grid, but engineless → native; pinned xla → typed error
         assert_eq!(r.route(&req).unwrap(), Route::Native);
@@ -835,6 +958,7 @@ mod tests {
             backend: Backend::Auto,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         };
         let a = mk(1, AlignVariant::Lcs);
         let b = mk(2, AlignVariant::Lcs);
@@ -848,6 +972,50 @@ mod tests {
             p.b.push(6); // different shape → different bucket
         }
         assert_ne!(group_key(&a, Route::Xla), group_key(&d, Route::Xla));
+    }
+
+    #[test]
+    fn expired_deadline_yields_typed_timeout() {
+        use crate::coordinator::request::ErrorKind;
+        let r = Router::new(None);
+        // a deadline of "now" is already past by the time the entry gate
+        // polls the token — typed timeout, id-correlated, no table
+        let req = sdp_req(42, 64, Backend::Native);
+        let resp = r.execute_with_deadline(&req, Route::Native, Some(Instant::now()));
+        assert!(!resp.ok);
+        assert_eq!(resp.id, 42);
+        assert_eq!(resp.error_kind, Some(ErrorKind::Timeout));
+        assert!(resp.table.is_none());
+    }
+
+    #[test]
+    fn generous_deadline_solves_identically() {
+        let r = Router::new(None);
+        let mut req = sdp_req(43, 16, Backend::Native);
+        req.body = RequestBody::Sdp(SdpProblem::fibonacci(16));
+        let far = Instant::now() + std::time::Duration::from_secs(600);
+        let resp = r.execute_with_deadline(&req, Route::Native, Some(far));
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.value, 987);
+        assert!(resp.error_kind.is_none());
+    }
+
+    #[test]
+    fn group_deadlines_apply_per_request() {
+        use crate::coordinator::request::ErrorKind;
+        let r = Router::new(None);
+        let reqs = vec![
+            sdp_req(1, 32, Backend::Native),
+            sdp_req(2, 32, Backend::Native),
+        ];
+        let deadlines = vec![
+            Some(Instant::now()), // expired
+            None,                 // unbounded
+        ];
+        let resps = r.execute_group_with_deadlines(&reqs, Route::Native, &deadlines);
+        assert_eq!(resps.len(), 2);
+        assert_eq!(resps[0].error_kind, Some(ErrorKind::Timeout));
+        assert!(resps[1].ok, "{:?}", resps[1].error);
     }
 
     #[test]

@@ -21,11 +21,12 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, Policy};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::WorkerPool;
-use crate::coordinator::request::{Request, RequestBody, Response};
+use crate::coordinator::request::{ErrorKind, Request, RequestBody, Response};
 use crate::coordinator::router::Router;
 use crate::core::schedule::McmVariant;
 use crate::runtime::engine::Engine;
@@ -52,6 +53,16 @@ pub struct Config {
     /// parallelism.  First server in a process wins (the pool is
     /// process-wide).
     pub exec_threads: usize,
+    /// Memory admission bound: requests whose estimated solve footprint
+    /// (table + solution sidecar) exceeds this many bytes are refused
+    /// with a typed `too_large` reply before any allocation.  `0` means
+    /// `PIPEDP_MAX_SOLVE_BYTES` or unlimited.
+    pub max_solve_bytes: usize,
+    /// Slow-loris guard: a connection whose request line stalls partially
+    /// written for longer than this many milliseconds is dropped.  Idle
+    /// connections (no partial line) are never timed out.  `0` means the
+    /// built-in default ([`DEFAULT_LINE_STALL`]).
+    pub line_stall_ms: u64,
 }
 
 impl Default for Config {
@@ -64,9 +75,21 @@ impl Default for Config {
             warm: true,
             queue_cap: 0,
             exec_threads: 0,
+            max_solve_bytes: 0,
+            line_stall_ms: 0,
         }
     }
 }
+
+/// Socket read timeout used as the reader's poll interval: each wake
+/// checks the stop flag and the partial-line stall clock.
+const READ_POLL: Duration = Duration::from_millis(500);
+/// Default partial-line stall bound (see [`Config::line_stall_ms`]).
+pub const DEFAULT_LINE_STALL: Duration = Duration::from_secs(10);
+/// Socket write timeout: a peer that stops reading cannot park a writer
+/// thread in `write_all` forever (the drain in `stop_and_drain` has its
+/// own bounded window; this bounds the steady state too).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Distinguishes this server instance's connection threads in
 /// `/proc/self/task` (tests assert drain against the tag; names are
@@ -268,11 +291,25 @@ impl Server {
             WorkerPool::new(cfg.workers)
         });
         let metrics = Arc::new(Metrics::default());
-        let batcher = Arc::new(Batcher::start(
+        let max_solve_bytes = if cfg.max_solve_bytes > 0 {
+            cfg.max_solve_bytes
+        } else {
+            std::env::var("PIPEDP_MAX_SOLVE_BYTES")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(0)
+        };
+        let line_stall = if cfg.line_stall_ms > 0 {
+            Duration::from_millis(cfg.line_stall_ms)
+        } else {
+            DEFAULT_LINE_STALL
+        };
+        let batcher = Arc::new(Batcher::start_with_limit(
             router,
             pool.clone(),
             metrics.clone(),
             cfg.policy.clone(),
+            max_solve_bytes,
         ));
         let conns = Arc::new(Connections {
             tag: format!("pd{}-", SERVER_SEQ.fetch_add(1, Ordering::Relaxed)),
@@ -322,6 +359,7 @@ impl Server {
                                             metrics,
                                             stop,
                                             writer_name,
+                                            line_stall,
                                         );
                                         conns2.streams.lock().unwrap().remove(&id);
                                         // last act: announce completion for
@@ -544,8 +582,14 @@ fn handle_connection(
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     writer_name: String,
+    line_stall: Duration,
 ) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+    // the read timeout turns the reader into a poll loop (stop flag +
+    // stall clock); the write timeout keeps a non-reading peer from
+    // parking the writer thread in write_all indefinitely
+    stream.set_read_timeout(Some(READ_POLL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     // responses funnel through one channel so writes never interleave
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
@@ -563,31 +607,59 @@ fn handle_connection(
         })
         .expect("spawn connection writer");
 
-    for line in reader.lines() {
+    // Manual line loop instead of `lines()`: a timed-out read keeps its
+    // partial bytes in `line`, so an *idle* connection (empty buffer)
+    // lives forever while a line trickling in slower than `line_stall`
+    // (slow loris) gets the connection dropped.
+    let mut line = String::new();
+    let mut line_started: Option<Instant> = None;
+    loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        let line = match line {
-            Ok(line) => line,
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF (or the drain's socket shutdown)
+            Ok(_) => {
+                line_started = None;
+                if line.trim().is_empty() {
+                    line.clear();
+                    continue;
+                }
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                match Request::decode(&line) {
+                    Ok(req) if matches!(req.body, RequestBody::Stats) => {
+                        let mut resp = Response::ok(req.id, 0, "server:stats".into(), None);
+                        resp.stats = Some(metrics.snapshot());
+                        let _ = resp_tx.send(resp);
+                    }
+                    // routing happens inside the batcher (it owns the
+                    // engine-aware router) so grouping matches the
+                    // destination
+                    Ok(req) => batcher.submit_request(req, resp_tx.clone()),
+                    Err(e) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = resp_tx
+                            .send(Response::err(extract_request_id(&line), e.to_string()));
+                    }
+                }
+                line.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if line.is_empty() {
+                    line_started = None; // idle between requests: no clock
+                } else {
+                    let t0 = *line_started.get_or_insert_with(Instant::now);
+                    if t0.elapsed() >= line_stall {
+                        break; // partial line stalled too long: drop
+                    }
+                }
+            }
             Err(_) => break, // socket shut down mid-read: drain and exit
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        metrics.requests.fetch_add(1, Ordering::Relaxed);
-        match Request::decode(&line) {
-            Ok(req) if matches!(req.body, RequestBody::Stats) => {
-                let mut resp = Response::ok(req.id, 0, "server:stats".into(), None);
-                resp.stats = Some(metrics.snapshot());
-                let _ = resp_tx.send(resp);
-            }
-            // routing happens inside the batcher (it owns the
-            // engine-aware router) so grouping matches the destination
-            Ok(req) => batcher.submit_request(req, resp_tx.clone()),
-            Err(e) => {
-                metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = resp_tx.send(Response::err(extract_request_id(&line), e.to_string()));
-            }
         }
     }
     drop(resp_tx);
@@ -612,6 +684,65 @@ impl Client {
         })
     }
 
+    /// [`Client::connect`] that cannot hang: the dial is bounded by
+    /// `connect` (per resolved address), and `read` (if set) bounds every
+    /// reply wait — a server that accepts but never answers surfaces as
+    /// a typed `timeout` error from [`Client::call`] instead of blocking
+    /// the caller forever.
+    pub fn connect_with_timeout(
+        addr: &str,
+        connect: Duration,
+        read: Option<Duration>,
+    ) -> Result<Client> {
+        use std::net::ToSocketAddrs;
+        let mut last_err: Option<std::io::Error> = None;
+        let mut stream = None;
+        for a in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&a, connect) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = match (stream, last_err) {
+            (Some(s), _) => s,
+            (None, Some(e)) => return Err(e.into()),
+            (None, None) => {
+                return Err(Error::Server(format!("'{addr}' resolved to no address")))
+            }
+        };
+        stream.set_read_timeout(read)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
+    }
+
+    /// Read one reply line, surfacing a read-timeout as a typed
+    /// [`Error::Timeout`] (only possible when the client was built with
+    /// a read timeout) and EOF as a connection-closed server error.
+    fn read_reply_line(&mut self) -> Result<String> {
+        let mut resp_line = String::new();
+        if let Err(e) = self.reader.read_line(&mut resp_line) {
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) {
+                return Err(Error::Timeout(
+                    "no reply within the client read timeout".into(),
+                ));
+            }
+            return Err(e.into());
+        }
+        if resp_line.is_empty() {
+            return Err(Error::Server("connection closed".into()));
+        }
+        Ok(resp_line)
+    }
+
     /// Send one request and wait for its response.
     pub fn call(&mut self, mut req: Request) -> Result<Response> {
         req.id = self.next_id;
@@ -620,12 +751,30 @@ impl Client {
         line.push('\n');
         self.writer.write_all(line.as_bytes())?;
         self.writer.flush()?;
-        let mut resp_line = String::new();
-        self.reader.read_line(&mut resp_line)?;
-        if resp_line.is_empty() {
-            return Err(Error::Server("connection closed".into()));
-        }
+        let resp_line = self.read_reply_line()?;
         Response::decode(resp_line.trim_end())
+    }
+
+    /// [`Client::call`] with bounded, jittered-backoff retry on typed
+    /// `overloaded` sheds (docs/PROTOCOL.md retry guidance).  At most
+    /// `max_retries` re-sends; every other reply — success, `timeout`,
+    /// `too_large`, `panicked`, plain errors — returns immediately.
+    /// `max_retries = 0` behaves exactly like [`Client::call`].
+    pub fn call_with_retry(&mut self, req: Request, max_retries: u32) -> Result<Response> {
+        let mut rng = crate::util::rng::Rng::seeded(0x9e37_79b9 ^ self.next_id as u64);
+        let mut attempt = 0u32;
+        loop {
+            let resp = self.call(req.clone())?;
+            if resp.error_kind != Some(ErrorKind::Overloaded) || attempt >= max_retries {
+                return Ok(resp);
+            }
+            // exponential base with full jitter: 1–2, 2–4, 4–8 … ms,
+            // capped so a long retry budget cannot stall a caller
+            let base = 1u64 << attempt.min(6);
+            let jitter = rng.range(0..(base as i64 + 1)) as u64;
+            std::thread::sleep(Duration::from_millis(base + jitter));
+            attempt += 1;
+        }
     }
 
     /// Send `reqs` pipelined (all writes, then all reads) — how a
@@ -652,11 +801,7 @@ impl Client {
         let mut matched = Vec::with_capacity(n);
         let mut orphans = Vec::new();
         for _ in 0..n {
-            let mut line = String::new();
-            self.reader.read_line(&mut line)?;
-            if line.is_empty() {
-                return Err(Error::Server("connection closed mid-batch".into()));
-            }
+            let line = self.read_reply_line()?;
             let resp = Response::decode(line.trim_end())?;
             if sent_ids.contains(&resp.id) {
                 matched.push(resp);

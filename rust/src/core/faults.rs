@@ -1,0 +1,277 @@
+//! Zero-dependency fault-injection layer (DESIGN.md §9).
+//!
+//! The chaos harness for the fault-tolerant request lifecycle: named
+//! *sites* on the serving path (the router's `mcm` / `align` / `sdp`
+//! dispatch points) call [`inject`], which is a no-op unless a
+//! [`FaultPlan`] is armed.  A plan maps sites to faults:
+//!
+//! * `panic:SITE:RATE` — panic at the site with probability `RATE`
+//!   (exercises the coordinator's `catch_unwind` isolation and the
+//!   `panicked` reply taxonomy).
+//! * `delay:SITE:Nms` — sleep `N` milliseconds at the site (exercises
+//!   deadlines, socket timeouts and drain under slow solves).
+//!
+//! Plans come from the `PIPEDP_FAULTS` environment variable
+//! (`PIPEDP_FAULTS=panic:mcm:0.1,delay:align:50ms`), parsed lazily on the
+//! first [`inject`] call, or programmatically via [`install`] (tests).
+//! The disarmed fast path is one relaxed atomic load — production builds
+//! pay nothing for carrying the harness.
+//!
+//! Probability draws use the crate's deterministic PRNG with a
+//! per-thread stream, so a seeded single-threaded run replays exactly.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// One fault at one site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Panic with the given probability in `[0, 1]`.
+    Panic { rate: f64 },
+    /// Sleep for the given number of milliseconds.
+    Delay { ms: u64 },
+}
+
+/// A parsed fault plan: an ordered list of `(site, fault)` pairs.  A site
+/// may carry several faults; they apply in spec order (delays before a
+/// panic still run).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    entries: Vec<(String, Fault)>,
+}
+
+impl FaultPlan {
+    /// Parse the `PIPEDP_FAULTS` grammar:
+    /// `kind:site:arg[,kind:site:arg...]` where `kind` is `panic` (arg: a
+    /// probability) or `delay` (arg: a duration like `50ms`).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mut fields = part.splitn(3, ':');
+            let (kind, site, arg) = match (fields.next(), fields.next(), fields.next()) {
+                (Some(k), Some(s), Some(a)) if !s.is_empty() && !a.is_empty() => (k, s, a),
+                _ => {
+                    return Err(Error::InvalidProblem(format!(
+                        "fault spec `{part}`: want kind:site:arg"
+                    )))
+                }
+            };
+            let fault = match kind {
+                "panic" => {
+                    let rate: f64 = arg.parse().map_err(|_| {
+                        Error::InvalidProblem(format!("fault spec `{part}`: bad rate `{arg}`"))
+                    })?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        return Err(Error::InvalidProblem(format!(
+                            "fault spec `{part}`: rate must be in [0, 1]"
+                        )));
+                    }
+                    Fault::Panic { rate }
+                }
+                "delay" => {
+                    let digits = arg.strip_suffix("ms").unwrap_or(arg);
+                    let ms: u64 = digits.parse().map_err(|_| {
+                        Error::InvalidProblem(format!(
+                            "fault spec `{part}`: bad duration `{arg}` (want e.g. 50ms)"
+                        ))
+                    })?;
+                    Fault::Delay { ms }
+                }
+                other => {
+                    return Err(Error::InvalidProblem(format!(
+                        "fault spec `{part}`: unknown kind `{other}` (want panic|delay)"
+                    )))
+                }
+            };
+            entries.push((site.to_string(), fault));
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// Number of `(site, fault)` entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn apply(&self, site: &str) {
+        for (s, fault) in &self.entries {
+            if s != site {
+                continue;
+            }
+            match *fault {
+                Fault::Delay { ms } => std::thread::sleep(Duration::from_millis(ms)),
+                Fault::Panic { rate } => {
+                    if rate >= 1.0 || (rate > 0.0 && draw(rate)) {
+                        panic!("fault injection: panic at site `{site}`");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-thread deterministic stream for probability draws; streams are
+/// decorrelated by a process-wide counter, not wall-clock entropy.
+fn draw(p: f64) -> bool {
+    static STREAM: AtomicU64 = AtomicU64::new(0x9E3779B97F4A7C15);
+    thread_local! {
+        static RNG: RefCell<Rng> =
+            RefCell::new(Rng::seeded(STREAM.fetch_add(0x9E3779B97F4A7C15, Ordering::Relaxed)));
+    }
+    RNG.with(|r| r.borrow_mut().chance(p))
+}
+
+/// Disarmed fast-path flag; `Acquire`/`Release` pairs with plan installs
+/// so an armed reader always sees the plan that armed it.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+/// Claims first-install: either the lazy `PIPEDP_FAULTS` parse or the
+/// first programmatic [`install`], whichever runs first, wins the slot —
+/// a later env parse can never clobber a test's explicit plan.
+static ENV_INIT: Once = Once::new();
+
+/// Install (or clear, with `None`) the process-wide fault plan.  Intended
+/// for tests and the chaos harness; production arms via `PIPEDP_FAULTS`.
+pub fn install(plan: Option<FaultPlan>) {
+    ENV_INIT.call_once(|| {});
+    let armed = plan.as_ref().is_some_and(|p| !p.is_empty());
+    *PLAN.lock().unwrap() = plan.map(Arc::new);
+    ARMED.store(armed, Ordering::Release);
+}
+
+fn ensure_env_init() {
+    ENV_INIT.call_once(|| {
+        let Ok(spec) = std::env::var("PIPEDP_FAULTS") else {
+            return;
+        };
+        match FaultPlan::parse(&spec) {
+            Ok(plan) if !plan.is_empty() => {
+                *PLAN.lock().unwrap() = Some(Arc::new(plan));
+                ARMED.store(true, Ordering::Release);
+            }
+            Ok(_) => {}
+            Err(e) => eprintln!("pipedp: ignoring invalid PIPEDP_FAULTS: {e}"),
+        }
+    });
+}
+
+/// Fault-injection site: apply whatever the armed plan says for `site`.
+/// One relaxed load when disarmed — safe to leave on hot serving paths.
+#[inline]
+pub fn inject(site: &str) {
+    ensure_env_init();
+    if !ARMED.load(Ordering::Acquire) {
+        return;
+    }
+    let plan = PLAN.lock().unwrap().clone();
+    if let Some(plan) = plan {
+        plan.apply(site);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plan is process-global: tests that install one serialize here
+    /// and only use sites no production code calls.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn parse_mixed_spec() {
+        let plan = FaultPlan::parse("panic:mcm:0.1,delay:align:50ms").unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(
+            plan.entries[0],
+            ("mcm".to_string(), Fault::Panic { rate: 0.1 })
+        );
+        assert_eq!(
+            plan.entries[1],
+            ("align".to_string(), Fault::Delay { ms: 50 })
+        );
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_empty_parts() {
+        let plan = FaultPlan::parse(" panic:sdp:1.0 , ,delay:mcm:5 ").unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.entries[1].1, Fault::Delay { ms: 5 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "panic:mcm",        // missing arg
+            "panic:mcm:1.5",    // rate out of range
+            "panic:mcm:x",      // non-numeric rate
+            "delay:mcm:soon",   // non-numeric duration
+            "explode:mcm:1.0",  // unknown kind
+            "panic::0.5",       // empty site
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn inject_is_noop_when_disarmed() {
+        let _g = locked();
+        install(None);
+        inject("unit-test-disarmed"); // must not panic or sleep
+    }
+
+    #[test]
+    fn inject_panics_at_rate_one() {
+        let _g = locked();
+        install(Some(FaultPlan::parse("panic:unit-test-boom:1.0").unwrap()));
+        let r = std::panic::catch_unwind(|| inject("unit-test-boom"));
+        install(None);
+        assert!(r.is_err(), "rate-1.0 panic site must fire");
+        // other sites are untouched by the plan
+        inject("unit-test-other");
+    }
+
+    #[test]
+    fn inject_delay_sleeps() {
+        let _g = locked();
+        install(Some(FaultPlan::parse("delay:unit-test-slow:20ms").unwrap()));
+        let t0 = std::time::Instant::now();
+        inject("unit-test-slow");
+        install(None);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn probabilistic_panic_rate_is_roughly_honored() {
+        let _g = locked();
+        install(Some(FaultPlan::parse("panic:unit-test-half:0.5").unwrap()));
+        let mut fired = 0;
+        for _ in 0..200 {
+            if std::panic::catch_unwind(|| inject("unit-test-half")).is_err() {
+                fired += 1;
+            }
+        }
+        install(None);
+        assert!(
+            (40..=160).contains(&fired),
+            "0.5-rate site fired {fired}/200 times"
+        );
+    }
+}

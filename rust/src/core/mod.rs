@@ -18,9 +18,14 @@
 //!   recorded by the executors and the reconstructors that turn them
 //!   into parenthesizations, edit scripts and local-alignment spans
 //!   (DESIGN.md §8).
+//! * [`faults`] — the zero-dependency fault-injection layer behind the
+//!   chaos harness: named sites on the serving path panic or stall
+//!   according to a `PIPEDP_FAULTS` plan, no-ops when disarmed
+//!   (DESIGN.md §9).
 
 pub mod cache;
 pub mod conflict;
+pub mod faults;
 pub mod policy;
 pub mod problem;
 pub mod schedule;

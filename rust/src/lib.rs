@@ -61,6 +61,12 @@ pub enum Error {
     Json(String),
     Io(std::io::Error),
     Xla(String),
+    /// A solve was cancelled at a superstep boundary because its deadline
+    /// expired (or the server began shutting down).
+    Timeout(String),
+    /// A solve was refused by the admission gate: its estimated table +
+    /// sidecar footprint exceeds the configured budget.
+    TooLarge(String),
 }
 
 impl std::fmt::Display for Error {
@@ -74,6 +80,8 @@ impl std::fmt::Display for Error {
             Error::Json(m) => write!(f, "json: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::TooLarge(m) => write!(f, "too large: {m}"),
         }
     }
 }

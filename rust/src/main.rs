@@ -73,8 +73,8 @@ const USAGE: &str = "pipedp <subcommand> [flags]
   schedule    --n N --variant corrected|faithful [--json]
   verify      [--max-n N]
   simulate    [--samples S]
-  serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E]
-  client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution]
+  serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E] [--max-solve-bytes B]
+  client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution] [--deadline-ms D] [--retries R]
   bench-check --baseline BENCH_x.json --current BENCH_x.json [--tolerance 0.30] [--relative-to seq]
   info";
 
@@ -453,6 +453,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "persistent execution-pool parallelism; 0 = PIPEDP_EXEC_THREADS/auto",
             Some("0"),
         )
+        .flag(
+            "max-solve-bytes",
+            "memory admission bound per solve (bytes); 0 = PIPEDP_MAX_SOLVE_BYTES/unlimited",
+            Some("0"),
+        )
+        .flag(
+            "line-stall-ms",
+            "drop a connection whose partial request line stalls this long; 0 = default",
+            Some("0"),
+        )
         .parse(argv)?;
     let cfg = Config {
         addr: args.get_str("addr")?.to_string(),
@@ -465,6 +475,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         warm: true,
         queue_cap: args.get_usize("queue-cap")?,
         exec_threads: args.get_usize("exec-threads")?,
+        max_solve_bytes: args.get_usize("max-solve-bytes")?,
+        line_stall_ms: args.get_usize("line-stall-ms")? as u64,
     };
     let server = Server::start(cfg)?;
     println!("pipedp server listening on {}", server.local_addr);
@@ -489,6 +501,16 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
             "solution",
             "set want_solution: ask the server to reconstruct the optimal solution",
         )
+        .flag(
+            "deadline-ms",
+            "server-side deadline for this request in ms; 0 = none",
+            Some("0"),
+        )
+        .flag(
+            "retries",
+            "retry budget when the server replies 'overloaded'",
+            Some("0"),
+        )
         .parse(argv)?;
     let mut client = Client::connect(args.get_str("addr")?)?;
     let backend = parse_backend(&args)?;
@@ -502,13 +524,22 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
     } else {
         RequestBody::Sdp(build_sdp(&args)?)
     };
-    let resp = client.call(Request {
-        id: 0,
-        body,
-        backend,
-        full: false,
-        want_solution: args.get_bool("solution"),
-    })?;
+    let deadline_ms = match args.get_usize("deadline-ms")? {
+        0 => None,
+        ms => Some(ms as u64),
+    };
+    let retries = args.get_usize("retries")? as u32;
+    let resp = client.call_with_retry(
+        Request {
+            id: 0,
+            body,
+            backend,
+            full: false,
+            want_solution: args.get_bool("solution"),
+            deadline_ms,
+        },
+        retries,
+    )?;
     if let Some(stats) = resp.stats {
         println!("{}", stats.to_string());
     } else if resp.ok {

@@ -26,10 +26,14 @@
 use std::sync::Barrier;
 
 use crate::core::cache;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::core::problem::McmProblem;
 use crate::core::schedule::{default_mcm_tile, linear, McmSchedule, McmVariant};
 use crate::core::traceback::SplitArena;
-use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
+use crate::runtime::exec_pool::{
+    cancelled, CancelToken, ExecPool, SenseBarrier, CANCEL_POLL_STRIDE,
+};
 use crate::sdp::naive::SharedTable;
 
 /// Step-synchronous executor over a compiled schedule.
@@ -163,6 +167,70 @@ fn execute_two_phase(p: &McmProblem, sched: &McmSchedule, st: &mut [i64]) {
 pub fn solve(p: &McmProblem, variant: McmVariant) -> Vec<i64> {
     let sched = cache::mcm_schedule(p.n().max(1), variant);
     execute(p, &sched)
+}
+
+/// [`execute`] with cooperative cancellation: the sweep polls the
+/// [`CancelToken`] every [`CANCEL_POLL_STRIDE`] (super)steps and abandons
+/// the table with `Err(Timeout)` once it fires.  Corrected schedules run
+/// the fused sweep cut at superstep boundaries; faithful schedules run
+/// the two-phase memory model cut at step boundaries.  A never-token
+/// delegates to the unchecked fast path.
+pub fn execute_cancellable(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(execute(p, sched));
+    }
+    token.check()?;
+    assert_eq!(p.n(), sched.n, "schedule/problem size mismatch");
+    let mut st = vec![0i64; linear::num_cells(p.n())];
+    match sched.variant {
+        McmVariant::Corrected => {
+            let dims = &p.dims;
+            for g in 0..sched.num_supersteps() {
+                if g % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
+                    return cancelled();
+                }
+                for i in sched.superstep_range(g) {
+                    let v = st[sched.l[i] as usize]
+                        + st[sched.r[i] as usize]
+                        + dims[sched.pa[i] as usize]
+                            * dims[sched.pb[i] as usize]
+                            * dims[sched.pc[i] as usize];
+                    let tgt = sched.tgt[i] as usize;
+                    st[tgt] = if sched.term[i] == 1 { v } else { st[tgt].min(v) };
+                }
+            }
+        }
+        McmVariant::PaperFaithful => {
+            let dims = &p.dims;
+            let mut pending: Vec<i64> = vec![0; sched.max_width()];
+            for s in 0..sched.num_steps() {
+                if s % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
+                    return cancelled();
+                }
+                let view = sched.step_view(s);
+                for lane in 0..view.len() {
+                    pending[lane] = st[view.l[lane] as usize]
+                        + st[view.r[lane] as usize]
+                        + dims[view.pa[lane] as usize]
+                            * dims[view.pb[lane] as usize]
+                            * dims[view.pc[lane] as usize];
+                }
+                for lane in 0..view.len() {
+                    let tgt = view.tgt[lane] as usize;
+                    st[tgt] = if view.term[lane] == 1 {
+                        pending[lane]
+                    } else {
+                        st[tgt].min(pending[lane])
+                    };
+                }
+            }
+        }
+    }
+    Ok(st)
 }
 
 /// Fused single-pass executor + traceback recording (DESIGN.md §8):
@@ -438,6 +506,108 @@ pub fn execute_pooled_counted(
     (st, barrier.rounds())
 }
 
+/// [`execute_pooled`] with cooperative cancellation via the superstep
+/// cut protocol: party 0 polls the [`CancelToken`] at the *end* of each
+/// superstep and publishes the first superstep index every party must
+/// skip, *before* its barrier wait.  The break check compares superstep
+/// indices rather than a boolean, so a party that happens to observe the
+/// publication within the very superstep it was made still finishes that
+/// superstep and breaks one barrier later — all parties perform identical
+/// barrier waits (an inconsistent boolean flag could strand the barrier
+/// with a missing arrival), and the pool is released within one barrier
+/// round of the deadline firing.  An expired-at-entry token never engages
+/// the pool (zero barrier rounds).
+pub fn execute_pooled_cancellable(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    execute_pooled_cancellable_counted(p, sched, pool, threads, token).0
+}
+
+/// [`execute_pooled_cancellable`] + the number of barrier rounds it cost
+/// — the hook the cancellation-latency property test asserts on (a solve
+/// whose deadline expires at superstep `g` costs at most `g + 1` rounds).
+pub fn execute_pooled_cancellable_counted(
+    p: &McmProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> (crate::Result<Vec<i64>>, u64) {
+    if token.is_never() {
+        let (st, rounds) = execute_pooled_counted(p, sched, pool, threads);
+        return (Ok(st), rounds);
+    }
+    if token.is_cancelled() {
+        return (cancelled(), 0);
+    }
+    let n = p.n();
+    assert_eq!(n, sched.n, "schedule/problem size mismatch");
+    assert_eq!(
+        sched.variant,
+        McmVariant::Corrected,
+        "pooled execution requires the hazard-free Corrected schedule"
+    );
+    let parties = threads
+        .max(1)
+        .min(pool.threads())
+        .min(sched.max_width().max(1));
+    if parties <= 1 {
+        return (execute_cancellable(p, sched, token), 0);
+    }
+    let mut st = vec![0i64; linear::num_cells(n)];
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let cut_at = AtomicUsize::new(usize::MAX);
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for g in 0..sched.num_supersteps() {
+            // a cut published at the end of superstep s names s+1: false
+            // for every party still inside superstep s, true for every
+            // party at the top of s+1 (the publication happens-before
+            // their return from the superstep-s barrier)
+            if cut_at.load(Ordering::Relaxed) <= g {
+                break;
+            }
+            for i in sched.superstep_range(g) {
+                let tgt = sched.tgt[i] as usize;
+                if tgt % parties != t {
+                    continue;
+                }
+                // SAFETY: identical ownership/freshness argument to
+                // `execute_pooled_counted`; cancellation only ever cuts
+                // whole supersteps, never mid-step writes.
+                unsafe {
+                    let v = st_ptr.read(sched.l[i] as usize)
+                        + st_ptr.read(sched.r[i] as usize)
+                        + p.weight(
+                            sched.pa[i] as usize,
+                            sched.pb[i] as usize,
+                            sched.pc[i] as usize,
+                        );
+                    let newv = if sched.term[i] == 1 {
+                        v
+                    } else {
+                        st_ptr.read(tgt).min(v)
+                    };
+                    st_ptr.write(tgt, newv);
+                }
+            }
+            if t == 0 && token.is_cancelled() {
+                cut_at.store(g + 1, Ordering::Relaxed);
+            }
+            waiter.wait(); // end of superstep
+        }
+    });
+    if cut_at.load(Ordering::Relaxed) != usize::MAX {
+        return (cancelled(), barrier.rounds());
+    }
+    (Ok(st), barrier.rounds())
+}
+
 /// [`execute_pooled`] + traceback recording: `tgt`-modulo ownership
 /// keeps every cell's terms (and therefore every sidecar slot's stores)
 /// on one worker in arena order, so the strict-improvement recording is
@@ -515,6 +685,26 @@ pub fn solve_pooled(p: &McmProblem) -> Vec<i64> {
     let sched = cache::mcm_schedule_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
     let pool = crate::runtime::exec_pool::global();
     execute_pooled(p, &sched, pool, pool.threads())
+}
+
+/// Convenience: cancellable corrected solve on the process-wide pool —
+/// the router's deadline-carrying `pooled` route.
+pub fn solve_pooled_cancellable(p: &McmProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
+    let n = p.n().max(1);
+    let sched = cache::mcm_schedule_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled_cancellable(p, &sched, pool, pool.threads(), token)
+}
+
+/// Convenience: cancellable solve over the cached `(n, variant)` schedule
+/// — the router's deadline-carrying `seq`/`fused` route.
+pub fn solve_cancellable(
+    p: &McmProblem,
+    variant: McmVariant,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    let sched = cache::mcm_schedule(p.n().max(1), variant);
+    execute_cancellable(p, &sched, token)
 }
 
 /// Execution trace of the first `max_steps` steps (regenerates Fig. 7's
@@ -604,6 +794,103 @@ mod tests {
                 Err(format!("n={n} threads={threads} dims={:?}", p.dims))
             }
         });
+    }
+
+    #[test]
+    fn cancellable_with_never_or_live_token_matches_oracle() {
+        let pool = ExecPool::new(4);
+        forall("mcm cancellable == seq", 20, |g| {
+            let n = g.usize(2..20);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let want = seq::linear_table(&p);
+            let sched = McmSchedule::compile(n, McmVariant::Corrected);
+            let tsched = McmSchedule::compile_tiled(n, McmVariant::Corrected, 4);
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            let a = execute_cancellable(&p, &sched, &CancelToken::never()).unwrap();
+            let b = execute_cancellable(&p, &sched, &live).unwrap();
+            let c =
+                execute_pooled_cancellable(&p, &tsched, &pool, threads, &live).unwrap();
+            if a == want && b == want && c == want {
+                Ok(())
+            } else {
+                Err(format!("n={n} threads={threads} dims={:?}", p.dims))
+            }
+        });
+        // the faithful two-phase path is cancellable too and matches the
+        // uncancellable faithful executor
+        let p = McmProblem::clrs();
+        let fsched = McmSchedule::compile(p.n(), McmVariant::PaperFaithful);
+        let live = CancelToken::after(std::time::Duration::from_secs(600));
+        assert_eq!(
+            execute_cancellable(&p, &fsched, &live).unwrap(),
+            execute(&p, &fsched)
+        );
+    }
+
+    #[test]
+    fn expired_deadline_releases_pool_within_one_barrier_round() {
+        // the cancellation-latency property: an already-expired deadline
+        // must return `timeout` without occupying pool workers for more
+        // than one barrier round — the entry gate makes it zero rounds —
+        // and the pool must serve subsequent solves
+        let pool = ExecPool::new(4);
+        forall("expired deadline == 0 rounds", 12, |g| {
+            let n = g.usize(4..28);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let sched = McmSchedule::compile_tiled(n, McmVariant::Corrected, 4);
+            let expired = CancelToken::at(std::time::Instant::now());
+            let before = pool.stats().solves;
+            let (r, rounds) =
+                execute_pooled_cancellable_counted(&p, &sched, &pool, 4, &expired);
+            if !matches!(r, Err(crate::Error::Timeout(_))) {
+                return Err(format!("n={n}: expired solve did not time out"));
+            }
+            if rounds > 1 {
+                return Err(format!("n={n}: {rounds} barrier rounds > 1"));
+            }
+            if pool.stats().solves != before || pool.stats().active != 0 {
+                return Err(format!("n={n}: expired solve engaged the pool"));
+            }
+            // occupancy gauge back to idle and the pool still serves
+            if execute_pooled(&p, &sched, &pool, 4) != seq::linear_table(&p) {
+                return Err(format!("n={n}: pool unusable after cancellation"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn midflight_stop_flag_cancels_consistently_and_pool_survives() {
+        // raise the token's stop flag only after the pool is observed
+        // busy: the superstep cut protocol must either cancel (every
+        // party breaking at the same superstep, Err(Timeout)) or have
+        // already finished (Ok, matching the oracle) — never wedge or
+        // corrupt
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let pool = Arc::new(ExecPool::new(4));
+        let p = McmProblem::new((0..320).map(|i| (i % 23) + 1).collect()).unwrap();
+        let sched = McmSchedule::compile_tiled(p.n(), McmVariant::Corrected, 2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let token = CancelToken::never().with_stop(stop.clone());
+        let want = seq::linear_table(&p);
+        let result = std::thread::scope(|s| {
+            let h = s.spawn(|| execute_pooled_cancellable(&p, &sched, &pool, 4, &token));
+            while !pool.is_busy() && !h.is_finished() {
+                std::hint::spin_loop();
+            }
+            stop.store(true, Ordering::Relaxed);
+            h.join().unwrap()
+        });
+        match result {
+            Err(crate::Error::Timeout(_)) => {}
+            Ok(st) => assert_eq!(st, want, "completed solve must still be correct"),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        assert_eq!(pool.stats().active, 0, "workers must be released");
+        // pool reusable after cancellation
+        assert_eq!(execute_pooled(&p, &sched, &pool, 4), want);
     }
 
     #[test]

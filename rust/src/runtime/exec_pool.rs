@@ -45,7 +45,95 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Cooperative cancellation handle for one solve: an optional absolute
+/// deadline plus an optional shared stop flag (the server's shutdown
+/// signal).  Executors poll it at superstep/wavefront boundaries — the
+/// natural interruption points of a lock-step pipeline — so a cancelled
+/// solve releases its pool workers within one barrier round instead of
+/// running the table to completion.
+///
+/// The default token never cancels and costs nothing to poll
+/// ([`CancelToken::is_never`] lets hot paths skip the clock read
+/// entirely), so the non-deadline path is unchanged.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    deadline: Option<Instant>,
+    stop: Option<Arc<AtomicBool>>,
+}
+
+impl CancelToken {
+    /// A token that never cancels (the legacy executors' behaviour).
+    pub fn never() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that cancels once `deadline` passes.
+    pub fn at(deadline: Instant) -> CancelToken {
+        CancelToken {
+            deadline: Some(deadline),
+            stop: None,
+        }
+    }
+
+    /// A token that cancels `timeout` from now.
+    pub fn after(timeout: Duration) -> CancelToken {
+        CancelToken::at(Instant::now() + timeout)
+    }
+
+    /// Attach a shared stop flag (e.g. the server's shutdown signal); the
+    /// token cancels as soon as the flag is raised, deadline or not.
+    pub fn with_stop(mut self, stop: Arc<AtomicBool>) -> CancelToken {
+        self.stop = Some(stop);
+        self
+    }
+
+    /// True when this token can never fire — executors use it to skip
+    /// per-step clock reads on the common no-deadline path.
+    pub fn is_never(&self) -> bool {
+        self.deadline.is_none() && self.stop.is_none()
+    }
+
+    /// Poll: has the deadline passed or the stop flag been raised?
+    pub fn is_cancelled(&self) -> bool {
+        if let Some(stop) = &self.stop {
+            if stop.load(Ordering::Relaxed) {
+                return true;
+            }
+        }
+        match self.deadline {
+            Some(d) => Instant::now() >= d,
+            None => false,
+        }
+    }
+
+    /// Poll as a `Result`: `Err(Error::Timeout)` when cancelled — the
+    /// entry-gate form (executors check once before engaging the pool so
+    /// an already-expired solve costs zero barrier rounds).
+    pub fn check(&self) -> crate::Result<()> {
+        if self.is_cancelled() {
+            cancelled()
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// The uniform cancellation result of every `*_cancellable` executor:
+/// the solve was abandoned at a superstep/wavefront boundary.
+pub fn cancelled<T>() -> crate::Result<T> {
+    Err(crate::Error::Timeout(
+        "solve cancelled at superstep boundary".into(),
+    ))
+}
+
+/// Steps between deadline polls on the *single-thread* cancellable
+/// executors (a clock read per step would dominate tiny steps).  The
+/// parallel executors poll every superstep instead — only party 0 reads
+/// the clock, and it is already paying a barrier per step.
+pub const CANCEL_POLL_STRIDE: usize = 64;
 
 /// Sense-reversing barrier: one atomic `fetch_add` per arrival, a
 /// spin-then-yield wait, no mutex.  Each participant keeps a *local*
@@ -538,6 +626,35 @@ mod tests {
         let pool = ExecPool::new(4);
         pool.run(4, |_| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn cancel_token_never_is_free_and_never_fires() {
+        let t = CancelToken::never();
+        assert!(t.is_never());
+        assert!(!t.is_cancelled());
+        assert!(t.check().is_ok());
+    }
+
+    #[test]
+    fn cancel_token_expired_deadline_fires() {
+        let t = CancelToken::at(Instant::now() - Duration::from_millis(1));
+        assert!(!t.is_never());
+        assert!(t.is_cancelled());
+        assert!(matches!(t.check(), Err(crate::Error::Timeout(_))));
+        // a far-future deadline does not fire
+        let t = CancelToken::after(Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+    }
+
+    #[test]
+    fn cancel_token_stop_flag_fires_without_deadline() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let t = CancelToken::never().with_stop(stop.clone());
+        assert!(!t.is_never());
+        assert!(!t.is_cancelled());
+        stop.store(true, Ordering::Relaxed);
+        assert!(t.is_cancelled());
     }
 
     #[test]

@@ -21,11 +21,12 @@
 //!   (`python/compile/kernels/sdp_pipeline.py`), dispatched via
 //!   [`crate::runtime::engine`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Barrier;
 
 use crate::core::problem::SdpProblem;
 use crate::core::schedule::SdpSchedule;
-use crate::runtime::exec_pool::{ExecPool, SenseBarrier};
+use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool, SenseBarrier, CANCEL_POLL_STRIDE};
 use crate::sdp::naive::SharedTable;
 
 /// Step-synchronous pipeline solve (Fig. 2 verbatim).
@@ -63,6 +64,37 @@ fn solve_with(p: &SdpProblem, st: &mut [i64], f: impl Fn(i64, i64) -> i64) {
             st[ij] = f(st[ij], v);
         }
     }
+}
+
+/// [`solve`] with cooperative cancellation: the outer-step loop polls the
+/// [`CancelToken`] every [`CANCEL_POLL_STRIDE`] steps and abandons the
+/// table with `Err(Timeout)` once it fires.  A never-token delegates to
+/// the specialized fused executor — the common path pays nothing.
+pub fn solve_cancellable(p: &SdpProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(solve(p));
+    }
+    token.check()?;
+    let mut st = p.initial_table();
+    let (n, k, a1) = (p.n, p.k(), p.a1());
+    let op = p.op;
+    let offsets = &p.offsets;
+    for (step, i) in (a1..=(n + k - 2)).enumerate() {
+        if step % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
+            return cancelled();
+        }
+        let jlo = (i + 2).saturating_sub(n).max(1);
+        let jhi = (i + 1 - a1).min(k);
+        if jlo == 1 && jhi >= 1 {
+            st[i] = st[i - offsets[0] as usize];
+        }
+        for j in jlo.max(2)..=jhi {
+            let ij = i - j + 1;
+            let v = st[ij - offsets[j - 1] as usize];
+            st[ij] = op.apply(st[ij], v);
+        }
+    }
+    Ok(st)
 }
 
 /// Real multi-core pipeline executor: `threads` workers share the k lanes
@@ -168,11 +200,160 @@ pub fn execute_pooled(p: &SdpProblem, pool: &ExecPool, threads: usize) -> Vec<i6
     st
 }
 
+/// [`execute_pooled`] with cooperative cancellation via the superstep
+/// cut protocol (see `runtime::exec_pool`): party 0 polls the
+/// [`CancelToken`] at the *end* of each outer step and publishes the
+/// first step index every party must skip, *before* its barrier wait.
+/// The break check compares step indices rather than a boolean, so a
+/// party that happens to observe the publication within the very step it
+/// was made still finishes that step and breaks one barrier later — all
+/// parties perform identical barrier waits (an inconsistent boolean flag
+/// could strand the barrier with a missing arrival), and the pool is
+/// released within one barrier round of the deadline firing.  An
+/// expired-at-entry token never engages the pool at all.
+pub fn execute_pooled_cancellable(
+    p: &SdpProblem,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(execute_pooled(p, pool, threads));
+    }
+    token.check()?;
+    let parties = threads.max(1).min(pool.threads()).min(p.k());
+    if parties == 1 {
+        return solve_cancellable(p, token);
+    }
+    let mut st = p.initial_table();
+    let (n, k, a1) = (p.n, p.k(), p.a1());
+    let op = p.op;
+    let offsets = &p.offsets;
+    let barrier = SenseBarrier::new(parties);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let chunk = k.div_ceil(parties);
+    let cut_at = AtomicUsize::new(usize::MAX);
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        let jlo = (t * chunk + 1).min(k + 1);
+        let jhi = ((t + 1) * chunk).min(k);
+        for (step, i) in (a1..=(n + k - 2)).enumerate() {
+            // a cut published at the end of step s names s+1, so this
+            // comparison is false for every party still inside step s and
+            // true for every party at the top of s+1 (the publication
+            // happens-before their return from the step-s barrier)
+            if cut_at.load(Ordering::Relaxed) <= step {
+                break;
+            }
+            for j in jlo..=jhi {
+                if j > i + 1 {
+                    break;
+                }
+                let ij = i - j + 1;
+                if ij >= a1 && ij < n {
+                    let a = offsets[j - 1] as usize;
+                    // SAFETY: identical disjointness/freshness argument
+                    // to `execute_pooled`; steps are barrier-separated.
+                    unsafe {
+                        let v = st_ptr.read(ij - a);
+                        let cur = st_ptr.read(ij);
+                        let newv = if j == 1 { v } else { op.apply(cur, v) };
+                        st_ptr.write(ij, newv);
+                    }
+                }
+            }
+            if t == 0 && token.is_cancelled() {
+                cut_at.store(step + 1, Ordering::Relaxed);
+            }
+            waiter.wait();
+        }
+    });
+    if cut_at.load(Ordering::Relaxed) != usize::MAX {
+        return cancelled();
+    }
+    Ok(st)
+}
+
+/// [`solve_threaded`] with cooperative cancellation — the same cut
+/// protocol as [`execute_pooled_cancellable`], on scoped threads with a
+/// `std::sync::Barrier` (all threads break at the same step top, so every
+/// thread performs the same number of barrier waits).
+pub fn solve_threaded_cancellable(
+    p: &SdpProblem,
+    threads: usize,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(solve_threaded(p, threads));
+    }
+    token.check()?;
+    let threads = threads.max(1).min(p.k());
+    if threads == 1 {
+        return solve_cancellable(p, token);
+    }
+    let mut st = p.initial_table();
+    let (n, k, a1) = (p.n, p.k(), p.a1());
+    let op = p.op;
+    let offsets = &p.offsets;
+    let barrier = Barrier::new(threads);
+    let st_ptr = SharedTable(st.as_mut_ptr());
+    let chunk = k.div_ceil(threads);
+    let cut_at = AtomicUsize::new(usize::MAX);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let st_ptr = &st_ptr;
+            let cut_at = &cut_at;
+            scope.spawn(move || {
+                let jlo = (t * chunk + 1).min(k + 1);
+                let jhi = ((t + 1) * chunk).min(k);
+                for (step, i) in (a1..=(n + k - 2)).enumerate() {
+                    if cut_at.load(Ordering::Relaxed) <= step {
+                        break;
+                    }
+                    for j in jlo..=jhi {
+                        if j > i + 1 {
+                            break;
+                        }
+                        let ij = i - j + 1;
+                        if ij >= a1 && ij < n {
+                            let a = offsets[j - 1] as usize;
+                            // SAFETY: as in `solve_threaded`; steps stay
+                            // barrier-separated on the cancellable path.
+                            unsafe {
+                                let v = st_ptr.read(ij - a);
+                                let cur = st_ptr.read(ij);
+                                let newv = if j == 1 { v } else { op.apply(cur, v) };
+                                st_ptr.write(ij, newv);
+                            }
+                        }
+                    }
+                    if t == 0 && token.is_cancelled() {
+                        cut_at.store(step + 1, Ordering::Relaxed);
+                    }
+                    barrier.wait();
+                }
+            });
+        }
+    });
+    if cut_at.load(Ordering::Relaxed) != usize::MAX {
+        return cancelled();
+    }
+    Ok(st)
+}
+
 /// Convenience: pooled solve on the process-wide pool — the adaptive
 /// policy's `pooled` route for S-DP.
 pub fn solve_pooled(p: &SdpProblem) -> Vec<i64> {
     let pool = crate::runtime::exec_pool::global();
     execute_pooled(p, pool, pool.threads())
+}
+
+/// Convenience: cancellable pooled solve on the process-wide pool — the
+/// router's deadline-carrying `pooled` route for S-DP.
+pub fn solve_pooled_cancellable(p: &SdpProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled_cancellable(p, pool, pool.threads(), token)
 }
 
 /// A human-readable execution trace (regenerates the paper's Fig. 3).
@@ -272,6 +453,50 @@ mod tests {
     fn solve_pooled_fibonacci() {
         let p = SdpProblem::fibonacci(16);
         assert_eq!(solve_pooled(&p)[15], 987);
+    }
+
+    #[test]
+    fn cancellable_with_never_token_matches_seq_property() {
+        let pool = ExecPool::new(4);
+        forall("cancellable(never) == seq", 20, |g| {
+            let p = testutil::random_problem(g);
+            let threads = *g.choose(&[1usize, 2, 4]);
+            let want = seq::solve(&p);
+            let a = solve_cancellable(&p, &CancelToken::never()).unwrap();
+            let b = execute_pooled_cancellable(&p, &pool, threads, &CancelToken::never()).unwrap();
+            let c = solve_threaded_cancellable(&p, threads, &CancelToken::never()).unwrap();
+            // a live (unexpired) deadline must not perturb the result
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            let d = execute_pooled_cancellable(&p, &pool, threads, &live).unwrap();
+            if a == want && b == want && c == want && d == want {
+                Ok(())
+            } else {
+                Err(format!("n={} k={} threads={threads}", p.n, p.k()))
+            }
+        });
+    }
+
+    #[test]
+    fn expired_deadline_cancels_without_engaging_pool() {
+        let pool = ExecPool::new(4);
+        let p = SdpProblem::fibonacci(64);
+        let expired = CancelToken::after(std::time::Duration::ZERO);
+        let solves_before = pool.stats().solves;
+        assert!(matches!(
+            execute_pooled_cancellable(&p, &pool, 4, &expired),
+            Err(crate::Error::Timeout(_))
+        ));
+        // entry gate: an already-expired solve never dispatches to workers
+        assert_eq!(pool.stats().solves, solves_before);
+        assert_eq!(pool.stats().active, 0);
+        assert!(matches!(
+            solve_cancellable(&p, &expired),
+            Err(crate::Error::Timeout(_))
+        ));
+        assert!(matches!(
+            solve_threaded_cancellable(&p, 3, &expired),
+            Err(crate::Error::Timeout(_))
+        ));
     }
 
     #[test]

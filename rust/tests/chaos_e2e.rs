@@ -1,0 +1,348 @@
+//! Chaos end-to-end suite: fault-injected traffic through a real server
+//! (ISSUE 6).  Every test drives the full TCP → batcher → pool → router
+//! path with the fault layer armed and asserts the lifecycle invariant:
+//! **every admitted request gets exactly one typed, id-correlated reply,
+//! and the server stays healthy afterwards** (clean drain, reusable
+//! pool, live connections).
+//!
+//! The fault plan is process-global (`core::faults`), so tests that arm
+//! one — or that depend on it being disarmed — serialize on a mutex and
+//! restore the disarmed state before releasing it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use pipedp::coordinator::batcher::Policy;
+use pipedp::coordinator::request::{Backend, ErrorKind, Request, RequestBody, Response};
+use pipedp::coordinator::server::{Client, Config, Server};
+use pipedp::core::faults::{self, FaultPlan};
+use pipedp::core::problem::{McmProblem, SdpProblem};
+use pipedp::core::schedule::McmVariant;
+use pipedp::Error;
+
+/// Serializes tests that install (or require the absence of) a fault
+/// plan; the plan is process-wide state.
+static FAULTS_LOCK: Mutex<()> = Mutex::new(());
+
+fn faults_locked() -> MutexGuard<'static, ()> {
+    FAULTS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn start_server(max_solve_bytes: usize) -> Server {
+    Server::start(Config {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        policy: Policy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        // no warm-up solves: the warm thread would also hit armed fault
+        // sites, making panic/latency accounting nondeterministic
+        warm: false,
+        queue_cap: 0,
+        exec_threads: 0,
+        max_solve_bytes,
+        line_stall_ms: 0,
+    })
+    .expect("server starts")
+}
+
+fn sdp_request(n: usize, deadline_ms: Option<u64>) -> Request {
+    Request {
+        id: 0,
+        body: RequestBody::Sdp(SdpProblem::fibonacci(n)),
+        backend: Backend::Native,
+        full: false,
+        want_solution: false,
+        deadline_ms,
+    }
+}
+
+fn mcm_request(deadline_ms: Option<u64>) -> Request {
+    Request {
+        id: 0,
+        body: RequestBody::Mcm {
+            problem: McmProblem::new(vec![30, 35, 15, 5, 10, 20, 25]).unwrap(),
+            variant: McmVariant::Corrected,
+        },
+        backend: Backend::Native,
+        full: false,
+        want_solution: false,
+        deadline_ms,
+    }
+}
+
+fn align_request() -> Request {
+    use pipedp::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+    Request {
+        id: 0,
+        body: RequestBody::Align(
+            AlignProblem::new(
+                vec![1, 2, 3, 4, 7],
+                vec![2, 3, 9, 4],
+                AlignVariant::Lcs,
+                AlignScoring::default(),
+            )
+            .unwrap(),
+        ),
+        backend: Backend::Native,
+        full: false,
+        want_solution: false,
+        deadline_ms: None,
+    }
+}
+
+fn stats(client: &mut Client) -> pipedp::util::json::Json {
+    client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Stats,
+            backend: Backend::Auto,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        })
+        .unwrap()
+        .stats
+        .expect("stats payload")
+}
+
+/// The headline chaos run: mixed traffic with panics and delays injected
+/// mid-solve.  Every request is answered with a correlated typed reply,
+/// the pool survives, and the server drains cleanly.
+///
+/// The plan comes from `PIPEDP_FAULTS` when the CI chaos smoke sets it
+/// (exercising the env grammar end-to-end) and falls back to a fixed
+/// mixed plan otherwise, so the test is meaningful in both modes.
+#[test]
+fn chaos_mixed_traffic_every_request_answered() {
+    let _g = faults_locked();
+    let plan = std::env::var("PIPEDP_FAULTS")
+        .ok()
+        .and_then(|spec| FaultPlan::parse(&spec).ok())
+        .filter(|p| !p.is_empty())
+        .unwrap_or_else(|| FaultPlan::parse("panic:mcm:0.5,delay:align:5ms").unwrap());
+    faults::install(Some(plan));
+
+    let server = start_server(0);
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    // 32 mixed requests: solvable SDP, panic-prone MCM, delayed align,
+    // plus a few that arrive already expired
+    let mut reqs = Vec::new();
+    for i in 0..8 {
+        reqs.push(sdp_request(64, None));
+        reqs.push(mcm_request(None));
+        reqs.push(align_request());
+        reqs.push(if i % 2 == 0 {
+            sdp_request(64, Some(0)) // expired on arrival → typed timeout
+        } else {
+            mcm_request(None)
+        });
+    }
+    let n = reqs.len();
+    let resps = client.call_pipelined(reqs).unwrap();
+
+    assert_eq!(resps.len(), n, "every request must be answered");
+    let mut ids: Vec<i64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every reply must carry a distinct request id");
+    for r in &resps {
+        assert!(
+            r.ok || r.error.is_some(),
+            "reply {} is neither success nor typed error: {r:?}",
+            r.id
+        );
+        if !r.ok {
+            // injected faults map to the typed taxonomy, never silence
+            assert!(
+                r.error_kind.is_some() || r.error.is_some(),
+                "untyped failure for id {}: {r:?}",
+                r.id
+            );
+        }
+    }
+
+    // disarm and prove the pool + connection survived the chaos
+    faults::install(None);
+    let resp = client.call(sdp_request(16, None)).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 987);
+
+    // the smoke asserts the fault counters exist in the snapshot
+    let snap = stats(&mut client);
+    for field in ["timeouts", "panics", "rejected_too_large", "shed"] {
+        assert!(
+            snap.i64_field(field).is_ok(),
+            "stats snapshot missing `{field}`: {}",
+            snap.to_string()
+        );
+    }
+    assert!(
+        snap.i64_field("timeouts").unwrap() >= 4,
+        "expired-on-arrival requests must tick the timeout counter"
+    );
+
+    drop(client);
+    server.shutdown(); // clean drain: must not hang or panic
+}
+
+/// Satellite 2 regression: a worker panic mid-solve must not lose the
+/// reply.  The client sees a `panicked` response carrying the *original*
+/// request id, and the same connection keeps working afterwards.
+#[test]
+fn worker_panic_yields_typed_reply_with_original_id() {
+    let _g = faults_locked();
+    faults::install(Some(FaultPlan::parse("panic:mcm:1.0").unwrap()));
+
+    let server = start_server(0);
+    // raw wire, not `Client` (which re-assigns ids): pin id 77 ourselves
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    let mut req = mcm_request(None);
+    req.id = 77;
+    writer
+        .write_all(format!("{}\n", req.encode()).as_bytes())
+        .unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Response::decode(line.trim_end()).unwrap();
+    assert_eq!(resp.id, 77, "panicked reply must keep the request id");
+    assert!(!resp.ok);
+    assert_eq!(resp.error_kind, Some(ErrorKind::Panicked));
+    assert!(
+        resp.error.as_deref().unwrap_or("").contains("panic"),
+        "{:?}",
+        resp.error
+    );
+
+    // disarm: the same connection and pool must serve the retry
+    faults::install(None);
+    let mut req = mcm_request(None);
+    req.id = 78;
+    writer
+        .write_all(format!("{}\n", req.encode()).as_bytes())
+        .unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Response::decode(line.trim_end()).unwrap();
+    assert_eq!(resp.id, 78);
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 15125); // CLRS 15.2 optimum
+
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    assert!(
+        stats(&mut client).i64_field("panics").unwrap() >= 1,
+        "panic counter must tick"
+    );
+    server.shutdown();
+}
+
+/// Satellite 1 regression: a server that accepts the connection but
+/// never replies must surface as a typed timeout, not a client that
+/// blocks forever.
+#[test]
+fn client_times_out_against_silent_server() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let hold = std::thread::spawn(move || {
+        // accept, read the request, never answer; exits on client EOF
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {}
+    });
+
+    let mut client = Client::connect_with_timeout(
+        &addr,
+        Duration::from_secs(2),
+        Some(Duration::from_millis(300)),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let err = client.call(sdp_request(8, None)).unwrap_err();
+    assert!(
+        matches!(err, Error::Timeout(_)),
+        "want Error::Timeout, got {err:?}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "timeout must be prompt, took {:?}",
+        t0.elapsed()
+    );
+    drop(client);
+    hold.join().unwrap();
+}
+
+/// Tentpole lifecycle check over the wire: an already-expired deadline
+/// is shed with a typed `timeout` reply and ticks the counter; the same
+/// body without a deadline solves normally.
+#[test]
+fn expired_deadline_over_the_wire_gets_typed_timeout() {
+    let _g = faults_locked();
+    faults::install(None);
+
+    let server = start_server(0);
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    let resp = client.call(sdp_request(64, Some(0))).unwrap();
+    assert!(!resp.ok);
+    assert_eq!(resp.error_kind, Some(ErrorKind::Timeout), "{resp:?}");
+
+    let resp = client.call(sdp_request(64, None)).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+
+    assert!(stats(&mut client).i64_field("timeouts").unwrap() >= 1);
+    server.shutdown();
+}
+
+/// Tentpole admission check over the wire: a solve whose estimated
+/// footprint exceeds `max_solve_bytes` is refused with `too_large`
+/// before any allocation; a small solve on the same connection passes.
+#[test]
+fn oversized_solve_rejected_with_typed_too_large() {
+    let _g = faults_locked();
+    faults::install(None);
+
+    let server = start_server(256); // admit ≤ 256 B tables
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    let resp = client.call(sdp_request(1024, None)).unwrap(); // 8 KiB table
+    assert!(!resp.ok);
+    assert_eq!(resp.error_kind, Some(ErrorKind::TooLarge), "{resp:?}");
+    assert!(
+        resp.error.as_deref().unwrap_or("").contains("exceeds"),
+        "{:?}",
+        resp.error
+    );
+
+    let resp = client.call(sdp_request(16, None)).unwrap(); // 128 B table
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 987);
+
+    assert!(stats(&mut client).i64_field("rejected_too_large").unwrap() >= 1);
+    server.shutdown();
+}
+
+/// Retry helper semantics: `call_with_retry` must return non-overloaded
+/// replies immediately (no retry burn on success).
+#[test]
+fn call_with_retry_passes_through_success() {
+    let _g = faults_locked();
+    faults::install(None);
+
+    let server = start_server(0);
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let resp = client.call_with_retry(sdp_request(16, None), 3).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 987);
+    server.shutdown();
+}

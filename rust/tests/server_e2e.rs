@@ -22,6 +22,8 @@ fn start_server() -> Server {
         warm: true,
         queue_cap: 0,
         exec_threads: 0,
+        max_solve_bytes: 0,
+        line_stall_ms: 0,
     })
     .expect("server starts")
 }
@@ -53,6 +55,7 @@ fn sdp_request(p: SdpProblem, backend: Backend, full: bool) -> Request {
         backend,
         full,
         want_solution: false,
+        deadline_ms: None,
     }
 }
 
@@ -86,6 +89,7 @@ fn mcm_round_trip_with_table() {
             backend: Backend::Native,
             full: true,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok);
@@ -114,6 +118,7 @@ fn align_round_trip_all_variants() {
             backend: Backend::Native,
             full: true,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -140,6 +145,7 @@ fn align_round_trip_all_variants() {
             backend: Backend::Auto,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -162,6 +168,7 @@ fn align_round_trip_all_variants() {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -193,6 +200,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 backend: Backend::Native,
                 full: false,
                 want_solution: false,
+                deadline_ms: None,
             })
             .unwrap()
     };
@@ -216,6 +224,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 backend: Backend::Native,
                 full: false,
                 want_solution: false,
+                deadline_ms: None,
             })
             .unwrap()
     };
@@ -227,6 +236,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 backend: Backend::Auto,
                 full: false,
                 want_solution: false,
+                deadline_ms: None,
             })
             .unwrap();
         resp.stats.unwrap().i64_field("sched_cache_hits").unwrap()
@@ -269,6 +279,7 @@ fn want_solution_round_trip() {
             backend: Backend::Auto,
             full: false,
             want_solution: true,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -298,6 +309,7 @@ fn want_solution_round_trip() {
             backend: Backend::Native,
             full: false,
             want_solution: true,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -315,6 +327,7 @@ fn want_solution_round_trip() {
             backend: Backend::Native,
             full: false,
             want_solution: true,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(!resp.ok);
@@ -342,6 +355,7 @@ fn faithful_variant_served_with_divergence() {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok);
@@ -378,6 +392,7 @@ fn malformed_and_invalid_requests_get_errors_not_disconnects() {
         backend: Backend::Native,
         full: false,
         want_solution: false,
+        deadline_ms: None,
     }
     .encode();
     good.push('\n');
@@ -426,6 +441,7 @@ fn stats_request_reports_metrics() {
             backend: Backend::Auto,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok);
@@ -457,6 +473,7 @@ fn schedule_cache_serves_repeated_sizes() {
         backend: Backend::Native,
         full: false,
         want_solution: false,
+        deadline_ms: None,
     };
     let stats_request = || Request {
         id: 0,
@@ -464,6 +481,7 @@ fn schedule_cache_serves_repeated_sizes() {
         backend: Backend::Auto,
         full: false,
         want_solution: false,
+        deadline_ms: None,
     };
     let snapshot_hits = |client: &mut Client| {
         let resp = client.call(stats_request()).unwrap();
@@ -571,6 +589,8 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
         warm: false,
         queue_cap: 2,
         exec_threads: 0,
+        max_solve_bytes: 0,
+        line_stall_ms: 0,
     })
     .expect("server starts");
     let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
@@ -590,6 +610,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
             backend: Backend::Native,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         })
         .collect();
     let resps = client.call_pipelined(reqs).unwrap();
@@ -625,6 +646,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
             backend: Backend::Auto,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     let stats = stats_resp.stats.unwrap();
@@ -707,6 +729,7 @@ fn xla_backend_served_when_artifacts_present() {
             backend: Backend::Xla,
             full: false,
             want_solution: false,
+            deadline_ms: None,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
