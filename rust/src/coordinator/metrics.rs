@@ -136,6 +136,7 @@ impl Metrics {
         let sched = crate::core::cache::global_stats();
         let policy = crate::core::policy::stats();
         let pool = crate::runtime::exec_pool::try_global_stats();
+        let cert = crate::core::certify::stats();
         Json::obj(vec![
             ("requests", Json::int(self.requests.load(Ordering::Relaxed) as i64)),
             ("errors", Json::int(self.errors.load(Ordering::Relaxed) as i64)),
@@ -157,6 +158,12 @@ impl Metrics {
             ("sched_cache_hits", Json::int(sched.hits as i64)),
             ("sched_cache_misses", Json::int(sched.misses as i64)),
             ("sched_cache_entries", Json::int(sched.entries as i64)),
+            // the certifier gate's serve-path verdict counters
+            // (DESIGN.md §10): every native solve passes the gate, so
+            // `certified` grows with native traffic and `cert_rejected`
+            // stays 0 unless a schedule was refuted
+            ("certified", Json::int(cert.certified as i64)),
+            ("cert_rejected", Json::int(cert.cert_rejected as i64)),
             ("policy_calibrated", Json::Bool(policy.calibrated)),
             ("policy_seq", Json::int(policy.seq as i64)),
             ("policy_fused", Json::int(policy.fused as i64)),
@@ -284,6 +291,10 @@ mod tests {
         assert!(snap.i64_field("exec_pool_solves").unwrap() >= 0);
         assert!(snap.i64_field("exec_pool_active").unwrap() >= 0);
         assert!(snap.i64_field("exec_pool_contended").unwrap() >= 0);
+        // certifier verdict counters ride every snapshot (process-wide,
+        // monotone — other tests in this binary may have bumped them)
+        assert!(snap.i64_field("certified").unwrap() >= 0);
+        assert!(snap.i64_field("cert_rejected").unwrap() >= 0);
     }
 
     #[test]

@@ -60,6 +60,10 @@ pub enum ErrorKind {
     /// The admission gate refused the request because the worker queue
     /// was full (the legacy `overloaded` marker, now typed).
     Overloaded,
+    /// An internal server invariant failed — most notably the schedule
+    /// certifier refusing to dispatch an uncertified or refuted schedule
+    /// (`core::certify`).  Never the client's fault; report it.
+    Internal,
 }
 
 impl ErrorKind {
@@ -69,6 +73,7 @@ impl ErrorKind {
             ErrorKind::Panicked => "panicked",
             ErrorKind::TooLarge => "too_large",
             ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Internal => "internal",
         }
     }
 
@@ -78,15 +83,18 @@ impl ErrorKind {
             "panicked" => Ok(ErrorKind::Panicked),
             "too_large" => Ok(ErrorKind::TooLarge),
             "overloaded" => Ok(ErrorKind::Overloaded),
+            "internal" => Ok(ErrorKind::Internal),
             other => Err(Error::Json(format!("unknown error_kind '{other}'"))),
         }
     }
 
     /// Whether a client may retry the identical request and plausibly
     /// succeed (docs/PROTOCOL.md retry guidance): load and transient
-    /// faults are retryable, a structurally oversized solve is not.
+    /// faults are retryable; a structurally oversized solve is not, and
+    /// neither is a refuted schedule — the same request recompiles the
+    /// same schedule and is refused again.
     pub fn retryable(self) -> bool {
-        !matches!(self, ErrorKind::TooLarge)
+        !matches!(self, ErrorKind::TooLarge | ErrorKind::Internal)
     }
 }
 
@@ -308,8 +316,8 @@ pub struct Response {
     /// `overloaded == (error_kind == Some(Overloaded))`.
     pub overloaded: bool,
     /// The typed failure taxonomy (docs/PROTOCOL.md): present on
-    /// `timeout` / `panicked` / `too_large` / `overloaded` errors, absent
-    /// on success and on plain validation errors.
+    /// `timeout` / `panicked` / `too_large` / `overloaded` / `internal`
+    /// errors, absent on success and on plain validation errors.
     pub error_kind: Option<ErrorKind>,
     /// Raw stats payload for `kind: stats`.
     pub stats: Option<Json>,
@@ -378,6 +386,17 @@ impl Response {
     pub fn too_large(id: i64, msg: String) -> Response {
         Response {
             error_kind: Some(ErrorKind::TooLarge),
+            ..Response::err(id, msg)
+        }
+    }
+
+    /// The certifier-refusal reply (and any other internal-invariant
+    /// failure): the schedule the router was about to dispatch did not
+    /// carry an admissible certificate, so it was refused instead of
+    /// executed (DESIGN.md §10).
+    pub fn internal(id: i64, msg: String) -> Response {
+        Response {
+            error_kind: Some(ErrorKind::Internal),
             ..Response::err(id, msg)
         }
     }
@@ -684,7 +703,7 @@ mod tests {
 
     #[test]
     fn error_kind_taxonomy_roundtrips() {
-        let cases: [(Response, ErrorKind, &str); 3] = [
+        let cases: [(Response, ErrorKind, &str); 4] = [
             (Response::timeout(1), ErrorKind::Timeout, "timeout"),
             (
                 Response::panicked(2, "solver panicked".into()),
@@ -695,6 +714,11 @@ mod tests {
                 Response::too_large(3, "estimated 9GiB > budget".into()),
                 ErrorKind::TooLarge,
                 "too_large",
+            ),
+            (
+                Response::internal(6, "mcm schedule refused by certifier".into()),
+                ErrorKind::Internal,
+                "internal",
             ),
         ];
         for (r, kind, name) in cases {
@@ -713,11 +737,13 @@ mod tests {
         assert_eq!(plain.error_kind, None);
         // unknown kinds on the wire are decode errors, not silent None
         assert!(Response::decode(r#"{"id": 1, "ok": false, "error_kind": "melted"}"#).is_err());
-        // retry guidance: only too_large is structurally unretryable
+        // retry guidance: too_large and internal are structurally
+        // unretryable — the identical request fails the same way again
         assert!(ErrorKind::Timeout.retryable());
         assert!(ErrorKind::Overloaded.retryable());
         assert!(ErrorKind::Panicked.retryable());
         assert!(!ErrorKind::TooLarge.retryable());
+        assert!(!ErrorKind::Internal.retryable());
     }
 
     #[test]

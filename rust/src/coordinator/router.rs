@@ -9,10 +9,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::request::{Backend, Request, RequestBody, Response};
+use crate::core::certify;
 use crate::core::faults;
 use crate::core::policy::{self, ExecutorChoice, Workload};
 use crate::core::problem::{AlignProblem, McmProblem, SdpProblem};
-use crate::core::schedule::McmVariant;
+use crate::core::schedule::{default_align_tile, default_mcm_tile, McmVariant};
 use crate::core::traceback;
 use crate::runtime::engine::Engine;
 use crate::runtime::exec_pool::CancelToken;
@@ -135,8 +136,9 @@ impl Router {
     /// through to the native policy (see [`Router::execute_native`]) and
     /// the caller-computed absolute deadline (if the request carried
     /// `deadline_ms`).  Executor errors map to typed replies here:
-    /// `Timeout` → `timeout`, `TooLarge` → `too_large`, the rest keep the
-    /// untyped error string.
+    /// `Timeout` → `timeout`, `TooLarge` → `too_large`, `Internal` →
+    /// `internal` (a certifier refusal, DESIGN.md §10), the rest keep
+    /// the untyped error string.
     fn execute_with_batch(
         &self,
         req: &Request,
@@ -152,6 +154,7 @@ impl Router {
             Ok(r) => r,
             Err(Error::Timeout(_)) => Response::timeout(req.id),
             Err(Error::TooLarge(m)) => Response::too_large(req.id, m),
+            Err(Error::Internal(m)) => Response::internal(req.id, m),
             Err(e) => Response::err(req.id, e.to_string()),
         }
     }
@@ -183,6 +186,9 @@ impl Router {
                 // count, not the table length — a long, narrow pipe has
                 // nothing for the pooled executor to spread
                 let choice = table.choose(Workload::Sdp, p.k(), batch);
+                // no uncertified schedule executes, whatever the choice:
+                // seq walks the same dependence structure the pipeline does
+                certify::gate_sdp(p.n, &p.offsets)?;
                 let st = if token.is_never() {
                     match choice {
                         ExecutorChoice::Seq => crate::sdp::seq::solve(p),
@@ -212,6 +218,16 @@ impl Router {
                 McmVariant::Corrected => {
                     faults::inject("mcm");
                     let choice = table.choose(Workload::Mcm, problem.n(), batch);
+                    // certify the schedule this choice will actually run:
+                    // the pooled executor compiles the superstep-tiled
+                    // arena, everything else the untiled one (tile = 1)
+                    let n = problem.n().max(1);
+                    let tile = if choice == ExecutorChoice::Pooled {
+                        default_mcm_tile(n)
+                    } else {
+                        1
+                    };
+                    certify::gate_mcm(n, McmVariant::Corrected, tile)?;
                     let served = format!("native:mcm_pipeline_corrected[{}]", choice.name());
                     if req.want_solution {
                         // the recording executors fill the split sidecar
@@ -265,6 +281,9 @@ impl Router {
                 // (and no meaningful solution can be reconstructed)
                 McmVariant::PaperFaithful => {
                     faults::inject("mcm");
+                    // the faithful bar is WAW-cleanliness only — its stale
+                    // reads are the documented semantics, not a hazard
+                    certify::gate_mcm(problem.n().max(1), McmVariant::PaperFaithful, 1)?;
                     if req.want_solution {
                         return Err(faithful_solution_error());
                     }
@@ -288,6 +307,18 @@ impl Router {
                 // when its long side is huge
                 let choice =
                     table.choose(Workload::Align, p.rows().min(p.cols()), batch);
+                // mirror the pooled executor's short-side fallback: it
+                // only compiles the tiled schedule when both sides exceed
+                // the default tile, otherwise it runs the untiled arena
+                let (rows, cols) = (p.rows(), p.cols());
+                let pool_tile = default_align_tile(rows, cols);
+                let tile = if choice == ExecutorChoice::Pooled && rows.min(cols) > pool_tile
+                {
+                    pool_tile
+                } else {
+                    1
+                };
+                certify::gate_align(rows, cols, tile)?;
                 let served = format!("native:align_wavefront[{}]", choice.name());
                 if req.want_solution {
                     let (st, moves) = match choice {
@@ -1016,6 +1047,55 @@ mod tests {
         assert_eq!(resps.len(), 2);
         assert_eq!(resps[0].error_kind, Some(ErrorKind::Timeout));
         assert!(resps[1].ok, "{:?}", resps[1].error);
+    }
+
+    #[test]
+    fn native_solves_carry_verified_certificates() {
+        // every native dispatch passes the certifier gate: the certified
+        // counter grows by at least one per solve, across all three kinds
+        use crate::core::problem::AlignProblem;
+        let r = Router::new(None);
+        let before = certify::stats().certified;
+        assert!(r.execute(&sdp_req(1, 24, Backend::Native), Route::Native).ok);
+        let mcm = Request {
+            id: 2,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        assert!(r.execute(&mcm, Route::Native).ok);
+        let faithful = Request {
+            id: 3,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::PaperFaithful,
+            },
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        assert!(r.execute(&faithful, Route::Native).ok);
+        let align = Request {
+            id: 4,
+            body: RequestBody::Align(
+                AlignProblem::lcs(vec![1, 2, 3], vec![2, 3, 4]).unwrap(),
+            ),
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        assert!(r.execute(&align, Route::Native).ok);
+        assert!(
+            certify::stats().certified >= before + 4,
+            "each native solve must pass the certifier gate"
+        );
     }
 
     #[test]

@@ -34,7 +34,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant};
+use crate::core::certify::{self, Certificate, Family};
+use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant, SdpSchedule};
 
 /// Default maximum number of cached schedules (covers far more distinct
 /// sizes than realistic traffic exhibits).
@@ -50,7 +51,7 @@ pub const DEFAULT_TERM_BUDGET: usize = 48_000_000;
 /// Cache key: problem kind + instance size + schedule variant + superstep
 /// tile (1 = untiled; tiled and untiled arenas of one size are distinct
 /// compilations and cache as distinct entries).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum Key {
     Mcm {
         n: usize,
@@ -65,6 +66,10 @@ pub enum Key {
         cols: usize,
         tile: usize,
     },
+    /// The S-DP pipeline schedule is implicit (O(k) memory) — it is
+    /// cached purely so its [`Certificate`] amortizes across repeated
+    /// `(n, offsets)` shapes.
+    Sdp { n: usize, offsets: Vec<i64> },
 }
 
 /// A cached compiled schedule of any workload family.  Typed entry/exit
@@ -73,6 +78,7 @@ pub enum Key {
 pub enum CachedSchedule {
     Mcm(Arc<McmSchedule>),
     Align(Arc<AlignSchedule>),
+    Sdp(Arc<SdpSchedule>),
 }
 
 impl CachedSchedule {
@@ -80,6 +86,30 @@ impl CachedSchedule {
         match self {
             CachedSchedule::Mcm(s) => s.num_terms(),
             CachedSchedule::Align(s) => s.num_terms(),
+            // the implicit S-DP schedule stores only its offsets; its
+            // honest footprint is O(k), not the table length
+            CachedSchedule::Sdp(s) => s.k(),
+        }
+    }
+
+    /// O(1) shape keys for cheap certificate revalidation on cache hits
+    /// ([`Certificate::revalidate`]).  The S-DP row count is closed-form:
+    /// every element in `[a_1, n)` is touched by all `k` lanes.
+    fn shape(&self) -> (Family, usize, usize, usize) {
+        match self {
+            CachedSchedule::Mcm(s) => (Family::Mcm, s.num_steps(), s.num_terms(), s.tile),
+            CachedSchedule::Align(s) => (Family::Align, s.num_steps(), s.num_terms(), s.tile),
+            CachedSchedule::Sdp(s) => {
+                (Family::Sdp, s.num_steps(), (s.n - s.a1()) * s.k(), 1)
+            }
+        }
+    }
+
+    fn certify(&self) -> Certificate {
+        match self {
+            CachedSchedule::Mcm(s) => certify::certify_mcm(s),
+            CachedSchedule::Align(s) => certify::certify_align(s),
+            CachedSchedule::Sdp(s) => certify::certify_sdp(s),
         }
     }
 }
@@ -122,8 +152,32 @@ impl CacheableSchedule for AlignSchedule {
     }
 }
 
+impl CacheableSchedule for SdpSchedule {
+    fn terms(&self) -> usize {
+        self.k()
+    }
+    fn into_cached(this: Arc<Self>) -> CachedSchedule {
+        CachedSchedule::Sdp(this)
+    }
+    fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
+        match cached {
+            CachedSchedule::Sdp(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// One cache slot: the schedule, its lazily attached [`Certificate`]
+/// (computed on first serve-path demand, revalidated cheaply on every
+/// hit), and the LRU tick.
+struct Slot {
+    sched: CachedSchedule,
+    cert: Option<Arc<Certificate>>,
+    tick: u64,
+}
+
 struct Inner {
-    map: HashMap<Key, (CachedSchedule, u64)>,
+    map: HashMap<Key, Slot>,
     /// Monotone use counter backing the LRU order.
     tick: u64,
     /// Entry-count bound.
@@ -202,9 +256,9 @@ impl ScheduleCache {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
-            if let Some((sched, used)) = inner.map.get_mut(&key) {
-                *used = tick;
-                let sched = T::from_cached(sched).expect("cache key/schedule kind mismatch");
+            if let Some(slot) = inner.map.get_mut(&key) {
+                slot.tick = tick;
+                let sched = T::from_cached(&slot.sched).expect("cache key/schedule kind mismatch");
                 drop(inner);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return sched;
@@ -216,10 +270,10 @@ impl ScheduleCache {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        if let Some((existing, used)) = inner.map.get_mut(&key) {
+        if let Some(slot) = inner.map.get_mut(&key) {
             // lost the compile race: keep the winner's entry
-            *used = tick;
-            return T::from_cached(existing).expect("cache key/schedule kind mismatch");
+            slot.tick = tick;
+            return T::from_cached(&slot.sched).expect("cache key/schedule kind mismatch");
         }
         // An entry larger than the whole term budget can never fit by
         // evicting others — draining the map for it would just thrash hot
@@ -239,17 +293,66 @@ impl ScheduleCache {
             if let Some(oldest) = inner
                 .map
                 .iter()
-                .min_by_key(|(_, (_, used))| *used)
-                .map(|(k, _)| *k)
+                .min_by_key(|(_, slot)| slot.tick)
+                .map(|(k, _)| k.clone())
             {
-                if let Some((evicted, _)) = inner.map.remove(&oldest) {
-                    inner.total_terms -= evicted.num_terms();
+                if let Some(evicted) = inner.map.remove(&oldest) {
+                    inner.total_terms -= evicted.sched.num_terms();
                 }
             }
         }
         inner.total_terms += new_terms;
-        inner.map.insert(key, (T::into_cached(sched.clone()), tick));
+        inner.map.insert(
+            key,
+            Slot {
+                sched: T::into_cached(sched.clone()),
+                cert: None,
+                tick,
+            },
+        );
         sched
+    }
+
+    /// Get the [`Certificate`] attached to `key`'s slot, computing and
+    /// attaching it on first demand.
+    ///
+    /// * **Hit with attached certificate** — the certificate is
+    ///   re-verified *cheaply* against the live schedule's shape
+    ///   ([`Certificate::revalidate`]); no rehash, no re-analysis.
+    /// * **Hit without certificate** — the full analysis runs once
+    ///   *outside* the lock and the result is attached to the slot.
+    /// * **Evicted / oversized-bypass entries** — the certificate is
+    ///   computed and handed back unattached (correct, just unamortized),
+    ///   mirroring [`ScheduleCache::get_or_insert_with`]'s bypass.
+    pub fn certificate(&self, key: Key, sched: &CachedSchedule) -> Arc<Certificate> {
+        let (family, steps, terms, tile) = sched.shape();
+        {
+            let inner = self.inner.lock().unwrap();
+            if let Some(slot) = inner.map.get(&key) {
+                if let Some(cert) = &slot.cert {
+                    if cert.revalidate(family, steps, terms, tile) {
+                        return cert.clone();
+                    }
+                }
+            }
+        }
+        let cert = Arc::new(sched.certify());
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(slot) = inner.map.get_mut(&key) {
+            match &slot.cert {
+                // lost the certify race: keep the winner's (identical —
+                // certification is deterministic) attached certificate
+                Some(existing) if existing.revalidate(family, steps, terms, tile) => {
+                    existing.clone()
+                }
+                _ => {
+                    slot.cert = Some(cert.clone());
+                    cert
+                }
+            }
+        } else {
+            cert
+        }
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -297,6 +400,55 @@ pub fn align_schedule_tiled(rows: usize, cols: usize, tile: usize) -> Arc<AlignS
     ScheduleCache::global().get_or_insert_with(Key::Align { rows, cols, tile }, || {
         AlignSchedule::compile_tiled(rows, cols, tile)
     })
+}
+
+/// Fetch (or build and cache) the implicit S-DP pipeline schedule for
+/// `(n, offsets)`.  The schedule itself is O(k) memory — it is cached so
+/// its [`Certificate`] amortizes across repeated shapes.
+pub fn sdp_schedule(n: usize, offsets: &[i64]) -> Arc<SdpSchedule> {
+    ScheduleCache::global().get_or_insert_with(
+        Key::Sdp {
+            n,
+            offsets: offsets.to_vec(),
+        },
+        || SdpSchedule::new(n, offsets.to_vec()),
+    )
+}
+
+/// Fetch (or compute and attach) the certificate of the cached
+/// `(n, variant, tile)` MCM schedule — the router's serve-time gate
+/// ([`certify::gate_mcm`]) lands here.
+pub fn mcm_certificate(n: usize, variant: McmVariant, tile: usize) -> Arc<Certificate> {
+    let tile = tile.max(1);
+    let sched = mcm_schedule_tiled(n, variant, tile);
+    ScheduleCache::global().certificate(
+        Key::Mcm { n, variant, tile },
+        &CachedSchedule::Mcm(sched),
+    )
+}
+
+/// Fetch (or compute and attach) the certificate of the cached
+/// `(rows, cols, tile)` alignment wavefront.
+pub fn align_certificate(rows: usize, cols: usize, tile: usize) -> Arc<Certificate> {
+    let tile = tile.max(1);
+    let sched = align_schedule_tiled(rows, cols, tile);
+    ScheduleCache::global().certificate(
+        Key::Align { rows, cols, tile },
+        &CachedSchedule::Align(sched),
+    )
+}
+
+/// Fetch (or compute and attach) the certificate of the `(n, offsets)`
+/// S-DP pipeline schedule.
+pub fn sdp_certificate(n: usize, offsets: &[i64]) -> Arc<Certificate> {
+    let sched = sdp_schedule(n, offsets);
+    ScheduleCache::global().certificate(
+        Key::Sdp {
+            n,
+            offsets: offsets.to_vec(),
+        },
+        &CachedSchedule::Sdp(sched),
+    )
 }
 
 /// Statistics of the process-wide cache (exported into coordinator
@@ -530,6 +682,45 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b) || a.num_terms() == b.num_terms());
         let after = global_stats();
         assert!(after.hits > before.hits, "second fetch must hit");
+    }
+
+    #[test]
+    fn certificate_attaches_once_and_revalidates_on_hit() {
+        let cache = ScheduleCache::with_capacity(8);
+        let sched =
+            cache.get_or_insert_with(key(10), || McmSchedule::compile(10, McmVariant::Corrected));
+        let c1 = cache.certificate(key(10), &CachedSchedule::Mcm(sched.clone()));
+        let c2 = cache.certificate(key(10), &CachedSchedule::Mcm(sched));
+        assert!(
+            Arc::ptr_eq(&c1, &c2),
+            "second fetch must reuse the attached certificate"
+        );
+        assert!(c1.admissible_strict());
+    }
+
+    #[test]
+    fn certificate_for_evicted_entry_is_computed_unattached() {
+        let cache = ScheduleCache::with_capacity(1);
+        let sched =
+            cache.get_or_insert_with(key(10), || McmSchedule::compile(10, McmVariant::Corrected));
+        // evicts n=10
+        cache.get_or_insert_with(key(11), || McmSchedule::compile(11, McmVariant::Corrected));
+        let c = cache.certificate(key(10), &CachedSchedule::Mcm(sched));
+        assert!(c.admissible_strict());
+    }
+
+    #[test]
+    fn sdp_schedules_and_certificates_cache_by_shape() {
+        let a = sdp_schedule(48, &[7, 5, 2]);
+        let b = sdp_schedule(48, &[7, 5, 2]);
+        assert!(Arc::ptr_eq(&a, &b) || (a.n == b.n && a.offsets == b.offsets));
+        let c1 = sdp_certificate(48, &[7, 5, 2]);
+        let c2 = sdp_certificate(48, &[7, 5, 2]);
+        assert_eq!(c1, c2);
+        assert!(c1.admissible_strict());
+        // distinct offsets are a distinct shape and certificate
+        let c3 = sdp_certificate(48, &[7, 6, 5]);
+        assert_ne!(c1.fingerprint, c3.fingerprint);
     }
 
     #[test]

@@ -1,0 +1,881 @@
+//! Schedule certification: one generic dependence IR and race analyzer
+//! for every schedule family (DESIGN.md §10).
+//!
+//! The pipeline bet of the whole system is that a compiled schedule is
+//! hazard-free, so the fused/threaded/pooled executors may sweep a shared
+//! flat arena without per-cell synchronization.  Historically that claim
+//! was discharged by three copy-pasted, family-specific checkers in
+//! [`crate::core::conflict`] that only ran in tests.  This module is the
+//! single analyzer behind all of them:
+//!
+//! * [`DepIr`] — the lowered form: per-step read/write cell sets over the
+//!   flat arena (CSR row layout), superstep tile boundaries, and the
+//!   per-cell finalize map.  [`lower_mcm`], [`lower_align`] and
+//!   [`lower_sdp`] translate the three schedule types; a future schedule
+//!   family only has to lower itself to join the proof.
+//! * [`analyze`] — the paper's memory-conflict cost model (same-address
+//!   collision degrees per substep), generic over the IR.
+//! * [`staleness_hazards`] (RAW), [`waw_hazards`] / [`war_hazards`]
+//!   (same-step write races), and [`fusion_hazards`] (a read inside a
+//!   superstep of an operand finalized in that same superstep, modulo the
+//!   intra-unit sweep-order exemption of blocked wavefronts).
+//! * [`certify`] — runs everything once and condenses the result into a
+//!   [`Certificate`]: a fingerprinted, machine-checkable verdict stored
+//!   in the schedule cache next to the arena
+//!   ([`crate::core::cache::ScheduleCache::certificate`]), re-verified
+//!   cheaply on cache hits, surfaced in coordinator stats
+//!   (`certified` / `cert_rejected`), and **enforced** at the router's
+//!   native dispatch through [`gate_mcm`] / [`gate_align`] / [`gate_sdp`]:
+//!   a refuted schedule is refused with a typed `internal` error instead
+//!   of being executed.
+//!
+//! WAR note: within one step the substep model gathers every operand
+//! before any write lands, and the arenas finalize monotonically, so a
+//! same-step write∩read overlap always implies a RAW staleness hazard as
+//! well — [`war_hazards`] is reported in the certificate for
+//! completeness but can never be the *only* defect.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::core::conflict::{ConflictReport, Hazard};
+use crate::core::schedule::{grid, linear, AlignSchedule, McmSchedule, McmVariant, SdpSchedule};
+use crate::{Error, Result};
+
+/// Schedule family a [`DepIr`] (and its [`Certificate`]) describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    Mcm,
+    Align,
+    Sdp,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Mcm => "mcm",
+            Family::Align => "align",
+            Family::Sdp => "sdp",
+        }
+    }
+}
+
+/// The generic dependence IR: a schedule lowered to per-step read/write
+/// cell sets over a flat arena, plus the metadata the hazard checkers
+/// need (finalize map, superstep boundaries, work-unit ownership).
+///
+/// Layout is columnar CSR, mirroring the schedule arenas themselves: row
+/// `r` writes `writes[r]` and reads the `arity` cells
+/// `reads[r*arity .. (r+1)*arity]`; step `s` owns rows
+/// `step_offsets[s] .. step_offsets[s+1]`; superstep `g` owns steps
+/// `superstep_offsets[g] .. superstep_offsets[g+1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DepIr {
+    pub family: Family,
+    /// Flat arena size; every read/write cell index is `< num_cells`.
+    pub num_cells: usize,
+    /// Reads per row (MCM 2: `l`,`r`; align 3: `up`,`left`,`diag`;
+    /// S-DP 1: `src`).
+    pub arity: usize,
+    /// Superstep tile the schedule was compiled for (1 = untiled).
+    pub tile: usize,
+    /// Absolute index of local step 0.  Zero for the arena families; the
+    /// S-DP pipeline starts at outer step `a_1`, and its hazards carry
+    /// the paper's outer indices.
+    pub step_base: usize,
+    /// CSR: rows per step (`len == num_steps + 1`).
+    pub step_offsets: Vec<u32>,
+    /// CSR: steps per superstep (`len == num_supersteps + 1`; identity
+    /// when every step is its own barrier).
+    pub superstep_offsets: Vec<u32>,
+    /// Cell written by each row.
+    pub writes: Vec<u32>,
+    /// Cells read by each row, row-major, `arity` per row.
+    pub reads: Vec<u32>,
+    /// Absolute step after which each cell is final; `u32::MAX` marks a
+    /// border/initial cell that is final from the start.
+    pub finalize: Vec<u32>,
+    /// Work unit of each row (empty = no intra-unit exemption).  Blocked
+    /// wavefronts set it: a worker sweeps one unit sequentially, so an
+    /// earlier same-unit lane's write is safely visible to later lanes.
+    pub unit_of: Vec<u32>,
+    /// Row that writes each cell (`u32::MAX` = never written).  Only
+    /// consulted when `unit_of` is non-empty.
+    pub writer_of: Vec<u32>,
+}
+
+impl DepIr {
+    pub fn num_steps(&self) -> usize {
+        self.step_offsets.len().saturating_sub(1)
+    }
+
+    pub fn num_supersteps(&self) -> usize {
+        self.superstep_offsets.len().saturating_sub(1)
+    }
+
+    fn step_rows(&self, s: usize) -> std::ops::Range<usize> {
+        self.step_offsets[s] as usize..self.step_offsets[s + 1] as usize
+    }
+
+    fn superstep_steps(&self, g: usize) -> std::ops::Range<usize> {
+        self.superstep_offsets[g] as usize..self.superstep_offsets[g + 1] as usize
+    }
+
+    /// Structural well-formedness: CSR monotonicity and coverage, index
+    /// bounds, column lengths.  A mutated or truncated schedule fails
+    /// here and is refuted without running (or crashing) the analyzers.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.tile == 0 {
+            return Err("tile must be >= 1".into());
+        }
+        if self.step_offsets.is_empty() || self.step_offsets[0] != 0 {
+            return Err("step_offsets must start at 0".into());
+        }
+        if self.step_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("step_offsets must be monotone".into());
+        }
+        if *self.step_offsets.last().unwrap() as usize != self.writes.len() {
+            return Err("step_offsets must cover every row".into());
+        }
+        if self.superstep_offsets.is_empty() || self.superstep_offsets[0] != 0 {
+            return Err("superstep_offsets must start at 0".into());
+        }
+        if self.superstep_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("superstep_offsets must be monotone".into());
+        }
+        if *self.superstep_offsets.last().unwrap() as usize != self.num_steps() {
+            return Err("superstep_offsets must cover every step".into());
+        }
+        if self.reads.len() != self.writes.len() * self.arity {
+            return Err("reads must hold arity cells per row".into());
+        }
+        if self.finalize.len() != self.num_cells {
+            return Err("finalize must cover every cell".into());
+        }
+        let cells = self.num_cells as u32;
+        if self.writes.iter().chain(&self.reads).any(|&c| c >= cells) {
+            return Err("cell index out of arena bounds".into());
+        }
+        if !self.unit_of.is_empty() {
+            if self.unit_of.len() != self.writes.len() {
+                return Err("unit_of must cover every row".into());
+            }
+            if self.writer_of.len() != self.num_cells {
+                return Err("writer_of must cover every cell".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Worst same-address collision degree of one substep's address list
+/// (1 = conflict-free).  Generic over the address width so the flat
+/// schedule arena's `u32` columns and test fixtures' `usize` lists share
+/// one implementation.
+pub(crate) fn collision_degree<T: Copy + Eq + std::hash::Hash>(addrs: &[T]) -> usize {
+    let mut seen: HashMap<T, usize> = HashMap::with_capacity(addrs.len());
+    let mut worst = 1;
+    for &a in addrs {
+        let c = seen.entry(a).or_insert(0);
+        *c += 1;
+        worst = worst.max(*c);
+    }
+    worst
+}
+
+/// The paper's memory-conflict cost model over the generic IR: per step,
+/// each read column and then the write column is a substep; the step's
+/// serialization factor is its worst substep collision degree (§III-A).
+pub fn analyze(ir: &DepIr) -> ConflictReport {
+    let mut report = ConflictReport {
+        steps: ir.num_steps(),
+        ..Default::default()
+    };
+    let mut col: Vec<u32> = Vec::new();
+    for s in 0..ir.num_steps() {
+        let rows = ir.step_rows(s);
+        let mut step_factor = 1usize;
+        for c in 0..=ir.arity {
+            col.clear();
+            if c < ir.arity {
+                col.extend(rows.clone().map(|r| ir.reads[r * ir.arity + c]));
+            } else {
+                col.extend_from_slice(&ir.writes[rows.clone()]);
+            }
+            let degree = collision_degree(&col);
+            if degree > 1 {
+                report.conflicted_substeps += 1;
+            }
+            report.max_degree = report.max_degree.max(degree);
+            step_factor = step_factor.max(degree);
+        }
+        report.serialized_cycles += step_factor as u64;
+    }
+    report
+}
+
+/// RAW staleness hazards: a row reads a cell that is only final at (or
+/// after) the row's own step.  Empty ⇔ every read sees a final value.
+/// Hazard steps are absolute (`step_base + local`).
+pub fn staleness_hazards(ir: &DepIr) -> Vec<Hazard> {
+    let mut out = Vec::new();
+    for s in 0..ir.num_steps() {
+        let abs = ir.step_base + s;
+        for r in ir.step_rows(s) {
+            for c in 0..ir.arity {
+                let dep = ir.reads[r * ir.arity + c] as usize;
+                let fin = ir.finalize[dep];
+                if fin != u32::MAX && fin as usize >= abs {
+                    out.push(Hazard {
+                        step: abs,
+                        reader: ir.writes[r] as usize,
+                        operand: dep,
+                        finalized: fin as usize,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Superstep fusion hazards (DESIGN.md §7): a pooled executor sweeps a
+/// whole superstep between barriers, so every operand must finalize
+/// **before the superstep's first step** — unless the operand was
+/// written by an *earlier row of the same work unit* in the same step
+/// (the blocked wavefront's sequential intra-unit sweep makes that read
+/// sequentially consistent on one worker).  Empty ⇔ tile fusion is
+/// sound.  With identity supersteps and no units this degenerates to
+/// [`staleness_hazards`].
+pub fn fusion_hazards(ir: &DepIr) -> Vec<Hazard> {
+    let mut out = Vec::new();
+    for g in 0..ir.num_supersteps() {
+        let steps = ir.superstep_steps(g);
+        let fence = ir.step_base + steps.start;
+        for s in steps {
+            let abs = ir.step_base + s;
+            for r in ir.step_rows(s) {
+                for c in 0..ir.arity {
+                    let dep = ir.reads[r * ir.arity + c] as usize;
+                    let fin = ir.finalize[dep];
+                    if fin == u32::MAX {
+                        continue; // border/initial cell, final from the start
+                    }
+                    let fin = fin as usize;
+                    if fin < fence {
+                        continue; // finalized before this superstep's barrier
+                    }
+                    if !ir.unit_of.is_empty() && fin == abs {
+                        let w = ir.writer_of[dep];
+                        if w != u32::MAX {
+                            let wp = w as usize;
+                            if ir.unit_of[wp] == ir.unit_of[r] && wp < r {
+                                continue; // earlier lane of the same unit
+                            }
+                        }
+                    }
+                    out.push(Hazard {
+                        step: abs,
+                        reader: ir.writes[r] as usize,
+                        operand: dep,
+                        finalized: fin,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// WAW count: rows within one step writing the same cell.  Every arena
+/// family guarantees zero by construction (Theorem 1 / wavefront
+/// distinctness / S-DP lane disjointness); a duplicate-target mutation
+/// trips this.
+pub fn waw_hazards(ir: &DepIr) -> usize {
+    let mut seen: HashSet<u32> = HashSet::new();
+    let mut count = 0;
+    for s in 0..ir.num_steps() {
+        seen.clear();
+        for r in ir.step_rows(s) {
+            if !seen.insert(ir.writes[r]) {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+/// WAR/overlap count: reads within one step of a cell that the same step
+/// also writes.  Subsumed by RAW in a monotone-finalize arena (see the
+/// module docs) but reported for completeness.
+pub fn war_hazards(ir: &DepIr) -> usize {
+    let mut written: HashSet<u32> = HashSet::new();
+    let mut count = 0;
+    for s in 0..ir.num_steps() {
+        written.clear();
+        written.extend(ir.writes[ir.step_rows(s)].iter().copied());
+        for r in ir.step_rows(s) {
+            for c in 0..ir.arity {
+                if written.contains(&ir.reads[r * ir.arity + c]) {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Drop exact-duplicate hazards, preserving first-occurrence order.
+/// Legit schedules rarely duplicate; mutated ones (duplicated targets)
+/// would otherwise inflate the certificate's counts.
+pub fn dedup_hazards(hazards: Vec<Hazard>) -> Vec<Hazard> {
+    let mut seen: HashSet<Hazard> = HashSet::with_capacity(hazards.len());
+    hazards.into_iter().filter(|h| seen.insert(*h)).collect()
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+
+    fn word(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn column(&mut self, vs: &[u32]) {
+        self.word(vs.len() as u64);
+        for &v in vs {
+            for b in v.to_le_bytes() {
+                self.byte(b);
+            }
+        }
+    }
+}
+
+/// FNV-1a fingerprint of the whole IR (zero-dependency, deterministic,
+/// platform-independent).  Any change to the schedule's structure —
+/// arena order, CSR boundaries, finalize map, tiling — changes it.
+pub fn fingerprint(ir: &DepIr) -> u64 {
+    let mut h = Fnv::new();
+    h.byte(match ir.family {
+        Family::Mcm => 1,
+        Family::Align => 2,
+        Family::Sdp => 3,
+    });
+    h.word(ir.num_cells as u64);
+    h.word(ir.arity as u64);
+    h.word(ir.tile as u64);
+    h.word(ir.step_base as u64);
+    h.column(&ir.step_offsets);
+    h.column(&ir.superstep_offsets);
+    h.column(&ir.writes);
+    h.column(&ir.reads);
+    h.column(&ir.finalize);
+    h.column(&ir.unit_of);
+    h.column(&ir.writer_of);
+    h.0
+}
+
+/// The machine-checkable verdict over one schedule: plain data, bit-stable
+/// across threads and cache round-trips (no map iteration order leaks into
+/// any field), cached next to the arena it certifies.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Certificate {
+    pub family: Family,
+    /// [`fingerprint`] of the lowered IR.
+    pub fingerprint: u64,
+    /// Schedule shape at certification time (cheap revalidation keys).
+    pub steps: usize,
+    pub terms: usize,
+    pub tile: usize,
+    /// Structural validity ([`DepIr::validate`]); when false every hazard
+    /// count is 0-by-default and the certificate is inadmissible.
+    pub well_formed: bool,
+    /// Conflict-model summary ([`analyze`]).
+    pub max_degree: usize,
+    pub conflicted_substeps: usize,
+    /// Deduplicated hazard counts.
+    pub raw_hazards: usize,
+    pub war_hazards: usize,
+    pub waw_hazards: usize,
+    pub fusion_hazards: usize,
+    /// Tile proof: every superstep may be swept between two barriers.
+    pub fusion_safe: bool,
+}
+
+impl Certificate {
+    /// Admission for hazard-free execution (corrected MCM, wavefronts,
+    /// S-DP): fresh reads, exclusive writes, and the tile proof.
+    pub fn admissible_strict(&self) -> bool {
+        self.well_formed
+            && self.raw_hazards == 0
+            && self.war_hazards == 0
+            && self.waw_hazards == 0
+            && self.fusion_safe
+    }
+
+    /// Admission for the paper-faithful MCM contract (DESIGN.md §1.1):
+    /// stale reads are the documented semantics, but writes must still be
+    /// exclusive — a faithful schedule that also raced its writes would
+    /// not reproduce the paper's deterministic wrong answers.
+    pub fn admissible_faithful(&self) -> bool {
+        self.well_formed && self.waw_hazards == 0
+    }
+
+    /// Cheap cache-hit revalidation: the certificate still describes a
+    /// schedule of this shape.  Shape keys (family, steps, terms, tile)
+    /// are O(1) to recompute from a live schedule; a full re-fingerprint
+    /// is only paid when this check fails (never, absent memory
+    /// corruption — the cache stores schedules behind immutable `Arc`s).
+    pub fn revalidate(&self, family: Family, steps: usize, terms: usize, tile: usize) -> bool {
+        self.family == family && self.steps == steps && self.terms == terms && self.tile == tile
+    }
+}
+
+/// Run the full analysis once and condense it into a [`Certificate`].
+/// Malformed IRs short-circuit: `well_formed == false`, no analyzer runs
+/// (they index by the very offsets validation just refuted).
+pub fn certify(ir: &DepIr) -> Certificate {
+    let fp = fingerprint(ir);
+    let (steps, terms) = (ir.num_steps(), ir.writes.len());
+    if ir.validate().is_err() {
+        return Certificate {
+            family: ir.family,
+            fingerprint: fp,
+            steps,
+            terms,
+            tile: ir.tile,
+            well_formed: false,
+            max_degree: 0,
+            conflicted_substeps: 0,
+            raw_hazards: 0,
+            war_hazards: 0,
+            waw_hazards: 0,
+            fusion_hazards: 0,
+            fusion_safe: false,
+        };
+    }
+    let report = analyze(ir);
+    let raw = dedup_hazards(staleness_hazards(ir)).len();
+    let fusion = dedup_hazards(fusion_hazards(ir)).len();
+    Certificate {
+        family: ir.family,
+        fingerprint: fp,
+        steps,
+        terms,
+        tile: ir.tile,
+        well_formed: true,
+        max_degree: report.max_degree,
+        conflicted_substeps: report.conflicted_substeps,
+        raw_hazards: raw,
+        war_hazards: war_hazards(ir),
+        waw_hazards: waw_hazards(ir),
+        fusion_hazards: fusion,
+        fusion_safe: fusion == 0,
+    }
+}
+
+/// Lower an MCM pipeline schedule (either variant, any tile).
+pub fn lower_mcm(sched: &McmSchedule) -> DepIr {
+    let num_cells = linear::num_cells(sched.n);
+    let mut reads = Vec::with_capacity(sched.num_terms() * 2);
+    for (&l, &r) in sched.l.iter().zip(&sched.r) {
+        reads.push(l);
+        reads.push(r);
+    }
+    let finalize = (0..num_cells)
+        .map(|x| sched.finalize_step(x).map_or(u32::MAX, |s| s as u32))
+        .collect();
+    DepIr {
+        family: Family::Mcm,
+        num_cells,
+        arity: 2,
+        tile: sched.tile,
+        step_base: 0,
+        step_offsets: sched.step_offsets.clone(),
+        superstep_offsets: sched.superstep_offsets.clone(),
+        writes: sched.tgt.clone(),
+        reads,
+        finalize,
+        unit_of: Vec::new(),
+        writer_of: Vec::new(),
+    }
+}
+
+/// Lower an alignment wavefront schedule (untiled or blocked).  Each
+/// (block-)anti-diagonal is one barrier, so supersteps are the identity;
+/// blocked schedules carry the unit map for the intra-unit exemption.
+pub fn lower_align(sched: &AlignSchedule) -> DepIr {
+    let num_cells = grid::num_cells(sched.rows, sched.cols);
+    let terms = sched.num_terms();
+    let mut reads = Vec::with_capacity(terms * 3);
+    for ((&up, &left), &diag) in sched.up.iter().zip(&sched.left).zip(&sched.diag) {
+        reads.push(up);
+        reads.push(left);
+        reads.push(diag);
+    }
+    let finalize = (0..num_cells)
+        .map(|x| sched.finalize_step(x).map_or(u32::MAX, |s| s as u32))
+        .collect();
+    let steps = sched.num_steps();
+    let (unit_of, writer_of) = if sched.tile > 1 {
+        let mut writer_of = vec![u32::MAX; num_cells];
+        for (p, &t) in sched.tgt.iter().enumerate() {
+            writer_of[t as usize] = p as u32;
+        }
+        let mut unit_of = vec![0u32; terms];
+        for u in 0..sched.unit_offsets.len() - 1 {
+            for p in sched.unit_range(u) {
+                unit_of[p] = u as u32;
+            }
+        }
+        (unit_of, writer_of)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    DepIr {
+        family: Family::Align,
+        num_cells,
+        arity: 3,
+        tile: sched.tile,
+        step_base: 0,
+        step_offsets: sched.step_offsets.clone(),
+        superstep_offsets: (0..=steps as u32).collect(),
+        writes: sched.tgt.clone(),
+        reads,
+        finalize,
+        unit_of,
+        writer_of,
+    }
+}
+
+/// Lower the implicit S-DP pipeline schedule by materializing its access
+/// lists once — `O(n·k)` rows, amortized by the certificate cache keyed
+/// on the `(n, offsets)` shape.  `step_base = a_1` keeps hazard steps in
+/// the paper's outer-index space.
+pub fn lower_sdp(sched: &SdpSchedule) -> DepIr {
+    let mut step_offsets = vec![0u32];
+    let mut writes = Vec::new();
+    let mut reads = Vec::new();
+    for i in sched.step_range() {
+        for a in sched.step(i) {
+            writes.push(a.tgt as u32);
+            reads.push(a.src as u32);
+        }
+        step_offsets.push(writes.len() as u32);
+    }
+    let steps = step_offsets.len() - 1;
+    let finalize = (0..sched.n)
+        .map(|x| sched.finalize_step(x).map_or(u32::MAX, |s| s as u32))
+        .collect();
+    DepIr {
+        family: Family::Sdp,
+        num_cells: sched.n,
+        arity: 1,
+        tile: 1,
+        step_base: sched.a1(),
+        step_offsets,
+        superstep_offsets: (0..=steps as u32).collect(),
+        writes,
+        reads,
+        finalize,
+        unit_of: Vec::new(),
+        writer_of: Vec::new(),
+    }
+}
+
+/// Lower + certify an MCM schedule.
+pub fn certify_mcm(sched: &McmSchedule) -> Certificate {
+    certify(&lower_mcm(sched))
+}
+
+/// Lower + certify an alignment wavefront schedule.
+pub fn certify_align(sched: &AlignSchedule) -> Certificate {
+    certify(&lower_align(sched))
+}
+
+/// Lower + certify an S-DP pipeline schedule.
+pub fn certify_sdp(sched: &SdpSchedule) -> Certificate {
+    certify(&lower_sdp(sched))
+}
+
+// Serve-path counters behind the coordinator stats snapshot.  Relaxed is
+// sufficient: they are monotone event counts, read only by the stats
+// probe — no ordering couples them to the gated solve.
+static CERTIFIED: AtomicU64 = AtomicU64::new(0);
+static CERT_REJECTED: AtomicU64 = AtomicU64::new(0);
+
+/// Point-in-time certification counters (coordinator stats snapshot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CertifyStats {
+    /// Native solves served under a verified, admissible certificate.
+    pub certified: u64,
+    /// Native solves refused because their schedule's certificate was
+    /// refuted (typed `internal` error on the wire).
+    pub cert_rejected: u64,
+}
+
+pub fn stats() -> CertifyStats {
+    CertifyStats {
+        certified: CERTIFIED.load(Ordering::Relaxed),
+        cert_rejected: CERT_REJECTED.load(Ordering::Relaxed),
+    }
+}
+
+fn admit(cert: &Certificate, ok: bool) -> Result<()> {
+    if ok {
+        CERTIFIED.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    } else {
+        CERT_REJECTED.fetch_add(1, Ordering::Relaxed);
+        Err(Error::Internal(format!(
+            "{} schedule refused by certifier (fingerprint {:016x}): well_formed={} raw={} war={} waw={} fusion={}",
+            cert.family.name(),
+            cert.fingerprint,
+            cert.well_formed,
+            cert.raw_hazards,
+            cert.war_hazards,
+            cert.waw_hazards,
+            cert.fusion_hazards,
+        )))
+    }
+}
+
+/// Serve-time gate for a native MCM solve: fetch (or compute) the cached
+/// certificate of the exact `(n, variant, tile)` schedule the executor
+/// will run and enforce the variant's admission contract.
+pub fn gate_mcm(n: usize, variant: McmVariant, tile: usize) -> Result<()> {
+    let cert = crate::core::cache::mcm_certificate(n, variant, tile);
+    let ok = match variant {
+        McmVariant::Corrected => cert.admissible_strict(),
+        McmVariant::PaperFaithful => cert.admissible_faithful(),
+    };
+    admit(&cert, ok)
+}
+
+/// Serve-time gate for a native alignment solve (`tile = 1` for the
+/// seq/fused routes, the block tile for the pooled route).
+pub fn gate_align(rows: usize, cols: usize, tile: usize) -> Result<()> {
+    let cert = crate::core::cache::align_certificate(rows, cols, tile);
+    let ok = cert.admissible_strict();
+    admit(&cert, ok)
+}
+
+/// Serve-time gate for a native S-DP solve.
+pub fn gate_sdp(n: usize, offsets: &[i64]) -> Result<()> {
+    let cert = crate::core::cache::sdp_certificate(n, offsets);
+    let ok = cert.admissible_strict();
+    admit(&cert, ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant, SdpSchedule};
+
+    fn corrected_ir(n: usize) -> DepIr {
+        lower_mcm(&McmSchedule::compile(n, McmVariant::Corrected))
+    }
+
+    #[test]
+    fn compiled_schedules_all_certify() {
+        for n in 2..12 {
+            let c = certify(&corrected_ir(n));
+            assert!(c.well_formed && c.admissible_strict(), "n={n}: {c:?}");
+        }
+        let c = certify(&lower_mcm(&McmSchedule::compile_tiled(
+            16,
+            McmVariant::Corrected,
+            4,
+        )));
+        assert!(c.admissible_strict(), "tiled mcm: {c:?}");
+        let c = certify(&lower_align(&AlignSchedule::compile(9, 7)));
+        assert!(c.admissible_strict(), "align: {c:?}");
+        let c = certify(&lower_align(&AlignSchedule::compile_tiled(9, 7, 3)));
+        assert!(c.admissible_strict(), "tiled align: {c:?}");
+        let c = certify(&lower_sdp(&SdpSchedule::new(64, vec![9, 5, 1])));
+        assert!(c.admissible_strict(), "sdp: {c:?}");
+    }
+
+    #[test]
+    fn faithful_schedule_is_waw_clean_but_raw_dirty() {
+        let c = certify(&lower_mcm(&McmSchedule::compile(6, McmVariant::PaperFaithful)));
+        assert!(c.well_formed);
+        assert!(c.raw_hazards > 0, "{c:?}");
+        assert_eq!(c.waw_hazards, 0);
+        assert!(c.admissible_faithful());
+        assert!(!c.admissible_strict());
+    }
+
+    #[test]
+    fn corpus_swapped_entries_across_steps_refuted() {
+        // swap a late row (reading late-finalized interior cells) into
+        // step 0: its reads become stale, the certifier must refute
+        let mut ir = corrected_ir(10);
+        let last = ir.num_steps() - 1;
+        let victim = ir
+            .step_rows(last)
+            .find(|&r| (0..ir.arity).any(|c| ir.reads[r * ir.arity + c] >= 10))
+            .expect("a late row reads an interior cell");
+        let r0 = ir.step_rows(0).start;
+        ir.writes.swap(r0, victim);
+        for c in 0..ir.arity {
+            ir.reads.swap(r0 * ir.arity + c, victim * ir.arity + c);
+        }
+        let cert = certify(&ir);
+        assert!(cert.well_formed, "the swap keeps the IR well-formed");
+        assert!(cert.raw_hazards > 0, "{cert:?}");
+        assert!(!cert.admissible_strict());
+    }
+
+    #[test]
+    fn corpus_naive_superstep_grouping_refuted() {
+        // regrouping an untiled schedule into supersteps of 4 without the
+        // quantized re-compile breaks the tile proof
+        let mut ir = corrected_ir(8);
+        let steps = ir.num_steps();
+        ir.tile = 4;
+        ir.superstep_offsets = (0..steps as u32)
+            .step_by(4)
+            .chain(std::iter::once(steps as u32))
+            .collect();
+        let cert = certify(&ir);
+        assert!(cert.well_formed);
+        assert!(cert.fusion_hazards > 0, "{cert:?}");
+        assert!(!cert.fusion_safe);
+        assert!(!cert.admissible_strict());
+    }
+
+    #[test]
+    fn corpus_duplicate_write_target_refuted() {
+        let mut ir = corrected_ir(8);
+        let s = (0..ir.num_steps())
+            .find(|&s| ir.step_rows(s).len() >= 2)
+            .expect("a step with two rows");
+        let rows = ir.step_rows(s);
+        ir.writes[rows.start + 1] = ir.writes[rows.start];
+        let cert = certify(&ir);
+        assert!(cert.well_formed);
+        assert!(cert.waw_hazards > 0, "{cert:?}");
+        assert!(!cert.admissible_strict());
+    }
+
+    #[test]
+    fn corpus_truncated_csr_refuted() {
+        let mut ir = corrected_ir(8);
+        ir.step_offsets.pop();
+        ir.superstep_offsets.pop();
+        let cert = certify(&ir);
+        assert!(!cert.well_formed);
+        assert!(!cert.admissible_strict());
+        assert!(!cert.admissible_faithful());
+    }
+
+    #[test]
+    fn certificates_bit_stable_across_threads_and_cache_round_trips() {
+        let sched = McmSchedule::compile_tiled(20, McmVariant::Corrected, 4);
+        let base = certify_mcm(&sched);
+        for threads in [1usize, 2, 8] {
+            let mut certs: Vec<Option<Certificate>> = vec![None; threads];
+            std::thread::scope(|scope| {
+                for slot in certs.iter_mut() {
+                    let sched = &sched;
+                    scope.spawn(move || {
+                        *slot = Some(certify_mcm(sched));
+                    });
+                }
+            });
+            for c in certs {
+                assert_eq!(c.unwrap(), base, "threads={threads}");
+            }
+        }
+        // cache round-trips hand back the bit-identical certificate
+        let c1 = crate::core::cache::mcm_certificate(20, McmVariant::Corrected, 4);
+        let c2 = crate::core::cache::mcm_certificate(20, McmVariant::Corrected, 4);
+        assert_eq!(*c1, base);
+        assert_eq!(*c2, base);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_schedules() {
+        let a = fingerprint(&corrected_ir(8));
+        let b = fingerprint(&corrected_ir(9));
+        let c = fingerprint(&lower_mcm(&McmSchedule::compile(8, McmVariant::PaperFaithful)));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn empty_schedule_certifies_with_unit_mean_factor() {
+        // n=1: one matrix, nothing to combine — zero steps must not
+        // divide by zero or refute
+        let ir = corrected_ir(1);
+        let report = analyze(&ir);
+        assert_eq!(report.steps, 0);
+        assert_eq!(report.mean_factor(), 1.0);
+        let cert = certify(&ir);
+        assert!(cert.well_formed);
+        assert_eq!(cert.raw_hazards, 0);
+        assert!(cert.admissible_strict());
+    }
+
+    #[test]
+    fn identical_hazards_dedupe_in_certificates() {
+        let h = Hazard {
+            step: 3,
+            reader: 9,
+            operand: 8,
+            finalized: 3,
+        };
+        let v = dedup_hazards(vec![h, h, Hazard { step: 4, ..h }, h]);
+        assert_eq!(v.len(), 2);
+    }
+
+    #[test]
+    fn sdp_ir_uses_absolute_outer_steps() {
+        let s = SdpSchedule::new(16, vec![3, 1]);
+        let ir = lower_sdp(&s);
+        assert_eq!(ir.step_base, 3);
+        assert_eq!(ir.num_steps(), s.num_steps());
+        assert!(staleness_hazards(&ir).is_empty());
+    }
+
+    #[test]
+    fn gates_certify_all_families_and_count() {
+        let before = stats();
+        gate_mcm(12, McmVariant::Corrected, 1).unwrap();
+        gate_mcm(12, McmVariant::Corrected, 4).unwrap();
+        gate_mcm(6, McmVariant::PaperFaithful, 1).unwrap();
+        gate_align(9, 7, 1).unwrap();
+        gate_align(9, 7, 3).unwrap();
+        gate_sdp(64, &[9, 5, 1]).unwrap();
+        let after = stats();
+        assert!(after.certified >= before.certified + 6);
+    }
+
+    #[test]
+    fn refuted_certificate_yields_internal_error_and_counts() {
+        let mut ir = corrected_ir(8);
+        ir.step_offsets.pop();
+        ir.superstep_offsets.pop();
+        let cert = certify(&ir);
+        let before = stats();
+        let err = admit(&cert, cert.admissible_strict()).unwrap_err();
+        match err {
+            Error::Internal(msg) => assert!(msg.contains("refused"), "{msg}"),
+            other => panic!("expected Error::Internal, got {other:?}"),
+        }
+        assert!(stats().cert_rejected > before.cert_rejected);
+    }
+}

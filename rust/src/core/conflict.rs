@@ -5,12 +5,18 @@
 //! The paper's GPU cost model serializes threads that touch the *same*
 //! address within one substep; the degree of the worst collision is the
 //! step's serialization factor (§III-A: `q − p + 1` for a run of
-//! consecutive offsets).  This module computes those factors exactly from
-//! compiled schedules — they feed the SIMT simulator and the
+//! consecutive offsets).  Those factors feed the SIMT simulator and the
 //! conflict-ablation benchmark.
+//!
+//! Since the schedule-certifier refactor (DESIGN.md §10) this module is a
+//! **thin family-specific facade**: every checker lowers its schedule to
+//! the generic dependence IR of [`crate::core::certify`] and runs the one
+//! shared analyzer there.  The wrappers keep the historical API (and its
+//! exact hazard ordering) stable for tests, benches, and the simulator;
+//! the serving path uses [`crate::core::certify`] directly through cached
+//! [`crate::core::certify::Certificate`]s.
 
-use std::collections::HashMap;
-
+use crate::core::certify;
 use crate::core::schedule::{AlignSchedule, McmSchedule, SdpSchedule};
 
 /// Conflict report for one schedule.
@@ -29,6 +35,8 @@ pub struct ConflictReport {
 
 impl ConflictReport {
     /// Mean serialization factor per step (1.0 = fully conflict-free).
+    /// An empty schedule (zero steps) is vacuously conflict-free: 1.0,
+    /// never a division by zero.
     pub fn mean_factor(&self) -> f64 {
         if self.steps == 0 {
             1.0
@@ -40,7 +48,7 @@ impl ConflictReport {
 
 /// A staleness hazard: `reader` consumed `operand` at `step`, but `operand`
 /// was only final after `finalized` ≥ `step`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Hazard {
     pub step: usize,
     pub reader: usize,
@@ -48,71 +56,22 @@ pub struct Hazard {
     pub finalized: usize,
 }
 
-/// Worst same-address collision degree of one substep's address list
-/// (1 = conflict-free).  Generic over the address width so the flat
-/// schedule arena's zero-copy `&[u32]` columns and the S-DP analyzer's
-/// `usize` lists share one implementation.
-fn collision_degree<T: Copy + Eq + std::hash::Hash>(addrs: &[T]) -> usize {
-    let mut seen: HashMap<T, usize> = HashMap::with_capacity(addrs.len());
-    let mut worst = 1;
-    for &a in addrs {
-        let c = seen.entry(a).or_insert(0);
-        *c += 1;
-        worst = worst.max(*c);
-    }
-    worst
-}
-
 /// Analyze an MCM schedule's substep accesses (substep 1 = left reads,
 /// substep 2 = right reads, substep 4 = writes), per Fig. 8.
 pub fn analyze_mcm(sched: &McmSchedule) -> ConflictReport {
-    let mut report = ConflictReport {
-        steps: sched.num_steps(),
-        ..Default::default()
-    };
-    for view in sched.steps() {
-        let mut step_factor = 1usize;
-        for addrs in [view.l, view.r, view.tgt] {
-            let degree = collision_degree(addrs);
-            if degree > 1 {
-                report.conflicted_substeps += 1;
-            }
-            report.max_degree = report.max_degree.max(degree);
-            step_factor = step_factor.max(degree);
-        }
-        report.serialized_cycles += step_factor as u64;
-    }
-    report
+    certify::analyze(&certify::lower_mcm(sched))
 }
 
 /// Theorem 1 check: true iff no substep of the schedule has two threads on
 /// one address.
 pub fn mcm_conflict_free(sched: &McmSchedule) -> bool {
-    let r = analyze_mcm(sched);
-    r.conflicted_substeps == 0
+    analyze_mcm(sched).conflicted_substeps == 0
 }
 
 /// Staleness hazards of an MCM schedule (empty ⇔ every read sees a final
 /// value; the published schedule fails this for n ≥ 4).
 pub fn mcm_hazards(sched: &McmSchedule) -> Vec<Hazard> {
-    let mut out = Vec::new();
-    for (s, view) in sched.steps().enumerate() {
-        for e in view.iter() {
-            for dep in [e.l as usize, e.r as usize] {
-                if let Some(fin) = sched.finalize_step(dep) {
-                    if fin >= s {
-                        out.push(Hazard {
-                            step: s,
-                            reader: e.tgt as usize,
-                            operand: dep,
-                            finalized: fin,
-                        });
-                    }
-                }
-            }
-        }
-    }
-    out
+    certify::staleness_hazards(&certify::lower_mcm(sched))
 }
 
 /// Superstep tile-fusion hazards of an MCM schedule (DESIGN.md §7): a
@@ -124,29 +83,7 @@ pub fn mcm_hazards(sched: &McmSchedule) -> Vec<Hazard> {
 /// schedule violates it (tested below) — which is exactly why the tiled
 /// executors refuse schedules this checker rejects.
 pub fn mcm_superstep_hazards(sched: &McmSchedule) -> Vec<Hazard> {
-    let mut out = Vec::new();
-    for g in 0..sched.num_supersteps() {
-        let steps = sched.superstep_step_range(g);
-        let superstep_start = steps.start;
-        for s in steps {
-            let view = sched.step_view(s);
-            for e in view.iter() {
-                for dep in [e.l as usize, e.r as usize] {
-                    if let Some(fin) = sched.finalize_step(dep) {
-                        if fin >= superstep_start {
-                            out.push(Hazard {
-                                step: s,
-                                reader: e.tgt as usize,
-                                operand: dep,
-                                finalized: fin,
-                            });
-                        }
-                    }
-                }
-            }
-        }
-    }
-    out
+    certify::fusion_hazards(&certify::lower_mcm(sched))
 }
 
 /// True iff every superstep of the schedule may be fused (swept with one
@@ -161,23 +98,7 @@ pub fn mcm_superstep_fusion_safe(sched: &McmSchedule) -> bool {
 /// substep's address list is collision-free — the report should always
 /// come back with `max_degree == 1` (property-tested below).
 pub fn analyze_align(sched: &AlignSchedule) -> ConflictReport {
-    let mut report = ConflictReport {
-        steps: sched.num_steps(),
-        ..Default::default()
-    };
-    for view in sched.steps() {
-        let mut step_factor = 1usize;
-        for addrs in [view.up, view.left, view.diag, view.tgt] {
-            let degree = collision_degree(addrs);
-            if degree > 1 {
-                report.conflicted_substeps += 1;
-            }
-            report.max_degree = report.max_degree.max(degree);
-            step_factor = step_factor.max(degree);
-        }
-        report.serialized_cycles += step_factor as u64;
-    }
-    report
+    certify::analyze(&certify::lower_align(sched))
 }
 
 /// Theorem-1 check for the alignment wavefront.
@@ -190,24 +111,7 @@ pub fn align_conflict_free(sched: &AlignSchedule) -> bool {
 /// as a runtime checker so the property test exercises the proof, like
 /// [`sdp_hazards`]).
 pub fn align_hazards(sched: &AlignSchedule) -> Vec<Hazard> {
-    let mut out = Vec::new();
-    for (s, view) in sched.steps().enumerate() {
-        for lane in 0..view.len() {
-            for dep in [view.up[lane], view.left[lane], view.diag[lane]] {
-                if let Some(fin) = sched.finalize_step(dep as usize) {
-                    if fin >= s {
-                        out.push(Hazard {
-                            step: s,
-                            reader: view.tgt[lane] as usize,
-                            operand: dep as usize,
-                            finalized: fin,
-                        });
-                    }
-                }
-            }
-        }
-    }
-    out
+    certify::staleness_hazards(&certify::lower_align(sched))
 }
 
 /// Tile-fusion hazards of a *blocked* alignment wavefront (DESIGN.md §7).
@@ -220,48 +124,7 @@ pub fn align_hazards(sched: &AlignSchedule) -> Vec<Hazard> {
 /// sequentially-consistent on one worker.  Anything else is a hazard.
 /// For `tile == 1` (no units) this degenerates to [`align_hazards`].
 pub fn align_tile_hazards(sched: &AlignSchedule) -> Vec<Hazard> {
-    if sched.tile == 1 {
-        return align_hazards(sched);
-    }
-    let ncells = crate::core::schedule::grid::num_cells(sched.rows, sched.cols);
-    // lane position and unit of every interior cell
-    let mut pos = vec![u32::MAX; ncells];
-    for (p, &t) in sched.tgt.iter().enumerate() {
-        pos[t as usize] = p as u32;
-    }
-    let num_units = sched.unit_offsets.len() - 1;
-    let mut unit_of = vec![0u32; sched.num_terms()];
-    for u in 0..num_units {
-        for p in sched.unit_range(u) {
-            unit_of[p] = u as u32;
-        }
-    }
-    let mut out = Vec::new();
-    for (s, view) in sched.steps().enumerate() {
-        let base = sched.step_range(s).start;
-        for lane in 0..view.len() {
-            let p = base + lane;
-            for dep in [view.up[lane], view.left[lane], view.diag[lane]] {
-                let Some(fin) = sched.finalize_step(dep as usize) else {
-                    continue; // border cell, final from the start
-                };
-                if fin < s {
-                    continue; // earlier block-diagonal
-                }
-                let dp = pos[dep as usize] as usize;
-                if fin == s && unit_of[dp] == unit_of[p] && dp < p {
-                    continue; // earlier lane of the same unit
-                }
-                out.push(Hazard {
-                    step: s,
-                    reader: view.tgt[lane] as usize,
-                    operand: dep as usize,
-                    finalized: fin,
-                });
-            }
-        }
-    }
-    out
+    certify::fusion_hazards(&certify::lower_align(sched))
 }
 
 /// True iff the blocked wavefront may run one barrier per block-diagonal
@@ -274,53 +137,21 @@ pub fn align_tile_fusion_safe(sched: &AlignSchedule) -> bool {
 /// thread per step; writes are distinct by construction, reads collide in
 /// runs of consecutive offsets — Fig. 4).
 pub fn analyze_sdp(sched: &SdpSchedule) -> ConflictReport {
-    let mut report = ConflictReport {
-        steps: sched.num_steps(),
-        ..Default::default()
-    };
-    for i in sched.step_range() {
-        let accesses = sched.step(i);
-        let reads: Vec<usize> = accesses.iter().map(|a| a.src).collect();
-        let writes: Vec<usize> = accesses.iter().map(|a| a.tgt).collect();
-        let mut step_factor = 1usize;
-        for addrs in [&reads, &writes] {
-            let degree = collision_degree(addrs);
-            if degree > 1 {
-                report.conflicted_substeps += 1;
-            }
-            report.max_degree = report.max_degree.max(degree);
-            step_factor = step_factor.max(degree);
-        }
-        report.serialized_cycles += step_factor as u64;
-    }
-    report
+    certify::analyze(&certify::lower_sdp(sched))
 }
 
 /// Staleness hazards of the S-DP pipeline (provably empty — Definition 1's
 /// strictly-decreasing offsets force `a_j ≥ k − j + 1`; kept as a runtime
-/// checker so the property test can exercise the proof).
+/// checker so the property test can exercise the proof).  Hazard steps
+/// are the paper's outer indices (the IR's `step_base` is `a_1`).
 pub fn sdp_hazards(sched: &SdpSchedule) -> Vec<Hazard> {
-    let mut out = Vec::new();
-    for i in sched.step_range() {
-        for a in sched.step(i) {
-            if let Some(fin) = sched.finalize_step(a.src) {
-                if fin >= i {
-                    out.push(Hazard {
-                        step: i,
-                        reader: a.tgt,
-                        operand: a.src,
-                        finalized: fin,
-                    });
-                }
-            }
-        }
-    }
-    out
+    certify::staleness_hazards(&certify::lower_sdp(sched))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::certify::collision_degree;
     use crate::core::schedule::{McmSchedule, McmVariant, SdpSchedule};
     use crate::prop::forall;
 

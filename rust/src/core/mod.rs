@@ -6,11 +6,17 @@
 //! * [`schedule`] — the schedule compiler: Fig. 2 / Fig. 8 pipelines as
 //!   explicit step-synchronous schedules (published-faithful and
 //!   hazard-corrected variants).
-//! * [`conflict`] — the access-trace analyzer: Theorem-1 conflict checks,
-//!   staleness-hazard detection, and the GPU serialization-factor model.
+//! * [`certify`] — the generic dependence IR, the one RAW/WAR/WAW race
+//!   analyzer all schedule families lower into, and the fingerprinted
+//!   [`certify::Certificate`]s the router's native dispatch enforces
+//!   (DESIGN.md §10).
+//! * [`conflict`] — the family-specific facade over [`certify`]:
+//!   Theorem-1 conflict checks, staleness-hazard detection, and the GPU
+//!   serialization-factor model, with the historical per-family API.
 //! * [`cache`] — the process-wide LRU of compiled schedules keyed by
-//!   `(problem kind, n, variant, tile)`; the request paths' front door to
-//!   the schedule compiler.
+//!   `(problem kind, n, variant, tile)`, with certificates attached to
+//!   the cached arenas; the request paths' front door to the schedule
+//!   compiler.
 //! * [`policy`] — the calibrated adaptive executor policy: per-kind
 //!   seq/fused/pooled crossover tables measured at warmup and consulted
 //!   by the router's native path (DESIGN.md §7).
@@ -24,6 +30,7 @@
 //!   (DESIGN.md §9).
 
 pub mod cache;
+pub mod certify;
 pub mod conflict;
 pub mod faults;
 pub mod policy;

@@ -5,8 +5,9 @@
 //! three-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the coordination contribution: schedule
-//!   compilation ([`core::schedule`]), conflict/hazard analysis
-//!   ([`core::conflict`]), native step-synchronous and multi-threaded
+//!   compilation ([`core::schedule`]), conflict/hazard analysis and
+//!   schedule certification ([`core::conflict`], [`core::certify`]),
+//!   native step-synchronous and multi-threaded
 //!   executors ([`sdp`], [`mcm`], [`align`]), solution reconstruction
 //!   through per-solve traceback sidecars ([`core::traceback`] —
 //!   parenthesizations, edit scripts, local-alignment spans), a
@@ -67,6 +68,10 @@ pub enum Error {
     /// A solve was refused by the admission gate: its estimated table +
     /// sidecar footprint exceeds the configured budget.
     TooLarge(String),
+    /// An internal invariant failed on the serving path — most notably a
+    /// schedule whose certificate the race analyzer refused
+    /// ([`core::certify`]). Never the client's fault.
+    Internal(String),
 }
 
 impl std::fmt::Display for Error {
@@ -82,6 +87,7 @@ impl std::fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::TooLarge(m) => write!(f, "too large: {m}"),
+            Error::Internal(m) => write!(f, "internal: {m}"),
         }
     }
 }

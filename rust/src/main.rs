@@ -11,6 +11,8 @@
 //!   trace       print the Fig. 3 / Fig. 7 execution traces
 //!   schedule    compile an MCM schedule and emit it as JSON
 //!   verify      conflict-freedom (Thm. 1) + staleness-hazard report
+//!   certify     lower one schedule to the dependence IR and print its
+//!               machine-checkable race certificate (DESIGN.md §10)
 //!   simulate    price the Table I bands on the GPU cost model
 //!   serve       run the coordinator server
 //!   client      send one request to a running server (`--solution` asks
@@ -44,6 +46,7 @@ fn main() {
         "trace" => cmd_trace(argv),
         "schedule" => cmd_schedule(argv),
         "verify" => cmd_verify(argv),
+        "certify" => cmd_certify(argv),
         "simulate" => cmd_simulate(argv),
         "serve" => cmd_serve(argv),
         "client" => cmd_client(argv),
@@ -72,6 +75,7 @@ const USAGE: &str = "pipedp <subcommand> [flags]
   trace       --kind sdp|mcm [--n N] [--offsets …] [--variant …] [--steps S]
   schedule    --n N --variant corrected|faithful [--json]
   verify      [--max-n N]
+  certify     --kind mcm|align|sdp [--n N] [--variant corrected|faithful] [--tile T] [--rows R --cols C] [--offsets 7,5,2]
   simulate    [--samples S]
   serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E] [--max-solve-bytes B]
   client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution] [--deadline-ms D] [--retries R]
@@ -399,6 +403,100 @@ fn cmd_verify(argv: Vec<String>) -> Result<()> {
          (faithful) schedule has staleness hazards for n ≥ 4 and mis-computes\n\
          some instances — the corrected schedule never does (DESIGN.md §1.1)."
     );
+    Ok(())
+}
+
+/// Lower one schedule to the dependence IR, certify it, and print the
+/// certificate the serving path would enforce (DESIGN.md §10).  Goes
+/// through the schedule cache, so the printed certificate is the very
+/// object a running coordinator would attach and revalidate.
+fn cmd_certify(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("certify", "print a schedule's race certificate")
+        .flag("kind", "mcm|align|sdp", Some("mcm"))
+        .flag("n", "MCM chain length / S-DP table size", Some("256"))
+        .flag("variant", "MCM variant: corrected|faithful", Some("corrected"))
+        .flag("tile", "superstep tile; 0 = the serving default", Some("0"))
+        .flag("rows", "align: first sequence length", Some("64"))
+        .flag("cols", "align: second sequence length", Some("48"))
+        .flag("offsets", "S-DP offsets a_1>…>a_k", Some("7,5,2"))
+        .parse(argv)?;
+    use pipedp::core::cache::{align_certificate, mcm_certificate, sdp_certificate};
+    use pipedp::core::schedule::{default_align_tile, default_mcm_tile};
+    let (label, cert) = match args.get_str("kind")? {
+        "mcm" => {
+            let n = args.get_usize("n")?.max(1);
+            let variant = McmVariant::parse(args.get_str("variant")?)?;
+            let tile = match args.get_usize("tile")? {
+                0 if variant == McmVariant::Corrected => default_mcm_tile(n),
+                0 => 1,
+                t => t,
+            };
+            (
+                format!("mcm n={n} variant={} tile={tile}", variant.name()),
+                mcm_certificate(n, variant, tile),
+            )
+        }
+        "align" => {
+            let (rows, cols) = (args.get_usize("rows")?, args.get_usize("cols")?);
+            let tile = match args.get_usize("tile")? {
+                // mirror the router: the pooled tile only applies when the
+                // short side clears it, else the untiled schedule serves
+                0 => {
+                    let t = default_align_tile(rows, cols);
+                    if rows.min(cols) > t {
+                        t
+                    } else {
+                        1
+                    }
+                }
+                t => t,
+            };
+            (
+                format!("align rows={rows} cols={cols} tile={tile}"),
+                align_certificate(rows, cols, tile),
+            )
+        }
+        "sdp" => {
+            let n = args.get_usize("n")?;
+            let offsets = args.get_i64_list("offsets")?;
+            (
+                format!("sdp n={n} offsets={offsets:?}"),
+                sdp_certificate(n, &offsets),
+            )
+        }
+        other => {
+            return Err(pipedp::Error::InvalidProblem(format!(
+                "unknown certify kind '{other}'"
+            )))
+        }
+    };
+    let mut t = Table::new(vec!["field", "value"]);
+    t.row(vec!["family".into(), cert.family.name().into()]);
+    t.row(vec!["fingerprint".into(), format!("{:016x}", cert.fingerprint)]);
+    t.row(vec!["steps".into(), cert.steps.to_string()]);
+    t.row(vec!["terms".into(), cert.terms.to_string()]);
+    t.row(vec!["tile".into(), cert.tile.to_string()]);
+    t.row(vec!["well_formed".into(), cert.well_formed.to_string()]);
+    t.row(vec!["max_degree".into(), cert.max_degree.to_string()]);
+    t.row(vec![
+        "conflicted_substeps".into(),
+        cert.conflicted_substeps.to_string(),
+    ]);
+    t.row(vec!["raw_hazards".into(), cert.raw_hazards.to_string()]);
+    t.row(vec!["war_hazards".into(), cert.war_hazards.to_string()]);
+    t.row(vec!["waw_hazards".into(), cert.waw_hazards.to_string()]);
+    t.row(vec!["fusion_hazards".into(), cert.fusion_hazards.to_string()]);
+    t.row(vec!["fusion_safe".into(), cert.fusion_safe.to_string()]);
+    println!("certificate for {label}:");
+    println!("{}", t.render());
+    let verdict = if cert.admissible_strict() {
+        "ADMISSIBLE (strict: race-free and fusion-safe)"
+    } else if cert.admissible_faithful() {
+        "ADMISSIBLE (faithful contract only: WAW-clean, stale reads by design)"
+    } else {
+        "REFUTED (the router would reject this schedule at dispatch)"
+    };
+    println!("verdict: {verdict}");
     Ok(())
 }
 

@@ -294,11 +294,12 @@ pub fn execute_threaded(p: &McmProblem, sched: &McmSchedule, threads: usize) -> 
                     let lo = (t * chunk).min(view.len());
                     let hi = ((t + 1) * chunk).min(view.len());
                     if fused {
-                        // single fused pass: reads are of cells finalized
-                        // in earlier steps (hazard-freedom), which are
-                        // disjoint from this step's write set, and writes
-                        // are lane-distinct (Thm. 1) — no data race.
                         for lane in lo..hi {
+                            // SAFETY: single fused pass — reads are of
+                            // cells finalized in earlier steps
+                            // (hazard-freedom), disjoint from this step's
+                            // write set, and writes are lane-distinct
+                            // (Thm. 1): no data race.
                             unsafe {
                                 let v = st_ptr.read(view.l[lane] as usize)
                                     + st_ptr.read(view.r[lane] as usize)

@@ -34,9 +34,10 @@ pub struct Client {
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
-// xla::PjRtClient wraps a thread-safe C++ client; executions are
-// synchronized by XLA itself.
+// SAFETY: xla::PjRtClient wraps a thread-safe C++ client; executions are
+// synchronized by XLA itself, and the cache is behind its own mutex.
 unsafe impl Sync for Client {}
+// SAFETY: same argument as `Sync` — the C++ client is not thread-affine.
 unsafe impl Send for Client {}
 
 impl Client {

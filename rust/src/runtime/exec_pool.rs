@@ -352,10 +352,11 @@ impl ExecPool {
             }
         };
         self.active.fetch_add(1, Ordering::Relaxed);
-        // Lifetime-erase the borrowed closure; sound because this function
-        // does not return until remaining == 0 (see the module docs).
         let erased: &(dyn Fn(usize) + Sync) = &f;
         let job = Job {
+            // SAFETY: lifetime-erasing the borrowed closure is sound
+            // because this function does not return until remaining == 0
+            // (see the module docs) — the borrow outlives every use.
             f: unsafe {
                 std::mem::transmute::<
                     &(dyn Fn(usize) + Sync),

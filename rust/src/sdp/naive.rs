@@ -60,6 +60,8 @@ pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
                         // by worker 0 alone.
                         let mut acc = unsafe { st_ptr.read(i - offsets[lo] as usize) };
                         for &a in &offsets[lo + 1..hi] {
+                            // SAFETY: same argument as the read above —
+                            // `i − a < i`, finalized in an earlier step.
                             let v = unsafe { st_ptr.read(i - a as usize) };
                             acc = op.apply(acc, v);
                         }
@@ -74,6 +76,9 @@ pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
                                 acc = op.apply(acc, px.load(std::sync::atomic::Ordering::Relaxed));
                             }
                         }
+                        // SAFETY: worker 0 is the only writer of index i
+                        // this step, and every reader of i waits on the
+                        // barrier below before its next read.
                         unsafe { st_ptr.write(i, acc) };
                     }
                     barrier.wait();
@@ -92,17 +97,28 @@ pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
 /// `Barrier::wait`).
 pub(crate) struct SharedTable(pub *mut i64);
 
+// SAFETY: the wrapped pointer is only dereferenced through the `read`/
+// `write` contracts above — disjoint writes, barrier-separated steps.
 unsafe impl Sync for SharedTable {}
+// SAFETY: same argument as `Sync`; the pointer itself is plain data.
 unsafe impl Send for SharedTable {}
 
 impl SharedTable {
+    /// # Safety
+    /// Caller upholds the struct invariant: `i` is in bounds and no other
+    /// thread writes it concurrently (barrier-separated steps).
     #[inline(always)]
     pub unsafe fn read(&self, i: usize) -> i64 {
+        // SAFETY: in bounds and race-free by the caller's contract above.
         unsafe { *self.0.add(i) }
     }
 
+    /// # Safety
+    /// Caller upholds the struct invariant: `i` is in bounds and this
+    /// thread is its only accessor until the next barrier.
     #[inline(always)]
     pub unsafe fn write(&self, i: usize, v: i64) {
+        // SAFETY: in bounds and exclusively owned by the caller's contract.
         unsafe { *self.0.add(i) = v }
     }
 }

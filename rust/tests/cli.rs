@@ -78,6 +78,7 @@ fn help_mentions_every_subcommand() {
         "trace",
         "schedule",
         "verify",
+        "certify",
         "simulate",
         "serve",
         "client",
@@ -170,6 +171,33 @@ fn verify_reports_hazard_asymmetry() {
     assert!(s.contains("faithful"), "{s}");
     assert!(s.contains("corrected"), "{s}");
     assert!(s.contains("Theorem 1"), "{s}");
+}
+
+#[test]
+fn certify_prints_admissible_verdict_for_served_schedules() {
+    // the ISSUE's smoke invocation: the serving-default corrected MCM
+    // schedule at n=256 must certify strictly admissible
+    let out = pipedp(&["certify", "--kind", "mcm", "--n", "256"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("fingerprint"), "{s}");
+    assert!(s.contains("ADMISSIBLE (strict"), "{s}");
+    // the faithful schedule passes only the WAW-clean faithful contract
+    let out = pipedp(&[
+        "certify", "--kind", "mcm", "--n", "8", "--variant", "faithful",
+    ]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("faithful contract only"), "{s}");
+    // the other two families certify strictly via their own lowerings
+    for args in [
+        vec!["certify", "--kind", "align", "--rows", "9", "--cols", "7"],
+        vec!["certify", "--kind", "sdp", "--n", "64", "--offsets", "9,5,1"],
+    ] {
+        let out = pipedp(&args);
+        assert!(out.status.success());
+        assert!(stdout(&out).contains("ADMISSIBLE (strict"), "{args:?}");
+    }
 }
 
 #[test]

@@ -1,0 +1,237 @@
+//! Concurrency-audit source lint (DESIGN.md §10): a zero-dependency walk
+//! over `rust/src` enforcing the audit discipline the CI wall assumes.
+//!
+//! Three rules:
+//!
+//! 1. **Every `unsafe` is justified.** Each `unsafe {` / `unsafe fn` /
+//!    `unsafe impl` must be immediately preceded (through comments,
+//!    attributes and blank lines only) by a comment mentioning SAFETY —
+//!    a `// SAFETY:` block comment or a `/// # Safety` doc section.
+//! 2. **Relaxed atomics only in audited modules.** `Ordering::Relaxed`
+//!    is correct for the monotone counters and snapshot gauges this
+//!    codebase uses it for, but each new use needs an audit: any file
+//!    outside [`RELAXED_AUDITED`] using it fails here until reviewed
+//!    (and listed).
+//! 3. **No unchecked indexing outside the MCM hot loop.**
+//!    `get_unchecked` is a measured win only in the fused MCM sweep
+//!    ([`mcm/pipeline.rs`]); everywhere else bounds checks are free
+//!    enough and the lint keeps them.
+//!
+//! The lint is deliberately textual (no syn, no proc-macros — the image
+//! vendors no crates): it strips line comments, token-matches, and walks
+//! adjacent lines.  That is exact enough for this codebase and keeps the
+//! test dependency-free.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Files audited for `Ordering::Relaxed` (monotone counters, LRU ticks,
+/// snapshot gauges, seqlock-free stats — each use reviewed as not
+/// ordering-coupled to any data it publishes).
+const RELAXED_AUDITED: &[&str] = &[
+    "align/wavefront.rs",
+    "coordinator/batcher.rs",
+    "coordinator/metrics.rs",
+    "coordinator/server.rs",
+    "core/cache.rs",
+    "core/certify.rs",
+    "core/faults.rs",
+    "core/policy.rs",
+    "core/traceback.rs",
+    "mcm/diagonal.rs",
+    "mcm/pipeline.rs",
+    "runtime/exec_pool.rs",
+    "sdp/naive.rs",
+    "sdp/pipeline.rs",
+];
+
+/// Files allowed to use `get_unchecked` (the fused MCM arena sweep,
+/// where the bounds check is a measured ~15% of the inner loop).
+const UNCHECKED_AUDITED: &[&str] = &["mcm/pipeline.rs"];
+
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+}
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in fs::read_dir(dir).expect("readable source dir") {
+        let path = entry.expect("readable dir entry").path();
+        if path.is_dir() {
+            rust_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// The code part of a source line: everything before the first `//`.
+/// (Good enough here: no source line in this crate hides `//` inside a
+/// string before meaningful code.)
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Whether a line may sit between an `unsafe` and its SAFETY comment:
+/// comments, attributes, blank lines.
+fn is_annotation_line(line: &str) -> bool {
+    let t = line.trim_start();
+    t.is_empty()
+        || t.starts_with("//")
+        || t.starts_with("#[")
+        || t.starts_with("#![")
+}
+
+/// Positions of `unsafe` tokens (word-boundary matches) in a code
+/// fragment that introduce an unsafe block, fn, impl, or trait.
+fn unsafe_token_needs_comment(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(i) = code[from..].find("unsafe") {
+        let start = from + i;
+        let end = start + "unsafe".len();
+        from = end;
+        let boundary_before = start == 0
+            || !(bytes[start - 1].is_ascii_alphanumeric() || bytes[start - 1] == b'_');
+        let boundary_after = end >= bytes.len()
+            || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if !(boundary_before && boundary_after) {
+            continue; // e.g. the `unsafe_op_in_unsafe_fn` lint name
+        }
+        let rest = code[end..].trim_start();
+        if rest.starts_with('{')
+            || rest.starts_with("fn")
+            || rest.starts_with("impl")
+            || rest.starts_with("trait")
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Whether one of the annotation lines directly above `idx` mentions
+/// safety (case-insensitive: `// SAFETY:` or `/// # Safety`).
+fn has_safety_comment(lines: &[&str], idx: usize) -> bool {
+    for line in lines[..idx].iter().rev() {
+        if !is_annotation_line(line) {
+            return false;
+        }
+        let t = line.trim_start();
+        if (t.starts_with("//")) && t.to_ascii_lowercase().contains("safety") {
+            return true;
+        }
+    }
+    false
+}
+
+#[test]
+fn every_unsafe_block_has_a_safety_comment() {
+    let root = src_root();
+    let mut files = Vec::new();
+    rust_files(&root, &mut files);
+    assert!(!files.is_empty(), "source walk found no files under {root:?}");
+    let mut violations = Vec::new();
+    for path in &files {
+        let text = fs::read_to_string(path).expect("readable source file");
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            let code = code_part(line);
+            if unsafe_token_needs_comment(code) && !has_safety_comment(&lines, i) {
+                violations.push(format!(
+                    "{}:{}: `unsafe` without an adjacent SAFETY comment",
+                    path.strip_prefix(&root).unwrap_or(path).display(),
+                    i + 1
+                ));
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "unsafe code must carry its proof obligation:\n{}",
+        violations.join("\n")
+    );
+}
+
+#[test]
+fn relaxed_atomics_only_in_audited_modules() {
+    let root = src_root();
+    let mut files = Vec::new();
+    rust_files(&root, &mut files);
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if RELAXED_AUDITED.contains(&rel.as_str()) {
+            continue;
+        }
+        let text = fs::read_to_string(path).expect("readable source file");
+        for (i, line) in text.lines().enumerate() {
+            if code_part(line).contains("Ordering::Relaxed") {
+                violations.push(format!("{rel}:{}: unaudited Ordering::Relaxed", i + 1));
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "Relaxed atomics need an ordering audit — review the use, then \
+         add the file to RELAXED_AUDITED:\n{}",
+        violations.join("\n")
+    );
+}
+
+#[test]
+fn relaxed_allowlist_carries_no_dead_entries() {
+    // a file that no longer uses Relaxed must leave the allowlist, so the
+    // list stays an accurate audit record rather than a growing grant
+    let root = src_root();
+    let mut stale = Vec::new();
+    for rel in RELAXED_AUDITED {
+        let path = root.join(rel);
+        let uses = fs::read_to_string(&path)
+            .map(|t| t.lines().any(|l| code_part(l).contains("Ordering::Relaxed")))
+            .unwrap_or(false);
+        if !uses {
+            stale.push(*rel);
+        }
+    }
+    assert!(
+        stale.is_empty(),
+        "allowlisted files no longer use Ordering::Relaxed — drop them: {stale:?}"
+    );
+}
+
+#[test]
+fn unchecked_indexing_only_in_audited_hot_loops() {
+    let root = src_root();
+    let mut files = Vec::new();
+    rust_files(&root, &mut files);
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if UNCHECKED_AUDITED.contains(&rel.as_str()) {
+            continue;
+        }
+        let text = fs::read_to_string(path).expect("readable source file");
+        for (i, line) in text.lines().enumerate() {
+            if code_part(line).contains("get_unchecked") {
+                violations.push(format!("{rel}:{}: get_unchecked outside audited hot loop", i + 1));
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "unchecked indexing is only justified where the bounds check is a \
+         measured cost:\n{}",
+        violations.join("\n")
+    );
+}

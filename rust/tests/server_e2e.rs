@@ -448,6 +448,11 @@ fn stats_request_reports_metrics() {
     let stats = resp.stats.unwrap();
     assert!(stats.i64_field("requests").unwrap() >= 5);
     assert_eq!(stats.i64_field("errors").unwrap(), 0);
+    // every native solve above passed the schedule certifier's dispatch
+    // gate (DESIGN.md §10) — the snapshot must show verified certificates
+    // and no refusals
+    assert!(stats.i64_field("certified").unwrap() > 0);
+    assert_eq!(stats.i64_field("cert_rejected").unwrap(), 0);
 }
 
 #[test]
