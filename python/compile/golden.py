@@ -172,6 +172,154 @@ def align_fixture() -> list:
     return cases
 
 
+def _lognum(v: float):
+    """JSON-encode a log-probability with the wire's −∞ sentinel
+    (util/json.rs ``Json::lognum``); finite values stay plain numbers."""
+    if v == ref.NEG_INF:
+        return "-inf"
+    assert v == v and v != float("inf"), v
+    return float(v)
+
+
+def _lognums(vs) -> list:
+    return [_lognum(float(v)) for v in vs]
+
+
+def _rand_logdist(rng, k: int) -> list:
+    """Log-probabilities of a normalized distribution with occasional
+    structural zeros, so −∞ operands genuinely occur (mirrors
+    ``ViterbiProblem::random``)."""
+    w = rng.random(k) + 0.05
+    if k > 1:
+        w[rng.random(k) < 0.2] = 0.0
+    if w.sum() == 0.0:
+        w[0] = 1.0
+    w = w / w.sum()
+    return [float(np.log(x)) if x > 0.0 else ref.NEG_INF for x in w]
+
+
+def _viterbi_case(num_states, num_symbols, init, trans, emit, obs) -> dict:
+    table, bp = ref.viterbi_ref(num_states, num_symbols, init, trans, emit, obs)
+    sol = ref.viterbi_path_ref(num_states, table, bp)
+    # the decoded path must itself achieve the table's best score
+    if sol["score"] != ref.NEG_INF:
+        s, m = num_states, num_symbols
+        replay = init[sol["states"][0]] + emit[sol["states"][0] * m + obs[0]]
+        for t in range(1, len(obs)):
+            q, j = sol["states"][t - 1], sol["states"][t]
+            replay += trans[q * s + j] + emit[j * m + obs[t]]
+        assert abs(replay - sol["score"]) < 1e-9, (sol, replay)
+    return {
+        "num_states": num_states,
+        "num_symbols": num_symbols,
+        "init": _lognums(init),
+        "trans": _lognums(trans),
+        "emit": _lognums(emit),
+        "obs": list(obs),
+        "table": _lognums(table),
+        "backpointers": [int(x) for x in bp],
+        # decoded path under the pinned tie-break (DESIGN.md §8)
+        "solution": {"states": sol["states"], "score": _lognum(sol["score"])},
+    }
+
+
+def viterbi_fixture() -> list:
+    half = float(np.log(0.5))
+    cases = [
+        # the two-state "sticky" HMM worked through the router tests
+        _viterbi_case(
+            2, 2,
+            [half, half],
+            [float(np.log(p)) for p in (0.9, 0.1, 0.1, 0.9)],
+            [float(np.log(p)) for p in (0.8, 0.2, 0.2, 0.8)],
+            [0, 0, 1, 1, 0],
+        ),
+        # fully symmetric: every path ties, decode must pin state 0
+        _viterbi_case(2, 1, [half, half], [half] * 4, [0.0, 0.0], [0, 0, 0]),
+        # impossible observation: −∞ all the way out, path stays state 0
+        _viterbi_case(1, 2, [0.0], [0.0], [0.0, ref.NEG_INF], [0, 1]),
+    ]
+    rng = np.random.default_rng(9261)
+    for _ in range(5):
+        s = int(rng.integers(1, 6))
+        m = int(rng.integers(1, 5))
+        t = int(rng.integers(1, 12))
+        init = _rand_logdist(rng, s)
+        trans = sum((_rand_logdist(rng, s) for _ in range(s)), [])
+        emit = sum((_rand_logdist(rng, m) for _ in range(s)), [])
+        obs = [int(o) for o in rng.integers(0, m, t)]
+        cases.append(_viterbi_case(s, m, init, trans, emit, obs))
+    return cases
+
+
+def _cyk_case(num_nonterminals, num_terminals, binary, lexical, words) -> dict:
+    table, splits = ref.cyk_ref(num_nonterminals, binary, lexical, words)
+    parse = ref.cyk_parse_ref(num_nonterminals, binary, words, table, splits)
+    n, r = len(words), num_nonterminals
+    if parse["score"] != ref.NEG_INF:
+        # the recorded sidecar must replay to the exact root score
+        def replay(nt, i, j):
+            if i == j:
+                return ref.cyk_lexical_best_ref(lexical, nt, words[i])
+            packed = splits[S.cell_index(n, i, j) * r + nt]
+            _, b, c, logp = binary[packed & 0xFFFF]
+            return logp + replay(b, i, packed >> 16) + replay(c, (packed >> 16) + 1, j)
+
+        assert abs(replay(0, 0, n - 1) - parse["score"]) < 1e-9, parse
+    return {
+        "num_nonterminals": num_nonterminals,
+        "num_terminals": num_terminals,
+        "binary": [[lhs, b, c, _lognum(lp)] for (lhs, b, c, lp) in binary],
+        "lexical": [[lhs, term, _lognum(lp)] for (lhs, term, lp) in lexical],
+        "words": list(words),
+        "table": _lognums(table),
+        # packed (split << 16) | rule sidecar (DESIGN.md §8)
+        "splits": [int(x) for x in splits],
+        "parse": {"score": _lognum(parse["score"]), "tree": parse["tree"]},
+    }
+
+
+def cyk_fixture() -> list:
+    half = float(np.log(0.5))
+    cases = [
+        # balanced_example: S → S S | a, ln ½ each — any n-leaf parse
+        # scores (2n−1)·ln ½
+        _cyk_case(1, 1, [(0, 0, 0, half)], [(0, 0, half)], [0] * n)
+        for n in (1, 3, 5)
+    ]
+    # equal-probability duplicate rules: lowest (split, rule index) wins
+    tie = _cyk_case(2, 1, [(0, 1, 1, half), (0, 1, 1, half)], [(1, 0, 0.0)], [0, 0])
+    assert tie["parse"]["tree"] == "(N0 (N1 w0) (N1 w1))", tie
+    cases.append(tie)
+    # start symbol underivable: score −∞, tree null
+    cases.append(_cyk_case(2, 1, [(1, 1, 1, half)], [(1, 0, 0.0)], [0, 0]))
+    rng = np.random.default_rng(5417)
+    for _ in range(5):
+        r = int(rng.integers(1, 5))
+        t = int(rng.integers(1, 4))
+        n = int(rng.integers(1, 9))
+        binary = [
+            (
+                int(rng.integers(0, r)),
+                int(rng.integers(0, r)),
+                int(rng.integers(0, r)),
+                float(np.log(rng.uniform(0.05, 1.0))),
+            )
+            for _ in range(int(rng.integers(1, 9)))
+        ]
+        lexical = [
+            (
+                int(rng.integers(0, r)),
+                int(rng.integers(0, t)),
+                float(np.log(rng.uniform(0.05, 1.0))),
+            )
+            for _ in range(int(rng.integers(1, 2 * r * t + 1)))
+        ]
+        words = [int(w) for w in rng.integers(0, t, n)]
+        cases.append(_cyk_case(r, t, binary, lexical, words))
+    return cases
+
+
 def main() -> None:
     here = os.path.dirname(os.path.abspath(__file__))
     out_dir = os.path.normpath(os.path.join(here, "..", "..", "rust", "tests", "golden"))
@@ -181,11 +329,15 @@ def main() -> None:
         "sdp_cases.json": sdp_fixture(),
         "mcm_cases.json": mcm_fixture(),
         "align_cases.json": align_fixture(),
+        "viterbi_cases.json": viterbi_fixture(),
+        "cyk_cases.json": cyk_fixture(),
     }
     for name, data in fixtures.items():
         path = os.path.join(out_dir, name)
         with open(path, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
+            # allow_nan=False: ±∞ must already be the "-inf"/"inf" string
+            # sentinels (util/json.rs lognum), never bare Infinity tokens
+            json.dump(data, f, indent=1, sort_keys=True, allow_nan=False)
             f.write("\n")
         print(f"wrote {path}")
 

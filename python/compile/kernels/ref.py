@@ -194,6 +194,131 @@ def mcm_parens_from_splits_ref(n: int, splits: list) -> str:
     return emit(0, n - 1)
 
 
+# ---------------------------------------------------------------------------
+# Log-space families (Viterbi lattice, probabilistic CYK) — DESIGN.md §11
+# ---------------------------------------------------------------------------
+#
+# Pure-python f64 references for the (max, +) log-space wire kinds.  The
+# recurrences use only IEEE addition and comparison — no libm — so once
+# the finite inputs round-trip through JSON the Rust solvers reproduce
+# these tables bit-for-bit.  Tie-breaks are the pinned ones (DESIGN.md
+# §8): ascending candidate scans with strictly-greater replacement, so
+# every recorded argmax is the lowest maximizing candidate.
+
+NEG_INF = float("-inf")
+
+
+def viterbi_ref(num_states, num_symbols, init, trans, emit, obs):
+    """Fill the T×S Viterbi lattice (flat, cell (t, s) at index t·S + s).
+
+    ``V[t][s] = max_q(V[t-1][q] + trans[q][s]) + emit[s][obs[t]]`` with
+    column 0 preset to ``init[s] + emit[s][obs[0]]``.  Returns
+    ``(table, backpointers)``; column 0 backpointers stay 0, and state 0
+    stands in when every candidate is −∞.
+    """
+    s, m = num_states, num_symbols
+    st = [NEG_INF] * (len(obs) * s)
+    bp = [0] * len(st)
+    for q in range(s):
+        st[q] = init[q] + emit[q * m + obs[0]]
+    for t in range(1, len(obs)):
+        for j in range(s):
+            best, arg = NEG_INF, 0
+            for q in range(s):
+                cand = st[(t - 1) * s + q] + trans[q * s + j]
+                if cand > best:
+                    best, arg = cand, q
+            st[t * s + j] = best + emit[j * m + obs[t]]
+            bp[t * s + j] = arg
+    return st, bp
+
+
+def viterbi_path_ref(num_states, table, bp):
+    """Decode the best state path from a solved lattice + backpointers.
+
+    The end state is the FIRST argmax of the last column (strict >), the
+    rest follows the backpointers.  Returns ``{"states", "score"}`` — the
+    wire's ``solution`` object for ``kind: "viterbi"``.
+    """
+    s = max(num_states, 1)
+    t = len(table) // s
+    last = (t - 1) * s
+    score, end = NEG_INF, 0
+    for j in range(s):
+        if table[last + j] > score:
+            score, end = table[last + j], j
+    states = [0] * t
+    states[t - 1] = end
+    for col in range(t - 1, 0, -1):
+        states[col - 1] = bp[col * s + states[col]]
+    return {"states": states, "score": score}
+
+
+def cyk_lexical_best_ref(lexical, nt, word):
+    """Best ``A → word`` log-probability; lowest-index rule wins ties."""
+    best = NEG_INF
+    for lhs, term, logp in lexical:
+        if lhs == nt and term == word and logp > best:
+            best = logp
+    return best
+
+
+def cyk_ref(num_nonterminals, binary, lexical, words):
+    """Fill the probabilistic CYK table in the MCM linear triangular
+    layout, R slots per span (slot ``cell_index(n, i, j)·R + nt``).
+
+    ``binary`` rows are ``(lhs, rhs_b, rhs_c, logp)``; ``lexical`` rows
+    ``(lhs, terminal, logp)``.  Returns ``(table, splits)`` with the
+    packed ``(split << 16) | rule`` sidecar; never-written slots (and the
+    whole diagonal) keep 0 in the sidecar.
+    """
+    n, r = len(words), num_nonterminals
+    st = [NEG_INF] * (sched_mod.num_cells(n) * r)
+    splits = [0] * len(st)
+    for i in range(n):
+        cell = sched_mod.cell_index(n, i, i)
+        for nt in range(r):
+            st[cell * r + nt] = cyk_lexical_best_ref(lexical, nt, words[i])
+    for d in range(1, n):
+        for i in range(n - d):
+            j = i + d
+            tgt = sched_mod.cell_index(n, i, j) * r
+            for m in range(i, j):
+                left = sched_mod.cell_index(n, i, m) * r
+                right = sched_mod.cell_index(n, m + 1, j) * r
+                for ri, (lhs, b, c, logp) in enumerate(binary):
+                    cand = st[left + b] + st[right + c] + logp
+                    slot = tgt + lhs
+                    if cand > st[slot]:
+                        st[slot] = cand
+                        splits[slot] = (m << 16) | ri
+    return st, splits
+
+
+def cyk_parse_ref(num_nonterminals, binary, words, table, splits):
+    """Rebuild the best parse of the start symbol (nonterminal 0) from
+    the solved table + packed sidecar.
+
+    Returns ``{"score", "tree"}``: the bracketed derivation string
+    (leaf ``(N⟨nt⟩ w⟨i⟩)``, internal ``(N⟨nt⟩ ⟨left⟩ ⟨right⟩)``), or
+    ``tree = None`` when the sentence is not derivable (score −∞).
+    """
+    n, r = len(words), num_nonterminals
+    score = table[sched_mod.cell_index(n, 0, n - 1) * r]
+    if score == NEG_INF:
+        return {"score": score, "tree": None}
+
+    def emit(nt, i, j):
+        if i == j:
+            return f"(N{nt} w{i})"
+        packed = splits[sched_mod.cell_index(n, i, j) * r + nt]
+        m = packed >> 16
+        _, b, c, _ = binary[packed & 0xFFFF]
+        return f"(N{nt} {emit(b, i, m)} {emit(c, m + 1, j)})"
+
+    return {"score": score, "tree": emit(0, 0, n - 1)}
+
+
 def align_cell_move_ref(variant, scoring, up, left, diag, av, bv):
     """One alignment cell: (value, move code) under the pinned tie-break.
 

@@ -36,6 +36,30 @@ def test_mcm_fixture_current():
     assert _canon(golden.mcm_fixture()) == _load("mcm_cases.json")
 
 
+def test_align_fixture_current():
+    assert _canon(golden.align_fixture()) == _load("align_cases.json")
+
+
+def test_viterbi_fixture_current():
+    assert _canon(golden.viterbi_fixture()) == _load("viterbi_cases.json")
+
+
+def test_cyk_fixture_current():
+    assert _canon(golden.cyk_fixture()) == _load("cyk_cases.json")
+
+
+def test_log_space_fixtures_use_sentinel_infinities():
+    # −∞ travels as the "-inf" string (util/json.rs lognum); a bare
+    # Infinity token would not even be legal JSON
+    viterbi, cyk = _load("viterbi_cases.json"), _load("cyk_cases.json")
+    assert any("-inf" in c["table"] for c in viterbi)
+    assert any("-inf" in c["table"] for c in cyk)
+    assert any(c["parse"]["tree"] is None for c in cyk)
+    for case in viterbi + cyk:
+        for v in case["table"]:
+            assert v == "-inf" or isinstance(v, float), v
+
+
 def test_mcm_fixture_contains_counterexample():
     cases = _load("mcm_cases.json")
     dims = [c["dims"] for c in cases]

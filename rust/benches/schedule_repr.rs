@@ -32,7 +32,7 @@
 
 use pipedp::bench::{measure, Config};
 use pipedp::core::policy::{ExecutorChoice, PolicyTable, Workload};
-use pipedp::core::problem::McmProblem;
+use pipedp::core::problem::{CykProblem, McmProblem, ViterbiProblem};
 use pipedp::core::schedule::{
     cell_terms, default_mcm_tile, linear, Entry, McmSchedule, McmVariant,
 };
@@ -137,6 +137,19 @@ struct SizeResult {
     flat2p: f64,
     flat: f64,
     rec: f64,
+    pooled: f64,
+}
+
+/// One log-space family row (DESIGN.md §11): seq oracle vs fused sweep
+/// vs pooled executor, ns/cell over the family's own cell count.  `n`
+/// is the policy key (state count for viterbi, sentence length for
+/// cyk), `shape` the human-readable instance size.
+struct LogResult {
+    kind: &'static str,
+    n: usize,
+    shape: String,
+    seq: f64,
+    fused: f64,
     pooled: f64,
 }
 
@@ -245,6 +258,108 @@ fn main() {
         });
     }
 
+    // --- log-space families (the new-kind rows — DESIGN.md §11) --------
+    // viterbi is keyed by state count S (T fixed), cyk by sentence
+    // length; each row cross-checks the fused and pooled executors
+    // against the sequential oracle bit-for-bit before timing them
+    let mut log_measured: Vec<LogResult> = Vec::new();
+    // fixed-shape HMM (ViterbiProblem::random draws S itself, which
+    // would blur the policy key): normalized rows, no structural zeros
+    let random_hmm = |rng: &mut Rng, t: usize, s: usize, m: usize| {
+        let dist = |rng: &mut Rng, len: usize| -> Vec<f64> {
+            let w: Vec<i64> = (0..len).map(|_| rng.range(1..9)).collect();
+            let total: i64 = w.iter().sum();
+            w.into_iter().map(|x| (x as f64 / total as f64).ln()).collect()
+        };
+        let init = dist(rng, s);
+        let trans: Vec<f64> = (0..s).flat_map(|_| dist(rng, s)).collect();
+        let emit: Vec<f64> = (0..s).flat_map(|_| dist(rng, m)).collect();
+        let obs: Vec<usize> = (0..t).map(|_| rng.range(0..m as i64) as usize).collect();
+        ViterbiProblem::new(s, m, init, trans, emit, obs).expect("valid random HMM")
+    };
+    let vit_t = 256usize;
+    for s in [16usize, 64, 128] {
+        if s * 2 > max_n {
+            println!("skipping viterbi S={s} (PIPEDP_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let p = random_hmm(&mut rng, vit_t, s, 8);
+        let cells = p.num_cells();
+        let truth = pipedp::viterbi::seq::solve(&p);
+        assert_eq!(
+            pipedp::viterbi::pipeline::execute(&p),
+            truth,
+            "viterbi S={s}: fused sweep diverged from the oracle"
+        );
+        assert_eq!(
+            pipedp::viterbi::pipeline::execute_pooled(&p, pool, threads),
+            truth,
+            "viterbi S={s}: pooled executor diverged from the oracle"
+        );
+        let per_cell = |st: pipedp::bench::Stats| st.mean.as_nanos() as f64 / cells as f64;
+        let (seq_st, _) =
+            measure(&cfg, || pipedp::viterbi::seq::solve(&p).last().unwrap().to_bits());
+        let (fus_st, _) = measure(&cfg, || {
+            pipedp::viterbi::pipeline::execute(&p).last().unwrap().to_bits()
+        });
+        let (pol_st, _) = measure(&cfg, || {
+            pipedp::viterbi::pipeline::execute_pooled(&p, pool, threads)
+                .last()
+                .unwrap()
+                .to_bits()
+        });
+        log_measured.push(LogResult {
+            kind: "viterbi",
+            n: p.num_states,
+            shape: format!("T={vit_t} S={}", p.num_states),
+            seq: per_cell(seq_st),
+            fused: per_cell(fus_st),
+            pooled: per_cell(pol_st),
+        });
+    }
+    for n in [32usize, 96] {
+        if n > max_n {
+            println!("skipping cyk n={n} (PIPEDP_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let p = CykProblem::random(&mut rng, n..n + 1, 4, 3);
+        let cells = p.num_cells();
+        let truth = pipedp::cyk::seq::solve(&p);
+        let sched = pipedp::core::cache::cyk_schedule(n, 1);
+        assert_eq!(
+            pipedp::cyk::pipeline::execute(&p, &sched),
+            truth,
+            "cyk n={n}: fused sweep diverged from the oracle"
+        );
+        let tile = default_mcm_tile(n);
+        let tiled = pipedp::core::cache::cyk_schedule(n, tile);
+        assert_eq!(
+            pipedp::cyk::pipeline::execute_pooled(&p, &tiled, pool, threads),
+            truth,
+            "cyk n={n}: pooled executor diverged from the oracle"
+        );
+        let per_cell = |st: pipedp::bench::Stats| st.mean.as_nanos() as f64 / cells as f64;
+        let (seq_st, _) =
+            measure(&cfg, || pipedp::cyk::seq::solve(&p).last().unwrap().to_bits());
+        let (fus_st, _) = measure(&cfg, || {
+            pipedp::cyk::pipeline::execute(&p, &sched).last().unwrap().to_bits()
+        });
+        let (pol_st, _) = measure(&cfg, || {
+            pipedp::cyk::pipeline::execute_pooled(&p, &tiled, pool, threads)
+                .last()
+                .unwrap()
+                .to_bits()
+        });
+        log_measured.push(LogResult {
+            kind: "cyk",
+            n,
+            shape: format!("n={n} R={} |G|={}", p.num_nonterminals, p.binary.len()),
+            seq: per_cell(seq_st),
+            fused: per_cell(fus_st),
+            pooled: per_cell(pol_st),
+        });
+    }
+
     // install the measured costs as the adaptive policy — this run IS the
     // full-scale calibration pass — and record the per-size choice
     let mut policy = PolicyTable::uncalibrated(threads);
@@ -255,6 +370,18 @@ fn main() {
             vec![
                 (ExecutorChoice::Seq, r.seq),
                 (ExecutorChoice::Fused, r.flat),
+                (ExecutorChoice::Pooled, r.pooled),
+            ],
+        );
+    }
+    for r in &log_measured {
+        let w = if r.kind == "viterbi" { Workload::Viterbi } else { Workload::Cyk };
+        policy.push_measurement(
+            w,
+            r.n,
+            vec![
+                (ExecutorChoice::Seq, r.seq),
+                (ExecutorChoice::Fused, r.fused),
                 (ExecutorChoice::Pooled, r.pooled),
             ],
         );
@@ -310,6 +437,34 @@ fn main() {
 
     println!("\n== MCM schedule representation, ns/cell (threads={threads}) ==");
     println!("{}", table.render());
+
+    let mut log_table = Table::new(vec!["kind", "shape", "SEQ", "FUSED", "POOLED", "policy"]);
+    let mut log_results: Vec<Json> = Vec::new();
+    for r in &log_measured {
+        let w = if r.kind == "viterbi" { Workload::Viterbi } else { Workload::Cyk };
+        let choice = policy.band_choice(w, r.n);
+        log_table.row(vec![
+            r.kind.to_string(),
+            r.shape.clone(),
+            format!("{:.1}", r.seq),
+            format!("{:.1}", r.fused),
+            format!("{:.1}", r.pooled),
+            choice.name().to_string(),
+        ]);
+        log_results.push(Json::obj(vec![
+            ("kind", Json::str(r.kind)),
+            ("n", Json::int(r.n as i64)),
+            ("shape", Json::str(&r.shape)),
+            ("seq", Json::num(r.seq)),
+            ("fused", Json::num(r.fused)),
+            ("pooled", Json::num(r.pooled)),
+            ("policy", Json::str(choice.name())),
+        ]));
+    }
+    if !log_measured.is_empty() {
+        println!("== log-space families, ns/cell (DESIGN.md §11) ==");
+        println!("{}", log_table.render());
+    }
     if speedup_1024 > 0.0 {
         println!(
             "shipped flat-arena executor vs seed nested executor at n=1024: {speedup_1024:.2}× \
@@ -347,6 +502,10 @@ fn main() {
                 ),
             ),
             ("results", Json::arr(results)),
+            // the log-space family rows (viterbi keyed by state count,
+            // cyk by sentence length) — `pipedp bench-check` gates them
+            // once both baseline and current carry the key
+            ("log_results", Json::arr(log_results)),
             (
                 "speedup_flat_vs_nested_n1024",
                 Json::num((speedup_1024 * 100.0).round() / 100.0),

@@ -11,18 +11,130 @@
 //! set) and writes are lane-distinct (Theorem 1 for the wavefront), so
 //! the fused form is race-free.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Barrier;
 
 use crate::align::seq;
 use crate::core::cache;
 use crate::core::problem::AlignProblem;
 use crate::core::schedule::{default_align_tile, AlignSchedule};
-use crate::core::traceback::{cell_move, MoveArena};
-use crate::runtime::exec_pool::{
-    cancelled, CancelToken, ExecPool, SenseBarrier, CANCEL_POLL_STRIDE,
-};
+use crate::core::sweep::{self, SharedSlice, SweepKernel};
+use crate::core::traceback::{cell_move, MoveArena, MoveRecord, NoRecord};
+use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool};
 use crate::sdp::naive::SharedTable;
+
+/// The alignment recurrence packaged for the generic sweep drivers
+/// (DESIGN.md §11).  Unlike MCM/CYK this is not a pure semiring lift —
+/// [`seq::cell`] / [`cell_move`] fold the variant's border and
+/// match/gap casework (a `(max, +)` algebra with per-variant affine
+/// terms) — but the *sweep control* is identical, and that is what the
+/// kernel deduplicates: the fused, cancellable, pooled and `_recorded`
+/// tiers are monomorphized instantiations of one sweep.  `R = NoRecord`
+/// compiles the plain table write; `R = &MoveArena` also publishes each
+/// cell's 2-bit move code (write-once, DESIGN.md §8).
+struct AlignKernel<'a, R: MoveRecord> {
+    p: &'a AlignProblem,
+    sched: &'a AlignSchedule,
+    st: SharedSlice<i64>,
+    rec: R,
+}
+
+impl<'a, R: MoveRecord> AlignKernel<'a, R> {
+    fn new(p: &'a AlignProblem, sched: &'a AlignSchedule, st: &mut [i64], rec: R) -> Self {
+        assert_eq!(
+            (p.rows(), p.cols()),
+            (sched.rows, sched.cols),
+            "schedule/problem size mismatch"
+        );
+        debug_assert_eq!(st.len(), p.num_cells());
+        AlignKernel {
+            p,
+            sched,
+            st: SharedSlice::new(st.as_mut_ptr()),
+            rec,
+        }
+    }
+
+    /// One arena lane: gather the three neighbours, evaluate the
+    /// variant's cell recurrence, write (and record) the target.
+    ///
+    /// # Safety
+    /// `i < num_terms()`; the caller holds the sweep discipline — the
+    /// lane's operands are finalized (earlier anti-diagonals or earlier
+    /// cells of the calling party's own block) and the target cell is
+    /// written by no other party this superstep.
+    #[inline(always)]
+    unsafe fn lane(&self, i: usize) {
+        let sched = self.sched;
+        // SAFETY: indices are grid- and sequence-bounded by construction
+        // in AlignSchedule::compile (debug-asserted in `execute`); table
+        // accesses are race-free by the caller's contract.
+        unsafe {
+            let up = self.st.read(*sched.up.get_unchecked(i) as usize);
+            let left = self.st.read(*sched.left.get_unchecked(i) as usize);
+            let diag = self.st.read(*sched.diag.get_unchecked(i) as usize);
+            let av = *self.p.a.get_unchecked(*sched.ai.get_unchecked(i) as usize);
+            let bv = *self.p.b.get_unchecked(*sched.bj.get_unchecked(i) as usize);
+            let tgt = *sched.tgt.get_unchecked(i) as usize;
+            if R::ACTIVE {
+                let (v, code) =
+                    cell_move(self.p.variant, &self.p.scoring, up, left, diag, av, bv);
+                self.st.write(tgt, v);
+                self.rec.set(tgt, code);
+            } else {
+                let v = seq::cell(self.p.variant, &self.p.scoring, up, left, diag, av, bv);
+                self.st.write(tgt, v);
+            }
+        }
+    }
+}
+
+impl<R: MoveRecord> SweepKernel for AlignKernel<'_, R> {
+    fn num_supersteps(&self) -> usize {
+        self.sched.num_steps()
+    }
+
+    unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+        // on a blocked schedule (tile > 1) a superstep is a
+        // *block-anti-diagonal* and parties claim whole blocks
+        // round-robin — each block sweeps sequentially in row-major
+        // order (which satisfies every intra-block dependency), blocks
+        // of one diagonal are mutually independent
+        // (`core::conflict::align_tile_hazards` proves the fusion).  On
+        // an untiled schedule each lane is a unit (classic wavefront).
+        if self.sched.tile > 1 {
+            for (k, u) in self.sched.step_unit_range(g).enumerate() {
+                if k % parties != party {
+                    continue;
+                }
+                for i in self.sched.unit_range(u) {
+                    // SAFETY: unit ownership keeps intra-block reads on
+                    // the writing party; everything else finalized
+                    // behind a barrier (the caller's discipline).
+                    unsafe { self.lane(i) };
+                }
+            }
+        } else {
+            for (k, i) in self.sched.step_range(g).enumerate() {
+                if k % parties != party {
+                    continue;
+                }
+                // SAFETY: reads land on earlier anti-diagonals, writes
+                // are lane-distinct within a step (Theorem 1).
+                unsafe { self.lane(i) };
+            }
+        }
+    }
+
+    unsafe fn sweep_serial(&self) {
+        // flat single loop: hazard-freedom (every operand of a step-s
+        // cell is final after step s−1 at the latest) makes the arena
+        // sweepable as one fused loop — the §Perf hot path
+        for i in 0..self.sched.num_terms() {
+            // SAFETY: i < num_terms; serial discipline.
+            unsafe { self.lane(i) };
+        }
+    }
+}
 
 /// Step-synchronous executor over a compiled schedule: one fused flat
 /// sweep of the arena (sound by hazard-freedom; see module docs).
@@ -43,20 +155,7 @@ pub fn execute(p: &AlignProblem, sched: &AlignSchedule) -> Vec<i64> {
             && (sched.ai[i] as usize) < p.a.len()
             && (sched.bj[i] as usize) < p.b.len()
     }));
-    let variant = p.variant;
-    let scoring = p.scoring;
-    for i in 0..sched.num_terms() {
-        let v = seq::cell(
-            variant,
-            &scoring,
-            st[sched.up[i] as usize],
-            st[sched.left[i] as usize],
-            st[sched.diag[i] as usize],
-            p.a[sched.ai[i] as usize],
-            p.b[sched.bj[i] as usize],
-        );
-        st[sched.tgt[i] as usize] = v;
-    }
+    sweep::run_fused(&AlignKernel::new(p, sched, &mut st, NoRecord));
     st
 }
 
@@ -71,7 +170,8 @@ pub fn solve(p: &AlignProblem) -> Vec<i64> {
 
 /// [`execute`] with cooperative cancellation: the sweep runs
 /// (block-)anti-diagonal by (block-)anti-diagonal, polling the
-/// [`CancelToken`] every [`CANCEL_POLL_STRIDE`] steps and abandoning the
+/// [`CancelToken`] every [`crate::runtime::exec_pool::CANCEL_POLL_STRIDE`]
+/// steps and abandoning the
 /// grid with `Err(Timeout)` once it fires.  A never-token delegates to
 /// the fused flat sweep — the common path pays nothing.
 pub fn execute_cancellable(
@@ -82,44 +182,8 @@ pub fn execute_cancellable(
     if token.is_never() {
         return Ok(execute(p, sched));
     }
-    token.check()?;
-    assert_eq!(
-        (p.rows(), p.cols()),
-        (sched.rows, sched.cols),
-        "schedule/problem size mismatch"
-    );
     let mut st = p.initial_table();
-    let variant = p.variant;
-    let scoring = p.scoring;
-    let blocked = sched.tile > 1;
-    for s in 0..sched.num_steps() {
-        if s % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
-            return cancelled();
-        }
-        let mut do_lane = |i: usize| {
-            let v = seq::cell(
-                variant,
-                &scoring,
-                st[sched.up[i] as usize],
-                st[sched.left[i] as usize],
-                st[sched.diag[i] as usize],
-                p.a[sched.ai[i] as usize],
-                p.b[sched.bj[i] as usize],
-            );
-            st[sched.tgt[i] as usize] = v;
-        };
-        if blocked {
-            for u in sched.step_unit_range(s) {
-                for i in sched.unit_range(u) {
-                    do_lane(i);
-                }
-            }
-        } else {
-            for i in sched.step_range(s) {
-                do_lane(i);
-            }
-        }
-    }
+    sweep::run_cancellable(&AlignKernel::new(p, sched, &mut st, NoRecord), token)?;
     Ok(st)
 }
 
@@ -136,19 +200,7 @@ pub fn execute_recorded(p: &AlignProblem, sched: &AlignSchedule) -> (Vec<i64>, M
     );
     let mut st = p.initial_table();
     let moves = MoveArena::new(st.len());
-    for i in 0..sched.num_terms() {
-        let (v, code) = cell_move(
-            p.variant,
-            &p.scoring,
-            st[sched.up[i] as usize],
-            st[sched.left[i] as usize],
-            st[sched.diag[i] as usize],
-            p.a[sched.ai[i] as usize],
-            p.b[sched.bj[i] as usize],
-        );
-        st[sched.tgt[i] as usize] = v;
-        moves.set(sched.tgt[i] as usize, code);
-    }
+    sweep::run_fused(&AlignKernel::new(p, sched, &mut st, &moves));
     (st, moves)
 }
 
@@ -293,7 +345,8 @@ pub fn execute_threaded_recorded(
 }
 
 /// Pooled tiled executor (DESIGN.md §7): resident [`ExecPool`] workers,
-/// one [`SenseBarrier`] wait per step.  On a blocked schedule
+/// one [`crate::runtime::exec_pool::SenseBarrier`] wait per step.  On a
+/// blocked schedule
 /// (`tile > 1`) a step is a *block-anti-diagonal* and workers claim whole
 /// blocks round-robin — each block is swept sequentially in row-major
 /// order (which satisfies every intra-block dependency), blocks of one
@@ -320,66 +373,10 @@ pub fn execute_pooled_counted(
     pool: &ExecPool,
     threads: usize,
 ) -> (Vec<i64>, u64) {
-    assert_eq!(
-        (p.rows(), p.cols()),
-        (sched.rows, sched.cols),
-        "schedule/problem size mismatch"
-    );
-    let parties = threads.max(1).min(pool.threads());
-    if parties <= 1 {
-        return (execute(p, sched), 0);
-    }
     let mut st = p.initial_table();
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    let variant = p.variant;
-    let scoring = p.scoring;
-    let a = &p.a;
-    let b = &p.b;
-    let blocked = sched.tile > 1;
-    // one lane, fused: reads are of earlier diagonals or earlier lanes of
-    // the worker's own current block
-    let do_lane = |i: usize| {
-        // SAFETY: see the function docs; unit ownership keeps intra-block
-        // reads on the writing worker, everything else is finalized
-        // behind a barrier.
-        unsafe {
-            let v = seq::cell(
-                variant,
-                &scoring,
-                st_ptr.read(sched.up[i] as usize),
-                st_ptr.read(sched.left[i] as usize),
-                st_ptr.read(sched.diag[i] as usize),
-                a[sched.ai[i] as usize],
-                b[sched.bj[i] as usize],
-            );
-            st_ptr.write(sched.tgt[i] as usize, v);
-        }
-    };
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        for s in 0..sched.num_steps() {
-            if blocked {
-                for (k, u) in sched.step_unit_range(s).enumerate() {
-                    if k % parties != t {
-                        continue;
-                    }
-                    for i in sched.unit_range(u) {
-                        do_lane(i);
-                    }
-                }
-            } else {
-                for (k, i) in sched.step_range(s).enumerate() {
-                    if k % parties != t {
-                        continue;
-                    }
-                    do_lane(i);
-                }
-            }
-            waiter.wait(); // end of (block-)anti-diagonal
-        }
-    });
-    (st, barrier.rounds())
+    let rounds =
+        sweep::run_pooled_counted(&AlignKernel::new(p, sched, &mut st, NoRecord), pool, threads);
+    (st, rounds)
 }
 
 /// [`execute_pooled`] with cooperative cancellation via the superstep
@@ -419,77 +416,14 @@ pub fn execute_pooled_cancellable_counted(
     if token.is_cancelled() {
         return (cancelled(), 0);
     }
-    assert_eq!(
-        (p.rows(), p.cols()),
-        (sched.rows, sched.cols),
-        "schedule/problem size mismatch"
-    );
-    let parties = threads.max(1).min(pool.threads());
-    if parties <= 1 {
-        return (execute_cancellable(p, sched, token), 0);
-    }
     let mut st = p.initial_table();
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    let variant = p.variant;
-    let scoring = p.scoring;
-    let a = &p.a;
-    let b = &p.b;
-    let blocked = sched.tile > 1;
-    let cut_at = AtomicUsize::new(usize::MAX);
-    let do_lane = |i: usize| {
-        // SAFETY: identical ownership/freshness argument to
-        // `execute_pooled`; cancellation only ever cuts whole steps.
-        unsafe {
-            let v = seq::cell(
-                variant,
-                &scoring,
-                st_ptr.read(sched.up[i] as usize),
-                st_ptr.read(sched.left[i] as usize),
-                st_ptr.read(sched.diag[i] as usize),
-                a[sched.ai[i] as usize],
-                b[sched.bj[i] as usize],
-            );
-            st_ptr.write(sched.tgt[i] as usize, v);
-        }
-    };
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        for s in 0..sched.num_steps() {
-            // a cut published at the end of step s names s+1: false for
-            // every party still inside step s, true for every party at
-            // the top of s+1 (the publication happens-before their
-            // return from the step-s barrier)
-            if cut_at.load(Ordering::Relaxed) <= s {
-                break;
-            }
-            if blocked {
-                for (k, u) in sched.step_unit_range(s).enumerate() {
-                    if k % parties != t {
-                        continue;
-                    }
-                    for i in sched.unit_range(u) {
-                        do_lane(i);
-                    }
-                }
-            } else {
-                for (k, i) in sched.step_range(s).enumerate() {
-                    if k % parties != t {
-                        continue;
-                    }
-                    do_lane(i);
-                }
-            }
-            if t == 0 && token.is_cancelled() {
-                cut_at.store(s + 1, Ordering::Relaxed);
-            }
-            waiter.wait(); // end of (block-)anti-diagonal
-        }
-    });
-    if cut_at.load(Ordering::Relaxed) != usize::MAX {
-        return (cancelled(), barrier.rounds());
-    }
-    (Ok(st), barrier.rounds())
+    let (r, rounds) = sweep::run_pooled_cancellable_counted(
+        &AlignKernel::new(p, sched, &mut st, NoRecord),
+        pool,
+        threads,
+        token,
+    );
+    (r.map(|()| st), rounds)
 }
 
 /// [`execute_pooled`] + move recording: block (or lane) ownership keeps
@@ -502,65 +436,9 @@ pub fn execute_pooled_recorded(
     pool: &ExecPool,
     threads: usize,
 ) -> (Vec<i64>, MoveArena) {
-    assert_eq!(
-        (p.rows(), p.cols()),
-        (sched.rows, sched.cols),
-        "schedule/problem size mismatch"
-    );
-    let parties = threads.max(1).min(pool.threads());
-    if parties <= 1 {
-        return execute_recorded(p, sched);
-    }
     let mut st = p.initial_table();
     let moves = MoveArena::new(st.len());
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    let variant = p.variant;
-    let scoring = p.scoring;
-    let a = &p.a;
-    let b = &p.b;
-    let blocked = sched.tile > 1;
-    let moves_ref = &moves;
-    let do_lane = |i: usize| {
-        // SAFETY: as in `execute_pooled`; the sidecar write is the
-        // cell's only one and is atomic.
-        unsafe {
-            let (v, code) = cell_move(
-                variant,
-                &scoring,
-                st_ptr.read(sched.up[i] as usize),
-                st_ptr.read(sched.left[i] as usize),
-                st_ptr.read(sched.diag[i] as usize),
-                a[sched.ai[i] as usize],
-                b[sched.bj[i] as usize],
-            );
-            st_ptr.write(sched.tgt[i] as usize, v);
-            moves_ref.set(sched.tgt[i] as usize, code);
-        }
-    };
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        for s in 0..sched.num_steps() {
-            if blocked {
-                for (k, u) in sched.step_unit_range(s).enumerate() {
-                    if k % parties != t {
-                        continue;
-                    }
-                    for i in sched.unit_range(u) {
-                        do_lane(i);
-                    }
-                }
-            } else {
-                for (k, i) in sched.step_range(s).enumerate() {
-                    if k % parties != t {
-                        continue;
-                    }
-                    do_lane(i);
-                }
-            }
-            waiter.wait(); // end of (block-)anti-diagonal
-        }
-    });
+    sweep::run_pooled_counted(&AlignKernel::new(p, sched, &mut st, &moves), pool, threads);
     (st, moves)
 }
 
@@ -840,6 +718,52 @@ mod tests {
                 let w = want_moves.get(idx);
                 if moves.get(idx) != w || tmoves.get(idx) != w || pmoves.get(idx) != w {
                     return Err(format!("{v:?}: move mismatch at cell {idx}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generic_sweep_bit_identical_to_legacy_threaded() {
+        // DESIGN.md §11 regression pin: the generic-sweep tiers must
+        // reproduce the hand-rolled chunked-threaded executors
+        // bit-for-bit — table values AND 2-bit move codes — across the
+        // threads × tile matrix and all variants.
+        let pool = ExecPool::new(8);
+        forall("align semiring sweep == legacy", 16, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let p = AlignProblem::random(&mut rng, 1..48, 4, v);
+            let sched = crate::core::schedule::AlignSchedule::compile(p.rows(), p.cols());
+            let (want_st, want_mv) = seq::solve_with_moves(&p);
+            let (fst, fmv) = execute_recorded(&p, &sched);
+            if fst != want_st {
+                return Err(format!("{v:?}: fused table diverged"));
+            }
+            for threads in [1usize, 2, 8] {
+                let (lst, lmv) = execute_threaded_recorded(&p, &sched, threads);
+                if lst != want_st {
+                    return Err(format!("{v:?}: legacy table diverged (threads={threads})"));
+                }
+                for tile in [1usize, 4, 8] {
+                    let tsched = crate::core::schedule::AlignSchedule::compile_tiled(
+                        p.rows(),
+                        p.cols(),
+                        tile,
+                    );
+                    let (pst, pmv) = execute_pooled_recorded(&p, &tsched, &pool, threads);
+                    if pst != lst {
+                        return Err(format!("{v:?}: threads={threads} tile={tile} table"));
+                    }
+                    for idx in 0..want_st.len() {
+                        let w = want_mv.get(idx);
+                        if fmv.get(idx) != w || lmv.get(idx) != w || pmv.get(idx) != w {
+                            return Err(format!(
+                                "{v:?}: threads={threads} tile={tile} move mismatch at {idx}"
+                            ));
+                        }
+                    }
                 }
             }
             Ok(())

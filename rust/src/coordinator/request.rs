@@ -5,7 +5,10 @@
 //! clients rely on — is specified in `docs/PROTOCOL.md`; this module is
 //! its reference implementation.
 
-use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
+use crate::core::problem::{
+    AlignProblem, AlignScoring, AlignVariant, CykProblem, CykRule, McmProblem, SdpProblem,
+    ViterbiProblem,
+};
 use crate::core::schedule::McmVariant;
 use crate::core::semigroup::Op;
 use crate::util::json::Json;
@@ -108,8 +111,9 @@ pub struct Request {
     pub full: bool,
     /// Reconstruct and return the optimal solution (DESIGN.md §8): the
     /// parenthesization for `mcm` (Corrected only), the edit script +
-    /// span for `align`.  Ignored by `sdp`/`stats`, which have no
-    /// solution structure beyond the table itself (docs/PROTOCOL.md).
+    /// span for `align`, the state path for `viterbi`, the derivation
+    /// tree for `cyk`.  Ignored by `sdp`/`stats`, which have no solution
+    /// structure beyond the table itself (docs/PROTOCOL.md).
     pub want_solution: bool,
     /// Per-request latency budget in milliseconds, measured from server
     /// receipt.  Expired requests are shed from the queue (never solved)
@@ -128,6 +132,13 @@ pub enum RequestBody {
     /// Sequence alignment (LCS / edit distance / local alignment) over
     /// the anti-diagonal wavefront schedule.
     Align(AlignProblem),
+    /// HMM maximum-likelihood decoding over the `(max, ×)` log-space
+    /// semiring (DESIGN.md §11).  Log-probabilities travel as lognums
+    /// (`"-inf"` sentinel — [`Json::lognum`]).
+    Viterbi(ViterbiProblem),
+    /// Probabilistic CYK parsing over a CNF grammar, reusing the cached
+    /// corrected MCM triangular schedule (DESIGN.md §11).
+    Cyk(CykProblem),
     /// Server status probe.
     Stats,
 }
@@ -155,9 +166,53 @@ impl RequestBody {
                 let sidecar = if want_solution { cells.div_ceil(4) } else { 0 };
                 cells.saturating_mul(CELL).saturating_add(sidecar)
             }
+            RequestBody::Viterbi(p) => {
+                // f64 lattice + u32 backpointer sidecar
+                let cells = p.num_cells() as u64;
+                let sidecar = if want_solution { cells * 4 } else { 0 };
+                cells.saturating_mul(CELL).saturating_add(sidecar)
+            }
+            RequestBody::Cyk(p) => {
+                // f64 (span × nonterminal) table + u32 packed-split sidecar
+                let cells = p.num_cells() as u64;
+                let sidecar = if want_solution { cells * 4 } else { 0 };
+                cells.saturating_mul(CELL).saturating_add(sidecar)
+            }
             RequestBody::Stats => 0,
         }
     }
+}
+
+/// Decode an array of non-negative integers (observation / word indices).
+fn usize_vec(v: &Json, key: &str) -> Result<Vec<usize>> {
+    v.arr_field(key)?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| Error::Json(format!("'{key}' has a non-index element")))
+        })
+        .collect()
+}
+
+/// Decode one grammar-rule row `[lhs, sym, (sym,) logp]` of the `cyk`
+/// wire kind: `arity` is 4 for binary rules, 3 for lexical rules; the
+/// last element is always a lognum.
+fn rule_row(row: &Json, arity: usize, what: &str) -> Result<(u32, u32, Option<u32>, f64)> {
+    let items = row
+        .as_arr()
+        .filter(|a| a.len() == arity)
+        .ok_or_else(|| Error::Json(format!("'{what}' rules must be rows of {arity}")))?;
+    let sym = |i: usize| -> Result<u32> {
+        items[i]
+            .as_i64()
+            .and_then(|x| u32::try_from(x).ok())
+            .ok_or_else(|| Error::Json(format!("'{what}' rule symbol {i} is not a u32")))
+    };
+    let logp = items[arity - 1]
+        .as_lognum()
+        .ok_or_else(|| Error::Json(format!("'{what}' rule probability is not a lognum")))?;
+    let third = if arity == 4 { Some(sym(2)?) } else { None };
+    Ok((sym(0)?, sym(1)?, third, logp))
 }
 
 impl Request {
@@ -237,6 +292,42 @@ impl Request {
                 };
                 RequestBody::Align(AlignProblem::new(a, b, variant, scoring)?)
             }
+            "viterbi" => {
+                let s = v.usize_field("states")?;
+                let m = v.usize_field("symbols")?;
+                let init = v.lognum_vec_field("init")?;
+                let trans = v.lognum_vec_field("trans")?;
+                let emit = v.lognum_vec_field("emit")?;
+                let obs = usize_vec(&v, "obs")?;
+                RequestBody::Viterbi(ViterbiProblem::new(s, m, init, trans, emit, obs)?)
+            }
+            "cyk" => {
+                let r = v.usize_field("nonterminals")?;
+                let t = v.usize_field("terminals")?;
+                let binary = v
+                    .arr_field("binary")?
+                    .iter()
+                    .map(|row| {
+                        let (a, b, c, p) = rule_row(row, 4, "binary")?;
+                        Ok(CykRule {
+                            lhs: a,
+                            rhs_b: b,
+                            rhs_c: c.expect("arity 4 has a third symbol"),
+                            logp: p,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let lexical = v
+                    .arr_field("lexical")?
+                    .iter()
+                    .map(|row| {
+                        let (lhs, term, _, p) = rule_row(row, 3, "lexical")?;
+                        Ok((lhs, term, p))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let words = usize_vec(&v, "words")?;
+                RequestBody::Cyk(CykProblem::new(r, t, binary, lexical, words)?)
+            }
             "stats" => RequestBody::Stats,
             other => return Err(Error::Json(format!("unknown kind '{other}'"))),
         };
@@ -287,6 +378,38 @@ impl Request {
                 fields.push(("mismatch", Json::int(p.scoring.mismatch)));
                 fields.push(("gap", Json::int(p.scoring.gap)));
             }
+            RequestBody::Viterbi(p) => {
+                fields.push(("kind", Json::str("viterbi")));
+                fields.push(("states", Json::int(p.num_states as i64)));
+                fields.push(("symbols", Json::int(p.num_symbols as i64)));
+                fields.push(("init", Json::arr(p.init.iter().map(|&v| Json::lognum(v)))));
+                fields.push(("trans", Json::arr(p.trans.iter().map(|&v| Json::lognum(v)))));
+                fields.push(("emit", Json::arr(p.emit.iter().map(|&v| Json::lognum(v)))));
+                fields.push(("obs", Json::arr(p.obs.iter().map(|&v| Json::int(v as i64)))));
+            }
+            RequestBody::Cyk(p) => {
+                fields.push(("kind", Json::str("cyk")));
+                fields.push(("nonterminals", Json::int(p.num_nonterminals as i64)));
+                fields.push(("terminals", Json::int(p.num_terminals as i64)));
+                fields.push((
+                    "binary",
+                    Json::arr(p.binary.iter().map(|r| {
+                        Json::arr([
+                            Json::int(r.lhs as i64),
+                            Json::int(r.rhs_b as i64),
+                            Json::int(r.rhs_c as i64),
+                            Json::lognum(r.logp),
+                        ])
+                    })),
+                ));
+                fields.push((
+                    "lexical",
+                    Json::arr(p.lexical.iter().map(|&(lhs, term, lp)| {
+                        Json::arr([Json::int(lhs as i64), Json::int(term as i64), Json::lognum(lp)])
+                    })),
+                ));
+                fields.push(("words", Json::arr(p.words.iter().map(|&w| Json::int(w as i64)))));
+            }
             RequestBody::Stats => fields.push(("kind", Json::str("stats"))),
         }
         Json::obj(fields).to_string()
@@ -298,10 +421,19 @@ impl Request {
 pub struct Response {
     pub id: i64,
     pub ok: bool,
-    /// Scalar summary: MCM optimal cost / last S-DP element.
+    /// Scalar summary: MCM optimal cost / last S-DP element.  The
+    /// log-space kinds (`viterbi`, `cyk`) report through [`Response::score`]
+    /// instead and leave this 0.
     pub value: i64,
+    /// Log-space scalar summary (`viterbi` best path / `cyk` best parse
+    /// log-probability), carried as a lognum on the wire (`"-inf"`
+    /// sentinel — [`Json::lognum`]).
+    pub score: Option<f64>,
     /// Full table when requested.
     pub table: Option<Vec<i64>>,
+    /// Full log-space table when requested (`viterbi`/`cyk` `full`
+    /// replies), each cell a lognum.
+    pub ftable: Option<Vec<f64>>,
     /// Which backend actually served it, e.g. "xla:mcm_diagonal_i32_n16".
     pub served_by: String,
     /// Reconstructed solution when the request set `want_solution`
@@ -329,7 +461,9 @@ impl Response {
             id,
             ok: true,
             value,
+            score: None,
             table,
+            ftable: None,
             served_by,
             solution: None,
             error: None,
@@ -339,12 +473,29 @@ impl Response {
         }
     }
 
+    /// Success reply of the log-space kinds (`viterbi`/`cyk`): the scalar
+    /// travels as a lognum `score`, `value` stays 0.
+    pub fn ok_score(
+        id: i64,
+        score: f64,
+        served_by: String,
+        ftable: Option<Vec<f64>>,
+    ) -> Response {
+        Response {
+            score: Some(score),
+            ftable,
+            ..Response::ok(id, 0, served_by, None)
+        }
+    }
+
     pub fn err(id: i64, msg: String) -> Response {
         Response {
             id,
             ok: false,
             value: 0,
+            score: None,
             table: None,
+            ftable: None,
             served_by: String::new(),
             solution: None,
             error: Some(msg),
@@ -408,8 +559,14 @@ impl Response {
             ("value", Json::int(self.value)),
             ("served_by", Json::str(self.served_by.clone())),
         ];
+        if let Some(s) = self.score {
+            fields.push(("score", Json::lognum(s)));
+        }
         if let Some(t) = &self.table {
             fields.push(("table", Json::arr(t.iter().map(|&v| Json::int(v)))));
+        }
+        if let Some(t) = &self.ftable {
+            fields.push(("ftable", Json::arr(t.iter().map(|&v| Json::lognum(v)))));
         }
         if let Some(s) = &self.solution {
             fields.push(("solution", s.clone()));
@@ -435,11 +592,21 @@ impl Response {
             id: v.i64_field("id")?,
             ok: v.field("ok")?.as_bool().unwrap_or(false),
             value: v.get("value").and_then(|x| x.as_i64()).unwrap_or(0),
+            score: v.get("score").and_then(|x| x.as_lognum()),
             table: match v.get("table") {
                 Some(Json::Arr(items)) => Some(
                     items
                         .iter()
                         .map(|x| x.as_i64().unwrap_or(0))
+                        .collect(),
+                ),
+                _ => None,
+            },
+            ftable: match v.get("ftable") {
+                Some(Json::Arr(items)) => Some(
+                    items
+                        .iter()
+                        .map(|x| x.as_lognum().unwrap_or(f64::NAN))
                         .collect(),
                 ),
                 _ => None,
@@ -594,6 +761,106 @@ mod tests {
             }
             _ => panic!("wrong body"),
         }
+    }
+
+    #[test]
+    fn viterbi_request_roundtrip_with_neg_infinity() {
+        let p = ViterbiProblem::new(
+            2,
+            2,
+            vec![(0.5f64).ln(), f64::NEG_INFINITY],
+            vec![(0.5f64).ln(); 4],
+            vec![(0.5f64).ln(), f64::NEG_INFINITY, (0.25f64).ln(), (0.75f64).ln()],
+            vec![0, 1, 1],
+        )
+        .unwrap();
+        let req = Request {
+            id: 21,
+            body: RequestBody::Viterbi(p),
+            backend: Backend::Auto,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+        };
+        let line = req.encode();
+        assert!(line.contains("\"-inf\""), "−∞ must travel as the sentinel: {line}");
+        let back = Request::decode(&line).unwrap();
+        match back.body {
+            RequestBody::Viterbi(p) => {
+                assert_eq!(p.num_states, 2);
+                assert_eq!(p.init[1], f64::NEG_INFINITY);
+                assert_eq!(p.emit[1], f64::NEG_INFINITY);
+                assert_eq!(p.obs, vec![0, 1, 1]);
+            }
+            _ => panic!("wrong body"),
+        }
+        // invalid shapes and non-lognum probabilities are typed errors
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "viterbi", "states": 1, "symbols": 1, "init": [0], "trans": [0], "emit": [0], "obs": []}"#
+        )
+        .is_err());
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "viterbi", "states": 1, "symbols": 1, "init": ["nan"], "trans": [0], "emit": [0], "obs": [0]}"#
+        )
+        .is_err());
+        // +inf decodes as a lognum but fails problem validation
+        assert!(Request::decode(
+            r#"{"id": 1, "kind": "viterbi", "states": 1, "symbols": 1, "init": ["inf"], "trans": [0], "emit": [0], "obs": [0]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cyk_request_roundtrip() {
+        let req = Request {
+            id: 22,
+            body: RequestBody::Cyk(CykProblem::balanced_example(3)),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+        };
+        let back = Request::decode(&req.encode()).unwrap();
+        match back.body {
+            RequestBody::Cyk(p) => {
+                assert_eq!(p.num_nonterminals, 1);
+                assert_eq!(p.binary.len(), 1);
+                assert_eq!(p.binary[0].lhs, 0);
+                assert!((p.binary[0].logp - (0.5f64).ln()).abs() < 1e-12);
+                assert_eq!(p.lexical, vec![(0, 0, (0.5f64).ln())]);
+                assert_eq!(p.words, vec![0, 0, 0]);
+            }
+            _ => panic!("wrong body"),
+        }
+        // malformed rule rows are typed errors
+        for bad in [
+            r#"{"id": 1, "kind": "cyk", "nonterminals": 1, "terminals": 1, "binary": [[0, 0, -0.7]], "lexical": [], "words": [0]}"#,
+            r#"{"id": 1, "kind": "cyk", "nonterminals": 1, "terminals": 1, "binary": [], "lexical": [[0, "x", -0.7]], "words": [0]}"#,
+            r#"{"id": 1, "kind": "cyk", "nonterminals": 1, "terminals": 1, "binary": [], "lexical": [[0, 0, -0.7]], "words": [-1]}"#,
+        ] {
+            assert!(Request::decode(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn score_and_ftable_roundtrip_as_lognums() {
+        let r = Response::ok_score(
+            31,
+            f64::NEG_INFINITY,
+            "native:viterbi_lattice[fused]".into(),
+            Some(vec![0.0, f64::NEG_INFINITY, -2.5]),
+        );
+        let line = r.encode();
+        assert!(line.contains("\"-inf\""), "{line}");
+        let back = Response::decode(&line).unwrap();
+        assert!(back.ok);
+        assert_eq!(back.value, 0);
+        assert_eq!(back.score, Some(f64::NEG_INFINITY));
+        assert_eq!(back.ftable.unwrap(), vec![0.0, f64::NEG_INFINITY, -2.5]);
+        // integer kinds never carry a score
+        let plain = Response::decode(&Response::ok(1, 7, "x".into(), None).encode()).unwrap();
+        assert_eq!(plain.score, None);
+        assert!(plain.ftable.is_none());
     }
 
     #[test]
@@ -761,6 +1028,15 @@ mod tests {
         );
         assert_eq!(align.estimated_solve_bytes(false), 12 * 8);
         assert_eq!(align.estimated_solve_bytes(true), 12 * 8 + 3);
+        let vit = RequestBody::Viterbi(
+            ViterbiProblem::new(2, 1, vec![0.0; 2], vec![0.0; 4], vec![0.0; 2], vec![0, 0, 0])
+                .unwrap(), // 3×2 lattice
+        );
+        assert_eq!(vit.estimated_solve_bytes(false), 6 * 8);
+        assert_eq!(vit.estimated_solve_bytes(true), 6 * 8 + 6 * 4);
+        let cyk = RequestBody::Cyk(CykProblem::balanced_example(3)); // 6 spans × 1 NT
+        assert_eq!(cyk.estimated_solve_bytes(false), 6 * 8);
+        assert_eq!(cyk.estimated_solve_bytes(true), 6 * 8 + 6 * 4);
         assert_eq!(RequestBody::Stats.estimated_solve_bytes(true), 0);
     }
 }

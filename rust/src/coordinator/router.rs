@@ -12,8 +12,8 @@ use crate::coordinator::request::{Backend, Request, RequestBody, Response};
 use crate::core::certify;
 use crate::core::faults;
 use crate::core::policy::{self, ExecutorChoice, Workload};
-use crate::core::problem::{AlignProblem, McmProblem, SdpProblem};
-use crate::core::schedule::{default_align_tile, default_mcm_tile, McmVariant};
+use crate::core::problem::{AlignProblem, CykProblem, McmProblem, SdpProblem};
+use crate::core::schedule::{default_align_tile, default_mcm_tile, linear, McmVariant};
 use crate::core::traceback;
 use crate::runtime::engine::Engine;
 use crate::runtime::exec_pool::CancelToken;
@@ -23,6 +23,22 @@ use crate::{Error, Result};
 /// The wire shape of an MCM solution (docs/PROTOCOL.md).
 fn mcm_solution_json(parens: &str) -> Json {
     Json::obj(vec![("parens", Json::str(parens))])
+}
+
+/// The scalar answer of a solved Viterbi lattice: the best last-column
+/// log-probability (the same max [`traceback::viterbi_path`] starts its
+/// walk from).
+fn viterbi_score(num_states: usize, table: &[f64]) -> f64 {
+    let s = num_states.max(1);
+    table[table.len() - s..]
+        .iter()
+        .fold(f64::NEG_INFINITY, |a, &b| if b > a { b } else { a })
+}
+
+/// The scalar answer of a solved CYK table: the start symbol's slot at
+/// the whole-sentence span (`−∞` means unparseable, not an error).
+fn cyk_score(p: &CykProblem, table: &[f64]) -> f64 {
+    table[linear::cell_index(p.n(), 0, p.n() - 1) * p.num_nonterminals]
 }
 
 /// Typed refusal for traceback on the faithful schedule: its stale-read
@@ -83,6 +99,9 @@ impl Router {
                 RequestBody::Align(p) => {
                     engine.registry.route_align(p.rows(), p.cols(), 1).is_some()
                 }
+                // the log-space families are native-only: no Pallas
+                // kernel is lowered for them (DESIGN.md §11)
+                RequestBody::Viterbi(_) | RequestBody::Cyk(_) => false,
                 RequestBody::Stats => false,
             }
         };
@@ -104,6 +123,7 @@ impl Router {
                     RequestBody::Align(p) => {
                         p.rows().max(p.cols()) <= NATIVE_ALIGN_CUTOFF
                     }
+                    RequestBody::Viterbi(_) | RequestBody::Cyk(_) => true,
                     RequestBody::Stats => true,
                 };
                 if !small && fits_xla(req) {
@@ -354,6 +374,105 @@ impl Router {
                 let value = p.scalar(&st); // local alignment's scalar is the max, not the corner
                 Ok(self.done_scored(req, value, st, &served))
             }
+            RequestBody::Viterbi(p) => {
+                faults::inject("viterbi");
+                // keyed by state count: a lattice column holds S cells,
+                // and that is all a superstep has to spread
+                let choice = table.choose(Workload::Viterbi, p.num_states, batch);
+                certify::gate_viterbi(p.num_steps(), p.num_states)?;
+                let served = format!("native:viterbi_lattice[{}]", choice.name());
+                if req.want_solution {
+                    let (st, bp) = match choice {
+                        ExecutorChoice::Seq => crate::viterbi::seq::solve_with_backpointers(p),
+                        ExecutorChoice::Fused => crate::viterbi::pipeline::execute_recorded(p),
+                        ExecutorChoice::Pooled => {
+                            let pool = crate::runtime::exec_pool::global();
+                            crate::viterbi::pipeline::execute_pooled_recorded(
+                                p,
+                                pool,
+                                pool.threads(),
+                            )
+                        }
+                    };
+                    let sol = traceback::viterbi_path(p.num_states, &st, &bp);
+                    let mut resp = self.done_log(req, sol.score, st, &served);
+                    resp.solution = Some(sol.to_json());
+                    return Ok(resp);
+                }
+                let st = if token.is_never() {
+                    match choice {
+                        ExecutorChoice::Seq => crate::viterbi::seq::solve(p),
+                        ExecutorChoice::Fused => crate::viterbi::pipeline::execute(p),
+                        ExecutorChoice::Pooled => crate::viterbi::pipeline::solve_pooled(p),
+                    }
+                } else {
+                    match choice {
+                        ExecutorChoice::Seq => crate::viterbi::seq::solve(p),
+                        ExecutorChoice::Fused => {
+                            crate::viterbi::pipeline::execute_cancellable(p, &token)?
+                        }
+                        ExecutorChoice::Pooled => {
+                            crate::viterbi::pipeline::solve_pooled_cancellable(p, &token)?
+                        }
+                    }
+                };
+                let score = viterbi_score(p.num_states, &st);
+                Ok(self.done_log(req, score, st, &served))
+            }
+            RequestBody::Cyk(p) => {
+                faults::inject("cyk");
+                let n = p.n();
+                let choice = table.choose(Workload::Cyk, n, batch);
+                // certify the MCM schedule this choice will actually
+                // retag and run: tiled for pooled, untiled otherwise
+                let tile = if choice == ExecutorChoice::Pooled {
+                    default_mcm_tile(n)
+                } else {
+                    1
+                };
+                certify::gate_cyk(n, tile)?;
+                let served = format!("native:cyk_mcm_schedule[{}]", choice.name());
+                if req.want_solution {
+                    let (st, splits) = match choice {
+                        ExecutorChoice::Seq => crate::cyk::seq::solve_with_splits(p),
+                        ExecutorChoice::Fused => crate::cyk::pipeline::solve_recorded(p),
+                        ExecutorChoice::Pooled => {
+                            let sched = crate::core::cache::cyk_schedule(n, tile);
+                            let pool = crate::runtime::exec_pool::global();
+                            crate::cyk::pipeline::execute_pooled_recorded(
+                                p,
+                                &sched,
+                                pool,
+                                pool.threads(),
+                            )
+                        }
+                    };
+                    let sol = traceback::cyk_parse(p, &st, &splits);
+                    let mut resp = self.done_log(req, sol.score, st, &served);
+                    resp.solution = Some(sol.to_json());
+                    return Ok(resp);
+                }
+                let st = if token.is_never() {
+                    match choice {
+                        ExecutorChoice::Seq => crate::cyk::seq::solve(p),
+                        ExecutorChoice::Fused => crate::cyk::pipeline::solve(p),
+                        ExecutorChoice::Pooled => crate::cyk::pipeline::solve_pooled(p),
+                    }
+                } else {
+                    match choice {
+                        ExecutorChoice::Seq => crate::cyk::seq::solve(p),
+                        ExecutorChoice::Fused => {
+                            let sched = crate::core::cache::cyk_schedule(n, 1);
+                            crate::cyk::pipeline::execute_cancellable(p, &sched, &token)?
+                        }
+                        ExecutorChoice::Pooled => {
+                            crate::cyk::pipeline::solve_pooled_cancellable(p, &token)?
+                        }
+                    }
+                };
+                let score = cyk_score(p, &st);
+                Ok(self.done_log(req, score, st, &served))
+            }
             RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
         }
     }
@@ -402,6 +521,11 @@ impl Router {
                 resp.solution = solution;
                 Ok(resp)
             }
+            // route() never sends these here (fits_xla is false); a
+            // direct call still gets a typed answer, not a panic
+            RequestBody::Viterbi(_) | RequestBody::Cyk(_) => Err(Error::Runtime(
+                "the log-space families are served natively only".into(),
+            )),
             RequestBody::Stats => Err(Error::Server("stats handled by server".into())),
         }
     }
@@ -532,13 +656,25 @@ impl Router {
                         .collect(),
                 )
             }
-            RequestBody::Stats => None,
+            RequestBody::Viterbi(_) | RequestBody::Cyk(_) | RequestBody::Stats => None,
         }
     }
 
     fn done(&self, req: &Request, table: Vec<i64>, served_by: &str) -> Response {
         let value = *table.last().unwrap_or(&0);
         self.done_scored(req, value, table, served_by)
+    }
+
+    /// [`Router::done_scored`] for the log-space families: the scalar
+    /// answer is a log-probability (`score` on the wire, `value` = 0)
+    /// and the optional full table rides `ftable` (docs/PROTOCOL.md).
+    fn done_log(&self, req: &Request, score: f64, table: Vec<f64>, served_by: &str) -> Response {
+        Response::ok_score(
+            req.id,
+            score,
+            served_by.to_string(),
+            if req.full { Some(table) } else { None },
+        )
     }
 
     /// Like [`Router::done`] for workloads whose scalar answer is not the
@@ -605,6 +741,9 @@ pub fn group_key(req: &Request, route: Route) -> GroupKey {
             rows: p.rows(),
             cols: p.cols(),
         },
+        // native-only kinds never reach an XLA group, but a key must
+        // exist: trivially unique, so they never merge
+        RequestBody::Viterbi(_) | RequestBody::Cyk(_) => GroupKey::Single(req.id),
         RequestBody::Stats => GroupKey::Single(req.id),
     }
 }
@@ -957,6 +1096,232 @@ mod tests {
         crate::core::policy::install(PolicyTable::uncalibrated(4));
     }
 
+    fn small_hmm() -> crate::core::problem::ViterbiProblem {
+        let half = (0.5f64).ln();
+        crate::core::problem::ViterbiProblem::new(
+            2,
+            2,
+            vec![half, half],
+            vec![
+                (0.9f64).ln(),
+                (0.1f64).ln(),
+                (0.1f64).ln(),
+                (0.9f64).ln(),
+            ],
+            vec![
+                (0.8f64).ln(),
+                (0.2f64).ln(),
+                (0.2f64).ln(),
+                (0.8f64).ln(),
+            ],
+            vec![0, 0, 1, 1, 0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn viterbi_native_execution_scores_and_decodes() {
+        let r = Router::new(None);
+        let p = small_hmm();
+        let want = crate::viterbi::seq::decode(&p);
+        let req = Request {
+            id: 20,
+            body: RequestBody::Viterbi(p.clone()),
+            backend: Backend::Native,
+            full: true,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok, "{:?}", resp.error);
+        // log-space families answer on `score`, not `value`
+        assert_eq!(resp.value, 0);
+        assert!((resp.score.unwrap() - want.score).abs() < 1e-12);
+        assert_eq!(resp.ftable.as_ref().unwrap().len(), p.num_cells());
+        assert!(
+            resp.served_by.starts_with("native:viterbi_lattice["),
+            "{}",
+            resp.served_by
+        );
+        // want_solution: the state path rides the reply
+        let req = Request {
+            id: 21,
+            body: RequestBody::Viterbi(p.clone()),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert!(resp.ftable.is_none());
+        let sol = resp.solution.expect("viterbi solution present");
+        let states: Vec<i64> = sol
+            .arr_field("states")
+            .unwrap()
+            .iter()
+            .map(|s| s.as_i64().unwrap())
+            .collect();
+        let want_states: Vec<i64> = want.states.iter().map(|&s| s as i64).collect();
+        assert_eq!(states, want_states);
+        assert!((sol.lognum_field("score").unwrap() - want.score).abs() < 1e-12);
+        // auto routes native even engineless; pinned xla is refused
+        assert_eq!(r.route(&req).unwrap(), Route::Native);
+        let mut pinned = req;
+        pinned.backend = Backend::Xla;
+        assert!(r.route(&pinned).is_err());
+    }
+
+    #[test]
+    fn cyk_native_execution_parses_and_reports_unparseable() {
+        use crate::core::problem::{CykProblem, CykRule};
+        let r = Router::new(None);
+        let p = CykProblem::balanced_example(3);
+        let req = Request {
+            id: 22,
+            body: RequestBody::Cyk(p),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert!((resp.score.unwrap() - 5.0 * (0.5f64).ln()).abs() < 1e-12);
+        assert!(
+            resp.served_by.starts_with("native:cyk_mcm_schedule["),
+            "{}",
+            resp.served_by
+        );
+        let sol = resp.solution.expect("cyk solution present");
+        assert_eq!(
+            sol.str_field("tree").unwrap(),
+            "(N0 (N0 w0) (N0 (N0 w1) (N0 w2)))"
+        );
+        // an unparseable sentence is a −∞ answer with a null tree — a
+        // modelling outcome, not an error
+        let dead = CykProblem::new(
+            2,
+            1,
+            vec![CykRule {
+                lhs: 1,
+                rhs_b: 1,
+                rhs_c: 1,
+                logp: (0.5f64).ln(),
+            }],
+            vec![(1, 0, 0.0)],
+            vec![0, 0],
+        )
+        .unwrap();
+        let req = Request {
+            id: 23,
+            body: RequestBody::Cyk(dead),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+        };
+        let resp = r.execute(&req, Route::Native);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.score, Some(f64::NEG_INFINITY));
+        let sol = resp.solution.expect("solution object still present");
+        assert!(matches!(sol.get("tree"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn every_policy_choice_serves_identical_log_space_answers() {
+        // pin each executor choice: the three tiers must agree on both
+        // the score and the reconstructed solution, bit for bit
+        use crate::core::policy::{ExecutorChoice, PolicyTable, Workload};
+        let _guard = crate::core::policy::test_install_lock()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let r = Router::new(None);
+        let hmm = small_hmm();
+        let cyk = crate::core::problem::CykProblem::balanced_example(5);
+        let mut viterbi_seen = std::collections::HashSet::new();
+        let mut cyk_seen = std::collections::HashSet::new();
+        for choice in ExecutorChoice::ALL {
+            let mut t = PolicyTable::uncalibrated(4);
+            for wl in [Workload::Viterbi, Workload::Cyk] {
+                let costs = ExecutorChoice::ALL
+                    .iter()
+                    .map(|&c| (c, if c == choice { 1.0 } else { 2.0 }))
+                    .collect();
+                t.push_measurement(wl, 6, costs);
+            }
+            crate::core::policy::install(t);
+            let resp = r.execute(
+                &Request {
+                    id: 1,
+                    body: RequestBody::Viterbi(hmm.clone()),
+                    backend: Backend::Native,
+                    full: false,
+                    want_solution: true,
+                    deadline_ms: None,
+                },
+                Route::Native,
+            );
+            assert!(resp.ok, "{choice:?}: {:?}", resp.error);
+            viterbi_seen.insert(format!(
+                "{:?}|{}",
+                resp.score.unwrap().to_bits(),
+                resp.solution.unwrap().to_string()
+            ));
+            let resp = r.execute(
+                &Request {
+                    id: 2,
+                    body: RequestBody::Cyk(cyk.clone()),
+                    backend: Backend::Native,
+                    full: false,
+                    want_solution: true,
+                    deadline_ms: None,
+                },
+                Route::Native,
+            );
+            assert!(resp.ok, "{choice:?}: {:?}", resp.error);
+            cyk_seen.insert(format!(
+                "{:?}|{}",
+                resp.score.unwrap().to_bits(),
+                resp.solution.unwrap().to_string()
+            ));
+        }
+        assert_eq!(viterbi_seen.len(), 1, "choices disagree: {viterbi_seen:?}");
+        assert_eq!(cyk_seen.len(), 1, "choices disagree: {cyk_seen:?}");
+        crate::core::policy::install(PolicyTable::uncalibrated(4));
+    }
+
+    #[test]
+    fn log_space_deadlines_yield_typed_timeouts() {
+        use crate::coordinator::request::ErrorKind;
+        let r = Router::new(None);
+        let req = Request {
+            id: 24,
+            body: RequestBody::Viterbi(small_hmm()),
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        let resp = r.execute_with_deadline(&req, Route::Native, Some(Instant::now()));
+        assert_eq!(resp.error_kind, Some(ErrorKind::Timeout));
+        let far = Instant::now() + std::time::Duration::from_secs(600);
+        let resp = r.execute_with_deadline(&req, Route::Native, Some(far));
+        assert!(resp.ok, "{:?}", resp.error);
+        let req = Request {
+            id: 25,
+            body: RequestBody::Cyk(crate::core::problem::CykProblem::balanced_example(6)),
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        let resp = r.execute_with_deadline(&req, Route::Native, Some(Instant::now()));
+        assert_eq!(resp.error_kind, Some(ErrorKind::Timeout));
+        let resp = r.execute_with_deadline(&req, Route::Native, Some(far));
+        assert!(resp.ok, "{:?}", resp.error);
+    }
+
     #[test]
     fn align_auto_routes_native_without_engine() {
         let r = Router::new(None);
@@ -1092,8 +1457,26 @@ mod tests {
             deadline_ms: None,
         };
         assert!(r.execute(&align, Route::Native).ok);
+        let viterbi = Request {
+            id: 5,
+            body: RequestBody::Viterbi(small_hmm()),
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        assert!(r.execute(&viterbi, Route::Native).ok);
+        let cyk = Request {
+            id: 6,
+            body: RequestBody::Cyk(crate::core::problem::CykProblem::balanced_example(4)),
+            backend: Backend::Native,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+        };
+        assert!(r.execute(&cyk, Route::Native).ok);
         assert!(
-            certify::stats().certified >= before + 4,
+            certify::stats().certified >= before + 6,
             "each native solve must pass the certifier gate"
         );
     }

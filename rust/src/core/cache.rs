@@ -35,7 +35,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::core::certify::{self, Certificate, Family};
-use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant, SdpSchedule};
+use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant, SdpSchedule, ViterbiSchedule};
 
 /// Default maximum number of cached schedules (covers far more distinct
 /// sizes than realistic traffic exhibits).
@@ -70,6 +70,14 @@ pub enum Key {
     /// cached purely so its [`Certificate`] amortizes across repeated
     /// `(n, offsets)` shapes.
     Sdp { n: usize, offsets: Vec<i64> },
+    /// The Viterbi lattice schedule is implicit (O(1) memory) — cached,
+    /// like S-DP, so its [`Certificate`] amortizes across repeated
+    /// `(t, s)` lattice shapes.
+    Viterbi { t: usize, s: usize },
+    /// CYK runs over the corrected MCM span arena (DESIGN.md §11), but
+    /// under its own key: the arena's `Family::Cyk` certificate must
+    /// attach and amortize independently of the MCM entry's.
+    Cyk { n: usize, tile: usize },
 }
 
 /// A cached compiled schedule of any workload family.  Typed entry/exit
@@ -79,6 +87,10 @@ pub enum CachedSchedule {
     Mcm(Arc<McmSchedule>),
     Align(Arc<AlignSchedule>),
     Sdp(Arc<SdpSchedule>),
+    Viterbi(Arc<ViterbiSchedule>),
+    /// The CYK span schedule *is* a corrected MCM arena; the distinct
+    /// variant keeps its `Family::Cyk` certificate typed.
+    Cyk(Arc<McmSchedule>),
 }
 
 impl CachedSchedule {
@@ -89,12 +101,16 @@ impl CachedSchedule {
             // the implicit S-DP schedule stores only its offsets; its
             // honest footprint is O(k), not the table length
             CachedSchedule::Sdp(s) => s.k(),
+            // implicit like S-DP: two usizes, certificate-only entry
+            CachedSchedule::Viterbi(_) => 1,
+            CachedSchedule::Cyk(s) => s.num_terms(),
         }
     }
 
     /// O(1) shape keys for cheap certificate revalidation on cache hits
     /// ([`Certificate::revalidate`]).  The S-DP row count is closed-form:
-    /// every element in `[a_1, n)` is touched by all `k` lanes.
+    /// every element in `[a_1, n)` is touched by all `k` lanes; the
+    /// Viterbi lattice computes `s` states per step after column 0.
     fn shape(&self) -> (Family, usize, usize, usize) {
         match self {
             CachedSchedule::Mcm(s) => (Family::Mcm, s.num_steps(), s.num_terms(), s.tile),
@@ -102,6 +118,10 @@ impl CachedSchedule {
             CachedSchedule::Sdp(s) => {
                 (Family::Sdp, s.num_steps(), (s.n - s.a1()) * s.k(), 1)
             }
+            CachedSchedule::Viterbi(s) => {
+                (Family::Viterbi, s.num_steps(), s.num_steps() * s.s, 1)
+            }
+            CachedSchedule::Cyk(s) => (Family::Cyk, s.num_steps(), s.num_terms(), s.tile),
         }
     }
 
@@ -110,6 +130,8 @@ impl CachedSchedule {
             CachedSchedule::Mcm(s) => certify::certify_mcm(s),
             CachedSchedule::Align(s) => certify::certify_align(s),
             CachedSchedule::Sdp(s) => certify::certify_sdp(s),
+            CachedSchedule::Viterbi(s) => certify::certify_viterbi(s),
+            CachedSchedule::Cyk(s) => certify::certify_cyk(s),
         }
     }
 }
@@ -162,6 +184,41 @@ impl CacheableSchedule for SdpSchedule {
     fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
         match cached {
             CachedSchedule::Sdp(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl CacheableSchedule for ViterbiSchedule {
+    fn terms(&self) -> usize {
+        1
+    }
+    fn into_cached(this: Arc<Self>) -> CachedSchedule {
+        CachedSchedule::Viterbi(this)
+    }
+    fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
+        match cached {
+            CachedSchedule::Viterbi(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Typed wrapper for the CYK cache entry: the span schedule is a
+/// corrected MCM arena, but it must enter the map as
+/// [`CachedSchedule::Cyk`] so its certificate carries `Family::Cyk`.
+pub struct CykSchedule(pub Arc<McmSchedule>);
+
+impl CacheableSchedule for CykSchedule {
+    fn terms(&self) -> usize {
+        self.0.num_terms()
+    }
+    fn into_cached(this: Arc<Self>) -> CachedSchedule {
+        CachedSchedule::Cyk(this.0.clone())
+    }
+    fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
+        match cached {
+            CachedSchedule::Cyk(s) => Some(Arc::new(CykSchedule(s.clone()))),
             _ => None,
         }
     }
@@ -415,6 +472,31 @@ pub fn sdp_schedule(n: usize, offsets: &[i64]) -> Arc<SdpSchedule> {
     )
 }
 
+/// Fetch (or build and cache) the implicit Viterbi lattice schedule for
+/// `(t, s)`.  O(1) memory — cached, like S-DP, so its [`Certificate`]
+/// amortizes across repeated lattice shapes.
+pub fn viterbi_schedule(t: usize, s: usize) -> Arc<ViterbiSchedule> {
+    ScheduleCache::global()
+        .get_or_insert_with(Key::Viterbi { t, s }, || ViterbiSchedule::new(t, s))
+}
+
+/// Fetch (or compile and cache) the CYK span schedule for `n` words —
+/// the corrected MCM triangular arena under its own cache key (DESIGN.md
+/// §11), so the `Family::Cyk` certificate attaches next to it.
+pub fn cyk_schedule(n: usize, tile: usize) -> Arc<McmSchedule> {
+    let tile = tile.max(1);
+    ScheduleCache::global()
+        .get_or_insert_with(Key::Cyk { n, tile }, || {
+            CykSchedule(Arc::new(McmSchedule::compile_tiled(
+                n,
+                McmVariant::Corrected,
+                tile,
+            )))
+        })
+        .0
+        .clone()
+}
+
 /// Fetch (or compute and attach) the certificate of the cached
 /// `(n, variant, tile)` MCM schedule — the router's serve-time gate
 /// ([`certify::gate_mcm`]) lands here.
@@ -449,6 +531,21 @@ pub fn sdp_certificate(n: usize, offsets: &[i64]) -> Arc<Certificate> {
         },
         &CachedSchedule::Sdp(sched),
     )
+}
+
+/// Fetch (or compute and attach) the certificate of the `(t, s)` Viterbi
+/// lattice schedule — [`certify::gate_viterbi`] lands here.
+pub fn viterbi_certificate(t: usize, s: usize) -> Arc<Certificate> {
+    let sched = viterbi_schedule(t, s);
+    ScheduleCache::global().certificate(Key::Viterbi { t, s }, &CachedSchedule::Viterbi(sched))
+}
+
+/// Fetch (or compute and attach) the certificate of the cached `(n,
+/// tile)` CYK span schedule — [`certify::gate_cyk`] lands here.
+pub fn cyk_certificate(n: usize, tile: usize) -> Arc<Certificate> {
+    let tile = tile.max(1);
+    let sched = cyk_schedule(n, tile);
+    ScheduleCache::global().certificate(Key::Cyk { n, tile }, &CachedSchedule::Cyk(sched))
 }
 
 /// Statistics of the process-wide cache (exported into coordinator
@@ -721,6 +818,35 @@ mod tests {
         // distinct offsets are a distinct shape and certificate
         let c3 = sdp_certificate(48, &[7, 6, 5]);
         assert_ne!(c1.fingerprint, c3.fingerprint);
+    }
+
+    #[test]
+    fn viterbi_and_cyk_entries_cache_with_typed_certificates() {
+        // viterbi: implicit schedule, repeated shapes hit
+        let a = viterbi_schedule(33, 7);
+        let b = viterbi_schedule(33, 7);
+        assert!(Arc::ptr_eq(&a, &b) || (a.t, a.s) == (b.t, b.s));
+        let c1 = viterbi_certificate(33, 7);
+        let c2 = viterbi_certificate(33, 7);
+        assert_eq!(c1, c2);
+        assert_eq!(c1.family, certify::Family::Viterbi);
+        assert!(c1.admissible_strict());
+
+        // cyk: its own entry, its own Family::Cyk certificate, distinct
+        // from the MCM certificate of the identical arena shape
+        let s1 = cyk_schedule(13, 4);
+        let s2 = cyk_schedule(13, 4);
+        assert!(Arc::ptr_eq(&s1, &s2) || s1.num_terms() == s2.num_terms());
+        assert_eq!(s1.variant, McmVariant::Corrected);
+        assert_eq!(s1.tile, 4);
+        let ck = cyk_certificate(13, 4);
+        assert_eq!(ck.family, certify::Family::Cyk);
+        assert!(ck.admissible_strict());
+        let mk = mcm_certificate(13, McmVariant::Corrected, 4);
+        assert_ne!(ck.fingerprint, mk.fingerprint);
+        // second fetch reuses the attached certificate
+        let ck2 = cyk_certificate(13, 4);
+        assert!(Arc::ptr_eq(&ck, &ck2) || *ck == *ck2);
     }
 
     #[test]

@@ -39,7 +39,9 @@ use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::core::conflict::{ConflictReport, Hazard};
-use crate::core::schedule::{grid, linear, AlignSchedule, McmSchedule, McmVariant, SdpSchedule};
+use crate::core::schedule::{
+    grid, linear, AlignSchedule, McmSchedule, McmVariant, SdpSchedule, ViterbiSchedule,
+};
 use crate::{Error, Result};
 
 /// Schedule family a [`DepIr`] (and its [`Certificate`]) describes.
@@ -48,6 +50,8 @@ pub enum Family {
     Mcm,
     Align,
     Sdp,
+    Viterbi,
+    Cyk,
 }
 
 impl Family {
@@ -56,6 +60,8 @@ impl Family {
             Family::Mcm => "mcm",
             Family::Align => "align",
             Family::Sdp => "sdp",
+            Family::Viterbi => "viterbi",
+            Family::Cyk => "cyk",
         }
     }
 }
@@ -372,6 +378,8 @@ pub fn fingerprint(ir: &DepIr) -> u64 {
         Family::Mcm => 1,
         Family::Align => 2,
         Family::Sdp => 3,
+        Family::Viterbi => 4,
+        Family::Cyk => 5,
     });
     h.word(ir.num_cells as u64);
     h.word(ir.arity as u64);
@@ -595,6 +603,57 @@ pub fn lower_sdp(sched: &SdpSchedule) -> DepIr {
     }
 }
 
+/// Lower the implicit Viterbi lattice schedule by materializing its
+/// access lists once — `(t−1)·s` rows of arity `s` (each column-`t` cell
+/// reads the whole of column `t−1`), amortized by the certificate cache
+/// keyed on the `(t, s)` lattice shape.  The IR is the exact access
+/// pattern of one solve, so lowering costs what a single decode costs.
+pub fn lower_viterbi(sched: &ViterbiSchedule) -> DepIr {
+    let (t, s) = (sched.t, sched.s);
+    let steps = sched.num_steps();
+    let rows = steps * s;
+    let mut writes = Vec::with_capacity(rows);
+    let mut reads = Vec::with_capacity(rows * s);
+    for g in 0..steps {
+        let col = g + 1;
+        for state in 0..s {
+            writes.push((col * s + state) as u32);
+            for q in 0..s {
+                reads.push((g * s + q) as u32);
+            }
+        }
+    }
+    let step_offsets = (0..=steps as u32).map(|g| g * s as u32).collect();
+    let finalize = (0..t * s)
+        .map(|x| sched.finalize_step(x).map_or(u32::MAX, |g| g as u32))
+        .collect();
+    DepIr {
+        family: Family::Viterbi,
+        num_cells: t * s,
+        arity: s,
+        tile: 1,
+        step_base: 0,
+        step_offsets,
+        superstep_offsets: (0..=steps as u32).collect(),
+        writes,
+        reads,
+        finalize,
+        unit_of: Vec::new(),
+        writer_of: Vec::new(),
+    }
+}
+
+/// Lower a CYK span schedule.  CYK executes over the *same* corrected
+/// MCM triangular arena (DESIGN.md §11) — a span's `R` nonterminal slots
+/// finalize wholesale with the span, so cell-granularity dependence (and
+/// therefore the hazard proof) is identical; only the family tag (and
+/// hence the fingerprint and admission bookkeeping) differs.
+pub fn lower_cyk(sched: &McmSchedule) -> DepIr {
+    let mut ir = lower_mcm(sched);
+    ir.family = Family::Cyk;
+    ir
+}
+
 /// Lower + certify an MCM schedule.
 pub fn certify_mcm(sched: &McmSchedule) -> Certificate {
     certify(&lower_mcm(sched))
@@ -608,6 +667,17 @@ pub fn certify_align(sched: &AlignSchedule) -> Certificate {
 /// Lower + certify an S-DP pipeline schedule.
 pub fn certify_sdp(sched: &SdpSchedule) -> Certificate {
     certify(&lower_sdp(sched))
+}
+
+/// Lower + certify a Viterbi lattice schedule.
+pub fn certify_viterbi(sched: &ViterbiSchedule) -> Certificate {
+    certify(&lower_viterbi(sched))
+}
+
+/// Lower + certify a CYK span schedule (a corrected MCM arena under the
+/// `Cyk` family tag).
+pub fn certify_cyk(sched: &McmSchedule) -> Certificate {
+    certify(&lower_cyk(sched))
 }
 
 // Serve-path counters behind the coordinator stats snapshot.  Relaxed is
@@ -679,10 +749,26 @@ pub fn gate_sdp(n: usize, offsets: &[i64]) -> Result<()> {
     admit(&cert, ok)
 }
 
+/// Serve-time gate for a native Viterbi decode over a `(t, s)` lattice.
+pub fn gate_viterbi(t: usize, s: usize) -> Result<()> {
+    let cert = crate::core::cache::viterbi_certificate(t, s);
+    let ok = cert.admissible_strict();
+    admit(&cert, ok)
+}
+
+/// Serve-time gate for a native CYK parse over an `n`-word span arena
+/// (`tile = 1` for the fused route, the superstep tile for the pooled
+/// route).
+pub fn gate_cyk(n: usize, tile: usize) -> Result<()> {
+    let cert = crate::core::cache::cyk_certificate(n, tile);
+    let ok = cert.admissible_strict();
+    admit(&cert, ok)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant, SdpSchedule};
+    use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant, SdpSchedule, ViterbiSchedule};
 
     fn corrected_ir(n: usize) -> DepIr {
         lower_mcm(&McmSchedule::compile(n, McmVariant::Corrected))
@@ -706,6 +792,41 @@ mod tests {
         assert!(c.admissible_strict(), "tiled align: {c:?}");
         let c = certify(&lower_sdp(&SdpSchedule::new(64, vec![9, 5, 1])));
         assert!(c.admissible_strict(), "sdp: {c:?}");
+        let c = certify(&lower_viterbi(&ViterbiSchedule::new(12, 5)));
+        assert!(c.admissible_strict(), "viterbi: {c:?}");
+        let c = certify(&lower_cyk(&McmSchedule::compile_tiled(
+            10,
+            McmVariant::Corrected,
+            4,
+        )));
+        assert!(c.admissible_strict(), "cyk: {c:?}");
+    }
+
+    #[test]
+    fn cyk_fingerprint_differs_from_mcm_on_same_arena() {
+        // same arena, different family tag: the certificates must not be
+        // interchangeable between the two served kinds
+        let sched = McmSchedule::compile(9, McmVariant::Corrected);
+        let mcm = certify_mcm(&sched);
+        let cyk = certify_cyk(&sched);
+        assert_ne!(mcm.fingerprint, cyk.fingerprint);
+        assert_eq!(cyk.family, Family::Cyk);
+        assert!(cyk.admissible_strict());
+    }
+
+    #[test]
+    fn viterbi_lattice_shapes_certify_and_degenerate_cases_hold() {
+        // t = 1: no steps, nothing to prove, still admissible
+        let c = certify(&lower_viterbi(&ViterbiSchedule::new(1, 4)));
+        assert!(c.well_formed && c.admissible_strict(), "{c:?}");
+        assert_eq!(c.steps, 0);
+        // a column must not read itself: corrupting one read into the
+        // writer's own column is a staleness hazard the certifier refutes
+        let mut ir = lower_viterbi(&ViterbiSchedule::new(6, 3));
+        ir.reads[0] = ir.writes[0];
+        let c = certify(&ir);
+        assert!(c.raw_hazards > 0, "{c:?}");
+        assert!(!c.admissible_strict());
     }
 
     #[test]
@@ -860,8 +981,11 @@ mod tests {
         gate_align(9, 7, 1).unwrap();
         gate_align(9, 7, 3).unwrap();
         gate_sdp(64, &[9, 5, 1]).unwrap();
+        gate_viterbi(8, 3).unwrap();
+        gate_cyk(7, 1).unwrap();
+        gate_cyk(7, 4).unwrap();
         let after = stats();
-        assert!(after.certified >= before.certified + 6);
+        assert!(after.certified >= before.certified + 9);
     }
 
     #[test]

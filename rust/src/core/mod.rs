@@ -2,6 +2,13 @@
 //! coordination contribution, made explicit.
 //!
 //! * [`semigroup`] — the `⊗` operators of Definition 1.
+//! * [`semiring`] — the `(⊕, ⊗)` algebras behind every served
+//!   recurrence — `(min, +)`, `(max, +)`, counting and log-space
+//!   `(max, ×)` — with the pinned tie-breaking that makes traceback
+//!   deterministic (DESIGN.md §11).
+//! * [`sweep`] — the generic superstep sweep: the one fused /
+//!   cancellable / pooled / pooled-cancellable driver family every
+//!   executor tier instantiates (DESIGN.md §11).
 //! * [`problem`] — validated S-DP and MCM problem instances.
 //! * [`schedule`] — the schedule compiler: Fig. 2 / Fig. 8 pipelines as
 //!   explicit step-synchronous schedules (published-faithful and
@@ -37,4 +44,6 @@ pub mod policy;
 pub mod problem;
 pub mod schedule;
 pub mod semigroup;
+pub mod semiring;
+pub mod sweep;
 pub mod traceback;

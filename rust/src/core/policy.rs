@@ -162,6 +162,11 @@ pub enum Workload {
     Sdp,
     Mcm,
     Align,
+    /// Keyed by state count (the lattice sweep's parallelism is `S`).
+    Viterbi,
+    /// Keyed by sentence length (same triangular structure as MCM, but
+    /// each schedule term fans out into `|rules|` candidates).
+    Cyk,
 }
 
 /// The per-kind crossover tables plus the context they were measured in.
@@ -175,6 +180,8 @@ pub struct PolicyTable {
     pub mcm: CrossoverTable<ExecutorChoice>,
     pub align: CrossoverTable<ExecutorChoice>,
     pub sdp: CrossoverTable<ExecutorChoice>,
+    pub viterbi: CrossoverTable<ExecutorChoice>,
+    pub cyk: CrossoverTable<ExecutorChoice>,
 }
 
 impl PolicyTable {
@@ -189,6 +196,8 @@ impl PolicyTable {
             mcm: CrossoverTable::new(),
             align: CrossoverTable::new(),
             sdp: CrossoverTable::new(),
+            viterbi: CrossoverTable::new(),
+            cyk: CrossoverTable::new(),
         }
     }
 
@@ -197,6 +206,8 @@ impl PolicyTable {
             Workload::Sdp => &self.sdp,
             Workload::Mcm => &self.mcm,
             Workload::Align => &self.align,
+            Workload::Viterbi => &self.viterbi,
+            Workload::Cyk => &self.cyk,
         }
     }
 
@@ -205,6 +216,8 @@ impl PolicyTable {
             Workload::Sdp => &mut self.sdp,
             Workload::Mcm => &mut self.mcm,
             Workload::Align => &mut self.align,
+            Workload::Viterbi => &mut self.viterbi,
+            Workload::Cyk => &mut self.cyk,
         }
     }
 
@@ -248,6 +261,24 @@ impl PolicyTable {
             }
             Workload::Align => {
                 if n < 256 {
+                    ExecutorChoice::Seq
+                } else {
+                    ExecutorChoice::Pooled
+                }
+            }
+            // seq and fused are the same column scan for Viterbi; the
+            // pool pays only when a column holds enough states to split
+            Workload::Viterbi => {
+                if n >= 64 {
+                    ExecutorChoice::Pooled
+                } else {
+                    ExecutorChoice::Fused
+                }
+            }
+            // MCM's triangular crossover, pulled in: every schedule term
+            // carries a |rules| fan-out, so parallelism amortizes sooner
+            Workload::Cyk => {
+                if n < 96 {
                     ExecutorChoice::Seq
                 } else {
                     ExecutorChoice::Pooled
@@ -403,6 +434,9 @@ fn time_min_ns(runs: usize, mut f: impl FnMut()) -> f64 {
 /// Measure the three executors over the config's ladders and build a
 /// [`PolicyTable`].  `keep_going` is polled between sizes so a server
 /// shutting down mid-warmup abandons the remaining measurements.
+/// The log-space families (Viterbi, CYK) are not on the warmup ladder —
+/// their tables stay empty and [`PolicyTable::band_choice`] answers from
+/// the static bands until a bench installs measured rows.
 pub fn calibrate(
     cfg: &CalibrationConfig,
     pool: &ExecPool,
@@ -625,6 +659,13 @@ mod tests {
             ExecutorChoice::Pooled
         );
         assert_eq!(t.band_choice(Workload::Sdp, 128), ExecutorChoice::Fused);
+        assert_eq!(t.band_choice(Workload::Viterbi, 8), ExecutorChoice::Fused);
+        assert_eq!(
+            t.band_choice(Workload::Viterbi, 512),
+            ExecutorChoice::Pooled
+        );
+        assert_eq!(t.band_choice(Workload::Cyk, 12), ExecutorChoice::Seq);
+        assert_eq!(t.band_choice(Workload::Cyk, 512), ExecutorChoice::Pooled);
     }
 
     #[test]

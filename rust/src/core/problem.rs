@@ -1,5 +1,7 @@
-//! Validated problem instances: the S-DP problem of Definition 1 and the
-//! matrix-chain multiplication problem of §IV.
+//! Validated problem instances: the S-DP problem of Definition 1, the
+//! matrix-chain multiplication problem of §IV, the alignment grid
+//! family, and the log-space `(max, ×)` families (Viterbi HMM decoding
+//! and probabilistic CYK parsing, DESIGN.md §11).
 
 use crate::core::semigroup::Op;
 use crate::util::rng::Rng;
@@ -375,6 +377,388 @@ impl AlignProblem {
         let b: Vec<i64> = (0..n.max(1)).map(|_| rng.range(0..alphabet.max(1))).collect();
         AlignProblem::new(a, b, variant, AlignScoring::default())
             .expect("random instance is valid")
+    }
+}
+
+/// Validate one vector of log-probabilities: finite or `−∞` (probability
+/// zero), never `NaN` or `+∞`, and never positive beyond rounding slack —
+/// a log-probability above 0 means a probability above 1 and would let
+/// "scores" grow without bound.
+fn check_logprobs(what: &str, xs: &[f64]) -> Result<()> {
+    for &x in xs {
+        if x.is_nan() || x == f64::INFINITY || x > 1e-9 {
+            return Err(Error::InvalidProblem(format!(
+                "{what} must be log-probabilities (≤ 0 or -inf), got {x}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// A hidden-Markov-model decoding instance (Viterbi): `S` states, `M`
+/// observable symbols, an observation sequence of length `T`, and
+/// transition/emission/initial distributions carried directly in **log
+/// space** (`−∞` = probability 0 — products of hundreds of
+/// probabilities underflow `f64`, so the wire speaks logs too; see
+/// `util::json::Json::lognum`).
+///
+/// The DP is the third canonical family next to S-DP/MCM/alignment: a
+/// `T × S` lattice where column `t` depends only on column `t−1` — the
+/// pipeline schedule is the trivially hazard-free "one superstep per
+/// time step" sweep, and the `(max, ×)` semiring in log space
+/// ([`crate::core::semiring::LogMaxProb`]) is the recurrence algebra.
+#[derive(Debug, Clone)]
+pub struct ViterbiProblem {
+    /// Number of hidden states `S` (≥ 1).
+    pub num_states: usize,
+    /// Observable alphabet size `M` (≥ 1).
+    pub num_symbols: usize,
+    /// Initial log-probabilities, `init[s]`, length `S`.
+    pub init: Vec<f64>,
+    /// Transition log-probabilities, row-major `trans[q·S + s] =
+    /// log P(s | q)`, length `S²`.
+    pub trans: Vec<f64>,
+    /// Emission log-probabilities, row-major `emit[s·M + o] =
+    /// log P(o | s)`, length `S·M`.
+    pub emit: Vec<f64>,
+    /// The observation sequence, each `< M`, length `T` (≥ 1).
+    pub obs: Vec<usize>,
+}
+
+impl ViterbiProblem {
+    /// The traceback sidecar stores backpointers as `u32`, so states
+    /// must fit; the lattice itself is capped like the other arenas.
+    pub const MAX_STATES: usize = u32::MAX as usize;
+    /// `T·S` lattice cells must fit the `u32`-indexed sidecar arena.
+    pub const MAX_CELLS: usize = u32::MAX as usize;
+
+    pub fn new(
+        num_states: usize,
+        num_symbols: usize,
+        init: Vec<f64>,
+        trans: Vec<f64>,
+        emit: Vec<f64>,
+        obs: Vec<usize>,
+    ) -> Result<ViterbiProblem> {
+        let (s, m) = (num_states, num_symbols);
+        if s == 0 || m == 0 {
+            return Err(Error::InvalidProblem(
+                "viterbi needs at least one state and one symbol".into(),
+            ));
+        }
+        if s > Self::MAX_STATES {
+            return Err(Error::InvalidProblem(format!(
+                "{s} states exceed the u32 backpointer limit"
+            )));
+        }
+        if obs.is_empty() {
+            return Err(Error::InvalidProblem(
+                "observation sequence must be non-empty".into(),
+            ));
+        }
+        if init.len() != s || trans.len() != s * s || emit.len() != s * m {
+            return Err(Error::InvalidProblem(format!(
+                "distribution shapes must be init[{s}], trans[{s}x{s}], emit[{s}x{m}]; \
+                 got {}/{}/{}",
+                init.len(),
+                trans.len(),
+                emit.len()
+            )));
+        }
+        if let Some(&o) = obs.iter().find(|&&o| o >= m) {
+            return Err(Error::InvalidProblem(format!(
+                "observation {o} outside the alphabet [0, {m})"
+            )));
+        }
+        if obs.len().checked_mul(s).filter(|&c| c <= Self::MAX_CELLS).is_none() {
+            return Err(Error::InvalidProblem(format!(
+                "lattice {}×{s} exceeds the u32 arena limit",
+                obs.len()
+            )));
+        }
+        check_logprobs("init", &init)?;
+        check_logprobs("trans", &trans)?;
+        check_logprobs("emit", &emit)?;
+        Ok(ViterbiProblem {
+            num_states: s,
+            num_symbols: m,
+            init,
+            trans,
+            emit,
+            obs,
+        })
+    }
+
+    /// Observation count `T` (lattice columns in time).
+    pub fn num_steps(&self) -> usize {
+        self.obs.len()
+    }
+
+    /// Lattice cells, `T·S`.
+    pub fn num_cells(&self) -> usize {
+        self.obs.len() * self.num_states
+    }
+
+    /// The initial lattice: `V[0][s] = init[s] + emit[s][obs[0]]`, later
+    /// columns `−∞` (overwritten by the sweep).
+    pub fn initial_table(&self) -> Vec<f64> {
+        let (s, m) = (self.num_states, self.num_symbols);
+        let mut st = vec![f64::NEG_INFINITY; self.num_cells()];
+        for q in 0..s {
+            st[q] = self.init[q] + self.emit[q * m + self.obs[0]];
+        }
+        st
+    }
+
+    /// Random instance: log-probabilities of proper (normalized)
+    /// distributions with occasional structural zeros, so `−∞` operands
+    /// genuinely occur.
+    pub fn random(
+        rng: &mut Rng,
+        t_range: std::ops::Range<usize>,
+        max_states: usize,
+        max_symbols: usize,
+    ) -> ViterbiProblem {
+        let s = rng.range(1..max_states.max(2) as i64) as usize;
+        let m = rng.range(1..max_symbols.max(2) as i64) as usize;
+        let t = rng.range(t_range.start.max(1) as i64..t_range.end.max(2) as i64) as usize;
+        let mut dist = |len: usize| -> Vec<f64> {
+            // weights in [0, 8]; 0 with probability 1/9 → structural −∞,
+            // but keep at least one reachable entry per row
+            let mut w: Vec<i64> = (0..len).map(|_| rng.range(0..9)).collect();
+            if w.iter().all(|&x| x == 0) {
+                let fix = rng.range(0..len as i64) as usize;
+                w[fix] = 1;
+            }
+            let total: i64 = w.iter().sum();
+            w.into_iter()
+                .map(|x| {
+                    if x == 0 {
+                        f64::NEG_INFINITY
+                    } else {
+                        (x as f64 / total as f64).ln()
+                    }
+                })
+                .collect()
+        };
+        let init = dist(s);
+        let trans: Vec<f64> = (0..s).flat_map(|_| dist(s)).collect();
+        let emit: Vec<f64> = (0..s).flat_map(|_| dist(m)).collect();
+        let obs: Vec<usize> = (0..t).map(|_| rng.range(0..m as i64) as usize).collect();
+        ViterbiProblem::new(s, m, init, trans, emit, obs).expect("random instance is valid")
+    }
+}
+
+/// One CNF production of a [`CykProblem`] grammar: either a binary rule
+/// `A → B C` or a lexical rule `A → word`, with a log-probability.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CykRule {
+    /// Left-hand nonterminal `A`.
+    pub lhs: u32,
+    /// First right-hand nonterminal `B` (binary rules).
+    pub rhs_b: u32,
+    /// Second right-hand nonterminal `C` (binary rules).
+    pub rhs_c: u32,
+    /// Rule log-probability.
+    pub logp: f64,
+}
+
+/// A probabilistic CYK parsing instance: a CNF grammar over `R`
+/// nonterminals (nonterminal 0 is the start symbol) and a sentence of
+/// terminal indices.  Like [`ViterbiProblem`], probabilities are carried
+/// in log space end to end.
+///
+/// The DP shares the matrix-chain family's *triangular* dependence
+/// structure exactly — span `[i, j]` combines splits `[i, m] + [m+1, j]`
+/// — so the engine reuses the cached corrected MCM schedule arena: one
+/// MCM "term" (a `(tgt, l, r)` split triple) becomes `|binary rules|`
+/// log-space candidates (DESIGN.md §11).
+#[derive(Debug, Clone)]
+pub struct CykProblem {
+    /// Number of nonterminals `R` (start symbol = 0).
+    pub num_nonterminals: usize,
+    /// Terminal alphabet size.
+    pub num_terminals: usize,
+    /// Binary rules `A → B C`.
+    pub binary: Vec<CykRule>,
+    /// Lexical rules `A → t`, as `(lhs, terminal, logp)`.
+    pub lexical: Vec<(u32, u32, f64)>,
+    /// The sentence, each terminal `< num_terminals`, length ≥ 1.
+    pub words: Vec<usize>,
+}
+
+impl CykProblem {
+    /// The traceback sidecar packs `(split << 16) | rule` into one `u32`
+    /// per (span, nonterminal) slot, capping sentences at 2¹⁶ − 1 words…
+    pub const MAX_WORDS: usize = u16::MAX as usize;
+    /// …and grammars at 2¹⁶ binary rules.
+    pub const MAX_BINARY_RULES: usize = 1 << 16;
+
+    pub fn new(
+        num_nonterminals: usize,
+        num_terminals: usize,
+        binary: Vec<CykRule>,
+        lexical: Vec<(u32, u32, f64)>,
+        words: Vec<usize>,
+    ) -> Result<CykProblem> {
+        let r = num_nonterminals;
+        if r == 0 || num_terminals == 0 {
+            return Err(Error::InvalidProblem(
+                "cyk needs at least one nonterminal and one terminal".into(),
+            ));
+        }
+        if words.is_empty() {
+            return Err(Error::InvalidProblem("sentence must be non-empty".into()));
+        }
+        if words.len() > Self::MAX_WORDS {
+            return Err(Error::InvalidProblem(format!(
+                "sentence length {} exceeds the 16-bit split-sidecar limit {}",
+                words.len(),
+                Self::MAX_WORDS
+            )));
+        }
+        if binary.len() > Self::MAX_BINARY_RULES {
+            return Err(Error::InvalidProblem(format!(
+                "{} binary rules exceed the 16-bit rule-sidecar limit {}",
+                binary.len(),
+                Self::MAX_BINARY_RULES
+            )));
+        }
+        if let Some(&w) = words.iter().find(|&&w| w >= num_terminals) {
+            return Err(Error::InvalidProblem(format!(
+                "terminal {w} outside the alphabet [0, {num_terminals})"
+            )));
+        }
+        for rule in &binary {
+            if rule.lhs as usize >= r || rule.rhs_b as usize >= r || rule.rhs_c as usize >= r {
+                return Err(Error::InvalidProblem(format!(
+                    "binary rule {} -> {} {} references a nonterminal outside [0, {r})",
+                    rule.lhs, rule.rhs_b, rule.rhs_c
+                )));
+            }
+        }
+        for &(lhs, term, _) in &lexical {
+            if lhs as usize >= r || term as usize >= num_terminals {
+                return Err(Error::InvalidProblem(format!(
+                    "lexical rule {lhs} -> '{term}' out of range"
+                )));
+            }
+        }
+        check_logprobs(
+            "binary rule probabilities",
+            &binary.iter().map(|rl| rl.logp).collect::<Vec<_>>(),
+        )?;
+        check_logprobs(
+            "lexical rule probabilities",
+            &lexical.iter().map(|&(_, _, p)| p).collect::<Vec<_>>(),
+        )?;
+        Ok(CykProblem {
+            num_nonterminals: r,
+            num_terminals,
+            binary,
+            lexical,
+            words,
+        })
+    }
+
+    /// Sentence length `n` (the MCM chain length the schedule is keyed
+    /// on).
+    pub fn n(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Spans in the triangular table, `n(n+1)/2` — the MCM cell count.
+    pub fn num_spans(&self) -> usize {
+        self.n() * (self.n() + 1) / 2
+    }
+
+    /// Value-table slots: one log-probability per (span, nonterminal).
+    pub fn num_cells(&self) -> usize {
+        self.num_spans() * self.num_nonterminals
+    }
+
+    /// Best lexical derivation for `A → words[i]` under the pinned
+    /// tie-break (strictly-better only, so the lowest-index rule wins
+    /// ties) — the diagonal initialization and, at reconstruction time,
+    /// the leaf re-derivation.
+    pub fn lexical_best(&self, nt: usize, word: usize) -> f64 {
+        let mut best = f64::NEG_INFINITY;
+        for &(lhs, term, logp) in &self.lexical {
+            if lhs as usize == nt && term as usize == word && logp > best {
+                best = logp;
+            }
+        }
+        best
+    }
+
+    /// The initial triangular table (`num_cells` slots): diagonal spans
+    /// hold their lexical bests, everything else `−∞`.
+    pub fn initial_table(&self) -> Vec<f64> {
+        let (n, r) = (self.n(), self.num_nonterminals);
+        let mut st = vec![f64::NEG_INFINITY; self.num_cells()];
+        for i in 0..n {
+            // diagonal span [i, i] in the MCM linear triangular layout
+            let cell = crate::core::schedule::linear::cell_index(n, i, i);
+            for nt in 0..r {
+                st[cell * r + nt] = self.lexical_best(nt, self.words[i]);
+            }
+        }
+        st
+    }
+
+    /// A tiny unambiguous arithmetic grammar (the worked example in
+    /// docs/PROTOCOL.md): `S → S S | a`, probability ½ each.
+    pub fn balanced_example(len: usize) -> CykProblem {
+        let half = 0.5f64.ln();
+        CykProblem::new(
+            1,
+            1,
+            vec![CykRule {
+                lhs: 0,
+                rhs_b: 0,
+                rhs_c: 0,
+                logp: half,
+            }],
+            vec![(0, 0, half)],
+            vec![0; len.max(1)],
+        )
+        .expect("static instance")
+    }
+
+    /// Random instance: dense-ish random CNF grammar (every nonterminal
+    /// gets at least one lexical rule, so parses usually exist) and a
+    /// random sentence.
+    pub fn random(
+        rng: &mut Rng,
+        n_range: std::ops::Range<usize>,
+        max_nonterminals: usize,
+        max_terminals: usize,
+    ) -> CykProblem {
+        let r = rng.range(1..max_nonterminals.max(2) as i64) as usize;
+        let t = rng.range(1..max_terminals.max(2) as i64) as usize;
+        let n = rng.range(n_range.start.max(1) as i64..n_range.end.max(2) as i64) as usize;
+        let logp = |rng: &mut Rng| (rng.range(1..9) as f64 / 8.0).ln();
+        let nbin = rng.range(1..(3 * r).max(2) as i64) as usize;
+        let binary: Vec<CykRule> = (0..nbin)
+            .map(|_| CykRule {
+                lhs: rng.range(0..r as i64) as u32,
+                rhs_b: rng.range(0..r as i64) as u32,
+                rhs_c: rng.range(0..r as i64) as u32,
+                logp: logp(rng),
+            })
+            .collect();
+        let mut lexical: Vec<(u32, u32, f64)> = (0..r)
+            .map(|nt| (nt as u32, rng.range(0..t as i64) as u32, logp(rng)))
+            .collect();
+        for _ in 0..rng.range(0..(r + 1) as i64) {
+            lexical.push((
+                rng.range(0..r as i64) as u32,
+                rng.range(0..t as i64) as u32,
+                logp(rng),
+            ));
+        }
+        let words: Vec<usize> = (0..n).map(|_| rng.range(0..t as i64) as usize).collect();
+        CykProblem::new(r, t, binary, lexical, words).expect("random instance is valid")
     }
 }
 

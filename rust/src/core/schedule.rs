@@ -992,6 +992,50 @@ impl SdpSchedule {
     }
 }
 
+/// The Viterbi lattice schedule, kept implicit (it is affine in `t`): at
+/// step `g` every state `s` of column `t = g + 1` is computed from the
+/// whole of column `t − 1`, so supersteps are exactly the time axis and
+/// nothing needs materializing for execution.  This type exists so the
+/// certifier can lower the access pattern to the generic dependence IR
+/// ([`crate::core::certify::lower_viterbi`]) and the schedule cache can
+/// amortize the resulting [`crate::core::certify::Certificate`] across
+/// repeated `(t, s)` lattice shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ViterbiSchedule {
+    /// Number of observations (lattice columns).
+    pub t: usize,
+    /// Number of hidden states (lattice rows).
+    pub s: usize,
+}
+
+impl ViterbiSchedule {
+    pub fn new(t: usize, s: usize) -> ViterbiSchedule {
+        ViterbiSchedule { t, s }
+    }
+
+    /// Steps after the initial column: one per time index `1 ..< t`.
+    pub fn num_steps(&self) -> usize {
+        self.t.saturating_sub(1)
+    }
+
+    /// Flat lattice size `t · s` (column-major in `t`: cell `(t, s)` is
+    /// index `t·S + s`).
+    pub fn num_cells(&self) -> usize {
+        self.t * self.s
+    }
+
+    /// Step after which lattice cell `x` is final: column 0 is initial
+    /// data, column `t` finalizes at step `t − 1`.
+    pub fn finalize_step(&self, x: usize) -> Option<usize> {
+        let t = x / self.s.max(1);
+        if t == 0 {
+            None
+        } else {
+            Some(t - 1)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,331 @@
+//! The semiring algebra behind every served recurrence (DESIGN.md §11).
+//!
+//! The schedule compiler orders table cells by *dependence* and nothing
+//! else: the Fig. 8 pipeline neither knows nor cares whether a term is
+//! combined with `min` (matrix-chain cost), `max` (alignment score) or a
+//! log-space product (Viterbi path probability).  This module makes that
+//! algebraic seam explicit so one generic sweep ([`crate::core::sweep`])
+//! can serve every family:
+//!
+//! * [`Semiring`] — `⊕`/`⊗` with identities [`Semiring::zero`] (the `⊕`
+//!   identity and `⊗` annihilator: "no path yet") and [`Semiring::one`]
+//!   (the `⊗` identity: "the empty extension").
+//! * [`MinPlus`] — `(min, +)` over `i64`: MCM cost, edit distance.
+//! * [`MaxPlus`] — `(max, +)` over `i64`: LCS length, local alignment.
+//! * [`LogMaxProb`] — `(max, ×)` over probabilities, carried in log
+//!   space as `(max, +)` over `f64` with `zero = −∞`: Viterbi decoding
+//!   and probabilistic CYK.  Log space is not cosmetic: products of
+//!   hundreds of probabilities underflow `f64` directly, and the wire
+//!   must then round-trip `−∞` (see `util::json::Json::lognum`).
+//!
+//! ## Pinned tie-breaking (traceback determinism)
+//!
+//! Optimal DP solutions are rarely unique; reconstruction is only
+//! reproducible if every executor resolves ties identically.  The pin is
+//! [`Semiring::improves`]: a candidate replaces the running best **only
+//! when strictly better** under `⊕`.  Since every sweep visits a cell's
+//! candidates in ascending (term, split, rule) order, the recorded
+//! argbest is always the *lowest-index* witness — the same tie-break the
+//! sequential oracles and the Python reference pin (DESIGN.md §8), now
+//! stated once instead of re-derived in each hand-rolled loop.
+
+/// A semiring `(V, ⊕, ⊗, 0, 1)` driving one DP recurrence.
+///
+/// Laws the property tests below check (on representative operands —
+/// `i64` `+` wraps and `f64` `+` is non-associative in the last ulp, so
+/// the laws are exact for the value ranges DP tables actually hold):
+/// `⊕` associative + commutative with identity `zero`, `⊗` associative
+/// with identity `one`, `zero` annihilates `⊗`, and `improves` is a
+/// strict order agreeing with `⊕` (`improves(a, b) ⇒ combine(a, b) = a`).
+pub trait Semiring: Copy + Send + Sync + 'static {
+    /// Table value type.
+    type V: Copy + PartialEq + Send + Sync + std::fmt::Debug;
+
+    /// The `⊕` identity ("no candidate yet"); also annihilates `⊗`.
+    fn zero(&self) -> Self::V;
+
+    /// The `⊗` identity (the empty extension).
+    fn one(&self) -> Self::V;
+
+    /// Accumulate candidates: `a ⊕ b`.
+    fn combine(&self, a: Self::V, b: Self::V) -> Self::V;
+
+    /// Extend a partial solution: `a ⊗ b`.
+    fn extend(&self, a: Self::V, b: Self::V) -> Self::V;
+
+    /// The pinned tie-break: `true` iff `candidate` must replace
+    /// `current` as the running `⊕`-best.  Strict ("first witness
+    /// wins"), so ascending candidate order keeps the lowest-index
+    /// argbest — bit-identical to the sequential oracles.
+    fn improves(&self, candidate: Self::V, current: Self::V) -> bool;
+}
+
+/// `(min, +)` over `i64` — MCM scalar-multiplication cost, edit
+/// distance, shortest paths.  `zero = i64::MAX` (an unreachable cell
+/// loses every `min`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    type V = i64;
+
+    #[inline(always)]
+    fn zero(&self) -> i64 {
+        i64::MAX
+    }
+
+    #[inline(always)]
+    fn one(&self) -> i64 {
+        0
+    }
+
+    #[inline(always)]
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a.min(b)
+    }
+
+    #[inline(always)]
+    fn extend(&self, a: i64, b: i64) -> i64 {
+        // wrapping: matches the release-mode behaviour of the historical
+        // hand-rolled loops (debug builds assert in the executors'
+        // oracle property tests instead)
+        a.wrapping_add(b)
+    }
+
+    #[inline(always)]
+    fn improves(&self, candidate: i64, current: i64) -> bool {
+        candidate < current
+    }
+}
+
+/// `(max, +)` over `i64` — LCS length, local-alignment score, longest
+/// paths.  `zero = i64::MIN`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MaxPlus;
+
+impl Semiring for MaxPlus {
+    type V = i64;
+
+    #[inline(always)]
+    fn zero(&self) -> i64 {
+        i64::MIN
+    }
+
+    #[inline(always)]
+    fn one(&self) -> i64 {
+        0
+    }
+
+    #[inline(always)]
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a.max(b)
+    }
+
+    #[inline(always)]
+    fn extend(&self, a: i64, b: i64) -> i64 {
+        a.wrapping_add(b)
+    }
+
+    #[inline(always)]
+    fn improves(&self, candidate: i64, current: i64) -> bool {
+        candidate > current
+    }
+}
+
+/// The counting semiring `(+, ×)` over `i64` (both wrapping) — path
+/// counting, e.g. the S-DP `Add` operator's Fibonacci-style recurrences.
+/// `⊕ = +` keeps no argbest (every candidate contributes), so
+/// [`Semiring::improves`] is constantly `false` and counting rings never
+/// drive a traceback recorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SumProd;
+
+impl Semiring for SumProd {
+    type V = i64;
+
+    #[inline(always)]
+    fn zero(&self) -> i64 {
+        0
+    }
+
+    #[inline(always)]
+    fn one(&self) -> i64 {
+        1
+    }
+
+    #[inline(always)]
+    fn combine(&self, a: i64, b: i64) -> i64 {
+        a.wrapping_add(b)
+    }
+
+    #[inline(always)]
+    fn extend(&self, a: i64, b: i64) -> i64 {
+        a.wrapping_mul(b)
+    }
+
+    #[inline(always)]
+    fn improves(&self, _candidate: i64, _current: i64) -> bool {
+        false
+    }
+}
+
+/// `(max, ×)` over probabilities, carried in log space: `⊕ = max`,
+/// `⊗ = +` over `f64` log-probabilities, `zero = −∞` (probability 0,
+/// an unreachable state), `one = 0.0` (probability 1).  Viterbi HMM
+/// decoding and probabilistic CYK parsing.
+///
+/// `improves` uses a strict `>`, so `NaN` candidates (which should
+/// never arise from finite inputs — `−∞ + −∞ = −∞`, not `NaN`, and
+/// validated problems carry no `+∞`) never replace a running best, and
+/// ties keep the lowest-index witness like the integer rings.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LogMaxProb;
+
+impl Semiring for LogMaxProb {
+    type V = f64;
+
+    #[inline(always)]
+    fn zero(&self) -> f64 {
+        f64::NEG_INFINITY
+    }
+
+    #[inline(always)]
+    fn one(&self) -> f64 {
+        0.0
+    }
+
+    #[inline(always)]
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        // not f64::max: max(-inf, -inf) and ordering with the strict
+        // improves must agree, and we want the *first* operand kept on
+        // ties (lowest-index witness)
+        if b > a {
+            b
+        } else {
+            a
+        }
+    }
+
+    #[inline(always)]
+    fn extend(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    #[inline(always)]
+    fn improves(&self, candidate: f64, current: f64) -> bool {
+        candidate > current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    fn check_laws<S: Semiring>(ring: S, xs: &[S::V], eq: impl Fn(S::V, S::V) -> bool) {
+        let z = ring.zero();
+        let o = ring.one();
+        for &a in xs {
+            assert!(eq(ring.combine(a, z), a), "a ⊕ 0 = a");
+            assert!(eq(ring.combine(z, a), a), "0 ⊕ a = a");
+            assert!(eq(ring.extend(a, o), a), "a ⊗ 1 = a");
+            assert!(eq(ring.extend(o, a), a), "1 ⊗ a = a");
+            assert!(!ring.improves(a, a), "improves is strict");
+            for &b in xs {
+                assert!(
+                    eq(ring.combine(a, b), ring.combine(b, a)),
+                    "⊕ commutative"
+                );
+                if ring.improves(a, b) {
+                    assert!(eq(ring.combine(a, b), a), "improves agrees with ⊕");
+                    assert!(!ring.improves(b, a), "improves antisymmetric");
+                }
+                for &c in xs {
+                    assert!(
+                        eq(
+                            ring.combine(ring.combine(a, b), c),
+                            ring.combine(a, ring.combine(b, c))
+                        ),
+                        "⊕ associative"
+                    );
+                    assert!(
+                        eq(
+                            ring.extend(ring.extend(a, b), c),
+                            ring.extend(a, ring.extend(b, c))
+                        ),
+                        "⊗ associative"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_plus_laws() {
+        forall("min-plus semiring laws", 60, |g| {
+            let xs: Vec<i64> = (0..4).map(|_| g.i64(-1_000_000..1_000_000)).collect();
+            check_laws(MinPlus, &xs, |a, b| a == b);
+            Ok(())
+        });
+        // zero annihilates ⊗ for in-range operands (MAX + finite stays
+        // the loser of every min in the executors' value ranges)
+        assert_eq!(MinPlus.combine(MinPlus.zero(), 7), 7);
+        assert!(MinPlus.improves(7, MinPlus.zero()));
+    }
+
+    #[test]
+    fn max_plus_laws() {
+        forall("max-plus semiring laws", 60, |g| {
+            let xs: Vec<i64> = (0..4).map(|_| g.i64(-1_000_000..1_000_000)).collect();
+            check_laws(MaxPlus, &xs, |a, b| a == b);
+            Ok(())
+        });
+        assert!(MaxPlus.improves(-3, MaxPlus.zero()));
+    }
+
+    #[test]
+    fn sum_prod_laws() {
+        forall("counting semiring laws", 60, |g| {
+            let xs: Vec<i64> = (0..4).map(|_| g.i64(-1_000..1_000)).collect();
+            check_laws(SumProd, &xs, |a, b| a == b);
+            Ok(())
+        });
+        // 0 annihilates ⊗ exactly in the counting ring
+        assert_eq!(SumProd.extend(SumProd.zero(), 7), 0);
+        // no argbest: counting rings never drive a recorder
+        assert!(!SumProd.improves(1, 0));
+    }
+
+    #[test]
+    fn log_max_prob_laws() {
+        forall("log-space semiring laws", 60, |g| {
+            // exact-in-f64 log-probs (multiples of 1/64) so ⊗ = +
+            // associates exactly; −∞ joins the pool to cover the
+            // annihilator paths
+            let mut xs: Vec<f64> = (0..3)
+                .map(|_| g.i64(-640_000..0) as f64 / 64.0)
+                .collect();
+            xs.push(f64::NEG_INFINITY);
+            check_laws(LogMaxProb, &xs, |a, b| a == b || (a.is_nan() && b.is_nan()));
+            Ok(())
+        });
+        let r = LogMaxProb;
+        // −∞ is the ⊕ identity and the ⊗ annihilator
+        assert_eq!(r.combine(r.zero(), -3.5), -3.5);
+        assert_eq!(r.extend(r.zero(), -3.5), f64::NEG_INFINITY);
+        assert!(r.improves(-900.0, r.zero()));
+        assert!(!r.improves(r.zero(), r.zero()));
+        // NaN candidates never displace a running best
+        assert!(!r.improves(f64::NAN, -1.0));
+    }
+
+    #[test]
+    fn ties_keep_first_witness() {
+        // the pinned tie-break: ascending-order sweeps keep the lowest
+        // index, for every ring
+        assert!(!MinPlus.improves(5, 5));
+        assert!(!MaxPlus.improves(5, 5));
+        assert!(!LogMaxProb.improves(-2.0, -2.0));
+        assert_eq!(LogMaxProb.combine(-2.0, -2.0), -2.0);
+    }
+}

@@ -1,0 +1,414 @@
+//! The generic superstep sweep (DESIGN.md §11): one driver family for
+//! every barrier-synchronous executor tier.
+//!
+//! Before this module, each workload family (MCM, alignment, S-DP)
+//! hand-rolled four executor tiers — fused, cancellable, pooled and
+//! pooled-cancellable — re-deriving the same sweep control each time:
+//! the `CANCEL_POLL_STRIDE` polling loop, the [`SenseBarrier`] superstep
+//! protocol, the `parties ≤ 1` serial fallbacks, and the cancellation
+//! *cut protocol* (party 0 publishes the first superstep every party must
+//! skip, so all parties perform identical barrier waits and the pool is
+//! released within one round of the deadline firing).  The recurrences
+//! differ; the sweep control never did.  This module states it once:
+//!
+//! * [`SweepKernel`] — what a family provides: its superstep count and
+//!   "run party `t`'s share of superstep `g`".  The table, the schedule
+//!   and the semiring ([`crate::core::semiring`]) live inside the kernel;
+//!   monomorphization specializes each driver per kernel, so the fused
+//!   hot loops compile to the same code as the hand-rolled originals.
+//! * [`run_fused`] / [`run_cancellable`] / [`run_pooled_counted`] /
+//!   [`run_pooled_cancellable_counted`] — the four tiers, each preserving
+//!   the historical executors' observable behaviour exactly: never-token
+//!   short-circuits, expired-at-entry tokens that never engage the pool
+//!   (zero barrier rounds), and barrier-round counts the sync-budget
+//!   tests assert on.
+//!
+//! Kernels may override [`SweepKernel::sweep_serial`] with a flat arena
+//! loop: hazard-free schedules need no superstep boundaries serially, and
+//! the flat form is the §Perf fused hot path the `schedule_repr` bench
+//! gates (< 5% ns/cell vs the pre-lift executors).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::runtime::exec_pool::{
+    cancelled, CancelToken, ExecPool, SenseBarrier, CANCEL_POLL_STRIDE,
+};
+
+/// A raw shared table pointer for barrier-synchronous executors — the
+/// generic sibling of the historical `sdp::naive::SharedTable`, typed so
+/// integer (`i64`) and log-space (`f64`) kernels share one definition.
+pub struct SharedSlice<T>(*mut T);
+
+// SAFETY: the wrapped pointer is only dereferenced through the `read`/
+// `write` contracts below — disjoint writes, barrier-separated
+// supersteps (the SweepKernel discipline).
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+// SAFETY: same argument as `Sync`; the pointer itself is plain data.
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+
+impl<T: Copy> SharedSlice<T> {
+    pub fn new(ptr: *mut T) -> Self {
+        SharedSlice(ptr)
+    }
+
+    /// # Safety
+    /// Caller upholds the struct invariant: `i` is in bounds of the
+    /// allocation and no other thread writes it concurrently
+    /// (barrier-separated supersteps).
+    #[inline(always)]
+    pub unsafe fn read(&self, i: usize) -> T {
+        // SAFETY: in bounds and race-free by the caller's contract above.
+        unsafe { *self.0.add(i) }
+    }
+
+    /// # Safety
+    /// Caller upholds the struct invariant: `i` is in bounds and this
+    /// thread is its only accessor until the next barrier.
+    #[inline(always)]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        // SAFETY: in bounds and exclusively owned by the caller's
+        // contract.
+        unsafe { *self.0.add(i) = v }
+    }
+}
+
+/// One workload family's recurrence, packaged for the generic drivers.
+///
+/// The kernel owns (pointers to) the problem, the compiled schedule and
+/// the table; the drivers own the sweep control.  The division of
+/// obligations mirrors the historical executors:
+///
+/// * The **driver** (caller of [`SweepKernel::superstep_party`])
+///   guarantees the sweep discipline: supersteps are visited in order
+///   `0..num_supersteps()`; within one superstep every call uses the same
+///   `parties` and distinct `party < parties` values; supersteps are
+///   separated by barriers when `parties > 1` (serial sweeps pass
+///   `parties = 1` and need none).
+/// * The **kernel** guarantees that under that discipline its table
+///   accesses are in-bounds and race-free — for the schedule-driven
+///   families this is exactly the certified hazard-freedom argument
+///   (operands finalize in earlier supersteps, write ownership partitions
+///   by party; see each implementor's SAFETY notes).
+pub trait SweepKernel: Sync {
+    /// Number of barrier-separated supersteps in the sweep.
+    fn num_supersteps(&self) -> usize;
+
+    /// Upper bound on useful parties (e.g. the schedule's max step
+    /// width); the pooled drivers clamp to it.
+    fn max_parties(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Execute party `party`'s share of superstep `g`.
+    ///
+    /// # Safety
+    /// Caller upholds the driver discipline documented on the trait.
+    unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize);
+
+    /// Serial sweep of the whole arena — the fused hot path.  The
+    /// default walks supersteps in order with one party; kernels whose
+    /// serial form needs no superstep boundaries (hazard-free flat
+    /// arenas) override it with a flat loop.
+    ///
+    /// # Safety
+    /// Caller guarantees exclusive access to the kernel's table for the
+    /// duration of the call (the single-threaded case of the driver
+    /// discipline).
+    unsafe fn sweep_serial(&self) {
+        for g in 0..self.num_supersteps() {
+            // SAFETY: serial calls trivially satisfy the discipline.
+            unsafe { self.superstep_party(g, 0, 1) };
+        }
+    }
+}
+
+/// The fused serial tier: one flat (or superstep-ordered) sweep, no
+/// polling, no barriers.
+pub fn run_fused<K: SweepKernel>(kernel: &K) {
+    // SAFETY: single-threaded sweep over a kernel constructed around an
+    // exclusively-borrowed table (the SweepKernel discipline).
+    unsafe { kernel.sweep_serial() }
+}
+
+/// The serial cancellable tier: polls the token every
+/// [`CANCEL_POLL_STRIDE`] supersteps, abandoning the table with
+/// `Err(Timeout)` once it fires.  A never-token delegates to the fused
+/// fast path — the common path pays nothing.
+pub fn run_cancellable<K: SweepKernel>(kernel: &K, token: &CancelToken) -> crate::Result<()> {
+    if token.is_never() {
+        run_fused(kernel);
+        return Ok(());
+    }
+    token.check()?;
+    for g in 0..kernel.num_supersteps() {
+        if g % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
+            return cancelled();
+        }
+        // SAFETY: serial in-order sweep — the SweepKernel discipline.
+        unsafe { kernel.superstep_party(g, 0, 1) };
+    }
+    Ok(())
+}
+
+fn clamp_parties<K: SweepKernel>(kernel: &K, pool: &ExecPool, threads: usize) -> usize {
+    threads
+        .max(1)
+        .min(pool.threads())
+        .min(kernel.max_parties().max(1))
+}
+
+/// The pooled tier: resident [`ExecPool`] workers, one [`SenseBarrier`]
+/// wait per superstep, returning the barrier rounds it cost (the
+/// observability hook the superstep sync-budget tests assert on).
+/// `parties ≤ 1` falls back to the fused serial sweep at zero rounds.
+pub fn run_pooled_counted<K: SweepKernel>(kernel: &K, pool: &ExecPool, threads: usize) -> u64 {
+    let parties = clamp_parties(kernel, pool, threads);
+    if parties <= 1 {
+        run_fused(kernel);
+        return 0;
+    }
+    let barrier = SenseBarrier::new(parties);
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for g in 0..kernel.num_supersteps() {
+            // SAFETY: in-order supersteps, distinct parties per round,
+            // barrier-separated below — the SweepKernel discipline.
+            unsafe { kernel.superstep_party(g, t, parties) };
+            waiter.wait(); // end of superstep
+        }
+    });
+    barrier.rounds()
+}
+
+/// The pooled cancellable tier, via the superstep cut protocol: party 0
+/// polls the [`CancelToken`] at the *end* of each superstep and publishes
+/// the first superstep index every party must skip, *before* its barrier
+/// wait.  The break check compares superstep indices rather than a
+/// boolean, so a party that happens to observe the publication within the
+/// very superstep it was made still finishes that superstep and breaks
+/// one barrier later — all parties perform identical barrier waits (an
+/// inconsistent boolean flag could strand the barrier with a missing
+/// arrival), and the pool is released within one barrier round of the
+/// deadline firing.  An expired-at-entry token never engages the pool
+/// (zero rounds); a never-token delegates to [`run_pooled_counted`].
+pub fn run_pooled_cancellable_counted<K: SweepKernel>(
+    kernel: &K,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> (crate::Result<()>, u64) {
+    if token.is_never() {
+        return (Ok(()), run_pooled_counted(kernel, pool, threads));
+    }
+    if token.is_cancelled() {
+        return (cancelled(), 0);
+    }
+    let parties = clamp_parties(kernel, pool, threads);
+    if parties <= 1 {
+        return (run_cancellable(kernel, token), 0);
+    }
+    let barrier = SenseBarrier::new(parties);
+    let cut_at = AtomicUsize::new(usize::MAX);
+    pool.run(parties, |t| {
+        let mut waiter = barrier.waiter();
+        for g in 0..kernel.num_supersteps() {
+            // a cut published at the end of superstep s names s+1: false
+            // for every party still inside superstep s, true for every
+            // party at the top of s+1 (the publication happens-before
+            // their return from the superstep-s barrier)
+            if cut_at.load(Ordering::Relaxed) <= g {
+                break;
+            }
+            // SAFETY: as in `run_pooled_counted`; cancellation only ever
+            // cuts whole supersteps, never mid-superstep writes.
+            unsafe { kernel.superstep_party(g, t, parties) };
+            if t == 0 && token.is_cancelled() {
+                cut_at.store(g + 1, Ordering::Relaxed);
+            }
+            waiter.wait(); // end of superstep
+        }
+    });
+    if cut_at.load(Ordering::Relaxed) != usize::MAX {
+        return (cancelled(), barrier.rounds());
+    }
+    (Ok(()), barrier.rounds())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy kernel: a `rows × cols` grid where row `g + 1` cell `w` is
+    /// `grid[g][w] + w + 1`, cells owned `w % parties`.  Dependences only
+    /// cross superstep boundaries, so it satisfies the kernel contract
+    /// under any party count.
+    struct Ladder {
+        rows: usize,
+        cols: usize,
+        st: SharedSlice<i64>,
+    }
+
+    impl SweepKernel for Ladder {
+        fn num_supersteps(&self) -> usize {
+            self.rows - 1
+        }
+
+        fn max_parties(&self) -> usize {
+            self.cols
+        }
+
+        unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+            for w in 0..self.cols {
+                if w % parties != party {
+                    continue;
+                }
+                // SAFETY: reads land on the barrier-finalized previous
+                // row; the write cell is owned by this party.
+                unsafe {
+                    let v = self.st.read(g * self.cols + w);
+                    self.st.write((g + 1) * self.cols + w, v + w as i64 + 1);
+                }
+            }
+        }
+    }
+
+    fn expected(rows: usize, cols: usize) -> Vec<i64> {
+        let mut want = vec![0i64; rows * cols];
+        for r in 1..rows {
+            for w in 0..cols {
+                want[r * cols + w] = want[(r - 1) * cols + w] + w as i64 + 1;
+            }
+        }
+        want
+    }
+
+    fn ladder(rows: usize, cols: usize, st: &mut [i64]) -> Ladder {
+        assert_eq!(st.len(), rows * cols);
+        Ladder {
+            rows,
+            cols,
+            st: SharedSlice::new(st.as_mut_ptr()),
+        }
+    }
+
+    #[test]
+    fn fused_and_pooled_agree_across_parties() {
+        let pool = ExecPool::new(4);
+        for (rows, cols) in [(2usize, 1usize), (5, 3), (9, 8), (17, 5)] {
+            let want = expected(rows, cols);
+            let mut st = vec![0i64; rows * cols];
+            run_fused(&ladder(rows, cols, &mut st));
+            assert_eq!(st, want, "fused {rows}x{cols}");
+            for threads in [1usize, 2, 4, 8] {
+                let mut st = vec![0i64; rows * cols];
+                let rounds = run_pooled_counted(&ladder(rows, cols, &mut st), &pool, threads);
+                assert_eq!(st, want, "pooled {rows}x{cols} threads={threads}");
+                if threads.min(pool.threads()).min(cols) > 1 {
+                    assert_eq!(rounds as usize, rows - 1, "one barrier per superstep");
+                } else {
+                    assert_eq!(rounds, 0, "serial fallback must not engage the barrier");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cancellable_with_never_or_live_token_matches() {
+        let pool = ExecPool::new(4);
+        let (rows, cols) = (12usize, 4usize);
+        let want = expected(rows, cols);
+        let live = CancelToken::after(std::time::Duration::from_secs(600));
+
+        let mut st = vec![0i64; rows * cols];
+        run_cancellable(&ladder(rows, cols, &mut st), &CancelToken::never()).unwrap();
+        assert_eq!(st, want);
+
+        let mut st = vec![0i64; rows * cols];
+        run_cancellable(&ladder(rows, cols, &mut st), &live).unwrap();
+        assert_eq!(st, want);
+
+        let mut st = vec![0i64; rows * cols];
+        let (r, _) =
+            run_pooled_cancellable_counted(&ladder(rows, cols, &mut st), &pool, 4, &live);
+        r.unwrap();
+        assert_eq!(st, want);
+    }
+
+    #[test]
+    fn expired_deadline_never_engages_pool() {
+        let pool = ExecPool::new(4);
+        let (rows, cols) = (40usize, 4usize);
+        let mut st = vec![0i64; rows * cols];
+        let expired = CancelToken::at(std::time::Instant::now());
+        let before = pool.stats().solves;
+        let (r, rounds) =
+            run_pooled_cancellable_counted(&ladder(rows, cols, &mut st), &pool, 4, &expired);
+        assert!(matches!(r, Err(crate::Error::Timeout(_))));
+        assert_eq!(rounds, 0, "entry gate must not engage the pool");
+        assert_eq!(pool.stats().solves, before);
+        assert_eq!(pool.stats().active, 0);
+        // serial cancellable honours the same entry gate
+        assert!(matches!(
+            run_cancellable(&ladder(rows, cols, &mut st), &expired),
+            Err(crate::Error::Timeout(_))
+        ));
+    }
+
+    #[test]
+    fn midflight_stop_cancels_consistently_and_pool_survives() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let pool = Arc::new(ExecPool::new(4));
+        let (rows, cols) = (4000usize, 4usize);
+        let want = expected(rows, cols);
+        let stop = Arc::new(AtomicBool::new(false));
+        let token = CancelToken::never().with_stop(stop.clone());
+        let mut st = vec![0i64; rows * cols];
+        let kernel = ladder(rows, cols, &mut st);
+        let result = std::thread::scope(|s| {
+            let h = s.spawn(|| run_pooled_cancellable_counted(&kernel, &pool, 4, &token).0);
+            while !pool.is_busy() && !h.is_finished() {
+                std::hint::spin_loop();
+            }
+            stop.store(true, Ordering::Relaxed);
+            h.join().unwrap()
+        });
+        match result {
+            Err(crate::Error::Timeout(_)) => {}
+            Ok(()) => assert_eq!(st, want, "completed sweep must still be correct"),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        assert_eq!(pool.stats().active, 0, "workers must be released");
+        // pool reusable after cancellation
+        let mut st = vec![0i64; rows * cols];
+        run_pooled_counted(&ladder(rows, cols, &mut st), &pool, 4);
+        assert_eq!(st, want);
+    }
+
+    #[test]
+    fn default_sweep_serial_walks_supersteps_in_order() {
+        // a kernel that *relies* on the default serial walk: each
+        // superstep reads the cell the previous one wrote
+        struct Chain {
+            n: usize,
+            st: SharedSlice<i64>,
+        }
+        impl SweepKernel for Chain {
+            fn num_supersteps(&self) -> usize {
+                self.n - 1
+            }
+            unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+                assert_eq!((party, parties), (0, 1));
+                // SAFETY: serial discipline; indices < n.
+                unsafe { self.st.write(g + 1, self.st.read(g) * 2) };
+            }
+        }
+        let mut st = vec![0i64; 7];
+        st[0] = 1;
+        run_fused(&Chain {
+            n: 7,
+            st: SharedSlice::new(st.as_mut_ptr()),
+        });
+        assert_eq!(st, vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+}

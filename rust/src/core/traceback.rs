@@ -20,7 +20,10 @@
 //! * **Reconstructors** — [`parenthesization`] rebuilds the optimal
 //!   parenthesization from a split sidecar; [`align_solution`] walks a
 //!   move sidecar into an [`AlignSolution`] (edit script, aligned-pair
-//!   coordinates, and the local start/end span).
+//!   coordinates, and the local start/end span); [`viterbi_path`] walks a
+//!   backpointer sidecar into the maximum-likelihood state sequence;
+//!   [`cyk_parse`] rebuilds the most probable derivation from a packed
+//!   `(split, rule)` sidecar.
 //! * **From-table fallbacks** — [`mcm_splits_from_table`] and
 //!   [`align_moves_from_table`] recompute the sidecar from a solved
 //!   table, for backends that return tables without recording (the XLA
@@ -44,10 +47,19 @@
 //!   ([`cell_move`]); a local-alignment cell of value 0 records
 //!   [`MOVE_STOP`], and the local end cell is the *first* row-major
 //!   argmax of the table.
+//! * **Viterbi**: the recorded predecessor of lattice cell `(t, s)` is
+//!   the *lowest* state maximizing the transition score (ascending scan,
+//!   strictly-greater replacement), and the decoded end state is the
+//!   first argmax of the last column; all-`−∞` columns default to
+//!   state 0.
+//! * **CYK**: the recorded `(split, rule)` of a span is the lowest
+//!   `(m, rule index)` pair maximizing the derivation probability — the
+//!   cached MCM schedule emits terms in ascending split order and the
+//!   rule scan is ascending within each term.
 
 use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
 
-use crate::core::problem::{AlignProblem, AlignVariant, McmProblem};
+use crate::core::problem::{AlignProblem, AlignVariant, CykProblem, McmProblem};
 use crate::core::schedule::{grid, linear};
 use crate::util::json::Json;
 
@@ -150,6 +162,65 @@ impl SplitArena {
     /// Unwrap into the plain split vector the reconstructors consume.
     pub fn into_vec(self) -> Vec<u32> {
         self.splits.into_iter().map(|a| a.into_inner()).collect()
+    }
+}
+
+/// Recording seam of the generic sweep kernels (DESIGN.md §11): the
+/// `_recorded` executor tier is the same monomorphized kernel with a
+/// live recorder, the plain tier is the kernel with [`NoRecord`] — the
+/// `const ACTIVE` lets each instantiation compile to exactly the
+/// historical recording or non-recording loop body, collapsing the
+/// per-family executor twins.
+///
+/// `NoRecord` implements both recorder traits so every family shares the
+/// one inert type.
+pub struct NoRecord;
+
+/// Running-argbest recorder — [`SplitArena`]-backed sidecars (MCM
+/// splits, Viterbi backpointers, CYK packed split/rule words).
+pub trait SplitRecord: Sync {
+    /// Monomorphization switch: `false` compiles the kernel's
+    /// non-recording loop body, `true` the strict-improvement recording
+    /// body.
+    const ACTIVE: bool;
+    /// Record cell `idx`'s current-best witness.
+    fn store(&self, idx: usize, value: u32);
+}
+
+impl SplitRecord for NoRecord {
+    const ACTIVE: bool = false;
+    #[inline(always)]
+    fn store(&self, _idx: usize, _value: u32) {}
+}
+
+impl SplitRecord for &SplitArena {
+    const ACTIVE: bool = true;
+    #[inline(always)]
+    fn store(&self, idx: usize, value: u32) {
+        SplitArena::store(self, idx, value);
+    }
+}
+
+/// Write-once move recorder — [`MoveArena`]-backed sidecars (alignment
+/// 2-bit move codes).
+pub trait MoveRecord: Sync {
+    /// Monomorphization switch, as on [`SplitRecord`].
+    const ACTIVE: bool;
+    /// Record cell `idx`'s move code (must be the cell's only write).
+    fn set(&self, idx: usize, code: u8);
+}
+
+impl MoveRecord for NoRecord {
+    const ACTIVE: bool = false;
+    #[inline(always)]
+    fn set(&self, _idx: usize, _code: u8) {}
+}
+
+impl MoveRecord for &MoveArena {
+    const ACTIVE: bool = true;
+    #[inline(always)]
+    fn set(&self, idx: usize, code: u8) {
+        MoveArena::set(self, idx, code);
     }
 }
 
@@ -470,6 +541,154 @@ pub fn align_solution_from_table(p: &AlignProblem, table: &[i64]) -> AlignSoluti
     align_solution(p, table, &align_moves_from_table(p, table))
 }
 
+/// A decoded Viterbi solution (the wire's `solution` object for
+/// `kind: "viterbi"` — docs/PROTOCOL.md): the maximum-likelihood state
+/// sequence and its log-probability.  Ties are pinned to the lowest
+/// state at every argmax (DESIGN.md §8); an impossible observation
+/// sequence decodes to `score = −∞` with the tie-break's default path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ViterbiSolution {
+    /// One hidden state per observation.
+    pub states: Vec<u32>,
+    /// Log-probability of the decoded path (`−∞` = no feasible path).
+    pub score: f64,
+}
+
+impl ViterbiSolution {
+    /// The wire shape (docs/PROTOCOL.md): `{"states", "score"}`, with
+    /// the score as a lognum (`−∞` serializes as the `"-inf"` sentinel —
+    /// [`Json::lognum`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "states",
+                Json::arr(self.states.iter().map(|&s| Json::int(s as i64))),
+            ),
+            ("score", Json::lognum(self.score)),
+        ])
+    }
+}
+
+/// Walk a Viterbi backpointer sidecar into the decoded state path.
+///
+/// The end state is the *first* argmax of the last lattice column
+/// (lowest state on ties, state 0 when every path is impossible); each
+/// earlier state is the recorded argmax predecessor.  Bit-deterministic
+/// across the fused, pooled and sequential producers because every
+/// recorder pins the same strictly-greater ascending scan.
+pub fn viterbi_path(num_states: usize, table: &[f64], bp: &[u32]) -> ViterbiSolution {
+    let s = num_states.max(1);
+    assert_eq!(table.len() % s, 0, "table is not a T×S lattice");
+    assert_eq!(bp.len(), table.len(), "backpointers/table size mismatch");
+    let t = table.len() / s;
+    assert!(t >= 1, "empty lattice has no path");
+    let last = (t - 1) * s;
+    let mut score = f64::NEG_INFINITY;
+    let mut end = 0usize;
+    for j in 0..s {
+        if table[last + j] > score {
+            score = table[last + j];
+            end = j;
+        }
+    }
+    let mut states = vec![0u32; t];
+    states[t - 1] = end as u32;
+    for col in (1..t).rev() {
+        states[col - 1] = bp[col * s + states[col] as usize];
+    }
+    ViterbiSolution { states, score }
+}
+
+/// A reconstructed CYK parse (the wire's `solution` object for
+/// `kind: "cyk"` — docs/PROTOCOL.md): the most probable derivation of
+/// the sentence from the start symbol (nonterminal 0), or `tree: None`
+/// when the grammar cannot derive it (`score = −∞`).
+///
+/// The tree is a bracketed string over nonterminal and word indices —
+/// leaf `(N⟨nt⟩ w⟨i⟩)`, internal `(N⟨nt⟩ ⟨left⟩ ⟨right⟩)` — e.g.
+/// `(N0 (N0 w0) (N0 w1))`.  The Python reference renders the identical
+/// string, so goldens compare byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CykSolution {
+    /// Log-probability of the best parse (`−∞` = sentence not derivable).
+    pub score: f64,
+    /// Bracketed derivation, present iff the sentence parses.
+    pub tree: Option<String>,
+}
+
+impl CykSolution {
+    /// The wire shape (docs/PROTOCOL.md): `{"score", "tree"}` with a
+    /// lognum score and `null` tree on parse failure.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("score", Json::lognum(self.score)),
+            (
+                "tree",
+                match &self.tree {
+                    Some(t) => Json::str(t.clone()),
+                    None => Json::null(),
+                },
+            ),
+        ])
+    }
+}
+
+/// Rebuild the most probable derivation from a solved CYK value table
+/// and its packed `(split << 16) | rule` sidecar (DESIGN.md §11).
+///
+/// Iterative (an explicit frame stack), so a maximally skewed parse
+/// cannot overflow the thread stack.  Only spans reachable from a
+/// finite-probability root are walked — every such span was written by a
+/// real rule application, so its packed sidecar entry is well-formed
+/// (asserted).  Leaves re-derive nothing: a span of one word under
+/// nonterminal `A` is exactly the lexical entry the diagonal
+/// initialization scored.
+pub fn cyk_parse(p: &CykProblem, table: &[f64], splits: &[u32]) -> CykSolution {
+    let (n, r) = (p.n(), p.num_nonterminals);
+    assert_eq!(table.len(), p.num_cells(), "table/problem size mismatch");
+    assert_eq!(splits.len(), table.len(), "splits/table size mismatch");
+    let score = table[linear::cell_index(n, 0, n - 1) * r];
+    if score == f64::NEG_INFINITY {
+        return CykSolution { score, tree: None };
+    }
+    enum Frame {
+        Node(u32, usize, usize),
+        Sep,
+        Close,
+    }
+    let mut out = String::new();
+    let mut stack = vec![Frame::Node(0, 0, n - 1)];
+    while let Some(frame) = stack.pop() {
+        match frame {
+            Frame::Node(nt, i, j) => {
+                if i == j {
+                    out.push_str(&format!("(N{nt} w{i})"));
+                } else {
+                    let packed = splits[linear::cell_index(n, i, j) * r + nt as usize];
+                    let m = (packed >> 16) as usize;
+                    let rule = p.binary[(packed & 0xFFFF) as usize];
+                    assert!(
+                        i <= m && m < j,
+                        "corrupt split sidecar: span ({i},{j}) splits at {m}"
+                    );
+                    debug_assert_eq!(rule.lhs, nt, "sidecar rule belongs to another slot");
+                    out.push_str(&format!("(N{nt} "));
+                    stack.push(Frame::Close);
+                    stack.push(Frame::Node(rule.rhs_c, m + 1, j));
+                    stack.push(Frame::Sep);
+                    stack.push(Frame::Node(rule.rhs_b, i, m));
+                }
+            }
+            Frame::Sep => out.push(' '),
+            Frame::Close => out.push(')'),
+        }
+    }
+    CykSolution {
+        score,
+        tree: Some(out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -675,5 +894,94 @@ mod tests {
         assert_eq!(j.arr_field("start").unwrap().len(), 2);
         assert_eq!(j.arr_field("end").unwrap().len(), 2);
         assert_eq!(j.arr_field("pairs").unwrap().len(), sol.pairs.len());
+    }
+
+    #[test]
+    fn viterbi_path_walks_backpointers_and_breaks_ties_low() {
+        // 2 states, 3 steps; table says state 1 wins at the end, its
+        // chain runs 0 → 1 → 1 per the recorded backpointers
+        let table = vec![-1.0, -2.0, -3.0, -2.5, -9.0, -4.0];
+        let bp = vec![0, 0, 0, 0, 1, 1];
+        let sol = viterbi_path(2, &table, &bp);
+        assert_eq!(sol.score, -4.0);
+        assert_eq!(sol.states, vec![0, 1, 1]);
+
+        // exact tie in the last column → lowest state wins
+        let tied = vec![-1.0, -1.0];
+        let sol = viterbi_path(2, &tied, &[0, 0]);
+        assert_eq!(sol.states, vec![0]);
+
+        // all-impossible lattice → −∞ score, default path
+        let dead = vec![f64::NEG_INFINITY; 4];
+        let sol = viterbi_path(2, &dead, &[0; 4]);
+        assert_eq!(sol.score, f64::NEG_INFINITY);
+        assert_eq!(sol.states, vec![0, 0]);
+    }
+
+    #[test]
+    fn viterbi_solution_json_uses_lognum_sentinel() {
+        let sol = ViterbiSolution {
+            states: vec![2, 0, 1],
+            score: f64::NEG_INFINITY,
+        };
+        let j = sol.to_json();
+        assert_eq!(j.field("score").unwrap().as_lognum(), Some(f64::NEG_INFINITY));
+        assert_eq!(j.i64_vec_field("states").unwrap(), vec![2, 0, 1]);
+        // the serialized form must carry the "-inf" sentinel, not null
+        assert!(j.to_string().contains("\"-inf\""));
+    }
+
+    #[test]
+    fn cyk_parse_rebuilds_the_balanced_tree() {
+        use crate::core::problem::CykProblem;
+        // S → S S | a with ln ½ each: a 3-word sentence parses as either
+        // ((w0 w1) w2) or (w0 (w1 w2)) with equal probability; the
+        // lowest-split tie-break pins the right-branching tree
+        let p = CykProblem::balanced_example(3);
+        let (table, splits) = crate::cyk::seq::solve_with_splits(&p);
+        let sol = cyk_parse(&p, &table, &splits);
+        assert!(sol.score.is_finite());
+        assert_eq!(
+            sol.tree.as_deref(),
+            Some("(N0 (N0 w0) (N0 (N0 w1) (N0 w2)))")
+        );
+        // score = 2 binary applications + 3 lexical, all ln ½
+        let want = 5.0 * (0.5f64).ln();
+        assert!((sol.score - want).abs() < 1e-12, "{} != {want}", sol.score);
+
+        let j = sol.to_json();
+        assert_eq!(j.str_field("tree").unwrap(), sol.tree.as_deref().unwrap());
+        assert!((j.lognum_field("score").unwrap() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cyk_parse_failure_is_null_tree() {
+        use crate::core::problem::{CykProblem, CykRule};
+        // grammar with no binary rules cannot derive a 2-word sentence
+        let p = CykProblem::new(
+            1,
+            1,
+            Vec::<CykRule>::new(),
+            vec![(0, 0, 0.0)],
+            vec![0, 0],
+        )
+        .unwrap();
+        let (table, splits) = crate::cyk::seq::solve_with_splits(&p);
+        let sol = cyk_parse(&p, &table, &splits);
+        assert_eq!(sol.score, f64::NEG_INFINITY);
+        assert_eq!(sol.tree, None);
+        let j = sol.to_json();
+        assert_eq!(j.field("tree").unwrap(), &Json::Null);
+        assert_eq!(j.field("score").unwrap().as_lognum(), Some(f64::NEG_INFINITY));
+    }
+
+    #[test]
+    fn cyk_single_word_sentence_is_a_leaf() {
+        use crate::core::problem::CykProblem;
+        let p = CykProblem::balanced_example(1);
+        let (table, splits) = crate::cyk::seq::solve_with_splits(&p);
+        let sol = cyk_parse(&p, &table, &splits);
+        assert_eq!(sol.tree.as_deref(), Some("(N0 w0)"));
+        assert!((sol.score - (0.5f64).ln()).abs() < 1e-12);
     }
 }

@@ -1,0 +1,21 @@
+//! Probabilistic CYK parsing — most-probable derivations of a CNF
+//! grammar — as a served DP family (DESIGN.md §11).
+//!
+//! CYK shares the matrix-chain family's triangular dependence structure
+//! *exactly*: span `[i, j]` combines splits `[i, m] + [m+1, j]` just as
+//! an MCM cell combines its sub-chains.  The engine therefore reuses the
+//! cached corrected MCM schedule arena verbatim — one MCM "term" (a
+//! `(tgt, l, r)` split triple) fans out into `|binary rules|` log-space
+//! candidates over the `(max, ×)` semiring
+//! ([`crate::core::semiring::LogMaxProb`]) — and the certificate is the
+//! MCM lowering retagged ([`crate::core::certify::lower_cyk`]): the
+//! hazard argument holds at span granularity because all `R` nonterminal
+//! slots of a span finalize with the span.
+//!
+//! * [`seq`] — the classic sequential oracle (and tie-break reference).
+//! * [`pipeline`] — the [`crate::core::sweep`] instantiation the serving
+//!   paths run, with packed `(split, rule)` recording into the shared
+//!   [`crate::core::traceback::SplitArena`] sidecar.
+
+pub mod pipeline;
+pub mod seq;

@@ -1,0 +1,412 @@
+//! The CYK pipeline: one `(max, ×)`-log-space kernel instantiating the
+//! generic superstep sweep over the *cached corrected MCM schedule*
+//! (DESIGN.md §11).
+//!
+//! Every arena term `(tgt, l, r, pb)` of the MCM schedule is one span
+//! split; the kernel fans it out into `|binary rules|` candidates, each
+//! a `⊗`-extension of the two child (span, nonterminal) slots with the
+//! rule's log-probability, `⊕`-combined into the target slot by strict
+//! improvement.  Hazard-freedom is inherited from the MCM certification
+//! at span granularity: all `R` nonterminal slots of a span finalize
+//! with the span, and a corrected schedule only reads spans finalized in
+//! earlier supersteps ([`crate::core::certify::lower_cyk`]).
+//!
+//! Work assignment is by target span (`tgt % parties`), keeping every
+//! slot's strict-improvement scan and its packed `(split << 16) | rule`
+//! sidecar store on one party in arena order — the same single-writer
+//! argument as MCM recording (DESIGN.md §8), and the reason recorded
+//! sidecars are bit-identical to [`crate::cyk::seq::solve_with_splits`].
+
+use crate::core::cache;
+use crate::core::problem::{CykProblem, CykRule};
+use crate::core::schedule::{default_mcm_tile, McmSchedule, McmVariant};
+use crate::core::semiring::{LogMaxProb, Semiring};
+use crate::core::sweep::{self, SharedSlice, SweepKernel};
+use crate::core::traceback::{cyk_parse, CykSolution, NoRecord, SplitArena, SplitRecord};
+use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool};
+
+/// The CYK recurrence packaged for the generic sweep drivers.
+struct CykKernel<'a, R: SplitRecord> {
+    r: usize,
+    rules: &'a [CykRule],
+    sched: &'a McmSchedule,
+    st: SharedSlice<f64>,
+    ring: LogMaxProb,
+    rec: R,
+}
+
+impl<'a, R: SplitRecord> CykKernel<'a, R> {
+    fn new(p: &'a CykProblem, sched: &'a McmSchedule, st: &mut [f64], rec: R) -> Self {
+        assert_eq!(p.n(), sched.n, "schedule/problem size mismatch");
+        assert_eq!(
+            sched.variant,
+            McmVariant::Corrected,
+            "cyk executes over the hazard-free Corrected schedule only"
+        );
+        debug_assert_eq!(st.len(), p.num_cells());
+        CykKernel {
+            r: p.num_nonterminals,
+            rules: &p.binary,
+            sched,
+            st: SharedSlice::new(st.as_mut_ptr()),
+            ring: LogMaxProb,
+            rec,
+        }
+    }
+
+    /// One schedule term = one span split: scan the binary rules in
+    /// ascending index order, strict-improving each rule's target slot.
+    ///
+    /// # Safety
+    /// `i < num_terms()`; the caller holds the sweep discipline — both
+    /// child spans are finalized and the target span is accessed by no
+    /// other party this superstep.
+    #[inline(always)]
+    unsafe fn term(&self, i: usize) {
+        let sched = self.sched;
+        // SAFETY: schedule cell indices are bounded by construction
+        // (the same invariant MCM relies on) and scaled by the validated
+        // `R = num_nonterminals`; rule nonterminals are `< R` by
+        // `CykProblem::new`.  Table accesses are race-free by the
+        // caller's contract.
+        unsafe {
+            let left = *sched.l.get_unchecked(i) as usize * self.r;
+            let right = *sched.r.get_unchecked(i) as usize * self.r;
+            let tgt = *sched.tgt.get_unchecked(i) as usize * self.r;
+            // the MCM term at split m carries pb = m + 1
+            let m = *sched.pb.get_unchecked(i) - 1;
+            for (ri, rule) in self.rules.iter().enumerate() {
+                let cand = self.ring.extend(
+                    self.ring.extend(
+                        self.st.read(left + rule.rhs_b as usize),
+                        self.st.read(right + rule.rhs_c as usize),
+                    ),
+                    rule.logp,
+                );
+                let slot = tgt + rule.lhs as usize;
+                if self.ring.improves(cand, self.st.read(slot)) {
+                    self.st.write(slot, cand);
+                    if R::ACTIVE {
+                        self.rec.store(slot, (m << 16) | ri as u32);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<R: SplitRecord> SweepKernel for CykKernel<'_, R> {
+    fn num_supersteps(&self) -> usize {
+        self.sched.num_supersteps()
+    }
+
+    fn max_parties(&self) -> usize {
+        self.sched.max_width().max(1)
+    }
+
+    unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+        // span ownership (`tgt % parties`): all splits of one span stay
+        // on one party in arena order, so every (span, nonterminal)
+        // slot's improvement chain and sidecar store is single-writer
+        for i in self.sched.superstep_range(g) {
+            // SAFETY: `i` is in the superstep CSR hence < num_terms;
+            // child spans finalize in earlier supersteps (fusion-proof
+            // tiling) and the target span is owned by this party.
+            unsafe {
+                if *self.sched.tgt.get_unchecked(i) as usize % parties != party {
+                    continue;
+                }
+                self.term(i);
+            }
+        }
+    }
+
+    unsafe fn sweep_serial(&self) {
+        // flat arena sweep, no superstep boundaries: hazard-freedom
+        // makes each term's reads final wherever the cuts fall
+        for i in 0..self.sched.num_terms() {
+            // SAFETY: i < num_terms; serial discipline.
+            unsafe { self.term(i) };
+        }
+    }
+}
+
+/// Fused single-threaded parse: fill the triangular table over a
+/// compiled schedule, return the `num_spans × R` value table.
+pub fn execute(p: &CykProblem, sched: &McmSchedule) -> Vec<f64> {
+    let mut st = p.initial_table();
+    sweep::run_fused(&CykKernel::new(p, sched, &mut st, NoRecord));
+    st
+}
+
+/// [`execute`] + packed `(split << 16) | rule` recording (DESIGN.md §8).
+pub fn execute_recorded(p: &CykProblem, sched: &McmSchedule) -> (Vec<f64>, Vec<u32>) {
+    let mut st = p.initial_table();
+    let splits = SplitArena::new(st.len());
+    sweep::run_fused(&CykKernel::new(p, sched, &mut st, &splits));
+    (st, splits.into_vec())
+}
+
+/// [`execute`] with cooperative cancellation: polls the [`CancelToken`]
+/// every [`crate::runtime::exec_pool::CANCEL_POLL_STRIDE`] supersteps and
+/// abandons the table with `Err(Timeout)` once it fires.
+pub fn execute_cancellable(
+    p: &CykProblem,
+    sched: &McmSchedule,
+    token: &CancelToken,
+) -> crate::Result<Vec<f64>> {
+    let mut st = p.initial_table();
+    sweep::run_cancellable(&CykKernel::new(p, sched, &mut st, NoRecord), token)?;
+    Ok(st)
+}
+
+/// Pooled parse: resident [`ExecPool`] workers sweep one superstep of
+/// the schedule arena between barriers, spans split by `tgt % parties`.
+pub fn execute_pooled(
+    p: &CykProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> Vec<f64> {
+    execute_pooled_counted(p, sched, pool, threads).0
+}
+
+/// [`execute_pooled`] + the number of barrier rounds it cost.
+pub fn execute_pooled_counted(
+    p: &CykProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<f64>, u64) {
+    let mut st = p.initial_table();
+    let rounds =
+        sweep::run_pooled_counted(&CykKernel::new(p, sched, &mut st, NoRecord), pool, threads);
+    (st, rounds)
+}
+
+/// [`execute_pooled`] with cooperative cancellation via the superstep cut
+/// protocol (see [`sweep::run_pooled_cancellable_counted`]).
+pub fn execute_pooled_cancellable(
+    p: &CykProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> crate::Result<Vec<f64>> {
+    execute_pooled_cancellable_counted(p, sched, pool, threads, token).0
+}
+
+/// [`execute_pooled_cancellable`] + the barrier rounds it cost.
+pub fn execute_pooled_cancellable_counted(
+    p: &CykProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> (crate::Result<Vec<f64>>, u64) {
+    if token.is_never() {
+        let (st, rounds) = execute_pooled_counted(p, sched, pool, threads);
+        return (Ok(st), rounds);
+    }
+    if token.is_cancelled() {
+        return (cancelled(), 0);
+    }
+    let mut st = p.initial_table();
+    let (r, rounds) = sweep::run_pooled_cancellable_counted(
+        &CykKernel::new(p, sched, &mut st, NoRecord),
+        pool,
+        threads,
+        token,
+    );
+    (r.map(|()| st), rounds)
+}
+
+/// [`execute_pooled`] + sidecar recording: span ownership keeps each slot
+/// single-writer (DESIGN.md §8).
+pub fn execute_pooled_recorded(
+    p: &CykProblem,
+    sched: &McmSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<f64>, Vec<u32>) {
+    let mut st = p.initial_table();
+    let splits = SplitArena::new(st.len());
+    sweep::run_pooled_counted(&CykKernel::new(p, sched, &mut st, &splits), pool, threads);
+    (st, splits.into_vec())
+}
+
+/// Convenience: fused parse over the cached untiled CYK schedule.
+pub fn solve(p: &CykProblem) -> Vec<f64> {
+    let sched = cache::cyk_schedule(p.n(), 1);
+    execute(p, &sched)
+}
+
+/// Convenience: recorded fused parse over the cached untiled schedule —
+/// the router's fused `want_solution` route.
+pub fn solve_recorded(p: &CykProblem) -> (Vec<f64>, Vec<u32>) {
+    let sched = cache::cyk_schedule(p.n(), 1);
+    execute_recorded(p, &sched)
+}
+
+/// Parse end to end: recorded fused solve + derivation rebuild.
+pub fn solve_parsed(p: &CykProblem) -> CykSolution {
+    let (st, splits) = solve_recorded(p);
+    cyk_parse(p, &st, &splits)
+}
+
+/// Parse end to end on the process-wide pool — the router's pooled
+/// `want_solution` route.
+pub fn solve_pooled_parsed(p: &CykProblem) -> CykSolution {
+    let n = p.n();
+    let sched = cache::cyk_schedule(n, default_mcm_tile(n));
+    let pool = crate::runtime::exec_pool::global();
+    let (st, splits) = execute_pooled_recorded(p, &sched, pool, pool.threads());
+    cyk_parse(p, &st, &splits)
+}
+
+/// Convenience: pooled parse on the process-wide pool with the cached
+/// default-tiled schedule.
+pub fn solve_pooled(p: &CykProblem) -> Vec<f64> {
+    let n = p.n();
+    let sched = cache::cyk_schedule(n, default_mcm_tile(n));
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled(p, &sched, pool, pool.threads())
+}
+
+/// Convenience: cancellable pooled parse on the process-wide pool.
+pub fn solve_pooled_cancellable(p: &CykProblem, token: &CancelToken) -> crate::Result<Vec<f64>> {
+    let n = p.n();
+    let sched = cache::cyk_schedule(n, default_mcm_tile(n));
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled_cancellable(p, &sched, pool, pool.threads(), token)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cyk::seq;
+    use crate::prop::forall;
+
+    #[test]
+    fn all_tiers_bit_identical_to_seq_oracle() {
+        let pool = ExecPool::new(8);
+        forall("cyk tiers == seq", 25, |g| {
+            let p = CykProblem::random(g.rng(), 1..14, 4, 3);
+            let n = p.n();
+            let (want_st, want_sp) = seq::solve_with_splits(&p);
+            let sched = McmSchedule::compile(n, McmVariant::Corrected);
+            let fused = execute(&p, &sched);
+            let (rst, rsp) = execute_recorded(&p, &sched);
+            if fused != want_st || rst != want_st || rsp != want_sp {
+                return Err(format!("fused diverged: {p:?}"));
+            }
+            for threads in [1usize, 2, 8] {
+                let tile = *g.choose(&[1usize, 4, 64]);
+                let tsched = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+                let pooled = execute_pooled(&p, &tsched, &pool, threads);
+                let (pst, psp) = execute_pooled_recorded(&p, &tsched, &pool, threads);
+                if pooled != want_st || pst != want_st || psp != want_sp {
+                    return Err(format!("pooled(t={threads},T={tile}) diverged: {p:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parsed_solution_matches_seq_parse() {
+        forall("cyk parse == seq parse", 25, |g| {
+            let p = CykProblem::random(g.rng(), 1..12, 4, 3);
+            let a = solve_parsed(&p);
+            let b = seq::parse(&p);
+            let c = solve_pooled_parsed(&p);
+            if a == b && a == c {
+                Ok(())
+            } else {
+                Err(format!("{a:?} vs {b:?} vs {c:?}: {p:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn balanced_example_parses_through_the_pooled_route() {
+        let p = CykProblem::balanced_example(3);
+        let sol = solve_pooled_parsed(&p);
+        assert_eq!(sol.tree.as_deref(), Some("(N0 (N0 w0) (N0 (N0 w1) (N0 w2)))"));
+        assert!((sol.score - 5.0 * (0.5f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cancellable_with_never_or_live_token_matches_oracle() {
+        let pool = ExecPool::new(4);
+        forall("cyk cancellable == seq", 15, |g| {
+            let p = CykProblem::random(g.rng(), 1..12, 4, 3);
+            let n = p.n();
+            let want = seq::solve(&p);
+            let sched = McmSchedule::compile(n, McmVariant::Corrected);
+            let tsched = McmSchedule::compile_tiled(n, McmVariant::Corrected, 4);
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            let a = execute_cancellable(&p, &sched, &CancelToken::never()).unwrap();
+            let b = execute_cancellable(&p, &sched, &live).unwrap();
+            let c = execute_pooled_cancellable(&p, &tsched, &pool, 4, &live).unwrap();
+            if a == want && b == want && c == want {
+                Ok(())
+            } else {
+                Err(format!("{p:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn expired_deadline_never_engages_the_pool() {
+        let pool = ExecPool::new(4);
+        let mut rng = crate::util::rng::Rng::seeded(23);
+        let p = CykProblem::random(&mut rng, 9..10, 4, 3);
+        let sched = McmSchedule::compile_tiled(p.n(), McmVariant::Corrected, 2);
+        let expired = CancelToken::at(std::time::Instant::now());
+        let before = pool.stats().solves;
+        let (r, rounds) = execute_pooled_cancellable_counted(&p, &sched, &pool, 4, &expired);
+        assert!(matches!(r, Err(crate::Error::Timeout(_))));
+        assert_eq!(rounds, 0);
+        assert_eq!(pool.stats().solves, before);
+        // pool still serves afterwards
+        assert_eq!(execute_pooled(&p, &sched, &pool, 4), seq::solve(&p));
+    }
+
+    #[test]
+    fn pooled_superstep_barrier_budget_matches_the_schedule() {
+        // the sync amortization the MCM schedule already certifies must
+        // carry over to its CYK reuse: exactly num_supersteps barriers
+        let pool = ExecPool::new(3);
+        let mut rng = crate::util::rng::Rng::seeded(7);
+        for (n, tile) in [(9usize, 2usize), (14, 4), (11, 3)] {
+            let p = CykProblem::random(&mut rng, n..n + 1, 4, 3);
+            let sched = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            let (st, rounds) = execute_pooled_counted(&p, &sched, &pool, 3);
+            assert_eq!(st, seq::solve(&p), "n={n} tile={tile}");
+            assert_eq!(rounds as usize, sched.num_supersteps(), "n={n} tile={tile}");
+            assert!((rounds as usize) < sched.num_steps());
+        }
+    }
+
+    #[test]
+    fn solve_pooled_uses_the_cyk_schedule_cache() {
+        let p = CykProblem::balanced_example(12);
+        let a = solve_pooled(&p);
+        let before = crate::core::cache::global_stats().hits;
+        let b = solve_pooled(&p);
+        assert_eq!(a, b);
+        assert!(
+            crate::core::cache::global_stats().hits > before,
+            "second pooled parse must hit the schedule cache"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "Corrected")]
+    fn kernel_rejects_faithful_schedules() {
+        let p = CykProblem::balanced_example(6);
+        let sched = McmSchedule::compile(6, McmVariant::PaperFaithful);
+        execute(&p, &sched);
+    }
+}

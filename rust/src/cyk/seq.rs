@@ -1,0 +1,166 @@
+//! Sequential CYK oracle: the textbook `O(n³·|G|)` triangular fill.
+//!
+//! This is the tie-break reference for the pipeline executors
+//! (DESIGN.md §8): per (span, nonterminal) slot, candidates arrive in
+//! ascending `(split, rule index)` order and only a strictly greater
+//! log-probability replaces the running best, so the recorded packed
+//! `(split << 16) | rule` is always the *lowest* maximizing pair.  The
+//! table uses the same MCM linear triangular layout as the pipeline
+//! ([`linear::cell_index`]), `R` slots per span.
+
+use crate::core::problem::CykProblem;
+use crate::core::schedule::linear;
+use crate::core::traceback::{cyk_parse, CykSolution};
+
+/// Fill the triangular value table: `num_spans × R` log-probabilities,
+/// diagonal from [`CykProblem::initial_table`], spans by ascending
+/// length.
+pub fn solve(p: &CykProblem) -> Vec<f64> {
+    solve_with_splits(p).0
+}
+
+/// [`solve`] plus the packed `(split << 16) | rule` sidecar.  Slots never
+/// written (unreachable nonterminals, and the whole diagonal) keep the
+/// arena's zero initialization — bit-identical to the recorded sidecar of
+/// the pipeline executors.
+pub fn solve_with_splits(p: &CykProblem) -> (Vec<f64>, Vec<u32>) {
+    let (n, r) = (p.n(), p.num_nonterminals);
+    let mut st = p.initial_table();
+    let mut splits = vec![0u32; st.len()];
+    for d in 1..n {
+        for i in 0..n - d {
+            let j = i + d;
+            let tgt = linear::cell_index(n, i, j) * r;
+            for m in i..j {
+                let left = linear::cell_index(n, i, m) * r;
+                let right = linear::cell_index(n, m + 1, j) * r;
+                for (ri, rule) in p.binary.iter().enumerate() {
+                    let cand =
+                        st[left + rule.rhs_b as usize] + st[right + rule.rhs_c as usize] + rule.logp;
+                    let slot = tgt + rule.lhs as usize;
+                    if cand > st[slot] {
+                        st[slot] = cand;
+                        splits[slot] = ((m as u32) << 16) | ri as u32;
+                    }
+                }
+            }
+        }
+    }
+    (st, splits)
+}
+
+/// Parse outright (oracle convenience for tests and the Python golden
+/// harness).
+pub fn parse(p: &CykProblem) -> CykSolution {
+    let (st, splits) = solve_with_splits(p);
+    cyk_parse(p, &st, &splits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::CykRule;
+    use crate::prop::forall;
+
+    /// Exhaustive best-derivation search over all binary trees and all
+    /// nonterminal labelings of a span — ground truth for small inputs.
+    fn brute_best(p: &CykProblem, nt: usize, i: usize, j: usize) -> f64 {
+        if i == j {
+            return p.lexical_best(nt, p.words[i]);
+        }
+        let mut best = f64::NEG_INFINITY;
+        for m in i..j {
+            for rule in &p.binary {
+                if rule.lhs as usize != nt {
+                    continue;
+                }
+                let v = rule.logp
+                    + brute_best(p, rule.rhs_b as usize, i, m)
+                    + brute_best(p, rule.rhs_c as usize, m + 1, j);
+                if v > best {
+                    best = v;
+                }
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn dp_score_matches_brute_force() {
+        forall("cyk seq == brute force", 40, |g| {
+            // small n keeps the exponential brute force enumerable
+            let p = CykProblem::random(g.rng(), 1..7, 4, 3);
+            let sol = parse(&p);
+            let want = brute_best(&p, 0, 0, p.n() - 1);
+            let same = if want == f64::NEG_INFINITY {
+                sol.score == f64::NEG_INFINITY && sol.tree.is_none()
+            } else {
+                (sol.score - want).abs() < 1e-9 && sol.tree.is_some()
+            };
+            if same {
+                Ok(())
+            } else {
+                Err(format!("score {} != brute {want}: {p:?}", sol.score))
+            }
+        });
+    }
+
+    #[test]
+    fn balanced_example_scores_catalan_uniform() {
+        // S → S S | a, ln ½ each: any n-leaf tree scores (2n−1)·ln ½
+        for n in 1..8usize {
+            let p = CykProblem::balanced_example(n);
+            let sol = parse(&p);
+            let want = (2 * n - 1) as f64 * (0.5f64).ln();
+            assert!(
+                (sol.score - want).abs() < 1e-9,
+                "n={n}: {} != {want}",
+                sol.score
+            );
+        }
+    }
+
+    #[test]
+    fn unparseable_sentence_is_neg_infinity() {
+        // start symbol has no rules at all for a 2-word sentence
+        let p = CykProblem::new(
+            2,
+            1,
+            vec![CykRule {
+                lhs: 1,
+                rhs_b: 1,
+                rhs_c: 1,
+                logp: (0.5f64).ln(),
+            }],
+            vec![(1, 0, 0.0)],
+            vec![0, 0],
+        )
+        .unwrap();
+        let sol = parse(&p);
+        assert_eq!(sol.score, f64::NEG_INFINITY);
+        assert_eq!(sol.tree, None);
+    }
+
+    #[test]
+    fn tie_breaks_pin_lowest_split_then_lowest_rule() {
+        // two rules derive the same 2-word span with equal probability:
+        // the recorded rule must be the lower-indexed one
+        let half = (0.5f64).ln();
+        let p = CykProblem::new(
+            2,
+            1,
+            vec![
+                CykRule { lhs: 0, rhs_b: 1, rhs_c: 1, logp: half },
+                CykRule { lhs: 0, rhs_b: 1, rhs_c: 1, logp: half },
+            ],
+            vec![(1, 0, 0.0)],
+            vec![0, 0],
+        )
+        .unwrap();
+        let (_, splits) = solve_with_splits(&p);
+        let root = linear::cell_index(2, 0, 1) * 2;
+        assert_eq!(splits[root] >> 16, 0, "lowest split");
+        assert_eq!(splits[root] & 0xFFFF, 0, "lowest rule index");
+        assert_eq!(parse(&p).tree.as_deref(), Some("(N0 (N1 w0) (N1 w1))"));
+    }
+}

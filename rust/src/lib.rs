@@ -8,7 +8,8 @@
 //!   compilation ([`core::schedule`]), conflict/hazard analysis and
 //!   schedule certification ([`core::conflict`], [`core::certify`]),
 //!   native step-synchronous and multi-threaded
-//!   executors ([`sdp`], [`mcm`], [`align`]), solution reconstruction
+//!   executors ([`sdp`], [`mcm`], [`align`], and the semiring-generic
+//!   log-space families [`viterbi`] and [`cyk`]), solution reconstruction
 //!   through per-solve traceback sidecars ([`core::traceback`] —
 //!   parenthesizations, edit scripts, local-alignment spans), a
 //!   cycle-level SIMT GPU cost model ([`simulator`]) standing in for the
@@ -43,12 +44,14 @@ pub mod align;
 pub mod bench;
 pub mod coordinator;
 pub mod core;
+pub mod cyk;
 pub mod mcm;
 pub mod prop;
 pub mod runtime;
 pub mod sdp;
 pub mod simulator;
 pub mod util;
+pub mod viterbi;
 
 /// Crate-wide error type (hand-rolled: the offline build has no
 /// `thiserror`).

@@ -75,7 +75,7 @@ const USAGE: &str = "pipedp <subcommand> [flags]
   trace       --kind sdp|mcm [--n N] [--offsets …] [--variant …] [--steps S]
   schedule    --n N --variant corrected|faithful [--json]
   verify      [--max-n N]
-  certify     --kind mcm|align|sdp [--n N] [--variant corrected|faithful] [--tile T] [--rows R --cols C] [--offsets 7,5,2]
+  certify     --kind mcm|align|sdp|viterbi|cyk [--n N] [--variant corrected|faithful] [--tile T] [--rows R --cols C] [--offsets 7,5,2] [--steps T --states S]
   simulate    [--samples S]
   serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E] [--max-solve-bytes B]
   client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution] [--deadline-ms D] [--retries R]
@@ -412,15 +412,24 @@ fn cmd_verify(argv: Vec<String>) -> Result<()> {
 /// object a running coordinator would attach and revalidate.
 fn cmd_certify(argv: Vec<String>) -> Result<()> {
     let args = Args::new("certify", "print a schedule's race certificate")
-        .flag("kind", "mcm|align|sdp", Some("mcm"))
-        .flag("n", "MCM chain length / S-DP table size", Some("256"))
+        .flag("kind", "mcm|align|sdp|viterbi|cyk", Some("mcm"))
+        .flag(
+            "n",
+            "MCM chain length / S-DP table size / CYK sentence length",
+            Some("256"),
+        )
         .flag("variant", "MCM variant: corrected|faithful", Some("corrected"))
         .flag("tile", "superstep tile; 0 = the serving default", Some("0"))
         .flag("rows", "align: first sequence length", Some("64"))
         .flag("cols", "align: second sequence length", Some("48"))
         .flag("offsets", "S-DP offsets a_1>…>a_k", Some("7,5,2"))
+        .flag("steps", "viterbi: observation count T", Some("64"))
+        .flag("states", "viterbi: state count S", Some("16"))
         .parse(argv)?;
-    use pipedp::core::cache::{align_certificate, mcm_certificate, sdp_certificate};
+    use pipedp::core::cache::{
+        align_certificate, cyk_certificate, mcm_certificate, sdp_certificate,
+        viterbi_certificate,
+    };
     use pipedp::core::schedule::{default_align_tile, default_mcm_tile};
     let (label, cert) = match args.get_str("kind")? {
         "mcm" => {
@@ -463,6 +472,23 @@ fn cmd_certify(argv: Vec<String>) -> Result<()> {
                 format!("sdp n={n} offsets={offsets:?}"),
                 sdp_certificate(n, &offsets),
             )
+        }
+        "viterbi" => {
+            let (t, s) = (args.get_usize("steps")?, args.get_usize("states")?);
+            (
+                format!("viterbi steps={t} states={s}"),
+                viterbi_certificate(t, s),
+            )
+        }
+        "cyk" => {
+            let n = args.get_usize("n")?.max(1);
+            let tile = match args.get_usize("tile")? {
+                // mirror the router: CYK retags the corrected MCM
+                // schedule, pooled-tiled at the serving default
+                0 => default_mcm_tile(n),
+                t => t,
+            };
+            (format!("cyk n={n} tile={tile}"), cyk_certificate(n, tile))
         }
         other => {
             return Err(pipedp::Error::InvalidProblem(format!(
@@ -655,11 +681,13 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
 /// baseline and fail on ns/cell regressions beyond the tolerance — the
 /// CI bench-regression gate.
 ///
-/// Matches rows by `n` and compares every numeric per-executor field
-/// present in *both* rows (a fast-mode run that skipped large sizes
-/// simply compares the intersection).  Only regressions fail; a faster
-/// current run always passes.  Two portability rules keep the gate
-/// meaningful when baseline and CI run on different machines:
+/// Matches rows by `n` (plus `kind`, for the log-space `log_results`
+/// table — gated only when both records carry it) and compares every
+/// numeric per-executor field present in *both* rows (a fast-mode run
+/// that skipped large sizes simply compares the intersection).  Only
+/// regressions fail; a faster current run always passes.  Two
+/// portability rules keep the gate meaningful when baseline and CI run
+/// on different machines:
 ///
 /// * `--relative-to seq` (what CI uses) gates each executor's ratio to
 ///   the same run's `seq` column instead of absolute ns/cell — `seq` is
@@ -706,16 +734,35 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
         }
         skip
     };
-    let base_rows = baseline.arr_field("results")?;
-    let cur_rows = current.arr_field("results")?;
+    // `results` (the MCM rows) is mandatory in both records; the
+    // `log_results` table (viterbi/cyk rows, DESIGN.md §11) is gated only
+    // when both records carry it, so baselines committed before the
+    // log-space families existed keep passing unchanged
+    let mut row_sets: Vec<(&[Json], &[Json])> =
+        vec![(baseline.arr_field("results")?, current.arr_field("results")?)];
+    if let (Ok(b), Ok(c)) = (
+        baseline.arr_field("log_results"),
+        current.arr_field("log_results"),
+    ) {
+        row_sets.push((b, c));
+    }
     let mut compared = 0usize;
     let mut failures: Vec<String> = Vec::new();
-    for base_row in base_rows {
+    let row_pairs = row_sets
+        .into_iter()
+        .flat_map(|(base_rows, cur_rows)| base_rows.iter().map(move |r| (r, cur_rows)));
+    for (base_row, cur_rows) in row_pairs {
         let n = base_row.i64_field("n")?;
-        let Some(cur_row) = cur_rows
-            .iter()
-            .find(|r| r.i64_field("n").ok() == Some(n))
-        else {
+        // log-space rows are additionally keyed by `kind`: viterbi rows use
+        // `n` for the state count and cyk rows for the sentence length, so
+        // bare-`n` matching could pair a viterbi row with a cyk row (MCM
+        // rows carry no `kind`, and None == None keeps them matching as
+        // before)
+        let kind = base_row.get("kind").and_then(|v| v.as_str());
+        let Some(cur_row) = cur_rows.iter().find(|r| {
+            r.i64_field("n").ok() == Some(n)
+                && r.get("kind").and_then(|v| v.as_str()) == kind
+        }) else {
             continue; // size skipped in this run (PIPEDP_BENCH_MAX_N)
         };
         // the normalizers, when gating relative ratios
@@ -738,8 +785,9 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
         for (key, base_val) in fields {
             // configuration fields ride in the rows next to the timings;
             // gating them would flag a retuned default (e.g. a different
-            // superstep tile) as a perf regression
-            if key == "n" || key == "tile" {
+            // superstep tile) as a perf regression (`kind`, `shape` and
+            // `policy` are strings and fall out of the numeric guard below)
+            if key == "n" || key == "tile" || key == "shape" {
                 continue;
             }
             if skip_threaded && key == "threaded" {
@@ -764,8 +812,9 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
             };
             let ratio = cur_m / base_m;
             if ratio > 1.0 + tolerance {
+                let tag = kind.map(|k| format!("{k} ")).unwrap_or_default();
                 failures.push(format!(
-                    "n={n} {key}: {cur_m:.2} {unit} vs baseline {base_m:.2} \
+                    "{tag}n={n} {key}: {cur_m:.2} {unit} vs baseline {base_m:.2} \
                      ({ratio:.2}x, tolerance {:.2}x)",
                     1.0 + tolerance
                 ));

@@ -22,18 +22,24 @@
 //! its documented stale-read semantics depend on it.  The threaded
 //! executors assign lanes to workers in contiguous chunks (not strided),
 //! so each worker scans a dense run of every column per step.
+//!
+//! Since the semiring lift (DESIGN.md §11) the fused, cancellable,
+//! pooled and `_recorded` tiers are monomorphized instantiations of the
+//! generic superstep sweep ([`crate::core::sweep`]) over the `(min, +)`
+//! semiring — only the faithful two-phase executor (whose stale-read
+//! semantics are the point) and the scoped-thread chunked executors
+//! remain hand-rolled.
 
 use std::sync::Barrier;
 
 use crate::core::cache;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::core::problem::McmProblem;
 use crate::core::schedule::{default_mcm_tile, linear, McmSchedule, McmVariant};
-use crate::core::traceback::SplitArena;
-use crate::runtime::exec_pool::{
-    cancelled, CancelToken, ExecPool, SenseBarrier, CANCEL_POLL_STRIDE,
-};
+use crate::core::semiring::{MinPlus, Semiring};
+use crate::core::sweep::{self, SharedSlice, SweepKernel};
+use crate::core::traceback::{NoRecord, SplitArena, SplitRecord};
+use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool, CANCEL_POLL_STRIDE};
 use crate::sdp::naive::SharedTable;
 
 /// Step-synchronous executor over a compiled schedule.
@@ -62,65 +68,139 @@ pub fn execute(p: &McmProblem, sched: &McmSchedule) -> Vec<i64> {
     st
 }
 
-/// Fused single pass (corrected schedules only): compute-and-write per
-/// lane, no pending buffer.  Sound because corrected schedules are
-/// hazard-free — see the module docs.
-fn execute_fused(p: &McmProblem, sched: &McmSchedule, st: &mut [i64]) {
-    let dims = &p.dims;
-    let nterms = sched.num_terms();
-    for i in 0..nterms {
+/// The MCM recurrence packaged for the generic sweep drivers
+/// (DESIGN.md §11): one `(min, +)` kernel whose monomorphized
+/// instantiations are the fused, cancellable, pooled and `_recorded`
+/// tiers that used to be five hand-rolled loops.  `R = NoRecord`
+/// compiles the plain ⊕-combine body; `R = &SplitArena` compiles the
+/// strict-improvement recording body, whose ascending-term sweep keeps
+/// the *lowest* minimizing split — exactly the sequential oracle's
+/// tie-break ([`crate::mcm::seq::splits_linear`], DESIGN.md §8).
+struct McmKernel<'a, R: SplitRecord> {
+    dims: &'a [i64],
+    sched: &'a McmSchedule,
+    st: SharedSlice<i64>,
+    ring: MinPlus,
+    rec: R,
+}
+
+impl<'a, R: SplitRecord> McmKernel<'a, R> {
+    fn new(p: &'a McmProblem, sched: &'a McmSchedule, st: &mut [i64], rec: R) -> Self {
+        assert_eq!(p.n(), sched.n, "schedule/problem size mismatch");
+        debug_assert_eq!(st.len(), linear::num_cells(sched.n));
+        McmKernel {
+            dims: &p.dims,
+            sched,
+            st: SharedSlice::new(st.as_mut_ptr()),
+            ring: MinPlus,
+            rec,
+        }
+    }
+
+    /// One arena term: gather both operand cells, `⊗`-extend with the
+    /// term's weight, `⊕`-combine (or record) into the target cell.
+    ///
+    /// # Safety
+    /// `i < num_terms()`; the caller holds the sweep discipline — the
+    /// term's operands are finalized and its target cell is accessed by
+    /// no other party this superstep.
+    #[inline(always)]
+    unsafe fn term(&self, i: usize) {
+        let sched = self.sched;
         // SAFETY: schedule indices are bounded by construction
         // (McmSchedule::compile only emits valid cell/dims indices;
-        // debug-asserted in `execute`).  Step boundaries need no special
-        // handling here: hazard-freedom makes each term's reads final
-        // regardless of where the step cuts fall, so the arena can be
-        // swept as one flat loop.
+        // debug-asserted in `execute`); table accesses are race-free by
+        // the caller's contract.
         unsafe {
-            let v = *st.get_unchecked(*sched.l.get_unchecked(i) as usize)
-                + *st.get_unchecked(*sched.r.get_unchecked(i) as usize)
-                + *dims.get_unchecked(*sched.pa.get_unchecked(i) as usize)
-                    * *dims.get_unchecked(*sched.pb.get_unchecked(i) as usize)
-                    * *dims.get_unchecked(*sched.pc.get_unchecked(i) as usize);
-            let slot = st.get_unchecked_mut(*sched.tgt.get_unchecked(i) as usize);
-            *slot = if *sched.term.get_unchecked(i) == 1 {
-                v
+            let v = self.ring.extend(
+                self.ring.extend(
+                    self.st.read(*sched.l.get_unchecked(i) as usize),
+                    self.st.read(*sched.r.get_unchecked(i) as usize),
+                ),
+                *self.dims.get_unchecked(*sched.pa.get_unchecked(i) as usize)
+                    * *self.dims.get_unchecked(*sched.pb.get_unchecked(i) as usize)
+                    * *self.dims.get_unchecked(*sched.pc.get_unchecked(i) as usize),
+            );
+            let tgt = *sched.tgt.get_unchecked(i) as usize;
+            if R::ACTIVE {
+                // recording tier: conditional strict-improvement write;
+                // the sidecar store shares the table write's ownership
+                if *sched.term.get_unchecked(i) == 1 || self.ring.improves(v, self.st.read(tgt))
+                {
+                    self.st.write(tgt, v);
+                    self.rec.store(tgt, *sched.pb.get_unchecked(i) - 1);
+                }
             } else {
-                (*slot).min(v)
-            };
+                // plain tier: term 1 overwrites, later terms ⊕-combine
+                let newv = if *sched.term.get_unchecked(i) == 1 {
+                    v
+                } else {
+                    self.ring.combine(self.st.read(tgt), v)
+                };
+                self.st.write(tgt, newv);
+            }
         }
     }
 }
 
-/// [`execute_fused`] + split recording (DESIGN.md §8): a term whose value
-/// overwrites (term 1) or strictly improves its cell also stores the
-/// term's split `m = pb − 1` into the sidecar.  Terms of a cell are swept
-/// in ascending term (= ascending split) order, so strict improvement
-/// keeps the *lowest* minimizing split — exactly the sequential oracle's
-/// tie-break ([`crate::mcm::seq::splits_linear`]).
+impl<R: SplitRecord> SweepKernel for McmKernel<'_, R> {
+    fn num_supersteps(&self) -> usize {
+        self.sched.num_supersteps()
+    }
+
+    fn max_parties(&self) -> usize {
+        self.sched.max_width().max(1)
+    }
+
+    unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+        // work assignment by target cell (`tgt % parties`): all terms of
+        // one cell stay on one party in arena (term) order, so the
+        // term-1 overwrite always precedes that cell's ⊕-combines and
+        // recording stays single-writer (DESIGN.md §8)
+        for i in self.sched.superstep_range(g) {
+            // SAFETY: `i` is in the superstep CSR hence < num_terms;
+            // operands are finalized in earlier supersteps (the
+            // schedule's superstep tiling is fusion-proof —
+            // `core::conflict::mcm_superstep_hazards` is empty) and the
+            // target cell is owned by this party.
+            unsafe {
+                if *self.sched.tgt.get_unchecked(i) as usize % parties != party {
+                    continue;
+                }
+                self.term(i);
+            }
+        }
+    }
+
+    unsafe fn sweep_serial(&self) {
+        // flat single loop, no superstep boundaries: hazard-freedom
+        // makes each term's reads final regardless of where the step
+        // cuts fall, so the arena sweeps as one flat loop (§Perf — the
+        // fused hot path)
+        for i in 0..self.sched.num_terms() {
+            // SAFETY: i < num_terms; serial discipline.
+            unsafe { self.term(i) };
+        }
+    }
+}
+
+/// Fused single pass (corrected schedules only): compute-and-write per
+/// lane, no pending buffer.  Sound because corrected schedules are
+/// hazard-free — see the module docs.  One monomorphized instantiation
+/// of the generic sweep ([`McmKernel`] + [`sweep::run_fused`]).
+fn execute_fused(p: &McmProblem, sched: &McmSchedule, st: &mut [i64]) {
+    sweep::run_fused(&McmKernel::new(p, sched, st, NoRecord));
+}
+
+/// [`execute_fused`] + split recording (DESIGN.md §8): the same kernel
+/// with a live [`SplitArena`] recorder.
 fn execute_fused_recorded(
     p: &McmProblem,
     sched: &McmSchedule,
     st: &mut [i64],
     splits: &SplitArena,
 ) {
-    let dims = &p.dims;
-    for i in 0..sched.num_terms() {
-        // SAFETY: identical bounds argument to `execute_fused`; the
-        // sidecar has one slot per table cell, indexed by the same tgt.
-        unsafe {
-            let v = *st.get_unchecked(*sched.l.get_unchecked(i) as usize)
-                + *st.get_unchecked(*sched.r.get_unchecked(i) as usize)
-                + *dims.get_unchecked(*sched.pa.get_unchecked(i) as usize)
-                    * *dims.get_unchecked(*sched.pb.get_unchecked(i) as usize)
-                    * *dims.get_unchecked(*sched.pc.get_unchecked(i) as usize);
-            let tgt = *sched.tgt.get_unchecked(i) as usize;
-            let slot = st.get_unchecked_mut(tgt);
-            if *sched.term.get_unchecked(i) == 1 || v < *slot {
-                *slot = v;
-                splits.store(tgt, *sched.pb.get_unchecked(i) - 1);
-            }
-        }
-    }
+    sweep::run_fused(&McmKernel::new(p, sched, st, splits));
 }
 
 /// The paper's 4-substep memory model: gather every lane of a step, then
@@ -188,21 +268,7 @@ pub fn execute_cancellable(
     let mut st = vec![0i64; linear::num_cells(p.n())];
     match sched.variant {
         McmVariant::Corrected => {
-            let dims = &p.dims;
-            for g in 0..sched.num_supersteps() {
-                if g % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
-                    return cancelled();
-                }
-                for i in sched.superstep_range(g) {
-                    let v = st[sched.l[i] as usize]
-                        + st[sched.r[i] as usize]
-                        + dims[sched.pa[i] as usize]
-                            * dims[sched.pb[i] as usize]
-                            * dims[sched.pc[i] as usize];
-                    let tgt = sched.tgt[i] as usize;
-                    st[tgt] = if sched.term[i] == 1 { v } else { st[tgt].min(v) };
-                }
-            }
+            sweep::run_cancellable(&McmKernel::new(p, sched, &mut st, NoRecord), token)?;
         }
         McmVariant::PaperFaithful => {
             let dims = &p.dims;
@@ -424,9 +490,9 @@ pub fn execute_threaded_recorded(
 
 /// Pooled superstep-tiled executor (DESIGN.md §7): resident
 /// [`ExecPool`] workers sweep one *superstep* of the arena between
-/// [`SenseBarrier`] waits — `⌈steps/tile⌉` cheap barriers instead of
-/// one/two mutex-condvar barriers per step, and no per-solve
-/// spawn/join.
+/// [`crate::runtime::exec_pool::SenseBarrier`] waits — `⌈steps/tile⌉`
+/// cheap barriers instead of one/two mutex-condvar barriers per step,
+/// and no per-solve spawn/join.
 ///
 /// Work assignment is by **target cell** (`tgt % parties`): all terms of
 /// one cell stay on one worker in arena (step) order, so the term-1
@@ -462,49 +528,9 @@ pub fn execute_pooled_counted(
         McmVariant::Corrected,
         "pooled execution requires the hazard-free Corrected schedule"
     );
-    let parties = threads
-        .max(1)
-        .min(pool.threads())
-        .min(sched.max_width().max(1));
     let mut st = vec![0i64; linear::num_cells(n)];
-    if parties <= 1 {
-        execute_fused(p, sched, &mut st);
-        return (st, 0);
-    }
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        for g in 0..sched.num_supersteps() {
-            for i in sched.superstep_range(g) {
-                let tgt = sched.tgt[i] as usize;
-                if tgt % parties != t {
-                    continue;
-                }
-                // SAFETY: operands finalized in earlier supersteps
-                // (superstep fusion proof), this cell is written only by
-                // this worker (tgt-modulo ownership) in term order (arena
-                // order), supersteps are barrier-separated.
-                unsafe {
-                    let v = st_ptr.read(sched.l[i] as usize)
-                        + st_ptr.read(sched.r[i] as usize)
-                        + p.weight(
-                            sched.pa[i] as usize,
-                            sched.pb[i] as usize,
-                            sched.pc[i] as usize,
-                        );
-                    let newv = if sched.term[i] == 1 {
-                        v
-                    } else {
-                        st_ptr.read(tgt).min(v)
-                    };
-                    st_ptr.write(tgt, newv);
-                }
-            }
-            waiter.wait(); // end of superstep
-        }
-    });
-    (st, barrier.rounds())
+    let rounds = sweep::run_pooled_counted(&McmKernel::new(p, sched, &mut st, NoRecord), pool, threads);
+    (st, rounds)
 }
 
 /// [`execute_pooled`] with cooperative cancellation via the superstep
@@ -552,61 +578,14 @@ pub fn execute_pooled_cancellable_counted(
         McmVariant::Corrected,
         "pooled execution requires the hazard-free Corrected schedule"
     );
-    let parties = threads
-        .max(1)
-        .min(pool.threads())
-        .min(sched.max_width().max(1));
-    if parties <= 1 {
-        return (execute_cancellable(p, sched, token), 0);
-    }
     let mut st = vec![0i64; linear::num_cells(n)];
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    let cut_at = AtomicUsize::new(usize::MAX);
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        for g in 0..sched.num_supersteps() {
-            // a cut published at the end of superstep s names s+1: false
-            // for every party still inside superstep s, true for every
-            // party at the top of s+1 (the publication happens-before
-            // their return from the superstep-s barrier)
-            if cut_at.load(Ordering::Relaxed) <= g {
-                break;
-            }
-            for i in sched.superstep_range(g) {
-                let tgt = sched.tgt[i] as usize;
-                if tgt % parties != t {
-                    continue;
-                }
-                // SAFETY: identical ownership/freshness argument to
-                // `execute_pooled_counted`; cancellation only ever cuts
-                // whole supersteps, never mid-step writes.
-                unsafe {
-                    let v = st_ptr.read(sched.l[i] as usize)
-                        + st_ptr.read(sched.r[i] as usize)
-                        + p.weight(
-                            sched.pa[i] as usize,
-                            sched.pb[i] as usize,
-                            sched.pc[i] as usize,
-                        );
-                    let newv = if sched.term[i] == 1 {
-                        v
-                    } else {
-                        st_ptr.read(tgt).min(v)
-                    };
-                    st_ptr.write(tgt, newv);
-                }
-            }
-            if t == 0 && token.is_cancelled() {
-                cut_at.store(g + 1, Ordering::Relaxed);
-            }
-            waiter.wait(); // end of superstep
-        }
-    });
-    if cut_at.load(Ordering::Relaxed) != usize::MAX {
-        return (cancelled(), barrier.rounds());
-    }
-    (Ok(st), barrier.rounds())
+    let (r, rounds) = sweep::run_pooled_cancellable_counted(
+        &McmKernel::new(p, sched, &mut st, NoRecord),
+        pool,
+        threads,
+        token,
+    );
+    (r.map(|()| st), rounds)
 }
 
 /// [`execute_pooled`] + traceback recording: `tgt`-modulo ownership
@@ -626,47 +605,10 @@ pub fn execute_pooled_recorded(
         McmVariant::Corrected,
         "traceback recording requires the hazard-free Corrected schedule"
     );
-    let parties = threads
-        .max(1)
-        .min(pool.threads())
-        .min(sched.max_width().max(1));
     let ncells = linear::num_cells(n);
     let mut st = vec![0i64; ncells];
     let splits = SplitArena::new(ncells);
-    if parties <= 1 {
-        execute_fused_recorded(p, sched, &mut st, &splits);
-        return (st, splits.into_vec());
-    }
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    let splits_ref = &splits;
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        for g in 0..sched.num_supersteps() {
-            for i in sched.superstep_range(g) {
-                let tgt = sched.tgt[i] as usize;
-                if tgt % parties != t {
-                    continue;
-                }
-                // SAFETY: as in `execute_pooled`; the sidecar slot is
-                // owned by the same worker that owns the table cell.
-                unsafe {
-                    let v = st_ptr.read(sched.l[i] as usize)
-                        + st_ptr.read(sched.r[i] as usize)
-                        + p.weight(
-                            sched.pa[i] as usize,
-                            sched.pb[i] as usize,
-                            sched.pc[i] as usize,
-                        );
-                    if sched.term[i] == 1 || v < st_ptr.read(tgt) {
-                        st_ptr.write(tgt, v);
-                        splits_ref.store(tgt, sched.pb[i] - 1);
-                    }
-                }
-            }
-            waiter.wait(); // end of superstep
-        }
-    });
+    sweep::run_pooled_counted(&McmKernel::new(p, sched, &mut st, &splits), pool, threads);
     (st, splits.into_vec())
 }
 
@@ -868,7 +810,7 @@ mod tests {
         // party breaking at the same superstep, Err(Timeout)) or have
         // already finished (Ok, matching the oracle) — never wedge or
         // corrupt
-        use std::sync::atomic::AtomicBool;
+        use std::sync::atomic::{AtomicBool, Ordering};
         use std::sync::Arc;
         let pool = Arc::new(ExecPool::new(4));
         let p = McmProblem::new((0..320).map(|i| (i % 23) + 1).collect()).unwrap();
@@ -959,6 +901,40 @@ mod tests {
             let (pt, pooled) = execute_pooled_recorded(&p, &tsched, &pool, threads);
             if pooled != want || pt != seq::linear_table(&p) {
                 return Err(format!("pooled(t={threads},T={tile}) splits: {:?}", p.dims));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generic_sweep_bit_identical_to_legacy_threaded() {
+        // DESIGN.md §11 regression pin: the (min, +) semiring
+        // instantiation must reproduce the hand-rolled executors
+        // bit-for-bit — table values AND recorded splits — across the
+        // threads × tile matrix.  `execute_threaded*` keep the
+        // historical loop shape, so they are the in-tree legacy
+        // reference alongside the sequential oracle.
+        let pool = ExecPool::new(8);
+        forall("mcm semiring sweep == legacy", 20, |g| {
+            let n = g.usize(1..24);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let sched = McmSchedule::compile(n, McmVariant::Corrected);
+            let want_st = seq::linear_table(&p);
+            let want_sp = seq::splits_linear(&p);
+            for threads in [1usize, 2, 8] {
+                let legacy = execute_threaded(&p, &sched, threads);
+                let (lst, lsp) = execute_threaded_recorded(&p, &sched, threads);
+                if legacy != want_st || lst != want_st || lsp != want_sp {
+                    return Err(format!("legacy diverged: n={n} threads={threads}"));
+                }
+                for tile in [1usize, 4, 64] {
+                    let tsched = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+                    let generic = execute_pooled(&p, &tsched, &pool, threads);
+                    let (gst, gsp) = execute_pooled_recorded(&p, &tsched, &pool, threads);
+                    if generic != legacy || gst != lst || gsp != lsp {
+                        return Err(format!("n={n} threads={threads} tile={tile}"));
+                    }
+                }
             }
             Ok(())
         });

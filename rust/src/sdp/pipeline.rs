@@ -20,80 +20,177 @@
 //! * the XLA executor — the same schedule lowered into the Pallas kernel
 //!   (`python/compile/kernels/sdp_pipeline.py`), dispatched via
 //!   [`crate::runtime::engine`].
+//!
+//! Since DESIGN.md §11 the fused, cancellable, pooled and
+//! pooled-cancellable tiers are monomorphized instantiations of the
+//! generic sweep ([`crate::core::sweep`]) over [`SdpKernel`]: the `⊗`
+//! operator of Definition 1 becomes the `⊕` of a [`Semiring`] — `(min,
+//! +)`, `(max, +)` or the counting ring — chosen once per solve by
+//! `Op`-dispatch, and the hand-copied lane loops died with it.  Only the
+//! scoped-thread executors ([`solve_threaded`],
+//! [`solve_threaded_cancellable`]) keep their own loop: they exist to
+//! compare `std::sync::Barrier` against the pool's sense barrier.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Barrier;
 
 use crate::core::problem::SdpProblem;
 use crate::core::schedule::SdpSchedule;
-use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool, SenseBarrier, CANCEL_POLL_STRIDE};
+use crate::core::semiring::{MaxPlus, MinPlus, Semiring, SumProd};
+use crate::core::sweep::{self, SharedSlice, SweepKernel};
+use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool};
 use crate::sdp::naive::SharedTable;
 
-/// Step-synchronous pipeline solve (Fig. 2 verbatim).
+/// The S-DP pipeline packaged for the generic sweep drivers (DESIGN.md
+/// §11).  A superstep is one outer step `i = a1 + g`; party `t` of
+/// `parties` owns the contiguous lanes `j ∈ [t·⌈k/parties⌉ + 1,
+/// (t+1)·⌈k/parties⌉]` — contiguous, not strided, so each party touches
+/// a dense run of the offsets vector and of write targets (`ij = i − j +
+/// 1` is contiguous in `j`), keeping its table traffic within a few
+/// cache lines per step (DESIGN.md §Perf).  Thread 1's overwrite (`ST[i]
+/// ← ST[i − a1]`) is the `j == 1` lane; every later lane folds with the
+/// ring's `⊕`.
+struct SdpKernel<'a, S: Semiring<V = i64>> {
+    n: usize,
+    k: usize,
+    a1: usize,
+    offsets: &'a [i64],
+    st: SharedSlice<i64>,
+    ring: S,
+}
+
+impl<'a, S: Semiring<V = i64>> SdpKernel<'a, S> {
+    fn new(p: &'a SdpProblem, st: &mut [i64], ring: S) -> Self {
+        debug_assert_eq!(st.len(), p.n);
+        SdpKernel {
+            n: p.n,
+            k: p.k(),
+            a1: p.a1(),
+            offsets: &p.offsets,
+            st: SharedSlice::new(st.as_mut_ptr()),
+            ring,
+        }
+    }
+}
+
+impl<S: Semiring<V = i64>> SweepKernel for SdpKernel<'_, S> {
+    fn num_supersteps(&self) -> usize {
+        // outer steps i = a1 ..= n + k − 2
+        self.n + self.k - 1 - self.a1
+    }
+
+    fn max_parties(&self) -> usize {
+        self.k
+    }
+
+    unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+        let i = self.a1 + g;
+        let chunk = self.k.div_ceil(parties);
+        // party t owns the contiguous lanes j = jlo..=jhi
+        let jlo = (party * chunk + 1).min(self.k + 1);
+        let jhi = ((party + 1) * chunk).min(self.k);
+        for j in jlo..=jhi {
+            if j > i + 1 {
+                break; // pipe not filled this deep yet
+            }
+            let ij = i - j + 1;
+            if ij >= self.a1 && ij < self.n {
+                // SAFETY: `ij − a` is finalized in an earlier step (the
+                // freshness bound in the module docs), `ij` is written
+                // only by lane j this step and lanes have distinct
+                // targets; supersteps are barrier-separated by the
+                // caller's discipline.
+                unsafe {
+                    let a = *self.offsets.get_unchecked(j - 1) as usize;
+                    let v = self.st.read(ij - a);
+                    let newv = if j == 1 {
+                        v // thread 1 overwrites
+                    } else {
+                        self.ring.combine(self.st.read(ij), v)
+                    };
+                    self.st.write(ij, newv);
+                }
+            }
+        }
+    }
+
+    unsafe fn sweep_serial(&self) {
+        // §Perf: the serial lane loop is specialized with the active-lane
+        // range `[jlo, jhi]` computed once per step instead of per-lane
+        // masking (−30% at n = 2^16, k = 512 vs the naive sweep; see
+        // EXPERIMENTS.md).  Within a step every write target is distinct
+        // and every read is finalized, so the serial sweep realizes the
+        // parallel pipeline's result exactly.
+        let (n, k, a1) = (self.n, self.k, self.a1);
+        for i in a1..=(n + k - 2) {
+            // active lanes: a1 ≤ i − j + 1 < n  ⇔  i+1−n < j ≤ i+1−a1
+            let jlo = (i + 2).saturating_sub(n).max(1);
+            let jhi = (i + 1 - a1).min(k);
+            // SAFETY: serial discipline; index bounds as in the parallel
+            // lane loop above.
+            unsafe {
+                if jlo == 1 && jhi >= 1 {
+                    let a = *self.offsets.get_unchecked(0) as usize;
+                    self.st.write(i, self.st.read(i - a)); // thread 1 overwrites
+                }
+                for j in jlo.max(2)..=jhi {
+                    let ij = i - j + 1;
+                    let a = *self.offsets.get_unchecked(j - 1) as usize;
+                    let v = self.st.read(ij - a);
+                    self.st.write(ij, self.ring.combine(self.st.read(ij), v));
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch the problem's semigroup operator to a monomorphized
+/// [`SdpKernel`] instantiation: `Min → (min, +)`, `Max → (max, +)`,
+/// `Add →` the counting ring.  Each arm type-checks `$body` at its own
+/// ring type, so the sweep drivers compile three specialized loops — the
+/// same code the three hand-rolled copies used to be.
+macro_rules! with_ring {
+    ($op:expr, $ring:ident => $body:expr) => {
+        match $op {
+            crate::core::semigroup::Op::Min => {
+                let $ring = MinPlus;
+                $body
+            }
+            crate::core::semigroup::Op::Max => {
+                let $ring = MaxPlus;
+                $body
+            }
+            crate::core::semigroup::Op::Add => {
+                let $ring = SumProd;
+                $body
+            }
+        }
+    };
+}
+
+/// Step-synchronous pipeline solve (Fig. 2 verbatim) — the fused serial
+/// sweep of the ring-dispatched [`SdpKernel`].
 ///
-/// §Perf: the lane loop is specialized per operator with the active-lane
-/// range `[jlo, jhi]` computed once per step instead of per-lane masking
-/// (−30% at n = 2^16, k = 512 vs the naive sweep; see EXPERIMENTS.md).
+/// §Perf: the serial lane loop (the kernel's `sweep_serial`) is
+/// specialized per ring with the active-lane range `[jlo, jhi]` computed
+/// once per step instead of per-lane masking (−30% at n = 2^16, k = 512
+/// vs the naive sweep; see EXPERIMENTS.md).
 pub fn solve(p: &SdpProblem) -> Vec<i64> {
     let mut st = p.initial_table();
-    match p.op {
-        crate::core::semigroup::Op::Min => solve_with(p, &mut st, |a, b| a.min(b)),
-        crate::core::semigroup::Op::Max => solve_with(p, &mut st, |a, b| a.max(b)),
-        crate::core::semigroup::Op::Add => solve_with(p, &mut st, |a, b| a.wrapping_add(b)),
-    }
+    with_ring!(p.op, ring => sweep::run_fused(&SdpKernel::new(p, &mut st, ring)));
     st
 }
 
-#[inline(always)]
-fn solve_with(p: &SdpProblem, st: &mut [i64], f: impl Fn(i64, i64) -> i64) {
-    let (n, k, a1) = (p.n, p.k(), p.a1());
-    let offsets = &p.offsets;
-    // outer steps i = a1 ..= n + k − 2; threads run "in parallel": within
-    // a step every write target is distinct and every read is of a
-    // finalized element, so a serial lane sweep realizes the same result.
-    for i in a1..=(n + k - 2) {
-        // active lanes: a1 ≤ i − j + 1 < n  ⇔  i+1−n < j ≤ i+1−a1
-        let jlo = (i + 2).saturating_sub(n).max(1);
-        let jhi = (i + 1 - a1).min(k);
-        if jlo == 1 && jhi >= 1 {
-            st[i] = st[i - offsets[0] as usize]; // thread 1 overwrites
-        }
-        for j in jlo.max(2)..=jhi {
-            let ij = i - j + 1;
-            let v = st[ij - offsets[j - 1] as usize];
-            st[ij] = f(st[ij], v);
-        }
-    }
-}
-
 /// [`solve`] with cooperative cancellation: the outer-step loop polls the
-/// [`CancelToken`] every [`CANCEL_POLL_STRIDE`] steps and abandons the
-/// table with `Err(Timeout)` once it fires.  A never-token delegates to
-/// the specialized fused executor — the common path pays nothing.
+/// [`CancelToken`] every
+/// [`crate::runtime::exec_pool::CANCEL_POLL_STRIDE`] steps and abandons
+/// the table with `Err(Timeout)` once it fires.  A never-token delegates
+/// to the specialized fused executor — the common path pays nothing.
 pub fn solve_cancellable(p: &SdpProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
-    if token.is_never() {
-        return Ok(solve(p));
-    }
-    token.check()?;
     let mut st = p.initial_table();
-    let (n, k, a1) = (p.n, p.k(), p.a1());
-    let op = p.op;
-    let offsets = &p.offsets;
-    for (step, i) in (a1..=(n + k - 2)).enumerate() {
-        if step % CANCEL_POLL_STRIDE == 0 && token.is_cancelled() {
-            return cancelled();
-        }
-        let jlo = (i + 2).saturating_sub(n).max(1);
-        let jhi = (i + 1 - a1).min(k);
-        if jlo == 1 && jhi >= 1 {
-            st[i] = st[i - offsets[0] as usize];
-        }
-        for j in jlo.max(2)..=jhi {
-            let ij = i - j + 1;
-            let v = st[ij - offsets[j - 1] as usize];
-            st[ij] = op.apply(st[ij], v);
-        }
-    }
+    with_ring!(p.op, ring => {
+        sweep::run_cancellable(&SdpKernel::new(p, &mut st, ring), token)?;
+    });
     Ok(st)
 }
 
@@ -155,47 +252,17 @@ pub fn solve_threaded(p: &SdpProblem, threads: usize) -> Vec<i64> {
 }
 
 /// Pooled pipeline executor (DESIGN.md §7): the same contiguous-chunk
-/// lane assignment as [`solve_threaded`], but on resident
-/// [`ExecPool`] workers with one [`SenseBarrier`] wait per outer step —
-/// no per-solve spawn/join and no mutex-condvar barrier.  The S-DP
-/// freshness bound (module docs) is the safety argument, unchanged.
+/// lane assignment as [`solve_threaded`], but on resident [`ExecPool`]
+/// workers with one [`crate::runtime::exec_pool::SenseBarrier`] wait per
+/// outer step — no per-solve spawn/join and no mutex-condvar barrier.
+/// The S-DP freshness bound (module docs) is the safety argument,
+/// unchanged.  The generic pooled driver clamps parties to the kernel's
+/// `max_parties() = k` and falls back to the fused serial sweep when one
+/// party remains — exactly the historical entry conditions.
 pub fn execute_pooled(p: &SdpProblem, pool: &ExecPool, threads: usize) -> Vec<i64> {
-    let parties = threads.max(1).min(pool.threads()).min(p.k());
-    if parties == 1 {
-        return solve(p);
-    }
     let mut st = p.initial_table();
-    let (n, k, a1) = (p.n, p.k(), p.a1());
-    let op = p.op;
-    let offsets = &p.offsets;
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    let chunk = k.div_ceil(parties);
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        // worker t owns the contiguous lanes j = jlo..=jhi
-        let jlo = (t * chunk + 1).min(k + 1);
-        let jhi = ((t + 1) * chunk).min(k);
-        for i in a1..=(n + k - 2) {
-            for j in jlo..=jhi {
-                if j > i + 1 {
-                    break; // pipe not filled this deep yet
-                }
-                let ij = i - j + 1;
-                if ij >= a1 && ij < n {
-                    let a = offsets[j - 1] as usize;
-                    // SAFETY: identical disjointness/freshness argument
-                    // to `solve_threaded`; steps are barrier-separated.
-                    unsafe {
-                        let v = st_ptr.read(ij - a);
-                        let cur = st_ptr.read(ij);
-                        let newv = if j == 1 { v } else { op.apply(cur, v) };
-                        st_ptr.write(ij, newv);
-                    }
-                }
-            }
-            waiter.wait();
-        }
+    with_ring!(p.op, ring => {
+        sweep::run_pooled_counted(&SdpKernel::new(p, &mut st, ring), pool, threads);
     });
     st
 }
@@ -221,56 +288,11 @@ pub fn execute_pooled_cancellable(
         return Ok(execute_pooled(p, pool, threads));
     }
     token.check()?;
-    let parties = threads.max(1).min(pool.threads()).min(p.k());
-    if parties == 1 {
-        return solve_cancellable(p, token);
-    }
     let mut st = p.initial_table();
-    let (n, k, a1) = (p.n, p.k(), p.a1());
-    let op = p.op;
-    let offsets = &p.offsets;
-    let barrier = SenseBarrier::new(parties);
-    let st_ptr = SharedTable(st.as_mut_ptr());
-    let chunk = k.div_ceil(parties);
-    let cut_at = AtomicUsize::new(usize::MAX);
-    pool.run(parties, |t| {
-        let mut waiter = barrier.waiter();
-        let jlo = (t * chunk + 1).min(k + 1);
-        let jhi = ((t + 1) * chunk).min(k);
-        for (step, i) in (a1..=(n + k - 2)).enumerate() {
-            // a cut published at the end of step s names s+1, so this
-            // comparison is false for every party still inside step s and
-            // true for every party at the top of s+1 (the publication
-            // happens-before their return from the step-s barrier)
-            if cut_at.load(Ordering::Relaxed) <= step {
-                break;
-            }
-            for j in jlo..=jhi {
-                if j > i + 1 {
-                    break;
-                }
-                let ij = i - j + 1;
-                if ij >= a1 && ij < n {
-                    let a = offsets[j - 1] as usize;
-                    // SAFETY: identical disjointness/freshness argument
-                    // to `execute_pooled`; steps are barrier-separated.
-                    unsafe {
-                        let v = st_ptr.read(ij - a);
-                        let cur = st_ptr.read(ij);
-                        let newv = if j == 1 { v } else { op.apply(cur, v) };
-                        st_ptr.write(ij, newv);
-                    }
-                }
-            }
-            if t == 0 && token.is_cancelled() {
-                cut_at.store(step + 1, Ordering::Relaxed);
-            }
-            waiter.wait();
-        }
+    with_ring!(p.op, ring => {
+        sweep::run_pooled_cancellable_counted(&SdpKernel::new(p, &mut st, ring), pool, threads, token)
+            .0?;
     });
-    if cut_at.load(Ordering::Relaxed) != usize::MAX {
-        return cancelled();
-    }
     Ok(st)
 }
 
@@ -446,6 +468,36 @@ mod tests {
                     p.offsets
                 ))
             }
+        });
+    }
+
+    #[test]
+    fn generic_sweep_bit_identical_to_legacy_threaded() {
+        // DESIGN.md §11 regression pin: the ring-dispatched sweep (all
+        // three S-DP operators: (min, +), (max, +), counting) must
+        // reproduce the hand-rolled scoped-thread executor bit-for-bit
+        // across the thread matrix — wrapping arithmetic included.
+        let pool = ExecPool::new(8);
+        forall("sdp semiring sweep == legacy", 24, |g| {
+            let p = testutil::random_problem(g);
+            let want = seq::solve(&p);
+            let fused = solve(&p);
+            if fused != want {
+                return Err(format!("fused: n={} k={} op={}", p.n, p.k(), p.op));
+            }
+            for threads in [1usize, 2, 8] {
+                let legacy = solve_threaded(&p, threads);
+                let pooled = execute_pooled(&p, &pool, threads);
+                if legacy != want || pooled != legacy {
+                    return Err(format!(
+                        "n={} k={} threads={threads} op={}",
+                        p.n,
+                        p.k(),
+                        p.op
+                    ));
+                }
+            }
+            Ok(())
         });
     }
 

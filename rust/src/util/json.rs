@@ -44,6 +44,31 @@ impl Json {
         Json::Num(n as f64)
     }
 
+    pub fn null() -> Json {
+        Json::Null
+    }
+
+    /// Encode a log-probability that may legitimately be infinite.
+    ///
+    /// JSON has no `Infinity` token (the serializer degrades bare
+    /// non-finite [`Json::Num`]s to `null`, which loses the sign), so the
+    /// log-space DP families (`viterbi`, `cyk` — docs/PROTOCOL.md) carry
+    /// `±∞` as the string sentinels `"-inf"` / `"inf"`.  Finite values
+    /// stay plain numbers; `NaN` (never a valid log-probability —
+    /// [`crate::core::problem::ViterbiProblem`] validation rejects it)
+    /// encodes as `null` so it cannot masquerade as a score.
+    pub fn lognum(v: f64) -> Json {
+        if v == f64::NEG_INFINITY {
+            Json::str("-inf")
+        } else if v == f64::INFINITY {
+            Json::str("inf")
+        } else if v.is_nan() {
+            Json::Null
+        } else {
+            Json::Num(v)
+        }
+    }
+
     // ---- accessors --------------------------------------------------------
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -97,6 +122,19 @@ impl Json {
         }
     }
 
+    /// Decode a [`Json::lognum`] value: a plain finite number, or the
+    /// `"-inf"` / `"inf"` string sentinels.  Anything else (including a
+    /// non-finite `Num` smuggled in as `1e999`) is `None` — the sentinel
+    /// spelling is the only accepted encoding of an infinity.
+    pub fn as_lognum(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) if n.is_finite() => Some(*n),
+            Json::Str(s) if s == "-inf" => Some(f64::NEG_INFINITY),
+            Json::Str(s) if s == "inf" => Some(f64::INFINITY),
+            _ => None,
+        }
+    }
+
     /// Typed field accessors (error-reporting convenience for decoders).
     pub fn str_field(&self, key: &str) -> Result<&str> {
         self.field(key)?
@@ -129,6 +167,24 @@ impl Json {
             .map(|v| {
                 v.as_i64()
                     .ok_or_else(|| Error::Json(format!("'{key}' has a non-integer element")))
+            })
+            .collect()
+    }
+
+    pub fn lognum_field(&self, key: &str) -> Result<f64> {
+        self.field(key)?
+            .as_lognum()
+            .ok_or_else(|| Error::Json(format!("field '{key}' is not a lognum")))
+    }
+
+    /// Decode an array of [`Json::lognum`]s (log-probability vectors of
+    /// the `viterbi`/`cyk` wire kinds, `−∞` spelled `"-inf"`).
+    pub fn lognum_vec_field(&self, key: &str) -> Result<Vec<f64>> {
+        self.arr_field(key)?
+            .iter()
+            .map(|v| {
+                v.as_lognum()
+                    .ok_or_else(|| Error::Json(format!("'{key}' has a non-lognum element")))
             })
             .collect()
     }
@@ -681,6 +737,56 @@ mod tests {
                     .collect(),
             ),
         }
+    }
+
+    #[test]
+    fn lognum_roundtrips_infinities_through_the_wire() {
+        use crate::prop::forall;
+        forall("lognum roundtrip", 200, |g| {
+            // mix finite log-probs (≤ 0, as check_logprobs enforces) with
+            // the infinities the plain Num encoding would destroy
+            let v = match g.usize(0..4) {
+                0 => f64::NEG_INFINITY,
+                1 => 0.0,
+                _ => -(g.i64(0..1_000_000) as f64) / 64.0,
+            };
+            let doc = Json::obj(vec![("p", Json::lognum(v))]);
+            let back = Json::parse(&doc.to_string())
+                .map_err(|e| format!("reparse: {e}"))?;
+            let got = back
+                .lognum_field("p")
+                .map_err(|e| format!("decode: {e}"))?;
+            if got == v || (got - v).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("{v} came back as {got}"))
+            }
+        });
+    }
+
+    #[test]
+    fn lognum_sentinels_and_rejections() {
+        assert_eq!(Json::lognum(f64::NEG_INFINITY).to_string(), r#""-inf""#);
+        assert_eq!(Json::lognum(f64::INFINITY).to_string(), r#""inf""#);
+        assert_eq!(Json::lognum(f64::NAN), Json::Null, "NaN must not encode as a score");
+        assert_eq!(Json::lognum(-1.5), Json::Num(-1.5));
+
+        assert_eq!(Json::str("-inf").as_lognum(), Some(f64::NEG_INFINITY));
+        assert_eq!(Json::str("inf").as_lognum(), Some(f64::INFINITY));
+        assert_eq!(Json::Num(-2.25).as_lognum(), Some(-2.25));
+        // only the sentinel spelling may carry an infinity
+        assert_eq!(Json::parse("1e999").unwrap().as_lognum(), None);
+        assert_eq!(Json::str("Infinity").as_lognum(), None);
+        assert_eq!(Json::Null.as_lognum(), None);
+        assert_eq!(Json::Bool(true).as_lognum(), None);
+
+        let v = Json::parse(r#"{"a": [0, "-inf", -3.5]}"#).unwrap();
+        assert_eq!(
+            v.lognum_vec_field("a").unwrap(),
+            vec![0.0, f64::NEG_INFINITY, -3.5]
+        );
+        let bad = Json::parse(r#"{"a": ["nan"]}"#).unwrap();
+        assert!(bad.lognum_vec_field("a").is_err());
     }
 
     #[test]

@@ -1,0 +1,17 @@
+//! Viterbi decoding — maximum-likelihood hidden-state paths of an HMM —
+//! as a served DP family (DESIGN.md §11).
+//!
+//! The recurrence is the `(max, ×)` semiring in log space
+//! ([`crate::core::semiring::LogMaxProb`]) swept over a `T × S` lattice
+//! whose schedule is trivially hazard-free: column `t` depends only on
+//! column `t − 1`, so each time step is one superstep and the generic
+//! sweep drivers ([`crate::core::sweep`]) provide the fused, cancellable,
+//! pooled and `_recorded` tiers without any family-specific loop code.
+//!
+//! * [`seq`] — the classic sequential oracle (and tie-break reference).
+//! * [`pipeline`] — the [`crate::core::sweep`] instantiation the serving
+//!   paths run, with backpointer recording into the shared
+//!   [`crate::core::traceback::SplitArena`] sidecar.
+
+pub mod pipeline;
+pub mod seq;

@@ -1,0 +1,323 @@
+//! The Viterbi lattice pipeline: one `(max, ×)`-log-space kernel
+//! ([`crate::core::semiring::LogMaxProb`]) instantiating the generic
+//! superstep sweep (DESIGN.md §11).
+//!
+//! The schedule is implicit and trivially hazard-free — superstep `g`
+//! computes lattice column `t = g + 1` from column `t − 1` only, so no
+//! arena is compiled and nothing is certified beyond the lowered IR of
+//! [`crate::core::certify::lower_viterbi`].  Work assignment is by state
+//! (`s % parties`), keeping each cell's max-scan and its backpointer
+//! store on one party.  `R = NoRecord` compiles the plain decode;
+//! `R = &SplitArena` additionally records the argmax predecessor of
+//! every cell under the pinned lowest-index tie-break — bit-identical
+//! to [`crate::viterbi::seq::solve_with_backpointers`].
+
+use crate::core::problem::ViterbiProblem;
+use crate::core::semiring::{LogMaxProb, Semiring};
+use crate::core::sweep::{self, SharedSlice, SweepKernel};
+use crate::core::traceback::{viterbi_path, NoRecord, SplitArena, SplitRecord, ViterbiSolution};
+use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool};
+
+/// The Viterbi recurrence packaged for the generic sweep drivers.
+struct ViterbiKernel<'a, R: SplitRecord> {
+    s: usize,
+    m: usize,
+    trans: &'a [f64],
+    emit: &'a [f64],
+    obs: &'a [usize],
+    st: SharedSlice<f64>,
+    ring: LogMaxProb,
+    rec: R,
+}
+
+impl<'a, R: SplitRecord> ViterbiKernel<'a, R> {
+    fn new(p: &'a ViterbiProblem, st: &mut [f64], rec: R) -> Self {
+        debug_assert_eq!(st.len(), p.num_cells());
+        ViterbiKernel {
+            s: p.num_states,
+            m: p.num_symbols,
+            trans: &p.trans,
+            emit: &p.emit,
+            obs: &p.obs,
+            st: SharedSlice::new(st.as_mut_ptr()),
+            ring: LogMaxProb,
+            rec,
+        }
+    }
+
+    /// One lattice cell: scan all predecessors of state `j` at time `t`
+    /// in ascending order, keep the strictly-best, `⊗`-extend with the
+    /// emission, record the argmax.
+    ///
+    /// # Safety
+    /// `1 ≤ t < T`, `j < S`; the caller holds the sweep discipline —
+    /// column `t − 1` is finalized and cell `(t, j)` is accessed by no
+    /// other party this superstep.
+    #[inline(always)]
+    unsafe fn cell(&self, t: usize, j: usize) {
+        // SAFETY: all lattice/trans/emit/obs indices are bounded by the
+        // problem's validated shapes (`trans[S²]`, `emit[S·M]`,
+        // `obs[t] < M`); table accesses are race-free by the caller's
+        // contract.
+        unsafe {
+            let mut best = self.ring.zero();
+            let mut arg = 0u32;
+            for q in 0..self.s {
+                let cand = self.ring.extend(
+                    self.st.read((t - 1) * self.s + q),
+                    *self.trans.get_unchecked(q * self.s + j),
+                );
+                if self.ring.improves(cand, best) {
+                    best = cand;
+                    arg = q as u32;
+                }
+            }
+            let idx = t * self.s + j;
+            let emit = *self
+                .emit
+                .get_unchecked(j * self.m + *self.obs.get_unchecked(t));
+            self.st.write(idx, self.ring.extend(best, emit));
+            if R::ACTIVE {
+                self.rec.store(idx, arg);
+            }
+        }
+    }
+}
+
+impl<R: SplitRecord> SweepKernel for ViterbiKernel<'_, R> {
+    fn num_supersteps(&self) -> usize {
+        self.obs.len().saturating_sub(1)
+    }
+
+    fn max_parties(&self) -> usize {
+        self.s
+    }
+
+    unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+        let t = g + 1;
+        for j in 0..self.s {
+            if j % parties != party {
+                continue;
+            }
+            // SAFETY: column t−1 finalized in superstep g−1 (or is the
+            // initial column); state ownership j % parties makes the
+            // write and the sidecar store exclusive to this party.
+            unsafe { self.cell(t, j) };
+        }
+    }
+}
+
+/// Fused single-threaded decode: fill the lattice, return the table.
+pub fn execute(p: &ViterbiProblem) -> Vec<f64> {
+    let mut st = p.initial_table();
+    sweep::run_fused(&ViterbiKernel::new(p, &mut st, NoRecord));
+    st
+}
+
+/// [`execute`] + backpointer recording (DESIGN.md §8): returns the solved
+/// lattice and the per-cell argmax-predecessor sidecar.
+pub fn execute_recorded(p: &ViterbiProblem) -> (Vec<f64>, Vec<u32>) {
+    let mut st = p.initial_table();
+    let bp = SplitArena::new(st.len());
+    sweep::run_fused(&ViterbiKernel::new(p, &mut st, &bp));
+    (st, bp.into_vec())
+}
+
+/// [`execute`] with cooperative cancellation: polls the [`CancelToken`]
+/// every [`crate::runtime::exec_pool::CANCEL_POLL_STRIDE`] supersteps and
+/// abandons the lattice with `Err(Timeout)` once it fires.
+pub fn execute_cancellable(p: &ViterbiProblem, token: &CancelToken) -> crate::Result<Vec<f64>> {
+    let mut st = p.initial_table();
+    sweep::run_cancellable(&ViterbiKernel::new(p, &mut st, NoRecord), token)?;
+    Ok(st)
+}
+
+/// Pooled decode: resident [`ExecPool`] workers sweep one lattice column
+/// between barriers, states split by `j % parties`.
+pub fn execute_pooled(p: &ViterbiProblem, pool: &ExecPool, threads: usize) -> Vec<f64> {
+    execute_pooled_counted(p, pool, threads).0
+}
+
+/// [`execute_pooled`] + the number of barrier rounds it cost.
+pub fn execute_pooled_counted(
+    p: &ViterbiProblem,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<f64>, u64) {
+    let mut st = p.initial_table();
+    let rounds = sweep::run_pooled_counted(&ViterbiKernel::new(p, &mut st, NoRecord), pool, threads);
+    (st, rounds)
+}
+
+/// [`execute_pooled`] with cooperative cancellation via the superstep cut
+/// protocol (see [`sweep::run_pooled_cancellable_counted`]).
+pub fn execute_pooled_cancellable(
+    p: &ViterbiProblem,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> crate::Result<Vec<f64>> {
+    execute_pooled_cancellable_counted(p, pool, threads, token).0
+}
+
+/// [`execute_pooled_cancellable`] + the barrier rounds it cost.
+pub fn execute_pooled_cancellable_counted(
+    p: &ViterbiProblem,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> (crate::Result<Vec<f64>>, u64) {
+    if token.is_never() {
+        let (st, rounds) = execute_pooled_counted(p, pool, threads);
+        return (Ok(st), rounds);
+    }
+    if token.is_cancelled() {
+        return (cancelled(), 0);
+    }
+    let mut st = p.initial_table();
+    let (r, rounds) = sweep::run_pooled_cancellable_counted(
+        &ViterbiKernel::new(p, &mut st, NoRecord),
+        pool,
+        threads,
+        token,
+    );
+    (r.map(|()| st), rounds)
+}
+
+/// [`execute_pooled`] + backpointer recording: state ownership keeps each
+/// sidecar slot single-writer (DESIGN.md §8).
+pub fn execute_pooled_recorded(
+    p: &ViterbiProblem,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<f64>, Vec<u32>) {
+    let mut st = p.initial_table();
+    let bp = SplitArena::new(st.len());
+    sweep::run_pooled_counted(&ViterbiKernel::new(p, &mut st, &bp), pool, threads);
+    (st, bp.into_vec())
+}
+
+/// Decode end to end: recorded fused solve + path walk — the router's
+/// `want_solution` route.
+pub fn solve_decoded(p: &ViterbiProblem) -> ViterbiSolution {
+    let (st, bp) = execute_recorded(p);
+    viterbi_path(p.num_states, &st, &bp)
+}
+
+/// Decode end to end on the process-wide pool — the router's pooled
+/// `want_solution` route.
+pub fn solve_pooled_decoded(p: &ViterbiProblem) -> ViterbiSolution {
+    let pool = crate::runtime::exec_pool::global();
+    let (st, bp) = execute_pooled_recorded(p, pool, pool.threads());
+    viterbi_path(p.num_states, &st, &bp)
+}
+
+/// Convenience: pooled decode on the process-wide pool.
+pub fn solve_pooled(p: &ViterbiProblem) -> Vec<f64> {
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled(p, pool, pool.threads())
+}
+
+/// Convenience: cancellable pooled decode on the process-wide pool.
+pub fn solve_pooled_cancellable(p: &ViterbiProblem, token: &CancelToken) -> crate::Result<Vec<f64>> {
+    let pool = crate::runtime::exec_pool::global();
+    execute_pooled_cancellable(p, pool, pool.threads(), token)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+    use crate::viterbi::seq;
+
+    #[test]
+    fn all_tiers_bit_identical_to_seq_oracle() {
+        let pool = ExecPool::new(8);
+        forall("viterbi tiers == seq", 30, |g| {
+            let p = ViterbiProblem::random(g.rng(), 1..24, 7, 5);
+            let (want_st, want_bp) = seq::solve_with_backpointers(&p);
+            let fused = execute(&p);
+            let (rst, rbp) = execute_recorded(&p);
+            if fused != want_st || rst != want_st || rbp != want_bp {
+                return Err(format!("fused diverged: {p:?}"));
+            }
+            for threads in [1usize, 2, 8] {
+                let pooled = execute_pooled(&p, &pool, threads);
+                let (pst, pbp) = execute_pooled_recorded(&p, &pool, threads);
+                if pooled != want_st || pst != want_st || pbp != want_bp {
+                    return Err(format!("pooled({threads}) diverged: {p:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decoded_path_matches_seq_decode() {
+        forall("viterbi decode == seq decode", 30, |g| {
+            let p = ViterbiProblem::random(g.rng(), 1..16, 6, 4);
+            let a = solve_decoded(&p);
+            let b = seq::decode(&p);
+            let c = solve_pooled_decoded(&p);
+            if a == b && a == c {
+                Ok(())
+            } else {
+                Err(format!("{a:?} vs {b:?} vs {c:?}: {p:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn cancellable_with_never_or_live_token_matches_oracle() {
+        let pool = ExecPool::new(4);
+        forall("viterbi cancellable == seq", 20, |g| {
+            let p = ViterbiProblem::random(g.rng(), 1..20, 6, 4);
+            let want = seq::solve(&p);
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            let a = execute_cancellable(&p, &CancelToken::never()).unwrap();
+            let b = execute_cancellable(&p, &live).unwrap();
+            let c = execute_pooled_cancellable(&p, &pool, 4, &live).unwrap();
+            if a == want && b == want && c == want {
+                Ok(())
+            } else {
+                Err(format!("{p:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn expired_deadline_never_engages_the_pool() {
+        let pool = ExecPool::new(4);
+        let mut rng = crate::util::rng::Rng::seeded(17);
+        let p = ViterbiProblem::random(&mut rng, 12..13, 6, 4);
+        let expired = CancelToken::at(std::time::Instant::now());
+        let before = pool.stats().solves;
+        let (r, rounds) = execute_pooled_cancellable_counted(&p, &pool, 4, &expired);
+        assert!(matches!(r, Err(crate::Error::Timeout(_))));
+        assert_eq!(rounds, 0);
+        assert_eq!(pool.stats().solves, before);
+        // pool still serves afterwards
+        assert_eq!(execute_pooled(&p, &pool, 4), seq::solve(&p));
+    }
+
+    #[test]
+    fn pooled_superstep_barrier_budget_is_one_per_column() {
+        // fixed S = 4 so the party clamp cannot collapse to the serial
+        // fast path (which costs zero rounds)
+        let half = (0.5f64).ln();
+        let quarter = (0.25f64).ln();
+        let p = ViterbiProblem::new(
+            4,
+            2,
+            vec![quarter; 4],
+            vec![quarter; 16],
+            vec![half; 8],
+            vec![0, 1, 0, 0, 1, 1, 0, 1, 0],
+        )
+        .unwrap();
+        let pool = ExecPool::new(3);
+        let (st, rounds) = execute_pooled_counted(&p, &pool, 3);
+        assert_eq!(st, seq::solve(&p));
+        assert_eq!(rounds as usize, p.num_steps() - 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! Sequential Viterbi oracle: the textbook `O(T·S²)` lattice fill.
+//!
+//! This is the tie-break reference for every pipeline executor
+//! (DESIGN.md §8): candidates are scanned in ascending predecessor
+//! order with a strictly-greater replacement rule, so the recorded
+//! argmax is always the *lowest* maximizing predecessor, and state 0
+//! stands in when every candidate is `−∞`.
+
+use crate::core::problem::ViterbiProblem;
+use crate::core::traceback::{viterbi_path, ViterbiSolution};
+
+/// Fill the `T × S` lattice (flat, column-major in `t`: cell `(t, s)` is
+/// index `t·S + s`): `V[t][s] = max_q(V[t−1][q] + trans[q][s]) +
+/// emit[s][obs[t]]`, with column 0 from
+/// [`ViterbiProblem::initial_table`].
+pub fn solve(p: &ViterbiProblem) -> Vec<f64> {
+    solve_with_backpointers(p).0
+}
+
+/// [`solve`] plus the per-cell argmax backpointers.  Column 0 has no
+/// predecessor and keeps the arena's zero initialization — bit-identical
+/// to the recorded sidecar of the pipeline executors.
+pub fn solve_with_backpointers(p: &ViterbiProblem) -> (Vec<f64>, Vec<u32>) {
+    let (s, m) = (p.num_states, p.num_symbols);
+    let mut st = p.initial_table();
+    let mut bp = vec![0u32; st.len()];
+    for t in 1..p.num_steps() {
+        for j in 0..s {
+            let mut best = f64::NEG_INFINITY;
+            let mut arg = 0u32;
+            for q in 0..s {
+                let cand = st[(t - 1) * s + q] + p.trans[q * s + j];
+                if cand > best {
+                    best = cand;
+                    arg = q as u32;
+                }
+            }
+            st[t * s + j] = best + p.emit[j * m + p.obs[t]];
+            bp[t * s + j] = arg;
+        }
+    }
+    (st, bp)
+}
+
+/// Decode the best path outright (oracle convenience for tests and the
+/// Python golden harness).
+pub fn decode(p: &ViterbiProblem) -> ViterbiSolution {
+    let (st, bp) = solve_with_backpointers(p);
+    viterbi_path(p.num_states, &st, &bp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::forall;
+
+    /// Exhaustive `S^T` path enumeration — ground truth for the DP.
+    fn brute_best_score(p: &ViterbiProblem) -> f64 {
+        let (s, m, t) = (p.num_states, p.num_symbols, p.num_steps());
+        let mut best = f64::NEG_INFINITY;
+        let mut path = vec![0usize; t];
+        loop {
+            let mut score = p.init[path[0]] + p.emit[path[0] * m + p.obs[0]];
+            for i in 1..t {
+                score += p.trans[path[i - 1] * s + path[i]] + p.emit[path[i] * m + p.obs[i]];
+            }
+            if score > best {
+                best = score;
+            }
+            // odometer increment over the S^T path space
+            let mut i = 0;
+            loop {
+                if i == t {
+                    return best;
+                }
+                path[i] += 1;
+                if path[i] < s {
+                    break;
+                }
+                path[i] = 0;
+                i += 1;
+            }
+        }
+    }
+
+    /// Log-likelihood of a concrete state path.
+    fn path_score(p: &ViterbiProblem, states: &[u32]) -> f64 {
+        let (s, m) = (p.num_states, p.num_symbols);
+        let mut score = p.init[states[0] as usize] + p.emit[states[0] as usize * m + p.obs[0]];
+        for i in 1..states.len() {
+            score += p.trans[states[i - 1] as usize * s + states[i] as usize]
+                + p.emit[states[i] as usize * m + p.obs[i]];
+        }
+        score
+    }
+
+    #[test]
+    fn dp_score_matches_brute_force() {
+        forall("viterbi seq == brute force", 40, |g| {
+            // keep S^T enumerable
+            let p = ViterbiProblem::random(g.rng(), 1..7, 5, 4);
+            let sol = decode(&p);
+            let want = brute_best_score(&p);
+            let same = if want == f64::NEG_INFINITY {
+                sol.score == f64::NEG_INFINITY
+            } else {
+                (sol.score - want).abs() < 1e-9
+            };
+            if !same {
+                return Err(format!("score {} != brute {want}: {p:?}", sol.score));
+            }
+            // the reconstructed path must itself achieve the best score
+            if sol.score > f64::NEG_INFINITY {
+                let ps = path_score(&p, &sol.states);
+                if (ps - sol.score).abs() > 1e-9 {
+                    return Err(format!("path scores {ps}, table says {}: {p:?}", sol.score));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn impossible_observation_yields_neg_infinity() {
+        // one state that can only emit symbol 0, observing symbol 1
+        let p = ViterbiProblem::new(
+            1,
+            2,
+            vec![0.0],
+            vec![0.0],
+            vec![0.0, f64::NEG_INFINITY],
+            vec![0, 1],
+        )
+        .unwrap();
+        let sol = decode(&p);
+        assert_eq!(sol.score, f64::NEG_INFINITY);
+        assert_eq!(sol.states, vec![0, 0], "tie-break pins state 0 throughout");
+    }
+
+    #[test]
+    fn single_observation_picks_best_initial_state() {
+        // two states: state 1 likelier to start and emit symbol 0
+        let p = ViterbiProblem::new(
+            2,
+            1,
+            vec![(0.25f64).ln(), (0.75f64).ln()],
+            vec![(0.5f64).ln(); 4],
+            vec![0.0, 0.0],
+            vec![0],
+        )
+        .unwrap();
+        let sol = decode(&p);
+        assert_eq!(sol.states, vec![1]);
+        assert!((sol.score - (0.75f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_resolve_to_lowest_state() {
+        // perfectly symmetric two-state HMM: every path ties, so the
+        // pinned tie-break must return the all-zeros path
+        let half = (0.5f64).ln();
+        let p = ViterbiProblem::new(
+            2,
+            1,
+            vec![half, half],
+            vec![half; 4],
+            vec![0.0, 0.0],
+            vec![0, 0, 0],
+        )
+        .unwrap();
+        let sol = decode(&p);
+        assert_eq!(sol.states, vec![0, 0, 0]);
+    }
+}

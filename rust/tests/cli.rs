@@ -189,15 +189,22 @@ fn certify_prints_admissible_verdict_for_served_schedules() {
     assert!(out.status.success());
     let s = stdout(&out);
     assert!(s.contains("faithful contract only"), "{s}");
-    // the other two families certify strictly via their own lowerings
+    // the other families certify strictly via their own lowerings
     for args in [
         vec!["certify", "--kind", "align", "--rows", "9", "--cols", "7"],
         vec!["certify", "--kind", "sdp", "--n", "64", "--offsets", "9,5,1"],
+        vec!["certify", "--kind", "viterbi", "--steps", "12", "--states", "5"],
+        vec!["certify", "--kind", "cyk", "--n", "24"],
     ] {
         let out = pipedp(&args);
         assert!(out.status.success());
         assert!(stdout(&out).contains("ADMISSIBLE (strict"), "{args:?}");
     }
+    // the CYK certificate is the retagged MCM lowering: its label says so
+    let out = pipedp(&["certify", "--kind", "cyk", "--n", "24"]);
+    let s = stdout(&out);
+    assert!(s.contains("certificate for cyk n=24"), "{s}");
+    assert!(s.contains("cyk"), "{s}");
 }
 
 #[test]
@@ -316,6 +323,70 @@ fn bench_check_gates_regressions() {
         String::from_utf8_lossy(&out.stderr)
     );
     assert!(stdout(&out).contains("skipping"), "{}", stdout(&out));
+
+    // the log-space table: rows match on (kind, n) — viterbi keys `n` by
+    // state count, cyk by sentence length, so both families share n=96
+    // here and bare-n matching would cross-pair them (10x apart) and fail
+    let log_base = dir.join("log_base.json");
+    std::fs::write(
+        &log_base,
+        r#"{"bench":"x","results":[{"n":64,"seq":100.0}],"log_results":[
+            {"kind":"viterbi","n":96,"shape":"S=96 T=256","seq":100.0},
+            {"kind":"cyk","n":96,"shape":"n=96 R=4","seq":1000.0}]}"#,
+    )
+    .unwrap();
+    let log_ok = dir.join("log_ok.json");
+    std::fs::write(
+        &log_ok,
+        r#"{"bench":"x","results":[{"n":64,"seq":100.0}],"log_results":[
+            {"kind":"cyk","n":96,"shape":"n=96 R=4","seq":1050.0},
+            {"kind":"viterbi","n":96,"shape":"S=96 T=256","seq":110.0}]}"#,
+    )
+    .unwrap();
+    let log_slow = dir.join("log_slow.json");
+    std::fs::write(
+        &log_slow,
+        r#"{"bench":"x","results":[{"n":64,"seq":100.0}],"log_results":[
+            {"kind":"cyk","n":96,"shape":"n=96 R=4","seq":1000.0},
+            {"kind":"viterbi","n":96,"shape":"S=96 T=256","seq":250.0}]}"#,
+    )
+    .unwrap();
+    let log_base_s = log_base.to_str().unwrap();
+    let out = pipedp(&[
+        "bench-check",
+        "--baseline",
+        log_base_s,
+        "--current",
+        log_ok.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = pipedp(&[
+        "bench-check",
+        "--baseline",
+        log_base_s,
+        "--current",
+        log_slow.to_str().unwrap(),
+    ]);
+    assert_eq!(out.status.code(), Some(1), "viterbi 2.5x slowdown must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("viterbi"),
+        "failure names the regressed kind: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // a baseline committed before the log-space families existed carries
+    // no `log_results`: the new table is simply not gated yet
+    let out = pipedp(&[
+        "bench-check",
+        "--baseline",
+        base_s,
+        "--current",
+        log_slow.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "pre-log baseline skips log_results: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -2,7 +2,10 @@
 //! semantics must agree bit-for-bit with the Python layer's
 //! (`python/compile/golden.py` regenerates `rust/tests/golden/*.json`).
 
-use pipedp::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
+use pipedp::core::problem::{
+    AlignProblem, AlignScoring, AlignVariant, CykProblem, CykRule, McmProblem, SdpProblem,
+    ViterbiProblem,
+};
 use pipedp::core::schedule::{McmSchedule, McmVariant};
 use pipedp::core::semigroup::Op;
 use pipedp::util::json::Json;
@@ -158,6 +161,113 @@ fn align_traceback_solutions_match_python() {
                     .collect();
                 assert_eq!(vec![got.0 as i64, got.1 as i64], w, "{ctx}");
             }
+        }
+    }
+}
+
+fn u32s(v: Vec<i64>) -> Vec<u32> {
+    v.into_iter().map(|x| x as u32).collect()
+}
+
+#[test]
+fn viterbi_semantics_match_python() {
+    // log-space tables compare with == (not tolerance): Python and Rust
+    // run the identical IEEE additions, so any drift is a real tie-break
+    // or layout bug (DESIGN.md §8, §11)
+    let golden = load("viterbi_cases.json");
+    for case in golden.as_arr().unwrap() {
+        let s = case.usize_field("num_states").unwrap();
+        let p = ViterbiProblem::new(
+            s,
+            case.usize_field("num_symbols").unwrap(),
+            case.lognum_vec_field("init").unwrap(),
+            case.lognum_vec_field("trans").unwrap(),
+            case.lognum_vec_field("emit").unwrap(),
+            case.i64_vec_field("obs")
+                .unwrap()
+                .into_iter()
+                .map(|v| v as usize)
+                .collect(),
+        )
+        .unwrap();
+        let ctx = format!("viterbi T={} S={s}", p.num_steps());
+        let want_table = case.lognum_vec_field("table").unwrap();
+        let want_bp = u32s(case.i64_vec_field("backpointers").unwrap());
+        let (st, bp) = pipedp::viterbi::seq::solve_with_backpointers(&p);
+        assert_eq!(st, want_table, "{ctx}: seq table");
+        assert_eq!(bp, want_bp, "{ctx}: seq backpointers");
+        let (pst, pbp) = pipedp::viterbi::pipeline::execute_recorded(&p);
+        assert_eq!(pst, want_table, "{ctx}: pipeline table");
+        assert_eq!(pbp, want_bp, "{ctx}: pipeline backpointers");
+        let want = case.field("solution").unwrap();
+        let sol = pipedp::core::traceback::viterbi_path(s, &st, &bp);
+        assert_eq!(
+            sol.states,
+            u32s(want.i64_vec_field("states").unwrap()),
+            "{ctx}: path"
+        );
+        assert_eq!(sol.score, want.lognum_field("score").unwrap(), "{ctx}: score");
+    }
+}
+
+#[test]
+fn cyk_semantics_match_python() {
+    let golden = load("cyk_cases.json");
+    for case in golden.as_arr().unwrap() {
+        let binary: Vec<CykRule> = case
+            .arr_field("binary")
+            .unwrap()
+            .iter()
+            .map(|row| {
+                let row = row.as_arr().unwrap();
+                CykRule {
+                    lhs: row[0].as_i64().unwrap() as u32,
+                    rhs_b: row[1].as_i64().unwrap() as u32,
+                    rhs_c: row[2].as_i64().unwrap() as u32,
+                    logp: row[3].as_lognum().unwrap(),
+                }
+            })
+            .collect();
+        let lexical: Vec<(u32, u32, f64)> = case
+            .arr_field("lexical")
+            .unwrap()
+            .iter()
+            .map(|row| {
+                let row = row.as_arr().unwrap();
+                (
+                    row[0].as_i64().unwrap() as u32,
+                    row[1].as_i64().unwrap() as u32,
+                    row[2].as_lognum().unwrap(),
+                )
+            })
+            .collect();
+        let p = CykProblem::new(
+            case.usize_field("num_nonterminals").unwrap(),
+            case.usize_field("num_terminals").unwrap(),
+            binary,
+            lexical,
+            case.i64_vec_field("words")
+                .unwrap()
+                .into_iter()
+                .map(|v| v as usize)
+                .collect(),
+        )
+        .unwrap();
+        let ctx = format!("cyk n={} R={}", p.n(), p.num_nonterminals);
+        let want_table = case.lognum_vec_field("table").unwrap();
+        let want_splits = u32s(case.i64_vec_field("splits").unwrap());
+        let (st, splits) = pipedp::cyk::seq::solve_with_splits(&p);
+        assert_eq!(st, want_table, "{ctx}: seq table");
+        assert_eq!(splits, want_splits, "{ctx}: seq splits");
+        let (pst, psplits) = pipedp::cyk::pipeline::solve_recorded(&p);
+        assert_eq!(pst, want_table, "{ctx}: pipeline table");
+        assert_eq!(psplits, want_splits, "{ctx}: pipeline splits");
+        let want = case.field("parse").unwrap();
+        let sol = pipedp::core::traceback::cyk_parse(&p, &st, &splits);
+        assert_eq!(sol.score, want.lognum_field("score").unwrap(), "{ctx}: score");
+        match want.field("tree").unwrap() {
+            pipedp::util::json::Json::Null => assert!(sol.tree.is_none(), "{ctx}: tree"),
+            tree => assert_eq!(sol.tree.as_deref(), tree.as_str(), "{ctx}: tree"),
         }
     }
 }

@@ -27,9 +27,13 @@ use std::path::{Path, PathBuf};
 
 /// Files audited for `Ordering::Relaxed` (monotone counters, LRU ticks,
 /// snapshot gauges, seqlock-free stats — each use reviewed as not
-/// ordering-coupled to any data it publishes).
+/// ordering-coupled to any data it publishes).  `core/sweep.rs` hosts
+/// the cancellation cut flag formerly in `align/wavefront.rs`: the cut
+/// index only ever names whole-superstep boundaries, and its
+/// publication is ordered by the pooled executor's sense barrier, so
+/// Relaxed is sufficient (the audit that PR 7 recorded for the
+/// wavefront copy carries over to the generic sweep unchanged).
 const RELAXED_AUDITED: &[&str] = &[
-    "align/wavefront.rs",
     "coordinator/batcher.rs",
     "coordinator/metrics.rs",
     "coordinator/server.rs",
@@ -37,6 +41,7 @@ const RELAXED_AUDITED: &[&str] = &[
     "core/certify.rs",
     "core/faults.rs",
     "core/policy.rs",
+    "core/sweep.rs",
     "core/traceback.rs",
     "mcm/diagonal.rs",
     "mcm/pipeline.rs",

@@ -6,7 +6,10 @@ use std::time::Duration;
 use pipedp::coordinator::batcher::Policy;
 use pipedp::coordinator::request::{Backend, Request, RequestBody};
 use pipedp::coordinator::server::{Client, Config, Server};
-use pipedp::core::problem::{AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem};
+use pipedp::core::problem::{
+    AlignProblem, AlignScoring, AlignVariant, CykProblem, CykRule, McmProblem, SdpProblem,
+    ViterbiProblem,
+};
 use pipedp::core::schedule::McmVariant;
 use pipedp::core::semigroup::Op;
 
@@ -337,6 +340,114 @@ fn want_solution_round_trip() {
         "{:?}",
         resp.error
     );
+}
+
+/// ISSUE 8 acceptance: the log-space families round-trip through the
+/// live coordinator — `viterbi` and `cyk` requests are served natively
+/// with lognum `score` replies (`value` stays 0), the full lattice on
+/// `full: true` via `ftable`, and decoded solutions on `want_solution`.
+#[test]
+fn log_space_round_trip() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    // viterbi: the sticky two-state HMM; the decoded path stays in state 0
+    let half = 0.5f64.ln();
+    let hmm = ViterbiProblem::new(
+        2,
+        2,
+        vec![half, half],
+        vec![0.9f64.ln(), 0.1f64.ln(), 0.1f64.ln(), 0.9f64.ln()],
+        vec![0.8f64.ln(), 0.2f64.ln(), 0.2f64.ln(), 0.8f64.ln()],
+        vec![0, 0, 1, 1, 0],
+    )
+    .unwrap();
+    let want = pipedp::viterbi::seq::decode(&hmm);
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Viterbi(hmm.clone()),
+            backend: Backend::Auto,
+            full: true,
+            want_solution: true,
+            deadline_ms: None,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 0, "log-space kinds carry no integer value");
+    assert_eq!(resp.score, Some(want.score));
+    assert!(
+        resp.served_by.starts_with("native:viterbi_lattice["),
+        "{}",
+        resp.served_by
+    );
+    assert_eq!(
+        resp.ftable.as_deref(),
+        Some(pipedp::viterbi::seq::solve(&hmm).as_slice())
+    );
+    let sol = resp.solution.expect("viterbi solution on the wire");
+    assert_eq!(sol.lognum_field("score").unwrap(), want.score);
+    assert_eq!(
+        sol.i64_vec_field("states").unwrap(),
+        want.states.iter().map(|&s| s as i64).collect::<Vec<_>>()
+    );
+
+    // cyk: the balanced grammar parses (catalan-uniform score), and the
+    // wire tree equals the sequential oracle's byte-for-byte
+    let p = CykProblem::balanced_example(4);
+    let want = pipedp::cyk::seq::parse(&p);
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Cyk(p),
+            backend: Backend::Auto,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.score, Some(want.score));
+    assert!(
+        resp.served_by.starts_with("native:cyk_mcm_schedule["),
+        "{}",
+        resp.served_by
+    );
+    let sol = resp.solution.expect("cyk solution on the wire");
+    assert_eq!(sol.str_field("tree").unwrap(), want.tree.as_deref().unwrap());
+
+    // an unparseable sentence is a modelling outcome, not an error:
+    // ok reply, score −∞ (the "-inf" sentinel on the wire), tree null
+    let dead = CykProblem::new(
+        2,
+        1,
+        vec![CykRule {
+            lhs: 1,
+            rhs_b: 1,
+            rhs_c: 1,
+            logp: half,
+        }],
+        vec![(1, 0, 0.0)],
+        vec![0, 0],
+    )
+    .unwrap();
+    let resp = client
+        .call(Request {
+            id: 0,
+            body: RequestBody::Cyk(dead),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+        })
+        .unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.score, Some(f64::NEG_INFINITY));
+    let sol = resp.solution.expect("cyk solution on the wire");
+    assert!(matches!(
+        sol.field("tree").unwrap(),
+        pipedp::util::json::Json::Null
+    ));
 }
 
 #[test]
