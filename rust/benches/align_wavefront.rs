@@ -3,9 +3,10 @@
 //!
 //! * **Wall-clock (ns/cell)**: sequential row-major oracle vs the fused
 //!   wavefront sweep over the flat arena vs the pooled block-tiled
-//!   executor on the persistent exec pool (DESIGN.md §7), on square
-//!   grids (every executor is verified against the oracle before
-//!   timing).  The measured seq/fused/pooled costs are installed as the
+//!   executor on the persistent exec pool (DESIGN.md §7) vs the
+//!   lane-batched striped wavefront (DESIGN.md §12), on square grids
+//!   (every executor is verified against the oracle before timing).
+//!   The measured seq/fused/pooled/simd costs are installed as the
 //!   adaptive policy's align table and each JSON row records the choice
 //!   it makes at that size.
 //! * **GPU cost model**: the anti-diagonal wavefront trace vs the host
@@ -48,6 +49,7 @@ fn main() {
         "SEQ row-major",
         "WAVEFRONT flat",
         "WAVEFRONT pooled (tile)",
+        "WAVEFRONT simd",
         "policy",
     ]);
     let mut results: Vec<Json> = Vec::new();
@@ -76,6 +78,11 @@ fn main() {
             truth,
             "n={n}: pooled block wavefront diverged from the oracle"
         );
+        assert_eq!(
+            pipedp::align::wavefront::solve_simd(&p),
+            truth,
+            "n={n}: simd striped wavefront diverged from the oracle"
+        );
 
         let (seq_stats, _) = measure(&cfg, || {
             *pipedp::align::seq::solve(&p).last().unwrap() as u64
@@ -88,10 +95,14 @@ fn main() {
                 .last()
                 .unwrap() as u64
         });
+        let (simd_stats, _) = measure(&cfg, || {
+            *pipedp::align::wavefront::solve_simd(&p).last().unwrap() as u64
+        });
 
         let seq = ns_per_cell(seq_stats.mean, cells);
         let wave = ns_per_cell(wave_stats.mean, cells);
         let pooled = ns_per_cell(pooled_stats.mean, cells);
+        let simd = ns_per_cell(simd_stats.mean, cells);
         policy.push_measurement(
             Workload::Align,
             n,
@@ -99,6 +110,7 @@ fn main() {
                 (ExecutorChoice::Seq, seq),
                 (ExecutorChoice::Fused, wave),
                 (ExecutorChoice::Pooled, pooled),
+                (ExecutorChoice::Simd, simd),
             ],
         );
         let choice =
@@ -108,6 +120,7 @@ fn main() {
             format!("{seq:.2}"),
             format!("{wave:.2}"),
             format!("{pooled:.2} (B={tile})"),
+            format!("{simd:.2}"),
             choice.name().to_string(),
         ]);
         results.push(Json::obj(vec![
@@ -115,6 +128,7 @@ fn main() {
             ("seq", Json::num(seq)),
             ("wavefront", Json::num(wave)),
             ("threaded", Json::num(pooled)),
+            ("simd", Json::num(simd)),
             ("tile", Json::int(tile as i64)),
             ("policy", Json::str(choice.name())),
         ]));

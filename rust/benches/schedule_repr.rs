@@ -138,6 +138,7 @@ struct SizeResult {
     flat: f64,
     rec: f64,
     pooled: f64,
+    simd: f64,
 }
 
 /// One log-space family row (DESIGN.md §11): seq oracle vs fused sweep
@@ -151,6 +152,7 @@ struct LogResult {
     seq: f64,
     fused: f64,
     pooled: f64,
+    simd: f64,
 }
 
 fn main() {
@@ -245,6 +247,16 @@ fn main() {
             *pipedp::mcm::diagonal::solve(&p).last().unwrap() as u64
         });
 
+        // --- lane-batched dual-table sweep (ISSUE 9, DESIGN.md §12) ----
+        assert_eq!(
+            pipedp::mcm::pipeline::solve_simd(&p),
+            truth,
+            "n={n}: simd executor diverged from the DP oracle"
+        );
+        let (simd_stats, _) = measure(&cfg, || {
+            *pipedp::mcm::pipeline::solve_simd(&p).last().unwrap() as u64
+        });
+
         measured.push(SizeResult {
             n,
             tile,
@@ -255,6 +267,7 @@ fn main() {
             flat: ns_per_cell(flat_stats.mean, n),
             rec: ns_per_cell(rec_stats.mean, n),
             pooled: ns_per_cell(pooled_stats.mean, n),
+            simd: ns_per_cell(simd_stats.mean, n),
         });
     }
 
@@ -296,6 +309,11 @@ fn main() {
             truth,
             "viterbi S={s}: pooled executor diverged from the oracle"
         );
+        assert_eq!(
+            pipedp::viterbi::pipeline::execute_simd(&p),
+            truth,
+            "viterbi S={s}: simd executor diverged from the oracle"
+        );
         let per_cell = |st: pipedp::bench::Stats| st.mean.as_nanos() as f64 / cells as f64;
         let (seq_st, _) =
             measure(&cfg, || pipedp::viterbi::seq::solve(&p).last().unwrap().to_bits());
@@ -308,6 +326,9 @@ fn main() {
                 .unwrap()
                 .to_bits()
         });
+        let (simd_st, _) = measure(&cfg, || {
+            pipedp::viterbi::pipeline::execute_simd(&p).last().unwrap().to_bits()
+        });
         log_measured.push(LogResult {
             kind: "viterbi",
             n: p.num_states,
@@ -315,6 +336,7 @@ fn main() {
             seq: per_cell(seq_st),
             fused: per_cell(fus_st),
             pooled: per_cell(pol_st),
+            simd: per_cell(simd_st),
         });
     }
     for n in [32usize, 96] {
@@ -338,6 +360,11 @@ fn main() {
             truth,
             "cyk n={n}: pooled executor diverged from the oracle"
         );
+        assert_eq!(
+            pipedp::cyk::pipeline::solve_simd(&p),
+            truth,
+            "cyk n={n}: simd executor diverged from the oracle"
+        );
         let per_cell = |st: pipedp::bench::Stats| st.mean.as_nanos() as f64 / cells as f64;
         let (seq_st, _) =
             measure(&cfg, || pipedp::cyk::seq::solve(&p).last().unwrap().to_bits());
@@ -350,6 +377,9 @@ fn main() {
                 .unwrap()
                 .to_bits()
         });
+        let (simd_st, _) = measure(&cfg, || {
+            pipedp::cyk::pipeline::solve_simd(&p).last().unwrap().to_bits()
+        });
         log_measured.push(LogResult {
             kind: "cyk",
             n,
@@ -357,6 +387,7 @@ fn main() {
             seq: per_cell(seq_st),
             fused: per_cell(fus_st),
             pooled: per_cell(pol_st),
+            simd: per_cell(simd_st),
         });
     }
 
@@ -371,6 +402,7 @@ fn main() {
                 (ExecutorChoice::Seq, r.seq),
                 (ExecutorChoice::Fused, r.flat),
                 (ExecutorChoice::Pooled, r.pooled),
+                (ExecutorChoice::Simd, r.simd),
             ],
         );
     }
@@ -383,6 +415,7 @@ fn main() {
                 (ExecutorChoice::Seq, r.seq),
                 (ExecutorChoice::Fused, r.fused),
                 (ExecutorChoice::Pooled, r.pooled),
+                (ExecutorChoice::Simd, r.simd),
             ],
         );
     }
@@ -398,6 +431,7 @@ fn main() {
         "PIPE flat (shipped)",
         "PIPE flat+traceback",
         "PIPE pooled (tile)",
+        "PIPE simd",
         "flat/nested",
         "policy",
     ]);
@@ -418,6 +452,7 @@ fn main() {
             format!("{:.1}", r.flat),
             format!("{:.1}", r.rec),
             format!("{:.1} (T={})", r.pooled, r.tile),
+            format!("{:.1}", r.simd),
             format!("{ratio:.2}×"),
             choice.name().to_string(),
         ]);
@@ -430,6 +465,7 @@ fn main() {
             ("pipeline", Json::num(r.flat)),
             ("pipeline_rec", Json::num(r.rec)),
             ("threaded", Json::num(r.pooled)),
+            ("simd", Json::num(r.simd)),
             ("tile", Json::int(r.tile as i64)),
             ("policy", Json::str(choice.name())),
         ]));
@@ -438,7 +474,8 @@ fn main() {
     println!("\n== MCM schedule representation, ns/cell (threads={threads}) ==");
     println!("{}", table.render());
 
-    let mut log_table = Table::new(vec!["kind", "shape", "SEQ", "FUSED", "POOLED", "policy"]);
+    let mut log_table =
+        Table::new(vec!["kind", "shape", "SEQ", "FUSED", "POOLED", "SIMD", "policy"]);
     let mut log_results: Vec<Json> = Vec::new();
     for r in &log_measured {
         let w = if r.kind == "viterbi" { Workload::Viterbi } else { Workload::Cyk };
@@ -449,6 +486,7 @@ fn main() {
             format!("{:.1}", r.seq),
             format!("{:.1}", r.fused),
             format!("{:.1}", r.pooled),
+            format!("{:.1}", r.simd),
             choice.name().to_string(),
         ]);
         log_results.push(Json::obj(vec![
@@ -458,6 +496,7 @@ fn main() {
             ("seq", Json::num(r.seq)),
             ("fused", Json::num(r.fused)),
             ("pooled", Json::num(r.pooled)),
+            ("simd", Json::num(r.simd)),
             ("policy", Json::str(choice.name())),
         ]));
     }
@@ -496,7 +535,9 @@ fn main() {
                      is the cost of solution reconstruction; `threaded` is the pooled superstep-tiled \
                      executor on the persistent exec pool (steady state — resident workers, \
                      sense-reversing barrier once per superstep of `tile` steps), not the \
-                     seed's spawn-per-solve scoped threads; `policy` is the executor the \
+                     seed's spawn-per-solve scoped threads; `simd` is the lane-batched \
+                     dual-table sweep (DESIGN.md §12, PIPEDP_SIMD=off for the scalar \
+                     portable path); `policy` is the executor the \
                      installed adaptive policy picks at that size (calibrated from this \
                      run's own measurements, so it names the measured winner).",
                 ),

@@ -19,7 +19,7 @@ use crate::core::problem::AlignProblem;
 use crate::core::schedule::{default_align_tile, AlignSchedule};
 use crate::core::sweep::{self, SharedSlice, SweepKernel};
 use crate::core::traceback::{cell_move, MoveArena, MoveRecord, NoRecord};
-use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool};
+use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool, CANCEL_POLL_STRIDE};
 use crate::sdp::naive::SharedTable;
 
 /// The alignment recurrence packaged for the generic sweep drivers
@@ -209,6 +209,250 @@ pub fn execute_recorded(p: &AlignProblem, sched: &AlignSchedule) -> (Vec<i64>, M
 pub fn solve_recorded(p: &AlignProblem) -> (Vec<i64>, MoveArena) {
     let sched = cache::align_schedule(p.rows(), p.cols());
     execute_recorded(p, &sched)
+}
+
+/// Lane width of the striped wavefront batches.  Matches
+/// [`crate::core::simd::LANES`]; the batch kernels below are plain
+/// fixed-width array loops, so the value only has to be a size the
+/// autovectorizer likes — 8 × i64 is one cache line and two AVX2
+/// registers.
+const WF_LANES: usize = 8;
+
+/// The gathered operand strips of one lane batch: lane `k` holds the
+/// three stencil neighbors and the symbol-equality flag of cell
+/// `(i + k, d − i − k)` on anti-diagonal `d`.
+struct LaneOps {
+    up: [i64; WF_LANES],
+    left: [i64; WF_LANES],
+    diag: [i64; WF_LANES],
+    eq: [bool; WF_LANES],
+}
+
+/// One lane-batch of the alignment recurrence — [`seq::cell`] evaluated
+/// on `WF_LANES` independent cells of one anti-diagonal.  Written as
+/// branch-free per-lane selects over fixed-width arrays (no `std::arch`,
+/// no `unsafe`) so the compiler can lower each variant to vector
+/// blends; lane semantics are *identical* to the scalar recurrence, so
+/// results are bit-for-bit equal by construction, not by rounding
+/// accident (everything here is integer arithmetic).
+#[inline(always)]
+fn batch_cell(
+    variant: crate::core::problem::AlignVariant,
+    scoring: &crate::core::problem::AlignScoring,
+    ops: &LaneOps,
+    out: &mut [i64; WF_LANES],
+) {
+    use crate::core::problem::AlignVariant;
+    match variant {
+        AlignVariant::Lcs => {
+            for k in 0..WF_LANES {
+                out[k] = if ops.eq[k] {
+                    ops.diag[k] + 1
+                } else {
+                    ops.up[k].max(ops.left[k])
+                };
+            }
+        }
+        AlignVariant::Edit => {
+            for k in 0..WF_LANES {
+                let sub = ops.diag[k] + i64::from(!ops.eq[k]);
+                out[k] = sub.min(ops.up[k] + 1).min(ops.left[k] + 1);
+            }
+        }
+        AlignVariant::Local => {
+            for k in 0..WF_LANES {
+                let s = if ops.eq[k] { scoring.match_s } else { scoring.mismatch };
+                out[k] = (ops.diag[k] + s)
+                    .max(ops.up[k] + scoring.gap)
+                    .max(ops.left[k] + scoring.gap)
+                    .max(0);
+            }
+        }
+    }
+}
+
+/// [`batch_cell`] + per-lane move codes — the lane-batched form of
+/// [`cell_move`], preserving its exact preference order (`DIAG` over
+/// `UP` over `LEFT`, `STOP` on a zero-clamped Local cell) so the
+/// recorded sidecar is bit-identical to the sequential oracle's.
+#[inline(always)]
+fn batch_cell_move(
+    variant: crate::core::problem::AlignVariant,
+    scoring: &crate::core::problem::AlignScoring,
+    ops: &LaneOps,
+    out: &mut [i64; WF_LANES],
+    codes: &mut [u8; WF_LANES],
+) {
+    use crate::core::problem::AlignVariant;
+    use crate::core::traceback::{MOVE_DIAG, MOVE_LEFT, MOVE_STOP, MOVE_UP};
+    match variant {
+        AlignVariant::Lcs => {
+            for k in 0..WF_LANES {
+                let (v, c) = if ops.eq[k] {
+                    (ops.diag[k] + 1, MOVE_DIAG)
+                } else if ops.up[k] >= ops.left[k] {
+                    (ops.up[k], MOVE_UP)
+                } else {
+                    (ops.left[k], MOVE_LEFT)
+                };
+                out[k] = v;
+                codes[k] = c;
+            }
+        }
+        AlignVariant::Edit => {
+            for k in 0..WF_LANES {
+                let sub = ops.diag[k] + i64::from(!ops.eq[k]);
+                let best = sub.min(ops.up[k] + 1).min(ops.left[k] + 1);
+                out[k] = best;
+                codes[k] = if sub == best {
+                    MOVE_DIAG
+                } else if ops.up[k] + 1 == best {
+                    MOVE_UP
+                } else {
+                    MOVE_LEFT
+                };
+            }
+        }
+        AlignVariant::Local => {
+            for k in 0..WF_LANES {
+                let s = if ops.eq[k] { scoring.match_s } else { scoring.mismatch };
+                let (d, u, l) = (
+                    ops.diag[k] + s,
+                    ops.up[k] + scoring.gap,
+                    ops.left[k] + scoring.gap,
+                );
+                let best = d.max(u).max(l).max(0);
+                out[k] = best;
+                codes[k] = if best == 0 {
+                    MOVE_STOP
+                } else if d == best {
+                    MOVE_DIAG
+                } else if u == best {
+                    MOVE_UP
+                } else {
+                    MOVE_LEFT
+                };
+            }
+        }
+    }
+}
+
+/// The striped anti-diagonal sweep (ISSUE 9 tentpole, DESIGN.md §12):
+/// walk the grid wavefront by wavefront, but instead of the arena
+/// schedule, enumerate each diagonal's cells directly and process them
+/// `WF_LANES` at a time — gather the `up`/`left`/`diag` strips into
+/// fixed-width lane buffers, run the branch-free batch kernel, scatter
+/// the results back.  The ragged head/tail of each diagonal falls back
+/// to the scalar [`seq::cell`] / [`cell_move`], so every cell is
+/// evaluated by a recurrence bit-identical to the oracle's.
+///
+/// No schedule is compiled or cached — the diagonal arithmetic *is* the
+/// schedule, which is why this executor wins at every size (no arena
+/// traffic, no barrier, no compile amortization cliff).
+fn simd_sweep<R: MoveRecord>(
+    p: &AlignProblem,
+    st: &mut [i64],
+    rec: R,
+    token: Option<&CancelToken>,
+) -> crate::Result<()> {
+    let (m, n) = (p.rows(), p.cols());
+    let w = n + 1; // row stride of the (m+1)×(n+1) table
+    for d in 2..=(m + n) {
+        if let Some(tok) = token {
+            if d % CANCEL_POLL_STRIDE == 0 && tok.is_cancelled() {
+                return cancelled();
+            }
+        }
+        // cells (i, j) with i + j = d, 1 ≤ i ≤ m, 1 ≤ j ≤ n
+        let i_lo = 1usize.max(d.saturating_sub(n));
+        let i_hi = m.min(d - 1);
+        let mut i = i_lo;
+        while i + WF_LANES <= i_hi + 1 {
+            let mut ops = LaneOps {
+                up: [0; WF_LANES],
+                left: [0; WF_LANES],
+                diag: [0; WF_LANES],
+                eq: [false; WF_LANES],
+            };
+            for k in 0..WF_LANES {
+                let (ii, jj) = (i + k, d - (i + k));
+                ops.up[k] = st[(ii - 1) * w + jj];
+                ops.left[k] = st[ii * w + jj - 1];
+                ops.diag[k] = st[(ii - 1) * w + jj - 1];
+                ops.eq[k] = p.a[ii - 1] == p.b[jj - 1];
+            }
+            let mut out = [0i64; WF_LANES];
+            if R::ACTIVE {
+                let mut codes = [0u8; WF_LANES];
+                batch_cell_move(p.variant, &p.scoring, &ops, &mut out, &mut codes);
+                for k in 0..WF_LANES {
+                    let (ii, jj) = (i + k, d - (i + k));
+                    st[ii * w + jj] = out[k];
+                    rec.set(ii * w + jj, codes[k]);
+                }
+            } else {
+                batch_cell(p.variant, &p.scoring, &ops, &mut out);
+                for k in 0..WF_LANES {
+                    let (ii, jj) = (i + k, d - (i + k));
+                    st[ii * w + jj] = out[k];
+                }
+            }
+            i += WF_LANES;
+        }
+        // ragged tail: scalar recurrence, bit-identical by sharing
+        // seq::cell / cell_move with the oracle
+        while i <= i_hi {
+            let jj = d - i;
+            let up = st[(i - 1) * w + jj];
+            let left = st[i * w + jj - 1];
+            let diag = st[(i - 1) * w + jj - 1];
+            let (av, bv) = (p.a[i - 1], p.b[jj - 1]);
+            if R::ACTIVE {
+                let (v, code) = cell_move(p.variant, &p.scoring, up, left, diag, av, bv);
+                st[i * w + jj] = v;
+                rec.set(i * w + jj, code);
+            } else {
+                st[i * w + jj] = seq::cell(p.variant, &p.scoring, up, left, diag, av, bv);
+            }
+            i += 1;
+        }
+    }
+    Ok(())
+}
+
+/// Lane-batched anti-diagonal solve — the adaptive policy's `simd`
+/// route.  Bit-identical to [`seq::solve`] (shared scalar recurrence on
+/// the tails, lane-equivalent batch kernel elsewhere; all integer
+/// arithmetic).
+pub fn solve_simd(p: &AlignProblem) -> Vec<i64> {
+    let mut st = p.initial_table();
+    let _ = simd_sweep(p, &mut st, NoRecord, None);
+    st
+}
+
+/// [`solve_simd`] + per-cell move recording — the `simd` traceback
+/// route.  The batched move kernel preserves [`cell_move`]'s preference
+/// order, so the sidecar is bit-identical to the sequential oracle's.
+pub fn solve_simd_recorded(p: &AlignProblem) -> (Vec<i64>, MoveArena) {
+    let mut st = p.initial_table();
+    let moves = MoveArena::new(st.len());
+    let _ = simd_sweep(p, &mut st, &moves, None);
+    (st, moves)
+}
+
+/// [`solve_simd`] with cooperative cancellation, polling once per
+/// [`CANCEL_POLL_STRIDE`] anti-diagonals.  A never-token delegates to
+/// the plain sweep.
+pub fn solve_simd_cancellable(p: &AlignProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(solve_simd(p));
+    }
+    if token.is_cancelled() {
+        return cancelled();
+    }
+    let mut st = p.initial_table();
+    simd_sweep(p, &mut st, NoRecord, Some(token))?;
+    Ok(st)
 }
 
 /// Real multi-threaded executor: the ≤ `min(m, n)` lanes of each step are
@@ -551,6 +795,50 @@ mod tests {
             } else {
                 Err(format!("{:?} {}x{}", v, p.rows(), p.cols()))
             }
+        });
+    }
+
+    #[test]
+    fn simd_matches_seq_oracle_bit_for_bit_including_moves() {
+        // ISSUE 9 satellite (c): scores AND the recorded 2-bit sidecar
+        // bit-identical to the sequential oracle across all variants,
+        // with sizes straddling the lane width so ragged heads/tails and
+        // non-multiple-of-8 diagonals are exercised
+        forall("align simd == seq", 60, |g| {
+            let mut rng = g.rng().fork();
+            let v = *g.choose(&AlignVariant::ALL);
+            let big = g.usize(0..10) == 0;
+            let range = if big { 100..200 } else { 1..45 };
+            let p = AlignProblem::random(&mut rng, range, 4, v);
+            let want = seq::solve(&p);
+            if solve_simd(&p) != want {
+                return Err(format!("{v:?} {}x{} table", p.rows(), p.cols()));
+            }
+            let (st, moves) = solve_simd_recorded(&p);
+            if st != want {
+                return Err(format!("{v:?} {}x{} recorded table", p.rows(), p.cols()));
+            }
+            let (_, want_moves) = seq::solve_with_moves(&p);
+            for idx in 0..st.len() {
+                if moves.get(idx) != want_moves.get(idx) {
+                    return Err(format!("{v:?}: move mismatch at cell {idx}"));
+                }
+            }
+            // cancellable tier: never/live tokens match, expired cancels
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            if solve_simd_cancellable(&p, &CancelToken::never()).unwrap() != want
+                || solve_simd_cancellable(&p, &live).unwrap() != want
+            {
+                return Err(format!("{v:?} cancellable mismatch"));
+            }
+            let expired = CancelToken::at(std::time::Instant::now());
+            if !matches!(
+                solve_simd_cancellable(&p, &expired),
+                Err(crate::Error::Timeout(_))
+            ) {
+                return Err("expired token must cancel the simd sweep".into());
+            }
+            Ok(())
         });
     }
 

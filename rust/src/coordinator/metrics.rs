@@ -168,6 +168,7 @@ impl Metrics {
             ("policy_seq", Json::int(policy.seq as i64)),
             ("policy_fused", Json::int(policy.fused as i64)),
             ("policy_pooled", Json::int(policy.pooled as i64)),
+            ("policy_simd", Json::int(policy.simd as i64)),
             (
                 "exec_pool_threads",
                 Json::int(pool.map_or(0, |p| p.threads as i64)),
@@ -286,6 +287,7 @@ mod tests {
         assert!(snap.i64_field("policy_seq").unwrap() >= 0);
         assert!(snap.i64_field("policy_fused").unwrap() >= 0);
         assert!(snap.i64_field("policy_pooled").unwrap() >= 0);
+        assert!(snap.i64_field("policy_simd").unwrap() >= 0);
         assert!(snap.get("policy_calibrated").unwrap().as_bool().is_some());
         assert!(snap.i64_field("exec_pool_threads").unwrap() >= 0);
         assert!(snap.i64_field("exec_pool_solves").unwrap() >= 0);

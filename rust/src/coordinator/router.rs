@@ -181,7 +181,7 @@ impl Router {
 
     /// Native execution through the adaptive executor policy
     /// (DESIGN.md §7): every request takes the empirically fastest of
-    /// seq / fused / pooled for its kind and size, and the chosen
+    /// seq / fused / pooled / simd for its kind and size, and the chosen
     /// executor is recorded in `served_by` (e.g.
     /// `native:mcm_pipeline_corrected[pooled]`) so clients and tests can
     /// observe the decision.  `batch` is the same-kind group width the
@@ -212,7 +212,11 @@ impl Router {
                 let st = if token.is_never() {
                     match choice {
                         ExecutorChoice::Seq => crate::sdp::seq::solve(p),
-                        ExecutorChoice::Fused => crate::sdp::pipeline::solve(p),
+                        // S-DP has no simd kernel (the pipe is a serial
+                        // scan, not a reduction) — simd serves as fused
+                        ExecutorChoice::Fused | ExecutorChoice::Simd => {
+                            crate::sdp::pipeline::solve(p)
+                        }
                         ExecutorChoice::Pooled => crate::sdp::pipeline::solve_pooled(p),
                     }
                 } else {
@@ -220,7 +224,7 @@ impl Router {
                     // check above is its only cancellation point
                     match choice {
                         ExecutorChoice::Seq => crate::sdp::seq::solve(p),
-                        ExecutorChoice::Fused => {
+                        ExecutorChoice::Fused | ExecutorChoice::Simd => {
                             crate::sdp::pipeline::solve_cancellable(p, &token)?
                         }
                         ExecutorChoice::Pooled => {
@@ -239,15 +243,22 @@ impl Router {
                     faults::inject("mcm");
                     let choice = table.choose(Workload::Mcm, problem.n(), batch);
                     // certify the schedule this choice will actually run:
-                    // the pooled executor compiles the superstep-tiled
-                    // arena, everything else the untiled one (tile = 1)
+                    // the pooled executor sweeps the cache-blocked
+                    // regrouping of the superstep-tiled arena (ISSUE 9),
+                    // the simd route runs the schedule-free dual-table
+                    // sweep (nothing to certify beyond the untiled
+                    // order, which its diagonal loop realizes), and
+                    // everything else the untiled arena (tile = 1)
                     let n = problem.n().max(1);
-                    let tile = if choice == ExecutorChoice::Pooled {
-                        default_mcm_tile(n)
+                    if choice == ExecutorChoice::Pooled {
+                        certify::gate_mcm_blocked(
+                            n,
+                            default_mcm_tile(n),
+                            crate::core::schedule::default_mcm_block(),
+                        )?;
                     } else {
-                        1
-                    };
-                    certify::gate_mcm(n, McmVariant::Corrected, tile)?;
+                        certify::gate_mcm(n, McmVariant::Corrected, 1)?;
+                    }
                     let served = format!("native:mcm_pipeline_corrected[{}]", choice.name());
                     if req.want_solution {
                         // the recording executors fill the split sidecar
@@ -262,6 +273,9 @@ impl Router {
                             }
                             ExecutorChoice::Pooled => {
                                 crate::mcm::pipeline::solve_pooled_recorded(problem)
+                            }
+                            ExecutorChoice::Simd => {
+                                crate::mcm::pipeline::solve_simd_recorded(problem)
                             }
                         };
                         let parens =
@@ -279,6 +293,7 @@ impl Router {
                             ExecutorChoice::Pooled => {
                                 crate::mcm::pipeline::solve_pooled(problem)
                             }
+                            ExecutorChoice::Simd => crate::mcm::pipeline::solve_simd(problem),
                         }
                     } else {
                         match choice {
@@ -290,6 +305,9 @@ impl Router {
                             )?,
                             ExecutorChoice::Pooled => {
                                 crate::mcm::pipeline::solve_pooled_cancellable(problem, &token)?
+                            }
+                            ExecutorChoice::Simd => {
+                                crate::mcm::pipeline::solve_simd_cancellable(problem, &token)?
                             }
                         }
                     };
@@ -347,6 +365,9 @@ impl Router {
                         ExecutorChoice::Pooled => {
                             crate::align::wavefront::solve_pooled_recorded(p)
                         }
+                        ExecutorChoice::Simd => {
+                            crate::align::wavefront::solve_simd_recorded(p)
+                        }
                     };
                     let sol = traceback::align_solution(p, &st, &moves);
                     let value = p.scalar(&st);
@@ -359,6 +380,7 @@ impl Router {
                         ExecutorChoice::Seq => crate::align::seq::solve(p),
                         ExecutorChoice::Fused => crate::align::wavefront::solve(p),
                         ExecutorChoice::Pooled => crate::align::wavefront::solve_pooled(p),
+                        ExecutorChoice::Simd => crate::align::wavefront::solve_simd(p),
                     }
                 } else {
                     match choice {
@@ -368,6 +390,9 @@ impl Router {
                         }
                         ExecutorChoice::Pooled => {
                             crate::align::wavefront::solve_pooled_cancellable(p, &token)?
+                        }
+                        ExecutorChoice::Simd => {
+                            crate::align::wavefront::solve_simd_cancellable(p, &token)?
                         }
                     }
                 };
@@ -393,6 +418,9 @@ impl Router {
                                 pool.threads(),
                             )
                         }
+                        ExecutorChoice::Simd => {
+                            crate::viterbi::pipeline::execute_simd_recorded(p)
+                        }
                     };
                     let sol = traceback::viterbi_path(p.num_states, &st, &bp);
                     let mut resp = self.done_log(req, sol.score, st, &served);
@@ -404,10 +432,15 @@ impl Router {
                         ExecutorChoice::Seq => crate::viterbi::seq::solve(p),
                         ExecutorChoice::Fused => crate::viterbi::pipeline::execute(p),
                         ExecutorChoice::Pooled => crate::viterbi::pipeline::solve_pooled(p),
+                        ExecutorChoice::Simd => crate::viterbi::pipeline::execute_simd(p),
                     }
                 } else {
                     match choice {
+                        // like seq, the simd column sweep polls only at
+                        // entry (`token.check()` above) — one lattice is
+                        // a short scan
                         ExecutorChoice::Seq => crate::viterbi::seq::solve(p),
+                        ExecutorChoice::Simd => crate::viterbi::pipeline::execute_simd(p),
                         ExecutorChoice::Fused => {
                             crate::viterbi::pipeline::execute_cancellable(p, &token)?
                         }
@@ -446,6 +479,7 @@ impl Router {
                                 pool.threads(),
                             )
                         }
+                        ExecutorChoice::Simd => crate::cyk::pipeline::solve_simd_recorded(p),
                     };
                     let sol = traceback::cyk_parse(p, &st, &splits);
                     let mut resp = self.done_log(req, sol.score, st, &served);
@@ -457,6 +491,7 @@ impl Router {
                         ExecutorChoice::Seq => crate::cyk::seq::solve(p),
                         ExecutorChoice::Fused => crate::cyk::pipeline::solve(p),
                         ExecutorChoice::Pooled => crate::cyk::pipeline::solve_pooled(p),
+                        ExecutorChoice::Simd => crate::cyk::pipeline::solve_simd(p),
                     }
                 } else {
                     match choice {
@@ -467,6 +502,9 @@ impl Router {
                         }
                         ExecutorChoice::Pooled => {
                             crate::cyk::pipeline::solve_pooled_cancellable(p, &token)?
+                        }
+                        ExecutorChoice::Simd => {
+                            crate::cyk::pipeline::solve_simd_cancellable(p, &token)?
                         }
                     }
                 };
@@ -876,7 +914,7 @@ mod tests {
     #[test]
     fn native_served_by_reports_policy_choice() {
         // whatever the installed policy picks, the suffix must name one
-        // of the three executors and the answer must match the oracle
+        // of the native executors and the answer must match the oracle
         let r = Router::new(None);
         let p = McmProblem::clrs();
         let want = crate::mcm::seq::cost(&p);
@@ -894,7 +932,7 @@ mod tests {
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
         assert_eq!(resp.value, want);
-        let suffix_ok = ["[seq]", "[fused]", "[pooled]"]
+        let suffix_ok = ["[seq]", "[fused]", "[pooled]", "[simd]"]
             .iter()
             .any(|s| resp.served_by.ends_with(s));
         assert!(
@@ -906,8 +944,8 @@ mod tests {
 
     #[test]
     fn every_policy_choice_solves_correctly_via_router() {
-        // pin each choice through an explicit table: all three executors
-        // answer identically through the native path
+        // pin each choice through an explicit table: every executor
+        // answers identically through the native path
         use crate::core::policy::{ExecutorChoice, PolicyTable, Workload};
         let _guard = crate::core::policy::test_install_lock()
             .lock()

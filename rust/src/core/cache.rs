@@ -35,7 +35,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::core::certify::{self, Certificate, Family};
-use crate::core::schedule::{AlignSchedule, McmSchedule, McmVariant, SdpSchedule, ViterbiSchedule};
+use crate::core::schedule::{
+    AlignSchedule, McmBlockedSchedule, McmSchedule, McmVariant, SdpSchedule, ViterbiSchedule,
+};
 
 /// Default maximum number of cached schedules (covers far more distinct
 /// sizes than realistic traffic exhibits).
@@ -78,6 +80,12 @@ pub enum Key {
     /// under its own key: the arena's `Family::Cyk` certificate must
     /// attach and amortize independently of the MCM entry's.
     Cyk { n: usize, tile: usize },
+    /// The cache-blocked MCM order (DESIGN.md §12): the corrected tiled
+    /// schedule regrouped into per-cell runs and L2-sized blocks, keyed
+    /// by its `(n, tile, block)` shape.  Cached alongside — not instead
+    /// of — the base `Key::Mcm` entry: the legacy pooled API still
+    /// serves the raw arena.
+    McmBlocked { n: usize, tile: usize, block: usize },
 }
 
 /// A cached compiled schedule of any workload family.  Typed entry/exit
@@ -91,6 +99,9 @@ pub enum CachedSchedule {
     /// The CYK span schedule *is* a corrected MCM arena; the distinct
     /// variant keeps its `Family::Cyk` certificate typed.
     Cyk(Arc<McmSchedule>),
+    /// The cache-blocked MCM order (same term count as the base arena it
+    /// regroups).
+    McmBlocked(Arc<McmBlockedSchedule>),
 }
 
 impl CachedSchedule {
@@ -104,6 +115,7 @@ impl CachedSchedule {
             // implicit like S-DP: two usizes, certificate-only entry
             CachedSchedule::Viterbi(_) => 1,
             CachedSchedule::Cyk(s) => s.num_terms(),
+            CachedSchedule::McmBlocked(s) => s.num_terms(),
         }
     }
 
@@ -122,6 +134,10 @@ impl CachedSchedule {
                 (Family::Viterbi, s.num_steps(), s.num_steps() * s.s, 1)
             }
             CachedSchedule::Cyk(s) => (Family::Cyk, s.num_steps(), s.num_terms(), s.tile),
+            // the blocked lowering gives every term an identity step
+            CachedSchedule::McmBlocked(s) => {
+                (Family::Mcm, s.num_terms(), s.num_terms(), s.tile)
+            }
         }
     }
 
@@ -132,6 +148,7 @@ impl CachedSchedule {
             CachedSchedule::Sdp(s) => certify::certify_sdp(s),
             CachedSchedule::Viterbi(s) => certify::certify_viterbi(s),
             CachedSchedule::Cyk(s) => certify::certify_cyk(s),
+            CachedSchedule::McmBlocked(s) => certify::certify_mcm_blocked(s),
         }
     }
 }
@@ -199,6 +216,21 @@ impl CacheableSchedule for ViterbiSchedule {
     fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
         match cached {
             CachedSchedule::Viterbi(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl CacheableSchedule for McmBlockedSchedule {
+    fn terms(&self) -> usize {
+        self.num_terms()
+    }
+    fn into_cached(this: Arc<Self>) -> CachedSchedule {
+        CachedSchedule::McmBlocked(this)
+    }
+    fn from_cached(cached: &CachedSchedule) -> Option<Arc<Self>> {
+        match cached {
+            CachedSchedule::McmBlocked(s) => Some(s.clone()),
             _ => None,
         }
     }
@@ -495,6 +527,30 @@ pub fn cyk_schedule(n: usize, tile: usize) -> Arc<McmSchedule> {
         })
         .0
         .clone()
+}
+
+/// Fetch (or compile and cache) the cache-blocked MCM order for
+/// `(n, tile, block)` — the request-path entry of the blocked pooled
+/// executor (DESIGN.md §12).  The base arena is compiled *inside* the
+/// builder and dropped, never inserted under `Key::Mcm`, so warming the
+/// blocked entry does not evict the fused route's arena.
+pub fn mcm_blocked_schedule(n: usize, tile: usize, block: usize) -> Arc<McmBlockedSchedule> {
+    let (tile, block) = (tile.max(1), block.max(1));
+    ScheduleCache::global().get_or_insert_with(Key::McmBlocked { n, tile, block }, || {
+        McmBlockedSchedule::compile(n, tile, block)
+    })
+}
+
+/// Fetch (or compute and attach) the certificate of the cached
+/// `(n, tile, block)` blocked MCM order — [`certify::gate_mcm_blocked`]
+/// lands here.
+pub fn mcm_blocked_certificate(n: usize, tile: usize, block: usize) -> Arc<Certificate> {
+    let (tile, block) = (tile.max(1), block.max(1));
+    let sched = mcm_blocked_schedule(n, tile, block);
+    ScheduleCache::global().certificate(
+        Key::McmBlocked { n, tile, block },
+        &CachedSchedule::McmBlocked(sched),
+    )
 }
 
 /// Fetch (or compute and attach) the certificate of the cached
@@ -847,6 +903,23 @@ mod tests {
         // second fetch reuses the attached certificate
         let ck2 = cyk_certificate(13, 4);
         assert!(Arc::ptr_eq(&ck, &ck2) || *ck == *ck2);
+    }
+
+    #[test]
+    fn blocked_mcm_entries_cache_with_attached_certificates() {
+        // distinctive size so other tests cannot pre-warm it
+        let a = mcm_blocked_schedule(29, 8, 64);
+        let b = mcm_blocked_schedule(29, 8, 64);
+        assert!(Arc::ptr_eq(&a, &b) || a.num_terms() == b.num_terms());
+        assert_eq!((a.n, a.tile, a.block_terms), (29, 8, 64));
+        let c1 = mcm_blocked_certificate(29, 8, 64);
+        let c2 = mcm_blocked_certificate(29, 8, 64);
+        assert!(Arc::ptr_eq(&c1, &c2) || *c1 == *c2);
+        assert!(c1.admissible_strict());
+        // the blocked certificate is not the base arena's: identity steps
+        // change the shape and the fingerprint
+        let base = mcm_certificate(29, McmVariant::Corrected, 8);
+        assert_ne!(c1.fingerprint, base.fingerprint);
     }
 
     #[test]

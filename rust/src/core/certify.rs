@@ -40,7 +40,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::core::conflict::{ConflictReport, Hazard};
 use crate::core::schedule::{
-    grid, linear, AlignSchedule, McmSchedule, McmVariant, SdpSchedule, ViterbiSchedule,
+    grid, linear, AlignSchedule, McmBlockedSchedule, McmSchedule, McmVariant, SdpSchedule,
+    ViterbiSchedule,
 };
 use crate::{Error, Result};
 
@@ -643,6 +644,60 @@ pub fn lower_viterbi(sched: &ViterbiSchedule) -> DepIr {
     }
 }
 
+/// Lower a cache-blocked MCM schedule (DESIGN.md §12).  The blocked
+/// order is a within-superstep permutation of the corrected tiled
+/// schedule with its per-cell runs made explicit, so the IR expands each
+/// run back to one row per term, in the *executed* (regrouped) order,
+/// with an identity step CSR — every term is its own step, which is the
+/// strongest claim the analyzer can check: no two rows of a superstep
+/// write one cell (the one-run-per-cell invariant shows up as zero WAW
+/// hazards), and every operand read must finalize behind an earlier
+/// barrier (zero RAW/fusion hazards).  The finalize map is rebuilt from
+/// the blocked order itself (last row writing each cell), so a
+/// regrouping bug that moved a term across its cell's finalize barrier
+/// would be refuted, not trusted.
+pub fn lower_mcm_blocked(sched: &McmBlockedSchedule) -> DepIr {
+    let num_cells = linear::num_cells(sched.n);
+    let terms = sched.num_terms();
+    let mut writes = Vec::with_capacity(terms);
+    let mut reads = Vec::with_capacity(terms * 2);
+    let mut superstep_offsets = Vec::with_capacity(sched.num_supersteps() + 1);
+    superstep_offsets.push(0u32);
+    // absolute identity-step index after which each cell is final = its
+    // last write in executed order
+    let mut finalize = vec![u32::MAX; num_cells];
+    for g in 0..sched.num_supersteps() {
+        for b in sched.superstep_blocks(g) {
+            for run in sched.block_runs(b) {
+                let tgt = sched.run_tgt[run];
+                let lo = sched.run_offsets[run] as usize;
+                let hi = sched.run_offsets[run + 1] as usize;
+                for k in lo..hi {
+                    writes.push(tgt);
+                    reads.push(sched.l[k]);
+                    reads.push(sched.r[k]);
+                }
+                finalize[tgt as usize] = (writes.len() - 1) as u32;
+            }
+        }
+        superstep_offsets.push(writes.len() as u32);
+    }
+    DepIr {
+        family: Family::Mcm,
+        num_cells,
+        arity: 2,
+        tile: sched.tile,
+        step_base: 0,
+        step_offsets: (0..=terms as u32).collect(),
+        superstep_offsets,
+        writes,
+        reads,
+        finalize,
+        unit_of: Vec::new(),
+        writer_of: Vec::new(),
+    }
+}
+
 /// Lower a CYK span schedule.  CYK executes over the *same* corrected
 /// MCM triangular arena (DESIGN.md §11) — a span's `R` nonterminal slots
 /// finalize wholesale with the span, so cell-granularity dependence (and
@@ -657,6 +712,11 @@ pub fn lower_cyk(sched: &McmSchedule) -> DepIr {
 /// Lower + certify an MCM schedule.
 pub fn certify_mcm(sched: &McmSchedule) -> Certificate {
     certify(&lower_mcm(sched))
+}
+
+/// Lower + certify a cache-blocked MCM schedule.
+pub fn certify_mcm_blocked(sched: &McmBlockedSchedule) -> Certificate {
+    certify(&lower_mcm_blocked(sched))
 }
 
 /// Lower + certify an alignment wavefront schedule.
@@ -734,6 +794,16 @@ pub fn gate_mcm(n: usize, variant: McmVariant, tile: usize) -> Result<()> {
     admit(&cert, ok)
 }
 
+/// Serve-time gate for a native MCM solve over the cache-blocked pooled
+/// order: fetch (or compute) the cached certificate of the exact
+/// `(n, tile, block)` regrouped schedule and enforce the strict
+/// admission contract (the blocked order only exists for the corrected
+/// schedule).
+pub fn gate_mcm_blocked(n: usize, tile: usize, block: usize) -> Result<()> {
+    let cert = crate::core::cache::mcm_blocked_certificate(n, tile, block);
+    admit(&cert, cert.admissible_strict())
+}
+
 /// Serve-time gate for a native alignment solve (`tile = 1` for the
 /// seq/fused routes, the block tile for the pooled route).
 pub fn gate_align(rows: usize, cols: usize, tile: usize) -> Result<()> {
@@ -800,6 +870,27 @@ mod tests {
             4,
         )));
         assert!(c.admissible_strict(), "cyk: {c:?}");
+    }
+
+    #[test]
+    fn blocked_mcm_schedules_certify_admissible_strict() {
+        use crate::core::schedule::McmBlockedSchedule;
+        for (n, tile, block) in [(8usize, 1usize, 4usize), (16, 4, 16), (24, 8, 4096)] {
+            let c = certify_mcm_blocked(&McmBlockedSchedule::compile(n, tile, block));
+            assert!(
+                c.well_formed && c.admissible_strict(),
+                "n={n} tile={tile} block={block}: {c:?}"
+            );
+            // a blocked term moved into the superstep producing its
+            // operand must be refuted
+            let mut ir = lower_mcm_blocked(&McmBlockedSchedule::compile(n, tile, block));
+            let victim = (0..ir.writes.len())
+                .find(|&r| ir.reads[2 * r] >= n as u32 || ir.reads[2 * r + 1] >= n as u32)
+                .expect("an interior-operand row exists");
+            ir.reads[2 * victim] = ir.writes[victim];
+            let c = certify(&ir);
+            assert!(c.raw_hazards > 0 && !c.admissible_strict(), "{c:?}");
+        }
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //! * [`sweep`] — the generic superstep sweep: the one fused /
 //!   cancellable / pooled / pooled-cancellable driver family every
 //!   executor tier instantiates (DESIGN.md §11).
+//! * [`simd`] — lane-batched combine/argmin primitives with the pinned
+//!   first-wins tie-break: portable fixed-width fallback + runtime-gated
+//!   AVX2 fast paths behind every vectorized executor (DESIGN.md §12).
 //! * [`problem`] — validated S-DP and MCM problem instances.
 //! * [`schedule`] — the schedule compiler: Fig. 2 / Fig. 8 pipelines as
 //!   explicit step-synchronous schedules (published-faithful and
@@ -45,5 +48,6 @@ pub mod problem;
 pub mod schedule;
 pub mod semigroup;
 pub mod semiring;
+pub mod simd;
 pub mod sweep;
 pub mod traceback;

@@ -27,8 +27,11 @@
 //!
 //! The installed table lives process-wide next to the schedule cache
 //! ([`install`] / [`current`]); choice counters surface in coordinator
-//! stats ([`stats`]).  `PIPEDP_EXEC_POLICY=seq|fused|pooled` pins every
-//! decision (bench/debug escape hatch).  Requests asking for solution
+//! stats ([`stats`]).  `PIPEDP_EXEC_POLICY=seq|fused|pooled|simd` pins
+//! every decision (bench/debug escape hatch).  A fourth strategy,
+//! `simd` (the lane-batched single-thread kernels of DESIGN.md §12),
+//! joined the arbitration in ISSUE 9 and wins the large bands on a
+//! single-threaded budget.  Requests asking for solution
 //! reconstruction (`want_solution`, DESIGN.md §8) take the same choice
 //! through the recording executor of the chosen tier — the policy
 //! arbitrates *where* a solve runs, never whether its sidecar is
@@ -120,7 +123,7 @@ impl<C: Copy + PartialEq> CrossoverTable<C> {
     }
 }
 
-/// The three native execution strategies the policy arbitrates.
+/// The native execution strategies the policy arbitrates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecutorChoice {
     /// Classic sequential DP (`mcm::seq`, `align::seq`, `sdp::seq`).
@@ -129,13 +132,20 @@ pub enum ExecutorChoice {
     Fused,
     /// Superstep-tiled executor on the persistent pool.
     Pooled,
+    /// Lane-batched single-thread sweep (ISSUE 9, DESIGN.md §12):
+    /// contiguous-operand layouts + the `core::simd` combine/argmin
+    /// primitives.  For S-DP (no simd kernel — the pipe is a scan, not
+    /// a reduction) the router serves this choice through the fused
+    /// sweep.
+    Simd,
 }
 
 impl ExecutorChoice {
-    pub const ALL: [ExecutorChoice; 3] = [
+    pub const ALL: [ExecutorChoice; 4] = [
         ExecutorChoice::Seq,
         ExecutorChoice::Fused,
         ExecutorChoice::Pooled,
+        ExecutorChoice::Simd,
     ];
 
     pub fn name(self) -> &'static str {
@@ -143,6 +153,7 @@ impl ExecutorChoice {
             ExecutorChoice::Seq => "seq",
             ExecutorChoice::Fused => "fused",
             ExecutorChoice::Pooled => "pooled",
+            ExecutorChoice::Simd => "simd",
         }
     }
 
@@ -151,6 +162,7 @@ impl ExecutorChoice {
             "seq" => Some(ExecutorChoice::Seq),
             "fused" => Some(ExecutorChoice::Fused),
             "pooled" => Some(ExecutorChoice::Pooled),
+            "simd" => Some(ExecutorChoice::Simd),
             _ => None,
         }
     }
@@ -252,36 +264,41 @@ impl PolicyTable {
                     ExecutorChoice::Fused
                 }
             }
+            // the lane-batched kernels (DESIGN.md §12) win the large
+            // bands without barriers or pool contention, so they are the
+            // static default where a simd route exists; calibration can
+            // still crown the pool on hosts where it measures faster
             Workload::Mcm => {
                 if n < 192 {
                     ExecutorChoice::Seq
                 } else {
-                    ExecutorChoice::Pooled
+                    ExecutorChoice::Simd
                 }
             }
             Workload::Align => {
                 if n < 256 {
                     ExecutorChoice::Seq
                 } else {
-                    ExecutorChoice::Pooled
+                    ExecutorChoice::Simd
                 }
             }
-            // seq and fused are the same column scan for Viterbi; the
-            // pool pays only when a column holds enough states to split
+            // seq and fused are the same column scan for Viterbi; wide
+            // columns are a contiguous predecessor reduction — exactly
+            // the simd column kernel's shape
             Workload::Viterbi => {
                 if n >= 64 {
-                    ExecutorChoice::Pooled
+                    ExecutorChoice::Simd
                 } else {
                     ExecutorChoice::Fused
                 }
             }
             // MCM's triangular crossover, pulled in: every schedule term
-            // carries a |rules| fan-out, so parallelism amortizes sooner
+            // carries a |rules| fan-out, so batching amortizes sooner
             Workload::Cyk => {
                 if n < 96 {
                     ExecutorChoice::Seq
                 } else {
-                    ExecutorChoice::Pooled
+                    ExecutorChoice::Simd
                 }
             }
         }
@@ -302,6 +319,7 @@ impl PolicyTable {
             ExecutorChoice::Seq => &COUNTERS.seq,
             ExecutorChoice::Fused => &COUNTERS.fused,
             ExecutorChoice::Pooled => &COUNTERS.pooled,
+            ExecutorChoice::Simd => &COUNTERS.simd,
         };
         counter.fetch_add(1, Ordering::Relaxed);
         choice
@@ -339,12 +357,14 @@ struct Counters {
     seq: AtomicU64,
     fused: AtomicU64,
     pooled: AtomicU64,
+    simd: AtomicU64,
 }
 
 static COUNTERS: Counters = Counters {
     seq: AtomicU64::new(0),
     fused: AtomicU64::new(0),
     pooled: AtomicU64::new(0),
+    simd: AtomicU64::new(0),
 };
 
 /// Point-in-time policy statistics (exported into coordinator stats).
@@ -353,6 +373,7 @@ pub struct PolicyStats {
     pub seq: u64,
     pub fused: u64,
     pub pooled: u64,
+    pub simd: u64,
     pub calibrated: bool,
 }
 
@@ -361,6 +382,7 @@ pub fn stats() -> PolicyStats {
         seq: COUNTERS.seq.load(Ordering::Relaxed),
         fused: COUNTERS.fused.load(Ordering::Relaxed),
         pooled: COUNTERS.pooled.load(Ordering::Relaxed),
+        simd: COUNTERS.simd.load(Ordering::Relaxed),
         calibrated: current().calibrated,
     }
 }
@@ -431,8 +453,9 @@ fn time_min_ns(runs: usize, mut f: impl FnMut()) -> f64 {
     best
 }
 
-/// Measure the three executors over the config's ladders and build a
-/// [`PolicyTable`].  `keep_going` is polled between sizes so a server
+/// Measure the native executors over the config's ladders and build a
+/// [`PolicyTable`].  MCM and align also time the lane-batched `simd`
+/// kernels; S-DP has no simd route (see [`ExecutorChoice::Simd`]).  `keep_going` is polled between sizes so a server
 /// shutting down mid-warmup abandons the remaining measurements.
 /// The log-space families (Viterbi, CYK) are not on the warmup ladder —
 /// their tables stay empty and [`PolicyTable::band_choice`] answers from
@@ -442,7 +465,7 @@ pub fn calibrate(
     pool: &ExecPool,
     keep_going: impl Fn() -> bool,
 ) -> PolicyTable {
-    use ExecutorChoice::{Fused, Pooled, Seq};
+    use ExecutorChoice::{Fused, Pooled, Seq, Simd};
     let mut rng = crate::util::rng::Rng::seeded(0x9e3779b9);
     let mut table = PolicyTable::uncalibrated(pool.threads());
     let runs = cfg.runs;
@@ -473,10 +496,13 @@ pub fn calibrate(
                 pool.threads(),
             ));
         }) / cells;
+        let simd = time_min_ns(runs, || {
+            std::hint::black_box(crate::mcm::pipeline::solve_simd(&p));
+        }) / cells;
         table.push_measurement(
             Workload::Mcm,
             n,
-            vec![(Seq, seq), (Fused, fused), (Pooled, pooled)],
+            vec![(Seq, seq), (Fused, fused), (Pooled, pooled), (Simd, simd)],
         );
     }
 
@@ -508,10 +534,13 @@ pub fn calibrate(
                 pool.threads(),
             ));
         }) / cells;
+        let simd = time_min_ns(runs, || {
+            std::hint::black_box(crate::align::wavefront::solve_simd(&p));
+        }) / cells;
         table.push_measurement(
             Workload::Align,
             side,
-            vec![(Seq, seq), (Fused, fused), (Pooled, pooled)],
+            vec![(Seq, seq), (Fused, fused), (Pooled, pooled), (Simd, simd)],
         );
     }
 
@@ -652,20 +681,17 @@ mod tests {
         let t = PolicyTable::uncalibrated(4);
         assert!(!t.calibrated);
         assert_eq!(t.band_choice(Workload::Mcm, 8), ExecutorChoice::Seq);
-        assert_eq!(t.band_choice(Workload::Mcm, 1024), ExecutorChoice::Pooled);
+        assert_eq!(t.band_choice(Workload::Mcm, 1024), ExecutorChoice::Simd);
         assert_eq!(t.band_choice(Workload::Align, 16), ExecutorChoice::Seq);
-        assert_eq!(
-            t.band_choice(Workload::Align, 2048),
-            ExecutorChoice::Pooled
-        );
+        assert_eq!(t.band_choice(Workload::Align, 2048), ExecutorChoice::Simd);
         assert_eq!(t.band_choice(Workload::Sdp, 128), ExecutorChoice::Fused);
         assert_eq!(t.band_choice(Workload::Viterbi, 8), ExecutorChoice::Fused);
         assert_eq!(
             t.band_choice(Workload::Viterbi, 512),
-            ExecutorChoice::Pooled
+            ExecutorChoice::Simd
         );
         assert_eq!(t.band_choice(Workload::Cyk, 12), ExecutorChoice::Seq);
-        assert_eq!(t.band_choice(Workload::Cyk, 512), ExecutorChoice::Pooled);
+        assert_eq!(t.band_choice(Workload::Cyk, 512), ExecutorChoice::Simd);
     }
 
     #[test]
@@ -694,10 +720,12 @@ mod tests {
         assert_eq!(table.mcm.rows().len(), 2);
         assert_eq!(table.align.rows().len(), 2);
         assert_eq!(table.sdp.rows().len(), 1);
-        // every measured cost is finite and positive
+        // every measured cost is finite and positive; MCM and align
+        // carry the extra simd column, S-DP stays at three
         for w in [Workload::Mcm, Workload::Align, Workload::Sdp] {
+            let want = if w == Workload::Sdp { 3 } else { 4 };
             for row in table.table(w).rows() {
-                assert_eq!(row.costs.len(), 3);
+                assert_eq!(row.costs.len(), want);
                 for &(_, cost) in &row.costs {
                     assert!(cost.is_finite() && cost > 0.0, "{w:?} n={}", row.n);
                 }

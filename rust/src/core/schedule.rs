@@ -277,6 +277,22 @@ pub fn default_align_tile(rows: usize, cols: usize) -> usize {
     (rows.min(cols) / 8).clamp(8, 128)
 }
 
+/// Default term budget per cache block of a blocked MCM schedule
+/// (DESIGN.md §12): 4096 terms ≈ 3 × 4096 × 8 B = 96 KiB of operand
+/// strips + weights per block sweep — L2-resident on every current core,
+/// and ≥ 64 runs per block at the sizes where blocking engages, so the
+/// per-block dispatch amortizes.  Override with `PIPEDP_BLOCK_TERMS`.
+pub fn default_mcm_block() -> usize {
+    static BUDGET: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        std::env::var("PIPEDP_BLOCK_TERMS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&v: &usize| v > 0)
+            .unwrap_or(4096)
+    })
+}
+
 /// Terms of cell `(r, c)`: `(l, r, pa, pb, pc)` for `j = 1..=d`.
 /// Term `j` is `f(ST[(r, r+j-1)], ST[(r+j, c)])` weighted
 /// `p[r]·p[r+j]·p[c+1]` (§IV-B; verified against the paper's ST[13]/ST[12]
@@ -625,6 +641,176 @@ impl McmSchedule {
             }
         }
         Ok(out)
+    }
+}
+
+/// The cache-blocked MCM schedule (DESIGN.md §12): the corrected tiled
+/// arena regrouped, within each superstep, into per-cell candidate
+/// **runs** (all of one cell's terms in that superstep, term-ascending —
+/// one contiguous `(l, r)` operand strip whose weights are the
+/// consecutive `dims[pb0..]`) and the runs chopped into **blocks** of at
+/// most `block_terms` terms.  Pooled lanes then claim whole blocks
+/// (`block % parties`) and sweep them contiguously, so each barrier
+/// round streams L2-sized strips instead of striding the raw arena, and
+/// each run is one lane-batched argmin call instead of `len` scalar
+/// combine steps.
+///
+/// The regrouping is a *within-superstep permutation* of the base
+/// schedule: every cross-barrier dependence of the corrected tiled
+/// schedule is preserved, each cell has at most one run (hence one
+/// writer) per superstep, and runs stay term-ascending within and across
+/// supersteps — which is why scores and recorded splits remain
+/// bit-identical to the sequential oracle (see
+/// `mcm::pipeline::McmBlockedKernel`).  The order is certified like any
+/// other schedule by [`crate::core::certify::lower_mcm_blocked`].
+#[derive(Debug)]
+pub struct McmBlockedSchedule {
+    pub n: usize,
+    /// Superstep tile of the underlying corrected schedule.
+    pub tile: usize,
+    /// Term budget per block (`default_mcm_block()` unless overridden).
+    pub block_terms: usize,
+    /// Target cell of each run.
+    pub(crate) run_tgt: Vec<u32>,
+    /// First (1-based) term index of each run.
+    pub(crate) run_term0: Vec<u32>,
+    /// `pb` of each run's first term: term `k` of the run weighs
+    /// `dims[pb0 + k]` and splits at `pb0 + k − 1`.
+    pub(crate) run_pb0: Vec<u32>,
+    /// CSR: term range of run `i` is `run_offsets[i]..run_offsets[i+1]`
+    /// into `l`/`r`.
+    pub(crate) run_offsets: Vec<u32>,
+    /// Left/right operand cells, gathered run-contiguously.
+    pub(crate) l: Vec<u32>,
+    pub(crate) r: Vec<u32>,
+    /// CSR: run range of block `b`.
+    pub(crate) block_offsets: Vec<u32>,
+    /// CSR: block range of superstep `g`.
+    pub(crate) superstep_offsets: Vec<u32>,
+}
+
+impl McmBlockedSchedule {
+    /// Compile the blocked order for a chain of `n` matrices over the
+    /// corrected schedule tiled at `tile`.  The base arena is compiled
+    /// locally and dropped — only the regrouped form (same total size)
+    /// is kept, so blocking never doubles resident schedule memory.
+    ///
+    /// Process-wide memoized by [`crate::core::cache::mcm_blocked_schedule`];
+    /// request paths should call that instead.
+    pub fn compile(n: usize, tile: usize, block_terms: usize) -> McmBlockedSchedule {
+        let base = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile.max(1));
+        McmBlockedSchedule::from_base(&base, block_terms.max(1))
+    }
+
+    /// Regroup a compiled base schedule (see the type docs).
+    pub fn from_base(base: &McmSchedule, block_terms: usize) -> McmBlockedSchedule {
+        let nterms = base.num_terms();
+        let mut run_tgt = Vec::new();
+        let mut run_term0 = Vec::new();
+        let mut run_pb0 = Vec::new();
+        let mut run_offsets = vec![0u32];
+        let mut l = Vec::with_capacity(nterms);
+        let mut r = Vec::with_capacity(nterms);
+        let mut block_offsets = vec![0u32];
+        let mut superstep_offsets = vec![0u32];
+        let mut idx: Vec<u32> = Vec::new();
+        for g in 0..base.num_supersteps() {
+            idx.clear();
+            idx.extend(base.superstep_range(g).map(|i| i as u32));
+            idx.sort_by_key(|&i| (base.tgt[i as usize], base.term[i as usize]));
+            let mut block_count = 0usize;
+            let mut k = 0usize;
+            while k < idx.len() {
+                let first = idx[k] as usize;
+                let tgt = base.tgt[first];
+                let mut len = 1usize;
+                while k + len < idx.len() && base.tgt[idx[k + len] as usize] == tgt {
+                    len += 1;
+                }
+                // close the current block before a run that would
+                // overflow it (runs are atomic: an oversized run becomes
+                // its own block)
+                if block_count > 0 && block_count + len > block_terms {
+                    block_offsets.push(run_tgt.len() as u32);
+                    block_count = 0;
+                }
+                run_tgt.push(tgt);
+                run_term0.push(base.term[first]);
+                run_pb0.push(base.pb[first]);
+                for j in 0..len {
+                    let row = idx[k + j] as usize;
+                    // the corrected compiler places one term of a cell
+                    // per consecutive step, so a superstep's slice of a
+                    // cell is term-consecutive (and pb = r + term tracks)
+                    debug_assert_eq!(base.term[row], base.term[first] + j as u32);
+                    debug_assert_eq!(base.pb[row], base.pb[first] + j as u32);
+                    l.push(base.l[row]);
+                    r.push(base.r[row]);
+                }
+                run_offsets.push(l.len() as u32);
+                block_count += len;
+                k += len;
+            }
+            if block_count > 0 {
+                block_offsets.push(run_tgt.len() as u32);
+            }
+            superstep_offsets.push((block_offsets.len() - 1) as u32);
+        }
+        debug_assert_eq!(l.len(), nterms);
+        McmBlockedSchedule {
+            n: base.n,
+            tile: base.tile,
+            block_terms,
+            run_tgt,
+            run_term0,
+            run_pb0,
+            run_offsets,
+            l,
+            r,
+            block_offsets,
+            superstep_offsets,
+        }
+    }
+
+    /// Total regrouped terms (= the base schedule's term count).
+    pub fn num_terms(&self) -> usize {
+        self.l.len()
+    }
+
+    pub fn num_runs(&self) -> usize {
+        self.run_tgt.len()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.block_offsets.len() - 1
+    }
+
+    /// Number of barrier-separated supersteps — identical to the base
+    /// schedule's (blocking never adds or removes barriers).
+    pub fn num_supersteps(&self) -> usize {
+        self.superstep_offsets.len() - 1
+    }
+
+    /// Block-index range of superstep `g`.
+    #[inline]
+    pub fn superstep_blocks(&self, g: usize) -> std::ops::Range<usize> {
+        self.superstep_offsets[g] as usize..self.superstep_offsets[g + 1] as usize
+    }
+
+    /// Run-index range of block `b`.
+    #[inline]
+    pub fn block_runs(&self, b: usize) -> std::ops::Range<usize> {
+        self.block_offsets[b] as usize..self.block_offsets[b + 1] as usize
+    }
+
+    /// Widest superstep in blocks — the pooled executor's useful-party
+    /// bound.
+    pub fn max_blocks_per_superstep(&self) -> usize {
+        self.superstep_offsets
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as usize)
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -1040,6 +1226,62 @@ impl ViterbiSchedule {
 mod tests {
     use super::*;
     use crate::prop::forall;
+
+    // ---- blocked regrouping (DESIGN.md §12) ------------------------------
+
+    #[test]
+    fn blocked_is_a_superstep_local_permutation_of_the_base() {
+        for (n, tile, block) in [(6usize, 1usize, 4usize), (12, 4, 8), (24, 8, 4096), (33, 64, 7)]
+        {
+            let base = McmSchedule::compile_tiled(n, McmVariant::Corrected, tile);
+            let b = McmBlockedSchedule::from_base(&base, block);
+            assert_eq!(b.num_terms(), base.num_terms());
+            assert_eq!(b.num_supersteps(), base.num_supersteps());
+            for g in 0..b.num_supersteps() {
+                // multiset of (tgt, l, r) in superstep g must match the base's
+                let mut want: Vec<(u32, u32, u32)> = base
+                    .superstep_range(g)
+                    .map(|i| (base.tgt[i], base.l[i], base.r[i]))
+                    .collect();
+                want.sort_unstable();
+                let mut got: Vec<(u32, u32, u32)> = Vec::new();
+                let mut cells_seen = std::collections::HashSet::new();
+                for blk in b.superstep_blocks(g) {
+                    for run in b.block_runs(blk) {
+                        assert!(
+                            cells_seen.insert(b.run_tgt[run]),
+                            "n={n}: cell {} has two runs in superstep {g}",
+                            b.run_tgt[run]
+                        );
+                        let lo = b.run_offsets[run] as usize;
+                        let hi = b.run_offsets[run + 1] as usize;
+                        for k in lo..hi {
+                            got.push((b.run_tgt[run], b.l[k], b.r[k]));
+                        }
+                    }
+                }
+                got.sort_unstable();
+                assert_eq!(got, want, "n={n} tile={tile} block={block} superstep {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_blocks_respect_the_term_budget() {
+        let b = McmBlockedSchedule::compile(24, 4, 16);
+        assert!(b.num_blocks() > 1);
+        for blk in 0..b.num_blocks() {
+            let runs = b.block_runs(blk);
+            let terms =
+                (b.run_offsets[runs.end] - b.run_offsets[runs.start]) as usize;
+            let single_run = runs.len() == 1;
+            assert!(
+                terms <= 16 || single_run,
+                "block {blk}: {terms} terms across {} runs",
+                runs.len()
+            );
+        }
+    }
 
     // ---- linearization (Fig. 5) ------------------------------------------
 

@@ -1,0 +1,508 @@
+//! Lane-batched combine/argmin primitives for the DP inner loops
+//! (DESIGN.md §12).
+//!
+//! Every served family reduces, per cell, a contiguous strip of
+//! candidate scores under one of two semirings: `(min, +)` over `i64`
+//! (MCM and the blocked sweep) or `(max, ×)` in log space over `f64`
+//! (Viterbi, CYK).  This module packages exactly those reductions as
+//! slice kernels with a **pinned first-wins argmin/argmax tie-break**
+//! that is bit-identical to the sequential oracles:
+//!
+//! * [`min_plus_argmin`] — `argmin_j  left[j] + right[j] + scale·w[j]`
+//!   (wrapping i64 arithmetic, matching [`crate::core::semiring::MinPlus`]).
+//! * [`max_plus_argmax`] — `argmax_j  a[j] + b[j]` (no bias term: the
+//!   Viterbi cell adds its emission *after* the reduction, and `x + 0.0`
+//!   would rewrite `-0.0` lanes — see the §12 tie-break proof).
+//! * [`max_plus_argmax_bias`] — `argmax_j  a[j] + b[j] + bias` (the CYK
+//!   rule body, `bias` = the rule's log-probability).
+//!
+//! Two implementations sit behind each entry point: a **portable
+//! fallback** written as fixed-width (`LANES = 8`) array chunks the
+//! autovectorizer handles on any target, and an **AVX2 fast path**
+//! (`std::arch`, 4×64-bit lanes) behind `is_x86_feature_detected!` —
+//! zero new dependencies, no nightly features.  `PIPEDP_SIMD=off`
+//! (also `0`/`false`) pins every call to the portable fallback so CI
+//! keeps the scalar path exercised.
+//!
+//! **Tie-break correctness** (the §12 proof in short): lane `k` of a
+//! width-`W` sweep only ever holds candidates at positions `k`, `W+k`,
+//! `2W+k`, …, visited in ascending order and replaced only on *strict*
+//! improvement — so each lane retains the first (lowest-index) occurrence
+//! of its own minimum.  The horizontal reduce prefers a strictly better
+//! value, breaking value ties toward the smaller stored index; the
+//! scalar tail runs last over indices larger than every vector index and
+//! also replaces only on strict improvement.  Composition: the returned
+//! index is the globally first occurrence of the optimum, exactly the
+//! sequential scan's answer.
+
+use std::sync::OnceLock;
+
+/// Portable chunk width: eight 64-bit lanes per strip, sized so the
+/// fallback's inner loop is a fixed-trip-count, branch-light block the
+/// autovectorizer reliably unrolls (two AVX2 registers' worth).
+pub const LANES: usize = 8;
+
+/// Whether the `std::arch` fast paths may run (the portable fallback is
+/// always available).  Reads `PIPEDP_SIMD` once: `off`, `0` and `false`
+/// disable, anything else (or unset) enables.
+pub fn enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| match std::env::var("PIPEDP_SIMD") {
+        Ok(v) => {
+            let v = v.to_ascii_lowercase();
+            !(v == "off" || v == "0" || v == "false")
+        }
+        Err(_) => true,
+    })
+}
+
+/// First-wins argmin of `left[j] + right[j] + scale·weights[j]` over the
+/// full strip, in the wrapping i64 arithmetic of
+/// [`crate::core::semiring::MinPlus`].  Empty strip ⇒ `(i64::MAX, 0)`,
+/// matching a sequential scan that never improves on the identity.
+#[inline]
+pub fn min_plus_argmin(left: &[i64], right: &[i64], weights: &[i64], scale: i64) -> (i64, u32) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() && std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: the `avx2` runtime feature gate directly above is the
+        // precondition of the target_feature function.
+        return unsafe { avx2::min_plus_argmin(left, right, weights, scale) };
+    }
+    min_plus_argmin_portable(left, right, weights, scale)
+}
+
+/// The portable lane-chunked fallback behind [`min_plus_argmin`]; public
+/// so the parity suite can pin it against the dispatched path.
+pub fn min_plus_argmin_portable(
+    left: &[i64],
+    right: &[i64],
+    weights: &[i64],
+    scale: i64,
+) -> (i64, u32) {
+    debug_assert_eq!(left.len(), right.len());
+    debug_assert_eq!(left.len(), weights.len());
+    let n = left.len();
+    let mut best = [i64::MAX; LANES];
+    let mut barg = [0u32; LANES];
+    let mut base = 0usize;
+    while base + LANES <= n {
+        for k in 0..LANES {
+            let j = base + k;
+            let cand = left[j]
+                .wrapping_add(right[j])
+                .wrapping_add(scale.wrapping_mul(weights[j]));
+            if cand < best[k] {
+                best[k] = cand;
+                barg[k] = j as u32;
+            }
+        }
+        base += LANES;
+    }
+    let mut bv = best[0];
+    let mut ba = barg[0];
+    for k in 1..LANES {
+        if best[k] < bv || (best[k] == bv && barg[k] < ba) {
+            bv = best[k];
+            ba = barg[k];
+        }
+    }
+    for j in base..n {
+        let cand = left[j]
+            .wrapping_add(right[j])
+            .wrapping_add(scale.wrapping_mul(weights[j]));
+        if cand < bv {
+            bv = cand;
+            ba = j as u32;
+        }
+    }
+    (bv, ba)
+}
+
+/// First-wins argmax of `a[j] + b[j]` (log-space `(max, ×)` without a
+/// bias term — the Viterbi predecessor scan).  Empty strip ⇒
+/// `(f64::NEG_INFINITY, 0)`.
+#[inline]
+pub fn max_plus_argmax(a: &[f64], b: &[f64]) -> (f64, u32) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() && std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: the `avx2` runtime feature gate directly above is the
+        // precondition of the target_feature function.
+        return unsafe { avx2::max_plus_argmax(a, b, false, 0.0) };
+    }
+    max_plus_argmax_portable(a, b)
+}
+
+/// The portable lane-chunked fallback behind [`max_plus_argmax`].
+pub fn max_plus_argmax_portable(a: &[f64], b: &[f64]) -> (f64, u32) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut best = [f64::NEG_INFINITY; LANES];
+    let mut barg = [0u32; LANES];
+    let mut base = 0usize;
+    while base + LANES <= n {
+        for k in 0..LANES {
+            let j = base + k;
+            let cand = a[j] + b[j];
+            if cand > best[k] {
+                best[k] = cand;
+                barg[k] = j as u32;
+            }
+        }
+        base += LANES;
+    }
+    let mut bv = best[0];
+    let mut ba = barg[0];
+    for k in 1..LANES {
+        if best[k] > bv || (best[k] == bv && barg[k] < ba) {
+            bv = best[k];
+            ba = barg[k];
+        }
+    }
+    for j in base..n {
+        let cand = a[j] + b[j];
+        if cand > bv {
+            bv = cand;
+            ba = j as u32;
+        }
+    }
+    (bv, ba)
+}
+
+/// First-wins argmax of `a[j] + b[j] + bias` (the CYK rule combine,
+/// `bias` = the rule's log-probability).  Kept separate from
+/// [`max_plus_argmax`]: folding a `0.0` bias into the Viterbi scan would
+/// rewrite `-0.0` candidates to `+0.0` and break bit-identity with the
+/// sequential oracle.
+#[inline]
+pub fn max_plus_argmax_bias(a: &[f64], b: &[f64], bias: f64) -> (f64, u32) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() && std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: the `avx2` runtime feature gate directly above is the
+        // precondition of the target_feature function.
+        return unsafe { avx2::max_plus_argmax(a, b, true, bias) };
+    }
+    max_plus_argmax_bias_portable(a, b, bias)
+}
+
+/// The portable lane-chunked fallback behind [`max_plus_argmax_bias`].
+pub fn max_plus_argmax_bias_portable(a: &[f64], b: &[f64], bias: f64) -> (f64, u32) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut best = [f64::NEG_INFINITY; LANES];
+    let mut barg = [0u32; LANES];
+    let mut base = 0usize;
+    while base + LANES <= n {
+        for k in 0..LANES {
+            let j = base + k;
+            let cand = a[j] + b[j] + bias;
+            if cand > best[k] {
+                best[k] = cand;
+                barg[k] = j as u32;
+            }
+        }
+        base += LANES;
+    }
+    let mut bv = best[0];
+    let mut ba = barg[0];
+    for k in 1..LANES {
+        if best[k] > bv || (best[k] == bv && barg[k] < ba) {
+            bv = best[k];
+            ba = barg[k];
+        }
+    }
+    for j in base..n {
+        let cand = a[j] + b[j] + bias;
+        if cand > bv {
+            bv = cand;
+            ba = j as u32;
+        }
+    }
+    (bv, ba)
+}
+
+/// AVX2 fast paths: 4×64-bit lanes, same strict-improvement /
+/// smallest-index reduction discipline as the portable fallback (the §12
+/// proof is lane-width-agnostic, so both produce the sequential scan's
+/// exact answer).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 `(min, +)` first-wins argmin (see [`super::min_plus_argmin`]).
+    ///
+    /// # Safety
+    /// Caller must have verified the `avx2` target feature at runtime
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn min_plus_argmin(
+        left: &[i64],
+        right: &[i64],
+        weights: &[i64],
+        scale: i64,
+    ) -> (i64, u32) {
+        debug_assert_eq!(left.len(), right.len());
+        debug_assert_eq!(left.len(), weights.len());
+        let n = left.len();
+        let mut base = 0usize;
+        let mut best = [i64::MAX; 4];
+        let mut barg = [0i64; 4];
+        // SAFETY: the function's `avx2` precondition covers every
+        // intrinsic; the unaligned loads read `base..base+4`, in bounds
+        // by the loop condition, and the stores target local arrays of
+        // exactly one vector's width.
+        unsafe {
+            let sv = _mm256_set1_epi64x(scale);
+            let s_hi = _mm256_srli_epi64::<32>(sv);
+            let mut bestv = _mm256_set1_epi64x(i64::MAX);
+            let mut argv = _mm256_setr_epi64x(0, 1, 2, 3);
+            let mut idxv = argv;
+            let four = _mm256_set1_epi64x(4);
+            while base + 4 <= n {
+                let l = _mm256_loadu_si256(left.as_ptr().add(base) as *const __m256i);
+                let r = _mm256_loadu_si256(right.as_ptr().add(base) as *const __m256i);
+                let w = _mm256_loadu_si256(weights.as_ptr().add(base) as *const __m256i);
+                // 64-bit wrapping product scale·w from 32×32→64 pieces:
+                // lo + ((s_hi·w_lo + s_lo·w_hi) << 32), mod 2^64.
+                let lo = _mm256_mul_epu32(sv, w);
+                let w_hi = _mm256_srli_epi64::<32>(w);
+                let cross = _mm256_add_epi64(_mm256_mul_epu32(s_hi, w), _mm256_mul_epu32(sv, w_hi));
+                let prod = _mm256_add_epi64(lo, _mm256_slli_epi64::<32>(cross));
+                let cand = _mm256_add_epi64(_mm256_add_epi64(l, r), prod);
+                // strict improvement only: best > cand
+                let better = _mm256_cmpgt_epi64(bestv, cand);
+                bestv = _mm256_blendv_epi8(bestv, cand, better);
+                argv = _mm256_blendv_epi8(argv, idxv, better);
+                idxv = _mm256_add_epi64(idxv, four);
+                base += 4;
+            }
+            _mm256_storeu_si256(best.as_mut_ptr() as *mut __m256i, bestv);
+            _mm256_storeu_si256(barg.as_mut_ptr() as *mut __m256i, argv);
+        }
+        let mut bv = best[0];
+        let mut ba = barg[0] as u32;
+        for k in 1..4 {
+            let a = barg[k] as u32;
+            if best[k] < bv || (best[k] == bv && a < ba) {
+                bv = best[k];
+                ba = a;
+            }
+        }
+        for j in base..n {
+            let cand = left[j]
+                .wrapping_add(right[j])
+                .wrapping_add(scale.wrapping_mul(weights[j]));
+            if cand < bv {
+                bv = cand;
+                ba = j as u32;
+            }
+        }
+        (bv, ba)
+    }
+
+    /// AVX2 log-space `(max, ×)` first-wins argmax; `has_bias` selects
+    /// the CYK rule form `a + b + bias` (the Viterbi form must not add a
+    /// zero bias — `-0.0 + 0.0` is `+0.0`).
+    ///
+    /// # Safety
+    /// Caller must have verified the `avx2` target feature at runtime
+    /// (`is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_plus_argmax(a: &[f64], b: &[f64], has_bias: bool, bias: f64) -> (f64, u32) {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut base = 0usize;
+        let mut best = [f64::NEG_INFINITY; 4];
+        let mut barg = [0i64; 4];
+        // SAFETY: the function's `avx2` precondition covers every
+        // intrinsic; the unaligned loads read `base..base+4`, in bounds
+        // by the loop condition, and the stores target local arrays of
+        // exactly one vector's width.
+        unsafe {
+            let biasv = _mm256_set1_pd(bias);
+            let mut bestv = _mm256_set1_pd(f64::NEG_INFINITY);
+            let mut argv = _mm256_setr_epi64x(0, 1, 2, 3);
+            let mut idxv = argv;
+            let four = _mm256_set1_epi64x(4);
+            while base + 4 <= n {
+                let av = _mm256_loadu_pd(a.as_ptr().add(base));
+                let bv = _mm256_loadu_pd(b.as_ptr().add(base));
+                let mut cand = _mm256_add_pd(av, bv);
+                if has_bias {
+                    cand = _mm256_add_pd(cand, biasv);
+                }
+                // strict improvement only (ordered, non-signalling):
+                // cand > best
+                let better = _mm256_cmp_pd::<_CMP_GT_OQ>(cand, bestv);
+                bestv = _mm256_blendv_pd(bestv, cand, better);
+                argv = _mm256_blendv_epi8(argv, idxv, _mm256_castpd_si256(better));
+                idxv = _mm256_add_epi64(idxv, four);
+                base += 4;
+            }
+            _mm256_storeu_pd(best.as_mut_ptr(), bestv);
+            _mm256_storeu_si256(barg.as_mut_ptr() as *mut __m256i, argv);
+        }
+        let mut bv = best[0];
+        let mut ba = barg[0] as u32;
+        for k in 1..4 {
+            let idx = barg[k] as u32;
+            if best[k] > bv || (best[k] == bv && idx < ba) {
+                bv = best[k];
+                ba = idx;
+            }
+        }
+        for j in base..n {
+            let cand = if has_bias { a[j] + b[j] + bias } else { a[j] + b[j] };
+            if cand > bv {
+                bv = cand;
+                ba = j as u32;
+            }
+        }
+        (bv, ba)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The sequential oracle the lane kernels must match bit for bit.
+    fn seq_min_plus(left: &[i64], right: &[i64], w: &[i64], scale: i64) -> (i64, u32) {
+        let mut best = i64::MAX;
+        let mut arg = 0u32;
+        for j in 0..left.len() {
+            let cand = left[j]
+                .wrapping_add(right[j])
+                .wrapping_add(scale.wrapping_mul(w[j]));
+            if cand < best {
+                best = cand;
+                arg = j as u32;
+            }
+        }
+        (best, arg)
+    }
+
+    fn seq_max_plus(a: &[f64], b: &[f64], bias: Option<f64>) -> (f64, u32) {
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = 0u32;
+        for j in 0..a.len() {
+            let cand = match bias {
+                Some(p) => a[j] + b[j] + p,
+                None => a[j] + b[j],
+            };
+            if cand > best {
+                best = cand;
+                arg = j as u32;
+            }
+        }
+        (best, arg)
+    }
+
+    #[test]
+    fn min_plus_matches_sequential_scan_at_every_length() {
+        let mut rng = Rng::seeded(0x51);
+        for len in 0..=40usize {
+            for _ in 0..8 {
+                // small value range so ties are common
+                let l: Vec<i64> = (0..len).map(|_| rng.range(0..6)).collect();
+                let r: Vec<i64> = (0..len).map(|_| rng.range(0..6)).collect();
+                let w: Vec<i64> = (0..len).map(|_| rng.range(1..4)).collect();
+                let scale = rng.range(1..5);
+                let want = seq_min_plus(&l, &r, &w, scale);
+                assert_eq!(min_plus_argmin(&l, &r, &w, scale), want, "len={len}");
+                assert_eq!(min_plus_argmin_portable(&l, &r, &w, scale), want, "len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_plus_identity_strip_reduces_to_index_zero() {
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 31] {
+            let l = vec![i64::MAX; len];
+            let r = vec![0i64; len];
+            let w = vec![0i64; len];
+            assert_eq!(min_plus_argmin(&l, &r, &w, 1), (i64::MAX, 0));
+            assert_eq!(min_plus_argmin_portable(&l, &r, &w, 1), (i64::MAX, 0));
+        }
+    }
+
+    #[test]
+    fn max_plus_matches_sequential_scan_including_neg_zero_and_ties() {
+        let mut rng = Rng::seeded(0x52);
+        for len in 0..=40usize {
+            for _ in 0..8 {
+                let a: Vec<f64> = (0..len)
+                    .map(|_| match rng.range(0..5) {
+                        0 => f64::NEG_INFINITY,
+                        1 => -0.0,
+                        2 => 0.0,
+                        v => -(v as f64) / 2.0,
+                    })
+                    .collect();
+                let b: Vec<f64> = (0..len)
+                    .map(|_| match rng.range(0..4) {
+                        0 => f64::NEG_INFINITY,
+                        1 => 0.0,
+                        v => -(v as f64) / 4.0,
+                    })
+                    .collect();
+                let want = seq_max_plus(&a, &b, None);
+                let got = max_plus_argmax(&a, &b);
+                let portable = max_plus_argmax_portable(&a, &b);
+                assert_eq!(got.0.to_bits(), want.0.to_bits(), "len={len}");
+                assert_eq!(got.1, want.1, "len={len}");
+                assert_eq!(portable.0.to_bits(), want.0.to_bits(), "len={len}");
+                assert_eq!(portable.1, want.1, "len={len}");
+
+                let bias = -(rng.range(0..3) as f64) / 2.0;
+                let want = seq_max_plus(&a, &b, Some(bias));
+                let got = max_plus_argmax_bias(&a, &b, bias);
+                let portable = max_plus_argmax_bias_portable(&a, &b, bias);
+                assert_eq!(got.0.to_bits(), want.0.to_bits(), "len={len}");
+                assert_eq!(got.1, want.1, "len={len}");
+                assert_eq!(portable.0.to_bits(), want.0.to_bits(), "len={len}");
+                assert_eq!(portable.1, want.1, "len={len}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_path_matches_portable_when_available() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return; // nothing to compare on this host
+        }
+        let mut rng = Rng::seeded(0x53);
+        for len in 0..=37usize {
+            let l: Vec<i64> = (0..len).map(|_| rng.range(-8..8)).collect();
+            let r: Vec<i64> = (0..len).map(|_| rng.range(-8..8)).collect();
+            let w: Vec<i64> = (0..len).map(|_| rng.range(1..6)).collect();
+            let scale = rng.range(-3..4);
+            // SAFETY: guarded by the `avx2` runtime feature detection at
+            // the top of this test.
+            let got = unsafe { avx2::min_plus_argmin(&l, &r, &w, scale) };
+            assert_eq!(got, min_plus_argmin_portable(&l, &r, &w, scale), "len={len}");
+
+            let a: Vec<f64> = (0..len).map(|_| rng.range(-6..6) as f64 / 2.0).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.range(-6..6) as f64 / 2.0).collect();
+            // SAFETY: guarded by the same `avx2` runtime detection.
+            let got = unsafe { avx2::max_plus_argmax(&a, &b, false, 0.0) };
+            assert_eq!(got, max_plus_argmax_portable(&a, &b), "len={len}");
+            // SAFETY: guarded by the same `avx2` runtime detection.
+            let got = unsafe { avx2::max_plus_argmax(&a, &b, true, -0.5) };
+            assert_eq!(got, max_plus_argmax_bias_portable(&a, &b, -0.5), "len={len}");
+        }
+    }
+
+    #[test]
+    fn env_gate_defaults_on() {
+        // the gate is latched once per process; this only pins the
+        // default-on behavior in a test run without PIPEDP_SIMD set
+        if std::env::var("PIPEDP_SIMD").is_err() {
+            assert!(enabled());
+        } else {
+            let v = std::env::var("PIPEDP_SIMD").unwrap().to_ascii_lowercase();
+            assert_eq!(enabled(), !(v == "off" || v == "0" || v == "false"));
+        }
+    }
+}

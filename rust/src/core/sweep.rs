@@ -167,6 +167,15 @@ pub fn run_pooled_counted<K: SweepKernel>(kernel: &K, pool: &ExecPool, threads: 
         run_fused(kernel);
         return 0;
     }
+    // Degenerate schedule (everything fits one tile ⇒ one superstep):
+    // barrier bookkeeping and worker hand-off cost more than the sweep —
+    // the n=64 regression in BENCH_pipeline.json.  Run fused at zero
+    // rounds; a single superstep has no cross-barrier dependences to
+    // protect.
+    if kernel.num_supersteps() <= 1 {
+        run_fused(kernel);
+        return 0;
+    }
     let barrier = SenseBarrier::new(parties);
     pool.run(parties, |t| {
         let mut waiter = barrier.waiter();
@@ -205,6 +214,10 @@ pub fn run_pooled_cancellable_counted<K: SweepKernel>(
     }
     let parties = clamp_parties(kernel, pool, threads);
     if parties <= 1 {
+        return (run_cancellable(kernel, token), 0);
+    }
+    // single-superstep degenerate path: as in `run_pooled_counted`
+    if kernel.num_supersteps() <= 1 {
         return (run_cancellable(kernel, token), 0);
     }
     let barrier = SenseBarrier::new(parties);

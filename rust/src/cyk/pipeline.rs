@@ -281,6 +281,150 @@ pub fn solve_pooled_cancellable(p: &CykProblem, token: &CancelToken) -> crate::R
     execute_pooled_cancellable(p, &sched, pool, pool.threads(), token)
 }
 
+/// Lane-batched single-threaded parse (ISSUE 9 tentpole, DESIGN.md §12):
+/// dual *per-nonterminal* row-/column-major span tables make each split
+/// scan's left operands (`(i, m)` for `m ∈ [i, j)`) and right operands
+/// (`(m+1, j)`) contiguous, so one
+/// [`crate::core::simd::max_plus_argmax_bias`] call per (cell, rule)
+/// replaces the rule-major scalar scan.  No schedule is compiled or
+/// cached — the span loop *is* the wavefront.
+///
+/// Bit-identity with [`seq::solve_with_splits`] (strict `(split, rule)`
+/// lex first-wins): per rule the batched argmax keeps the lowest split
+/// attaining the rule's max (strict per-lane improvement + lowest-index
+/// horizontal reduction), and the cross-rule merge in ascending rule
+/// order replaces only on a strictly greater value *or* an equal value
+/// at a strictly lower split — so the surviving candidate is exactly
+/// the `(m, ri)`-lex-least maximizer, and its bit pattern (think
+/// `-0.0` vs `+0.0`, which compare equal) is the one the scalar scan
+/// keeps.  `⊕` over `f64` is order-insensitive here because no operand
+/// is NaN (log-probs are finite, tables hold finite values or `−∞`).
+pub fn solve_simd(p: &CykProblem) -> Vec<f64> {
+    // infallible without a token
+    match simd_sweep(p, NoRecord, None) {
+        Ok(st) => st,
+        Err(_) => unreachable!("no token, no cancellation"),
+    }
+}
+
+/// [`solve_simd`] + packed `(split << 16) | rule` recording — bit
+/// identical to the seq oracle's sidecar (see [`solve_simd`] docs).
+pub fn solve_simd_recorded(p: &CykProblem) -> (Vec<f64>, Vec<u32>) {
+    let splits = SplitArena::new(p.num_cells());
+    match simd_sweep(p, &splits, None) {
+        Ok(st) => (st, splits.into_vec()),
+        Err(_) => unreachable!("no token, no cancellation"),
+    }
+}
+
+/// Parse end to end through the lane-batched kernel — the router's
+/// `simd` `want_solution` route.
+pub fn solve_simd_parsed(p: &CykProblem) -> CykSolution {
+    let (st, splits) = solve_simd_recorded(p);
+    cyk_parse(p, &st, &splits)
+}
+
+/// [`solve_simd`] with cooperative cancellation, polling once per
+/// [`crate::runtime::exec_pool::CANCEL_POLL_STRIDE`] span lengths.
+pub fn solve_simd_cancellable(p: &CykProblem, token: &CancelToken) -> crate::Result<Vec<f64>> {
+    if token.is_never() {
+        return Ok(solve_simd(p));
+    }
+    if token.is_cancelled() {
+        return cancelled();
+    }
+    simd_sweep(p, NoRecord, Some(token))
+}
+
+/// The dual-table lane-batched CYK fill shared by the `solve_simd*`
+/// tiers.  `trow[(nt·n + i)·n + j]` and `tcol[(nt·n + j)·n + i]` hold
+/// span `(i, j)`'s slot for nonterminal `nt` in row- and column-major
+/// order; both are written at cell completion so later spans always
+/// find their operands contiguous.  The result is converted to the
+/// canonical linear triangular layout at the end.
+fn simd_sweep<R: SplitRecord>(
+    p: &CykProblem,
+    rec: R,
+    token: Option<&CancelToken>,
+) -> crate::Result<Vec<f64>> {
+    use crate::core::simd;
+    use crate::runtime::exec_pool::CANCEL_POLL_STRIDE;
+
+    let (n, r) = (p.n(), p.num_nonterminals);
+    let mut st = p.initial_table();
+    if n <= 1 || p.binary.is_empty() {
+        return Ok(st);
+    }
+    let stride = n * n;
+    let mut trow = vec![f64::NEG_INFINITY; r * stride];
+    let mut tcol = vec![f64::NEG_INFINITY; r * stride];
+    for i in 0..n {
+        let cell = crate::core::schedule::linear::cell_index(n, i, i) * r;
+        for nt in 0..r {
+            trow[nt * stride + i * n + i] = st[cell + nt];
+            tcol[nt * stride + i * n + i] = st[cell + nt];
+        }
+    }
+    // per-lhs merge state, reset per cell (r is small)
+    let mut best = vec![f64::NEG_INFINITY; r];
+    let mut best_m = vec![0usize; r];
+    let mut has = vec![false; r];
+    for d in 1..n {
+        if let Some(tok) = token {
+            if d % CANCEL_POLL_STRIDE == 0 && tok.is_cancelled() {
+                return cancelled();
+            }
+        }
+        for i in 0..n - d {
+            let j = i + d;
+            for lhs in 0..r {
+                best[lhs] = f64::NEG_INFINITY;
+                has[lhs] = false;
+            }
+            for (ri, rule) in p.binary.iter().enumerate() {
+                let b = rule.rhs_b as usize;
+                let c = rule.rhs_c as usize;
+                let left = &trow[b * stride + i * n + i..b * stride + i * n + j];
+                let right = &tcol[c * stride + j * n + i + 1..c * stride + j * n + j + 1];
+                let (val, arg) = simd::max_plus_argmax_bias(left, right, rule.logp);
+                if val == f64::NEG_INFINITY {
+                    continue; // the scalar scan never improves on −∞
+                }
+                let m = i + arg as usize;
+                let lhs = rule.lhs as usize;
+                if !has[lhs] || val > best[lhs] || (val == best[lhs] && m < best_m[lhs]) {
+                    // keep `val`'s own bit pattern (−0.0 vs +0.0 ties)
+                    best[lhs] = val;
+                    best_m[lhs] = m;
+                    has[lhs] = true;
+                    if R::ACTIVE {
+                        rec.store(
+                            crate::core::schedule::linear::cell_index(n, i, j) * r + lhs,
+                            ((m as u32) << 16) | ri as u32,
+                        );
+                    }
+                }
+            }
+            for lhs in 0..r {
+                if has[lhs] {
+                    trow[lhs * stride + i * n + j] = best[lhs];
+                    tcol[lhs * stride + j * n + i] = best[lhs];
+                }
+            }
+        }
+    }
+    for d in 1..n {
+        for i in 0..n - d {
+            let j = i + d;
+            let cell = crate::core::schedule::linear::cell_index(n, i, j) * r;
+            for nt in 0..r {
+                st[cell + nt] = trow[nt * stride + i * n + j];
+            }
+        }
+    }
+    Ok(st)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,6 +452,42 @@ mod tests {
                 if pooled != want_st || pst != want_st || psp != want_sp {
                     return Err(format!("pooled(t={threads},T={tile}) diverged: {p:?}"));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_matches_seq_oracle_bit_for_bit_including_splits() {
+        // ISSUE 9 satellite (c): the lane-batched dual-table kernel must
+        // reproduce the scalar `(split, rule)` lex tie-break exactly —
+        // scores AND the packed sidecar, across non-multiple-of-LANES
+        // span counts and rule sets
+        forall("cyk simd == seq", 30, |g| {
+            let p = CykProblem::random(g.rng(), 1..20, 5, 4);
+            let (want_st, want_sp) = seq::solve_with_splits(&p);
+            if solve_simd(&p) != want_st {
+                return Err(format!("simd table diverged: {p:?}"));
+            }
+            let (st, sp) = solve_simd_recorded(&p);
+            if st != want_st || sp != want_sp {
+                return Err(format!("simd recorded diverged: {p:?}"));
+            }
+            if solve_simd_parsed(&p) != seq::parse(&p) {
+                return Err(format!("simd parse diverged: {p:?}"));
+            }
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            if solve_simd_cancellable(&p, &CancelToken::never()).unwrap() != want_st
+                || solve_simd_cancellable(&p, &live).unwrap() != want_st
+            {
+                return Err(format!("simd cancellable diverged: {p:?}"));
+            }
+            let expired = CancelToken::at(std::time::Instant::now());
+            if !matches!(
+                solve_simd_cancellable(&p, &expired),
+                Err(crate::Error::Timeout(_))
+            ) {
+                return Err("expired token must cancel the simd sweep".into());
             }
             Ok(())
         });

@@ -79,7 +79,7 @@ const USAGE: &str = "pipedp <subcommand> [flags]
   simulate    [--samples S]
   serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E] [--max-solve-bytes B]
   client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution] [--deadline-ms D] [--retries R]
-  bench-check --baseline BENCH_x.json --current BENCH_x.json [--tolerance 0.30] [--relative-to seq]
+  bench-check --baseline BENCH_x.json --current BENCH_x.json [--tolerance 0.30] [--relative-to seq] [--min-speedup seq]
   info";
 
 fn parse_backend(args: &Args) -> Result<Backend> {
@@ -697,6 +697,11 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
 /// * when the two records report different `threads`, the pooled
 ///   `threaded` column is skipped — its ratio to seq legitimately scales
 ///   with the pool width.
+///
+/// `--min-speedup seq` adds a capability wall on top of the regression
+/// gate: any *current* row at n ≥ 256 whose `policy` winner is the named
+/// column fails the check (the accelerated executors must beat the
+/// sequential baseline at every serving size — ISSUE 9).
 fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
     let args = Args::new("bench-check", "bench-regression gate for BENCH_*.json records")
         .flag("baseline", "committed baseline JSON", None)
@@ -709,6 +714,11 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
         .flag(
             "relative-to",
             "gate each field's ratio to this column (machine-portable)",
+            None,
+        )
+        .flag(
+            "min-speedup",
+            "fail if any current row at n >= 256 crowns this policy winner",
             None,
         )
         .parse(argv)?;
@@ -827,6 +837,34 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
                 .into(),
         ));
     }
+    // --min-speedup seq (ISSUE 9 satellite b): at serving sizes
+    // (n ≥ 256) the measured policy winner must not be the named
+    // column — a `seq` crown there means the accelerated executors
+    // lost to the sequential baseline on this machine, which is a
+    // capability regression even when every ratio is within tolerance
+    if let Some(slow) = args.get("min-speedup") {
+        let mut sets: Vec<&[Json]> = vec![current.arr_field("results")?];
+        if let Ok(lr) = current.arr_field("log_results") {
+            sets.push(lr);
+        }
+        for row in sets.into_iter().flatten() {
+            let n = row.i64_field("n").unwrap_or(0);
+            if n < 256 {
+                continue;
+            }
+            if row.get("policy").and_then(|v| v.as_str()) == Some(slow) {
+                let tag = row
+                    .get("kind")
+                    .and_then(|v| v.as_str())
+                    .map(|k| format!("{k} "))
+                    .unwrap_or_default();
+                failures.push(format!(
+                    "{tag}n={n}: policy winner is '{slow}' at a serving size \
+                     (--min-speedup requires a faster executor for n >= 256)"
+                ));
+            }
+        }
+    }
     if failures.is_empty() {
         println!(
             "bench-check: OK — {compared} measurements within {:.0}% of baseline",
@@ -838,7 +876,7 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
             eprintln!("bench-check: REGRESSION {f}");
         }
         Err(pipedp::Error::InvalidProblem(format!(
-            "{} of {compared} measurements regressed beyond {:.0}%",
+            "{} checks failed across {compared} compared measurements (tolerance {:.0}%)",
             failures.len(),
             tolerance * 100.0
         )))

@@ -35,8 +35,11 @@ use std::sync::Barrier;
 use crate::core::cache;
 
 use crate::core::problem::McmProblem;
-use crate::core::schedule::{default_mcm_tile, linear, McmSchedule, McmVariant};
+use crate::core::schedule::{
+    default_mcm_block, default_mcm_tile, linear, McmBlockedSchedule, McmSchedule, McmVariant,
+};
 use crate::core::semiring::{MinPlus, Semiring};
+use crate::core::simd;
 use crate::core::sweep::{self, SharedSlice, SweepKernel};
 use crate::core::traceback::{NoRecord, SplitArena, SplitRecord};
 use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool, CANCEL_POLL_STRIDE};
@@ -614,29 +617,34 @@ pub fn execute_pooled_recorded(
 
 /// Convenience: recorded solve on the process-wide pool with the cached
 /// default-tiled schedule — the router's `pooled` traceback route.
+/// Since DESIGN.md §12 this serves the cache-blocked order
+/// ([`execute_blocked_pooled_recorded`]).
 pub fn solve_pooled_recorded(p: &McmProblem) -> (Vec<i64>, Vec<u32>) {
     let n = p.n().max(1);
-    let sched = cache::mcm_schedule_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
+    let sched = cache::mcm_blocked_schedule(n, default_mcm_tile(n), default_mcm_block());
     let pool = crate::runtime::exec_pool::global();
-    execute_pooled_recorded(p, &sched, pool, pool.threads())
+    execute_blocked_pooled_recorded(p, &sched, pool, pool.threads())
 }
 
 /// Convenience: corrected solve on the process-wide pool with the cached
-/// default-tiled schedule — the adaptive policy's `pooled` route.
+/// default-tiled schedule — the adaptive policy's `pooled` route.  Since
+/// DESIGN.md §12 this serves the cache-blocked order
+/// ([`execute_blocked_pooled`]).
 pub fn solve_pooled(p: &McmProblem) -> Vec<i64> {
     let n = p.n().max(1);
-    let sched = cache::mcm_schedule_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
+    let sched = cache::mcm_blocked_schedule(n, default_mcm_tile(n), default_mcm_block());
     let pool = crate::runtime::exec_pool::global();
-    execute_pooled(p, &sched, pool, pool.threads())
+    execute_blocked_pooled(p, &sched, pool, pool.threads())
 }
 
 /// Convenience: cancellable corrected solve on the process-wide pool —
-/// the router's deadline-carrying `pooled` route.
+/// the router's deadline-carrying `pooled` route, over the cache-blocked
+/// order since DESIGN.md §12.
 pub fn solve_pooled_cancellable(p: &McmProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
     let n = p.n().max(1);
-    let sched = cache::mcm_schedule_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
+    let sched = cache::mcm_blocked_schedule(n, default_mcm_tile(n), default_mcm_block());
     let pool = crate::runtime::exec_pool::global();
-    execute_pooled_cancellable(p, &sched, pool, pool.threads(), token)
+    execute_blocked_pooled_cancellable(p, &sched, pool, pool.threads(), token)
 }
 
 /// Convenience: cancellable solve over the cached `(n, variant)` schedule
@@ -648,6 +656,286 @@ pub fn solve_cancellable(
 ) -> crate::Result<Vec<i64>> {
     let sched = cache::mcm_schedule(p.n().max(1), variant);
     execute_cancellable(p, &sched, token)
+}
+
+/// Vectorized schedule-free solve (DESIGN.md §12) — the adaptive
+/// policy's `simd` route.
+///
+/// Keeps the cost table twice, row-major *and* column-major, so both
+/// operand strips of every cell `(r, c)` are contiguous slices: the left
+/// operands `ST[r][r..c]` live in one row, the right operands
+/// `ST[r+1..c+1][c]` in one column, and the per-split weights
+/// `dims[r+1..=c]` are already contiguous.  Each cell is then a single
+/// call to the lane-batched first-wins argmin of [`crate::core::simd`]
+/// with `scale = dims[r]·dims[c+1]` hoisted out of the strip — the same
+/// wrapping `(min, +)` arithmetic as [`McmKernel::term`], so the result
+/// (and the recorded split sidecar) is bit-identical to
+/// [`crate::mcm::seq::linear_table_with_splits`].  The duplicated table
+/// costs `2n²` words — nothing next to the `n³/6`-term arena the
+/// schedule executors stream, which is why this path also wins on
+/// memory traffic.
+pub fn solve_simd(p: &McmProblem) -> Vec<i64> {
+    simd_sweep(p, NoRecord, None).expect("no token ⇒ no cancellation")
+}
+
+/// [`solve_simd`] + the lowest-argmin split sidecar (DESIGN.md §8) — the
+/// `simd` route's `want_solution` twin.
+pub fn solve_simd_recorded(p: &McmProblem) -> (Vec<i64>, Vec<u32>) {
+    let splits = SplitArena::new(linear::num_cells(p.n()));
+    let st = simd_sweep(p, &splits, None).expect("no token ⇒ no cancellation");
+    (st, splits.into_vec())
+}
+
+/// [`solve_simd`] with cooperative cancellation: polls the token every
+/// [`CANCEL_POLL_STRIDE`] diagonals (the natural superstep boundary of
+/// the dual-table sweep).  A never-token short-circuits to the unpolled
+/// fast path.
+pub fn solve_simd_cancellable(p: &McmProblem, token: &CancelToken) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(solve_simd(p));
+    }
+    token.check()?;
+    simd_sweep(p, NoRecord, Some(token))
+}
+
+/// The dual-table diagonal sweep behind the `solve_simd` family.
+fn simd_sweep<R: SplitRecord>(
+    p: &McmProblem,
+    rec: R,
+    token: Option<&CancelToken>,
+) -> crate::Result<Vec<i64>> {
+    let n = p.n();
+    let dims = &p.dims;
+    // trow[r*n + c] = tcol[c*n + r] = ST[(r, c)]; diagonal cells are 0
+    let mut trow = vec![0i64; n * n];
+    let mut tcol = vec![0i64; n * n];
+    for d in 1..n {
+        if let Some(tok) = token {
+            if d % CANCEL_POLL_STRIDE == 0 && tok.is_cancelled() {
+                return cancelled();
+            }
+        }
+        for r in 0..(n - d) {
+            let c = r + d;
+            let left = &trow[r * n + r..r * n + c];
+            let right = &tcol[c * n + r + 1..c * n + c + 1];
+            let weights = &dims[r + 1..=c];
+            let scale = dims[r] * dims[c + 1];
+            let (best, arg) = simd::min_plus_argmin(left, right, weights, scale);
+            trow[r * n + c] = best;
+            tcol[c * n + r] = best;
+            if R::ACTIVE {
+                // first-wins argmin ⇒ lowest optimal split m = r + arg,
+                // the sequential oracle's tie-break
+                rec.store(linear::cell_index(n, r, c), r as u32 + arg);
+            }
+        }
+    }
+    let mut st = vec![0i64; linear::num_cells(n)];
+    for r in 0..n {
+        for c in r..n {
+            st[linear::cell_index(n, r, c)] = trow[r * n + c];
+        }
+    }
+    Ok(st)
+}
+
+/// Gather-buffer width of the blocked pooled executor: one stack-resident
+/// strip of operand pairs per [`simd::min_plus_argmin`] call.
+const BLOCK_GATHER: usize = 64;
+
+/// The cache-blocked pooled kernel (DESIGN.md §12): sweeps an
+/// [`McmBlockedSchedule`] — the corrected tiled arena regrouped into
+/// per-cell candidate *runs* chopped into L1-sized blocks — with work
+/// assigned by block (`block % parties`).  Each run is one contiguous
+/// `(l, r, pb)` strip, gathered into stack buffers and reduced by the
+/// lane-batched first-wins argmin, then ⊕-combined (or recorded) into
+/// the target cell exactly like [`McmKernel::term`]'s per-term loop:
+/// within a run the batched argmin keeps the lowest split; across runs
+/// (always in ascending-`j` superstep order) strict improvement keeps
+/// the earliest — so scores *and* sidecars stay bit-identical to the
+/// sequential oracle.
+struct McmBlockedKernel<'a, R: SplitRecord> {
+    dims: &'a [i64],
+    n: usize,
+    sched: &'a McmBlockedSchedule,
+    st: SharedSlice<i64>,
+    rec: R,
+}
+
+impl<'a, R: SplitRecord> McmBlockedKernel<'a, R> {
+    fn new(p: &'a McmProblem, sched: &'a McmBlockedSchedule, st: &mut [i64], rec: R) -> Self {
+        assert_eq!(p.n(), sched.n, "schedule/problem size mismatch");
+        debug_assert_eq!(st.len(), linear::num_cells(sched.n));
+        McmBlockedKernel {
+            dims: &p.dims,
+            n: sched.n,
+            sched,
+            st: SharedSlice::new(st.as_mut_ptr()),
+            rec,
+        }
+    }
+
+    /// One run: gather both operand strips, lane-reduce, combine into the
+    /// target cell.
+    ///
+    /// # Safety
+    /// `run < num_runs()`; the caller holds the sweep discipline — every
+    /// operand of the run finalized in an earlier superstep (the blocked
+    /// order only permutes *within* supersteps of a fusion-proof base
+    /// schedule) and the target cell has exactly one run per superstep,
+    /// owned by this party.
+    unsafe fn run(&self, run: usize) {
+        let sched = self.sched;
+        let lo = sched.run_offsets[run] as usize;
+        let hi = sched.run_offsets[run + 1] as usize;
+        let tgt = sched.run_tgt[run] as usize;
+        let pb0 = sched.run_pb0[run] as usize;
+        let (ra, rc) = linear::cell_coords(self.n, tgt);
+        let scale = self.dims[ra] * self.dims[rc + 1];
+        let mut bv = i64::MAX;
+        let mut ba = 0u32;
+        let mut lbuf = [0i64; BLOCK_GATHER];
+        let mut rbuf = [0i64; BLOCK_GATHER];
+        let mut off = 0usize;
+        while off < hi - lo {
+            let len = (hi - lo - off).min(BLOCK_GATHER);
+            for k in 0..len {
+                // SAFETY: race-free by the caller's contract — both
+                // operand cells finalized behind an earlier barrier.
+                unsafe {
+                    lbuf[k] = self.st.read(sched.l[lo + off + k] as usize);
+                    rbuf[k] = self.st.read(sched.r[lo + off + k] as usize);
+                }
+            }
+            let w = &self.dims[pb0 + off..pb0 + off + len];
+            let (v, a) = simd::min_plus_argmin(&lbuf[..len], &rbuf[..len], w, scale);
+            // strict improvement across chunks keeps the earliest split
+            if v < bv {
+                bv = v;
+                ba = off as u32 + a;
+            }
+            off += len;
+        }
+        // SAFETY: the target cell is owned by this party this superstep
+        // (one run per cell per superstep, blocks party-owned).
+        unsafe {
+            if R::ACTIVE {
+                if sched.run_term0[run] == 1 || bv < self.st.read(tgt) {
+                    self.st.write(tgt, bv);
+                    self.rec.store(tgt, pb0 as u32 + ba - 1);
+                }
+            } else {
+                let newv = if sched.run_term0[run] == 1 {
+                    bv
+                } else {
+                    self.st.read(tgt).min(bv)
+                };
+                self.st.write(tgt, newv);
+            }
+        }
+    }
+}
+
+impl<R: SplitRecord> SweepKernel for McmBlockedKernel<'_, R> {
+    fn num_supersteps(&self) -> usize {
+        self.sched.num_supersteps()
+    }
+
+    fn max_parties(&self) -> usize {
+        self.sched.max_blocks_per_superstep().max(1)
+    }
+
+    unsafe fn superstep_party(&self, g: usize, party: usize, parties: usize) {
+        for b in self.sched.superstep_blocks(g) {
+            if b % parties != party {
+                continue;
+            }
+            for run in self.sched.block_runs(b) {
+                // SAFETY: block ownership keeps every cell's run (table
+                // write + sidecar store) on one party; operands
+                // finalized behind the previous barrier.
+                unsafe { self.run(run) };
+            }
+        }
+    }
+
+    unsafe fn sweep_serial(&self) {
+        for run in 0..self.sched.num_runs() {
+            // SAFETY: run < num_runs; serial discipline.
+            unsafe { self.run(run) };
+        }
+    }
+}
+
+/// Pooled executor over the cache-blocked order (DESIGN.md §12): pooled
+/// lanes sweep contiguous L1-sized blocks of per-cell runs instead of
+/// striding the raw arena — same barrier structure as
+/// [`execute_pooled`], vectorized combine, certified through
+/// [`crate::core::certify::lower_mcm_blocked`].
+pub fn execute_blocked_pooled(
+    p: &McmProblem,
+    sched: &McmBlockedSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> Vec<i64> {
+    execute_blocked_pooled_counted(p, sched, pool, threads).0
+}
+
+/// [`execute_blocked_pooled`] + the number of barrier rounds it cost.
+pub fn execute_blocked_pooled_counted(
+    p: &McmProblem,
+    sched: &McmBlockedSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<i64>, u64) {
+    let mut st = vec![0i64; linear::num_cells(p.n())];
+    let rounds = sweep::run_pooled_counted(
+        &McmBlockedKernel::new(p, sched, &mut st, NoRecord),
+        pool,
+        threads,
+    );
+    (st, rounds)
+}
+
+/// [`execute_blocked_pooled`] + traceback recording: block ownership
+/// keeps every sidecar slot single-writer per superstep (DESIGN.md §8).
+pub fn execute_blocked_pooled_recorded(
+    p: &McmProblem,
+    sched: &McmBlockedSchedule,
+    pool: &ExecPool,
+    threads: usize,
+) -> (Vec<i64>, Vec<u32>) {
+    let ncells = linear::num_cells(p.n());
+    let mut st = vec![0i64; ncells];
+    let splits = SplitArena::new(ncells);
+    sweep::run_pooled_counted(&McmBlockedKernel::new(p, sched, &mut st, &splits), pool, threads);
+    (st, splits.into_vec())
+}
+
+/// [`execute_blocked_pooled`] with cooperative cancellation via the
+/// superstep cut protocol (see [`execute_pooled_cancellable`]).
+pub fn execute_blocked_pooled_cancellable(
+    p: &McmProblem,
+    sched: &McmBlockedSchedule,
+    pool: &ExecPool,
+    threads: usize,
+    token: &CancelToken,
+) -> crate::Result<Vec<i64>> {
+    if token.is_never() {
+        return Ok(execute_blocked_pooled(p, sched, pool, threads));
+    }
+    if token.is_cancelled() {
+        return cancelled();
+    }
+    let mut st = vec![0i64; linear::num_cells(p.n())];
+    let (r, _rounds) = sweep::run_pooled_cancellable_counted(
+        &McmBlockedKernel::new(p, sched, &mut st, NoRecord),
+        pool,
+        threads,
+        token,
+    );
+    r.map(|()| st)
 }
 
 /// Execution trace of the first `max_steps` steps (regenerates Fig. 7's
@@ -701,6 +989,75 @@ mod tests {
                 Err(format!("{:?}", p.dims))
             }
         });
+    }
+
+    #[test]
+    fn simd_matches_oracle_bit_for_bit_including_splits() {
+        forall("mcm simd == seq (+splits)", 60, |g| {
+            let n = g.usize(1..26);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let (want, want_splits) = seq::linear_table_with_splits(&p);
+            if solve_simd(&p) != want {
+                return Err(format!("table: {:?}", p.dims));
+            }
+            let (st, splits) = solve_simd_recorded(&p);
+            if st != want || splits != want_splits {
+                return Err(format!("recorded: {:?}", p.dims));
+            }
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            if solve_simd_cancellable(&p, &CancelToken::never()).unwrap() != want
+                || solve_simd_cancellable(&p, &live).unwrap() != want
+            {
+                return Err(format!("cancellable: {:?}", p.dims));
+            }
+            Ok(())
+        });
+        // an expired token cancels before sweeping
+        let p = McmProblem::clrs();
+        let expired = CancelToken::at(std::time::Instant::now());
+        assert!(matches!(
+            solve_simd_cancellable(&p, &expired),
+            Err(crate::Error::Timeout(_))
+        ));
+    }
+
+    #[test]
+    fn blocked_pooled_matches_oracle_across_threads_and_block_sizes() {
+        let pool = ExecPool::new(8);
+        forall("mcm blocked pooled == seq (+splits)", 25, |g| {
+            let n = g.usize(2..24);
+            let p = McmProblem::new(g.dims(n, 25)).unwrap();
+            let threads = *g.choose(&[1usize, 2, 8]);
+            let tile = *g.choose(&[1usize, 4, 64]);
+            let block = *g.choose(&[1usize, 7, 4096]);
+            let (want, want_splits) = seq::linear_table_with_splits(&p);
+            let sched = McmBlockedSchedule::compile(n, tile, block);
+            if execute_blocked_pooled(&p, &sched, &pool, threads) != want {
+                return Err(format!(
+                    "n={n} threads={threads} tile={tile} block={block}: table"
+                ));
+            }
+            let (st, splits) = execute_blocked_pooled_recorded(&p, &sched, &pool, threads);
+            if st != want || splits != want_splits {
+                return Err(format!(
+                    "n={n} threads={threads} tile={tile} block={block}: splits"
+                ));
+            }
+            let live = CancelToken::after(std::time::Duration::from_secs(600));
+            match execute_blocked_pooled_cancellable(&p, &sched, &pool, threads, &live) {
+                Ok(st) if st == want => Ok(()),
+                other => Err(format!("n={n} cancellable: {other:?}")),
+            }
+        });
+        // the default pooled routes serve the blocked order
+        let p = McmProblem::clrs();
+        let (want, want_splits) = seq::linear_table_with_splits(&p);
+        assert_eq!(solve_pooled(&p), want);
+        assert_eq!(solve_pooled_recorded(&p), (want.clone(), want_splits));
+        assert_eq!(
+            solve_pooled_cancellable(&p, &CancelToken::never()).unwrap(),
+            want
+        );
     }
 
     #[test]

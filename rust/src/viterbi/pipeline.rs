@@ -14,6 +14,7 @@
 
 use crate::core::problem::ViterbiProblem;
 use crate::core::semiring::{LogMaxProb, Semiring};
+use crate::core::simd;
 use crate::core::sweep::{self, SharedSlice, SweepKernel};
 use crate::core::traceback::{viterbi_path, NoRecord, SplitArena, SplitRecord, ViterbiSolution};
 use crate::runtime::exec_pool::{cancelled, CancelToken, ExecPool};
@@ -121,6 +122,67 @@ pub fn execute_recorded(p: &ViterbiProblem) -> (Vec<f64>, Vec<u32>) {
     let bp = SplitArena::new(st.len());
     sweep::run_fused(&ViterbiKernel::new(p, &mut st, &bp));
     (st, bp.into_vec())
+}
+
+/// Column-batched vectorized decode (DESIGN.md §12) — the adaptive
+/// policy's `simd` route.
+///
+/// The scalar kernel scans `trans[q·S + j]` with stride `S` per cell.
+/// This path transposes the transition matrix once per solve
+/// (`trans_t[j·S + q]`), making every cell one lane-batched `(max, +)`
+/// argmax over two contiguous strips — the previous column and state
+/// `j`'s incoming log-probabilities — via
+/// [`crate::core::simd::max_plus_argmax`], whose strict-improvement
+/// first-wins reduction is the same pinned lowest-predecessor tie-break
+/// as [`ViterbiKernel::cell`].  The emission `⊗`-extend is applied
+/// after the reduction, exactly as in the scalar kernel, so lattices
+/// and backpointer sidecars stay bit-identical (including `-0.0` and
+/// `-inf` propagation) to [`crate::viterbi::seq::solve_with_backpointers`].
+pub fn execute_simd(p: &ViterbiProblem) -> Vec<f64> {
+    let mut st = p.initial_table();
+    simd_fill(p, &mut st, NoRecord);
+    st
+}
+
+/// [`execute_simd`] + backpointer recording (DESIGN.md §8).
+pub fn execute_simd_recorded(p: &ViterbiProblem) -> (Vec<f64>, Vec<u32>) {
+    let mut st = p.initial_table();
+    let bp = SplitArena::new(st.len());
+    simd_fill(p, &mut st, &bp);
+    (st, bp.into_vec())
+}
+
+/// Decode end to end over the vectorized column kernel — the router's
+/// `simd` `want_solution` route.
+pub fn solve_simd_decoded(p: &ViterbiProblem) -> ViterbiSolution {
+    let (st, bp) = execute_simd_recorded(p);
+    viterbi_path(p.num_states, &st, &bp)
+}
+
+/// The transposed column sweep behind the `execute_simd` family.
+fn simd_fill<R: SplitRecord>(p: &ViterbiProblem, st: &mut [f64], rec: R) {
+    let (s, m) = (p.num_states, p.num_symbols);
+    if p.obs.len() <= 1 {
+        return;
+    }
+    // transpose once: state j's predecessors become one contiguous strip
+    let mut trans_t = vec![0f64; s * s];
+    for q in 0..s {
+        for j in 0..s {
+            trans_t[j * s + q] = p.trans[q * s + j];
+        }
+    }
+    for t in 1..p.obs.len() {
+        let (done, cur) = st.split_at_mut(t * s);
+        let prev = &done[(t - 1) * s..];
+        for (j, cell) in cur[..s].iter_mut().enumerate() {
+            let (best, arg) = simd::max_plus_argmax(prev, &trans_t[j * s..(j + 1) * s]);
+            *cell = best + p.emit[j * m + p.obs[t]];
+            if R::ACTIVE {
+                rec.store(t * s + j, arg);
+            }
+        }
+    }
 }
 
 /// [`execute`] with cooperative cancellation: polls the [`CancelToken`]
@@ -247,6 +309,27 @@ mod tests {
                 if pooled != want_st || pst != want_st || pbp != want_bp {
                     return Err(format!("pooled({threads}) diverged: {p:?}"));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_column_kernel_bit_identical_to_seq_oracle() {
+        forall("viterbi simd == seq (+backpointers)", 40, |g| {
+            // S spans 1..14: below, at, and across lane-width boundaries
+            let p = ViterbiProblem::random(g.rng(), 1..20, 13, 5);
+            let (want_st, want_bp) = seq::solve_with_backpointers(&p);
+            let st = execute_simd(&p);
+            let (rst, rbp) = execute_simd_recorded(&p);
+            // bit-identity, not approximate equality: compare the raw bits
+            // so -0.0 vs +0.0 and NaN-free -inf propagation are pinned
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            if bits(&st) != bits(&want_st) || bits(&rst) != bits(&want_st) || rbp != want_bp {
+                return Err(format!("simd diverged: {p:?}"));
+            }
+            if solve_simd_decoded(&p) != seq::decode(&p) {
+                return Err(format!("simd decode diverged: {p:?}"));
             }
             Ok(())
         });

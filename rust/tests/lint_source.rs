@@ -1,21 +1,30 @@
 //! Concurrency-audit source lint (DESIGN.md §10): a zero-dependency walk
 //! over `rust/src` enforcing the audit discipline the CI wall assumes.
 //!
-//! Three rules:
+//! Four rules:
 //!
 //! 1. **Every `unsafe` is justified.** Each `unsafe {` / `unsafe fn` /
 //!    `unsafe impl` must be immediately preceded (through comments,
 //!    attributes and blank lines only) by a comment mentioning SAFETY —
 //!    a `// SAFETY:` block comment or a `/// # Safety` doc section.
+//!    This covers the `std::arch` intrinsic bodies too: a
+//!    `#[target_feature]` fn is an `unsafe fn` and its inner block both
+//!    carry the obligation.
 //! 2. **Relaxed atomics only in audited modules.** `Ordering::Relaxed`
 //!    is correct for the monotone counters and snapshot gauges this
 //!    codebase uses it for, but each new use needs an audit: any file
 //!    outside [`RELAXED_AUDITED`] using it fails here until reviewed
 //!    (and listed).
-//! 3. **No unchecked indexing outside the MCM hot loop.**
-//!    `get_unchecked` is a measured win only in the fused MCM sweep
-//!    ([`mcm/pipeline.rs`]); everywhere else bounds checks are free
-//!    enough and the lint keeps them.
+//! 3. **No unchecked indexing outside the audited hot loops.**
+//!    `get_unchecked` is a measured win only in the fused family sweeps
+//!    listed in [`UNCHECKED_AUDITED`]; everywhere else bounds checks are
+//!    free enough and the lint keeps them.
+//! 4. **`std::arch` intrinsics only in the SIMD module.** Feature
+//!    detection, `#[target_feature]` and raw intrinsics live behind the
+//!    [`core/simd.rs`] dispatchers ([`ARCH_AUDITED`]) — executors call
+//!    the safe lane-batched primitives, never intrinsics directly, so
+//!    the runtime-detection + scalar-fallback contract (`PIPEDP_SIMD`)
+//!    cannot be bypassed.
 //!
 //! The lint is deliberately textual (no syn, no proc-macros — the image
 //! vendors no crates): it strips line comments, token-matches, and walks
@@ -50,9 +59,24 @@ const RELAXED_AUDITED: &[&str] = &[
     "sdp/pipeline.rs",
 ];
 
-/// Files allowed to use `get_unchecked` (the fused MCM arena sweep,
-/// where the bounds check is a measured ~15% of the inner loop).
-const UNCHECKED_AUDITED: &[&str] = &["mcm/pipeline.rs"];
+/// Files allowed to use `get_unchecked` (the fused family sweeps, where
+/// the bounds check is a measured cost of the inner loop — ~15% for the
+/// MCM arena sweep; each listed file's uses sit behind index arguments
+/// the schedule certifier or the sweep's own loop bounds prove in-range).
+const UNCHECKED_AUDITED: &[&str] = &[
+    "align/wavefront.rs",
+    "cyk/pipeline.rs",
+    "mcm/pipeline.rs",
+    "sdp/pipeline.rs",
+    "viterbi/pipeline.rs",
+];
+
+/// Files allowed to touch `std::arch`: feature detection,
+/// `#[target_feature]` functions and raw SIMD intrinsics.  Everything
+/// else goes through the safe dispatchers in `core/simd.rs`, which pair
+/// every intrinsic path with runtime AVX2 detection and a bit-identical
+/// portable fallback (`PIPEDP_SIMD=off`).
+const ARCH_AUDITED: &[&str] = &["core/simd.rs"];
 
 fn src_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
@@ -238,5 +262,94 @@ fn unchecked_indexing_only_in_audited_hot_loops() {
         "unchecked indexing is only justified where the bounds check is a \
          measured cost:\n{}",
         violations.join("\n")
+    );
+}
+
+#[test]
+fn unchecked_allowlist_carries_no_dead_entries() {
+    // same accuracy rule as the Relaxed allowlist: a file that stops
+    // using get_unchecked must leave UNCHECKED_AUDITED
+    let root = src_root();
+    let mut stale = Vec::new();
+    for rel in UNCHECKED_AUDITED {
+        let path = root.join(rel);
+        let uses = fs::read_to_string(&path)
+            .map(|t| t.lines().any(|l| code_part(l).contains("get_unchecked")))
+            .unwrap_or(false);
+        if !uses {
+            stale.push(*rel);
+        }
+    }
+    assert!(
+        stale.is_empty(),
+        "allowlisted files no longer use get_unchecked — drop them: {stale:?}"
+    );
+}
+
+/// Tokens that mark direct `std::arch` use: the module path itself,
+/// feature-gated function definitions, runtime detection, and the x86
+/// intrinsic naming prefix.
+const ARCH_TOKENS: &[&str] = &[
+    "std::arch",
+    "core::arch",
+    "target_feature",
+    "is_x86_feature_detected",
+    "_mm256_",
+    "_mm_",
+];
+
+#[test]
+fn arch_intrinsics_only_in_audited_simd_module() {
+    let root = src_root();
+    let mut files = Vec::new();
+    rust_files(&root, &mut files);
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if ARCH_AUDITED.contains(&rel.as_str()) {
+            continue;
+        }
+        let text = fs::read_to_string(path).expect("readable source file");
+        for (i, line) in text.lines().enumerate() {
+            let code = code_part(line);
+            if let Some(tok) = ARCH_TOKENS.iter().find(|t| code.contains(*t)) {
+                violations.push(format!(
+                    "{rel}:{}: `{tok}` outside the audited SIMD module",
+                    i + 1
+                ));
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "std::arch intrinsics stay behind the core/simd.rs dispatchers \
+         (runtime detection + portable fallback):\n{}",
+        violations.join("\n")
+    );
+}
+
+#[test]
+fn arch_allowlist_carries_no_dead_entries() {
+    let root = src_root();
+    let mut stale = Vec::new();
+    for rel in ARCH_AUDITED {
+        let path = root.join(rel);
+        let uses = fs::read_to_string(&path)
+            .map(|t| {
+                t.lines()
+                    .any(|l| ARCH_TOKENS.iter().any(|tok| code_part(l).contains(tok)))
+            })
+            .unwrap_or(false);
+        if !uses {
+            stale.push(*rel);
+        }
+    }
+    assert!(
+        stale.is_empty(),
+        "allowlisted files no longer touch std::arch — drop them: {stale:?}"
     );
 }

@@ -1,0 +1,238 @@
+//! SIMD/scalar parity wall (ISSUE 9 satellite): the lane-batched kernels
+//! must be **bit-identical** to the scalar oracles — scores, traceback
+//! sidecars and tie-breaks — on every size, including lengths that are
+//! not a multiple of the lane width, and regardless of which dispatch
+//! path (`std::arch` fast path or portable fallback) actually ran.
+//!
+//! Four layers:
+//!
+//! * primitive parity — the dispatched `core/simd.rs` reductions vs
+//!   their `_portable` twins, on adversarial lengths around `LANES`
+//!   boundaries and with structural `−∞` operands;
+//! * executor parity — each family's `solve_simd*` vs the sequential
+//!   oracle (table + sidecar) *and* vs the pooled executor at thread
+//!   counts {1, 2, 8}, so scalar, threaded and vectorized routes all
+//!   pin the same bits;
+//! * tie-break parity — implied by the sidecar comparisons: the first-
+//!   wins argmin/argmax rule is part of the recorded bytes;
+//! * the `PIPEDP_SIMD` contract — `enabled()` honors the env (the CI
+//!   `scalar-fallback` job re-runs this whole suite with
+//!   `PIPEDP_SIMD=off`, driving every executor through the portable
+//!   path; the golden replay suite runs there too, unchanged).
+
+use pipedp::core::problem::{AlignProblem, AlignVariant, CykProblem, McmProblem, ViterbiProblem};
+use pipedp::core::schedule::{
+    default_align_tile, default_mcm_tile, AlignSchedule, McmSchedule, McmVariant,
+};
+use pipedp::core::simd::{self, LANES};
+use pipedp::prop::{forall, Gen};
+use pipedp::runtime::exec_pool::ExecPool;
+
+/// Pool widths the executor-parity layer sweeps: serial, the smallest
+/// genuinely concurrent pool, and a wider-than-core oversubscribed one.
+const THREADS: &[usize] = &[1, 2, 8];
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Log-probability-shaped operands: finite ≤ 0 values (including the
+/// occasional `-0.0`, whose bit pattern the kernels must preserve) with
+/// structural `−∞` holes, like [`ViterbiProblem::random`] produces.
+fn logprobs(g: &mut Gen, len: usize) -> Vec<f64> {
+    (0..len)
+        .map(|_| {
+            if g.usize(0..8) == 0 {
+                f64::NEG_INFINITY
+            } else {
+                -g.f64() * 20.0
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn dispatched_primitives_match_portable_bit_for_bit() {
+    // lengths straddling every LANES boundary the strip loop can take:
+    // empty, sub-strip, exact strips, strip+tail
+    let lengths: Vec<usize> = vec![
+        0,
+        1,
+        3,
+        LANES - 1,
+        LANES,
+        LANES + 1,
+        2 * LANES - 1,
+        2 * LANES,
+        2 * LANES + 5,
+        4 * LANES + 3,
+        8 * LANES + 7,
+    ];
+    forall("simd primitive parity", 150, |g| {
+        let len = *g.choose(&lengths);
+        let left = g.vec_i64(len, -1_000_000..1_000_000);
+        let right = g.vec_i64(len, -1_000_000..1_000_000);
+        let weights = g.vec_i64(len, 0..1_000);
+        let scale = g.i64(0..1_000);
+        let got = simd::min_plus_argmin(&left, &right, &weights, scale);
+        let want = simd::min_plus_argmin_portable(&left, &right, &weights, scale);
+        if got != want {
+            return Err(format!(
+                "min_plus_argmin len={len}: dispatched {got:?} vs portable {want:?}"
+            ));
+        }
+        let a = logprobs(g, len);
+        let b = logprobs(g, len);
+        let got = simd::max_plus_argmax(&a, &b);
+        let want = simd::max_plus_argmax_portable(&a, &b);
+        if got.0.to_bits() != want.0.to_bits() || got.1 != want.1 {
+            return Err(format!(
+                "max_plus_argmax len={len}: dispatched {got:?} vs portable {want:?}"
+            ));
+        }
+        let bias = if g.bool() { -0.0 } else { -g.f64() * 5.0 };
+        let got = simd::max_plus_argmax_bias(&a, &b, bias);
+        let want = simd::max_plus_argmax_bias_portable(&a, &b, bias);
+        if got.0.to_bits() != want.0.to_bits() || got.1 != want.1 {
+            return Err(format!(
+                "max_plus_argmax_bias len={len} bias={bias}: dispatched {got:?} \
+                 vs portable {want:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mcm_simd_matches_scalar_and_pooled_across_threads() {
+    let pools: Vec<ExecPool> = THREADS.iter().map(|&t| ExecPool::new(t)).collect();
+    forall("mcm simd parity", 25, |g| {
+        let n = g.usize(2..28);
+        let p = McmProblem::random(g.rng(), n, 40);
+        let (want, want_splits) = pipedp::mcm::seq::linear_table_with_splits(&p);
+        let got = pipedp::mcm::pipeline::solve_simd(&p);
+        if got != want {
+            return Err(format!("n={n}: solve_simd table diverged"));
+        }
+        let (table, splits) = pipedp::mcm::pipeline::solve_simd_recorded(&p);
+        if table != want || splits != want_splits {
+            return Err(format!("n={n}: solve_simd_recorded table or sidecar diverged"));
+        }
+        let sched = McmSchedule::compile_tiled(n, McmVariant::Corrected, default_mcm_tile(n));
+        for (i, &t) in THREADS.iter().enumerate() {
+            let pooled = pipedp::mcm::pipeline::execute_pooled(&p, &sched, &pools[i], t);
+            if pooled != want {
+                return Err(format!("n={n} threads={t}: pooled table diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn align_simd_matches_scalar_including_move_sidecars() {
+    let pools: Vec<ExecPool> = THREADS.iter().map(|&t| ExecPool::new(t)).collect();
+    forall("align simd parity", 25, |g| {
+        let variant = *g.choose(&[AlignVariant::Lcs, AlignVariant::Edit, AlignVariant::Local]);
+        let p = AlignProblem::random(g.rng(), 1..40, 4, variant);
+        let (want, want_moves) = pipedp::align::seq::solve_with_moves(&p);
+        let got = pipedp::align::wavefront::solve_simd(&p);
+        if got != want {
+            return Err(format!("{variant:?}: solve_simd table diverged"));
+        }
+        let (table, moves) = pipedp::align::wavefront::solve_simd_recorded(&p);
+        if table != want {
+            return Err(format!("{variant:?}: solve_simd_recorded table diverged"));
+        }
+        for idx in 0..want.len() {
+            if moves.get(idx) != want_moves.get(idx) {
+                return Err(format!(
+                    "{variant:?}: move sidecar diverged at cell {idx}: \
+                     {} vs {}",
+                    moves.get(idx),
+                    want_moves.get(idx)
+                ));
+            }
+        }
+        let tile = default_align_tile(p.rows(), p.cols());
+        let tiled = AlignSchedule::compile_tiled(p.rows(), p.cols(), tile);
+        for (i, &t) in THREADS.iter().enumerate() {
+            let pooled = pipedp::align::wavefront::execute_pooled(&p, &tiled, &pools[i], t);
+            if pooled != want {
+                return Err(format!("{variant:?} threads={t}: pooled table diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn viterbi_simd_matches_scalar_bit_for_bit() {
+    let pools: Vec<ExecPool> = THREADS.iter().map(|&t| ExecPool::new(t)).collect();
+    forall("viterbi simd parity", 25, |g| {
+        let p = ViterbiProblem::random(g.rng(), 1..40, 12, 6);
+        let (want, want_bp) = pipedp::viterbi::seq::solve_with_backpointers(&p);
+        let got = pipedp::viterbi::pipeline::execute_simd(&p);
+        if bits(&got) != bits(&want) {
+            return Err("execute_simd trellis diverged".into());
+        }
+        let (trellis, bp) = pipedp::viterbi::pipeline::execute_simd_recorded(&p);
+        if bits(&trellis) != bits(&want) || bp != want_bp {
+            return Err("execute_simd_recorded trellis or backpointers diverged".into());
+        }
+        for (i, &t) in THREADS.iter().enumerate() {
+            let pooled = pipedp::viterbi::pipeline::execute_pooled(&p, &pools[i], t);
+            if bits(&pooled) != bits(&want) {
+                return Err(format!("threads={t}: pooled trellis diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cyk_simd_matches_scalar_bit_for_bit() {
+    let pools: Vec<ExecPool> = THREADS.iter().map(|&t| ExecPool::new(t)).collect();
+    forall("cyk simd parity", 20, |g| {
+        let p = CykProblem::random(g.rng(), 1..18, 5, 4);
+        let n = p.n();
+        let (want, want_splits) = pipedp::cyk::seq::solve_with_splits(&p);
+        let got = pipedp::cyk::pipeline::solve_simd(&p);
+        if bits(&got) != bits(&want) {
+            return Err(format!("n={n}: solve_simd chart diverged"));
+        }
+        let (chart, splits) = pipedp::cyk::pipeline::solve_simd_recorded(&p);
+        if bits(&chart) != bits(&want) || splits != want_splits {
+            return Err(format!("n={n}: solve_simd_recorded chart or sidecar diverged"));
+        }
+        let tiled = pipedp::core::cache::cyk_schedule(n, default_mcm_tile(n));
+        for (i, &t) in THREADS.iter().enumerate() {
+            let pooled = pipedp::cyk::pipeline::execute_pooled(&p, &tiled, &pools[i], t);
+            if bits(&pooled) != bits(&want) {
+                return Err(format!("n={n} threads={t}: pooled chart diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pipedp_simd_env_contract() {
+    // `enabled()` caches its answer on first read, so this asserts
+    // agreement with the process-level env rather than toggling it
+    // mid-run; the CI `scalar-fallback` job launches the whole suite
+    // (this file, the module bit-identity tests and the golden replays)
+    // under PIPEDP_SIMD=off, which drives the `false` branch end-to-end.
+    let want = match std::env::var("PIPEDP_SIMD") {
+        Ok(v) => {
+            let v = v.to_ascii_lowercase();
+            !(v == "off" || v == "0" || v == "false")
+        }
+        Err(_) => true,
+    };
+    assert_eq!(
+        simd::enabled(),
+        want,
+        "core::simd::enabled() disagrees with the PIPEDP_SIMD env contract"
+    );
+}
