@@ -1,11 +1,18 @@
 //! E11 — coordinator load bench: drive pipelined clients at saturation
-//! through the real TCP coordinator (accept → batcher → bounded worker
-//! queue → native executors) and record the serving-side health numbers:
-//! queue-wait p50/p99, shed rate at the admission gate, and goodput.
+//! through the real TCP coordinator (epoll reactor → sharded batcher →
+//! bounded worker queue → native executors) and record the serving-side
+//! health numbers: queue-wait p50/p99, shed rate at the admission gate,
+//! and goodput.
 //!
-//! The pool is sized deliberately small (2 workers, 32 queue slots) so a
-//! modest client fleet actually saturates it — the point is to exercise
-//! the admission gate and the queue-wait tail, not to size the box.
+//! The bench sweeps *connection count* at fixed total work: a base tier
+//! and a 10× tier drive the same number of requests through the same
+//! 2-worker/32-slot pool, so the tiers isolate what the reactor is for —
+//! holding many sockets without per-connection threads.  Each tier's
+//! p99s are reported as ratios to the base tier; those ratios are
+//! machine-portable, land in the `results` rows of the JSON record
+//! (keyed by `n` = connection count), and CI gates them with
+//! `pipedp bench-check --max-field`: 10× the connections must keep p99
+//! within 2× of the base tier.
 //!
 //! Run: `cargo bench --bench coordinator_load`           (table to stdout)
 //!      `cargo bench --bench coordinator_load -- --json` (also writes
@@ -29,17 +36,19 @@ struct ClientTotals {
     errors: u64,
 }
 
-fn main() {
-    let emit_json = std::env::args().any(|a| a == "--json");
-    let fast = std::env::var("PIPEDP_BENCH_FAST").as_deref() == Ok("1");
-    // (clients, requests per client, S-DP size): big native S-DP solves
-    // keep each worker busy for a while so the burst outruns the pool
-    let (clients, per_client, n_sdp) = if fast {
-        (2usize, 200usize, 4_000usize)
-    } else {
-        (8, 2_000, 40_000)
-    };
+/// One connection tier's measurements against a fresh server.
+struct TierResult {
+    conns: usize,
+    per_client: usize,
+    totals: ClientTotals,
+    elapsed: Duration,
+    queue_p50: Duration,
+    queue_p99: Duration,
+    latency_p50: Duration,
+    latency_p99: Duration,
+}
 
+fn run_tier(conns: usize, per_client: usize, n_sdp: usize) -> TierResult {
     let server = Server::start(Config {
         addr: "127.0.0.1:0".into(),
         workers: 2,
@@ -53,13 +62,14 @@ fn main() {
         exec_threads: 0,
         max_solve_bytes: 0,
         line_stall_ms: 0,
+        reactor: true,
     })
     .expect("server starts");
     let addr = server.local_addr.to_string();
 
     let started = Instant::now();
     let totals = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..clients)
+        let handles: Vec<_> = (0..conns)
             .map(|c| {
                 let addr = addr.clone();
                 s.spawn(move || {
@@ -87,6 +97,7 @@ fn main() {
                                     full: false,
                                     want_solution: false,
                                     deadline_ms: None,
+                                    stream: false,
                                 }
                             })
                             .collect();
@@ -128,66 +139,141 @@ fn main() {
     let elapsed = started.elapsed();
 
     let m = &server.metrics;
-    let queue_p50 = m.queue_wait.percentile(0.5);
-    let queue_p99 = m.queue_wait.percentile(0.99);
-    let latency_p50 = m.latency.percentile(0.5);
-    let latency_p99 = m.latency.percentile(0.99);
-    let shed_rate = totals.shed as f64 / totals.sent.max(1) as f64;
-    let throughput = totals.ok as f64 / elapsed.as_secs_f64();
-
-    let mut t = Table::new(vec!["metric", "value"]);
-    t.row(vec!["requests sent".into(), totals.sent.to_string()]);
-    t.row(vec!["served ok".into(), totals.ok.to_string()]);
-    t.row(vec![
-        "shed (typed overloaded)".into(),
-        format!("{} ({:.1}%)", totals.shed, 100.0 * shed_rate),
-    ]);
-    t.row(vec!["errors".into(), totals.errors.to_string()]);
-    t.row(vec!["wall clock".into(), fmt_duration(elapsed)]);
-    t.row(vec![
-        "goodput".into(),
-        format!("{throughput:.0} ok/s"),
-    ]);
-    t.row(vec![
-        "queue wait p50 / p99".into(),
-        format!("{} / {}", fmt_duration(queue_p50), fmt_duration(queue_p99)),
-    ]);
-    t.row(vec![
-        "latency p50 / p99".into(),
-        format!("{} / {}", fmt_duration(latency_p50), fmt_duration(latency_p99)),
-    ]);
-    println!(
-        "\n== coordinator under saturation ({clients} clients × {per_client} S-DP n≈{n_sdp}, \
-         2 workers, queue 32) =="
-    );
-    println!("{}", t.render());
-    if totals.errors > 0 {
-        println!("WARNING: {} non-overload errors (expected 0)", totals.errors);
-    }
-
+    let result = TierResult {
+        conns,
+        per_client,
+        totals,
+        elapsed,
+        queue_p50: m.queue_wait.percentile(0.5),
+        queue_p99: m.queue_wait.percentile(0.99),
+        latency_p50: m.latency.percentile(0.5),
+        latency_p99: m.latency.percentile(0.99),
+    };
     // drained exit is part of what this bench certifies: a hang here is a
     // shutdown regression, caught by CI's overall job timeout
     server.shutdown();
+    result
+}
+
+fn main() {
+    let emit_json = std::env::args().any(|a| a == "--json");
+    let fast = std::env::var("PIPEDP_BENCH_FAST").as_deref() == Ok("1");
+    // (connection tiers, S-DP size): each tier sends the same total
+    // request count, so the only axis moving is how many sockets carry
+    // it; big native S-DP solves keep the 2 workers busy enough that the
+    // burst outruns the pool at every tier
+    let (tiers, n_sdp) = if fast {
+        (vec![(2usize, 200usize), (20, 20)], 4_000usize)
+    } else {
+        (vec![(8, 2_000), (80, 200)], 40_000)
+    };
+
+    let results: Vec<TierResult> = tiers
+        .iter()
+        .map(|&(conns, per_client)| run_tier(conns, per_client, n_sdp))
+        .collect();
+    // the base (fewest-connections) tier anchors the scaling ratios
+    let us = |d: Duration| (d.as_micros() as f64).max(1.0);
+    let base = &results[0];
+
+    let mut t = Table::new(vec![
+        "conns",
+        "sent",
+        "ok",
+        "shed",
+        "errors",
+        "goodput",
+        "queue p50/p99",
+        "latency p50/p99",
+        "p99 ratio",
+    ]);
+    for r in &results {
+        let throughput = r.totals.ok as f64 / r.elapsed.as_secs_f64();
+        t.row(vec![
+            r.conns.to_string(),
+            r.totals.sent.to_string(),
+            r.totals.ok.to_string(),
+            format!(
+                "{} ({:.1}%)",
+                r.totals.shed,
+                100.0 * r.totals.shed as f64 / r.totals.sent.max(1) as f64
+            ),
+            r.totals.errors.to_string(),
+            format!("{throughput:.0} ok/s"),
+            format!(
+                "{} / {}",
+                fmt_duration(r.queue_p50),
+                fmt_duration(r.queue_p99)
+            ),
+            format!(
+                "{} / {}",
+                fmt_duration(r.latency_p50),
+                fmt_duration(r.latency_p99)
+            ),
+            format!("{:.2}x", us(r.latency_p99) / us(base.latency_p99)),
+        ]);
+    }
+    println!(
+        "\n== coordinator under saturation (reactor, connection scaling, S-DP n≈{n_sdp}, \
+         2 workers, queue 32) =="
+    );
+    println!("{}", t.render());
+    for r in &results {
+        if r.totals.errors > 0 {
+            println!(
+                "WARNING: {} non-overload errors at {} conns (expected 0)",
+                r.totals.errors, r.conns
+            );
+        }
+    }
 
     if emit_json {
+        // `tiers` carries the absolute numbers for humans; `results`
+        // carries only the machine-portable scaling ratios bench-check
+        // gates (rows keyed by n = connection count, base row ≡ 1.0)
+        let round3 = |x: f64| (x * 1e3).round() / 1e3;
+        let tier_rows: Vec<Json> = results
+            .iter()
+            .map(|r| {
+                let shed_rate = r.totals.shed as f64 / r.totals.sent.max(1) as f64;
+                let throughput = r.totals.ok as f64 / r.elapsed.as_secs_f64();
+                Json::obj(vec![
+                    ("conns", Json::int(r.conns as i64)),
+                    ("per_client", Json::int(r.per_client as i64)),
+                    ("sent", Json::int(r.totals.sent as i64)),
+                    ("ok", Json::int(r.totals.ok as i64)),
+                    ("shed", Json::int(r.totals.shed as i64)),
+                    ("errors", Json::int(r.totals.errors as i64)),
+                    ("shed_rate", Json::num((shed_rate * 1e4).round() / 1e4)),
+                    ("throughput_ok_per_s", Json::num(throughput.round())),
+                    ("queue_p50_us", Json::int(r.queue_p50.as_micros() as i64)),
+                    ("queue_p99_us", Json::int(r.queue_p99.as_micros() as i64)),
+                    ("latency_p50_us", Json::int(r.latency_p50.as_micros() as i64)),
+                    ("latency_p99_us", Json::int(r.latency_p99.as_micros() as i64)),
+                    ("wall_ms", Json::int(r.elapsed.as_millis() as i64)),
+                ])
+            })
+            .collect();
+        let ratio_rows: Vec<Json> = results
+            .iter()
+            .map(|r| {
+                let queue = round3(us(r.queue_p99) / us(base.queue_p99));
+                let latency = round3(us(r.latency_p99) / us(base.latency_p99));
+                Json::obj(vec![
+                    ("n", Json::int(r.conns as i64)),
+                    ("queue_p99_ratio", Json::num(queue)),
+                    ("latency_p99_ratio", Json::num(latency)),
+                ])
+            })
+            .collect();
         let doc = Json::obj(vec![
             ("bench", Json::str("coordinator_load")),
-            ("clients", Json::int(clients as i64)),
-            ("per_client", Json::int(per_client as i64)),
             ("n_sdp", Json::int(n_sdp as i64)),
             ("workers", Json::int(2)),
             ("queue_cap", Json::int(32)),
-            ("sent", Json::int(totals.sent as i64)),
-            ("ok", Json::int(totals.ok as i64)),
-            ("shed", Json::int(totals.shed as i64)),
-            ("errors", Json::int(totals.errors as i64)),
-            ("shed_rate", Json::num((shed_rate * 1e4).round() / 1e4)),
-            ("throughput_ok_per_s", Json::num(throughput.round())),
-            ("queue_p50_us", Json::int(queue_p50.as_micros() as i64)),
-            ("queue_p99_us", Json::int(queue_p99.as_micros() as i64)),
-            ("latency_p50_us", Json::int(latency_p50.as_micros() as i64)),
-            ("latency_p99_us", Json::int(latency_p99.as_micros() as i64)),
-            ("wall_ms", Json::int(elapsed.as_millis() as i64)),
+            ("reactor", Json::int(1)),
+            ("tiers", Json::arr(tier_rows)),
+            ("results", Json::arr(ratio_rows)),
         ]);
         let path =
             std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_coordinator.json");

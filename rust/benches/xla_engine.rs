@@ -112,6 +112,7 @@ fn main() {
             exec_threads: 0,
             max_solve_bytes: 0,
             line_stall_ms: 0,
+            reactor: false,
         })
         .expect("server");
         let addr = server.local_addr.to_string();
@@ -134,6 +135,7 @@ fn main() {
                                 full: false,
                                 want_solution: false,
                                 deadline_ms: None,
+                                stream: false,
                             })
                             .collect();
                         let resps = client.call_pipelined(reqs).unwrap();

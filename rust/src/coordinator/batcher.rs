@@ -20,6 +20,21 @@
 //! process-wide cache ([`crate::core::cache`]), so only the first request
 //! per `(kind, n, variant)` in the process lifetime compiles one, and the
 //! server warmup pre-warms the cache for every registered bucket.
+//!
+//! The batcher is **sharded by wire-kind family**: one thread, pending
+//! map, and deadline min-heap per family ([`shard_of`]), so a burst of
+//! MCM traffic scans and wakes only the MCM shard — align/viterbi/cyk
+//! queues are untouched.  Admission (memory bound, in-flight gate) stays
+//! global in [`Batcher::submit_request`]; only post-admission queueing is
+//! sharded.
+//!
+//! Replies leave through a [`ReplySink`]: decoded [`Response`] values for
+//! the legacy blocking writer, or pre-encoded wire lines for sinks that
+//! can interleave streaming frames.  A request with `stream: true` on a
+//! frame-capable sink gets incremental `progress` frames (fed from the
+//! executors' cancellation poll sites via [`Progress`]), its solution as
+//! chunked `solution` frames, and a terminal `result` frame —
+//! docs/PROTOCOL.md "Streaming".
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -29,8 +44,90 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::WorkerPool;
-use crate::coordinator::request::{Request, Response};
-use crate::coordinator::router::{group_key, GroupKey, Route, Router};
+use crate::coordinator::request::{solution_chunk_frames, Frame, Request, RequestBody, Response};
+use crate::coordinator::router::{group_key, GroupKey, Route, Router, SolveControls};
+use crate::runtime::exec_pool::Progress;
+
+/// Where a reply goes.  The blocking per-connection writer consumes
+/// decoded [`Response`] values; line-oriented sinks carry pre-encoded
+/// wire lines, so streaming `progress` / `solution` / `result` frames
+/// travel the same ordered channel as unary replies.
+#[derive(Clone)]
+pub enum ReplySink {
+    /// Decoded responses (legacy blocking writer, in-process tests).
+    /// Cannot carry frames: streamed requests degrade to unary here.
+    Response(mpsc::Sender<Response>),
+    /// Pre-encoded wire lines (newline excluded) for a writer that owns
+    /// the socket, e.g. the blocking server's per-connection writer.
+    Line(mpsc::Sender<String>),
+    /// Reactor-owned connection: lines are tagged with the connection id
+    /// (and whether they terminate a request, so the reactor can retire
+    /// half-closed connections) and the reactor is woken to drain its
+    /// completion queue.
+    Reactor {
+        conn: u64,
+        tx: mpsc::Sender<(u64, String, bool)>,
+        wake: Arc<dyn Fn() + Send + Sync>,
+    },
+}
+
+impl ReplySink {
+    /// Whether this sink can carry streaming frames; [`ReplySink::Response`]
+    /// cannot, so streamed requests degrade to a unary reply there.
+    pub fn supports_frames(&self) -> bool {
+        !matches!(self, ReplySink::Response(_))
+    }
+
+    /// Deliver a terminal unary response.
+    pub fn send_response(&self, resp: Response) {
+        match self {
+            ReplySink::Response(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplySink::Line(tx) => {
+                let _ = tx.send(resp.encode());
+            }
+            ReplySink::Reactor { conn, tx, wake } => {
+                let _ = tx.send((*conn, resp.encode(), true));
+                (**wake)();
+            }
+        }
+    }
+
+    /// Deliver one streaming frame.  On a [`ReplySink::Response`] sink
+    /// only the terminal `Result` frame is representable; progress and
+    /// solution chunks are dropped (the caller keeps the full payload in
+    /// the result for that case — see [`deliver`]).
+    pub fn send_frame(&self, frame: Frame) {
+        match self {
+            ReplySink::Response(tx) => {
+                if let Frame::Result(resp) = frame {
+                    let _ = tx.send(resp);
+                }
+            }
+            ReplySink::Line(tx) => {
+                let _ = tx.send(frame.encode());
+            }
+            ReplySink::Reactor { conn, tx, wake } => {
+                let terminal = matches!(frame, Frame::Result(_));
+                let _ = tx.send((*conn, frame.encode(), terminal));
+                (**wake)();
+            }
+        }
+    }
+}
+
+impl From<mpsc::Sender<Response>> for ReplySink {
+    fn from(tx: mpsc::Sender<Response>) -> ReplySink {
+        ReplySink::Response(tx)
+    }
+}
+
+impl From<mpsc::Sender<String>> for ReplySink {
+    fn from(tx: mpsc::Sender<String>) -> ReplySink {
+        ReplySink::Line(tx)
+    }
+}
 
 /// A request waiting for dispatch, with its reply channel.
 pub struct Pending {
@@ -42,7 +139,7 @@ pub struct Pending {
     /// flush with a typed `timeout` reply instead of being solved, and
     /// live ones thread it into the executors' cancel tokens.
     pub deadline: Option<Instant>,
-    pub reply: mpsc::Sender<Response>,
+    pub reply: ReplySink,
 }
 
 /// Batching policy.
@@ -61,16 +158,34 @@ impl Default for Policy {
     }
 }
 
-/// What flows to the batcher thread: requests, or the drain signal.
+/// What flows to a batcher shard thread: requests, or the drain signal.
 enum Msg {
     Req(Box<Pending>),
     Stop,
 }
 
-/// The batcher thread: owns the pending map + deadline heap, flushes
-/// groups to the pool.
+/// Number of batcher shards — one per wire-kind family.
+pub const NUM_SHARDS: usize = 5;
+
+/// Shard index for a request body: each kind family gets its own batcher
+/// thread, pending map, and deadline heap, so MCM traffic never scans
+/// align/viterbi/cyk queues.  `Stats` is answered inline by connections
+/// and normally never reaches the batcher; it maps to the S-DP shard.
+pub fn shard_of(body: &RequestBody) -> usize {
+    match body {
+        RequestBody::Sdp(_) | RequestBody::Stats => 0,
+        RequestBody::Mcm { .. } => 1,
+        RequestBody::Align(_) => 2,
+        RequestBody::Viterbi(_) => 3,
+        RequestBody::Cyk(_) => 4,
+    }
+}
+
+/// The sharded batcher: one thread per kind family, each owning its own
+/// pending map + deadline heap, all flushing into one worker pool.
 pub struct Batcher {
-    tx: mpsc::Sender<Msg>,
+    /// Per-shard request channels, indexed by [`shard_of`].
+    txs: Vec<mpsc::Sender<Msg>>,
     router: Arc<Router>,
     pool: Arc<WorkerPool>,
     metrics: Arc<Metrics>,
@@ -79,7 +194,7 @@ pub struct Batcher {
     /// the in-flight slot claim — an oversized request is refused with a
     /// typed `too_large` reply and never allocates a table.
     max_solve_bytes: usize,
-    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Batcher {
@@ -100,23 +215,28 @@ impl Batcher {
         policy: Policy,
         max_solve_bytes: usize,
     ) -> Batcher {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = {
+        let mut txs = Vec::with_capacity(NUM_SHARDS);
+        let mut handles = Vec::with_capacity(NUM_SHARDS);
+        for shard in 0..NUM_SHARDS {
+            let (tx, rx) = mpsc::channel::<Msg>();
             let router = router.clone();
             let pool = pool.clone();
             let metrics = metrics.clone();
-            std::thread::Builder::new()
-                .name("pipedp-batcher".into())
+            let policy = policy.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("pipedp-batcher-{shard}"))
                 .spawn(move || run(rx, router, pool, metrics, policy))
-                .expect("spawn batcher")
-        };
+                .expect("spawn batcher shard");
+            txs.push(tx);
+            handles.push(handle);
+        }
         Batcher {
-            tx,
+            txs,
             router,
             pool,
             metrics,
             max_solve_bytes,
-            handle: Mutex::new(Some(handle)),
+            handles: Mutex::new(handles),
         }
     }
 
@@ -131,10 +251,11 @@ impl Batcher {
         self.enqueue(pending)
     }
 
-    /// Send a pending whose in-flight slot is already claimed; on a dead
-    /// batcher thread the slot is released here.
+    /// Send a pending to its kind-family shard; the in-flight slot is
+    /// already claimed, and on a dead shard thread it is released here.
     fn enqueue(&self, pending: Pending) -> bool {
-        let ok = self.tx.send(Msg::Req(Box::new(pending))).is_ok();
+        let shard = shard_of(&pending.request.body);
+        let ok = self.txs[shard].send(Msg::Req(Box::new(pending))).is_ok();
         if !ok {
             self.metrics.dec_inflight();
         }
@@ -150,20 +271,26 @@ impl Batcher {
     /// fast-arriving burst hide in the batcher's channel and bypass the
     /// bound.  The backlog check stays as a second trigger for work that
     /// enters the pool without passing this gate.
-    pub fn submit_request(&self, request: Request, reply: mpsc::Sender<Response>) {
+    pub fn submit_request(&self, request: Request, reply: impl Into<ReplySink>) {
+        let reply: ReplySink = reply.into();
+        let stream = request.stream;
         // memory admission: a statically-oversized request is refused
         // before claiming anything — load cannot make it admissible
         let est = request.body.estimated_solve_bytes(request.want_solution);
         if self.max_solve_bytes > 0 && est > self.max_solve_bytes as u64 {
             self.metrics.rejected_too_large.fetch_add(1, Ordering::Relaxed);
-            let _ = reply.send(Response::too_large(
-                request.id,
-                format!(
-                    "estimated solve footprint {est} B exceeds the admission \
-                     bound {} B",
-                    self.max_solve_bytes
+            deliver_terminal(
+                &reply,
+                stream,
+                Response::too_large(
+                    request.id,
+                    format!(
+                        "estimated solve footprint {est} B exceeds the admission \
+                         bound {} B",
+                        self.max_solve_bytes
+                    ),
                 ),
-            ));
+            );
             return;
         }
         let cap = self.pool.capacity();
@@ -180,7 +307,7 @@ impl Batcher {
         };
         if saturated {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-            let _ = reply.send(Response::overloaded(request.id));
+            deliver_terminal(&reply, stream, Response::overloaded(request.id));
             return;
         }
         match self.router.route(&request) {
@@ -210,22 +337,27 @@ impl Batcher {
                     reply,
                 });
                 if !accepted {
-                    let _ = reply2
-                        .send(Response::err(request_id, "batcher unavailable".to_string()));
+                    deliver_terminal(
+                        &reply2,
+                        stream,
+                        Response::err(request_id, "batcher unavailable".to_string()),
+                    );
                 }
             }
             Err(e) => {
-                let _ = reply.send(Response::err(request.id, e.to_string()));
+                deliver_terminal(&reply, stream, Response::err(request.id, e.to_string()));
                 self.metrics.dec_inflight(); // answered now: not in flight
             }
         }
     }
 
-    /// Drain every pending group into the pool and join the batcher
-    /// thread.  Idempotent; `Drop` calls it too.
+    /// Drain every shard's pending groups into the pool and join all
+    /// shard threads.  Idempotent; `Drop` calls it too.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Stop);
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
     }
@@ -358,6 +490,83 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
     }
 }
 
+/// Terminal delivery for refusals that happen before a [`Pending`]
+/// exists: a streamed request on a frame-capable sink gets its typed
+/// error as a `result` frame (so the stream terminates per protocol),
+/// everything else gets the plain unary reply.
+pub(crate) fn deliver_terminal(sink: &ReplySink, stream: bool, resp: Response) {
+    if stream && sink.supports_frames() {
+        sink.send_frame(Frame::Result(resp));
+    } else {
+        sink.send_response(resp);
+    }
+}
+
+/// Terminal delivery honouring the request's streaming mode: a streamed
+/// request on a frame-capable sink gets its solution as chunked
+/// `solution` frames followed by a `result` frame with the inline
+/// `solution` field elided (the chunks are the payload); everything
+/// else — unary requests, and streamed ones whose sink cannot carry
+/// frames — gets the plain reply with the solution inline.
+fn deliver(p: &Pending, mut resp: Response) {
+    if p.request.stream && p.reply.supports_frames() {
+        if let Some(sol) = resp.solution.take() {
+            for frame in solution_chunk_frames(resp.id, &sol) {
+                p.reply.send_frame(frame);
+            }
+        }
+        p.reply.send_frame(Frame::Result(resp));
+    } else {
+        p.reply.send_response(resp);
+    }
+}
+
+/// Superstep / cell totals a streamed solve reports progress against.
+/// Supersteps mirror each kind's schedule depth — the wavefront count
+/// the executors' cancellation poll sites tick through — and cells the
+/// DP table size, so `progress` frames interpolate sensibly.
+fn progress_goals(body: &RequestBody) -> (u64, u64) {
+    match body {
+        RequestBody::Sdp(p) => (p.n as u64, p.n as u64),
+        RequestBody::Mcm { problem, .. } => {
+            let n = problem.n() as u64;
+            (n.saturating_sub(1), n.saturating_mul(n))
+        }
+        RequestBody::Align(p) => (
+            (p.rows() + p.cols()).saturating_sub(1) as u64,
+            p.num_cells() as u64,
+        ),
+        RequestBody::Viterbi(p) => (p.obs.len() as u64, p.num_cells() as u64),
+        RequestBody::Cyk(p) => (p.n() as u64, p.num_cells() as u64),
+        RequestBody::Stats => (0, 0),
+    }
+}
+
+/// Build the per-request [`SolveControls`]: the admission deadline, plus
+/// — for streamed requests on frame-capable sinks — a [`Progress`]
+/// observer whose sink encodes `progress` frames straight into the
+/// request's reply channel.
+fn controls_for(p: &Pending) -> SolveControls {
+    let progress = if p.request.stream && p.reply.supports_frames() {
+        let sink = p.reply.clone();
+        let id = p.request.id;
+        let (total_supersteps, total_cells) = progress_goals(&p.request.body);
+        Some(Arc::new(Progress::new(
+            total_supersteps,
+            total_cells,
+            Box::new(move |supersteps, cells| {
+                sink.send_frame(Frame::Progress { id, supersteps, cells });
+            }),
+        )))
+    } else {
+        None
+    };
+    SolveControls {
+        deadline: p.deadline,
+        progress,
+    }
+}
+
 fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metrics: &Arc<Metrics>) {
     if batch.is_empty() {
         return;
@@ -382,7 +591,7 @@ fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metr
                 .errors
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             metrics.latency.record(p.enqueued.elapsed());
-            let _ = p.reply.send(Response::timeout(p.request.id));
+            deliver(&p, Response::timeout(p.request.id));
             metrics.dec_inflight();
         }
         if live.is_empty() {
@@ -390,14 +599,14 @@ fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metr
         }
         let route = live[0].route;
         let reqs: Vec<Request> = live.iter().map(|p| p.request.clone()).collect();
-        let deadlines: Vec<Option<Instant>> = live.iter().map(|p| p.deadline).collect();
+        let controls: Vec<SolveControls> = live.iter().map(controls_for).collect();
         // isolation boundary: an executor panic (a bug, or an injected
         // fault) must answer every request in the group with a typed,
         // id-correlated `panicked` reply instead of dropping the reply
         // senders — the worker thread itself is shielded one level down
         // (coordinator::pool), this is where replies are rescued
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            router.execute_group_with_deadlines(&reqs, route, &deadlines)
+            router.execute_group_with_controls(&reqs, route, &controls)
         }));
         match caught {
             Ok(responses) => {
@@ -415,7 +624,7 @@ fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metr
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
                     }
-                    let _ = p.reply.send(resp);
+                    deliver(p, resp);
                     metrics.dec_inflight();
                 }
             }
@@ -427,7 +636,7 @@ fn flush(batch: Vec<Pending>, router: &Arc<Router>, pool: &Arc<WorkerPool>, metr
                         .errors
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     metrics.latency.record(p.enqueued.elapsed());
-                    let _ = p.reply.send(Response::panicked(p.request.id, msg.clone()));
+                    deliver(p, Response::panicked(p.request.id, msg.clone()));
                     metrics.dec_inflight();
                 }
             }
@@ -449,6 +658,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         }
     }
 
@@ -462,6 +672,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         }
     }
 
@@ -507,6 +718,7 @@ mod tests {
                 full: false,
                 want_solution: false,
                 deadline_ms: None,
+                stream: false,
             },
             tx,
         );
@@ -561,7 +773,7 @@ mod tests {
             route: Route::Native,
             enqueued: Instant::now(),
             deadline: None,
-            reply: tx,
+            reply: tx.into(),
         });
         let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert!(resp.ok);
@@ -579,7 +791,7 @@ mod tests {
                 route: Route::Native,
                 enqueued: Instant::now(),
                 deadline: None,
-                reply: tx,
+                reply: tx.into(),
             });
             receivers.push((i, rx));
         }
@@ -617,7 +829,7 @@ mod tests {
                 route: Route::Xla,
                 enqueued: Instant::now(),
                 deadline: None,
-                reply: tx,
+                reply: tx.into(),
             });
             receivers.push(rx);
         }
@@ -648,7 +860,7 @@ mod tests {
             route: Route::Native,
             enqueued: Instant::now(),
             deadline: None,
-            reply: tx,
+            reply: tx.into(),
         });
         // answered well before the 60 s window
         let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
@@ -684,7 +896,7 @@ mod tests {
             route: Route::Xla,
             enqueued: started,
             deadline: None,
-            reply: tx_b,
+            reply: tx_b.into(),
         });
         std::thread::scope(|s| {
             // key-A producer: one request every ~20 µs (well under the
@@ -697,13 +909,13 @@ mod tests {
                 let gap = Duration::from_micros(20);
                 let mut i = 0i64;
                 while started.elapsed() < Duration::from_millis(250) {
-                    let (tx, _rx) = mpsc::channel(); // A replies discarded
+                    let (tx, _rx) = mpsc::channel::<Response>(); // A replies discarded
                     batcher.submit(Pending {
                         request: native_request(i),
                         route: Route::Xla,
                         enqueued: Instant::now(),
                         deadline: None,
-                        reply: tx,
+                        reply: tx.into(),
                     });
                     i += 1;
                     let next = started.elapsed() + gap;
@@ -808,7 +1020,7 @@ mod tests {
             route: Route::Xla, // groupable key: sits in the pending map
             enqueued: Instant::now(),
             deadline: None,
-            reply: tx,
+            reply: tx.into(),
         });
         std::thread::sleep(Duration::from_millis(20));
         batcher.shutdown();
@@ -816,5 +1028,169 @@ mod tests {
         let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
         assert!(!resp.ok); // engine-less Xla → typed error, but *answered*
         batcher.shutdown(); // idempotent
+    }
+
+    /// A unary request over a [`ReplySink::Line`] sink is delivered as
+    /// the plain reply shape — byte-identical to [`Response::encode`],
+    /// with no `frame` marker — so line-oriented writers and the legacy
+    /// decoded-response path stay wire-compatible.
+    #[test]
+    fn line_sink_unary_reply_is_plain_shape() {
+        let (batcher, _m) = harness();
+        let (tx, rx) = mpsc::channel::<String>();
+        batcher.submit_request(native_request(3), tx);
+        let line = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(!line.contains("\"frame\""), "unary reply must be frame-less: {line}");
+        let resp = Response::decode(&line).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.id, 3);
+        assert_eq!(resp.value, 987);
+        assert_eq!(line, resp.encode(), "line must round-trip byte-identically");
+    }
+
+    /// The streaming contract end-to-end through the batcher: a
+    /// `stream: true` solve over a line sink yields ≥ 1 monotone
+    /// `progress` frame, the solution as `solution` chunks whose
+    /// concatenation parses back to the payload, and a terminal `result`
+    /// frame with the inline solution elided.
+    #[test]
+    fn streamed_request_frames_over_line_sink() {
+        use crate::core::problem::{AlignProblem, AlignScoring, AlignVariant};
+        let (batcher, _m) = harness();
+        // 64×64 LCS → 127 wavefronts: plenty of cancellation poll sites
+        let a: Vec<i64> = (0..64).map(|i| (i % 7) as i64).collect();
+        let b: Vec<i64> = (0..64).map(|i| (i % 5) as i64).collect();
+        let req = Request {
+            id: 21,
+            body: RequestBody::Align(
+                AlignProblem::new(a, b, AlignVariant::Lcs, AlignScoring::default()).unwrap(),
+            ),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+            stream: true,
+        };
+        let (tx, rx) = mpsc::channel::<String>();
+        batcher.submit_request(req, tx);
+        let mut progress_frames = 0u64;
+        let mut last_supersteps = 0u64;
+        let mut next_seq = 0u64;
+        let mut chunks = String::new();
+        let mut saw_last_chunk = false;
+        let mut result = None;
+        while result.is_none() {
+            let line = rx.recv_timeout(Duration::from_secs(5)).expect("stream frame");
+            match Frame::decode(&line).unwrap() {
+                Frame::Progress { id, supersteps, .. } => {
+                    assert_eq!(id, 21);
+                    assert!(
+                        supersteps >= last_supersteps,
+                        "progress must be monotone: {supersteps} < {last_supersteps}"
+                    );
+                    last_supersteps = supersteps;
+                    progress_frames += 1;
+                }
+                Frame::SolutionChunk { id, seq, last, chunk } => {
+                    assert_eq!(id, 21);
+                    assert_eq!(seq, next_seq, "chunk seq must be dense from 0");
+                    assert!(!saw_last_chunk, "no chunks after `last`");
+                    next_seq += 1;
+                    saw_last_chunk = last;
+                    chunks.push_str(&chunk);
+                }
+                Frame::Result(r) => result = Some(r),
+            }
+        }
+        let resp = result.unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.id, 21);
+        assert!(
+            resp.solution.is_none(),
+            "streamed result must elide the inline solution"
+        );
+        assert!(progress_frames >= 1, "expected at least one progress frame");
+        assert!(saw_last_chunk, "solution chunks must terminate with `last`");
+        let sol = crate::util::json::Json::parse(&chunks).expect("chunks parse");
+        assert_eq!(sol.i64_field("score").unwrap(), resp.value);
+        // nothing after the terminal frame
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+    }
+
+    /// A streamed request refused at admission still terminates its
+    /// stream: the typed error arrives as a single `result` frame.
+    #[test]
+    fn streamed_refusal_terminates_with_result_frame() {
+        let router = Arc::new(Router::new(None));
+        let pool = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Batcher::start_with_limit(router, pool, metrics, Policy::default(), 64);
+        let mut req = native_request(9); // fibonacci(16): 128 B > 64 B bound
+        req.stream = true;
+        let (tx, rx) = mpsc::channel::<String>();
+        batcher.submit_request(req, tx);
+        let line = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        match Frame::decode(&line).unwrap() {
+            Frame::Result(resp) => {
+                assert!(!resp.ok);
+                assert_eq!(resp.id, 9);
+                assert_eq!(resp.error_kind, Some(ErrorKind::TooLarge));
+            }
+            other => panic!("want a terminal result frame, got {other:?}"),
+        }
+    }
+
+    /// Every wire-kind family rides its own shard; one request per
+    /// family must be answered correctly through all five threads.
+    #[test]
+    fn all_kind_families_answered_across_shards() {
+        use crate::core::problem::{AlignProblem, CykProblem, McmProblem, ViterbiProblem};
+        use crate::core::schedule::McmVariant;
+        let (batcher, _m) = harness();
+        let bodies = vec![
+            RequestBody::Sdp(SdpProblem::fibonacci(16)),
+            RequestBody::Mcm {
+                problem: McmProblem::new(vec![30, 35, 15, 5, 10, 20, 25]).unwrap(),
+                variant: McmVariant::Corrected,
+            },
+            RequestBody::Align(AlignProblem::lcs(vec![1, 2, 3], vec![2, 3]).unwrap()),
+            RequestBody::Viterbi(
+                ViterbiProblem::new(
+                    2,
+                    1,
+                    vec![0.0; 2],
+                    vec![0.0; 4],
+                    vec![0.0; 2],
+                    vec![0, 0, 0],
+                )
+                .unwrap(),
+            ),
+            RequestBody::Cyk(CykProblem::balanced_example(3)),
+        ];
+        // the five bodies above cover all five shards exactly once
+        let shards: std::collections::HashSet<usize> = bodies.iter().map(shard_of).collect();
+        assert_eq!(shards.len(), NUM_SHARDS);
+        let mut receivers = Vec::new();
+        for (i, body) in bodies.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            batcher.submit_request(
+                Request {
+                    id: i as i64,
+                    body,
+                    backend: Backend::Native,
+                    full: false,
+                    want_solution: false,
+                    deadline_ms: None,
+                    stream: false,
+                },
+                tx,
+            );
+            receivers.push((i as i64, rx));
+        }
+        for (id, rx) in receivers {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, id);
+            assert!(resp.ok, "family {id} failed: {:?}", resp.error);
+        }
     }
 }

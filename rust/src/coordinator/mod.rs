@@ -20,10 +20,15 @@
 //! * [`metrics`] — latency histograms and throughput counters.
 //! * [`server`] — the TCP server (tracked, drainable connections) and a
 //!   blocking client.
+//! * `reactor` (Linux) — the optional epoll front end: one event-loop
+//!   thread owns every socket, with framed read/write buffers that
+//!   tolerate partial I/O at any byte boundary.
 
 pub mod batcher;
 pub mod metrics;
 pub mod pool;
+#[cfg(target_os = "linux")]
+pub mod reactor;
 pub mod request;
 pub mod router;
 pub mod server;

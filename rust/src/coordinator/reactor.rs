@@ -1,0 +1,585 @@
+//! Hand-rolled `epoll(7)` readiness reactor: the coordinator's
+//! nonblocking event loop (Linux only, zero dependencies — the four
+//! syscall wrappers are declared here against the libc `std` already
+//! links).
+//!
+//! One thread owns the listener and every connection socket.  Sockets
+//! are nonblocking; per-connection read buffers tolerate request lines
+//! split at any byte boundary (and coalesce pipelined requests), and
+//! per-connection write buffers tolerate partial writes at any byte
+//! boundary.  Completed request lines are handed to the same
+//! `handle_line` the blocking path uses — through the shared batcher,
+//! admission gate, and router — so replies are byte-identical between
+//! the two server modes.
+//!
+//! Replies (and streaming `progress` / `solution` / `result` frames)
+//! come back over a completion channel tagged with the connection id
+//! ([`crate::coordinator::batcher::ReplySink::Reactor`]); worker threads
+//! wake the reactor by writing one byte to a self-pipe
+//! ([`UnixStream::pair`]) registered in the epoll set.  A connection
+//! that dies mid-stream is dropped from the table: later completions
+//! for its id have nowhere to go and are discarded, while its
+//! queued-but-unsolved requests are shed by the batcher's deadline
+//! machinery with typed `timeout` replies.  A connection that merely
+//! *half-closes* (peer FIN after sending requests) keeps its entry
+//! until every in-flight request has delivered its terminal reply —
+//! the same half-open semantics the blocking path's writer thread
+//! provides.
+//!
+//! The blocking path's connection hygiene carries over: a partially
+//! received request line that stalls longer than the configured bound
+//! drops the connection (slow-loris guard), idle keep-alive connections
+//! (empty read buffer) live forever, and a peer that stops reading is
+//! disconnected once its write buffer stalls past `WRITE_STALL`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, ReplySink};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::handle_line;
+use crate::Result;
+
+/// Readiness: data to read.
+const EPOLLIN: u32 = 0x001;
+/// Readiness: socket accepts writes.
+const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported; never needs arming).
+const EPOLLERR: u32 = 0x008;
+/// Hang-up (always reported; never needs arming).
+const EPOLLHUP: u32 = 0x010;
+/// Peer shut down its write half (must be armed explicitly).
+const EPOLLRDHUP: u32 = 0x2000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+/// `EPOLL_CLOEXEC`: the epoll fd must not leak into spawned processes.
+const EPOLL_CLOEXEC: i32 = 0x8_0000;
+
+/// Kernel ABI layout of `struct epoll_event`.  On x86-64 the kernel
+/// packs it (no padding between `events` and `data`); other
+/// architectures use natural alignment.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+/// Kernel ABI layout of `struct epoll_event` (naturally aligned
+/// architectures).
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+    fn close(fd: i32) -> i32;
+}
+
+/// Owned epoll instance; the fd is closed on drop.
+struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    fn new() -> Result<Epoll> {
+        // SAFETY: epoll_create1 takes no pointers; a negative return is
+        // surfaced as the OS error before the fd is ever used.
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error().into());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> Result<()> {
+        let mut ev = EpollEvent {
+            events,
+            data: token,
+        };
+        // SAFETY: `ev` is a live, exclusively borrowed epoll_event for
+        // the duration of the call; the kernel copies it before
+        // returning (and ignores it entirely for EPOLL_CTL_DEL).
+        let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error().into());
+        }
+        Ok(())
+    }
+
+    /// Wait for readiness; returns how many entries of `events` were
+    /// filled.  `EINTR` (and any other error) is treated as an empty
+    /// timeout tick — the caller's loop re-enters with fresh state.
+    fn wait(&self, events: &mut [EpollEvent], timeout: Duration) -> usize {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        // SAFETY: the out-pointer and capacity describe `events`
+        // exactly; the kernel writes at most `events.len()` entries and
+        // the returned count is clamped to the slice length before use.
+        let n = unsafe { epoll_wait(self.fd, events.as_mut_ptr(), events.len() as i32, ms) };
+        if n < 0 {
+            return 0;
+        }
+        (n as usize).min(events.len())
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        // SAFETY: `self.fd` is a live epoll fd owned by this struct and
+        // never used after drop.
+        unsafe { close(self.fd) };
+    }
+}
+
+/// Epoll token of the TCP listener.
+const LISTENER_TOKEN: u64 = 0;
+/// Epoll token of the self-pipe's read end.
+const WAKE_TOKEN: u64 = 1;
+/// First connection token; connection ids count up from here.
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Poll tick when nothing is ready: bounds how late the stall sweeps
+/// (slow-loris, write-stall) and the stop flag can be observed.
+const TICK: Duration = Duration::from_millis(100);
+/// A peer that stops reading cannot park replies forever: once the
+/// write buffer has stalled (no bytes accepted) this long, the
+/// connection is dropped.  Mirrors the blocking path's write timeout.
+const WRITE_STALL: Duration = Duration::from_secs(10);
+/// Bounded window for flushing buffered replies at shutdown, after the
+/// batcher and pool drains have answered everything in flight.
+const SHUTDOWN_FLUSH: Duration = Duration::from_secs(2);
+
+/// Per-connection state: the nonblocking socket plus framed read/write
+/// buffers that tolerate partial I/O at any byte boundary.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes received but not yet terminated by `\n`.
+    read_buf: Vec<u8>,
+    /// Encoded reply lines (newline-terminated) not yet accepted by the
+    /// socket.
+    write_buf: Vec<u8>,
+    /// Slow-loris clock: set while `read_buf` holds a partial line,
+    /// cleared when the line completes or the buffer drains.
+    line_started: Option<Instant>,
+    /// Write-stall clock: set while the socket refuses bytes with a
+    /// non-empty `write_buf`.
+    write_started: Option<Instant>,
+    /// Peer sent FIN (or erred): stop reading, flush what is buffered,
+    /// then close.
+    closing: bool,
+    /// Request lines dispatched but not yet terminally answered; a
+    /// `closing` connection is retired only once this reaches zero (and
+    /// the write buffer drains), so half-open peers still get replies.
+    pending: usize,
+}
+
+impl Conn {
+    /// The epoll interest set for the current buffer state.
+    fn interest(&self) -> u32 {
+        let mut ev = EPOLLIN | EPOLLRDHUP;
+        if !self.write_buf.is_empty() {
+            ev |= EPOLLOUT;
+        }
+        ev
+    }
+}
+
+/// Handle to the running reactor thread; [`Reactor::stop_and_join`]
+/// flushes buffered replies (bounded) and closes every socket.
+pub struct Reactor {
+    stop: Arc<AtomicBool>,
+    /// Wakes the reactor thread out of `epoll_wait` (self-pipe write);
+    /// shared with every [`ReplySink::Reactor`] the reactor hands out.
+    wake: Arc<dyn Fn() + Send + Sync>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Reactor {
+    /// Take ownership of a (nonblocking) listener and serve it on a
+    /// dedicated `pipedp-reactor` thread until [`Reactor::stop_and_join`].
+    pub fn start(
+        listener: TcpListener,
+        batcher: Arc<Batcher>,
+        metrics: Arc<Metrics>,
+        line_stall: Duration,
+    ) -> Result<Reactor> {
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        let wake: Arc<dyn Fn() + Send + Sync> = Arc::new(move || {
+            // one byte per wake; a full pipe already guarantees a wake,
+            // and a closed read end (reactor exited) is harmless
+            let _ = (&wake_tx).write(&[1u8]);
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let inner_stop = stop.clone();
+        let inner_wake = wake.clone();
+        let handle = std::thread::Builder::new()
+            .name("pipedp-reactor".into())
+            .spawn(move || {
+                run(
+                    listener,
+                    wake_rx,
+                    inner_wake,
+                    inner_stop,
+                    batcher,
+                    metrics,
+                    line_stall,
+                );
+            })
+            .expect("spawn reactor thread");
+        Ok(Reactor {
+            stop,
+            wake,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// Signal the loop to exit, wake it, and join the thread.  The loop
+    /// flushes already-buffered replies within `SHUTDOWN_FLUSH` and
+    /// closes every socket before returning.  Idempotent.
+    pub fn stop_and_join(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        (self.wake)();
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// The event loop.  Single-threaded socket ownership: every read,
+/// write, and close of every connection happens here; worker threads
+/// only enqueue `(conn, line, terminal)` completions and poke the
+/// self-pipe.
+fn run(
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    wake: Arc<dyn Fn() + Send + Sync>,
+    stop: Arc<AtomicBool>,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    line_stall: Duration,
+) {
+    let epoll = match Epoll::new() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("pipedp-reactor: epoll unavailable: {e}");
+            return;
+        }
+    };
+    let (done_tx, done_rx) = mpsc::channel::<(u64, String, bool)>();
+    if epoll
+        .ctl(EPOLL_CTL_ADD, listener.as_raw_fd(), EPOLLIN, LISTENER_TOKEN)
+        .is_err()
+        || epoll
+            .ctl(EPOLL_CTL_ADD, wake_rx.as_raw_fd(), EPOLLIN, WAKE_TOKEN)
+            .is_err()
+    {
+        eprintln!("pipedp-reactor: cannot register listener/self-pipe");
+        return;
+    }
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut events = [EpollEvent { events: 0, data: 0 }; 64];
+    let mut wake_sink = [0u8; 64];
+    loop {
+        // 1. move finished replies into their connections' write buffers
+        //    and push opportunistically (the socket is usually writable)
+        while let Ok((id, line, terminal)) = done_rx.try_recv() {
+            if let Some(conn) = conns.get_mut(&id) {
+                if terminal {
+                    conn.pending = conn.pending.saturating_sub(1);
+                }
+                conn.write_buf.extend_from_slice(line.as_bytes());
+                conn.write_buf.push(b'\n');
+                if flush_writes(conn) {
+                    let _ = epoll.ctl(EPOLL_CTL_MOD, conn.stream.as_raw_fd(), conn.interest(), id);
+                } else {
+                    close_conn(&epoll, &mut conns, id);
+                }
+            }
+            // unknown id: the connection died mid-flight; drop the line
+        }
+        // 2. closing connections with nothing buffered and nothing in
+        //    flight are done
+        let drained: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| c.closing && c.write_buf.is_empty() && c.pending == 0)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in drained {
+            close_conn(&epoll, &mut conns, id);
+        }
+        if stop.load(Ordering::SeqCst) {
+            shutdown_flush(&done_rx, &mut conns);
+            return;
+        }
+        // 3. wait for readiness (bounded tick so stall sweeps run)
+        let n = epoll.wait(&mut events, TICK);
+        for ev in &events[..n] {
+            let token = ev.data; // copy out: the struct may be packed
+            let bits = ev.events;
+            match token {
+                LISTENER_TOKEN => accept_all(&epoll, &listener, &mut conns, &mut next_token),
+                WAKE_TOKEN => {
+                    while matches!((&wake_rx).read(&mut wake_sink), Ok(n) if n > 0) {}
+                }
+                id => handle_conn_event(
+                    &epoll,
+                    &mut conns,
+                    id,
+                    bits,
+                    &batcher,
+                    &metrics,
+                    &done_tx,
+                    &wake,
+                ),
+            }
+        }
+        // 4. stall sweeps: slow-loris on partial request lines, write
+        //    stall on peers that stopped reading
+        let now = Instant::now();
+        let stalled: Vec<u64> = conns
+            .iter()
+            .filter(|(_, c)| {
+                let read_stalled = c
+                    .line_started
+                    .is_some_and(|t0| now.duration_since(t0) >= line_stall);
+                let write_stalled = c
+                    .write_started
+                    .is_some_and(|t0| now.duration_since(t0) >= WRITE_STALL);
+                read_stalled || write_stalled
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in stalled {
+            close_conn(&epoll, &mut conns, id);
+        }
+    }
+}
+
+/// Accept every pending connection (edge exhaustion: the listener is
+/// level-triggered but accepting until `WouldBlock` costs one syscall
+/// and keeps the loop simple).
+fn accept_all(
+    epoll: &Epoll,
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let token = *next_token;
+                *next_token += 1;
+                let interest = EPOLLIN | EPOLLRDHUP;
+                if epoll
+                    .ctl(EPOLL_CTL_ADD, stream.as_raw_fd(), interest, token)
+                    .is_err()
+                {
+                    continue; // fd pressure: drop rather than park
+                }
+                conns.insert(
+                    token,
+                    Conn {
+                        stream,
+                        read_buf: Vec::new(),
+                        write_buf: Vec::new(),
+                        line_started: None,
+                        write_started: None,
+                        closing: false,
+                        pending: 0,
+                    },
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Deregister, close, and forget one connection.  Dropping the
+/// `TcpStream` closes the fd; pending completions for this id are
+/// discarded when they surface.
+fn close_conn(epoll: &Epoll, conns: &mut HashMap<u64, Conn>, id: u64) {
+    if let Some(conn) = conns.remove(&id) {
+        let _ = epoll.ctl(EPOLL_CTL_DEL, conn.stream.as_raw_fd(), 0, 0);
+    }
+}
+
+/// Dispatch one epoll event for connection `id`: read newly arrived
+/// bytes into complete request lines, flush the write buffer, and close
+/// on error/hang-up once the buffer drains.
+#[allow(clippy::too_many_arguments)]
+fn handle_conn_event(
+    epoll: &Epoll,
+    conns: &mut HashMap<u64, Conn>,
+    id: u64,
+    bits: u32,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    done_tx: &mpsc::Sender<(u64, String, bool)>,
+    wake: &Arc<dyn Fn() + Send + Sync>,
+) {
+    let Some(conn) = conns.get_mut(&id) else {
+        return; // already closed this iteration
+    };
+    if bits & EPOLLERR != 0 {
+        close_conn(epoll, conns, id);
+        return;
+    }
+    if bits & EPOLLIN != 0
+        && !conn.closing
+        && !read_lines(conn, id, batcher, metrics, done_tx, wake)
+    {
+        conn.closing = true;
+    }
+    if bits & (EPOLLHUP | EPOLLRDHUP) != 0 {
+        conn.closing = true;
+    }
+    if bits & EPOLLOUT != 0 && !flush_writes(conn) {
+        close_conn(epoll, conns, id);
+        return;
+    }
+    if conn.closing && conn.write_buf.is_empty() && conn.pending == 0 {
+        close_conn(epoll, conns, id);
+        return;
+    }
+    let interest = conn.interest();
+    let fd = conn.stream.as_raw_fd();
+    let _ = epoll.ctl(EPOLL_CTL_MOD, fd, interest, id);
+}
+
+/// Read until `WouldBlock`, slicing the buffer into complete request
+/// lines and handing each to the shared [`handle_line`] path with a
+/// reactor reply sink.  Returns `false` on EOF or a fatal read error
+/// (including non-UTF-8 input, which the blocking path also treats as
+/// fatal).
+fn read_lines(
+    conn: &mut Conn,
+    id: u64,
+    batcher: &Arc<Batcher>,
+    metrics: &Arc<Metrics>,
+    done_tx: &mpsc::Sender<(u64, String, bool)>,
+    wake: &Arc<dyn Fn() + Send + Sync>,
+) -> bool {
+    let mut chunk = [0u8; 4096];
+    let mut alive = true;
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => {
+                alive = false;
+                break;
+            }
+            Ok(n) => conn.read_buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                alive = false;
+                break;
+            }
+        }
+    }
+    // slice out every complete line; leftover bytes stay buffered and
+    // arm the slow-loris clock below
+    while let Some(pos) = conn.read_buf.iter().position(|&b| b == b'\n') {
+        let line_bytes: Vec<u8> = conn.read_buf.drain(..=pos).collect();
+        let line = match std::str::from_utf8(&line_bytes) {
+            Ok(s) => s.trim_end(),
+            Err(_) => return false, // same contract as the blocking reader
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let sink = ReplySink::Reactor {
+            conn: id,
+            tx: done_tx.clone(),
+            wake: wake.clone(),
+        };
+        handle_line(line, batcher, metrics, sink);
+        conn.pending += 1;
+    }
+    conn.line_started = if conn.read_buf.is_empty() {
+        None
+    } else {
+        Some(conn.line_started.unwrap_or_else(Instant::now))
+    };
+    alive
+}
+
+/// Push buffered bytes into the socket until it refuses or the buffer
+/// drains; maintains the write-stall clock.  Returns `false` on a fatal
+/// write error.
+fn flush_writes(conn: &mut Conn) -> bool {
+    while !conn.write_buf.is_empty() {
+        match conn.stream.write(&conn.write_buf) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.write_buf.drain(..n);
+                conn.write_started = None;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                conn.write_started = Some(conn.write_started.unwrap_or_else(Instant::now));
+                return true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    conn.write_started = None;
+    true
+}
+
+/// Final bounded flush at shutdown: the batcher and pool drains already
+/// answered everything in flight, so every reply is either in the
+/// completion channel or a write buffer.  Deliver what the sockets will
+/// take within [`SHUTDOWN_FLUSH`], then close everything.
+fn shutdown_flush(done_rx: &mpsc::Receiver<(u64, String, bool)>, conns: &mut HashMap<u64, Conn>) {
+    while let Ok((id, line, _)) = done_rx.try_recv() {
+        if let Some(conn) = conns.get_mut(&id) {
+            conn.write_buf.extend_from_slice(line.as_bytes());
+            conn.write_buf.push(b'\n');
+        }
+    }
+    let deadline = Instant::now() + SHUTDOWN_FLUSH;
+    for (_, conn) in conns.drain() {
+        if conn.write_buf.is_empty() {
+            continue;
+        }
+        let remaining = deadline
+            .saturating_duration_since(Instant::now())
+            .max(Duration::from_millis(1));
+        if conn.stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        if conn.stream.set_write_timeout(Some(remaining)).is_err() {
+            continue;
+        }
+        let mut stream = conn.stream;
+        let _ = stream.write_all(&conn.write_buf);
+        let _ = stream.flush();
+    }
+}

@@ -120,6 +120,13 @@ pub struct Request {
     /// and running solves are cancelled at the next superstep boundary;
     /// both reply `error_kind: "timeout"`.  Absent means no deadline.
     pub deadline_ms: Option<u64>,
+    /// Opt into streaming partial replies (docs/PROTOCOL.md §Streaming):
+    /// the server interleaves incremental `progress` frames (supersteps
+    /// completed / cells finalized, sampled at the executor's superstep
+    /// boundaries) and, when `want_solution` produces a large traceback,
+    /// chunked `solution` frames, before the terminal `result` frame.
+    /// Non-streaming requests receive exactly the PR-2 reply shape.
+    pub stream: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -236,6 +243,7 @@ impl Request {
         };
         let full = bool_field("full")?;
         let want_solution = bool_field("want_solution")?;
+        let stream = bool_field("stream")?;
         // absent means "no deadline"; a *present* field that is not a
         // non-negative integer is a typed error (same contract as flags)
         let deadline_ms = match v.get("deadline_ms") {
@@ -338,6 +346,7 @@ impl Request {
             full,
             want_solution,
             deadline_ms,
+            stream,
         })
     }
 
@@ -355,6 +364,9 @@ impl Request {
         }
         if let Some(d) = self.deadline_ms {
             fields.push(("deadline_ms", Json::int(d as i64)));
+        }
+        if self.stream {
+            fields.push(("stream", Json::Bool(true)));
         }
         match &self.body {
             RequestBody::Sdp(p) => {
@@ -553,6 +565,13 @@ impl Response {
     }
 
     pub fn encode(&self) -> String {
+        Json::obj(self.wire_fields()).to_string()
+    }
+
+    /// The reply's wire fields in one place, shared by the unary encoding
+    /// ([`Response::encode`]) and the streaming terminal frame
+    /// ([`Frame::Result`]), so the two paths cannot drift.
+    fn wire_fields(&self) -> Vec<(&str, Json)> {
         let mut fields: Vec<(&str, Json)> = vec![
             ("id", Json::int(self.id)),
             ("ok", Json::Bool(self.ok)),
@@ -583,7 +602,7 @@ impl Response {
         if let Some(s) = &self.stats {
             fields.push(("stats", s.clone()));
         }
-        Json::obj(fields).to_string()
+        fields
     }
 
     pub fn decode(line: &str) -> Result<Response> {
@@ -631,6 +650,153 @@ impl Response {
     }
 }
 
+/// Streamed replies split a large `solution` object across chunks of at
+/// most this many bytes of its JSON text (docs/PROTOCOL.md §Streaming).
+/// Chunk boundaries always fall on UTF-8 character boundaries, so every
+/// chunk is a valid JSON string on the wire.
+pub const SOLUTION_CHUNK_BYTES: usize = 2048;
+
+/// One frame of a streamed reply (docs/PROTOCOL.md §Streaming).
+///
+/// A `stream: true` request is answered by zero or more [`Frame::Progress`]
+/// frames, then (when the reply carries a reconstructed solution) one or
+/// more [`Frame::SolutionChunk`] frames in `seq` order, then exactly one
+/// terminal [`Frame::Result`].  Every frame carries the request `id`, so
+/// pipelined streams stay correlated; the terminal frame ends the stream
+/// for that id — nothing follows it.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// Incremental progress: `supersteps` completed and an estimate of
+    /// `cells` finalized so far, sampled at the executor's cancellation
+    /// poll sites.  Monotone non-decreasing within one stream.
+    Progress { id: i64, supersteps: u64, cells: u64 },
+    /// One chunk of the solution object's JSON text.  Concatenating all
+    /// chunks of a stream in `seq` order (0-based, dense) reproduces the
+    /// exact text the unary path would have put in the reply's `solution`
+    /// field; `last` marks the final chunk.
+    SolutionChunk {
+        id: i64,
+        seq: u64,
+        last: bool,
+        chunk: String,
+    },
+    /// The terminal frame: the ordinary reply shape plus
+    /// `"frame": "result"`.  When the solution travelled as chunks, the
+    /// terminal frame omits the inline `solution` field.
+    Result(Response),
+}
+
+impl Frame {
+    /// Encode one frame as a JSON line (without the trailing newline).
+    pub fn encode(&self) -> String {
+        match self {
+            Frame::Progress {
+                id,
+                supersteps,
+                cells,
+            } => Json::obj(vec![
+                ("id", Json::int(*id)),
+                ("frame", Json::str("progress")),
+                ("supersteps", Json::int(*supersteps as i64)),
+                ("cells", Json::int(*cells as i64)),
+            ])
+            .to_string(),
+            Frame::SolutionChunk {
+                id,
+                seq,
+                last,
+                chunk,
+            } => {
+                let mut fields = vec![
+                    ("id", Json::int(*id)),
+                    ("frame", Json::str("solution")),
+                    ("seq", Json::int(*seq as i64)),
+                    ("chunk", Json::str(chunk.clone())),
+                ];
+                if *last {
+                    fields.push(("last", Json::Bool(true)));
+                }
+                Json::obj(fields).to_string()
+            }
+            Frame::Result(resp) => {
+                let mut fields = resp.wire_fields();
+                fields.push(("frame", Json::str("result")));
+                Json::obj(fields).to_string()
+            }
+        }
+    }
+
+    /// Decode one reply line of a stream.  A line without a `frame`
+    /// marker is an ordinary unary reply (the server answers requests it
+    /// could not even parse the `stream` flag out of in the plain shape)
+    /// and decodes as a terminal [`Frame::Result`].
+    pub fn decode(line: &str) -> Result<Frame> {
+        let v = Json::parse(line)?;
+        let marker = match v.get("frame") {
+            None => return Ok(Frame::Result(Response::decode(line)?)),
+            Some(m) => m
+                .as_str()
+                .ok_or_else(|| Error::Json("field 'frame' is not a string".into()))?,
+        };
+        let non_negative = |key: &str| -> Result<u64> {
+            v.i64_field(key)?
+                .try_into()
+                .map_err(|_| Error::Json(format!("field '{key}' is negative")))
+        };
+        match marker {
+            "progress" => Ok(Frame::Progress {
+                id: v.i64_field("id")?,
+                supersteps: non_negative("supersteps")?,
+                cells: non_negative("cells")?,
+            }),
+            "solution" => Ok(Frame::SolutionChunk {
+                id: v.i64_field("id")?,
+                seq: non_negative("seq")?,
+                last: v.get("last").and_then(|x| x.as_bool()).unwrap_or(false),
+                chunk: v.str_field("chunk")?.to_string(),
+            }),
+            "result" => Ok(Frame::Result(Response::decode(line)?)),
+            other => Err(Error::Json(format!("unknown frame '{other}'"))),
+        }
+    }
+
+    /// The frame's request id (all frame shapes carry one).
+    pub fn id(&self) -> i64 {
+        match self {
+            Frame::Progress { id, .. } | Frame::SolutionChunk { id, .. } => *id,
+            Frame::Result(resp) => resp.id,
+        }
+    }
+}
+
+/// Split a solution object into its chunked wire frames: the object's
+/// JSON text cut at ≤[`SOLUTION_CHUNK_BYTES`] per chunk (always on UTF-8
+/// character boundaries), `seq` dense from 0, `last` on the final chunk.
+pub fn solution_chunk_frames(id: i64, solution: &Json) -> Vec<Frame> {
+    let text = solution.to_string();
+    let mut frames = Vec::new();
+    let mut rest = text.as_str();
+    let mut seq = 0u64;
+    loop {
+        let mut cut = rest.len().min(SOLUTION_CHUNK_BYTES);
+        while !rest.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        let (head, tail) = rest.split_at(cut);
+        frames.push(Frame::SolutionChunk {
+            id,
+            seq,
+            last: tail.is_empty(),
+            chunk: head.to_string(),
+        });
+        if tail.is_empty() {
+            return frames;
+        }
+        rest = tail;
+        seq += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -645,6 +811,7 @@ mod tests {
             full: true,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let line = req.encode();
         let back = Request::decode(&line).unwrap();
@@ -672,6 +839,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let back = Request::decode(&req.encode()).unwrap();
         match back.body {
@@ -733,6 +901,7 @@ mod tests {
             full: true,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let back = Request::decode(&req.encode()).unwrap();
         assert_eq!(back.id, 11);
@@ -781,6 +950,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let line = req.encode();
         assert!(line.contains("\"-inf\""), "−∞ must travel as the sentinel: {line}");
@@ -819,6 +989,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let back = Request::decode(&req.encode()).unwrap();
         match back.body {
@@ -875,6 +1046,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let line = req.encode();
         assert!(line.contains("want_solution"), "{line}");
@@ -949,6 +1121,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: Some(250),
+            stream: false,
         };
         let line = req.encode();
         assert!(line.contains("deadline_ms"), "{line}");
@@ -1011,6 +1184,126 @@ mod tests {
         assert!(ErrorKind::Panicked.retryable());
         assert!(!ErrorKind::TooLarge.retryable());
         assert!(!ErrorKind::Internal.retryable());
+    }
+
+    #[test]
+    fn stream_flag_roundtrip_and_typed_error() {
+        let mut req = Request {
+            id: 6,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Auto,
+            full: false,
+            want_solution: false,
+            deadline_ms: None,
+            stream: true,
+        };
+        let line = req.encode();
+        assert!(line.contains("\"stream\""), "{line}");
+        assert!(Request::decode(&line).unwrap().stream);
+        // absent defaults to false and is not emitted
+        req.stream = false;
+        let line = req.encode();
+        assert!(!line.contains("\"stream\""), "{line}");
+        assert!(!Request::decode(&line).unwrap().stream);
+        // a *present* flag of the wrong type is a typed error
+        assert!(
+            Request::decode(r#"{"id": 1, "kind": "stats", "stream": "yes"}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn progress_frame_roundtrip() {
+        let f = Frame::Progress {
+            id: 9,
+            supersteps: 12,
+            cells: 4096,
+        };
+        let line = f.encode();
+        assert!(line.contains("\"frame\":\"progress\""), "{line}");
+        match Frame::decode(&line).unwrap() {
+            Frame::Progress {
+                id,
+                supersteps,
+                cells,
+            } => {
+                assert_eq!((id, supersteps, cells), (9, 12, 4096));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert_eq!(f.id(), 9);
+        // malformed frames are typed errors, not silent results
+        assert!(Frame::decode(r#"{"id": 1, "frame": "progress"}"#).is_err());
+        assert!(Frame::decode(r#"{"id": 1, "frame": "melted"}"#).is_err());
+        assert!(Frame::decode(r#"{"id": 1, "frame": 7}"#).is_err());
+    }
+
+    #[test]
+    fn solution_chunks_reassemble_exactly() {
+        // a solution bigger than one chunk: chunks are dense, ordered,
+        // last-marked, and concatenate to the exact unary JSON text
+        let big = Json::obj(vec![(
+            "ops",
+            Json::str("M".repeat(3 * SOLUTION_CHUNK_BYTES)),
+        )]);
+        let frames = solution_chunk_frames(5, &big);
+        assert!(frames.len() >= 3, "{} chunks", frames.len());
+        let mut text = String::new();
+        for (i, f) in frames.iter().enumerate() {
+            let back = Frame::decode(&f.encode()).unwrap();
+            match back {
+                Frame::SolutionChunk {
+                    id,
+                    seq,
+                    last,
+                    chunk,
+                } => {
+                    assert_eq!(id, 5);
+                    assert_eq!(seq, i as u64);
+                    assert_eq!(last, i + 1 == frames.len());
+                    assert!(chunk.len() <= SOLUTION_CHUNK_BYTES);
+                    text.push_str(&chunk);
+                }
+                other => panic!("wrong frame: {other:?}"),
+            }
+        }
+        assert_eq!(text, big.to_string());
+        assert_eq!(Json::parse(&text).unwrap(), big);
+        // a small solution is exactly one last-marked chunk
+        let small = solution_chunk_frames(1, &Json::obj(vec![("parens", Json::str("(A1)"))]));
+        assert_eq!(small.len(), 1);
+        assert!(matches!(
+            &small[0],
+            Frame::SolutionChunk { last: true, seq: 0, .. }
+        ));
+    }
+
+    #[test]
+    fn result_frame_matches_unary_encoding() {
+        // the terminal frame is the unary reply plus the marker: decoding
+        // it as a Response must agree field-for-field (shared encoder)
+        let mut r = Response::ok(3, 15125, "native:mcm_pipeline_corrected[fused]".into(), None);
+        r.solution = Some(Json::obj(vec![("parens", Json::str("(A1A2)"))]));
+        let line = Frame::Result(r.clone()).encode();
+        assert!(line.contains("\"frame\":\"result\""), "{line}");
+        match Frame::decode(&line).unwrap() {
+            Frame::Result(back) => {
+                assert_eq!(back.id, r.id);
+                assert_eq!(back.value, r.value);
+                assert_eq!(back.served_by, r.served_by);
+                assert_eq!(
+                    back.solution.unwrap().str_field("parens").unwrap(),
+                    "(A1A2)"
+                );
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // a frame-less line is a terminal unary reply, so clients that
+        // streamed a request the server failed to parse still terminate
+        let plain = Response::err(0, "bad json".into()).encode();
+        assert!(matches!(Frame::decode(&plain).unwrap(), Frame::Result(_)));
     }
 
     #[test]

@@ -16,9 +16,19 @@ use crate::core::problem::{AlignProblem, CykProblem, McmProblem, SdpProblem};
 use crate::core::schedule::{default_align_tile, default_mcm_tile, linear, McmVariant};
 use crate::core::traceback;
 use crate::runtime::engine::Engine;
-use crate::runtime::exec_pool::CancelToken;
+use crate::runtime::exec_pool::{CancelToken, Progress};
 use crate::util::json::Json;
 use crate::{Error, Result};
+
+/// Per-request execution controls threaded from the batcher: the absolute
+/// deadline derived from `deadline_ms`, and the progress observer of a
+/// streamed request (docs/PROTOCOL.md §Streaming).  Both optional; the
+/// default is the plain PR-2 execution path.
+#[derive(Clone, Default)]
+pub struct SolveControls {
+    pub deadline: Option<Instant>,
+    pub progress: Option<Arc<Progress>>,
+}
 
 /// The wire shape of an MCM solution (docs/PROTOCOL.md).
 fn mcm_solution_json(parens: &str) -> Json {
@@ -39,6 +49,20 @@ fn viterbi_score(num_states: usize, table: &[f64]) -> f64 {
 /// the whole-sentence span (`−∞` means unparseable, not an error).
 fn cyk_score(p: &CykProblem, table: &[f64]) -> f64 {
     table[linear::cell_index(p.n(), 0, p.n() - 1) * p.num_nonterminals]
+}
+
+/// Streamed solves need an executor with cancellation poll sites — that
+/// is where the progress observer samples.  `seq` has none (its only poll
+/// is the entry gate), so streaming remaps it to the fused pipeline,
+/// which answers identically (oracle parity across executors is
+/// property-tested per kind).  Non-streamed requests keep the policy's
+/// choice untouched.
+fn pollable_choice(choice: ExecutorChoice, streaming: bool) -> ExecutorChoice {
+    if streaming && choice == ExecutorChoice::Seq {
+        ExecutorChoice::Fused
+    } else {
+        choice
+    }
 }
 
 /// Typed refusal for traceback on the faithful schedule: its stale-read
@@ -137,7 +161,7 @@ impl Router {
 
     /// Execute one request (already routed).
     pub fn execute(&self, req: &Request, route: Route) -> Response {
-        self.execute_with_batch(req, route, 1, None)
+        self.execute_with_batch(req, route, 1, &SolveControls::default())
     }
 
     /// [`Router::execute`] with an absolute deadline: the native executors
@@ -149,7 +173,11 @@ impl Router {
         route: Route,
         deadline: Option<Instant>,
     ) -> Response {
-        self.execute_with_batch(req, route, 1, deadline)
+        let controls = SolveControls {
+            deadline,
+            progress: None,
+        };
+        self.execute_with_batch(req, route, 1, &controls)
     }
 
     /// [`Router::execute`] with the same-kind group width threaded
@@ -164,10 +192,10 @@ impl Router {
         req: &Request,
         route: Route,
         batch: usize,
-        deadline: Option<Instant>,
+        controls: &SolveControls,
     ) -> Response {
         let result = match route {
-            Route::Native => self.execute_native(req, batch, deadline),
+            Route::Native => self.execute_native(req, batch, controls),
             Route::Xla => self.execute_xla(req),
         };
         match result {
@@ -191,13 +219,20 @@ impl Router {
         &self,
         req: &Request,
         batch: usize,
-        deadline: Option<Instant>,
+        controls: &SolveControls,
     ) -> Result<Response> {
         let table = policy::current();
-        let token = match deadline {
+        let mut token = match controls.deadline {
             Some(d) => CancelToken::at(d),
             None => CancelToken::never(),
         };
+        // a streamed request observes the solve through the token's poll
+        // sites; is_never() then reports false, steering every kind below
+        // onto its `*_cancellable` twin (the only executors that poll)
+        let streaming = controls.progress.is_some();
+        if let Some(p) = &controls.progress {
+            token = token.with_progress(p.clone());
+        }
         token.check()?;
         match &req.body {
             RequestBody::Sdp(p) => {
@@ -205,7 +240,7 @@ impl Router {
                 // keyed by k: the S-DP pipeline's parallelism is its lane
                 // count, not the table length — a long, narrow pipe has
                 // nothing for the pooled executor to spread
-                let choice = table.choose(Workload::Sdp, p.k(), batch);
+                let choice = pollable_choice(table.choose(Workload::Sdp, p.k(), batch), streaming);
                 // no uncertified schedule executes, whatever the choice:
                 // seq walks the same dependence structure the pipeline does
                 certify::gate_sdp(p.n, &p.offsets)?;
@@ -241,7 +276,8 @@ impl Router {
             RequestBody::Mcm { problem, variant } => match variant {
                 McmVariant::Corrected => {
                     faults::inject("mcm");
-                    let choice = table.choose(Workload::Mcm, problem.n(), batch);
+                    let choice =
+                        pollable_choice(table.choose(Workload::Mcm, problem.n(), batch), streaming);
                     // certify the schedule this choice will actually run:
                     // the pooled executor sweeps the cache-blocked
                     // regrouping of the superstep-tiled arena (ISSUE 9),
@@ -260,7 +296,7 @@ impl Router {
                         certify::gate_mcm(n, McmVariant::Corrected, 1)?;
                     }
                     let served = format!("native:mcm_pipeline_corrected[{}]", choice.name());
-                    if req.want_solution {
+                    if req.want_solution && !streaming {
                         // the recording executors fill the split sidecar
                         // alongside the table; seq derives it from the
                         // classic DP loop (one tie-break everywhere)
@@ -311,6 +347,18 @@ impl Router {
                             }
                         }
                     };
+                    if req.want_solution {
+                        // streamed solves run the pollable (non-recording)
+                        // executor and reconstruct the parenthesization
+                        // from the finished table — bit-identical to the
+                        // sidecar route by determinism (the XLA path
+                        // already relies on this, see execute_xla)
+                        let parens =
+                            traceback::mcm_parenthesization_from_table(problem, &st);
+                        let mut resp = self.done(req, st, &served);
+                        resp.solution = Some(mcm_solution_json(&parens));
+                        return Ok(resp);
+                    }
                     Ok(self.done(req, st, &served))
                 }
                 // the faithful variant reproduces the published schedule's
@@ -343,8 +391,10 @@ impl Router {
                 // min(m, n), so a skinny grid has nothing for the pooled
                 // block executor to spread and belongs to seq/fused even
                 // when its long side is huge
-                let choice =
-                    table.choose(Workload::Align, p.rows().min(p.cols()), batch);
+                let choice = pollable_choice(
+                    table.choose(Workload::Align, p.rows().min(p.cols()), batch),
+                    streaming,
+                );
                 // mirror the pooled executor's short-side fallback: it
                 // only compiles the tiled schedule when both sides exceed
                 // the default tile, otherwise it runs the untiled arena
@@ -358,7 +408,7 @@ impl Router {
                 };
                 certify::gate_align(rows, cols, tile)?;
                 let served = format!("native:align_wavefront[{}]", choice.name());
-                if req.want_solution {
+                if req.want_solution && !streaming {
                     let (st, moves) = match choice {
                         ExecutorChoice::Seq => crate::align::seq::solve_with_moves(p),
                         ExecutorChoice::Fused => crate::align::wavefront::solve_recorded(p),
@@ -397,13 +447,27 @@ impl Router {
                     }
                 };
                 let value = p.scalar(&st); // local alignment's scalar is the max, not the corner
+                if req.want_solution {
+                    // streamed: pollable executor + from-table traceback,
+                    // same reconstruction the XLA path uses
+                    let sol = traceback::align_solution_from_table(p, &st).to_json();
+                    let mut resp = self.done_scored(req, value, st, &served);
+                    resp.solution = Some(sol);
+                    return Ok(resp);
+                }
                 Ok(self.done_scored(req, value, st, &served))
             }
             RequestBody::Viterbi(p) => {
                 faults::inject("viterbi");
                 // keyed by state count: a lattice column holds S cells,
                 // and that is all a superstep has to spread
-                let choice = table.choose(Workload::Viterbi, p.num_states, batch);
+                let mut choice =
+                    pollable_choice(table.choose(Workload::Viterbi, p.num_states, batch), streaming);
+                if streaming && choice == ExecutorChoice::Simd {
+                    // the simd column sweep polls only at entry — no
+                    // sample points for a streamed solve
+                    choice = ExecutorChoice::Fused;
+                }
                 certify::gate_viterbi(p.num_steps(), p.num_states)?;
                 let served = format!("native:viterbi_lattice[{}]", choice.name());
                 if req.want_solution {
@@ -455,7 +519,7 @@ impl Router {
             RequestBody::Cyk(p) => {
                 faults::inject("cyk");
                 let n = p.n();
-                let choice = table.choose(Workload::Cyk, n, batch);
+                let choice = pollable_choice(table.choose(Workload::Cyk, n, batch), streaming);
                 // certify the MCM schedule this choice will actually
                 // retag and run: tiled for pooled, untiled otherwise
                 let tile = if choice == ExecutorChoice::Pooled {
@@ -587,17 +651,41 @@ impl Router {
         route: Route,
         deadlines: &[Option<Instant>],
     ) -> Vec<Response> {
+        let controls: Vec<SolveControls> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| SolveControls {
+                deadline: deadlines.get(i).copied().flatten(),
+                progress: None,
+            })
+            .collect();
+        self.execute_group_with_controls(reqs, route, &controls)
+    }
+
+    /// [`Router::execute_group_with_deadlines`] with full per-request
+    /// [`SolveControls`] (parallel to `reqs`; missing entries mean "no
+    /// controls").  Progress observers apply to native solves only: an
+    /// XLA dispatch is a single opaque call with nothing to sample, so a
+    /// streamed request served by XLA yields its terminal frame without
+    /// intermediate progress.
+    pub fn execute_group_with_controls(
+        &self,
+        reqs: &[Request],
+        route: Route,
+        controls: &[SolveControls],
+    ) -> Vec<Response> {
         if route == Route::Xla && reqs.len() > 1 {
             if let Some(responses) = self.try_execute_batched(reqs) {
                 return responses;
             }
         }
         let batch = reqs.len();
+        let default = SolveControls::default();
         reqs.iter()
             .enumerate()
             .map(|(i, r)| {
-                let deadline = deadlines.get(i).copied().flatten();
-                self.execute_with_batch(r, route, batch, deadline)
+                let c = controls.get(i).unwrap_or(&default);
+                self.execute_with_batch(r, route, batch, c)
             })
             .collect()
     }
@@ -801,6 +889,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         }
     }
 
@@ -836,6 +925,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -855,6 +945,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -878,6 +969,7 @@ mod tests {
             full: true,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -904,6 +996,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -928,6 +1021,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok);
@@ -972,6 +1066,7 @@ mod tests {
                 full: false,
                 want_solution: false,
                 deadline_ms: None,
+                stream: false,
             };
             let resp = r.execute(&req, Route::Native);
             assert!(resp.ok, "{choice:?}");
@@ -1004,6 +1099,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -1022,6 +1118,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(!resp.ok);
@@ -1040,6 +1137,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -1056,6 +1154,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&plain, Route::Native);
         assert!(resp.ok);
@@ -1103,6 +1202,7 @@ mod tests {
                     full: false,
                     want_solution: true,
                     deadline_ms: None,
+                    stream: false,
                 },
                 Route::Native,
             );
@@ -1122,6 +1222,7 @@ mod tests {
                     full: false,
                     want_solution: true,
                     deadline_ms: None,
+                    stream: false,
                 },
                 Route::Native,
             );
@@ -1169,6 +1270,7 @@ mod tests {
             full: true,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -1189,6 +1291,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -1222,6 +1325,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -1258,6 +1362,7 @@ mod tests {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute(&req, Route::Native);
         assert!(resp.ok, "{:?}", resp.error);
@@ -1297,6 +1402,7 @@ mod tests {
                     full: false,
                     want_solution: true,
                     deadline_ms: None,
+                    stream: false,
                 },
                 Route::Native,
             );
@@ -1314,6 +1420,7 @@ mod tests {
                     full: false,
                     want_solution: true,
                     deadline_ms: None,
+                    stream: false,
                 },
                 Route::Native,
             );
@@ -1340,6 +1447,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute_with_deadline(&req, Route::Native, Some(Instant::now()));
         assert_eq!(resp.error_kind, Some(ErrorKind::Timeout));
@@ -1353,6 +1461,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let resp = r.execute_with_deadline(&req, Route::Native, Some(Instant::now()));
         assert_eq!(resp.error_kind, Some(ErrorKind::Timeout));
@@ -1372,6 +1481,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         // large grid, but engineless → native; pinned xla → typed error
         assert_eq!(r.route(&req).unwrap(), Route::Native);
@@ -1393,6 +1503,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         let a = mk(1, AlignVariant::Lcs);
         let b = mk(2, AlignVariant::Lcs);
@@ -1453,6 +1564,99 @@ mod tests {
     }
 
     #[test]
+    fn streamed_controls_tick_progress_and_reconstruct_solutions() {
+        use crate::core::problem::AlignProblem;
+        use crate::runtime::exec_pool::Progress;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let r = Router::new(None);
+        // mcm: the streamed route reconstructs from the finished table and
+        // must agree with the recorded-sidecar route, tick for tick
+        let frames = Arc::new(AtomicU64::new(0));
+        let sink = {
+            let f = frames.clone();
+            Box::new(move |_s: u64, _c: u64| {
+                f.fetch_add(1, Ordering::Relaxed);
+            })
+        };
+        let progress = Arc::new(Progress::new(6, 36, sink));
+        let req = Request {
+            id: 1,
+            body: RequestBody::Mcm {
+                problem: McmProblem::clrs(),
+                variant: McmVariant::Corrected,
+            },
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+            stream: true,
+        };
+        let controls = vec![SolveControls {
+            deadline: None,
+            progress: Some(progress.clone()),
+        }];
+        let resps = r.execute_group_with_controls(
+            std::slice::from_ref(&req),
+            Route::Native,
+            &controls,
+        );
+        assert_eq!(resps.len(), 1);
+        let resp = &resps[0];
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.value, 15125);
+        assert_eq!(
+            resp.solution.as_ref().unwrap().str_field("parens").unwrap(),
+            "((A1(A2A3))((A4A5)A6))"
+        );
+        // a streamed solve never lands on the poll-free seq executor
+        assert!(!resp.served_by.ends_with("[seq]"), "{}", resp.served_by);
+        assert!(progress.supersteps() >= 1, "poll sites must tick");
+        assert!(frames.load(Ordering::Relaxed) >= 1);
+        // align: streamed from-table traceback replays to the wire value
+        let p = AlignProblem::lcs(vec![1, 2, 3, 4, 7], vec![2, 3, 9, 4]).unwrap();
+        let progress = Arc::new(Progress::new(8, 30, Box::new(|_, _| {})));
+        let req = Request {
+            id: 2,
+            body: RequestBody::Align(p),
+            backend: Backend::Native,
+            full: false,
+            want_solution: true,
+            deadline_ms: None,
+            stream: true,
+        };
+        let controls = vec![SolveControls {
+            deadline: None,
+            progress: Some(progress.clone()),
+        }];
+        let resps = r.execute_group_with_controls(
+            std::slice::from_ref(&req),
+            Route::Native,
+            &controls,
+        );
+        let resp = &resps[0];
+        assert!(resp.ok, "{:?}", resp.error);
+        let sol = resp.solution.as_ref().expect("align solution present");
+        assert_eq!(sol.i64_field("score").unwrap(), resp.value);
+        assert_eq!(resp.value, 3);
+        assert!(progress.supersteps() >= 1);
+        // a deadline and an observer compose: expired deadline still wins
+        let progress = Arc::new(Progress::new(0, 0, Box::new(|_, _| {})));
+        let controls = vec![SolveControls {
+            deadline: Some(Instant::now()),
+            progress: Some(progress),
+        }];
+        let resps = r.execute_group_with_controls(
+            std::slice::from_ref(&sdp_req(3, 64, Backend::Native)),
+            Route::Native,
+            &controls,
+        );
+        assert_eq!(
+            resps[0].error_kind,
+            Some(crate::coordinator::request::ErrorKind::Timeout)
+        );
+    }
+
+    #[test]
     fn native_solves_carry_verified_certificates() {
         // every native dispatch passes the certifier gate: the certified
         // counter grows by at least one per solve, across all three kinds
@@ -1470,6 +1674,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         assert!(r.execute(&mcm, Route::Native).ok);
         let faithful = Request {
@@ -1482,6 +1687,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         assert!(r.execute(&faithful, Route::Native).ok);
         let align = Request {
@@ -1493,6 +1699,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         assert!(r.execute(&align, Route::Native).ok);
         let viterbi = Request {
@@ -1502,6 +1709,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         assert!(r.execute(&viterbi, Route::Native).ok);
         let cyk = Request {
@@ -1511,6 +1719,7 @@ mod tests {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         };
         assert!(r.execute(&cyk, Route::Native).ok);
         assert!(

@@ -5,10 +5,14 @@
 //! `docs/PROTOCOL.md`.
 //!
 //! One thread per connection reads request lines and hands them to the
-//! batcher with a per-request reply channel; a per-connection writer
+//! batcher with a per-request reply sink; a per-connection writer
 //! thread serializes responses back (so batched completions from worker
 //! threads never interleave bytes).  `kind: "stats"` requests are answered
-//! inline with a metrics snapshot.
+//! inline with a metrics snapshot.  With [`Config::reactor`] set (Linux),
+//! the thread-per-connection front end is replaced by a single epoll
+//! event loop ([`crate::coordinator::reactor`]) that owns every socket;
+//! both front ends funnel lines through the same [`handle_line`], so
+//! replies are byte-identical between the two modes.
 //!
 //! Every thread the server spawns is tracked: `shutdown` stops the accept
 //! loop, unblocks parked connection readers with a socket `shutdown`,
@@ -23,10 +27,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{Batcher, Policy};
+use crate::coordinator::batcher::{deliver_terminal, Batcher, Policy, ReplySink};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::WorkerPool;
-use crate::coordinator::request::{ErrorKind, Request, RequestBody, Response};
+use crate::coordinator::request::{ErrorKind, Frame, Request, RequestBody, Response};
 use crate::coordinator::router::Router;
 use crate::core::schedule::McmVariant;
 use crate::runtime::engine::Engine;
@@ -63,6 +67,11 @@ pub struct Config {
     /// connections (no partial line) are never timed out.  `0` means the
     /// built-in default ([`DEFAULT_LINE_STALL`]).
     pub line_stall_ms: u64,
+    /// Serve connections from a single epoll event loop
+    /// ([`crate::coordinator::reactor`]) instead of a thread per
+    /// connection.  Linux only; elsewhere the flag logs a warning and the
+    /// blocking front end is used.  Wire behavior is identical.
+    pub reactor: bool,
 }
 
 impl Default for Config {
@@ -77,6 +86,7 @@ impl Default for Config {
             exec_threads: 0,
             max_solve_bytes: 0,
             line_stall_ms: 0,
+            reactor: false,
         }
     }
 }
@@ -145,6 +155,8 @@ pub struct Server {
     batcher: Arc<Batcher>,
     pool: Arc<WorkerPool>,
     conns: Arc<Connections>,
+    #[cfg(target_os = "linux")]
+    reactor: Option<crate::coordinator::reactor::Reactor>,
 }
 
 impl Server {
@@ -319,76 +331,55 @@ impl Server {
             finished: Mutex::new(Vec::new()),
         });
 
-        let accept_handle = {
-            let stop = stop.clone();
-            let metrics = metrics.clone();
-            let batcher = batcher.clone();
-            let conns = conns.clone();
-            std::thread::Builder::new()
-                .name("pipedp-accept".into())
-                .spawn(move || {
-                    while !stop.load(Ordering::Relaxed) {
-                        // join threads of connections that already ended so
-                        // handles do not accumulate for the server lifetime
-                        conns.reap_finished();
-                        match listener.accept() {
-                            Ok((stream, _)) => {
-                                let id = conns.next_id.fetch_add(1, Ordering::Relaxed);
-                                // registered *before* the reader spawns so
-                                // `shutdown` (which joins this accept thread
-                                // first) can always unblock it; a connection
-                                // whose stream cannot be cloned (fd pressure)
-                                // is dropped rather than parked un-unblockable
-                                match stream.try_clone() {
-                                    Ok(s) => {
-                                        conns.streams.lock().unwrap().insert(id, s);
-                                    }
-                                    Err(_) => continue,
-                                }
-                                let batcher = batcher.clone();
-                                let metrics = metrics.clone();
-                                let stop = stop.clone();
-                                let conns2 = conns.clone();
-                                let writer_name = format!("{}w{}", conns.tag, id);
-                                let handle = std::thread::Builder::new()
-                                    .name(format!("{}c{}", conns.tag, id))
-                                    .spawn(move || {
-                                        let _ = handle_connection(
-                                            stream,
-                                            batcher,
-                                            metrics,
-                                            stop,
-                                            writer_name,
-                                            line_stall,
-                                        );
-                                        conns2.streams.lock().unwrap().remove(&id);
-                                        // last act: announce completion for
-                                        // the accept loop's reaper
-                                        conns2.finished.lock().unwrap().push(id);
-                                    })
-                                    .expect("spawn connection thread");
-                                conns.handles.lock().unwrap().insert(id, handle);
-                            }
-                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(std::time::Duration::from_millis(5));
-                            }
-                            Err(_) => break,
-                        }
-                    }
-                })
-                .expect("spawn accept thread")
+        if cfg.reactor && !cfg!(target_os = "linux") {
+            eprintln!(
+                "pipedp-server: reactor mode is Linux-only; using blocking threads"
+            );
+        }
+        #[cfg(target_os = "linux")]
+        let (accept_handle, reactor) = if cfg.reactor {
+            let r = crate::coordinator::reactor::Reactor::start(
+                listener,
+                batcher.clone(),
+                metrics.clone(),
+                line_stall,
+            )?;
+            (None, Some(r))
+        } else {
+            (
+                Some(spawn_accept(
+                    listener,
+                    stop.clone(),
+                    metrics.clone(),
+                    batcher.clone(),
+                    conns.clone(),
+                    line_stall,
+                )),
+                None,
+            )
         };
+        #[cfg(not(target_os = "linux"))]
+        let accept_handle = Some(spawn_accept(
+            listener,
+            stop.clone(),
+            metrics.clone(),
+            batcher.clone(),
+            conns.clone(),
+            line_stall,
+        ));
 
         Ok(Server {
             local_addr,
             metrics,
             stop,
             warmed,
-            accept_handle: Some(accept_handle),
+            accept_handle,
             warm_handle,
             batcher,
             pool,
             conns,
+            #[cfg(target_os = "linux")]
+            reactor,
         })
     }
 
@@ -447,6 +438,14 @@ impl Server {
         // 4. run the queued flushes so in-flight requests are answered;
         //    the last reply sender drops here, releasing writer threads
         self.pool.shutdown();
+        // 4a. reactor mode: every in-flight reply is now queued on the
+        //     reactor's completion channel; stop the loop — it flushes
+        //     buffered replies within a bounded window and closes every
+        //     socket before its thread joins
+        #[cfg(target_os = "linux")]
+        if let Some(r) = self.reactor.take() {
+            r.stop_and_join();
+        }
         // 4b. bounded delivery window: after step 4 every reply sender is
         //     dropped, so each writer thread drains its channel onto the
         //     wire and exits — and its connection thread then removes its
@@ -576,6 +575,98 @@ fn parse_int_after(line: &str, mut i: usize) -> Option<i64> {
     line[start..i].parse::<i64>().ok()
 }
 
+/// The blocking front end: accept connections and spawn a
+/// reader + writer thread pair per connection, every thread registered
+/// with `conns` so `stop_and_drain` can unblock and join them.
+fn spawn_accept(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    batcher: Arc<Batcher>,
+    conns: Arc<Connections>,
+    line_stall: Duration,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("pipedp-accept".into())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                // join threads of connections that already ended so
+                // handles do not accumulate for the server lifetime
+                conns.reap_finished();
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let id = conns.next_id.fetch_add(1, Ordering::Relaxed);
+                        // registered *before* the reader spawns so
+                        // `shutdown` (which joins this accept thread
+                        // first) can always unblock it; a connection
+                        // whose stream cannot be cloned (fd pressure)
+                        // is dropped rather than parked un-unblockable
+                        match stream.try_clone() {
+                            Ok(s) => {
+                                conns.streams.lock().unwrap().insert(id, s);
+                            }
+                            Err(_) => continue,
+                        }
+                        let batcher = batcher.clone();
+                        let metrics = metrics.clone();
+                        let stop = stop.clone();
+                        let conns2 = conns.clone();
+                        let writer_name = format!("{}w{}", conns.tag, id);
+                        let handle = std::thread::Builder::new()
+                            .name(format!("{}c{}", conns.tag, id))
+                            .spawn(move || {
+                                let _ = handle_connection(
+                                    stream,
+                                    batcher,
+                                    metrics,
+                                    stop,
+                                    writer_name,
+                                    line_stall,
+                                );
+                                conns2.streams.lock().unwrap().remove(&id);
+                                // last act: announce completion for
+                                // the accept loop's reaper
+                                conns2.finished.lock().unwrap().push(id);
+                            })
+                            .expect("spawn connection thread");
+                        conns.handles.lock().unwrap().insert(id, handle);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+        .expect("spawn accept thread")
+}
+
+/// Decode one request line and dispatch it: `stats` answered inline with
+/// a metrics snapshot, decode errors answered with a typed error reply
+/// correlated via [`extract_request_id`], everything else submitted to
+/// the batcher with the given reply sink.  Both front ends — the
+/// thread-per-connection reader and the epoll reactor — funnel every
+/// non-empty line through here, which is what keeps their wire behavior
+/// byte-identical.
+pub(crate) fn handle_line(line: &str, batcher: &Batcher, metrics: &Metrics, reply: ReplySink) {
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    match Request::decode(line) {
+        Ok(req) if matches!(req.body, RequestBody::Stats) => {
+            let mut resp = Response::ok(req.id, 0, "server:stats".into(), None);
+            resp.stats = Some(metrics.snapshot());
+            deliver_terminal(&reply, req.stream, resp);
+        }
+        // routing happens inside the batcher (it owns the engine-aware
+        // router) so grouping matches the destination
+        Ok(req) => batcher.submit_request(req, reply),
+        Err(e) => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let resp = Response::err(extract_request_id(line), e.to_string());
+            deliver_terminal(&reply, false, resp);
+        }
+    }
+}
+
 fn handle_connection(
     stream: TcpStream,
     batcher: Arc<Batcher>,
@@ -591,13 +682,14 @@ fn handle_connection(
     stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    // responses funnel through one channel so writes never interleave
-    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    // replies funnel through one channel of pre-encoded lines so writes
+    // never interleave; carrying lines (not `Response`s) lets streaming
+    // progress/solution frames share the path with unary replies
+    let (resp_tx, resp_rx) = mpsc::channel::<String>();
     let writer_handle = std::thread::Builder::new()
         .name(writer_name)
         .spawn(move || {
-            while let Ok(resp) = resp_rx.recv() {
-                let mut line = resp.encode();
+            while let Ok(mut line) = resp_rx.recv() {
                 line.push('\n');
                 if writer.write_all(line.as_bytes()).is_err() {
                     break;
@@ -625,23 +717,7 @@ fn handle_connection(
                     line.clear();
                     continue;
                 }
-                metrics.requests.fetch_add(1, Ordering::Relaxed);
-                match Request::decode(&line) {
-                    Ok(req) if matches!(req.body, RequestBody::Stats) => {
-                        let mut resp = Response::ok(req.id, 0, "server:stats".into(), None);
-                        resp.stats = Some(metrics.snapshot());
-                        let _ = resp_tx.send(resp);
-                    }
-                    // routing happens inside the batcher (it owns the
-                    // engine-aware router) so grouping matches the
-                    // destination
-                    Ok(req) => batcher.submit_request(req, resp_tx.clone()),
-                    Err(e) => {
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        let _ = resp_tx
-                            .send(Response::err(extract_request_id(&line), e.to_string()));
-                    }
-                }
+                handle_line(&line, &batcher, &metrics, ReplySink::Line(resp_tx.clone()));
                 line.clear();
             }
             Err(e)
@@ -774,6 +850,58 @@ impl Client {
             let jitter = rng.range(0..(base as i64 + 1)) as u64;
             std::thread::sleep(Duration::from_millis(base + jitter));
             attempt += 1;
+        }
+    }
+
+    /// Send one request with `stream: true` and consume its frame
+    /// sequence (docs/PROTOCOL.md "Streaming"): each `progress` frame
+    /// invokes `on_progress(supersteps, cells)`, `solution` chunks are
+    /// reassembled in arrival order, and the terminal `result` frame is
+    /// returned with the reassembled solution re-attached — so callers
+    /// see exactly what the unary [`Client::call`] would have returned.
+    /// A server that ignores the flag (or refuses the request) simply
+    /// yields zero progress frames before the result.
+    pub fn call_streaming(
+        &mut self,
+        mut req: Request,
+        mut on_progress: impl FnMut(u64, u64),
+    ) -> Result<Response> {
+        req.id = self.next_id;
+        self.next_id += 1;
+        req.stream = true;
+        let id = req.id;
+        let mut line = req.encode();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut chunks = String::new();
+        loop {
+            let resp_line = self.read_reply_line()?;
+            match Frame::decode(resp_line.trim_end())? {
+                Frame::Progress {
+                    id: fid,
+                    supersteps,
+                    cells,
+                } => {
+                    if fid == id {
+                        on_progress(supersteps, cells);
+                    }
+                }
+                Frame::SolutionChunk { id: fid, chunk, .. } => {
+                    if fid == id {
+                        chunks.push_str(&chunk);
+                    }
+                }
+                Frame::Result(mut resp) => {
+                    if resp.id != id {
+                        continue; // stray reply from earlier traffic
+                    }
+                    if resp.solution.is_none() && !chunks.is_empty() {
+                        resp.solution = Some(Json::parse(&chunks)?);
+                    }
+                    return Ok(resp);
+                }
+            }
         }
     }
 

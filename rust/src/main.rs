@@ -77,9 +77,9 @@ const USAGE: &str = "pipedp <subcommand> [flags]
   verify      [--max-n N]
   certify     --kind mcm|align|sdp|viterbi|cyk [--n N] [--variant corrected|faithful] [--tile T] [--rows R --cols C] [--offsets 7,5,2] [--steps T --states S]
   simulate    [--samples S]
-  serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E] [--max-solve-bytes B]
-  client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution] [--deadline-ms D] [--retries R]
-  bench-check --baseline BENCH_x.json --current BENCH_x.json [--tolerance 0.30] [--relative-to seq] [--min-speedup seq]
+  serve       [--addr HOST:PORT] [--workers W] [--max-batch B] [--max-wait-ms T] [--exec-threads E] [--max-solve-bytes B] [--reactor]
+  client      [--addr HOST:PORT] (--n N --offsets … --op … | --dims …) [--stats] [--solution] [--stream] [--deadline-ms D] [--retries R]
+  bench-check --baseline BENCH_x.json --current BENCH_x.json [--tolerance 0.30] [--relative-to seq] [--min-speedup seq] [--max-field F=LIMIT,…]
   info";
 
 fn parse_backend(args: &Args) -> Result<Backend> {
@@ -587,6 +587,10 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "drop a connection whose partial request line stalls this long; 0 = default",
             Some("0"),
         )
+        .boolflag(
+            "reactor",
+            "serve connections from a single epoll event loop (Linux)",
+        )
         .parse(argv)?;
     let cfg = Config {
         addr: args.get_str("addr")?.to_string(),
@@ -601,6 +605,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         exec_threads: args.get_usize("exec-threads")?,
         max_solve_bytes: args.get_usize("max-solve-bytes")?,
         line_stall_ms: args.get_usize("line-stall-ms")? as u64,
+        reactor: args.get_bool("reactor"),
     };
     let server = Server::start(cfg)?;
     println!("pipedp server listening on {}", server.local_addr);
@@ -624,6 +629,10 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
         .boolflag(
             "solution",
             "set want_solution: ask the server to reconstruct the optimal solution",
+        )
+        .boolflag(
+            "stream",
+            "stream progress frames (and chunked solutions) for this request",
         )
         .flag(
             "deadline-ms",
@@ -653,17 +662,23 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
         ms => Some(ms as u64),
     };
     let retries = args.get_usize("retries")? as u32;
-    let resp = client.call_with_retry(
-        Request {
-            id: 0,
-            body,
-            backend,
-            full: false,
-            want_solution: args.get_bool("solution"),
-            deadline_ms,
-        },
-        retries,
-    )?;
+    let req = Request {
+        id: 0,
+        body,
+        backend,
+        full: false,
+        want_solution: args.get_bool("solution"),
+        deadline_ms,
+        stream: args.get_bool("stream"),
+    };
+    let resp = if req.stream {
+        // progress to stderr so stdout stays the machine-readable result
+        client.call_streaming(req, |supersteps, cells| {
+            eprintln!("progress: {supersteps} supersteps, ~{cells} cells");
+        })?
+    } else {
+        client.call_with_retry(req, retries)?
+    };
     if let Some(stats) = resp.stats {
         println!("{}", stats.to_string());
     } else if resp.ok {
@@ -702,6 +717,12 @@ fn cmd_client(argv: Vec<String>) -> Result<()> {
 /// gate: any *current* row at n ≥ 256 whose `policy` winner is the named
 /// column fails the check (the accelerated executors must beat the
 /// sequential baseline at every serving size — ISSUE 9).
+///
+/// `--max-field F=LIMIT[,…]` adds baseline-free absolute ceilings on the
+/// *current* record, checked at top level and in every `results` row.
+/// The coordinator's connection-scaling gate uses it: the bench reports
+/// p99s as machine-portable ratios to its own base tier, and the ceiling
+/// enforces "10× the connections keeps p99 within 2×" on any hardware.
 fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
     let args = Args::new("bench-check", "bench-regression gate for BENCH_*.json records")
         .flag("baseline", "committed baseline JSON", None)
@@ -719,6 +740,11 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
         .flag(
             "min-speedup",
             "fail if any current row at n >= 256 crowns this policy winner",
+            None,
+        )
+        .flag(
+            "max-field",
+            "comma-separated FIELD=LIMIT ceilings checked on the current record",
             None,
         )
         .parse(argv)?;
@@ -862,6 +888,50 @@ fn cmd_bench_check(argv: Vec<String>) -> Result<()> {
                     "{tag}n={n}: policy winner is '{slow}' at a serving size \
                      (--min-speedup requires a faster executor for n >= 256)"
                 ));
+            }
+        }
+    }
+    // --max-field f=limit[,f=limit…]: absolute ceilings on the *current*
+    // record, independent of any baseline.  The connection-scaling gate
+    // (BENCH_coordinator.json) uses it to enforce the acceptance bound
+    // "10× the connections keeps p99 within 2×" on the machine-portable
+    // ratio fields.  Each named field is checked wherever it appears
+    // numerically — top level and every `results` row; a name matching
+    // nothing is an error (a typo would otherwise gate vacuously).
+    if let Some(spec) = args.get("max-field") {
+        for pair in spec.split(',').filter(|s| !s.is_empty()) {
+            let Some((field, limit_s)) = pair.split_once('=') else {
+                return Err(pipedp::Error::InvalidProblem(format!(
+                    "--max-field expects FIELD=LIMIT, got '{pair}'"
+                )));
+            };
+            let limit: f64 = limit_s.parse().map_err(|_| {
+                pipedp::Error::InvalidProblem(format!(
+                    "--max-field {field}: limit '{limit_s}' is not a number"
+                ))
+            })?;
+            let mut seen = false;
+            let mut check = |loc: &str, val: f64| {
+                seen = true;
+                if val > limit {
+                    failures.push(format!(
+                        "{loc} {field}: {val:.3} exceeds --max-field ceiling {limit:.3}"
+                    ));
+                }
+            };
+            if let Some(v) = current.get(field).and_then(|v| v.as_f64()) {
+                check("top-level", v);
+            }
+            for row in current.arr_field("results")? {
+                if let Some(v) = row.get(field).and_then(|v| v.as_f64()) {
+                    let n = row.i64_field("n").unwrap_or(0);
+                    check(&format!("n={n}"), v);
+                }
+            }
+            if !seen {
+                return Err(pipedp::Error::InvalidProblem(format!(
+                    "--max-field {field}: no numeric field of that name in the current record"
+                )));
             }
         }
     }

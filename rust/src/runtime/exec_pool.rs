@@ -43,6 +43,7 @@
 //! barrier; executors are oracle-property-tested precisely so that class
 //! of bug cannot ship.)
 
+use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -58,10 +59,26 @@ use std::time::{Duration, Instant};
 /// The default token never cancels and costs nothing to poll
 /// ([`CancelToken::is_never`] lets hot paths skip the clock read
 /// entirely), so the non-deadline path is unchanged.
-#[derive(Clone, Debug, Default)]
+///
+/// A token may also carry a [`Progress`] observer: the same poll sites
+/// that check for cancellation then double as progress sample points, so
+/// streaming replies (docs/PROTOCOL.md §Streaming) ride the executors'
+/// existing superstep boundaries with no new hooks in the kernels.
+#[derive(Clone, Default)]
 pub struct CancelToken {
     deadline: Option<Instant>,
     stop: Option<Arc<AtomicBool>>,
+    progress: Option<Arc<Progress>>,
+}
+
+impl fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("deadline", &self.deadline)
+            .field("stop", &self.stop)
+            .field("progress", &self.progress.is_some())
+            .finish()
+    }
 }
 
 impl CancelToken {
@@ -75,6 +92,7 @@ impl CancelToken {
         CancelToken {
             deadline: Some(deadline),
             stop: None,
+            progress: None,
         }
     }
 
@@ -90,14 +108,31 @@ impl CancelToken {
         self
     }
 
-    /// True when this token can never fire — executors use it to skip
-    /// per-step clock reads on the common no-deadline path.
-    pub fn is_never(&self) -> bool {
-        self.deadline.is_none() && self.stop.is_none()
+    /// Attach a [`Progress`] observer: every subsequent poll of this token
+    /// also ticks the observer.  A token with an observer reports
+    /// `is_never() == false` even without a deadline, which is what steers
+    /// the router onto the `*_cancellable` executor twins — the only ones
+    /// with poll sites to sample.
+    pub fn with_progress(mut self, progress: Arc<Progress>) -> CancelToken {
+        self.progress = Some(progress);
+        self
     }
 
-    /// Poll: has the deadline passed or the stop flag been raised?
+    /// True when this token can never fire — executors use it to skip
+    /// per-step clock reads on the common no-deadline path.  A token
+    /// carrying a progress observer is never "never": its polls are the
+    /// observer's sample points.
+    pub fn is_never(&self) -> bool {
+        self.deadline.is_none() && self.stop.is_none() && self.progress.is_none()
+    }
+
+    /// Poll: has the deadline passed or the stop flag been raised?  Also
+    /// the progress sample point — one tick per poll, throttled inside
+    /// [`Progress`].
     pub fn is_cancelled(&self) -> bool {
+        if let Some(p) = &self.progress {
+            p.tick();
+        }
         if let Some(stop) = &self.stop {
             if stop.load(Ordering::Relaxed) {
                 return true;
@@ -134,6 +169,95 @@ pub fn cancelled<T>() -> crate::Result<T> {
 /// parallel executors poll every superstep instead — only party 0 reads
 /// the clock, and it is already paying a barrier per step.
 pub const CANCEL_POLL_STRIDE: usize = 64;
+
+/// Every poll among the first this many always reaches the sink — a short
+/// solve still yields a useful progress trail before throttling begins.
+pub const PROGRESS_FIRST_EMITS: u64 = 4;
+
+/// After the first [`PROGRESS_FIRST_EMITS`] polls, at most one progress
+/// emission per this interval: long solves stream a bounded frame rate no
+/// matter how fast their supersteps tick.
+pub const PROGRESS_EMIT_INTERVAL: Duration = Duration::from_millis(25);
+
+/// Progress observer for one streamed solve (docs/PROTOCOL.md §Streaming).
+///
+/// Attached to a [`CancelToken`] via [`CancelToken::with_progress`], it
+/// counts the token's polls as completed supersteps, scales them into an
+/// estimate of finalized cells against the solve's known totals, and
+/// forwards throttled `(supersteps, cells)` samples to the sink — which
+/// the coordinator's batcher turns into `progress` frames on the wire.
+///
+/// Polls arrive from the executing thread only (parallel executors poll
+/// on party 0; single-thread executors on their own thread), so the
+/// counters need no stronger ordering than the audited `Relaxed` this
+/// module already uses.
+pub struct Progress {
+    /// Expected superstep count for the whole solve (0 = unknown).
+    total_supersteps: u64,
+    /// Expected cell count for the whole solve (0 = unknown).
+    total_cells: u64,
+    supersteps: AtomicU64,
+    emitted: AtomicU64,
+    /// Microseconds from `started` at the last emission.
+    last_emit_us: AtomicU64,
+    started: Instant,
+    sink: Box<dyn Fn(u64, u64) + Send + Sync>,
+}
+
+impl Progress {
+    /// `total_supersteps` / `total_cells` are the solve-shape estimates
+    /// the cells column is interpolated from; pass 0 when unknown (the
+    /// cells column then stays 0 and only supersteps advance).
+    pub fn new(
+        total_supersteps: u64,
+        total_cells: u64,
+        sink: Box<dyn Fn(u64, u64) + Send + Sync>,
+    ) -> Progress {
+        Progress {
+            total_supersteps,
+            total_cells,
+            supersteps: AtomicU64::new(0),
+            emitted: AtomicU64::new(0),
+            last_emit_us: AtomicU64::new(0),
+            started: Instant::now(),
+            sink,
+        }
+    }
+
+    /// Supersteps observed so far.
+    pub fn supersteps(&self) -> u64 {
+        self.supersteps.load(Ordering::Relaxed)
+    }
+
+    /// Emissions that actually reached the sink (post-throttle).
+    pub fn emitted(&self) -> u64 {
+        self.emitted.load(Ordering::Relaxed)
+    }
+
+    /// One poll-site tick: count the superstep, and emit unless throttled.
+    pub fn tick(&self) {
+        let steps = self.supersteps.fetch_add(1, Ordering::Relaxed) + 1;
+        let sent = self.emitted.load(Ordering::Relaxed);
+        let now_us = self.started.elapsed().as_micros() as u64;
+        if sent >= PROGRESS_FIRST_EMITS {
+            let last = self.last_emit_us.load(Ordering::Relaxed);
+            if now_us.saturating_sub(last) < PROGRESS_EMIT_INTERVAL.as_micros() as u64 {
+                return;
+            }
+        }
+        self.emitted.store(sent + 1, Ordering::Relaxed);
+        self.last_emit_us.store(now_us, Ordering::Relaxed);
+        let cells = if self.total_supersteps == 0 {
+            0
+        } else {
+            // linear interpolation against the known solve shape, capped:
+            // an estimate that never overshoots the true total
+            (self.total_cells / self.total_supersteps)
+                .saturating_mul(steps.min(self.total_supersteps))
+        };
+        (self.sink)(steps, cells);
+    }
+}
 
 /// Sense-reversing barrier: one atomic `fetch_add` per arrival, a
 /// spin-then-yield wait, no mutex.  Each participant keeps a *local*
@@ -667,5 +791,40 @@ mod tests {
             hit.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn progress_observer_ticks_through_token_polls() {
+        let seen = Arc::new(Mutex::new(Vec::<(u64, u64)>::new()));
+        let sink = {
+            let seen = seen.clone();
+            Box::new(move |s: u64, c: u64| seen.lock().unwrap().push((s, c)))
+        };
+        // 8 supersteps over an 8×100-cell solve
+        let p = Arc::new(Progress::new(8, 800, sink));
+        let t = CancelToken::never().with_progress(p.clone());
+        // an observer alone steers onto the pollable executors…
+        assert!(!t.is_never());
+        for _ in 0..8 {
+            // …and never cancels anything
+            assert!(!t.is_cancelled());
+        }
+        assert_eq!(p.supersteps(), 8);
+        let frames = seen.lock().unwrap().clone();
+        // the first PROGRESS_FIRST_EMITS polls always emit; later polls
+        // inside the 25ms window are throttled
+        assert!(frames.len() >= PROGRESS_FIRST_EMITS as usize, "{frames:?}");
+        assert_eq!(p.emitted(), frames.len() as u64);
+        // monotone supersteps, interpolated cells capped at the total
+        for w in frames.windows(2) {
+            assert!(w[1].0 > w[0].0, "{frames:?}");
+        }
+        for &(s, c) in &frames {
+            assert_eq!(c, 100 * s.min(8), "{frames:?}");
+        }
+        // unknown totals keep the cells column at 0
+        let p0 = Arc::new(Progress::new(0, 0, Box::new(|_, _| {})));
+        p0.tick();
+        assert_eq!(p0.supersteps(), 1);
     }
 }

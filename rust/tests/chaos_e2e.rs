@@ -46,6 +46,7 @@ fn start_server(max_solve_bytes: usize) -> Server {
         exec_threads: 0,
         max_solve_bytes,
         line_stall_ms: 0,
+        reactor: false,
     })
     .expect("server starts")
 }
@@ -58,6 +59,7 @@ fn sdp_request(n: usize, deadline_ms: Option<u64>) -> Request {
         full: false,
         want_solution: false,
         deadline_ms,
+        stream: false,
     }
 }
 
@@ -72,6 +74,7 @@ fn mcm_request(deadline_ms: Option<u64>) -> Request {
         full: false,
         want_solution: false,
         deadline_ms,
+        stream: false,
     }
 }
 
@@ -92,6 +95,7 @@ fn align_request() -> Request {
         full: false,
         want_solution: false,
         deadline_ms: None,
+        stream: false,
     }
 }
 
@@ -104,6 +108,7 @@ fn stats(client: &mut Client) -> pipedp::util::json::Json {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap()
         .stats
@@ -329,6 +334,83 @@ fn oversized_solve_rejected_with_typed_too_large() {
     assert_eq!(resp.value, 987);
 
     assert!(stats(&mut client).i64_field("rejected_too_large").unwrap() >= 1);
+    server.shutdown();
+}
+
+/// Reactor-mode chaos arm: a peer that dies mid-stream must not strand
+/// its in-flight work.  A delayed align pins the single worker while
+/// four streamed, short-deadline SDP solves queue behind it; the
+/// connection is killed before any of them run.  The batcher must shed
+/// the orphans with typed `timeout` replies (ticking the counter even
+/// though nobody is left to read them) and the server must keep serving.
+#[test]
+fn mid_stream_connection_kill_sheds_orphans_with_typed_timeout() {
+    let _g = faults_locked();
+    faults::install(Some(FaultPlan::parse("delay:align:600ms").unwrap()));
+
+    let server = Server::start(Config {
+        addr: "127.0.0.1:0".into(),
+        workers: 1, // single worker: the delayed align blocks everything
+        policy: Policy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        warm: false,
+        queue_cap: 8,
+        exec_threads: 0,
+        max_solve_bytes: 0,
+        line_stall_ms: 0,
+        reactor: true,
+    })
+    .expect("server starts");
+
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+
+    // occupy the worker with the delayed align…
+    let mut pin = align_request();
+    pin.id = 900;
+    pin.stream = true;
+    writer
+        .write_all(format!("{}\n", pin.encode()).as_bytes())
+        .unwrap();
+    writer.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+
+    // …then pile four streamed solves behind it, deadlines already
+    // doomed: 100 ms each against a worker busy for ~450 ms more
+    for k in 0..4u64 {
+        let mut req = sdp_request(64, Some(100));
+        req.id = 901 + k as i64;
+        req.stream = true;
+        writer
+            .write_all(format!("{}\n", req.encode()).as_bytes())
+            .unwrap();
+    }
+    writer.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+
+    // kill the peer mid-stream, before any queued solve has run
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    drop(writer);
+    drop(stream);
+
+    // let the worker free up and the expired partition run
+    std::thread::sleep(Duration::from_millis(900));
+    faults::install(None);
+
+    // the server must still be healthy and the orphans must have been
+    // shed as typed timeouts, not silently dropped
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+    let resp = client.call(sdp_request(16, None)).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.value, 987);
+    assert!(
+        stats(&mut client).i64_field("timeouts").unwrap() >= 4,
+        "orphaned streamed requests must shed as typed timeouts"
+    );
+    drop(client);
     server.shutdown();
 }
 

@@ -391,6 +391,65 @@ fn bench_check_gates_regressions() {
 }
 
 #[test]
+fn bench_check_max_field_gates_absolute_ceilings() {
+    // the coordinator connection-scaling gate: `results` rows carry p99
+    // ratios to the run's own base tier, and --max-field bounds them
+    // absolutely (no baseline arithmetic involved)
+    let dir = std::env::temp_dir().join(format!("pipedp-max-field-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("base.json");
+    let cur = dir.join("cur.json");
+    std::fs::write(
+        &base,
+        r#"{"results":[{"n":2,"latency_p99_ratio":1.0},{"n":20,"latency_p99_ratio":1.0}]}"#,
+    )
+    .unwrap();
+    let run = |maxf: &str, tol: &str| {
+        pipedp(&[
+            "bench-check",
+            "--baseline",
+            base.to_str().unwrap(),
+            "--current",
+            cur.to_str().unwrap(),
+            "--tolerance",
+            tol,
+            "--max-field",
+            maxf,
+        ])
+    };
+    // 10x the connections at 1.7x p99: inside the 2.0 ceiling
+    std::fs::write(
+        &cur,
+        r#"{"results":[{"n":2,"latency_p99_ratio":1.0},{"n":20,"latency_p99_ratio":1.7}]}"#,
+    )
+    .unwrap();
+    let out = run("latency_p99_ratio=2.0", "1.0");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // over the ceiling fails even when the baseline ratio gate passes
+    std::fs::write(
+        &cur,
+        r#"{"results":[{"n":2,"latency_p99_ratio":1.0},{"n":20,"latency_p99_ratio":2.4}]}"#,
+    )
+    .unwrap();
+    let out = run("latency_p99_ratio=2.0", "2.0");
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("exceeds --max-field"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // a field name matching nothing is an error, not a vacuous pass
+    let out = run("nosuch_field=1.0", "2.0");
+    assert_eq!(out.status.code(), Some(1));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("no numeric field"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn serve_accepts_exec_threads_flag() {
     // bad value must be rejected by the flag parser (exit 1), proving the
     // flag is wired; a full serve run is covered by the e2e suite

@@ -1,0 +1,191 @@
+//! Soak/leak wall: hundreds of concurrent connections driving mixed
+//! kinds — pipelined unary bursts and streaming solves — through the
+//! epoll reactor, then a full drain.  Asserts every reply is correlated
+//! and, on Linux, that the process returns to its file-descriptor
+//! baseline (`/proc/self/fd`) and sheds every server thread
+//! (`/proc/self/task`), the fd-side companion of the blocking path's
+//! drain test in `server_e2e`.
+//!
+//! Kept as a single test in its own binary so the scans see no fds or
+//! threads from concurrently running tests.
+
+use std::time::Duration;
+
+use pipedp::coordinator::batcher::Policy;
+use pipedp::coordinator::request::{Backend, Request, RequestBody};
+use pipedp::coordinator::server::{Client, Config, Server};
+use pipedp::core::problem::{
+    AlignProblem, AlignScoring, AlignVariant, McmProblem, SdpProblem, ViterbiProblem,
+};
+use pipedp::core::schedule::McmVariant;
+
+/// Open file descriptors of this process.
+#[cfg(target_os = "linux")]
+fn open_fds() -> usize {
+    std::fs::read_dir("/proc/self/fd")
+        .map(|d| d.count())
+        .unwrap_or(0)
+}
+
+/// Live threads of this process whose name starts with `tag`.
+#[cfg(target_os = "linux")]
+fn live_threads_with_prefix(tag: &str) -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .map(|entries| {
+            entries
+                .filter_map(|e| e.ok())
+                .filter_map(|e| std::fs::read_to_string(e.path().join("comm")).ok())
+                .filter(|comm| comm.trim_end().starts_with(tag))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+fn request(body: RequestBody, want_solution: bool, stream: bool) -> Request {
+    Request {
+        id: 0,
+        body,
+        backend: Backend::Native,
+        full: false,
+        want_solution,
+        deadline_ms: None,
+        stream,
+    }
+}
+
+fn sdp(n: usize) -> Request {
+    request(RequestBody::Sdp(SdpProblem::fibonacci(n)), false, false)
+}
+
+fn mcm() -> Request {
+    request(
+        RequestBody::Mcm {
+            problem: McmProblem::clrs(),
+            variant: McmVariant::Corrected,
+        },
+        false,
+        false,
+    )
+}
+
+fn viterbi() -> Request {
+    let half = 0.5f64.ln();
+    let hmm = ViterbiProblem::new(
+        2,
+        2,
+        vec![half, half],
+        vec![0.9f64.ln(), 0.1f64.ln(), 0.1f64.ln(), 0.9f64.ln()],
+        vec![0.8f64.ln(), 0.2f64.ln(), 0.2f64.ln(), 0.8f64.ln()],
+        vec![0, 0, 1, 1, 0],
+    )
+    .unwrap();
+    request(RequestBody::Viterbi(hmm), false, false)
+}
+
+fn streamed_align(seed: usize) -> Request {
+    let a: Vec<i64> = (0..24).map(|i| ((i * 7 + seed) % 11) as i64).collect();
+    let b: Vec<i64> = (0..24).map(|i| ((i * 5 + 3) % 11) as i64).collect();
+    let p = AlignProblem::new(a, b, AlignVariant::Lcs, AlignScoring::default()).unwrap();
+    request(RequestBody::Align(p), true, true)
+}
+
+#[test]
+fn soak_two_hundred_connections_no_fd_or_thread_leaks() {
+    #[cfg(target_os = "linux")]
+    let baseline_fds = open_fds();
+
+    let server = Server::start(Config {
+        addr: "127.0.0.1:0".into(),
+        workers: 4,
+        policy: Policy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        warm: false,
+        queue_cap: 0,
+        exec_threads: 0,
+        max_solve_bytes: 0,
+        line_stall_ms: 0,
+        reactor: true,
+    })
+    .expect("server starts");
+    let addr = server.local_addr.to_string();
+    #[cfg(target_os = "linux")]
+    let tag = server.thread_tag().to_string();
+
+    const CONNS: usize = 200;
+    let handles: Vec<_> = (0..CONNS)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // stagger the dials a little so 200 racing SYNs cannot
+                // overflow the accept backlog on a slow runner
+                std::thread::sleep(Duration::from_millis((i % 40) as u64));
+                let mut client = Client::connect(&addr).expect("soak connect");
+                // reply correlation is enforced inside Client: every call
+                // matches replies to the ids it assigned
+                match i % 4 {
+                    0 => {
+                        let reqs = (0..5).map(|_| sdp(32)).collect();
+                        let resps = client.call_pipelined(reqs).unwrap();
+                        assert_eq!(resps.len(), 5);
+                        for r in &resps {
+                            assert!(r.ok, "{:?}", r.error);
+                            assert_eq!(r.value, 2178309);
+                        }
+                    }
+                    1 => {
+                        let r = client.call(mcm()).unwrap();
+                        assert!(r.ok, "{:?}", r.error);
+                        assert_eq!(r.value, 15125);
+                    }
+                    2 => {
+                        let r = client.call(viterbi()).unwrap();
+                        assert!(r.ok, "{:?}", r.error);
+                        assert!(r.score.is_some(), "viterbi score");
+                    }
+                    _ => {
+                        let mut ticks = 0u32;
+                        let r = client
+                            .call_streaming(streamed_align(i), |_, _| ticks += 1)
+                            .unwrap();
+                        assert!(r.ok, "{:?}", r.error);
+                        assert!(r.solution.is_some(), "streamed solution");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("soak connection thread");
+    }
+    server.shutdown();
+
+    #[cfg(target_os = "linux")]
+    {
+        assert_eq!(
+            live_threads_with_prefix(&tag),
+            0,
+            "no connection threads may survive the drain"
+        );
+        assert_eq!(
+            live_threads_with_prefix("pipedp-"),
+            0,
+            "no reactor/batcher/accept threads may survive"
+        );
+        // closed sockets can linger an instant; settle, then compare
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        loop {
+            let now_fds = open_fds();
+            if now_fds <= baseline_fds + 2 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "fd leak after drain: {baseline_fds} before, {now_fds} after"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}

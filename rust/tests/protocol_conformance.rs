@@ -1,0 +1,601 @@
+//! Protocol-conformance wall (docs/PROTOCOL.md): a checked-in corpus of
+//! wire lines — every request kind, the full error taxonomy, solution
+//! and streaming variants, and the malformed/id-recovery rows — replayed
+//! against live servers in both the blocking-thread and epoll-reactor
+//! front ends, asserting byte-identical replies between the two modes.
+//!
+//! Also home to the framing property tests (requests split at every
+//! byte boundary, pipelined requests coalesced into one write) and the
+//! reactor's connection-hygiene regressions (slow-loris partial-line
+//! stall, idle keep-alive, half-open peers, bounded shutdown with
+//! unread replies).
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use pipedp::coordinator::batcher::Policy;
+use pipedp::coordinator::request::{ErrorKind, Frame, Response};
+use pipedp::coordinator::server::{Config, Server};
+use pipedp::core::faults::{self, FaultPlan};
+use pipedp::util::json::Json;
+
+/// Serializes tests that install (or require the absence of) a fault
+/// plan; the plan is process-wide state.
+static FAULTS_LOCK: Mutex<()> = Mutex::new(());
+
+fn faults_locked() -> MutexGuard<'static, ()> {
+    FAULTS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const CORPUS_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/data/protocol_corpus.jsonl"
+);
+
+/// One corpus row: the parsed runner directives plus the exact wire
+/// line to send (the row itself, or its `_raw` payload).
+struct Row {
+    meta: Json,
+    line: String,
+}
+
+impl Row {
+    fn name(&self) -> String {
+        self.meta
+            .get("_name")
+            .and_then(|x| x.as_str())
+            .unwrap_or("unnamed")
+            .to_string()
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.meta
+            .get(key)
+            .and_then(|x| x.as_bool())
+            .unwrap_or(false)
+    }
+
+    fn int(&self, key: &str) -> Option<i64> {
+        self.meta.get(key).and_then(|x| x.as_i64())
+    }
+
+    fn str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|x| x.as_str())
+    }
+
+    /// The request id replies must correlate to: `_id` on `_raw` rows
+    /// (whose payload the runner does not parse), `id` otherwise.
+    fn want_id(&self) -> i64 {
+        self.int("_id").or_else(|| self.int("id")).unwrap_or(0)
+    }
+}
+
+fn corpus() -> Vec<Row> {
+    let text = std::fs::read_to_string(CORPUS_PATH).expect("read corpus");
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .map(|l| {
+            let meta = Json::parse(l).expect("corpus row is valid JSON");
+            let line = match meta.get("_raw").and_then(|x| x.as_str()) {
+                Some(raw) => raw.to_string(),
+                None => l.to_string(),
+            };
+            Row { meta, line }
+        })
+        .collect()
+}
+
+fn start(
+    reactor: bool,
+    workers: usize,
+    queue_cap: usize,
+    max_batch: usize,
+    max_solve_bytes: usize,
+    line_stall_ms: u64,
+) -> Server {
+    Server::start(Config {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        policy: Policy {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+        },
+        allow_engineless: true,
+        warm: false,
+        queue_cap,
+        exec_threads: 0,
+        max_solve_bytes,
+        line_stall_ms,
+        reactor,
+    })
+    .expect("server starts")
+}
+
+/// Assert one reply against its row's `_`-directives.
+fn check_row(row: &Row, resp: &Response) {
+    let name = row.name();
+    match row.str("_expect").unwrap_or("ok") {
+        "ok" => {
+            assert!(resp.ok, "[{name}] expected ok, got {:?}", resp.error);
+            assert!(resp.error.is_none(), "[{name}] ok replies carry no error");
+            assert!(resp.error_kind.is_none(), "[{name}] ok carries no kind");
+        }
+        "error" => {
+            assert!(!resp.ok, "[{name}] expected a validation error");
+            assert!(resp.error.is_some(), "[{name}] errors carry a message");
+            assert!(
+                resp.error_kind.is_none(),
+                "[{name}] plain validation errors carry no kind, got {:?}",
+                resp.error_kind
+            );
+        }
+        kind => {
+            let want = ErrorKind::parse(kind).expect("corpus _expect is a valid error kind");
+            assert!(!resp.ok, "[{name}] expected a typed {kind} error");
+            assert_eq!(resp.error_kind, Some(want), "[{name}] {:?}", resp.error);
+            assert_eq!(
+                resp.overloaded,
+                want == ErrorKind::Overloaded,
+                "[{name}] the overloaded flag mirrors the kind"
+            );
+        }
+    }
+    if let Some(v) = row.int("_value") {
+        assert_eq!(resp.value, v, "[{name}] scalar value");
+    }
+    if let Some(n) = row.int("_table_len") {
+        let got = resp.table.as_ref().map(|t| t.len() as i64);
+        assert_eq!(got, Some(n), "[{name}] table length");
+    }
+    if row.flag("_has_score") {
+        assert!(resp.score.is_some(), "[{name}] score expected");
+    }
+    if row.flag("_has_solution") {
+        assert!(resp.solution.is_some(), "[{name}] solution expected");
+    }
+    if row.flag("_has_stats") {
+        assert!(resp.stats.is_some(), "[{name}] stats payload expected");
+    }
+    if let Some(sub) = row.str("_error_contains") {
+        let msg = resp.error.as_deref().unwrap_or("");
+        assert!(msg.contains(sub), "[{name}] error {msg:?} lacks {sub:?}");
+    }
+    if let Some(want) = row.meta.get("_retryable").and_then(|x| x.as_bool()) {
+        let kind = resp.error_kind.expect("_retryable rows carry a kind");
+        assert_eq!(kind.retryable(), want, "[{name}] retry guidance");
+    }
+}
+
+/// The collected shape of one streamed reply.
+struct StreamOutcome {
+    progress: Vec<(u64, u64)>,
+    terminal_line: String,
+    resp: Response,
+}
+
+/// Read frames until the terminal `result`, enforcing the frame grammar
+/// of docs/PROTOCOL.md §Streaming: all frames correlated, progress
+/// monotone and before any chunk, chunk `seq` dense from 0 with `last`
+/// on the final chunk, terminal omitting the inline solution when
+/// chunks carried it (the reassembled chunks are grafted back in so
+/// expectation checks see the full reply).
+fn read_stream(reader: &mut impl BufRead, want_id: i64, name: &str) -> StreamOutcome {
+    let mut progress: Vec<(u64, u64)> = Vec::new();
+    let mut chunks = String::new();
+    let mut chunk_count = 0u64;
+    let mut saw_last = false;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("stream read");
+        assert!(n > 0, "[{name}] stream ended before the terminal frame");
+        let trimmed = line.trim_end();
+        let frame = Frame::decode(trimmed).expect("reply line is a valid frame");
+        assert_eq!(frame.id(), want_id, "[{name}] frame correlation");
+        match frame {
+            Frame::Progress {
+                supersteps, cells, ..
+            } => {
+                assert_eq!(chunk_count, 0, "[{name}] progress must precede chunks");
+                if let Some(&(ps, pc)) = progress.last() {
+                    assert!(
+                        supersteps >= ps && cells >= pc,
+                        "[{name}] progress must be monotone non-decreasing"
+                    );
+                }
+                progress.push((supersteps, cells));
+            }
+            Frame::SolutionChunk {
+                seq, last, chunk, ..
+            } => {
+                assert!(!saw_last, "[{name}] no chunk may follow the last chunk");
+                assert_eq!(seq, chunk_count, "[{name}] chunk seq must be dense from 0");
+                chunk_count += 1;
+                saw_last = last;
+                chunks.push_str(&chunk);
+            }
+            Frame::Result(mut resp) => {
+                if chunk_count > 0 {
+                    assert!(saw_last, "[{name}] the final chunk must set last");
+                    assert!(
+                        resp.solution.is_none(),
+                        "[{name}] terminal must omit the solution once chunked"
+                    );
+                    let sol = Json::parse(&chunks)
+                        .expect("reassembled chunks are the solution object");
+                    resp.solution = Some(sol);
+                }
+                return StreamOutcome {
+                    progress,
+                    terminal_line: trimmed.to_string(),
+                    resp,
+                };
+            }
+        }
+    }
+}
+
+/// Replay every sendable corpus row over one connection against a fresh
+/// server; returns `(name, reply line)` for the deterministic rows so
+/// the caller can compare server modes byte-for-byte.
+fn replay(reactor: bool) -> Vec<(String, String)> {
+    let server = start(reactor, 2, 0, 4, 1 << 20, 0);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut out = Vec::new();
+    for row in corpus() {
+        if row.flag("_response") || row.int("_burst").is_some() {
+            continue;
+        }
+        let name = row.name();
+        if let Some(plan) = row.str("_faults") {
+            faults::install(Some(FaultPlan::parse(plan).expect("corpus fault plan")));
+        }
+        writer.write_all(row.line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let (reply_line, resp) = if row.flag("_frames") {
+            let o = read_stream(&mut reader, row.want_id(), &name);
+            let min = row.int("_min_progress").unwrap_or(0);
+            assert!(
+                o.progress.len() as i64 >= min,
+                "[{name}] wanted ≥{min} progress frames, got {}",
+                o.progress.len()
+            );
+            (o.terminal_line, o.resp)
+        } else {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).expect("reply read");
+            assert!(n > 0, "[{name}] connection died before the reply");
+            let resp = Response::decode(line.trim_end()).expect("reply decodes");
+            (line.trim_end().to_string(), resp)
+        };
+        assert_eq!(resp.id, row.want_id(), "[{name}] reply correlation");
+        check_row(&row, &resp);
+        if row.str("_faults").is_some() {
+            faults::install(None);
+        }
+        if !row.flag("_nondet") {
+            out.push((name, reply_line));
+        }
+    }
+    drop(reader);
+    drop(writer);
+    server.shutdown();
+    out
+}
+
+/// The headline conformance run: the full corpus against the blocking
+/// front end, then against the reactor, with deterministic reply lines
+/// (terminal frames for streamed rows) byte-identical between the two.
+#[test]
+fn corpus_replays_identically_in_blocking_and_reactor_modes() {
+    let _g = faults_locked();
+    faults::install(None);
+    let blocking = replay(false);
+    let reactor = replay(true);
+    assert_eq!(blocking.len(), reactor.len(), "same deterministic rows");
+    for ((bn, bl), (rn, rl)) in blocking.iter().zip(&reactor) {
+        assert_eq!(bn, rn, "row order must match");
+        assert_eq!(bl, rl, "[{bn}] replies must match across modes");
+    }
+}
+
+/// The `_response` taxonomy rows: every [`ErrorKind`] decodes off the
+/// wire with its typed classification and retry guidance, and the wire
+/// names round-trip through the enum.  (`internal` is refused at the
+/// certifier before any wire traffic, so its conformance lives here.)
+#[test]
+fn response_taxonomy_rows_decode_and_classify() {
+    let mut seen: HashSet<&'static str> = HashSet::new();
+    for row in corpus().iter().filter(|r| r.flag("_response")) {
+        let resp = Response::decode(&row.line).expect("taxonomy row decodes");
+        check_row(row, &resp);
+        let kind = resp.error_kind.expect("taxonomy row carries a kind");
+        assert_eq!(ErrorKind::parse(kind.name()).unwrap(), kind);
+        seen.insert(kind.name());
+    }
+    for want in ["timeout", "panicked", "too_large", "overloaded", "internal"] {
+        assert!(seen.contains(want), "corpus misses a {want} row");
+    }
+}
+
+/// The `_burst` row replayed as a pipelined burst against a saturated
+/// reactor server (1 worker, 2 queue slots): every copy is answered
+/// with a distinct id, sheds are typed `overloaded` (retryable, flag
+/// set), and at least one copy is shed and one served.
+#[test]
+fn overload_burst_row_sheds_typed_overloaded() {
+    let _g = faults_locked();
+    faults::install(None);
+    let row = corpus()
+        .into_iter()
+        .find(|r| r.int("_burst").is_some())
+        .expect("corpus has a burst row");
+    let copies = row.int("_burst").unwrap() as usize;
+    let server = start(true, 1, 2, 1, 0, 0);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut burst = String::new();
+    for k in 0..copies {
+        let id = format!("\"id\": {}", 9100 + k);
+        burst.push_str(&row.line.replace("\"id\": 9000", &id));
+        burst.push('\n');
+    }
+    writer.write_all(burst.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut ids = HashSet::new();
+    let (mut served, mut shed) = (0, 0);
+    for _ in 0..copies {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "burst reply lost");
+        let resp = Response::decode(line.trim_end()).unwrap();
+        assert!(
+            (9100..9100 + copies as i64).contains(&resp.id),
+            "burst reply id {} out of range",
+            resp.id
+        );
+        assert!(ids.insert(resp.id), "duplicate burst reply id {}", resp.id);
+        if resp.ok {
+            served += 1;
+        } else {
+            assert_eq!(resp.error_kind, Some(ErrorKind::Overloaded), "{:?}", resp.error);
+            assert!(resp.overloaded, "typed sheds set the overloaded flag");
+            assert!(ErrorKind::Overloaded.retryable());
+            shed += 1;
+        }
+    }
+    assert_eq!(served + shed, copies, "every burst copy must be answered");
+    assert!(shed >= 1, "burst must shed against 2 queue slots");
+    assert!(served >= 1, "the first admitted copy must be served");
+    server.shutdown();
+}
+
+/// One canonical request line for the framing tests (deterministic
+/// reply: fib(24) through the native sdp pipeline).
+const FRAMING_LINE: &str = concat!(
+    r#"{"id": 500, "kind": "sdp", "n": 24, "offsets": [2, 1],"#,
+    r#" "op": "add", "init": [1, 1], "backend": "native"}"#,
+    "\n"
+);
+
+/// The blocking path's reply to [`FRAMING_LINE`], used as the reference
+/// bytes the reactor must reproduce under every framing torture.
+fn blocking_reference_reply() -> String {
+    let server = start(false, 2, 0, 4, 0, 0);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(FRAMING_LINE.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    drop(reader);
+    drop(writer);
+    server.shutdown();
+    line.trim_end().to_string()
+}
+
+/// Framing property: the same request split at *every* byte boundary
+/// (two writes with a flush and a pause between them) produces a reply
+/// byte-identical to the blocking path's.
+#[test]
+fn request_split_at_every_byte_boundary_replies_identically() {
+    let reference = blocking_reference_reply();
+    let server = start(true, 2, 0, 4, 0, 0);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let bytes = FRAMING_LINE.as_bytes();
+    for cut in 1..bytes.len() {
+        writer.write_all(&bytes[..cut]).unwrap();
+        writer.flush().unwrap();
+        // let the reactor observe (and buffer) the partial line
+        std::thread::sleep(Duration::from_millis(2));
+        writer.write_all(&bytes[cut..]).unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        let n = reader.read_line(&mut reply).unwrap();
+        assert!(n > 0, "cut {cut}: no reply");
+        assert_eq!(reply.trim_end(), reference, "cut at byte {cut}");
+    }
+    server.shutdown();
+}
+
+/// Framing property: many pipelined requests coalesced into a single
+/// `write` are all answered, in order, with replies byte-identical to
+/// the blocking path's for the same lines.
+#[test]
+fn pipelined_requests_coalesced_into_one_write_reply_identically() {
+    let lines: Vec<String> = (0..10)
+        .map(|i| {
+            format!(
+                "{{\"id\": {}, \"kind\": \"sdp\", \"n\": {}, \"offsets\": [2, 1], \
+                 \"op\": \"add\", \"init\": [1, 1], \"backend\": \"native\"}}\n",
+                600 + i,
+                16 + i
+            )
+        })
+        .collect();
+    let replies_of = |reactor: bool| -> Vec<String> {
+        let server = start(reactor, 2, 0, 4, 0, 0);
+        let stream = TcpStream::connect(server.local_addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer.write_all(lines.concat().as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let replies: Vec<String> = (0..lines.len())
+            .map(|_| {
+                let mut line = String::new();
+                let n = reader.read_line(&mut line).unwrap();
+                assert!(n > 0, "pipelined reply lost");
+                line.trim_end().to_string()
+            })
+            .collect();
+        drop(reader);
+        drop(writer);
+        server.shutdown();
+        replies
+    };
+    let blocking = replies_of(false);
+    let reactor = replies_of(true);
+    for (i, reply) in reactor.iter().enumerate() {
+        let resp = Response::decode(reply).unwrap();
+        assert_eq!(resp.id, 600 + i as i64, "pipelined replies stay in order");
+        assert!(resp.ok, "{:?}", resp.error);
+    }
+    assert_eq!(blocking, reactor, "coalesced replies must match");
+}
+
+/// Slow-loris port: a partial request line that stalls past the
+/// configured bound gets the connection dropped (EOF), exactly like the
+/// blocking reader's stall guard.
+#[test]
+fn reactor_partial_line_stall_drops_connection() {
+    let server = start(true, 2, 0, 4, 0, 300);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(b"{\"id\": 1, \"kind\":").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("stall read");
+    assert_eq!(n, 0, "stalled partial line must disconnect: {line:?}");
+    server.shutdown();
+}
+
+/// Idle keep-alive port: a connection with *no* buffered bytes may idle
+/// past the stall bound and still be served afterwards — only partial
+/// lines arm the slow-loris clock.
+#[test]
+fn reactor_idle_keepalive_survives_stall_window() {
+    let server = start(true, 2, 0, 4, 0, 300);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    std::thread::sleep(Duration::from_millis(700)); // > 2× the stall bound
+    writer.write_all(FRAMING_LINE.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "idle conn must survive the stall window");
+    let resp = Response::decode(line.trim_end()).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.id, 500);
+    server.shutdown();
+}
+
+/// Half-open port: a peer that sends its requests and then FINs its
+/// write half (`shutdown(Write)`) still receives every in-flight reply
+/// before the server closes the connection.
+#[test]
+fn reactor_half_open_peer_still_receives_replies() {
+    let server = start(true, 2, 0, 4, 0, 0);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let lines: Vec<String> = (0..3)
+        .map(|i| FRAMING_LINE.replace("\"id\": 500", &format!("\"id\": {}", 700 + i)))
+        .collect();
+    writer.write_all(lines.concat().as_bytes()).unwrap();
+    writer.flush().unwrap();
+    writer.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut ids = Vec::new();
+    for _ in 0..lines.len() {
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "half-open peer lost a reply; got ids {ids:?}"
+        );
+        let resp = Response::decode(line.trim_end()).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![700, 701, 702]);
+    // after the last reply the server closes its half: clean EOF
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert_eq!(n, 0, "clean close after the last reply");
+    server.shutdown();
+}
+
+/// Write-path port of the blocking write-timeout guard: shutting the
+/// server down while a non-reading peer has a multi-megabyte reply
+/// parked in its write buffer must complete within the bounded
+/// shutdown-flush window instead of hanging.
+#[test]
+fn reactor_shutdown_bounded_with_unread_replies() {
+    let server = start(true, 2, 0, 4, 0, 0);
+    let stream = TcpStream::connect(server.local_addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    // ~26 MB of full-table replies dwarfs any socket buffer, so most of
+    // it stays parked in the server-side write buffer
+    let mut burst = String::new();
+    for i in 0..50 {
+        burst.push_str(&format!(
+            "{{\"id\": {}, \"kind\": \"sdp\", \"n\": 262144, \"offsets\": [2, 1], \
+             \"op\": \"min\", \"init\": [1, 1], \"full\": true}}\n",
+            800 + i
+        ));
+    }
+    writer.write_all(burst.as_bytes()).unwrap();
+    writer.flush().unwrap();
+    // give the solve time to finish and the reply time to hit the
+    // write buffer; the peer deliberately never reads
+    std::thread::sleep(Duration::from_millis(1500));
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "shutdown must stay bounded with unread replies, took {:?}",
+        t0.elapsed()
+    );
+    drop(writer);
+    drop(stream);
+}

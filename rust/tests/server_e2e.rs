@@ -27,6 +27,7 @@ fn start_server() -> Server {
         exec_threads: 0,
         max_solve_bytes: 0,
         line_stall_ms: 0,
+        reactor: false,
     })
     .expect("server starts")
 }
@@ -59,6 +60,7 @@ fn sdp_request(p: SdpProblem, backend: Backend, full: bool) -> Request {
         full,
         want_solution: false,
         deadline_ms: None,
+        stream: false,
     }
 }
 
@@ -93,6 +95,7 @@ fn mcm_round_trip_with_table() {
             full: true,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok);
@@ -122,6 +125,7 @@ fn align_round_trip_all_variants() {
             full: true,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -149,6 +153,7 @@ fn align_round_trip_all_variants() {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -172,6 +177,7 @@ fn align_round_trip_all_variants() {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -204,6 +210,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 full: false,
                 want_solution: false,
                 deadline_ms: None,
+                stream: false,
             })
             .unwrap()
     };
@@ -228,6 +235,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 full: false,
                 want_solution: false,
                 deadline_ms: None,
+                stream: false,
             })
             .unwrap()
     };
@@ -240,6 +248,7 @@ fn schedule_cache_serves_repeated_shapes() {
                 full: false,
                 want_solution: false,
                 deadline_ms: None,
+                stream: false,
             })
             .unwrap();
         resp.stats.unwrap().i64_field("sched_cache_hits").unwrap()
@@ -283,6 +292,7 @@ fn want_solution_round_trip() {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -313,6 +323,7 @@ fn want_solution_round_trip() {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -331,6 +342,7 @@ fn want_solution_round_trip() {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(!resp.ok);
@@ -371,6 +383,7 @@ fn log_space_round_trip() {
             full: true,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -404,6 +417,7 @@ fn log_space_round_trip() {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -439,6 +453,7 @@ fn log_space_round_trip() {
             full: false,
             want_solution: true,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
@@ -467,6 +482,7 @@ fn faithful_variant_served_with_divergence() {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok);
@@ -504,6 +520,7 @@ fn malformed_and_invalid_requests_get_errors_not_disconnects() {
         full: false,
         want_solution: false,
         deadline_ms: None,
+        stream: false,
     }
     .encode();
     good.push('\n');
@@ -553,6 +570,7 @@ fn stats_request_reports_metrics() {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok);
@@ -590,6 +608,7 @@ fn schedule_cache_serves_repeated_sizes() {
         full: false,
         want_solution: false,
         deadline_ms: None,
+        stream: false,
     };
     let stats_request = || Request {
         id: 0,
@@ -598,6 +617,7 @@ fn schedule_cache_serves_repeated_sizes() {
         full: false,
         want_solution: false,
         deadline_ms: None,
+        stream: false,
     };
     let snapshot_hits = |client: &mut Client| {
         let resp = client.call(stats_request()).unwrap();
@@ -707,6 +727,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
         exec_threads: 0,
         max_solve_bytes: 0,
         line_stall_ms: 0,
+        reactor: false,
     })
     .expect("server starts");
     let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
@@ -727,6 +748,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .collect();
     let resps = client.call_pipelined(reqs).unwrap();
@@ -763,6 +785,7 @@ fn saturated_server_sheds_with_typed_overloaded_response() {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     let stats = stats_resp.stats.unwrap();
@@ -846,9 +869,62 @@ fn xla_backend_served_when_artifacts_present() {
             full: false,
             want_solution: false,
             deadline_ms: None,
+            stream: false,
         })
         .unwrap();
     assert!(resp.ok, "{:?}", resp.error);
     assert_eq!(resp.value, want);
     assert!(resp.served_by.starts_with("xla:"), "{}", resp.served_by);
+}
+
+/// Streaming acceptance: a `stream: true` + `want_solution` solve big
+/// enough to span several supersteps (1024×1024 edit distance) delivers
+/// at least three monotone `progress` frames before the terminal reply,
+/// and the chunked solution reassembles into a script that replays to
+/// the reported score.
+#[test]
+fn streamed_want_solution_delivers_progress_then_chunked_solution() {
+    let server = start_server();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    let a: Vec<i64> = (0..1024).map(|i| (i * 7919) % 23).collect();
+    let b: Vec<i64> = (0..1024).map(|i| (i * 104729) % 23).collect();
+    let p = AlignProblem::new(a, b, AlignVariant::Edit, AlignScoring::default()).unwrap();
+
+    let mut progress: Vec<(u64, u64)> = Vec::new();
+    let resp = client
+        .call_streaming(
+            Request {
+                id: 0,
+                body: RequestBody::Align(p.clone()),
+                backend: Backend::Native,
+                full: false,
+                want_solution: true,
+                deadline_ms: None,
+                stream: true,
+            },
+            |supersteps, cells| progress.push((supersteps, cells)),
+        )
+        .unwrap();
+
+    assert!(resp.ok, "{:?}", resp.error);
+    assert!(
+        progress.len() >= 3,
+        "want >= 3 progress frames before the result, got {progress:?}"
+    );
+    for w in progress.windows(2) {
+        assert!(w[0].0 <= w[1].0, "supersteps must be monotone: {progress:?}");
+        assert!(w[0].1 <= w[1].1, "cells must be monotone: {progress:?}");
+    }
+
+    // the chunked solution reassembles and replays to the score
+    let sol = resp.solution.expect("streamed solution reassembles");
+    assert_eq!(sol.i64_field("score").unwrap(), resp.value);
+    let ops = sol.str_field("ops").unwrap();
+    assert!(ops.len() >= 1024, "script must span multiple chunks");
+    let cost = ops.chars().filter(|&c| c != 'M').count() as i64;
+    assert_eq!(cost, resp.value, "script does not replay to the score");
+    let consumed_a = ops.chars().filter(|&c| c != 'I').count();
+    let consumed_b = ops.chars().filter(|&c| c != 'D').count();
+    assert_eq!((consumed_a, consumed_b), (p.rows(), p.cols()));
 }
